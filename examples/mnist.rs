@@ -1,0 +1,91 @@
+//! MNIST end-to-end driver — the paper's Listing 12 program, running the
+//! **full three-layer stack**: Rust coordinator → AOT HLO artifacts (JAX
+//! model + Pallas kernels) → PJRT CPU execution, with data-parallel
+//! training over shared-memory images.
+//!
+//! Reproduces Listing 13 / Figure 3: a 784-30-10 sigmoid network, batch
+//! size 1000, eta = 3, trained for 30 epochs; accuracy is printed per
+//! epoch. Uses real MNIST IDX files from `data/mnist/` when present,
+//! otherwise the synthetic digit corpus (see DESIGN.md §5).
+//!
+//! Run:  cargo run --release --example mnist -- [epochs] [images] [engine]
+//! e.g.  cargo run --release --example mnist -- 30 4 pjrt
+//!
+//! The run is recorded in EXPERIMENTS.md (Fig 3 / Listing 13).
+
+use neural_rs::collectives::ReduceAlgo;
+use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
+use neural_rs::data::load_or_synthesize;
+use neural_rs::metrics::{peak_rss_bytes, Stopwatch};
+use neural_rs::nn::Activation;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let epochs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(30);
+    let images: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let engine = match args.get(2).map(|s| s.as_str()) {
+        Some("native") => EngineKind::Native,
+        _ => EngineKind::Pjrt,
+    };
+
+    // The paper: 50000 training images, 10000 for validation.
+    let sw = Stopwatch::start();
+    let (train, test) = load_or_synthesize::<f32>("data/mnist", 50_000, 10_000, 42);
+    println!(
+        "# loaded {} train / {} test samples in {:.2} s",
+        train.len(),
+        test.len(),
+        sw.elapsed_s()
+    );
+
+    let spec = ParallelSpec {
+        images,
+        algo: ReduceAlgo::Tree,
+        opts: TrainerOptions {
+            dims: vec![784, 30, 10],
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: 1000,
+            epochs,
+            seed: 0,
+            batch_seed: 20190301,
+            strategy: Default::default(),
+                optimizer: Default::default(),
+        },
+        engine,
+        artifacts: Some(("artifacts".into(), "mnist".into())),
+        eval_each_epoch: true,
+    };
+    println!(
+        "# net = network_type([784, 30, 10]) | batch_size 1000 | eta 3.0 | {} image(s) | engine {}",
+        images,
+        engine.name()
+    );
+
+    let report = train_parallel(&spec, &train, &test);
+
+    // Listing 13 output format.
+    println!("Initial accuracy: {:5.2} %", report.initial_accuracy * 100.0);
+    for (i, acc) in report.epoch_accuracy.iter().enumerate() {
+        println!("Epoch {:2} done, Accuracy: {:5.2} %", i + 1, acc * 100.0);
+    }
+    println!(
+        "# training-only {:.3} s | grad {:.3} s, comm {:.3} s, update {:.3} s | {} mini-batches",
+        report.train_s, report.stats.grad_s, report.stats.comm_s, report.stats.update_s,
+        report.stats.batches
+    );
+    if let Some(rss) = peak_rss_bytes() {
+        println!("# peak rss {:.0} MB", rss as f64 / 1e6);
+    }
+
+    let final_acc = report.final_accuracy();
+    // The paper reaches >93% at epoch 30; insist on the same shape when we
+    // ran the full 30 epochs.
+    if epochs >= 30 {
+        assert!(
+            final_acc > 0.90,
+            "expected >90% accuracy after {epochs} epochs, got {final_acc}"
+        );
+    }
+    println!("mnist end-to-end OK ({:.2} % final accuracy)", final_acc * 100.0);
+}

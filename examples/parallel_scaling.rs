@@ -1,0 +1,89 @@
+//! Strong-scaling demo — the paper's §5.2 experiment (Figures 4 and 5,
+//! Table 2): fixed global batch of 1200, training time measured on
+//! 1..=N shared-memory images, with parallel efficiency
+//! PE = t(1) / (n · t(n)).
+//!
+//! Run:  cargo run --release --example parallel_scaling -- [max_images] [runs] [engine]
+
+use neural_rs::collectives::ReduceAlgo;
+use neural_rs::coordinator::{
+    train_parallel, EngineKind, ParallelSpec, ScalingModel, TrainerOptions,
+};
+use neural_rs::data::load_or_synthesize;
+use neural_rs::metrics::Table;
+use neural_rs::nn::{Activation, Network};
+use neural_rs::tensor::Summary;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let max_images: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(hw.min(12));
+    let runs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let engine = match args.get(2).map(|s| s.as_str()) {
+        Some("pjrt") => EngineKind::Pjrt,
+        _ => EngineKind::Native,
+    };
+
+    // Paper §5.2: same network as the serial case, batch size 1200,
+    // training-only timing (data loading excluded).
+    let (train, test) = load_or_synthesize::<f32>("data/mnist", 12_000, 2_000, 42);
+    println!(
+        "# parallel scaling: 784-30-10 sigmoid, batch 1200, {} runs/point, engine {}, {} hw threads",
+        runs,
+        engine.name(),
+        hw
+    );
+
+    let mut table = Table::new(&["Cores", "Elapsed (s)", "Parallel efficiency"]);
+    let mut t1 = 0.0f64;
+    let counts: Vec<usize> = (1..=max_images)
+        .filter(|&n| matches!(n, 1 | 2 | 3 | 4 | 5 | 6 | 8 | 10 | 12) || n == max_images)
+        .collect();
+    for &n in &counts {
+        let spec = ParallelSpec {
+            images: n,
+            algo: ReduceAlgo::Tree,
+            opts: TrainerOptions {
+                dims: vec![784, 30, 10],
+                activation: Activation::Sigmoid,
+                eta: 3.0,
+                batch_size: 1200,
+                epochs: 5,
+                seed: 0,
+                batch_seed: 77,
+                strategy: Default::default(),
+                optimizer: Default::default(),
+            },
+            engine,
+            artifacts: Some(("artifacts".into(), "mnist".into())),
+            eval_each_epoch: false,
+        };
+        let times: Vec<f64> =
+            (0..runs).map(|_| train_parallel(&spec, &train, &test).train_s).collect();
+        let s = Summary::of(&times);
+        if n == 1 {
+            t1 = s.mean;
+        }
+        let pe = t1 / (n as f64 * s.mean);
+        println!("cores={n:2}  {}  PE={pe:.3}", Table::fmt_summary(&s));
+        table.row(&[n.to_string(), Table::fmt_summary(&s), format!("{pe:.3}")]);
+    }
+    println!("\n{}", table.render());
+    println!("# PE should decrease with cores but stay well above 1/n (paper Fig 5).");
+
+    // On hosts with too few cores for the paper's 12-image sweep, also
+    // print the calibrated virtual-time model (DESIGN.md §5 substitution).
+    if hw < 12 {
+        println!("\n## calibrated model to 12 images (host has only {hw} hw threads)");
+        let mut net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+        let model = ScalingModel::calibrate(&mut net, None, &train, 400).opencoarrays_like();
+        let steps = 5 * (train.len() / 1200);
+        let mut table = Table::new(&["Cores", "Elapsed (s)", "Parallel efficiency"]);
+        for n in [1usize, 2, 3, 4, 5, 6, 8, 10, 12] {
+            let t = model.epoch_time(n, 1200, steps, ReduceAlgo::Tree);
+            let pe = model.parallel_efficiency(n, 1200, steps, ReduceAlgo::Tree);
+            table.row(&[n.to_string(), format!("{t:.3}"), format!("{pe:.3}")]);
+        }
+        println!("{}", table.render());
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart — the paper's Listing 3 in neural-rs.
+//!
+//! Builds the `network_type([3, 5, 2], 'tanh')` network, trains it on a
+//! small synthetic mapping with both `train_single` and `train_batch`
+//! (the generic `train` of Listing 10/11), saves it to a file, reloads,
+//! and verifies the round trip.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use neural_rs::nn::{Activation, Network};
+use neural_rs::tensor::{Matrix, Rng};
+
+fn main() {
+    // Listing 3: net = network_type([3, 5, 2], 'tanh')
+    let mut net = Network::<f32>::new(&[3, 5, 2], Activation::Tanh, 0);
+    println!("network: dims {:?}, activation {}", net.dims(), net.activation());
+    println!("parameters: {}", net.param_count());
+
+    // A toy mapping: y = [majority(x > 0), 1 - majority].
+    let mut rng = Rng::new(7);
+    let n = 256;
+    let x = Matrix::from_fn(3, n, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let y = Matrix::from_fn(2, n, |i, j| {
+        let col = x.col(j);
+        let positives = col.iter().filter(|&&v| v > 0.0).count();
+        let majority = (positives >= 2) as i32 as f32;
+        if i == 0 {
+            majority
+        } else {
+            1.0 - majority
+        }
+    });
+
+    // train_single on one sample (Listing 8)...
+    net.train_single(x.col(0), y.col(0), 0.5);
+    // ...and train_batch over the whole set (Listing 9), the same generic
+    // `train` interface the paper overloads.
+    let before = net.loss_batch(&x, &y);
+    for _ in 0..1500 {
+        net.train_batch(&x, &y, 2.0);
+    }
+    let after = net.loss_batch(&x, &y);
+    let acc = net.accuracy(&x, &y);
+    println!("loss {before:.4} -> {after:.4}, accuracy {:.1} %", acc * 100.0);
+    assert!(after < before, "training must reduce the cost");
+    assert!(acc > 0.85, "toy task should be learnable (acc={acc})");
+
+    // Save / load round trip (the paper's save()/load() feature).
+    let path = std::env::temp_dir().join("quickstart-net.txt");
+    net.save(&path).expect("save failed");
+    let restored = Network::<f32>::load(&path).expect("load failed");
+    assert!(net.params_close(&restored, 0.0), "round trip must be exact");
+    let sample = [0.25f32, -0.5, 0.75];
+    assert_eq!(net.output(&sample), restored.output(&sample));
+    println!("saved + reloaded from {} — outputs identical", path.display());
+    std::fs::remove_file(path).ok();
+    println!("quickstart OK");
+}

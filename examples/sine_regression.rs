@@ -1,0 +1,90 @@
+//! Function approximation — the "integrate ML into numerical Fortran
+//! software" motivation from the paper's introduction: fit y = sin(2πx)
+//! with a small tanh MLP, through both engines:
+//!
+//! 1. the native Rust engine (quick), and
+//! 2. the AOT/PJRT path using the `sine` artifact (1-16-16-1 tanh),
+//!    proving the three-layer stack also serves regression workloads.
+//!
+//! Run: cargo run --release --example sine_regression
+
+use neural_rs::nn::{Activation, Network};
+use neural_rs::runtime::{Engine, Manifest};
+use neural_rs::tensor::{Matrix, Rng};
+
+fn dataset(n: usize, seed: u64) -> (Matrix<f32>, Matrix<f32>) {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(1, n, |_, _| rng.uniform() as f32);
+    // Scale sin into [0.1, 0.9] so the tanh output layer can express it
+    // with headroom.
+    let y = Matrix::from_fn(1, n, |_, j| {
+        let t = x.get(0, j) as f64;
+        (0.5 + 0.4 * (2.0 * std::f64::consts::PI * t).sin()) as f32
+    });
+    (x, y)
+}
+
+fn rmse(net: &Network<f32>, x: &Matrix<f32>, y: &Matrix<f32>) -> f64 {
+    let mut se = 0.0f64;
+    for j in 0..x.cols() {
+        let out = net.output(x.col(j));
+        let d = (out[0] - y.get(0, j)) as f64;
+        se += d * d;
+    }
+    (se / x.cols() as f64).sqrt()
+}
+
+fn main() {
+    let dims = [1usize, 16, 16, 1];
+    let (x, y) = dataset(512, 3);
+    let (xt, yt) = dataset(128, 4);
+
+    // --- Native engine ---
+    let mut net = Network::<f32>::new(&dims, Activation::Tanh, 1);
+    let before = rmse(&net, &xt, &yt);
+    for _ in 0..6000 {
+        net.train_batch(&x, &y, 1.0);
+    }
+    let after = rmse(&net, &xt, &yt);
+    println!("native engine:  rmse {before:.4} -> {after:.4}");
+    assert!(after < 0.06, "native fit too loose: rmse {after}");
+
+    // --- PJRT engine (AOT artifacts) ---
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        println!("(skipping PJRT half — run `make artifacts` first)");
+        return;
+    }
+    let manifest = Manifest::load(root).unwrap();
+    let meta = manifest.get("sine").unwrap();
+    let engine = Engine::new().unwrap();
+    let compiled = engine.load(meta).unwrap();
+
+    let mut net2 = Network::<f32>::new(&dims, Activation::Tanh, 1);
+    let before2 = rmse(&net2, &xt, &yt);
+    for _ in 0..6000 {
+        let g = compiled.grad_batch(&net2, &x, &y).unwrap();
+        net2.update(&g, 1.0 / x.cols() as f32);
+    }
+    let after2 = rmse(&net2, &xt, &yt);
+    println!("pjrt engine:    rmse {before2:.4} -> {after2:.4}");
+    assert!(after2 < 0.06, "pjrt fit too loose: rmse {after2}");
+
+    // The two engines started from the same seed and saw the same batches:
+    // they must land on (numerically) the same model.
+    let d = neural_rs::tensor::vecops::max_abs_diff(
+        &net.params_to_flat(),
+        &net2.params_to_flat(),
+    );
+    println!("max param divergence between engines after 6000 steps: {d:.2e}");
+
+    // ASCII sketch of the fit.
+    println!("\n  x      sin target   prediction");
+    for k in 0..11 {
+        let xv = k as f32 / 10.0;
+        let target = 0.5 + 0.4 * (2.0 * std::f64::consts::PI * xv as f64).sin();
+        let pred = net2.output(&[xv])[0];
+        println!("  {xv:.1}    {target:9.4}    {pred:9.4}");
+    }
+    println!("sine_regression OK");
+}

@@ -1,0 +1,182 @@
+"""AOT compiler: lower the Layer-2 model to HLO *text* artifacts that the
+Rust runtime loads via the PJRT C API.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each network configuration becomes a directory::
+
+    artifacts/<name>/
+        forward.hlo.txt   # (params..., x[B,in])            -> (a[B,out],)
+        grad.hlo.txt      # (params..., x, y[B,out], m[B])  -> (dwt_0, db_1, ...)
+        meta.json         # dims, activation, dtype, micro-batch, shapes
+
+and ``artifacts/manifest.json`` indexes every configuration. The rust side
+(`runtime::Manifest`) consumes exactly these files.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --config mnist:784,30,10:sigmoid:100:f32 [--config ...]
+
+With no --config flags, the default set needed by the repo's examples,
+tests, and benches is built. Incremental: a config whose meta.json already
+matches is skipped (make's artifact target stays a no-op when unchanged).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Configurations required by examples/, rust/tests/ and rust/benches/.
+# name : dims : activation : micro-batch : dtype
+DEFAULT_CONFIGS = [
+    "mnist:784,30,10:sigmoid:100:f32",      # the paper's §4 network
+    "mnist_b32:784,30,10:sigmoid:32:f32",    # Table 1 protocol (Keras default batch)
+    "mnist_eval:784,30,10:sigmoid:1000:f32",  # batched accuracy evaluation
+    "quickstart:3,5,2:tanh:8:f32",           # Listing 3's toy network
+    "sine:1,16,16,1:tanh:32:f32",            # sine_regression example
+    "golden:4,6,3:sigmoid:5:f32",            # runtime<->native golden test
+    "golden64:4,6,3:tanh:5:f64",             # f64 path
+]
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+class Config:
+    def __init__(self, spec):
+        try:
+            name, dims, activation, batch, dtype = spec.split(":")
+            self.name = name
+            self.dims = [int(d) for d in dims.split(",")]
+            self.activation = activation
+            self.batch = int(batch)
+            self.dtype = dtype
+        except ValueError as e:
+            raise SystemExit(f"bad --config '{spec}': {e}")
+        if self.dtype not in DTYPES:
+            raise SystemExit(f"bad dtype '{self.dtype}' in '{spec}'")
+        if len(self.dims) < 2 or min(self.dims) < 1 or self.batch < 1:
+            raise SystemExit(f"bad dims/batch in '{spec}'")
+
+    def meta(self):
+        return {
+            "name": self.name,
+            "dims": self.dims,
+            "activation": self.activation,
+            "micro_batch": self.batch,
+            "dtype": self.dtype,
+            "param_shapes": [list(s) for _, s in model.param_shapes(self.dims)],
+            "entries": {
+                "forward": "forward.hlo.txt",
+                "grad": "grad.hlo.txt",
+            },
+        }
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(cfg):
+    dt = DTYPES[cfg.dtype]
+    params = [jax.ShapeDtypeStruct(tuple(s), dt) for _, s in model.param_shapes(cfg.dims)]
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.dims[0]), dt)
+    y = jax.ShapeDtypeStruct((cfg.batch, cfg.dims[-1]), dt)
+    mask = jax.ShapeDtypeStruct((cfg.batch,), dt)
+    return params, x, y, mask
+
+
+def lower_config(cfg):
+    """Lower both entry points; returns {filename: hlo_text}."""
+    params, x, y, mask = example_args(cfg)
+
+    def fwd(*args):
+        return model.forward(list(args[:-1]), args[-1], cfg.activation)
+
+    def grad(*args):
+        ps = list(args[: len(params)])
+        xx, yy, mm = args[len(params):]
+        return model.grad_batch(ps, xx, yy, mm, cfg.activation)
+
+    fwd_lowered = jax.jit(fwd).lower(*params, x)
+    grad_lowered = jax.jit(grad).lower(*params, x, y, mask)
+    return {
+        "forward.hlo.txt": to_hlo_text(fwd_lowered),
+        "grad.hlo.txt": to_hlo_text(grad_lowered),
+    }
+
+
+def build(out_dir, configs, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"version": 1, "configs": {}}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass  # rebuild a corrupt manifest from scratch
+    manifest.setdefault("configs", {})
+
+    for cfg in configs:
+        cfg_dir = os.path.join(out_dir, cfg.name)
+        meta_path = os.path.join(cfg_dir, "meta.json")
+        meta = cfg.meta()
+        if not force and os.path.exists(meta_path):
+            try:
+                with open(meta_path) as f:
+                    existing = json.load(f)
+                if existing == meta and all(
+                    os.path.exists(os.path.join(cfg_dir, e)) for e in meta["entries"].values()
+                ):
+                    print(f"[aot] {cfg.name}: up to date")
+                    manifest["configs"][cfg.name] = meta
+                    continue
+            except (json.JSONDecodeError, OSError):
+                pass
+        print(f"[aot] {cfg.name}: lowering dims={cfg.dims} act={cfg.activation} "
+              f"B={cfg.batch} {cfg.dtype}")
+        os.makedirs(cfg_dir, exist_ok=True)
+        for fname, text in lower_config(cfg).items():
+            with open(os.path.join(cfg_dir, fname), "w") as f:
+                f.write(text)
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=2)
+        manifest["configs"][cfg.name] = meta
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest: {manifest_path} ({len(manifest['configs'])} configs)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", action="append", default=[],
+                    help="name:dims:activation:micro_batch:dtype "
+                         "(e.g. mnist:784,30,10:sigmoid:100:f32)")
+    ap.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = ap.parse_args()
+
+    jax.config.update("jax_enable_x64", True)  # for f64 configs
+    specs = args.config or DEFAULT_CONFIGS
+    build(args.out_dir, [Config(s) for s in specs], force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,156 @@
+"""Layer-1 Pallas kernels for the dense layer — the paper's compute hot-spot.
+
+neural-fortran's inner loop is ``matmul(transpose(w), a) + b`` followed by
+the activation (fwdprop, Listing 6) and the rank-1 gradient accumulation
+``matmul(a, transpose(delta))`` (backprop, Listing 7). These kernels
+re-express that work for the TPU memory hierarchy:
+
+* weights arrive **transposed** (``wt`` with shape ``[out, in]``) because the
+  Rust coordinator stores ``w`` column-major ``[in, out]`` — the same bytes
+  reinterpreted row-major are exactly ``wt``. This also happens to be the
+  MXU-friendly "B-transposed" GEMM layout.
+* the forward kernel fuses matmul + bias + activation in one VMEM-resident
+  block, so activations never round-trip to HBM between the matmul and σ;
+* blocks are tiled over the batch and output dimensions with the reduction
+  dimension kept whole (the paper's layers are narrow: K ≤ 784 keeps every
+  ``x``/``wt`` tile comfortably inside the ~16 MB VMEM budget — see
+  DESIGN.md §7 for the footprint arithmetic);
+* ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; numerics are validated through the interpret path and the
+  BlockSpec structure documents the real-TPU schedule.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and is swept by pytest
+(including hypothesis shape/dtype sweeps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the MXU's 128 lanes; clamped to the
+# (padded) problem size so tiny layers don't waste VMEM.
+TILE_B = 128
+TILE_O = 128
+
+_ACTIVATIONS = {
+    "gaussian": lambda z: jnp.exp(-(z * z)),
+    "relu": lambda z: jnp.maximum(z, 0.0),
+    "sigmoid": lambda z: 1.0 / (1.0 + jnp.exp(-z)),
+    "step": lambda z: jnp.where(z > 0, 1.0, 0.0).astype(z.dtype),
+    "tanh": jnp.tanh,
+    "leaky_relu": lambda z: jnp.where(z > 0, z, 0.01 * z),
+    "elu": lambda z: jnp.where(z > 0, z, jnp.exp(jnp.minimum(z, 0.0)) - 1.0),
+}
+
+_ACTIVATION_PRIMES = {
+    "gaussian": lambda z: -2.0 * z * jnp.exp(-(z * z)),
+    "relu": lambda z: (z > 0).astype(z.dtype),
+    "sigmoid": lambda z: _ACTIVATIONS["sigmoid"](z) * (1.0 - _ACTIVATIONS["sigmoid"](z)),
+    "step": lambda z: jnp.zeros_like(z),
+    "tanh": lambda z: 1.0 - jnp.tanh(z) ** 2,
+    "leaky_relu": lambda z: jnp.where(z > 0, 1.0, 0.01).astype(z.dtype),
+    "elu": lambda z: jnp.where(z > 0, 1.0, jnp.exp(jnp.minimum(z, 0.0))).astype(z.dtype),
+}
+
+ACTIVATION_NAMES = tuple(sorted(_ACTIVATIONS))
+
+
+def activation_fn(name):
+    """σ by paper name (gaussian/relu/sigmoid/step/tanh + extensions)."""
+    return _ACTIVATIONS[name]
+
+
+def activation_prime_fn(name):
+    """σ' by paper name."""
+    return _ACTIVATION_PRIMES[name]
+
+
+def _round_up(n, m):
+    return (n + m - 1) // m * m
+
+
+def _pad2(a, rows, cols):
+    """Zero-pad a 2-D array up to [rows, cols]."""
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+# ---------------------------------------------------------------------------
+# Forward: act(x @ wtᵀ + b), plus the pre-activation z (needed by backprop)
+# ---------------------------------------------------------------------------
+
+
+def _dense_fwd_kernel(x_ref, wt_ref, b_ref, z_ref, a_ref, *, act):
+    """One (batch-tile × out-tile) block: z = x·wtᵀ + b ; a = σ(z).
+
+    x_ref:  [bm, K]   — batch tile, full reduction dim
+    wt_ref: [bn, K]   — output tile of the transposed weights
+    b_ref:  [1, bn]
+    z_ref/a_ref: [bm, bn]
+    """
+    x = x_ref[...]
+    wt = wt_ref[...]
+    # MXU matmul with f32 accumulation; 'wt' is the B-transposed operand.
+    z = jax.lax.dot_general(
+        x,
+        wt,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.promote_types(x.dtype, jnp.float32),
+    ).astype(x.dtype)
+    z = z + b_ref[...]
+    z_ref[...] = z
+    a_ref[...] = act(z)
+
+
+def dense_fwd(x, wt, b, activation="sigmoid", tile_b=TILE_B, tile_o=TILE_O):
+    """Fused dense layer forward.
+
+    Args:
+      x:  [B, in]  batch of activations (rows are samples).
+      wt: [out, in] transposed weights (Rust column-major ``w`` bytes).
+      b:  [out]    biases.
+      activation: paper activation name.
+
+    Returns:
+      (z, a): pre-activations and activations, both [B, out].
+    """
+    B, K = x.shape
+    out, K2 = wt.shape
+    assert K == K2, f"shape mismatch: x {x.shape} vs wt {wt.shape}"
+    assert b.shape == (out,), f"bias shape {b.shape} != ({out},)"
+    act = activation_fn(activation)
+
+    bm = min(tile_b, _round_up(B, 8))
+    bn = min(tile_o, _round_up(out, 8))
+    Bp, Op = _round_up(B, bm), _round_up(out, bn)
+
+    xp = _pad2(x, Bp, K)
+    wtp = _pad2(wt, Op, K)
+    bp = jnp.pad(b, (0, Op - out)).reshape(1, Op)
+
+    grid = (Bp // bm, Op // bn)
+    z, a = pl.pallas_call(
+        functools.partial(_dense_fwd_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, K), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Op), x.dtype),
+            jax.ShapeDtypeStruct((Bp, Op), x.dtype),
+        ],
+        interpret=True,
+    )(xp, wtp, bp)
+    return z[:B, :out], a[:B, :out]
+
+
+# Backward kernels live in dense_bwd (re-exported here so callers can
+# treat the dense layer as one namespace).
+from .dense_bwd import grad_b, grad_w, hidden_delta, output_delta  # noqa: E402,F401

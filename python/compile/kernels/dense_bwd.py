@@ -1,0 +1,171 @@
+"""Layer-1 Pallas backward kernels — the paper's Listing-7 recurrences.
+
+Split from dense.py: output-layer delta, hidden-layer delta, and the
+batch-summed gradient products, all masked for padded micro-batches and
+tiled with the same VMEM-sized BlockSpecs as the forward kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dense import TILE_B, TILE_O, _pad2, _round_up, activation_prime_fn
+
+# ---------------------------------------------------------------------------
+# Backward deltas
+# ---------------------------------------------------------------------------
+
+
+def _output_delta_kernel(a_ref, y_ref, z_ref, m_ref, d_ref, *, act_prime):
+    """δ_L = (a − y) ⊙ σ'(z) ⊙ mask — fused output-layer delta."""
+    d_ref[...] = (a_ref[...] - y_ref[...]) * act_prime(z_ref[...]) * m_ref[...]
+
+
+def output_delta(a, y, z, mask, activation="sigmoid", tile_b=TILE_B):
+    """Output-layer delta with batch masking (padded rows contribute 0).
+
+    a, y, z: [B, out]; mask: [B] of 0/1. Returns δ [B, out].
+    """
+    B, out = a.shape
+    act_prime = activation_prime_fn(activation)
+    bm = min(tile_b, _round_up(B, 8))
+    bn = min(TILE_O, _round_up(out, 8))
+    Bp, Op = _round_up(B, bm), _round_up(out, bn)
+
+    ap, yp, zp = (_pad2(v, Bp, Op) for v in (a, y, z))
+    mp = jnp.pad(mask.astype(a.dtype), (0, Bp - B)).reshape(Bp, 1)
+
+    grid = (Bp // bm, Op // bn)
+    d = pl.pallas_call(
+        functools.partial(_output_delta_kernel, act_prime=act_prime),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Op), a.dtype),
+        interpret=True,
+    )(ap, yp, zp, mp)
+    return d[:B, :out]
+
+
+def _hidden_delta_kernel(d_ref, wt_ref, z_ref, o_ref, *, act_prime):
+    """δ_l = (δ_{l+1} · wt) ⊙ σ'(z_l).
+
+    d_ref:  [bm, O]   — downstream delta, full output dim
+    wt_ref: [O, bn]   — slice of wt (shape [out, in]) over the in-tile
+    z_ref/o_ref: [bm, bn]
+    """
+    d = d_ref[...]
+    wt = wt_ref[...]
+    back = jax.lax.dot_general(
+        d,
+        wt,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.promote_types(d.dtype, jnp.float32),
+    ).astype(d.dtype)
+    o_ref[...] = back * act_prime(z_ref[...])
+
+
+def hidden_delta(delta, wt, z, activation="sigmoid", tile_b=TILE_B, tile_i=TILE_O):
+    """Hidden-layer delta: (δ @ wt) ⊙ σ'(z).
+
+    delta: [B, out] downstream delta; wt: [out, in] (weights of the layer
+    *between* this layer and downstream); z: [B, in]. Returns [B, in].
+    The paper's Listing 7 equivalent: ``matmul(w, db(n+1)) * sigma'(z)``.
+    """
+    B, out = delta.shape
+    out2, inn = wt.shape
+    assert out == out2, f"shape mismatch: delta {delta.shape} vs wt {wt.shape}"
+    assert z.shape == (B, inn)
+    act_prime = activation_prime_fn(activation)
+
+    bm = min(tile_b, _round_up(B, 8))
+    bn = min(tile_i, _round_up(inn, 8))
+    Bp, Ip = _round_up(B, bm), _round_up(inn, bn)
+
+    dp = delta  # full out dim, no padding needed on K
+    zp = _pad2(z, Bp, Ip)
+    dp = _pad2(dp, Bp, out)
+    wtp = _pad2(wt, out, Ip)
+
+    grid = (Bp // bm, Ip // bn)
+    o = pl.pallas_call(
+        functools.partial(_hidden_delta_kernel, act_prime=act_prime),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, out), lambda i, j: (i, 0)),
+            pl.BlockSpec((out, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Ip), delta.dtype),
+        interpret=True,
+    )(dp, wtp, zp)
+    return o[:B, :inn]
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation (batched rank-1 updates of Listing 7)
+# ---------------------------------------------------------------------------
+
+
+def _grad_w_kernel(d_ref, a_ref, o_ref):
+    """dwt = δᵀ · a summed over the batch.
+
+    d_ref: [B, bn] — delta tile (full batch)
+    a_ref: [B, bk] — previous activations tile (full batch)
+    o_ref: [bn, bk]
+    """
+    d = d_ref[...]
+    a = a_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        d,
+        a,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.promote_types(d.dtype, jnp.float32),
+    ).astype(d.dtype)
+
+
+def grad_w(delta, a_prev, tile_o=TILE_O, tile_i=TILE_O):
+    """Batch-summed weight gradient, in the Rust/AOT ``wt`` layout.
+
+    delta: [B, out]; a_prev: [B, in]. Returns dwt [out, in] — the batched
+    form of the paper's ``matmul(reshape(a,[in,1]), reshape(db,[1,out]))``
+    accumulated over the batch (transposed into the wt layout).
+    """
+    B, out = delta.shape
+    B2, inn = a_prev.shape
+    assert B == B2
+
+    bn = min(tile_o, _round_up(out, 8))
+    bk = min(tile_i, _round_up(inn, 8))
+    Op, Ip = _round_up(out, bn), _round_up(inn, bk)
+
+    dp = _pad2(delta, B, Op)
+    ap = _pad2(a_prev, B, Ip)
+
+    grid = (Op // bn, Ip // bk)
+    o = pl.pallas_call(
+        _grad_w_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bn), lambda i, j: (0, i)),
+            pl.BlockSpec((B, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Op, Ip), delta.dtype),
+        interpret=True,
+    )(dp, ap)
+    return o[:out, :inn]
+
+
+def grad_b(delta):
+    """Batch-summed bias gradient: db[out] = Σ_batch δ. Pure reduction —
+    left to XLA (a single-pass sum fuses better than a Pallas roundtrip)."""
+    return jnp.sum(delta, axis=0)

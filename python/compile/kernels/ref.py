@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness source of
+truth) and a reference MLP used to cross-check the whole Layer-2 model
+against ``jax.grad``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .dense import activation_fn, activation_prime_fn
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level oracles (same signatures as kernels/dense.py)
+# ---------------------------------------------------------------------------
+
+
+def dense_fwd(x, wt, b, activation="sigmoid"):
+    z = x @ wt.T + b
+    return z, activation_fn(activation)(z)
+
+
+def output_delta(a, y, z, mask, activation="sigmoid"):
+    return (a - y) * activation_prime_fn(activation)(z) * mask.astype(a.dtype)[:, None]
+
+
+def hidden_delta(delta, wt, z, activation="sigmoid"):
+    return (delta @ wt) * activation_prime_fn(activation)(z)
+
+
+def grad_w(delta, a_prev):
+    return delta.T @ a_prev
+
+
+def grad_b(delta):
+    return jnp.sum(delta, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Reference model: forward + cost + autodiff gradients
+# ---------------------------------------------------------------------------
+
+
+def forward(params, x, activation="sigmoid"):
+    """Reference MLP forward. params = [wt_0, b_1, wt_1, b_2, ...]."""
+    act = activation_fn(activation)
+    a = x
+    for wt, b in zip(params[0::2], params[1::2]):
+        a = act(a @ wt.T + b)
+    return a
+
+
+def cost(params, x, y, mask, activation="sigmoid"):
+    """Masked, batch-summed quadratic cost ½‖a−y‖² (paper §3.3)."""
+    a = forward(params, x, activation)
+    sq = 0.5 * jnp.sum((a - y) ** 2, axis=1)
+    return jnp.sum(sq * mask.astype(a.dtype))
+
+
+def grad_batch(params, x, y, mask, activation="sigmoid"):
+    """Autodiff gradients of the masked quadratic cost — the oracle the
+    explicit Listing-7 backprop in model.py must match exactly."""
+    return jax.grad(cost)(params, x, y, mask, activation)

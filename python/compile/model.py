@@ -1,0 +1,89 @@
+"""Layer-2 JAX model: the paper's MLP forward and backprop, built on the
+Layer-1 Pallas kernels, in the exact structure of neural-fortran's
+``fwdprop`` (Listing 6) and ``backprop`` (Listing 7).
+
+Parameter convention (shared with the Rust coordinator, see
+``rust/src/runtime``):
+
+  params = [wt_0, b_1, wt_1, b_2, ..., wt_{L-2}, b_{L-1}]
+
+where ``wt_l`` has shape ``[dims[l+1], dims[l]]`` — the row-major view of
+the coordinator's column-major ``w(dims[l], dims[l+1])`` buffer — and
+``b_l`` has shape ``[dims[l]]``.
+
+``grad_batch`` takes a 0/1 ``mask`` over the batch so one AOT-compiled
+executable (static shapes!) serves any shard size: the coordinator pads the
+last micro-batch with zero-mask samples, which provably contribute nothing
+to the summed tendencies.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import dense
+
+
+def param_shapes(dims):
+    """Shapes of the flat params list for a network of layer sizes `dims`."""
+    shapes = []
+    for l in range(len(dims) - 1):
+        shapes.append(("wt%d" % l, (dims[l + 1], dims[l])))
+        shapes.append(("b%d" % (l + 1), (dims[l + 1],)))
+    return shapes
+
+
+def forward(params, x, activation="sigmoid"):
+    """Network output for a batch ``x`` of shape [B, dims[0]] — the paper's
+    pure ``output()`` method. Returns [B, dims[-1]]."""
+    a = x
+    for wt, b in zip(params[0::2], params[1::2]):
+        _, a = dense.dense_fwd(a, wt, b, activation)
+    return (a,)
+
+
+def grad_batch(params, x, y, mask, activation="sigmoid"):
+    """Masked batch-summed weight/bias tendencies — the compute half of the
+    paper's ``train_batch``, with the Listing-7 backward recurrence made
+    explicit over the Pallas kernels.
+
+    Args:
+      params: [wt_0, b_1, ...] as above.
+      x: [B, dims[0]] inputs; y: [B, dims[-1]] targets; mask: [B] 0/1.
+
+    Returns a tuple matching ``params`` order: (dwt_0, db_1, dwt_1, ...).
+    """
+    wts = list(params[0::2])
+    bs = list(params[1::2])
+    nlayers = len(wts) + 1
+
+    # Forward pass, recording z and a per layer (Listing 6 stores these on
+    # the layer objects; we keep them in lists).
+    a_list = [x]  # a_list[l]: activations entering layer l's weights
+    z_list = [None]
+    a = x
+    for wt, b in zip(wts, bs):
+        z, a = dense.dense_fwd(a, wt, b, activation)
+        z_list.append(z)
+        a_list.append(a)
+
+    # Output-layer delta (masked), then walk the layers backward.
+    delta = dense.output_delta(a_list[-1], y, z_list[-1], mask, activation)
+    dwts = [None] * len(wts)
+    dbs = [None] * len(bs)
+    for n in range(nlayers - 1, 0, -1):
+        # Tendencies for the weights/biases feeding layer n.
+        dwts[n - 1] = dense.grad_w(delta, a_list[n - 1])
+        dbs[n - 1] = dense.grad_b(delta)
+        if n > 1:
+            delta = dense.hidden_delta(delta, wts[n - 1], z_list[n - 1], activation)
+
+    out = []
+    for dwt, db in zip(dwts, dbs):
+        out.append(dwt)
+        out.append(db)
+    return tuple(out)
+
+
+def predict_digits(params, x, activation="sigmoid"):
+    """Forward + argmax — used by the accuracy evaluation path."""
+    (a,) = forward(params, x, activation)
+    return (jnp.argmax(a, axis=1).astype(jnp.int32),)

@@ -1,0 +1,81 @@
+"""AOT pipeline tests: config parsing, lowering to HLO text, manifest
+bookkeeping, and the incremental-skip behaviour `make artifacts` relies on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_config_parsing():
+    c = aot.Config("mnist:784,30,10:sigmoid:100:f32")
+    assert c.name == "mnist"
+    assert c.dims == [784, 30, 10]
+    assert c.activation == "sigmoid"
+    assert c.batch == 100
+    assert c.dtype == "f32"
+    meta = c.meta()
+    assert meta["param_shapes"] == [[30, 784], [30], [10, 30], [10]]
+    assert set(meta["entries"]) == {"forward", "grad"}
+
+
+@pytest.mark.parametrize(
+    "bad",
+    [
+        "x:1,2:sigmoid:8",          # missing dtype
+        "x:1,2:sigmoid:8:f16",      # unsupported dtype
+        "x:5:sigmoid:8:f32",        # single layer
+        "x:1,2:sigmoid:0:f32",      # zero batch
+    ],
+)
+def test_bad_configs_rejected(bad):
+    with pytest.raises(SystemExit):
+        aot.Config(bad)
+
+
+def test_lower_tiny_config_produces_hlo_text():
+    cfg = aot.Config("tiny:2,3,2:tanh:4:f32")
+    arts = aot.lower_config(cfg)
+    assert set(arts) == {"forward.hlo.txt", "grad.hlo.txt"}
+    for name, text in arts.items():
+        assert "ENTRY" in text, f"{name} is not HLO text"
+        assert "parameter(0)" in text
+    # grad must expose one output per parameter (4 params for 2,3,2).
+    nparams = len(model.param_shapes(cfg.dims))
+    assert nparams == 4
+
+
+def test_build_writes_and_skips(tmp_path):
+    out = str(tmp_path / "artifacts")
+    cfg = aot.Config("tiny:2,3,2:sigmoid:4:f32")
+    aot.build(out, [cfg])
+    man_path = os.path.join(out, "manifest.json")
+    with open(man_path) as f:
+        manifest = json.load(f)
+    assert "tiny" in manifest["configs"]
+    hlo = os.path.join(out, "tiny", "forward.hlo.txt")
+    first_mtime = os.path.getmtime(hlo)
+
+    # Second build must skip (incremental no-op).
+    aot.build(out, [cfg])
+    assert os.path.getmtime(hlo) == first_mtime
+
+    # Changing the config rebuilds.
+    cfg2 = aot.Config("tiny:2,3,2:tanh:4:f32")
+    aot.build(out, [cfg2])
+    with open(os.path.join(out, "tiny", "meta.json")) as f:
+        assert json.load(f)["activation"] == "tanh"
+
+
+def test_build_recovers_from_corrupt_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    os.makedirs(out)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        f.write("{not json")
+    aot.build(out, [aot.Config("tiny:2,2:sigmoid:2:f32")])
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert "tiny" in manifest["configs"]

@@ -1,0 +1,191 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle,
+including hypothesis sweeps over shapes, dtypes, and activations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, ref
+
+jax.config.update("jax_enable_x64", True)
+
+ACTS = list(dense.ACTIVATION_NAMES)
+
+
+def rngs(seed):
+    return np.random.default_rng(seed)
+
+
+def make_fwd_case(r, B, inn, out, dtype):
+    x = r.normal(size=(B, inn)).astype(dtype)
+    wt = r.normal(size=(out, inn)).astype(dtype) / np.sqrt(inn)
+    b = r.normal(size=(out,)).astype(dtype)
+    return x, wt, b
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# dense_fwd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ACTS)
+def test_dense_fwd_matches_ref_all_activations(activation):
+    x, wt, b = make_fwd_case(rngs(0), 17, 23, 9, np.float32)
+    z, a = dense.dense_fwd(x, wt, b, activation)
+    zr, ar = ref.dense_fwd(x, wt, b, activation)
+    np.testing.assert_allclose(z, zr, **tol(np.float32))
+    np.testing.assert_allclose(a, ar, **tol(np.float32))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dense_fwd_dtypes(dtype):
+    x, wt, b = make_fwd_case(rngs(1), 8, 12, 6, dtype)
+    z, a = dense.dense_fwd(x, wt, b, "tanh")
+    zr, ar = ref.dense_fwd(x, wt, b, "tanh")
+    assert np.asarray(z).dtype == dtype
+    np.testing.assert_allclose(a, ar, **tol(dtype))
+
+
+def test_dense_fwd_paper_shapes():
+    # The paper's 784-30-10 layers at micro-batch 100.
+    for (inn, out) in [(784, 30), (30, 10)]:
+        x, wt, b = make_fwd_case(rngs(2), 100, inn, out, np.float32)
+        z, a = dense.dense_fwd(x, wt, b, "sigmoid")
+        zr, ar = ref.dense_fwd(x, wt, b, "sigmoid")
+        np.testing.assert_allclose(z, zr, **tol(np.float32))
+        np.testing.assert_allclose(a, ar, **tol(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 150),
+    inn=st.integers(1, 96),
+    out=st.integers(1, 64),
+    act=st.sampled_from(ACTS),
+)
+def test_dense_fwd_hypothesis_shapes(B, inn, out, act):
+    x, wt, b = make_fwd_case(rngs(B * 1000 + inn * 10 + out), B, inn, out, np.float32)
+    z, a = dense.dense_fwd(x, wt, b, act)
+    zr, ar = ref.dense_fwd(x, wt, b, act)
+    assert z.shape == (B, out)
+    np.testing.assert_allclose(z, zr, **tol(np.float32))
+    np.testing.assert_allclose(a, ar, **tol(np.float32))
+
+
+def test_dense_fwd_rejects_bad_shapes():
+    r = rngs(3)
+    with pytest.raises(AssertionError):
+        dense.dense_fwd(r.normal(size=(4, 5)).astype(np.float32),
+                        r.normal(size=(3, 6)).astype(np.float32),
+                        np.zeros(3, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# deltas
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ACTS)
+def test_output_delta_matches_ref(activation):
+    r = rngs(4)
+    B, out = 33, 11
+    a = r.normal(size=(B, out)).astype(np.float32)
+    y = r.normal(size=(B, out)).astype(np.float32)
+    z = r.normal(size=(B, out)).astype(np.float32)
+    mask = (r.uniform(size=B) > 0.3).astype(np.float32)
+    d = dense.output_delta(a, y, z, mask, activation)
+    dr = ref.output_delta(a, y, z, mask, activation)
+    np.testing.assert_allclose(d, dr, **tol(np.float32))
+
+
+def test_output_delta_mask_zeroes_rows():
+    r = rngs(5)
+    B, out = 10, 4
+    a = r.normal(size=(B, out)).astype(np.float32)
+    y = r.normal(size=(B, out)).astype(np.float32)
+    z = r.normal(size=(B, out)).astype(np.float32)
+    mask = np.zeros(B, np.float32)
+    mask[:3] = 1.0
+    d = np.asarray(dense.output_delta(a, y, z, mask, "sigmoid"))
+    assert np.all(d[3:] == 0.0)
+    assert np.any(d[:3] != 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 80), inn=st.integers(1, 64), out=st.integers(1, 48),
+       act=st.sampled_from(ACTS))
+def test_hidden_delta_hypothesis(B, inn, out, act):
+    r = rngs(B + inn * 7 + out * 13)
+    delta = r.normal(size=(B, out)).astype(np.float32)
+    wt = r.normal(size=(out, inn)).astype(np.float32)
+    z = r.normal(size=(B, inn)).astype(np.float32)
+    d = dense.hidden_delta(delta, wt, z, act)
+    dr = ref.hidden_delta(delta, wt, z, act)
+    assert d.shape == (B, inn)
+    np.testing.assert_allclose(d, dr, **tol(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# gradients
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 100), inn=st.integers(1, 80), out=st.integers(1, 40))
+def test_grad_w_hypothesis(B, inn, out):
+    r = rngs(B * 31 + inn + out)
+    delta = r.normal(size=(B, out)).astype(np.float32)
+    a_prev = r.normal(size=(B, inn)).astype(np.float32)
+    g = dense.grad_w(delta, a_prev)
+    gr = ref.grad_w(delta, a_prev)
+    assert g.shape == (out, inn)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_grad_w_is_summed_outer_products():
+    # Listing 7: dw accumulates a ⊗ δ per sample.
+    r = rngs(6)
+    B, inn, out = 7, 5, 3
+    delta = r.normal(size=(B, out)).astype(np.float64)
+    a_prev = r.normal(size=(B, inn)).astype(np.float64)
+    g = np.asarray(dense.grad_w(delta, a_prev))
+    manual = np.zeros((out, inn))
+    for s in range(B):
+        manual += np.outer(delta[s], a_prev[s])
+    np.testing.assert_allclose(g, manual, rtol=1e-12, atol=1e-12)
+
+
+def test_grad_b_sums_batch():
+    r = rngs(7)
+    delta = r.normal(size=(9, 4)).astype(np.float32)
+    np.testing.assert_allclose(dense.grad_b(delta), delta.sum(axis=0), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# activation functions themselves
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ACTS)
+def test_activation_prime_matches_finite_difference(name):
+    if name == "step":
+        pytest.skip("step has zero derivative by definition")
+    # Avoid x=0 exactly: relu-family derivatives are discontinuous there.
+    xs = jnp.asarray(np.linspace(-2.0, 2.0, 41) + 1e-3, dtype=jnp.float64)
+    f = dense.activation_fn(name)
+    fp = dense.activation_prime_fn(name)
+    h = 1e-7
+    fd = (f(xs + h) - f(xs - h)) / (2 * h)
+    np.testing.assert_allclose(fp(xs), fd, rtol=1e-5, atol=1e-5)
+
+
+def test_activation_names_cover_paper_set():
+    for paper_name in ("gaussian", "relu", "sigmoid", "step", "tanh"):
+        assert paper_name in dense.ACTIVATION_NAMES

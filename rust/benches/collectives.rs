@@ -1,0 +1,105 @@
+//! Ablation bench — collective-sum schedules (DESIGN.md §2 design choice).
+//!
+//! The paper's training step does exactly one `co_sum` of the full
+//! gradient per mini-batch. This bench measures that operation on
+//! gradient-sized payloads (the 784-30-10 network has 23,860 parameters)
+//! across team sizes and the three reduction schedules, plus the TCP
+//! backend for the distributed-memory configuration.
+
+use neural_rs::collectives::{Communicator, ReduceAlgo, TcpTopology, Team};
+use neural_rs::metrics::{Stopwatch, Table};
+use std::net::SocketAddr;
+use std::time::Duration;
+
+/// One timed trial: `iters` co_sums of a `len`-element f32 buffer on an
+/// `n`-image shared-memory team. Returns seconds per operation.
+fn bench_local(n: usize, algo: ReduceAlgo, len: usize, iters: usize) -> f64 {
+    let comms = Team::with_algo(n, algo);
+    let times: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|c| {
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; len];
+                    // Warmup.
+                    c.co_sum(&mut buf);
+                    let sw = Stopwatch::start();
+                    for _ in 0..iters {
+                        c.co_sum(&mut buf);
+                    }
+                    sw.elapsed_s() / iters as f64
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    times.iter().copied().fold(0.0, f64::max)
+}
+
+fn bench_tcp(n: usize, len: usize, iters: usize) -> f64 {
+    static PORT: std::sync::atomic::AtomicU16 = std::sync::atomic::AtomicU16::new(48100);
+    let port = PORT.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+    let addr: SocketAddr = format!("127.0.0.1:{port}").parse().unwrap();
+    let t = Duration::from_secs(30);
+    let times: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = vec![s.spawn(move || {
+            let c = TcpTopology::leader(addr, n, t).unwrap();
+            let mut buf = vec![1.0f32; len];
+            c.co_sum(&mut buf);
+            let sw = Stopwatch::start();
+            for _ in 0..iters {
+                c.co_sum(&mut buf);
+            }
+            sw.elapsed_s() / iters as f64
+        })];
+        for img in 2..=n {
+            handles.push(s.spawn(move || {
+                let c = TcpTopology::worker(addr, img, n, t).unwrap();
+                let mut buf = vec![1.0f32; len];
+                c.co_sum(&mut buf);
+                let sw = Stopwatch::start();
+                for _ in 0..iters {
+                    c.co_sum(&mut buf);
+                }
+                sw.elapsed_s() / iters as f64
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    times.iter().copied().fold(0.0, f64::max)
+}
+
+fn main() {
+    // The MNIST network's gradient payload and a 10x payload.
+    let sizes = [23_860usize, 238_600];
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    // Teams beyond the core count still run (time-sliced); the algorithmic
+    // comparison remains valid, absolute numbers inflate.
+    let teams: Vec<usize> = vec![2, 4, 8];
+    if hw < 8 {
+        println!("# note: host has {hw} hw thread(s); teams time-slice above that");
+    }
+    let iters = 200;
+
+    println!("# co_sum ablation: µs per collective (max over images, {iters} iters)");
+    let mut table = Table::new(&["Payload", "Images", "flat (µs)", "tree (µs)", "chunked (µs)", "tcp (µs)"]);
+    for &len in &sizes {
+        for &n in &teams {
+            let mut cells = vec![format!("{len}"), n.to_string()];
+            for algo in ReduceAlgo::ALL {
+                let s = bench_local(n, algo, len, iters);
+                cells.push(format!("{:.1}", s * 1e6));
+            }
+            let tcp = bench_tcp(n, len, iters.min(50));
+            cells.push(format!("{:.1}", tcp * 1e6));
+            println!(
+                "len={len:7} images={n}: flat={} tree={} chunked={} tcp={}",
+                cells[2], cells[3], cells[4], cells[5]
+            );
+            table.row(&cells);
+        }
+    }
+    println!("\n{}", table.render());
+    println!("# Expected: tree/chunked beat flat as images grow; TCP pays the socket tax —");
+    println!("# motivating the paper's shared-memory runs for single-node scaling.");
+}

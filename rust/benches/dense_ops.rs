@@ -1,0 +1,86 @@
+//! Micro-bench — the L1/L2 hot path: per-call latency of the AOT `grad`
+//! and `forward` executables vs the native engine on the paper's
+//! 784-30-10 micro-batches. This is the number the coordinator's step
+//! time is built from; the §Perf iteration log in EXPERIMENTS.md tracks
+//! it across optimizations.
+
+use neural_rs::data::synthesize;
+use neural_rs::metrics::{Stopwatch, Table};
+use neural_rs::nn::Network;
+use neural_rs::runtime::{Engine, Manifest};
+use neural_rs::tensor::Summary;
+
+fn main() {
+    let root = std::path::Path::new("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(root).unwrap();
+    let meta = manifest.get("mnist").unwrap();
+    let engine = Engine::new().unwrap();
+    let compiled = engine.load(meta).unwrap();
+    let mut network = Network::<f32>::new(&meta.dims, meta.activation, 1);
+
+    let data = synthesize::<f32>(compiled.micro_batch(), 5);
+    let x = data.images;
+    let y = neural_rs::data::label_digits::<f32>(&data.labels);
+
+    let reps = 100;
+    let mut table = Table::new(&["Op", "Engine", "µs/call", "samples/s"]);
+    let b = compiled.micro_batch() as f64;
+
+    // grad: PJRT
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            let g = compiled.grad_batch(&network, &x, &y).unwrap();
+            std::hint::black_box(g);
+            sw.elapsed_s()
+        })
+        .collect();
+    let s = Summary::of(&times);
+    println!("grad  pjrt:   {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
+    table.row(&["grad".into(), "pjrt".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+
+    // grad: native
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            let g = network.grad_batch(&x, &y);
+            std::hint::black_box(g);
+            sw.elapsed_s()
+        })
+        .collect();
+    let s = Summary::of(&times);
+    println!("grad  native: {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
+    table.row(&["grad".into(), "native".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+
+    // forward: PJRT
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            let o = compiled.forward_batch(&network, &x).unwrap();
+            std::hint::black_box(o);
+            sw.elapsed_s()
+        })
+        .collect();
+    let s = Summary::of(&times);
+    println!("fwd   pjrt:   {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
+    table.row(&["forward".into(), "pjrt".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+
+    // forward: native
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            let o = network.output_batch(&x);
+            std::hint::black_box(o);
+            sw.elapsed_s()
+        })
+        .collect();
+    let s = Summary::of(&times);
+    println!("fwd   native: {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
+    table.row(&["forward".into(), "native".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+
+    println!("\n{}", table.render());
+}

@@ -1,0 +1,67 @@
+//! Figure 3 / Listing 13 — accuracy as a function of training epochs.
+//!
+//! Paper: 784-30-10 sigmoid, batch 1000, eta 3; accuracy starts at ~10%
+//! (random guess), rises fastest in the first ~5 epochs, exceeds 93% by
+//! epoch 30, and plateaus. This harness regenerates the series and
+//! asserts the shape.
+//!
+//! BENCH_FULL=1 runs the paper-scale corpus (50k/10k, PJRT engine).
+
+use neural_rs::collectives::ReduceAlgo;
+use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
+use neural_rs::data::load_or_synthesize;
+use neural_rs::nn::Activation;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let (train_n, test_n, engine) = if full {
+        (50_000, 10_000, EngineKind::Pjrt)
+    } else {
+        (10_000, 2_000, EngineKind::Native)
+    };
+    let epochs = 30;
+    let (train, test) = load_or_synthesize::<f32>("data/mnist", train_n, test_n, 42);
+    println!("# Fig 3: accuracy vs epochs ({} samples, engine {})", train.len(), engine.name());
+
+    let spec = ParallelSpec {
+        images: 1,
+        algo: ReduceAlgo::Flat,
+        opts: TrainerOptions {
+            dims: vec![784, 30, 10],
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: 1000,
+            epochs,
+            seed: 0,
+            batch_seed: 20190301,
+            strategy: Default::default(),
+                optimizer: Default::default(),
+        },
+        engine,
+        artifacts: Some(("artifacts".into(), "mnist".into())),
+        eval_each_epoch: true,
+    };
+    let report = train_parallel(&spec, &train, &test);
+
+    println!("epoch,accuracy_percent");
+    println!("0,{:.2}", report.initial_accuracy * 100.0);
+    for (i, acc) in report.epoch_accuracy.iter().enumerate() {
+        println!("{},{:.2}", i + 1, acc * 100.0);
+    }
+
+    // Shape assertions from the paper's Figure 3.
+    let acc = &report.epoch_accuracy;
+    assert!(
+        (0.05..0.25).contains(&report.initial_accuracy),
+        "initial accuracy should be ~ random guess, got {}",
+        report.initial_accuracy
+    );
+    let early_gain = acc[4] - report.initial_accuracy;
+    let late_gain = acc[epochs - 1] - acc[epochs - 6];
+    assert!(
+        early_gain > late_gain,
+        "learning should be fastest in the first five epochs ({early_gain} vs {late_gain})"
+    );
+    assert!(acc[epochs - 1] > 0.80, "final accuracy too low: {}", acc[epochs - 1]);
+    println!("# shape OK: fast early rise, plateau, final {:.2} %", acc[epochs - 1] * 100.0);
+}

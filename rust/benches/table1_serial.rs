@@ -1,0 +1,110 @@
+//! Table 1 — serial performance comparison.
+//!
+//! Paper: neural-fortran vs Keras+TensorFlow on serial MNIST training
+//! (784-30-10 sigmoid, SGD, quadratic cost, batch 32, 10 epochs; mean ±
+//! std of 5 runs, plus memory use).
+//!
+//! Here: the **PJRT engine** (the three-layer AOT stack — the "framework"
+//! under test) vs the **native Rust engine** (the independent comparator
+//! framework). Same protocol for both. Each engine is measured in its own
+//! child process so the peak-RSS column is honest (a shared process would
+//! report the max of both). Scaled down by default so `cargo bench` stays
+//! quick; BENCH_FULL=1 for the paper-scale run (50k samples, 10 epochs,
+//! 5 runs).
+
+use neural_rs::collectives::ReduceAlgo;
+use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
+use neural_rs::data::load_or_synthesize;
+use neural_rs::metrics::{peak_rss_bytes, Table};
+use neural_rs::nn::Activation;
+use neural_rs::tensor::Summary;
+
+fn protocol() -> (usize, usize, usize, usize) {
+    if std::env::var("BENCH_FULL").is_ok() {
+        (50_000, 10_000, 10, 5)
+    } else {
+        (4_000, 800, 2, 3)
+    }
+}
+
+/// Child mode: run one engine's measurement, print a machine-readable
+/// line, exit.
+fn run_child(engine: EngineKind) {
+    let (train_n, test_n, epochs, runs) = protocol();
+    let (train, test) = load_or_synthesize::<f32>("data/mnist", train_n, test_n, 42);
+    let spec = ParallelSpec {
+        images: 1,
+        algo: ReduceAlgo::Flat,
+        opts: TrainerOptions {
+            dims: vec![784, 30, 10],
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: 32, // Keras' default batch size, as the paper uses
+            epochs,
+            seed: 0,
+            batch_seed: 99,
+            strategy: Default::default(),
+                optimizer: Default::default(),
+        },
+        engine,
+        artifacts: Some(("artifacts".into(), "mnist_b32".into())),
+        eval_each_epoch: false,
+    };
+    let mut times = Vec::new();
+    let mut final_acc = 0.0;
+    for _ in 0..runs {
+        let report = train_parallel(&spec, &train, &test);
+        times.push(report.train_s);
+        final_acc = report.final_accuracy();
+    }
+    let s = Summary::of(&times);
+    let rss_mb = peak_rss_bytes().map(|b| b as f64 / 1e6).unwrap_or(f64::NAN);
+    // RESULT engine mean std rss_mb accuracy
+    println!("RESULT {} {:.6} {:.6} {:.1} {:.4}", engine.name(), s.mean, s.std, rss_mb, final_acc);
+}
+
+fn main() {
+    if let Ok(engine_name) = std::env::var("NRS_TABLE1_CHILD") {
+        let engine = EngineKind::parse(&engine_name).expect("bad child engine");
+        run_child(engine);
+        return;
+    }
+
+    let (train_n, _, epochs, runs) = protocol();
+    println!(
+        "# Table 1 (serial): 784-30-10 sigmoid, batch 32, {epochs} epochs, {runs} runs, {train_n} samples{}",
+        if std::env::var("BENCH_FULL").is_ok() { " [FULL]" } else { " [scaled: BENCH_FULL=1 for paper scale]" }
+    );
+
+    let exe = std::env::current_exe().expect("own path");
+    let mut table = Table::new(&["Framework", "Elapsed (s)", "Peak RSS (MB)"]);
+    for engine in [EngineKind::Pjrt, EngineKind::Native] {
+        let out = std::process::Command::new(&exe)
+            .env("NRS_TABLE1_CHILD", engine.name())
+            .output()
+            .expect("child failed to start");
+        assert!(out.status.success(), "child failed: {}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let line = stdout
+            .lines()
+            .find(|l| l.starts_with("RESULT "))
+            .expect("child produced no RESULT line")
+            .to_string();
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let (mean, std, rss, acc): (f64, f64, f64, f64) = (
+            parts[2].parse().unwrap(),
+            parts[3].parse().unwrap(),
+            parts[4].parse().unwrap(),
+            parts[5].parse().unwrap(),
+        );
+        let label = match engine {
+            EngineKind::Pjrt => "neural-rs (PJRT/Pallas)",
+            EngineKind::Native => "native Rust engine",
+        };
+        println!("{label}: {mean:.3} ± {std:.3} s, peak rss {rss:.0} MB (acc {:.1} %)", acc * 100.0);
+        table.row(&[label.to_string(), format!("{mean:.3} ± {std:.3}"), format!("{rss:.0}")]);
+    }
+    println!("\n{}", table.render());
+    println!("# Paper shape: the two frameworks are the same order of magnitude;");
+    println!("# the leaner engine uses less memory (paper: 220 vs 359 MB).");
+}

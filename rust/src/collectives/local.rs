@@ -1,0 +1,408 @@
+//! Shared-memory team backend: one thread per image inside one process —
+//! the paper's shared-memory (single node, OpenCoarrays/SMP) configuration.
+//!
+//! Each collective follows deposit → barrier → reduce → barrier → read →
+//! barrier. Reduction happens in f64 regardless of the payload kind, and
+//! every image reads the same reduced bytes, so replicas stay identical.
+//!
+//! Three reduction schedules are provided (ablated in
+//! `benches/collectives.rs`):
+//! - [`ReduceAlgo::Flat`]   — image 1 sums all deposits serially;
+//! - [`ReduceAlgo::Tree`]   — parallel binomial tree, ⌈log₂ n⌉ levels;
+//! - [`ReduceAlgo::Chunked`]— each image reduces a contiguous chunk of the
+//!   buffer across all deposits (bandwidth-parallel, like a ring's
+//!   reduce-scatter phase).
+
+use super::Communicator;
+use crate::tensor::Scalar;
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Reduction schedule for [`LocalComm::co_sum`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReduceAlgo {
+    /// Root accumulates every image's deposit in image order.
+    Flat,
+    /// Parallel binomial tree over images.
+    #[default]
+    Tree,
+    /// Each image reduces one contiguous chunk of the buffer.
+    Chunked,
+}
+
+impl ReduceAlgo {
+    pub const ALL: [ReduceAlgo; 3] = [ReduceAlgo::Flat, ReduceAlgo::Tree, ReduceAlgo::Chunked];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceAlgo::Flat => "flat",
+            ReduceAlgo::Tree => "tree",
+            ReduceAlgo::Chunked => "chunked",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Some(Self::Flat),
+            "tree" => Some(Self::Tree),
+            "chunked" => Some(Self::Chunked),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Shared {
+    n: usize,
+    algo: ReduceAlgo,
+    barrier: Barrier,
+    /// Per-image deposit slots (f64-converted payloads).
+    slots: Vec<Mutex<Vec<f64>>>,
+    /// Reduced / broadcast value all images read back.
+    result: Mutex<Vec<f64>>,
+}
+
+/// A team factory: build `n` connected [`LocalComm`] handles, one per
+/// image, to be moved into worker threads.
+pub struct Team;
+
+impl Team {
+    /// Team of `n` images with the default (tree) reduction.
+    pub fn new(n: usize) -> Vec<LocalComm> {
+        Self::with_algo(n, ReduceAlgo::default())
+    }
+
+    /// Team of `n` images with an explicit reduction schedule.
+    pub fn with_algo(n: usize, algo: ReduceAlgo) -> Vec<LocalComm> {
+        assert!(n > 0, "team needs at least one image");
+        let shared = Arc::new(Shared {
+            n,
+            algo,
+            barrier: Barrier::new(n),
+            slots: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            result: Mutex::new(Vec::new()),
+        });
+        (0..n).map(|rank| LocalComm { rank, shared: Arc::clone(&shared) }).collect()
+    }
+}
+
+/// One image's handle on a shared-memory team.
+#[derive(Debug, Clone)]
+pub struct LocalComm {
+    /// 0-based rank (this_image() = rank + 1).
+    rank: usize,
+    shared: Arc<Shared>,
+}
+
+impl LocalComm {
+    fn deposit<T: Scalar>(&self, buf: &[T]) {
+        let mut slot = self.shared.slots[self.rank].lock().unwrap();
+        slot.clear();
+        slot.extend(buf.iter().map(|&v| v.to_f64()));
+    }
+
+    fn read_result<T: Scalar>(&self, buf: &mut [T]) {
+        let result = self.shared.result.lock().unwrap();
+        assert_eq!(result.len(), buf.len(), "collective buffer size mismatch across images");
+        for (b, &r) in buf.iter_mut().zip(result.iter()) {
+            *b = T::from_f64(r);
+        }
+    }
+
+    /// Root-side elementwise reduce of all slots with `op`.
+    fn reduce_flat(&self, len: usize, op: impl Fn(f64, f64) -> f64) {
+        let mut acc = self.shared.slots[0].lock().unwrap().clone();
+        assert_eq!(acc.len(), len, "collective buffer size mismatch across images");
+        for r in 1..self.shared.n {
+            let slot = self.shared.slots[r].lock().unwrap();
+            assert_eq!(slot.len(), len, "collective buffer size mismatch across images");
+            for (a, &s) in acc.iter_mut().zip(slot.iter()) {
+                *a = op(*a, s);
+            }
+        }
+        *self.shared.result.lock().unwrap() = acc;
+    }
+
+    /// Parallel binomial-tree sum across slots; result ends in slot 0.
+    /// Every image participates; one barrier per level.
+    fn reduce_tree_sum(&self) {
+        let n = self.shared.n;
+        let mut stride = 1;
+        while stride < n {
+            let step = stride * 2;
+            if self.rank % step == 0 && self.rank + stride < n {
+                // Pull partner's deposit into ours.
+                let partner = {
+                    let p = self.shared.slots[self.rank + stride].lock().unwrap();
+                    p.clone()
+                };
+                let mut mine = self.shared.slots[self.rank].lock().unwrap();
+                assert_eq!(mine.len(), partner.len(), "collective buffer size mismatch");
+                for (a, b) in mine.iter_mut().zip(&partner) {
+                    *a += b;
+                }
+            }
+            self.shared.barrier.wait();
+            stride = step;
+        }
+        if self.rank == 0 {
+            *self.shared.result.lock().unwrap() = self.shared.slots[0].lock().unwrap().clone();
+        }
+    }
+
+    /// Each image sums its contiguous chunk across all deposits.
+    fn reduce_chunked_sum(&self, len: usize) {
+        let n = self.shared.n;
+        // Image 0 sizes the result buffer first.
+        if self.rank == 0 {
+            let mut result = self.shared.result.lock().unwrap();
+            result.clear();
+            result.resize(len, 0.0);
+        }
+        self.shared.barrier.wait();
+        let chunk = len.div_ceil(n);
+        let lo = (self.rank * chunk).min(len);
+        let hi = ((self.rank + 1) * chunk).min(len);
+        if lo < hi {
+            let mut acc = vec![0.0f64; hi - lo];
+            for r in 0..n {
+                let slot = self.shared.slots[r].lock().unwrap();
+                assert_eq!(slot.len(), len, "collective buffer size mismatch across images");
+                for (a, &s) in acc.iter_mut().zip(&slot[lo..hi]) {
+                    *a += s;
+                }
+            }
+            let mut result = self.shared.result.lock().unwrap();
+            result[lo..hi].copy_from_slice(&acc);
+        }
+    }
+}
+
+impl Communicator for LocalComm {
+    fn this_image(&self) -> usize {
+        self.rank + 1
+    }
+
+    fn num_images(&self) -> usize {
+        self.shared.n
+    }
+
+    fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]) {
+        if self.shared.n == 1 {
+            return;
+        }
+        self.deposit(buf);
+        self.shared.barrier.wait();
+        match self.shared.algo {
+            ReduceAlgo::Flat => {
+                if self.rank == 0 {
+                    self.reduce_flat(buf.len(), |a, b| a + b);
+                }
+            }
+            ReduceAlgo::Tree => self.reduce_tree_sum(),
+            ReduceAlgo::Chunked => self.reduce_chunked_sum(buf.len()),
+        }
+        self.shared.barrier.wait();
+        self.read_result(buf);
+        // Trailing barrier: nobody may start the next collective (and
+        // overwrite `result`) until everyone has read this one.
+        self.shared.barrier.wait();
+    }
+
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) {
+        assert!(
+            (1..=self.shared.n).contains(&source_image),
+            "source image {source_image} out of range 1..={}",
+            self.shared.n
+        );
+        if self.shared.n == 1 {
+            return;
+        }
+        if self.this_image() == source_image {
+            let mut result = self.shared.result.lock().unwrap();
+            result.clear();
+            result.extend(buf.iter().map(|&v| v.to_f64()));
+        }
+        self.shared.barrier.wait();
+        self.read_result(buf);
+        self.shared.barrier.wait();
+    }
+
+    fn co_max<T: Scalar>(&self, buf: &mut [T]) {
+        if self.shared.n == 1 {
+            return;
+        }
+        self.deposit(buf);
+        self.shared.barrier.wait();
+        if self.rank == 0 {
+            self.reduce_flat(buf.len(), f64::max);
+        }
+        self.shared.barrier.wait();
+        self.read_result(buf);
+        self.shared.barrier.wait();
+    }
+
+    fn co_min<T: Scalar>(&self, buf: &mut [T]) {
+        if self.shared.n == 1 {
+            return;
+        }
+        self.deposit(buf);
+        self.shared.barrier.wait();
+        if self.rank == 0 {
+            self.reduce_flat(buf.len(), f64::min);
+        }
+        self.shared.barrier.wait();
+        self.read_result(buf);
+        self.shared.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `f` on every image of an n-team, collecting per-image outputs.
+    fn run_team<R: Send>(
+        n: usize,
+        algo: ReduceAlgo,
+        f: impl Fn(&LocalComm) -> R + Sync,
+    ) -> Vec<R> {
+        let comms = Team::with_algo(n, algo);
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> =
+                comms.iter().map(|c| s.spawn(move || f(c))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn image_numbering_is_one_based() {
+        let ids = run_team(4, ReduceAlgo::Flat, |c| (c.this_image(), c.num_images()));
+        let mut images: Vec<usize> = ids.iter().map(|&(i, _)| i).collect();
+        images.sort_unstable();
+        assert_eq!(images, vec![1, 2, 3, 4]);
+        assert!(ids.iter().all(|&(_, n)| n == 4));
+    }
+
+    #[test]
+    fn co_sum_all_algorithms_all_team_sizes() {
+        for algo in ReduceAlgo::ALL {
+            for n in [1usize, 2, 3, 5, 8] {
+                let out = run_team(n, algo, |c| {
+                    // Image i deposits [i, 2i, 3i].
+                    let i = c.this_image() as f64;
+                    let mut buf = [i, 2.0 * i, 3.0 * i];
+                    c.co_sum(&mut buf);
+                    buf
+                });
+                let total: f64 = (1..=n).map(|i| i as f64).sum();
+                for buf in out {
+                    assert_eq!(buf, [total, 2.0 * total, 3.0 * total], "{algo:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn co_sum_f32_payload() {
+        let out = run_team(4, ReduceAlgo::Tree, |c| {
+            let mut buf = vec![c.this_image() as f32; 10];
+            c.co_sum(&mut buf);
+            buf
+        });
+        for buf in out {
+            assert!(buf.iter().all(|&v| v == 10.0));
+        }
+    }
+
+    #[test]
+    fn co_broadcast_from_each_source() {
+        for src in 1..=3usize {
+            let out = run_team(3, ReduceAlgo::Flat, move |c| {
+                let mut buf = [c.this_image() as f64 * 100.0];
+                c.co_broadcast(&mut buf, src);
+                buf[0]
+            });
+            for v in out {
+                assert_eq!(v, src as f64 * 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn co_max_and_min() {
+        let out = run_team(5, ReduceAlgo::Flat, |c| {
+            let i = c.this_image() as f64;
+            let mut mx = [i, -i];
+            let mut mn = [i, -i];
+            c.co_max(&mut mx);
+            c.co_min(&mut mn);
+            (mx, mn)
+        });
+        for (mx, mn) in out {
+            assert_eq!(mx, [5.0, -1.0]);
+            assert_eq!(mn, [1.0, -5.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_deadlock_or_corrupt() {
+        let out = run_team(4, ReduceAlgo::Tree, |c| {
+            let mut acc = 0.0f64;
+            for round in 0..50 {
+                let mut buf = [c.this_image() as f64 + round as f64];
+                c.co_sum(&mut buf);
+                acc += buf[0];
+            }
+            acc
+        });
+        // Round r: sum(1..=4) + 4r = 10 + 4r; total = Σ_{r=0}^{49} (10+4r).
+        let expect: f64 = (0..50).map(|r| 10.0 + 4.0 * r as f64).sum();
+        for v in out {
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn chunked_with_buffer_smaller_than_team() {
+        let out = run_team(8, ReduceAlgo::Chunked, |c| {
+            let mut buf = [c.this_image() as f64];
+            c.co_sum(&mut buf);
+            buf[0]
+        });
+        for v in out {
+            assert_eq!(v, 36.0);
+        }
+    }
+
+    #[test]
+    fn mixed_collective_sequence_matches_serial() {
+        // co_sum → broadcast → co_sum, algorithm-independent results.
+        for algo in ReduceAlgo::ALL {
+            let out = run_team(4, algo, |c| {
+                let mut a = [c.this_image() as f64];
+                c.co_sum(&mut a); // 10
+                let mut b = [if c.this_image() == 2 { 7.0 } else { 0.0 }];
+                c.co_broadcast(&mut b, 2); // 7
+                let mut d = [a[0] + b[0]]; // 17
+                c.co_sum(&mut d); // 68
+                d[0]
+            });
+            for v in out {
+                assert_eq!(v, 68.0, "{algo:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_scalar_helper() {
+        let out = run_team(3, ReduceAlgo::Tree, |c| c.co_sum_scalar(c.this_image() as f64));
+        for v in out {
+            assert_eq!(v, 6.0);
+        }
+    }
+}

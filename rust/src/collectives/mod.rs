@@ -1,0 +1,117 @@
+//! Fortran-2018-style collective subroutines (paper §3.5).
+//!
+//! neural-fortran's entire parallel design rests on two collectives:
+//! `co_sum` (sum weight/bias tendencies across images, result on all) and
+//! `co_broadcast` (replicate image 1's initial weights). This module
+//! provides those semantics behind a [`Communicator`] trait with three
+//! backends:
+//!
+//! - [`NullComm`] — serial (`num_images() == 1`), every collective a no-op;
+//! - [`LocalComm`] — a shared-memory *team* of threads in one process
+//!   (the paper's shared-memory OpenCoarrays configuration);
+//! - [`TcpComm`] — one process per image over TCP (the distributed-memory
+//!   configuration).
+//!
+//! Images are numbered 1..=num_images like Fortran's `this_image()`.
+//!
+//! Reduction-order note: all backends reduce in f64 and deliver the *same*
+//! bytes to every image, so network replicas stay exactly consistent — the
+//! property the paper's step-3 update relies on.
+
+mod local;
+mod tcp;
+
+pub use local::{LocalComm, ReduceAlgo, Team};
+pub use tcp::{TcpComm, TcpTopology};
+
+use crate::tensor::Scalar;
+
+/// Fortran-2018 collective semantics over a team of images.
+///
+/// All methods are *collective*: every image of the team must call them in
+/// the same order with equally-sized buffers, as the Fortran standard
+/// requires of `co_sum`/`co_broadcast`.
+pub trait Communicator {
+    /// 1-based image index, like Fortran `this_image()`.
+    fn this_image(&self) -> usize;
+
+    /// Team size, like Fortran `num_images()`.
+    fn num_images(&self) -> usize;
+
+    /// Synchronize all images (`sync all`).
+    fn barrier(&self);
+
+    /// Elementwise sum across images; every image receives the total
+    /// (Fortran `co_sum` without `result_image`).
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]);
+
+    /// Replace every image's buffer with `source_image`'s copy
+    /// (Fortran `co_broadcast`).
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize);
+
+    /// Elementwise max across images (Fortran `co_max`).
+    fn co_max<T: Scalar>(&self, buf: &mut [T]);
+
+    /// Elementwise min across images (Fortran `co_min`).
+    fn co_min<T: Scalar>(&self, buf: &mut [T]);
+
+    /// True when running without any parallel peers.
+    fn is_serial(&self) -> bool {
+        self.num_images() == 1
+    }
+
+    /// Collective sum of a single counter (accuracy tallies etc.).
+    fn co_sum_scalar(&self, v: f64) -> f64 {
+        let mut buf = [v];
+        self.co_sum(&mut buf);
+        buf[0]
+    }
+}
+
+/// Serial communicator: one image, all collectives are no-ops.
+#[derive(Debug, Clone, Default)]
+pub struct NullComm;
+
+impl Communicator for NullComm {
+    fn this_image(&self) -> usize {
+        1
+    }
+    fn num_images(&self) -> usize {
+        1
+    }
+    fn barrier(&self) {}
+    fn co_sum<T: Scalar>(&self, _buf: &mut [T]) {}
+    fn co_broadcast<T: Scalar>(&self, _buf: &mut [T], source_image: usize) {
+        assert_eq!(source_image, 1, "single image team only has image 1");
+    }
+    fn co_max<T: Scalar>(&self, _buf: &mut [T]) {}
+    fn co_min<T: Scalar>(&self, _buf: &mut [T]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_comm_is_serial_identity() {
+        let c = NullComm;
+        assert_eq!(c.this_image(), 1);
+        assert_eq!(c.num_images(), 1);
+        assert!(c.is_serial());
+        let mut buf = [1.0f32, 2.0];
+        c.co_sum(&mut buf);
+        assert_eq!(buf, [1.0, 2.0]);
+        c.co_broadcast(&mut buf, 1);
+        assert_eq!(buf, [1.0, 2.0]);
+        c.co_max(&mut buf);
+        c.co_min(&mut buf);
+        assert_eq!(c.co_sum_scalar(5.0), 5.0);
+        c.barrier();
+    }
+
+    #[test]
+    #[should_panic]
+    fn null_comm_rejects_bad_source() {
+        NullComm.co_broadcast(&mut [0.0f64], 2);
+    }
+}

@@ -1,0 +1,545 @@
+//! Distributed-memory team backend: one process (or thread) per image,
+//! connected over TCP — the paper's distributed OpenCoarrays configuration.
+//!
+//! Topology is a star: image 1 (the leader) accepts one connection per
+//! worker image. Collectives are leader-mediated gather/scatter, which for
+//! the paper's workload (one `co_sum` of the full gradient per step) is the
+//! same communication volume as OpenCoarrays' default. Frames carry a magic
+//! byte, an opcode, the sender image, and a length-prefixed f64 payload;
+//! every malformed frame is surfaced as an error rather than UB (exercised
+//! by the failure-injection tests).
+
+use super::Communicator;
+use crate::tensor::Scalar;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+const MAGIC: u8 = 0x4E; // 'N'
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+enum Opcode {
+    Hello = 1,
+    Sum = 2,
+    Max = 3,
+    Min = 4,
+    BcastPush = 5,
+    Result = 6,
+    Barrier = 7,
+    BarrierAck = 8,
+    Bcast = 9,
+}
+
+impl Opcode {
+    fn from_u8(v: u8) -> Option<Self> {
+        use Opcode::*;
+        Some(match v {
+            1 => Hello,
+            2 => Sum,
+            3 => Max,
+            4 => Min,
+            5 => BcastPush,
+            6 => Result,
+            7 => Barrier,
+            8 => BarrierAck,
+            9 => Bcast,
+            _ => return None,
+        })
+    }
+}
+
+/// Errors raised by the TCP communicator.
+#[derive(Debug, thiserror::Error)]
+pub enum CommError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("protocol: {0}")]
+    Protocol(String),
+}
+
+type Result<T> = std::result::Result<T, CommError>;
+
+fn proto_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(CommError::Protocol(msg.into()))
+}
+
+#[derive(Debug)]
+struct Frame {
+    op: Opcode,
+    image: u32,
+    payload: Vec<f64>,
+}
+
+fn write_frame(s: &mut TcpStream, op: Opcode, image: u32, payload: &[f64]) -> Result<()> {
+    let mut header = [0u8; 14];
+    header[0] = MAGIC;
+    header[1] = op as u8;
+    header[2..6].copy_from_slice(&image.to_le_bytes());
+    header[6..14].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    s.write_all(&header)?;
+    // Payload as little-endian f64s.
+    let mut bytes = Vec::with_capacity(payload.len() * 8);
+    for &v in payload {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    s.write_all(&bytes)?;
+    s.flush()?;
+    Ok(())
+}
+
+fn read_frame(s: &mut TcpStream) -> Result<Frame> {
+    let mut header = [0u8; 14];
+    s.read_exact(&mut header)?;
+    if header[0] != MAGIC {
+        return proto_err(format!("bad magic byte 0x{:02x}", header[0]));
+    }
+    let op = Opcode::from_u8(header[1])
+        .ok_or_else(|| CommError::Protocol(format!("unknown opcode {}", header[1])))?;
+    let image = u32::from_le_bytes(header[2..6].try_into().unwrap());
+    let len = u64::from_le_bytes(header[6..14].try_into().unwrap()) as usize;
+    // Refuse absurd lengths instead of allocating blindly.
+    if len > (1 << 30) {
+        return proto_err(format!("payload of {len} elements exceeds limit"));
+    }
+    let mut bytes = vec![0u8; len * 8];
+    s.read_exact(&mut bytes)?;
+    let payload =
+        bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok(Frame { op, image, payload })
+}
+
+fn expect(frame: Frame, op: Opcode) -> Result<Frame> {
+    if frame.op != op {
+        return proto_err(format!("expected {op:?}, got {:?} from image {}", frame.op, frame.image));
+    }
+    Ok(frame)
+}
+
+#[derive(Debug)]
+enum Role {
+    /// Image 1: one stream per worker, indexed by image-2.
+    Leader { conns: Vec<Mutex<TcpStream>> },
+    /// Images 2..=n: a single stream to the leader.
+    Worker { conn: Mutex<TcpStream> },
+}
+
+/// Builders for the star topology.
+pub struct TcpTopology;
+
+impl TcpTopology {
+    /// Bind `addr` and wait for `num_images - 1` workers. Returns the
+    /// leader communicator (image 1). `num_images == 1` yields a serial
+    /// communicator with no sockets.
+    pub fn leader(addr: SocketAddr, num_images: usize, timeout: Duration) -> Result<TcpComm> {
+        assert!(num_images >= 1);
+        if num_images == 1 {
+            return Ok(TcpComm { image: 1, n: 1, role: Role::Leader { conns: Vec::new() } });
+        }
+        let listener = TcpListener::bind(addr)?;
+        let mut conns: Vec<Option<TcpStream>> = (0..num_images - 1).map(|_| None).collect();
+        for _ in 0..num_images - 1 {
+            let (mut stream, _) = listener.accept()?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(timeout))?;
+            let hello = expect(read_frame(&mut stream)?, Opcode::Hello)?;
+            let img = hello.image as usize;
+            if !(2..=num_images).contains(&img) {
+                return proto_err(format!("worker announced bad image id {img}"));
+            }
+            if conns[img - 2].is_some() {
+                return proto_err(format!("duplicate connection for image {img}"));
+            }
+            // Ack the hello so the worker knows it was registered.
+            write_frame(&mut stream, Opcode::BarrierAck, 1, &[])?;
+            conns[img - 2] = Some(stream);
+        }
+        let conns = conns
+            .into_iter()
+            .map(|c| Mutex::new(c.expect("all worker slots filled")))
+            .collect();
+        Ok(TcpComm { image: 1, n: num_images, role: Role::Leader { conns } })
+    }
+
+    /// Connect to the leader as `image` (2..=num_images).
+    pub fn worker(
+        addr: SocketAddr,
+        image: usize,
+        num_images: usize,
+        timeout: Duration,
+    ) -> Result<TcpComm> {
+        assert!((2..=num_images).contains(&image), "worker image must be in 2..=num_images");
+        // Retry connect while the leader is still binding.
+        let deadline = std::time::Instant::now() + timeout;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if std::time::Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        write_frame(&mut stream, Opcode::Hello, image as u32, &[])?;
+        expect(read_frame(&mut stream)?, Opcode::BarrierAck)?;
+        Ok(TcpComm { image, n: num_images, role: Role::Worker { conn: Mutex::new(stream) } })
+    }
+}
+
+/// TCP-backed communicator for one image of a distributed team.
+#[derive(Debug)]
+pub struct TcpComm {
+    image: usize,
+    n: usize,
+    role: Role,
+}
+
+impl TcpComm {
+    /// Fallible reduce (sum/max/min by opcode). Collective: every image
+    /// calls with the same opcode and buffer length.
+    fn reduce<T: Scalar>(&self, buf: &mut [T], op: Opcode) -> Result<()> {
+        if self.n == 1 {
+            return Ok(());
+        }
+        let combine = |a: f64, b: f64| match op {
+            Opcode::Sum => a + b,
+            Opcode::Max => a.max(b),
+            Opcode::Min => a.min(b),
+            _ => unreachable!(),
+        };
+        match &self.role {
+            Role::Leader { conns } => {
+                let mut acc: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
+                // Gather in image order for a deterministic combine order.
+                for (i, conn) in conns.iter().enumerate() {
+                    let mut s = conn.lock().unwrap();
+                    let frame = expect(read_frame(&mut s)?, op)?;
+                    if frame.image as usize != i + 2 {
+                        return proto_err(format!(
+                            "image {} answered on slot of image {}",
+                            frame.image,
+                            i + 2
+                        ));
+                    }
+                    if frame.payload.len() != acc.len() {
+                        return proto_err("collective buffer size mismatch across images");
+                    }
+                    for (a, &p) in acc.iter_mut().zip(&frame.payload) {
+                        *a = combine(*a, p);
+                    }
+                }
+                for conn in conns {
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Opcode::Result, 1, &acc)?;
+                }
+                for (b, &a) in buf.iter_mut().zip(&acc) {
+                    *b = T::from_f64(a);
+                }
+            }
+            Role::Worker { conn } => {
+                let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
+                let mut s = conn.lock().unwrap();
+                write_frame(&mut s, op, self.image as u32, &payload)?;
+                let result = expect(read_frame(&mut s)?, Opcode::Result)?;
+                if result.payload.len() != buf.len() {
+                    return proto_err("result size mismatch");
+                }
+                for (b, &r) in buf.iter_mut().zip(&result.payload) {
+                    *b = T::from_f64(r);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> Result<()> {
+        if !(1..=self.n).contains(&source_image) {
+            return proto_err(format!("source image {source_image} out of range"));
+        }
+        if self.n == 1 {
+            return Ok(());
+        }
+        match &self.role {
+            Role::Leader { conns } => {
+                let data: Vec<f64> = if source_image == 1 {
+                    buf.iter().map(|&v| v.to_f64()).collect()
+                } else {
+                    let mut s = conns[source_image - 2].lock().unwrap();
+                    let frame = expect(read_frame(&mut s)?, Opcode::BcastPush)?;
+                    if frame.payload.len() != buf.len() {
+                        return proto_err("broadcast size mismatch");
+                    }
+                    frame.payload
+                };
+                for (i, conn) in conns.iter().enumerate() {
+                    if i + 2 == source_image {
+                        continue; // the source already has the data
+                    }
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Opcode::Bcast, 1, &data)?;
+                }
+                for (b, &d) in buf.iter_mut().zip(&data) {
+                    *b = T::from_f64(d);
+                }
+            }
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                if self.image == source_image {
+                    let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
+                    write_frame(&mut s, Opcode::BcastPush, self.image as u32, &payload)?;
+                } else {
+                    let frame = expect(read_frame(&mut s)?, Opcode::Bcast)?;
+                    if frame.payload.len() != buf.len() {
+                        return proto_err("broadcast size mismatch");
+                    }
+                    for (b, &d) in buf.iter_mut().zip(&frame.payload) {
+                        *b = T::from_f64(d);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn barrier_fallible(&self) -> Result<()> {
+        if self.n == 1 {
+            return Ok(());
+        }
+        match &self.role {
+            Role::Leader { conns } => {
+                for conn in conns {
+                    let mut s = conn.lock().unwrap();
+                    expect(read_frame(&mut s)?, Opcode::Barrier)?;
+                }
+                for conn in conns {
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Opcode::BarrierAck, 1, &[])?;
+                }
+            }
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                write_frame(&mut s, Opcode::Barrier, self.image as u32, &[])?;
+                expect(read_frame(&mut s)?, Opcode::BarrierAck)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Communicator for TcpComm {
+    fn this_image(&self) -> usize {
+        self.image
+    }
+
+    fn num_images(&self) -> usize {
+        self.n
+    }
+
+    fn barrier(&self) {
+        self.barrier_fallible().expect("tcp barrier failed");
+    }
+
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]) {
+        self.reduce(buf, Opcode::Sum).expect("tcp co_sum failed");
+    }
+
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) {
+        self.broadcast(buf, source_image).expect("tcp co_broadcast failed");
+    }
+
+    fn co_max<T: Scalar>(&self, buf: &mut [T]) {
+        self.reduce(buf, Opcode::Max).expect("tcp co_max failed");
+    }
+
+    fn co_min<T: Scalar>(&self, buf: &mut [T]) {
+        self.reduce(buf, Opcode::Min).expect("tcp co_min failed");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{IpAddr, Ipv4Addr};
+    use std::sync::atomic::{AtomicU16, Ordering};
+
+    static NEXT_PORT: AtomicU16 = AtomicU16::new(46000);
+
+    fn addr() -> SocketAddr {
+        let port = NEXT_PORT.fetch_add(1, Ordering::SeqCst);
+        SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), port)
+    }
+
+    const T: Duration = Duration::from_secs(10);
+
+    /// Run one closure per image over a real TCP star on localhost.
+    fn run_tcp<R: Send>(n: usize, f: impl Fn(&TcpComm) -> R + Sync) -> Vec<R> {
+        let a = addr();
+        let f = &f;
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let comm = TcpTopology::leader(a, n, T).unwrap();
+                f(&comm)
+            });
+            let workers: Vec<_> = (2..=n)
+                .map(|img| {
+                    s.spawn(move || {
+                        let comm = TcpTopology::worker(a, img, n, T).unwrap();
+                        f(&comm)
+                    })
+                })
+                .collect();
+            let mut out = vec![leader.join().unwrap()];
+            out.extend(workers.into_iter().map(|h| h.join().unwrap()));
+            out
+        })
+    }
+
+    #[test]
+    fn tcp_co_sum_across_processes() {
+        for n in [2usize, 3, 5] {
+            let out = run_tcp(n, |c| {
+                let mut buf = vec![c.this_image() as f64, 1.0];
+                c.co_sum(&mut buf);
+                buf
+            });
+            let total: f64 = (1..=n).map(|i| i as f64).sum();
+            for buf in out {
+                assert_eq!(buf, vec![total, n as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_broadcast_from_leader_and_worker() {
+        for src in [1usize, 3] {
+            let out = run_tcp(3, move |c| {
+                let mut buf = vec![c.this_image() as f32 * 10.0; 4];
+                c.co_broadcast(&mut buf, src);
+                buf[0]
+            });
+            for v in out {
+                assert_eq!(v, src as f32 * 10.0);
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_max_min_barrier_sequence() {
+        let out = run_tcp(4, |c| {
+            c.barrier();
+            let mut mx = [c.this_image() as f64];
+            c.co_max(&mut mx);
+            let mut mn = [c.this_image() as f64];
+            c.co_min(&mut mn);
+            c.barrier();
+            (mx[0], mn[0])
+        });
+        for (mx, mn) in out {
+            assert_eq!((mx, mn), (4.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn tcp_repeated_rounds_stay_consistent() {
+        let out = run_tcp(3, |c| {
+            let mut acc = 0.0;
+            for round in 0..25 {
+                let mut buf = [c.this_image() as f64 * (round + 1) as f64];
+                c.co_sum(&mut buf);
+                acc += buf[0];
+            }
+            acc
+        });
+        let expect: f64 = (1..=25).map(|r| 6.0 * r as f64).sum();
+        for v in out {
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn serial_tcp_team_needs_no_sockets() {
+        let comm = TcpTopology::leader(addr(), 1, T).unwrap();
+        assert!(comm.is_serial());
+        let mut buf = [3.0f64];
+        comm.co_sum(&mut buf);
+        assert_eq!(buf[0], 3.0);
+    }
+
+    // ---- failure injection ----
+
+    #[test]
+    fn bad_magic_is_a_protocol_error() {
+        let a = addr();
+        let listener = TcpListener::bind(a).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(a).unwrap();
+            s.write_all(&[0xFFu8; 14]).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(T)).unwrap();
+        let err = read_frame(&mut stream).unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "{err}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn truncated_frame_is_an_io_error() {
+        let a = addr();
+        let listener = TcpListener::bind(a).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(a).unwrap();
+            // Announce an 8-element payload but hang up after 3 bytes.
+            let mut header = [0u8; 14];
+            header[0] = MAGIC;
+            header[1] = Opcode::Sum as u8;
+            header[6..14].copy_from_slice(&8u64.to_le_bytes());
+            s.write_all(&header).unwrap();
+            s.write_all(&[1, 2, 3]).unwrap();
+            drop(s);
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(T)).unwrap();
+        let err = read_frame(&mut stream).unwrap_err();
+        assert!(matches!(err, CommError::Io(_)), "{err}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn absurd_length_is_rejected_without_allocation() {
+        let a = addr();
+        let listener = TcpListener::bind(a).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(a).unwrap();
+            let mut header = [0u8; 14];
+            header[0] = MAGIC;
+            header[1] = Opcode::Sum as u8;
+            header[6..14].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+            s.write_all(&header).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(T)).unwrap();
+        let err = read_frame(&mut stream).unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "{err}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_image_id_rejected_by_leader() {
+        let a = addr();
+        let workers = std::thread::spawn(move || {
+            // Two workers both claiming image 2.
+            let w1 = std::thread::spawn(move || TcpTopology::worker(a, 2, 3, T));
+            std::thread::sleep(Duration::from_millis(50));
+            let w2 = std::thread::spawn(move || TcpTopology::worker(a, 2, 3, T));
+            let _ = w1.join();
+            let _ = w2.join();
+        });
+        let err = TcpTopology::leader(a, 3, T).unwrap_err();
+        assert!(matches!(err, CommError::Protocol(_)), "{err}");
+        workers.join().unwrap();
+    }
+}

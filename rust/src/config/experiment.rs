@@ -1,0 +1,319 @@
+//! Typed experiment configuration, loadable from a TOML file and
+//! overridable from the command line (see `configs/*.toml` and `main.rs`).
+
+use super::toml::{self, TomlError, TomlValue};
+use crate::collectives::ReduceAlgo;
+use crate::coordinator::{BatchStrategy, EngineKind, TrainerOptions};
+use crate::nn::OptimizerKind;
+use crate::nn::Activation;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Communicator backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommKind {
+    /// Shared-memory thread team in one process.
+    #[default]
+    Local,
+    /// One process per image over TCP (leader + workers).
+    Tcp,
+}
+
+impl CommKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" | "shared" => Some(Self::Local),
+            "tcp" | "distributed" => Some(Self::Tcp),
+            _ => None,
+        }
+    }
+}
+
+/// Everything a training run needs. Mirrors the paper's Listing 12 knobs
+/// plus the parallel/runtime choices.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    // [network]
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    // [training]
+    pub eta: f64,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub batch_seed: u64,
+    pub strategy: BatchStrategy,
+    pub optimizer: OptimizerKind,
+    // [data]
+    pub train_n: usize,
+    pub test_n: usize,
+    pub data_dir: PathBuf,
+    pub data_seed: u64,
+    // [parallel]
+    pub images: usize,
+    pub algo: ReduceAlgo,
+    pub comm: CommKind,
+    // [runtime]
+    pub engine: EngineKind,
+    pub artifacts_dir: PathBuf,
+    pub artifact_config: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "mnist".into(),
+            dims: vec![784, 30, 10],
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: 1000,
+            epochs: 30,
+            seed: 0,
+            batch_seed: 12345,
+            strategy: BatchStrategy::RandomStart,
+            optimizer: OptimizerKind::Sgd,
+            train_n: 50_000,
+            test_n: 10_000,
+            data_dir: PathBuf::from("data/mnist"),
+            data_seed: 42,
+            images: 1,
+            algo: ReduceAlgo::Tree,
+            comm: CommKind::Local,
+            engine: EngineKind::Pjrt,
+            artifacts_dir: PathBuf::from("artifacts"),
+            artifact_config: "mnist".into(),
+        }
+    }
+}
+
+/// Errors loading an experiment file.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("{0}")]
+    Toml(#[from] TomlError),
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+fn bad<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError::Invalid(msg.into()))
+}
+
+type Table = BTreeMap<String, TomlValue>;
+
+fn get_usize(t: &Table, key: &str, default: usize) -> Result<usize, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_int()
+            .and_then(|i| usize::try_from(i).ok())
+            .ok_or_else(|| ConfigError::Invalid(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_u64(t: &Table, key: &str, default: u64) -> Result<u64, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_int()
+            .and_then(|i| u64::try_from(i).ok())
+            .ok_or_else(|| ConfigError::Invalid(format!("'{key}' must be a non-negative integer"))),
+    }
+}
+
+fn get_f64(t: &Table, key: &str, default: f64) -> Result<f64, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_float()
+            .ok_or_else(|| ConfigError::Invalid(format!("'{key}' must be a number"))),
+    }
+}
+
+fn get_str<'a>(t: &'a Table, key: &str, default: &'a str) -> Result<&'a str, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| ConfigError::Invalid(format!("'{key}' must be a string"))),
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file, filling unspecified keys with defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self, ConfigError> {
+        let doc = toml::parse(text)?;
+        let mut cfg = Self::default();
+        let empty = Table::new();
+        let top = doc.get("").unwrap_or(&empty);
+        cfg.name = get_str(top, "name", &cfg.name)?.to_string();
+
+        if let Some(t) = doc.get("network") {
+            if let Some(v) = t.get("dims") {
+                cfg.dims = v
+                    .as_usize_array()
+                    .filter(|d| d.len() >= 2 && d.iter().all(|&x| x > 0))
+                    .ok_or_else(|| ConfigError::Invalid("bad [network] dims".into()))?;
+            }
+            let act = get_str(t, "activation", cfg.activation.name())?;
+            cfg.activation = Activation::parse(act)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown activation '{act}'")))?;
+        }
+        if let Some(t) = doc.get("training") {
+            cfg.eta = get_f64(t, "eta", cfg.eta)?;
+            cfg.batch_size = get_usize(t, "batch_size", cfg.batch_size)?;
+            cfg.epochs = get_usize(t, "epochs", cfg.epochs)?;
+            cfg.seed = get_u64(t, "seed", cfg.seed)?;
+            cfg.batch_seed = get_u64(t, "batch_seed", cfg.batch_seed)?;
+            let strat = get_str(t, "strategy", "random_start")?;
+            cfg.strategy = BatchStrategy::parse(strat)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown strategy '{strat}'")))?;
+            let opt = get_str(t, "optimizer", &cfg.optimizer.name())?.to_string();
+            cfg.optimizer = OptimizerKind::parse(&opt)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown optimizer '{opt}'")))?;
+        }
+        if let Some(t) = doc.get("data") {
+            cfg.train_n = get_usize(t, "train_n", cfg.train_n)?;
+            cfg.test_n = get_usize(t, "test_n", cfg.test_n)?;
+            cfg.data_seed = get_u64(t, "seed", cfg.data_seed)?;
+            cfg.data_dir = PathBuf::from(get_str(t, "dir", &cfg.data_dir.to_string_lossy())?);
+        }
+        if let Some(t) = doc.get("parallel") {
+            cfg.images = get_usize(t, "images", cfg.images)?.max(1);
+            let algo = get_str(t, "algo", cfg.algo.name())?;
+            cfg.algo = ReduceAlgo::parse(algo)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown reduce algo '{algo}'")))?;
+            let comm = get_str(t, "comm", "local")?;
+            cfg.comm = CommKind::parse(comm)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown comm '{comm}'")))?;
+        }
+        if let Some(t) = doc.get("runtime") {
+            let engine = get_str(t, "engine", cfg.engine.name())?;
+            cfg.engine = EngineKind::parse(engine)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown engine '{engine}'")))?;
+            cfg.artifacts_dir =
+                PathBuf::from(get_str(t, "artifacts_dir", &cfg.artifacts_dir.to_string_lossy())?);
+            cfg.artifact_config =
+                get_str(t, "artifact_config", &cfg.artifact_config)?.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks shared by file and CLI paths.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.dims.len() < 2 || self.dims.iter().any(|&d| d == 0) {
+            return bad("dims needs >= 2 positive layers");
+        }
+        if self.eta <= 0.0 {
+            return bad("eta must be positive");
+        }
+        if self.batch_size == 0 {
+            return bad("batch_size must be positive");
+        }
+        if self.train_n == 0 || self.test_n == 0 {
+            return bad("train_n/test_n must be positive");
+        }
+        Ok(())
+    }
+
+    /// The trainer options this config describes.
+    pub fn trainer_options(&self) -> TrainerOptions {
+        TrainerOptions {
+            dims: self.dims.clone(),
+            activation: self.activation,
+            eta: self.eta,
+            batch_size: self.batch_size,
+            epochs: self.epochs,
+            seed: self.seed,
+            batch_seed: self.batch_seed,
+            strategy: self.strategy,
+            optimizer: self.optimizer,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_the_paper_settings() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.dims, vec![784, 30, 10]);
+        assert_eq!(c.activation, Activation::Sigmoid);
+        assert_eq!(c.eta, 3.0);
+        assert_eq!(c.batch_size, 1000);
+        assert_eq!(c.epochs, 30);
+        assert_eq!(c.train_n, 50_000);
+        assert_eq!(c.test_n, 10_000);
+    }
+
+    #[test]
+    fn full_file_round_trip() {
+        let text = r#"
+            name = "scaling"
+            [network]
+            dims = [784, 30, 10]
+            activation = "tanh"
+            [training]
+            eta = 2.5
+            batch_size = 1200
+            epochs = 10
+            strategy = "shuffled"
+            [data]
+            train_n = 12000
+            test_n = 2000
+            [parallel]
+            images = 4
+            algo = "chunked"
+            comm = "local"
+            [runtime]
+            engine = "native"
+        "#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.name, "scaling");
+        assert_eq!(c.activation, Activation::Tanh);
+        assert_eq!(c.batch_size, 1200);
+        assert_eq!(c.strategy, BatchStrategy::Shuffled);
+        assert_eq!(c.images, 4);
+        assert_eq!(c.algo, ReduceAlgo::Chunked);
+        assert_eq!(c.engine, EngineKind::Native);
+        let opts = c.trainer_options();
+        assert_eq!(opts.eta, 2.5);
+        assert_eq!(opts.epochs, 10);
+    }
+
+    #[test]
+    fn partial_file_keeps_defaults() {
+        let c = ExperimentConfig::from_toml("[training]\nepochs = 5\n").unwrap();
+        assert_eq!(c.epochs, 5);
+        assert_eq!(c.batch_size, 1000);
+        assert_eq!(c.dims, vec![784, 30, 10]);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        for bad in [
+            "[network]\ndims = [5]\n",
+            "[network]\nactivation = \"bogus\"\n",
+            "[training]\neta = -1.0\n",
+            "[training]\nbatch_size = 0\n",
+            "[parallel]\nalgo = \"bogus\"\n",
+            "[training]\noptimizer = \"adamw\"\n",
+            "[runtime]\nengine = \"bogus\"\n",
+            "[training]\nepochs = \"many\"\n",
+        ] {
+            assert!(ExperimentConfig::from_toml(bad).is_err(), "should reject: {bad}");
+        }
+    }
+}

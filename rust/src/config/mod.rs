@@ -1,0 +1,9 @@
+//! Experiment configuration: a TOML-subset parser (built from scratch —
+//! no serde/toml crates offline) and the typed experiment config consumed
+//! by the CLI and examples.
+
+mod experiment;
+mod toml;
+
+pub use experiment::{CommKind, ExperimentConfig};
+pub use toml::{TomlError, TomlValue};

@@ -1,0 +1,234 @@
+//! Minimal TOML-subset parser for experiment files.
+//!
+//! Supported: `[section]` tables (one level), `key = value` with string,
+//! integer, float, boolean, and homogeneous-array values, `#` comments.
+//! Enough for `configs/*.toml`; unknown syntax is a loud error.
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlValue::Array(items) => items
+                .iter()
+                .map(|v| v.as_int().and_then(|i| usize::try_from(i).ok()))
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse errors with line numbers.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: top-level keys live in the "" table.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, msg: msg.into() })
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut section = String::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = match name.strip_suffix(']') {
+                Some(n) => n.trim(),
+                None => return err(lineno, "unterminated section header"),
+            };
+            if name.is_empty() || name.contains('[') {
+                return err(lineno, "bad section name");
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = match line.split_once('=') {
+            Some((k, v)) => (k.trim(), v.trim()),
+            None => return err(lineno, "expected 'key = value'"),
+        };
+        if key.is_empty() {
+            return err(lineno, "empty key");
+        }
+        let parsed = parse_value(value, lineno)?;
+        let table = doc.get_mut(&section).unwrap();
+        if table.insert(key.to_string(), parsed).is_some() {
+            return err(lineno, format!("duplicate key '{key}'"));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if v.is_empty() {
+        return err(line, "missing value");
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        let inner = match inner.strip_suffix('"') {
+            Some(s) if !s.contains('"') => s,
+            _ => return err(line, "bad string literal"),
+        };
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = match inner.strip_suffix(']') {
+            Some(s) => s.trim(),
+            None => return err(line, "unterminated array"),
+        };
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, TomlError> =
+            inner.split(',').map(|t| parse_value(t.trim(), line)).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if v.contains('.') || v.contains('e') || v.contains('E') {
+        if let Ok(f) = v.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    err(line, format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            # experiment file
+            name = "mnist"           # inline comment
+            [network]
+            dims = [784, 30, 10]
+            activation = "sigmoid"
+            [training]
+            eta = 3.0
+            batch_size = 1000
+            epochs = 30
+            shuffled = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("mnist"));
+        assert_eq!(doc["network"]["dims"].as_usize_array(), Some(vec![784, 30, 10]));
+        assert_eq!(doc["training"]["eta"].as_float(), Some(3.0));
+        assert_eq!(doc["training"]["batch_size"].as_int(), Some(1000));
+        assert_eq!(doc["training"]["shuffled"].as_bool(), Some(false));
+    }
+
+    #[test]
+    fn int_coerces_to_float_not_vice_versa() {
+        let doc = parse("eta = 3\n").unwrap();
+        assert_eq!(doc[""]["eta"].as_float(), Some(3.0));
+        let doc = parse("eta = 3.5\n").unwrap();
+        assert_eq!(doc[""]["eta"].as_int(), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "[unterminated\n",
+            "key\n",
+            "= 3\n",
+            "k = \n",
+            "k = [1, 2\n",
+            "k = \"open\n",
+            "k = 1\nk = 2\n",
+            "k = what\n",
+        ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn empty_array_and_negative_numbers() {
+        let doc = parse("a = []\nb = -42\nc = -1.5\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Array(vec![]));
+        assert_eq!(doc[""]["b"].as_int(), Some(-42));
+        assert_eq!(doc[""]["c"].as_float(), Some(-1.5));
+        assert_eq!(doc[""]["b"].as_usize_array(), None);
+    }
+}

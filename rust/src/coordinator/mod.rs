@@ -1,0 +1,23 @@
+//! The data-parallel training coordinator — the paper's system
+//! contribution (§3.5), generalized over communicator backends and
+//! gradient engines.
+//!
+//! Per training step (exactly the paper's three-step scheme):
+//!
+//! 1. every image holds an identical network replica (guaranteed by the
+//!    constructor-embedded `co_broadcast` from image 1 — Listing 2's
+//!    `call net % sync(1)`);
+//! 2. the global mini-batch is sharded evenly; each image computes summed
+//!    weight/bias tendencies on its shard — through the AOT/PJRT engine
+//!    (Pallas kernels) or the native Rust engine;
+//! 3. `co_sum` aggregates the tendencies and every image applies the same
+//!    SGD update, so replicas stay identical without ever shipping
+//!    parameters after step 1.
+
+mod parallel;
+mod simulate;
+mod trainer;
+
+pub use parallel::{train_parallel, ParallelReport, ParallelSpec};
+pub use simulate::ScalingModel;
+pub use trainer::{BatchStrategy, EngineKind, EpochStats, Trainer, TrainerOptions};

@@ -1,0 +1,187 @@
+//! Shared-memory parallel training driver: spawns one worker thread per
+//! image, builds per-image engines (PJRT clients are per-image by design),
+//! runs the epoch loop, and reports per-epoch accuracy and timing — the
+//! harness behind `examples/mnist.rs`, `examples/parallel_scaling.rs`, and
+//! the Table 2 / Figures 4–5 benches.
+
+use super::trainer::{EngineKind, EpochStats, Trainer, TrainerOptions};
+use crate::collectives::{Communicator, ReduceAlgo, Team};
+use crate::data::Dataset;
+use crate::metrics::Stopwatch;
+use crate::nn::Network;
+use crate::runtime::{Engine, Manifest, PjrtScalar};
+use std::path::PathBuf;
+
+/// What to run: team size, reduction schedule, hyper-parameters, engine.
+#[derive(Debug, Clone)]
+pub struct ParallelSpec {
+    pub images: usize,
+    pub algo: ReduceAlgo,
+    pub opts: TrainerOptions,
+    pub engine: EngineKind,
+    /// (artifacts root, config name) — required when engine == Pjrt.
+    pub artifacts: Option<(PathBuf, String)>,
+    /// Evaluate accuracy after every epoch (Fig 3) or only at the end
+    /// (Table 2 times training only).
+    pub eval_each_epoch: bool,
+}
+
+/// Results from a parallel training run.
+#[derive(Debug, Clone)]
+pub struct ParallelReport<T = f32> {
+    /// Accuracy before any training (≈ random guess).
+    pub initial_accuracy: f64,
+    /// Accuracy after each epoch (empty unless `eval_each_epoch`, except
+    /// the final epoch which is always evaluated).
+    pub epoch_accuracy: Vec<f64>,
+    /// Wall-clock seconds spent in the training loop only (accuracy
+    /// evaluations excluded), synchronized across images.
+    pub train_s: f64,
+    /// Aggregated per-phase stats from image 1.
+    pub stats: EpochStats,
+    /// The trained network (image 1's replica — all replicas are equal).
+    pub net: Network<T>,
+}
+
+impl<T> ParallelReport<T> {
+    /// Final accuracy.
+    pub fn final_accuracy(&self) -> f64 {
+        *self.epoch_accuracy.last().unwrap_or(&self.initial_accuracy)
+    }
+}
+
+/// Run data-parallel training on a shared-memory team.
+///
+/// The datasets are shared read-only across images (the paper loads the
+/// full dataset on every image too; the *batch* is what gets sharded).
+pub fn train_parallel<T: PjrtScalar>(
+    spec: &ParallelSpec,
+    train: &Dataset<T>,
+    test: &Dataset<T>,
+) -> ParallelReport<T> {
+    assert!(spec.images >= 1);
+    if spec.engine == EngineKind::Pjrt {
+        assert!(
+            spec.artifacts.is_some(),
+            "EngineKind::Pjrt requires ParallelSpec::artifacts"
+        );
+    }
+    let comms = Team::with_algo(spec.images, spec.algo);
+    let results: Vec<Option<ParallelReport<T>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = comms
+            .iter()
+            .map(|comm| {
+                s.spawn(move || {
+                    let engine = match (&spec.engine, &spec.artifacts) {
+                        (EngineKind::Pjrt, Some((root, name))) => {
+                            let manifest =
+                                Manifest::load(root).expect("failed to load artifact manifest");
+                            let meta = manifest.get(name).expect("unknown artifact config");
+                            let eng = Engine::new().expect("failed to create PJRT client");
+                            Some(eng.load(meta).expect("failed to compile artifacts"))
+                        }
+                        _ => None,
+                    };
+                    let mut trainer = Trainer::new(comm, spec.opts.clone(), engine);
+                    let initial_accuracy = trainer.accuracy(test);
+
+                    let mut epoch_accuracy = Vec::new();
+                    let mut stats = EpochStats::default();
+                    // Synchronize before timing (paper: training-only).
+                    comm.barrier();
+                    let mut train_s = 0.0;
+                    for epoch in 0..spec.opts.epochs {
+                        let sw = Stopwatch::start();
+                        let e = trainer.train_epoch(train);
+                        comm.barrier();
+                        train_s += sw.elapsed_s();
+                        stats.grad_s += e.grad_s;
+                        stats.comm_s += e.comm_s;
+                        stats.update_s += e.update_s;
+                        stats.batches += e.batches;
+                        stats.samples += e.samples;
+                        if spec.eval_each_epoch || epoch + 1 == spec.opts.epochs {
+                            epoch_accuracy.push(trainer.accuracy(test));
+                        }
+                    }
+                    if comm.this_image() == 1 {
+                        Some(ParallelReport {
+                            initial_accuracy,
+                            epoch_accuracy,
+                            train_s,
+                            stats,
+                            net: trainer.net,
+                        })
+                    } else {
+                        None
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker image panicked")).collect()
+    });
+    results.into_iter().flatten().next().expect("image 1 produced no report")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthesize;
+    use crate::nn::Activation;
+
+    fn spec(images: usize, epochs: usize) -> ParallelSpec {
+        ParallelSpec {
+            images,
+            algo: ReduceAlgo::Tree,
+            opts: TrainerOptions {
+                dims: vec![784, 30, 10],
+                activation: Activation::Sigmoid,
+                eta: 3.0,
+                batch_size: 200,
+                epochs,
+                seed: 1,
+                batch_seed: 2,
+                strategy: Default::default(),
+                optimizer: Default::default(),
+            },
+            engine: EngineKind::Native,
+            artifacts: None,
+            eval_each_epoch: true,
+        }
+    }
+
+    #[test]
+    fn parallel_run_learns_and_reports() {
+        let train = synthesize::<f32>(2000, 5);
+        let test = synthesize::<f32>(400, 6);
+        let report = train_parallel(&spec(3, 15), &train, &test);
+        assert_eq!(report.epoch_accuracy.len(), 15);
+        assert!(report.initial_accuracy < 0.3);
+        assert!(report.final_accuracy() > 0.5, "acc={}", report.final_accuracy());
+        assert!(report.train_s > 0.0);
+        assert_eq!(report.stats.batches, 15 * (2000 / 200));
+    }
+
+    #[test]
+    fn image_counts_converge_to_same_model() {
+        let train = synthesize::<f32>(800, 7);
+        let test = synthesize::<f32>(100, 8);
+        let r1 = train_parallel(&spec(1, 2), &train, &test);
+        let r4 = train_parallel(&spec(4, 2), &train, &test);
+        let d = crate::tensor::vecops::max_abs_diff(
+            &r1.net.params_to_flat(),
+            &r4.net.params_to_flat(),
+        );
+        assert!(d < 1e-4, "1-image vs 4-image params differ by {d}");
+    }
+
+    #[test]
+    fn eval_only_at_end_when_disabled() {
+        let train = synthesize::<f32>(400, 9);
+        let test = synthesize::<f32>(100, 10);
+        let mut sp = spec(2, 3);
+        sp.eval_each_epoch = false;
+        let report = train_parallel(&sp, &train, &test);
+        assert_eq!(report.epoch_accuracy.len(), 1, "only the final epoch is evaluated");
+    }
+}

@@ -1,0 +1,272 @@
+//! Calibrated virtual-time scaling model — the substitution for the
+//! paper's 12-core Xeon 8168 testbed (DESIGN.md §5).
+//!
+//! This container exposes a single hardware thread, so really-threaded
+//! strong scaling degenerates to time-slicing. The paper's §5.2 experiment
+//! is therefore reproduced with a *measured-cost* model: every term in the
+//! per-step time is calibrated by executing the real code serially —
+//!
+//! - `grad_per_sample`: wall time of the actual gradient engine on the
+//!   actual network/shard shapes;
+//! - `reduce_element_s`: wall time per element of the actual f64
+//!   accumulate loop the shared-memory reducer runs;
+//! - `barrier_s`: per-synchronization-round cost (a futex wake on an SMP
+//!   node; default from literature, overridable);
+//!
+//! and the per-step virtual time follows exactly the coordinator's
+//! schedule: max over images of shard compute, plus the reduction
+//! schedule's critical path, plus its barrier rounds. Amdahl-style serial
+//! terms (batch slicing, update) are measured too and charged fully.
+//!
+//! The model is validated where it can be: at n=1 it must reproduce the
+//! real measured serial epoch time (tests assert within tolerance), and
+//! on multi-core hosts the real-thread bench can be compared directly.
+
+use crate::collectives::ReduceAlgo;
+use crate::data::{label_digits, shard_bounds, Dataset};
+use crate::metrics::Stopwatch;
+use crate::nn::Network;
+use crate::runtime::CompiledNet;
+
+/// Calibrated cost terms (seconds).
+#[derive(Debug, Clone)]
+pub struct ScalingModel {
+    /// Gradient time per training sample.
+    pub grad_per_sample: f64,
+    /// Reduction cost per element per deposit-combine.
+    pub reduce_element_s: f64,
+    /// One synchronization round (barrier wake) on a shared-memory node.
+    pub barrier_s: f64,
+    /// Serial per-step overhead (batch slice + one-hot + update), seconds.
+    pub step_overhead_s: f64,
+    /// Additional per-communication-round latency (0 for raw shared
+    /// memory; tens of µs when collectives ride an MPI transport like the
+    /// paper's OpenCoarrays configuration).
+    pub round_latency_s: f64,
+    /// Flat parameter count of the network.
+    pub params: usize,
+}
+
+impl ScalingModel {
+    /// Calibrate against the real engine on a real dataset shard.
+    ///
+    /// `engine = None` calibrates the native path; `Some(compiled)` the
+    /// PJRT path. `probe` samples are timed (a few hundred suffice).
+    pub fn calibrate<T: crate::runtime::PjrtScalar>(
+        net: &mut Network<T>,
+        engine: Option<&CompiledNet>,
+        data: &Dataset<T>,
+        probe: usize,
+    ) -> ScalingModel {
+        let probe = probe.min(data.len()).max(1);
+        let x = data.images.cols_range(0, probe);
+        let y = label_digits::<T>(&data.labels[..probe]);
+
+        // --- gradient cost (warm + 3 timed reps) ---
+        let time_grad = |net: &mut Network<T>| match engine {
+            Some(c) => {
+                let g = c.grad_batch(net, &x, &y).expect("calibration grad failed");
+                std::hint::black_box(&g);
+            }
+            None => {
+                let g = net.grad_batch(&x, &y);
+                std::hint::black_box(&g);
+            }
+        };
+        time_grad(net);
+        let sw = Stopwatch::start();
+        for _ in 0..3 {
+            time_grad(net);
+        }
+        let grad_per_sample = sw.elapsed_s() / 3.0 / probe as f64;
+
+        // --- reduction bandwidth: the reducer's actual combine loop ---
+        let params = net.params_flat_len();
+        let mut acc = vec![0.0f64; params];
+        let dep = vec![1.0f64; params];
+        let sw = Stopwatch::start();
+        let reps = 50;
+        for _ in 0..reps {
+            for (a, &d) in acc.iter_mut().zip(&dep) {
+                *a += d;
+            }
+            std::hint::black_box(&mut acc);
+        }
+        let reduce_element_s = sw.elapsed_s() / (reps * params) as f64;
+
+        // --- serial step overhead: slice + one-hot + update ---
+        let sw = Stopwatch::start();
+        let reps = 20;
+        for _ in 0..reps {
+            let xs = data.images.cols_range(0, probe);
+            let ys = label_digits::<T>(&data.labels[..probe]);
+            std::hint::black_box((&xs, &ys));
+            let g = crate::nn::Gradients::<T>::zeros(net.dims());
+            net.update(&g, T::from_f64(0.0));
+        }
+        let step_overhead_s = sw.elapsed_s() / reps as f64;
+
+        ScalingModel {
+            grad_per_sample,
+            reduce_element_s,
+            // ~2 µs: one futex wake + cacheline handoff on a Xeon-class
+            // SMP node (the paper's testbed); overridable by callers.
+            barrier_s: 2e-6,
+            step_overhead_s,
+            round_latency_s: 0.0,
+            params,
+        }
+    }
+
+    /// Variant parameterized like the paper's transport: Fortran 2018
+    /// collectives over OpenCoarrays/OpenMPI, where each co_sum round is
+    /// an MPI message (eager-path latency ~40 µs on-node, measured values
+    /// in the 10-100 µs range in the MPI literature), and neural-fortran
+    /// issues one co_sum per dw/db array (4 collectives per step for a
+    /// 3-layer network) rather than one fused buffer.
+    pub fn opencoarrays_like(mut self) -> ScalingModel {
+        self.barrier_s = 1e-5;
+        self.round_latency_s = 4e-5 * 4.0; // 4 collectives per step
+        self
+    }
+
+    /// Communication critical path of one co_sum on `n` images.
+    pub fn comm_time(&self, n: usize, algo: ReduceAlgo) -> f64 {
+        if n == 1 {
+            return 0.0;
+        }
+        let elems = self.params as f64;
+        let e = self.reduce_element_s;
+        // deposit copy (parallel across images) + reduce + read-back copy.
+        let deposit = elems * e;
+        let readback = elems * e;
+        let reduce = match algo {
+            // Root combines all n deposits serially.
+            ReduceAlgo::Flat => n as f64 * (elems * e + self.round_latency_s),
+            // log2(n) rounds, each a full-buffer combine + barrier.
+            ReduceAlgo::Tree => {
+                let rounds = (n as f64).log2().ceil();
+                rounds * (elems * e + self.barrier_s + self.round_latency_s)
+            }
+            // Each image combines its 1/n chunk across n deposits.
+            ReduceAlgo::Chunked => {
+                n as f64 * (elems / n as f64) * e + self.barrier_s + 2.0 * self.round_latency_s
+            }
+        };
+        // The collective's fixed barrier rounds (deposit/result/trailing).
+        deposit + reduce + readback + 3.0 * self.barrier_s
+    }
+
+    /// Virtual time of one global step of `batch` samples on `n` images.
+    pub fn step_time(&self, n: usize, batch: usize, algo: ReduceAlgo) -> f64 {
+        assert!(n >= 1 && batch >= 1);
+        // Critical path = largest shard (shards differ by at most 1).
+        let (lo, hi) = shard_bounds(batch, 1, n);
+        let largest_shard = hi - lo;
+        largest_shard as f64 * self.grad_per_sample
+            + self.comm_time(n, algo)
+            + self.step_overhead_s
+    }
+
+    /// Virtual time of an epoch (`steps` mini-batches of `batch`).
+    pub fn epoch_time(&self, n: usize, batch: usize, steps: usize, algo: ReduceAlgo) -> f64 {
+        steps as f64 * self.step_time(n, batch, algo)
+    }
+
+    /// Parallel efficiency PE = t(1)/(n·t(n)) for an epoch.
+    pub fn parallel_efficiency(
+        &self,
+        n: usize,
+        batch: usize,
+        steps: usize,
+        algo: ReduceAlgo,
+    ) -> f64 {
+        let t1 = self.epoch_time(1, batch, steps, algo);
+        let tn = self.epoch_time(n, batch, steps, algo);
+        t1 / (n as f64 * tn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthesize;
+    use crate::nn::Activation;
+
+    fn model() -> ScalingModel {
+        let mut net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+        let data = synthesize::<f32>(400, 1);
+        ScalingModel::calibrate(&mut net, None, &data, 200)
+    }
+
+    #[test]
+    fn calibration_terms_are_plausible() {
+        let m = model();
+        assert!(m.grad_per_sample > 1e-7 && m.grad_per_sample < 1e-2, "{m:?}");
+        assert!(m.reduce_element_s > 1e-11 && m.reduce_element_s < 1e-6, "{m:?}");
+        assert_eq!(m.params, 784 * 30 + 30 * 10 + 784 + 30 + 10);
+    }
+
+    /// The model must reproduce a real serial epoch within tolerance:
+    /// t_model(1) ≈ measured serial time (the only point we can verify on
+    /// this 1-core container).
+    #[test]
+    fn model_matches_real_serial_epoch() {
+        let mut net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+        let data = synthesize::<f32>(1200, 2);
+        let m = ScalingModel::calibrate(&mut net, None, &data, 400);
+
+        // Real serial epoch: 1 step of batch 1200.
+        let x = data.images.cols_range(0, 1200);
+        let y = label_digits::<f32>(&data.labels[..1200]);
+        let sw = Stopwatch::start();
+        let g = net.grad_batch(&x, &y);
+        net.update(&g, 0.001);
+        let real = sw.elapsed_s();
+
+        let predicted = m.step_time(1, 1200, ReduceAlgo::Tree);
+        let ratio = predicted / real;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "model {predicted:.4}s vs real {real:.4}s (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn elapsed_decreases_and_pe_declines_with_images() {
+        let m = model();
+        let batch = 1200;
+        let steps = 10;
+        let mut prev_t = f64::INFINITY;
+        let mut prev_pe = 1.01;
+        for n in [1usize, 2, 3, 4, 6, 8, 12] {
+            let t = m.epoch_time(n, batch, steps, ReduceAlgo::Tree);
+            let pe = m.parallel_efficiency(n, batch, steps, ReduceAlgo::Tree);
+            assert!(t < prev_t, "elapsed must decrease: n={n} t={t} prev={prev_t}");
+            assert!(pe <= prev_pe + 1e-9, "PE must decline: n={n} pe={pe}");
+            assert!(pe > 1.0 / n as f64 - 1e-9, "PE must beat zero-speed-up line at n={n}");
+            prev_t = t;
+            prev_pe = pe;
+        }
+    }
+
+    #[test]
+    fn tree_beats_flat_at_scale() {
+        let m = model();
+        let flat = m.comm_time(12, ReduceAlgo::Flat);
+        let tree = m.comm_time(12, ReduceAlgo::Tree);
+        assert!(tree < flat, "tree {tree} should beat flat {flat} at 12 images");
+        assert_eq!(m.comm_time(1, ReduceAlgo::Flat), 0.0);
+    }
+
+    #[test]
+    fn tiny_batches_scale_poorly() {
+        // Communication dominates small batches: PE(12) for batch 12 must
+        // be far below PE(12) for batch 1200 — the reason the paper uses a
+        // large batch for the scaling study.
+        let m = model();
+        let pe_small = m.parallel_efficiency(12, 12, 10, ReduceAlgo::Tree);
+        let pe_large = m.parallel_efficiency(12, 1200, 10, ReduceAlgo::Tree);
+        assert!(pe_small < pe_large, "small {pe_small} vs large {pe_large}");
+    }
+}

@@ -1,0 +1,522 @@
+//! Per-image trainer: replica + engine + communicator.
+
+use crate::collectives::Communicator;
+use crate::data::{label_digits, shard_bounds, Dataset};
+use crate::nn::{Activation, Gradients, Network, Optimizer, OptimizerKind};
+use crate::runtime::{CompiledNet, PjrtScalar};
+use crate::tensor::{Matrix, Rng};
+#[allow(unused_imports)]
+use crate::tensor::vecops as _vecops_check;
+
+/// Which gradient/eval engine the trainer drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// AOT artifacts executed via PJRT (the three-layer stack).
+    #[default]
+    Pjrt,
+    /// The pure-Rust reference engine (the Table 1 comparator).
+    Native,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" => Some(Self::Pjrt),
+            "native" => Some(Self::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pjrt => "pjrt",
+            Self::Native => "native",
+        }
+    }
+}
+
+/// Mini-batch sampling strategy (paper §4: random-start windows in the
+/// example; shuffled partitions recommended for production).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchStrategy {
+    #[default]
+    RandomStart,
+    Shuffled,
+}
+
+impl BatchStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random_start" | "random-start" => Some(Self::RandomStart),
+            "shuffled" => Some(Self::Shuffled),
+            _ => None,
+        }
+    }
+}
+
+/// Training hyper-parameters (the knobs of Listing 12).
+#[derive(Debug, Clone)]
+pub struct TrainerOptions {
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    /// Learning rate (applied as eta/global_batch to summed tendencies).
+    pub eta: f64,
+    /// Global mini-batch size, split across images.
+    pub batch_size: usize,
+    pub epochs: usize,
+    /// Weight-init seed. Each image deliberately seeds differently
+    /// (seed + image); the broadcast from image 1 then proves the sync.
+    pub seed: u64,
+    /// Mini-batch sampling seed — identical on every image so all images
+    /// draw the same global batch.
+    pub batch_seed: u64,
+    pub strategy: BatchStrategy,
+    /// Update rule (the paper ships SGD; momentum/Nesterov are the
+    /// future-work extension). Velocity state is replicated and stays
+    /// identical across images because the reduced gradients are.
+    pub optimizer: OptimizerKind,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        Self {
+            dims: vec![784, 30, 10],
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: 1000,
+            epochs: 30,
+            seed: 0,
+            batch_seed: 12345,
+            strategy: BatchStrategy::RandomStart,
+            optimizer: OptimizerKind::Sgd,
+        }
+    }
+}
+
+/// Per-epoch statistics from `train_epoch`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochStats {
+    /// Seconds spent in gradient computation (this image).
+    pub grad_s: f64,
+    /// Seconds spent in the collective sum (this image).
+    pub comm_s: f64,
+    /// Seconds spent applying updates.
+    pub update_s: f64,
+    /// Mini-batches processed.
+    pub batches: usize,
+    /// Samples this image processed.
+    pub samples: usize,
+}
+
+/// One image's trainer: network replica, engine, and collectives handle.
+pub struct Trainer<'c, T, C: Communicator> {
+    comm: &'c C,
+    pub net: Network<T>,
+    opts: TrainerOptions,
+    engine: Option<CompiledNet>,
+    optimizer: Optimizer<T>,
+    batch_rng: Rng,
+    /// Reused flat buffer for the gradient co_sum.
+    flat: Vec<T>,
+    /// Reused gradient accumulator.
+    grads: Gradients<T>,
+    /// Shuffled-epoch state.
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
+    /// Build a trainer replica on this image. Mirrors the paper's
+    /// constructor: allocate, initialize (per-image seed), then
+    /// synchronize all replicas to image 1's parameters.
+    ///
+    /// `engine` must be `Some` for `EngineKind::Pjrt` operation and is
+    /// built per image (PJRT clients are single-threaded by design here).
+    pub fn new(comm: &'c C, opts: TrainerOptions, engine: Option<CompiledNet>) -> Self {
+        assert!(opts.batch_size > 0 && opts.eta > 0.0, "bad hyper-parameters");
+        let image = comm.this_image() as u64;
+        let mut net = Network::<T>::new(&opts.dims, opts.activation, opts.seed + image - 1);
+
+        // sync(1): broadcast image 1's parameters to all replicas.
+        let mut flat = net.params_to_flat();
+        comm.co_broadcast(&mut flat, 1);
+        net.params_unflatten_from(&flat);
+
+        let grads = Gradients::zeros(&opts.dims);
+        let batch_rng = Rng::new(opts.batch_seed);
+        let optimizer = Optimizer::new(opts.optimizer, &opts.dims);
+        Self {
+            comm,
+            net,
+            opts,
+            engine,
+            optimizer,
+            batch_rng,
+            flat,
+            grads,
+            order: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    pub fn options(&self) -> &TrainerOptions {
+        &self.opts
+    }
+
+    pub fn this_image(&self) -> usize {
+        self.comm.this_image()
+    }
+
+    pub fn num_images(&self) -> usize {
+        self.comm.num_images()
+    }
+
+    /// Indices of the next global mini-batch — identical on every image
+    /// because the batch RNG state is identical.
+    fn next_batch(&mut self, n: usize) -> (usize, usize, Option<Vec<usize>>) {
+        match self.opts.strategy {
+            BatchStrategy::RandomStart => {
+                let bs = self.opts.batch_size.min(n);
+                let start = self.batch_rng.below(n - bs + 1);
+                (start, start + bs, None)
+            }
+            BatchStrategy::Shuffled => {
+                let bs = self.opts.batch_size.min(n);
+                if self.cursor + bs > self.order.len() {
+                    self.order = self.batch_rng.permutation(n);
+                    self.cursor = 0;
+                }
+                let idx = self.order[self.cursor..self.cursor + bs].to_vec();
+                self.cursor += bs;
+                (0, bs, Some(idx))
+            }
+        }
+    }
+
+    /// Gradient of this image's shard of the global batch.
+    fn shard_grads(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> usize {
+        let (lo, hi) = shard_bounds(x.cols(), self.comm.this_image(), self.comm.num_images());
+        self.grads.zero_out();
+        if lo == hi {
+            return 0; // more images than samples: an empty shard is legal
+        }
+        let xs = x.cols_range(lo, hi);
+        let ys = y.cols_range(lo, hi);
+        match &self.engine {
+            Some(compiled) => {
+                let g = compiled
+                    .grad_batch(&self.net, &xs, &ys)
+                    .expect("pjrt grad_batch failed");
+                self.grads.add_assign(&g);
+            }
+            None => {
+                let g = self.net.grad_batch(&xs, &ys);
+                self.grads.add_assign(&g);
+            }
+        }
+        hi - lo
+    }
+
+    /// One global training step on an explicit batch: shard → grad →
+    /// co_sum → update. Exposed for tests; `train_epoch` drives it.
+    pub fn train_step(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> EpochStats {
+        let mut stats = EpochStats::default();
+        let sw = crate::metrics::Stopwatch::start();
+        stats.samples = self.shard_grads(x, y);
+        stats.grad_s = sw.elapsed_s();
+
+        // Collective sum of the tendencies (paper step 3).
+        let sw = crate::metrics::Stopwatch::start();
+        if !self.comm.is_serial() {
+            self.grads.flatten_into(&mut self.flat);
+            self.comm.co_sum(&mut self.flat);
+            self.grads.unflatten_from(&self.flat);
+        }
+        stats.comm_s = sw.elapsed_s();
+
+        let sw = crate::metrics::Stopwatch::start();
+        let eta_eff = T::from_f64(self.opts.eta / x.cols() as f64);
+        self.optimizer.step(&mut self.net, &self.grads, eta_eff);
+        stats.update_s = sw.elapsed_s();
+        stats.batches = 1;
+        stats
+    }
+
+    /// One epoch over the training set (`len/batch_size` mini-batches,
+    /// exactly Listing 12's inner loop).
+    pub fn train_epoch(&mut self, train: &Dataset<T>) -> EpochStats {
+        let n = train.len();
+        assert!(n > 0, "empty training set");
+        let mut total = EpochStats::default();
+        let iterations = (n / self.opts.batch_size).max(1);
+        for _ in 0..iterations {
+            let (lo, hi, gathered) = self.next_batch(n);
+            let stats = match gathered {
+                None => {
+                    let x = train.images.cols_range(lo, hi);
+                    let y = label_digits(&train.labels[lo..hi]);
+                    self.train_step(&x, &y)
+                }
+                Some(idx) => {
+                    let x = train.images.gather_cols(&idx);
+                    let labels: Vec<u8> = idx.iter().map(|&i| train.labels[i]).collect();
+                    let y = label_digits(&labels);
+                    self.train_step(&x, &y)
+                }
+            };
+            total.grad_s += stats.grad_s;
+            total.comm_s += stats.comm_s;
+            total.update_s += stats.update_s;
+            total.batches += stats.batches;
+            total.samples += stats.samples;
+        }
+        total
+    }
+
+    /// Distributed accuracy: each image evaluates its shard of the test
+    /// set; correct counts are co_summed. All images return the same value.
+    pub fn accuracy(&self, test: &Dataset<T>) -> f64 {
+        if test.is_empty() {
+            return 0.0;
+        }
+        let (lo, hi) = shard_bounds(test.len(), self.comm.this_image(), self.comm.num_images());
+        let correct = if lo == hi {
+            0.0
+        } else {
+            let xs = test.images.cols_range(lo, hi);
+            let ys = label_digits::<T>(&test.labels[lo..hi]);
+            let acc = match &self.engine {
+                Some(compiled) => {
+                    compiled.accuracy(&self.net, &xs, &ys).expect("pjrt accuracy failed")
+                }
+                None => self.net.accuracy(&xs, &ys),
+            };
+            acc * (hi - lo) as f64
+        };
+        let total = self.comm.co_sum_scalar(correct);
+        total / test.len() as f64
+    }
+
+    /// Checksum of the replica parameters (replica-consistency tests).
+    pub fn params_checksum(&self) -> f64 {
+        self.net.params_to_flat().iter().map(|v| v.to_f64()).sum()
+    }
+
+    /// Largest parameter divergence across all replicas (0.0 when in
+    /// sync). Collective.
+    pub fn replica_divergence(&self) -> f64 {
+        let flat = self.net.params_to_flat();
+        let mut mx: Vec<T> = flat.clone();
+        self.comm.co_max(&mut mx);
+        let mut mn: Vec<T> = flat;
+        self.comm.co_min(&mut mn);
+        mx.iter()
+            .zip(&mn)
+            .map(|(&a, &b)| (a - b).abs().to_f64())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{LocalComm, NullComm, ReduceAlgo, Team};
+    use crate::data::synthesize;
+
+    fn opts(dims: &[usize], bs: usize) -> TrainerOptions {
+        TrainerOptions {
+            dims: dims.to_vec(),
+            activation: Activation::Sigmoid,
+            eta: 3.0,
+            batch_size: bs,
+            epochs: 1,
+            seed: 5,
+            batch_seed: 99,
+            strategy: BatchStrategy::RandomStart,
+            optimizer: Default::default(),
+        }
+    }
+
+    #[test]
+    fn serial_trainer_learns_digits() {
+        let comm = NullComm;
+        let train = synthesize::<f32>(2000, 1);
+        let test = synthesize::<f32>(400, 2);
+        let mut t = Trainer::new(&comm, opts(&[784, 30, 10], 100), None);
+        let before = t.accuracy(&test);
+        for _ in 0..8 {
+            t.train_epoch(&train);
+        }
+        let after = t.accuracy(&test);
+        assert!(after > before + 0.3, "acc {before} -> {after}");
+    }
+
+    #[test]
+    fn constructor_broadcast_synchronizes_replicas() {
+        let comms = Team::new(4);
+        let results: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let t: Trainer<f32, LocalComm> =
+                            Trainer::new(c, opts(&[10, 6, 3], 8), None);
+                        // Different seeds per image, equal after sync.
+                        (t.params_checksum(), t.replica_divergence())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).map(|(c, d)| {
+                assert_eq!(d, 0.0, "replicas diverged after constructor sync");
+                c
+            }).collect()
+        });
+        for w in results.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+    }
+
+    /// The paper's core claim: parallel training with N images produces
+    /// the same model as serial training on the same global batches.
+    #[test]
+    fn parallel_training_equals_serial() {
+        let train = synthesize::<f32>(600, 3);
+
+        // Serial reference.
+        let comm = NullComm;
+        let mut serial = Trainer::new(&comm, opts(&[784, 16, 10], 120), None);
+        for _ in 0..2 {
+            serial.train_epoch(&train);
+        }
+        let want = serial.net.params_to_flat();
+
+        for n in [2usize, 3, 4] {
+            let comms = Team::with_algo(n, ReduceAlgo::Tree);
+            let train_ref = &train;
+            let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut t: Trainer<f32, LocalComm> =
+                                Trainer::new(c, opts(&[784, 16, 10], 120), None);
+                            for _ in 0..2 {
+                                t.train_epoch(train_ref);
+                            }
+                            assert_eq!(t.replica_divergence(), 0.0);
+                            t.net.params_to_flat()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for params in &got {
+                let diff = crate::tensor::vecops::max_abs_diff(params, &want);
+                // f64 collective accumulation reorders sums; tolerance is
+                // tight but not bitwise.
+                assert!(diff < 1e-4, "n={n}: parallel differs from serial by {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_accuracy_matches_serial_accuracy() {
+        let test = synthesize::<f32>(500, 7);
+        let comm = NullComm;
+        let t0 = Trainer::<f32, _>::new(&comm, opts(&[784, 12, 10], 50), None);
+        let serial_acc = t0.accuracy(&test);
+
+        let comms = Team::new(3);
+        let test_ref = &test;
+        let accs: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let t: Trainer<f32, LocalComm> =
+                            Trainer::new(c, opts(&[784, 12, 10], 50), None);
+                        t.accuracy(test_ref)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for a in accs {
+            assert!((a - serial_acc).abs() < 1e-12, "{a} vs {serial_acc}");
+        }
+    }
+
+    #[test]
+    fn more_images_than_batch_samples_is_legal() {
+        let train = synthesize::<f32>(40, 9);
+        let comms = Team::new(8);
+        let train_ref = &train;
+        std::thread::scope(|s| {
+            for c in &comms {
+                s.spawn(move || {
+                    let mut t: Trainer<f32, LocalComm> =
+                        Trainer::new(c, opts(&[784, 8, 10], 4), None);
+                    // batch of 4 over 8 images -> some shards empty.
+                    t.train_epoch(train_ref);
+                    assert_eq!(t.replica_divergence(), 0.0);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn shuffled_strategy_trains_too() {
+        let comm = NullComm;
+        let train = synthesize::<f32>(1000, 11);
+        let test = synthesize::<f32>(200, 12);
+        let mut o = opts(&[784, 30, 10], 100);
+        o.strategy = BatchStrategy::Shuffled;
+        let mut t = Trainer::new(&comm, o, None);
+        for _ in 0..15 {
+            t.train_epoch(&train);
+        }
+        assert!(t.accuracy(&test) > 0.45, "acc={}", t.accuracy(&test));
+    }
+
+    #[test]
+    fn momentum_trainer_stays_replica_consistent_and_learns() {
+        let train = synthesize::<f32>(1500, 21);
+        let test = synthesize::<f32>(300, 22);
+        let comms = Team::new(3);
+        let (train_ref, test_ref) = (&train, &test);
+        let accs: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut o = opts(&[784, 24, 10], 100);
+                        o.eta = 0.1; // effective lr ~ eta/(1-mu) = 1; momentum transients overshoot at higher rates
+                        o.optimizer = crate::nn::OptimizerKind::Momentum { mu: 0.9 };
+                        let mut t: Trainer<f32, LocalComm> = Trainer::new(c, o, None);
+                        for _ in 0..15 {
+                            t.train_epoch(train_ref);
+                        }
+                        assert_eq!(t.replica_divergence(), 0.0);
+                        t.accuracy(test_ref)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for a in &accs {
+            assert_eq!(*a, accs[0], "all images must report the same accuracy");
+        }
+        // Sigmoid+quadratic cost learns slowly under momentum at safe
+        // rates; the point here is replica consistency + progress.
+        assert!(accs[0] > 0.15, "momentum training should make progress (acc={})", accs[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad hyper-parameters")]
+    fn zero_batch_rejected() {
+        let comm = NullComm;
+        let mut o = opts(&[4, 2], 0);
+        o.batch_size = 0;
+        let _ = Trainer::<f32, _>::new(&comm, o, None);
+    }
+}

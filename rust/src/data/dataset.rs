@@ -1,0 +1,284 @@
+//! In-memory labeled dataset and mini-batch sampling (paper §4).
+
+use super::idx;
+use super::{IdxError, IMAGE_PIXELS, NUM_CLASSES};
+use crate::tensor::{Matrix, Rng, Scalar};
+use std::path::Path;
+
+/// A labeled image dataset: columns of `images` are flattened samples in
+/// [0,1]; `labels[j]` is the digit for column `j`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset<T = f32> {
+    pub images: Matrix<T>,
+    pub labels: Vec<u8>,
+}
+
+/// One-hot encode labels — the paper's `label_digits`: a 10×n matrix with
+/// a single 1 per column.
+pub fn label_digits<T: Scalar>(labels: &[u8]) -> Matrix<T> {
+    let mut y = Matrix::zeros(NUM_CLASSES, labels.len());
+    for (j, &l) in labels.iter().enumerate() {
+        assert!((l as usize) < NUM_CLASSES, "label {l} out of range");
+        y.set(l as usize, j, T::ONE);
+    }
+    y
+}
+
+impl<T: Scalar> Dataset<T> {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Input dimensionality (rows of the image matrix).
+    pub fn input_size(&self) -> usize {
+        self.images.rows()
+    }
+
+    /// One-hot label matrix for the whole set.
+    pub fn one_hot(&self) -> Matrix<T> {
+        label_digits(&self.labels)
+    }
+
+    /// First `n` samples (the paper uses the first 50k of MNIST for
+    /// training). Clamps to the dataset size.
+    pub fn take(&self, n: usize) -> Dataset<T> {
+        let n = n.min(self.len());
+        Dataset { images: self.images.cols_range(0, n), labels: self.labels[..n].to_vec() }
+    }
+
+    /// Contiguous slice of samples [lo, hi).
+    pub fn slice(&self, lo: usize, hi: usize) -> Dataset<T> {
+        Dataset { images: self.images.cols_range(lo, hi), labels: self.labels[lo..hi].to_vec() }
+    }
+
+    /// Samples at the given indices.
+    pub fn gather(&self, idx: &[usize]) -> Dataset<T> {
+        Dataset {
+            images: self.images.gather_cols(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+        }
+    }
+
+    /// Even shard for `image` (1-based) of `num_images` — the data-based
+    /// parallel decomposition from paper §3.5. Every sample lands in
+    /// exactly one shard and shard sizes differ by at most 1.
+    pub fn shard(&self, image: usize, num_images: usize) -> Dataset<T> {
+        let (lo, hi) = shard_bounds(self.len(), image, num_images);
+        self.slice(lo, hi)
+    }
+
+    /// Load from IDX image+label files (real MNIST), scaling pixels to
+    /// [0,1] like the paper's `load_mnist`.
+    pub fn from_idx_files(
+        images_path: impl AsRef<Path>,
+        labels_path: impl AsRef<Path>,
+    ) -> Result<Self, IdxError> {
+        let (rows, cols, pixels) = idx::read_idx_images(images_path)?;
+        let labels = idx::read_idx_labels(labels_path)?;
+        let px = rows * cols;
+        let n = pixels.len() / px;
+        if n != labels.len() {
+            return Err(IdxError::Format(format!(
+                "{n} images but {} labels",
+                labels.len()
+            )));
+        }
+        let scale = 1.0 / 255.0;
+        let mut images = Matrix::zeros(px, n);
+        for j in 0..n {
+            let col = images.col_mut(j);
+            for (dst, &p) in col.iter_mut().zip(&pixels[j * px..(j + 1) * px]) {
+                *dst = T::from_f64(p as f64 * scale);
+            }
+        }
+        Ok(Dataset { images, labels })
+    }
+
+    /// Write as IDX files (pixels rescaled to u8).
+    pub fn to_idx_files(
+        &self,
+        images_path: impl AsRef<Path>,
+        labels_path: impl AsRef<Path>,
+    ) -> Result<(), IdxError> {
+        assert_eq!(self.images.rows(), IMAGE_PIXELS, "only 28x28 datasets can be written");
+        let mut pixels = Vec::with_capacity(self.images.len());
+        for j in 0..self.len() {
+            for &v in self.images.col(j) {
+                pixels.push((v.to_f64().clamp(0.0, 1.0) * 255.0).round() as u8);
+            }
+        }
+        idx::write_idx_images(images_path, 28, 28, &pixels)?;
+        idx::write_idx_labels(labels_path, &self.labels)?;
+        Ok(())
+    }
+}
+
+/// [lo, hi) sample range owned by `image` (1-based) out of `num_images`.
+pub fn shard_bounds(len: usize, image: usize, num_images: usize) -> (usize, usize) {
+    assert!(num_images > 0 && (1..=num_images).contains(&image), "bad image/team");
+    let base = len / num_images;
+    let extra = len % num_images;
+    let rank = image - 1;
+    // First `extra` shards get one extra sample.
+    let lo = rank * base + rank.min(extra);
+    let hi = lo + base + usize::from(rank < extra);
+    (lo, hi)
+}
+
+/// Mini-batch sampler over a dataset.
+///
+/// Two strategies, both from paper §4:
+/// - [`Batcher::random_start`] — the paper's Listing 12: a random
+///   contiguous window per iteration ("not all data samples will be used
+///   ... and there will be some overlap");
+/// - [`Batcher::shuffled`] — the "more sophisticated shuffling [that]
+///   should be used in production": a random permutation per epoch,
+///   partitioned into disjoint batches.
+#[derive(Debug)]
+pub struct Batcher {
+    n: usize,
+    batch_size: usize,
+    rng: Rng,
+    /// Shuffled order for the epoch-based strategy.
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch_size: usize, seed: u64) -> Self {
+        assert!(batch_size > 0 && batch_size <= n, "batch size must be in 1..=n");
+        Self { n, batch_size, rng: Rng::new(seed), order: Vec::new(), cursor: 0 }
+    }
+
+    /// Number of mini-batches per epoch (the paper's
+    /// `size(tr_labels) / batch_size`).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch_size
+    }
+
+    /// The paper's random contiguous window: returns [start, start+bs).
+    pub fn random_start(&mut self) -> (usize, usize) {
+        let start = self.rng.below(self.n - self.batch_size + 1);
+        (start, start + self.batch_size)
+    }
+
+    /// Next disjoint batch of a shuffled epoch; reshuffles when exhausted.
+    pub fn shuffled(&mut self) -> Vec<usize> {
+        if self.cursor + self.batch_size > self.order.len() {
+            self.order = self.rng.permutation(self.n);
+            self.cursor = 0;
+        }
+        let batch = self.order[self.cursor..self.cursor + self.batch_size].to_vec();
+        self.cursor += self.batch_size;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthesize;
+
+    #[test]
+    fn one_hot_shape_and_content() {
+        let y: Matrix<f32> = label_digits(&[3, 0, 9]);
+        assert_eq!(y.rows(), 10);
+        assert_eq!(y.cols(), 3);
+        assert_eq!(y.get(3, 0), 1.0);
+        assert_eq!(y.get(0, 1), 1.0);
+        assert_eq!(y.get(9, 2), 1.0);
+        let total: f32 = y.as_slice().iter().sum();
+        assert_eq!(total, 3.0);
+    }
+
+    #[test]
+    fn shard_bounds_cover_everything_once() {
+        for len in [0usize, 1, 7, 100, 1201] {
+            for n in [1usize, 2, 3, 5, 12] {
+                let mut covered = 0;
+                let mut prev_hi = 0;
+                let mut sizes = Vec::new();
+                for img in 1..=n {
+                    let (lo, hi) = shard_bounds(len, img, n);
+                    assert_eq!(lo, prev_hi, "shards must be contiguous");
+                    prev_hi = hi;
+                    covered += hi - lo;
+                    sizes.push(hi - lo);
+                }
+                assert_eq!(prev_hi, len);
+                assert_eq!(covered, len);
+                let (mn, mx) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "imbalanced shards: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_shard_matches_bounds() {
+        let d: Dataset<f32> = synthesize(103, 4);
+        let s2 = d.shard(2, 4);
+        let (lo, hi) = shard_bounds(103, 2, 4);
+        assert_eq!(s2.labels, d.labels[lo..hi]);
+    }
+
+    #[test]
+    fn take_and_slice_and_gather() {
+        let d: Dataset<f64> = synthesize(30, 1);
+        assert_eq!(d.take(10).len(), 10);
+        assert_eq!(d.take(100).len(), 30, "take clamps");
+        let s = d.slice(5, 9);
+        assert_eq!(s.labels, d.labels[5..9]);
+        let g = d.gather(&[0, 0, 29]);
+        assert_eq!(g.labels, vec![d.labels[0], d.labels[0], d.labels[29]]);
+        assert_eq!(g.images.col(2), d.images.col(29));
+    }
+
+    #[test]
+    fn idx_round_trip_via_dataset() {
+        let dir = std::env::temp_dir();
+        let ip = dir.join(format!("nrs-ds-img-{}", std::process::id()));
+        let lp = dir.join(format!("nrs-ds-lbl-{}", std::process::id()));
+        let d: Dataset<f32> = synthesize(25, 7);
+        d.to_idx_files(&ip, &lp).unwrap();
+        let back = Dataset::<f32>::from_idx_files(&ip, &lp).unwrap();
+        assert_eq!(back.labels, d.labels);
+        // Quantization to u8 loses at most 1/510 per pixel.
+        assert!(back.images.max_abs_diff(&d.images) <= 0.5 / 255.0 + 1e-6);
+        std::fs::remove_file(ip).unwrap();
+        std::fs::remove_file(lp).unwrap();
+    }
+
+    #[test]
+    fn random_start_batches_stay_in_range() {
+        let mut b = Batcher::new(100, 12, 3);
+        assert_eq!(b.batches_per_epoch(), 8);
+        for _ in 0..200 {
+            let (lo, hi) = b.random_start();
+            assert_eq!(hi - lo, 12);
+            assert!(hi <= 100);
+        }
+    }
+
+    #[test]
+    fn shuffled_batches_partition_each_epoch() {
+        let mut b = Batcher::new(20, 5, 9);
+        let mut seen = Vec::new();
+        for _ in 0..4 {
+            seen.extend(b.shuffled());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>(), "epoch must cover every sample once");
+    }
+
+    #[test]
+    fn full_batch_allowed() {
+        let mut b = Batcher::new(10, 10, 1);
+        assert_eq!(b.random_start(), (0, 10));
+    }
+}

@@ -1,0 +1,145 @@
+//! IDX file format (the MNIST container): reader and writer.
+//!
+//! Format per Yann LeCun's spec: big-endian magic `0x0000_08DD` where `08`
+//! is the u8 element type and `DD` the number of dimensions, followed by
+//! one big-endian u32 per dimension, followed by the raw elements.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Errors from IDX parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum IdxError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("format: {0}")]
+    Format(String),
+}
+
+fn format_err<T>(msg: impl Into<String>) -> Result<T, IdxError> {
+    Err(IdxError::Format(msg.into()))
+}
+
+fn read_u32_be(r: &mut impl Read) -> Result<u32, IdxError> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Read an IDX3 image file: returns (rows, cols, pixels) with pixels in
+/// row-major sample-major order (`n * rows * cols` bytes).
+pub fn read_idx_images(path: impl AsRef<Path>) -> Result<(usize, usize, Vec<u8>), IdxError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let magic = read_u32_be(&mut f)?;
+    if magic != 0x0000_0803 {
+        return format_err(format!("bad image magic 0x{magic:08x} (want 0x00000803)"));
+    }
+    let n = read_u32_be(&mut f)? as usize;
+    let rows = read_u32_be(&mut f)? as usize;
+    let cols = read_u32_be(&mut f)? as usize;
+    if rows == 0 || cols == 0 || rows > 4096 || cols > 4096 {
+        return format_err(format!("implausible image size {rows}x{cols}"));
+    }
+    let mut pixels = vec![0u8; n * rows * cols];
+    f.read_exact(&mut pixels)?;
+    Ok((rows, cols, pixels))
+}
+
+/// Read an IDX1 label file.
+pub fn read_idx_labels(path: impl AsRef<Path>) -> Result<Vec<u8>, IdxError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let magic = read_u32_be(&mut f)?;
+    if magic != 0x0000_0801 {
+        return format_err(format!("bad label magic 0x{magic:08x} (want 0x00000801)"));
+    }
+    let n = read_u32_be(&mut f)? as usize;
+    let mut labels = vec![0u8; n];
+    f.read_exact(&mut labels)?;
+    Ok(labels)
+}
+
+/// Write an IDX3 image file (`pixels.len()` must equal `n*rows*cols`).
+pub fn write_idx_images(
+    path: impl AsRef<Path>,
+    rows: usize,
+    cols: usize,
+    pixels: &[u8],
+) -> Result<(), IdxError> {
+    if rows * cols == 0 || pixels.len() % (rows * cols) != 0 {
+        return format_err("pixel buffer not a multiple of image size");
+    }
+    let n = pixels.len() / (rows * cols);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&0x0000_0803u32.to_be_bytes())?;
+    f.write_all(&(n as u32).to_be_bytes())?;
+    f.write_all(&(rows as u32).to_be_bytes())?;
+    f.write_all(&(cols as u32).to_be_bytes())?;
+    f.write_all(pixels)?;
+    Ok(())
+}
+
+/// Write an IDX1 label file.
+pub fn write_idx_labels(path: impl AsRef<Path>, labels: &[u8]) -> Result<(), IdxError> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&0x0000_0801u32.to_be_bytes())?;
+    f.write_all(&(labels.len() as u32).to_be_bytes())?;
+    f.write_all(labels)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("nrs-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn images_round_trip() {
+        let path = tmp("img");
+        let pixels: Vec<u8> = (0..3 * 4 * 5).map(|i| (i * 7 % 256) as u8).collect();
+        write_idx_images(&path, 4, 5, &pixels).unwrap();
+        let (rows, cols, back) = read_idx_images(&path).unwrap();
+        assert_eq!((rows, cols), (4, 5));
+        assert_eq!(back, pixels);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        let path = tmp("lbl");
+        let labels: Vec<u8> = (0..100).map(|i| (i % 10) as u8).collect();
+        write_idx_labels(&path, &labels).unwrap();
+        assert_eq!(read_idx_labels(&path).unwrap(), labels);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("bad");
+        std::fs::write(&path, 0x0000_0801u32.to_be_bytes()).unwrap();
+        assert!(matches!(read_idx_images(&path), Err(IdxError::Format(_))));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn truncated_file_is_io_error() {
+        let path = tmp("trunc");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        bytes.extend_from_slice(&10u32.to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        bytes.extend_from_slice(&[0u8; 100]); // far too few pixels
+        std::fs::write(&path, bytes).unwrap();
+        assert!(matches!(read_idx_images(&path), Err(IdxError::Io(_))));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn bad_writer_input_rejected() {
+        let path = tmp("badw");
+        assert!(write_idx_images(&path, 28, 28, &[0u8; 100]).is_err());
+    }
+}

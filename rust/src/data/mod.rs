@@ -1,0 +1,83 @@
+//! Datasets: MNIST loading and the synthetic digit corpus (paper §4).
+//!
+//! The paper ships the real MNIST files in its repository. We cannot, so
+//! [`load_or_synthesize`] reads genuine IDX-format MNIST from `data/mnist/`
+//! when present and otherwise generates a deterministic synthetic corpus of
+//! stroke-rendered digits with the same shapes (28×28 greyscale in [0,1],
+//! labels 0–9) and the same loader API as the paper's `load_mnist`.
+
+mod dataset;
+mod idx;
+mod synth;
+
+pub use dataset::{label_digits, shard_bounds, Batcher, Dataset};
+pub use idx::{read_idx_images, read_idx_labels, write_idx_images, write_idx_labels, IdxError};
+pub use synth::{render_digit, synthesize, GlyphStyle};
+
+use crate::tensor::Scalar;
+use std::path::Path;
+
+/// Image side length (28) and flattened size (784), as in MNIST.
+pub const IMAGE_SIDE: usize = 28;
+pub const IMAGE_PIXELS: usize = IMAGE_SIDE * IMAGE_SIDE;
+/// Number of digit classes.
+pub const NUM_CLASSES: usize = 10;
+
+/// Load the train/test datasets the way the paper's `load_mnist` does:
+/// real MNIST IDX files from `dir` if they exist, else a synthetic corpus
+/// of `train_n`/`test_n` samples (deterministic in `seed`).
+///
+/// Returns `(train, test)`.
+pub fn load_or_synthesize<T: Scalar>(
+    dir: impl AsRef<Path>,
+    train_n: usize,
+    test_n: usize,
+    seed: u64,
+) -> (Dataset<T>, Dataset<T>) {
+    let dir = dir.as_ref();
+    let candidates = [
+        ("train-images-idx3-ubyte", "train-labels-idx1-ubyte", "t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte"),
+    ];
+    for (ti, tl, vi, vl) in candidates {
+        let (ti, tl, vi, vl) = (dir.join(ti), dir.join(tl), dir.join(vi), dir.join(vl));
+        if ti.exists() && tl.exists() && vi.exists() && vl.exists() {
+            if let (Ok(train), Ok(test)) =
+                (Dataset::from_idx_files(&ti, &tl), Dataset::from_idx_files(&vi, &vl))
+            {
+                // The paper trains on the first 50k and validates on 10k.
+                return (train.take(train_n), test.take(test_n));
+            }
+        }
+    }
+    (synthesize(train_n, seed), synthesize(test_n, seed ^ 0x5EED_0F5E_ED00_7E57))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn falls_back_to_synthetic_when_dir_missing() {
+        let (train, test) = load_or_synthesize::<f32>("/nonexistent-dir", 100, 40, 7);
+        assert_eq!(train.len(), 100);
+        assert_eq!(test.len(), 40);
+        assert_eq!(train.images.rows(), IMAGE_PIXELS);
+    }
+
+    #[test]
+    fn loads_real_idx_files_when_present() {
+        let dir = std::env::temp_dir().join(format!("nrs-idx-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Write a tiny fake "MNIST" in genuine IDX format.
+        let train: Dataset<f32> = synthesize(20, 1);
+        let test: Dataset<f32> = synthesize(10, 2);
+        train.to_idx_files(dir.join("train-images-idx3-ubyte"), dir.join("train-labels-idx1-ubyte")).unwrap();
+        test.to_idx_files(dir.join("t10k-images-idx3-ubyte"), dir.join("t10k-labels-idx1-ubyte")).unwrap();
+
+        let (tr, te) = load_or_synthesize::<f32>(&dir, 15, 10, 7);
+        assert_eq!(tr.len(), 15);
+        assert_eq!(te.len(), 10);
+        assert_eq!(tr.labels[..15], train.labels[..15]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,239 @@
+//! Synthetic hand-written-digit corpus.
+//!
+//! Substitute for the MNIST files the paper ships in its repository (see
+//! DESIGN.md §5): digits 0–9 rendered as jittered seven-segment glyphs on a
+//! 28×28 canvas with anti-aliased strokes, random translation, scale,
+//! slant, stroke thickness, and pixel noise. Deterministic in the seed.
+//!
+//! The corpus is non-trivially learnable — a 784-30-10 sigmoid network
+//! shows the paper's Figure 3 shape (fast rise, then plateau) — while
+//! requiring no external data.
+
+use super::dataset::Dataset;
+use super::{IMAGE_PIXELS, IMAGE_SIDE};
+use crate::tensor::{Rng, Scalar};
+
+/// Segment endpoints in a unit glyph box (x right, y down, both 0..1).
+/// Classic seven-segment layout: A top, B/C right, D bottom, E/F left,
+/// G middle.
+const SEGMENTS: [((f64, f64), (f64, f64)); 7] = [
+    ((0.0, 0.0), (1.0, 0.0)), // A
+    ((1.0, 0.0), (1.0, 0.5)), // B
+    ((1.0, 0.5), (1.0, 1.0)), // C
+    ((0.0, 1.0), (1.0, 1.0)), // D
+    ((0.0, 0.5), (0.0, 1.0)), // E
+    ((0.0, 0.0), (0.0, 0.5)), // F
+    ((0.0, 0.5), (1.0, 0.5)), // G
+];
+
+/// Which segments light up for each digit.
+const DIGIT_SEGMENTS: [&[usize]; 10] = [
+    &[0, 1, 2, 3, 4, 5],    // 0: ABCDEF
+    &[1, 2],                // 1: BC
+    &[0, 1, 6, 4, 3],       // 2: ABGED
+    &[0, 1, 6, 2, 3],       // 3: ABGCD
+    &[5, 6, 1, 2],          // 4: FGBC
+    &[0, 5, 6, 2, 3],       // 5: AFGCD
+    &[0, 5, 6, 4, 2, 3],    // 6: AFGECD
+    &[0, 1, 2],             // 7: ABC
+    &[0, 1, 2, 3, 4, 5, 6], // 8
+    &[0, 1, 2, 3, 5, 6],    // 9: ABCDFG
+];
+
+/// Per-sample rendering parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GlyphStyle {
+    /// Glyph box centre in pixels.
+    pub cx: f64,
+    pub cy: f64,
+    /// Glyph box half-width / half-height in pixels.
+    pub hw: f64,
+    pub hh: f64,
+    /// Horizontal shear (italic slant), pixels per vertical pixel.
+    pub slant: f64,
+    /// Stroke half-thickness in pixels.
+    pub thickness: f64,
+    /// Per-endpoint jitter amplitude in pixels.
+    pub jitter: f64,
+    /// Additive white-noise amplitude.
+    pub noise: f64,
+}
+
+impl GlyphStyle {
+    /// The canonical, jitter-free style (used by shape tests).
+    pub fn canonical() -> Self {
+        Self {
+            cx: IMAGE_SIDE as f64 / 2.0,
+            cy: IMAGE_SIDE as f64 / 2.0,
+            hw: 5.5,
+            hh: 9.0,
+            slant: 0.0,
+            thickness: 1.1,
+            jitter: 0.0,
+            noise: 0.0,
+        }
+    }
+
+    /// A randomly jittered style.
+    pub fn random(rng: &mut Rng) -> Self {
+        Self {
+            cx: IMAGE_SIDE as f64 / 2.0 + rng.uniform_in(-2.5, 2.5),
+            cy: IMAGE_SIDE as f64 / 2.0 + rng.uniform_in(-2.5, 2.5),
+            hw: 5.5 * rng.uniform_in(0.8, 1.2),
+            hh: 9.0 * rng.uniform_in(0.85, 1.15),
+            slant: rng.uniform_in(-0.15, 0.2),
+            thickness: rng.uniform_in(0.8, 1.6),
+            jitter: 0.6,
+            noise: 0.06,
+        }
+    }
+}
+
+/// Distance from point p to segment (a, b).
+fn dist_to_segment(p: (f64, f64), a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (px, py) = p;
+    let (ax, ay) = a;
+    let (bx, by) = b;
+    let (dx, dy) = (bx - ax, by - ay);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 == 0.0 { 0.0 } else { ((px - ax) * dx + (py - ay) * dy) / len2 };
+    let t = t.clamp(0.0, 1.0);
+    let (qx, qy) = (ax + t * dx, ay + t * dy);
+    ((px - qx).powi(2) + (py - qy).powi(2)).sqrt()
+}
+
+/// Render one digit with the given style (plus optional rng for endpoint
+/// jitter and noise). Returns IMAGE_PIXELS intensities in [0, 1],
+/// column-of-the-dataset order (row-major within the image, like MNIST).
+pub fn render_digit(digit: u8, style: &GlyphStyle, rng: Option<&mut Rng>) -> Vec<f64> {
+    assert!(digit < 10, "digit out of range");
+    let mut local_rng = rng;
+    // Map unit glyph coordinates into pixel space, with slant.
+    let mut endpoints: Vec<((f64, f64), (f64, f64))> = Vec::new();
+    for &seg in DIGIT_SEGMENTS[digit as usize] {
+        let ((x0, y0), (x1, y1)) = SEGMENTS[seg];
+        let mut map = |x: f64, y: f64| {
+            let px = style.cx + (x - 0.5) * 2.0 * style.hw + (0.5 - y) * 2.0 * style.hh * style.slant;
+            let py = style.cy + (y - 0.5) * 2.0 * style.hh;
+            let (jx, jy) = match local_rng.as_deref_mut() {
+                Some(r) if style.jitter > 0.0 => {
+                    (r.uniform_in(-style.jitter, style.jitter), r.uniform_in(-style.jitter, style.jitter))
+                }
+                _ => (0.0, 0.0),
+            };
+            (px + jx, py + jy)
+        };
+        endpoints.push((map(x0, y0), map(x1, y1)));
+    }
+
+    let mut img = vec![0.0f64; IMAGE_PIXELS];
+    for row in 0..IMAGE_SIDE {
+        for col in 0..IMAGE_SIDE {
+            let p = (col as f64 + 0.5, row as f64 + 0.5);
+            let mut d = f64::INFINITY;
+            for &(a, b) in &endpoints {
+                d = d.min(dist_to_segment(p, a, b));
+            }
+            // Anti-aliased stroke: 1 inside, smooth falloff over ~1px.
+            let v = (style.thickness + 0.5 - d).clamp(0.0, 1.0);
+            img[row * IMAGE_SIDE + col] = v;
+        }
+    }
+
+    if let Some(r) = local_rng {
+        if style.noise > 0.0 {
+            for v in &mut img {
+                *v = (*v + r.normal() * style.noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// Generate a labeled dataset of `n` jittered digits, deterministic in
+/// `seed`. Labels are balanced round-robin, then shuffled.
+pub fn synthesize<T: Scalar>(n: usize, seed: u64) -> Dataset<T> {
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    rng.shuffle(&mut labels);
+    let mut images = crate::tensor::Matrix::<T>::zeros(IMAGE_PIXELS, n);
+    for (j, &digit) in labels.iter().enumerate() {
+        let style = GlyphStyle::random(&mut rng);
+        let img = render_digit(digit, &style, Some(&mut rng));
+        let col = images.col_mut(j);
+        for (dst, &v) in col.iter_mut().zip(&img) {
+            *dst = T::from_f64(v);
+        }
+    }
+    Dataset { images, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_digits_are_distinct() {
+        let style = GlyphStyle::canonical();
+        let renders: Vec<Vec<f64>> =
+            (0..10).map(|d| render_digit(d, &style, None)).collect();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let diff: f64 =
+                    renders[a].iter().zip(&renders[b]).map(|(x, y)| (x - y).abs()).sum();
+                assert!(diff > 5.0, "digits {a} and {b} look identical (diff={diff})");
+            }
+        }
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let mut rng = Rng::new(3);
+        for d in 0..10 {
+            let style = GlyphStyle::random(&mut rng);
+            let img = render_digit(d, &style, Some(&mut rng));
+            assert_eq!(img.len(), IMAGE_PIXELS);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // The glyph must actually draw something.
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 10.0, "digit {d} rendered blank (ink={ink})");
+        }
+    }
+
+    #[test]
+    fn synthesis_is_deterministic() {
+        let a: Dataset<f32> = synthesize(50, 99);
+        let b: Dataset<f32> = synthesize(50, 99);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images.as_slice(), b.images.as_slice());
+        let c: Dataset<f32> = synthesize(50, 100);
+        assert_ne!(a.images.as_slice(), c.images.as_slice());
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let d: Dataset<f64> = synthesize(1000, 5);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts, [100; 10]);
+    }
+
+    #[test]
+    fn same_digit_varies_between_samples() {
+        let d: Dataset<f64> = synthesize(200, 8);
+        let ones: Vec<usize> =
+            (0..200).filter(|&j| d.labels[j] == 1).take(2, ).collect();
+        let a = d.images.col(ones[0]);
+        let b = d.images.col(ones[1]);
+        let diff: f64 = a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0, "jitter should make samples differ (diff={diff})");
+    }
+
+    #[test]
+    #[should_panic(expected = "digit out of range")]
+    fn bad_digit_panics() {
+        render_digit(10, &GlyphStyle::canonical(), None);
+    }
+}

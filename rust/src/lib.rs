@@ -1,0 +1,25 @@
+//! # neural-rs
+//!
+//! A parallel Rust + JAX + Pallas framework for neural networks and deep
+//! learning — a reproduction of the *neural-fortran* paper (Curcic, 2019)
+//! as a three-layer Rust/JAX/Pallas stack.
+//!
+//! - Layer 1 (build time): Pallas dense-layer kernels (`python/compile/kernels/`).
+//! - Layer 2 (build time): JAX MLP forward/gradient, AOT-lowered to HLO text.
+//! - Layer 3 (runtime, this crate): data-parallel training coordinator built
+//!   on Fortran-2018-style collectives (`co_sum`, `co_broadcast`), a PJRT
+//!   execution engine, and a native Rust reference engine.
+
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+pub use nn::{Activation, Gradients, Network};
+pub use tensor::Matrix;

@@ -1,0 +1,353 @@
+//! `neural-rs` — CLI for the parallel Rust + JAX + Pallas neural-network
+//! framework (neural-fortran reproduction).
+//!
+//! Subcommands:
+//!   train      train a network (serial, shared-memory parallel, or TCP)
+//!   eval       evaluate a saved network on a test set
+//!   scaling    strong-scaling sweep (Table 2 / Figures 4-5)
+//!   gen-data   write a synthetic digit dataset as MNIST IDX files
+//!   inspect    list AOT artifact configurations
+//!   help       this text
+
+use neural_rs::collectives::{Communicator, TcpComm, TcpTopology};
+use neural_rs::config::{CommKind, ExperimentConfig};
+use neural_rs::coordinator::{
+    train_parallel, BatchStrategy, EngineKind, ParallelSpec, Trainer,
+};
+use neural_rs::data::{load_or_synthesize, synthesize, Dataset};
+use neural_rs::metrics::{peak_rss_bytes, Stopwatch};
+use neural_rs::nn::{Activation, Network};
+use neural_rs::runtime::{Engine, Manifest};
+use neural_rs::tensor::Summary;
+use neural_rs::util::cli::Args;
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const VALUE_FLAGS: &[&str] = &[
+    "config", "dims", "activation", "eta", "batch-size", "epochs", "seed", "batch-seed",
+    "strategy", "optimizer", "train-n", "test-n", "data-dir", "data-seed", "images", "algo", "comm",
+    "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
+    "runs", "max-images", "out", "n",
+];
+const SWITCH_FLAGS: &[&str] = &["quiet", "eval-each-epoch", "help"];
+
+const HELP: &str = "neural-rs — parallel neural networks (neural-fortran reproduction)
+
+USAGE: neural-rs <subcommand> [flags]
+
+SUBCOMMANDS
+  train       train a network
+  eval        evaluate a saved network (--load FILE)
+  scaling     strong-scaling sweep (--max-images N --runs R)
+  gen-data    write synthetic digits as IDX files (--out DIR --n COUNT)
+  inspect     list AOT artifact configurations (--artifacts DIR)
+
+COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
+  --config FILE          TOML experiment file (CLI flags override it)
+  --dims 784,30,10       layer sizes
+  --activation sigmoid   gaussian|relu|sigmoid|step|tanh|leaky_relu|elu
+  --eta 3.0              learning rate
+  --batch-size 1000      global mini-batch
+  --epochs 30
+  --strategy random_start|shuffled
+  --optimizer sgd|momentum[:mu]|nesterov[:mu]
+  --train-n 50000 --test-n 10000
+  --data-dir data/mnist  (real MNIST IDX if present, else synthetic)
+  --images N             parallel images (default 1)
+  --algo tree            flat|tree|chunked collective-sum schedule
+  --engine pjrt|native   gradient engine (default pjrt)
+  --artifacts artifacts  AOT artifact root
+  --artifact-config mnist
+  --save FILE            save the trained network
+  --comm local|tcp       communicator backend
+  --tcp-role leader|worker --tcp-addr HOST:PORT --image K   (tcp mode)
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, VALUE_FLAGS, SWITCH_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.subcommand.as_deref() == Some("help") {
+        println!("{HELP}");
+        return;
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("scaling") => cmd_scaling(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("inspect") => cmd_inspect(&args),
+        other => {
+            eprintln!("error: unknown subcommand {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+type AnyError = Box<dyn std::error::Error>;
+
+/// Build an ExperimentConfig from --config file + CLI overrides.
+fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(d) = args.get("dims") {
+        cfg.dims = d
+            .split(',')
+            .map(|t| t.trim().parse::<usize>())
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(a) = args.get("activation") {
+        cfg.activation = Activation::parse(a).ok_or(format!("unknown activation '{a}'"))?;
+    }
+    cfg.eta = args.get_parsed("eta", cfg.eta)?;
+    cfg.batch_size = args.get_parsed("batch-size", cfg.batch_size)?;
+    cfg.epochs = args.get_parsed("epochs", cfg.epochs)?;
+    cfg.seed = args.get_parsed("seed", cfg.seed)?;
+    cfg.batch_seed = args.get_parsed("batch-seed", cfg.batch_seed)?;
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = BatchStrategy::parse(s).ok_or(format!("unknown strategy '{s}'"))?;
+    }
+    if let Some(o) = args.get("optimizer") {
+        cfg.optimizer = neural_rs::nn::OptimizerKind::parse(o)
+            .ok_or(format!("unknown optimizer '{o}'"))?;
+    }
+    cfg.train_n = args.get_parsed("train-n", cfg.train_n)?;
+    cfg.test_n = args.get_parsed("test-n", cfg.test_n)?;
+    cfg.data_seed = args.get_parsed("data-seed", cfg.data_seed)?;
+    if let Some(d) = args.get("data-dir") {
+        cfg.data_dir = PathBuf::from(d);
+    }
+    cfg.images = args.get_parsed("images", cfg.images)?;
+    if let Some(a) = args.get("algo") {
+        cfg.algo = neural_rs::collectives::ReduceAlgo::parse(a)
+            .ok_or(format!("unknown algo '{a}'"))?;
+    }
+    if let Some(c) = args.get("comm") {
+        cfg.comm = CommKind::parse(c).ok_or(format!("unknown comm '{c}'"))?;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e).ok_or(format!("unknown engine '{e}'"))?;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(a) = args.get("artifact-config") {
+        cfg.artifact_config = a.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load_data(cfg: &ExperimentConfig) -> (Dataset<f32>, Dataset<f32>) {
+    load_or_synthesize::<f32>(&cfg.data_dir, cfg.train_n, cfg.test_n, cfg.data_seed)
+}
+
+fn cmd_train(args: &Args) -> Result<(), AnyError> {
+    let cfg = config_from_args(args)?;
+    match cfg.comm {
+        CommKind::Local => cmd_train_local(args, &cfg),
+        CommKind::Tcp => cmd_train_tcp(args, &cfg),
+    }
+}
+
+fn cmd_train_local(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
+    let quiet = args.has("quiet");
+    let (train, test) = load_data(cfg);
+    if !quiet {
+        println!(
+            "# {} | dims {:?} {} | eta {} batch {} epochs {} | {} images ({}) | engine {}",
+            cfg.name,
+            cfg.dims,
+            cfg.activation,
+            cfg.eta,
+            cfg.batch_size,
+            cfg.epochs,
+            cfg.images,
+            cfg.algo.name(),
+            cfg.engine.name(),
+        );
+    }
+    let spec = ParallelSpec {
+        images: cfg.images,
+        algo: cfg.algo,
+        opts: cfg.trainer_options(),
+        engine: cfg.engine,
+        artifacts: Some((cfg.artifacts_dir.clone(), cfg.artifact_config.clone())),
+        eval_each_epoch: !quiet || args.has("eval-each-epoch"),
+    };
+    let sw = Stopwatch::start();
+    let report = train_parallel(&spec, &train, &test);
+    let total_s = sw.elapsed_s();
+
+    println!("Initial accuracy: {:5.2} %", report.initial_accuracy * 100.0);
+    if spec.eval_each_epoch {
+        for (i, acc) in report.epoch_accuracy.iter().enumerate() {
+            println!("Epoch {:2} done, Accuracy: {:5.2} %", i + 1, acc * 100.0);
+        }
+    } else {
+        println!("Final accuracy: {:5.2} %", report.final_accuracy() * 100.0);
+    }
+    println!(
+        "# training {:.3} s (total {total_s:.3} s) | grad {:.3} s comm {:.3} s update {:.3} s | {} batches",
+        report.train_s, report.stats.grad_s, report.stats.comm_s, report.stats.update_s,
+        report.stats.batches,
+    );
+    if let Some(rss) = peak_rss_bytes() {
+        println!("# peak rss {:.0} MB", rss as f64 / 1e6);
+    }
+    if let Some(path) = args.get("save") {
+        report.net.save(path)?;
+        println!("# saved network to {path}");
+    }
+    Ok(())
+}
+
+/// Distributed (one process per image) training over TCP.
+fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
+    let addr: SocketAddr = args.get_or("tcp-addr", "127.0.0.1:47000").parse()?;
+    let role = args.get_or("tcp-role", "leader");
+    let timeout = Duration::from_secs(120);
+    let comm = match role {
+        "leader" => TcpTopology::leader(addr, cfg.images, timeout)?,
+        "worker" => {
+            let image: usize = args
+                .get("image")
+                .ok_or("worker needs --image K (2..=images)")?
+                .parse()?;
+            TcpTopology::worker(addr, image, cfg.images, timeout)?
+        }
+        other => return Err(format!("bad --tcp-role '{other}'").into()),
+    };
+    run_one_image(&comm, cfg, args)
+}
+
+/// The per-image body shared by TCP leader and workers.
+fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<(), AnyError> {
+    let (train, test) = load_data(cfg);
+    let engine = match cfg.engine {
+        EngineKind::Pjrt => {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            let meta = manifest.get(&cfg.artifact_config)?;
+            let eng = Engine::new()?;
+            Some(eng.load(meta)?)
+        }
+        EngineKind::Native => None,
+    };
+    let mut trainer = Trainer::new(comm, cfg.trainer_options(), engine);
+    let is_leader = comm.this_image() == 1;
+    let initial = trainer.accuracy(&test);
+    if is_leader {
+        println!("Initial accuracy: {:5.2} %", initial * 100.0);
+    }
+    let sw = Stopwatch::start();
+    for epoch in 1..=cfg.epochs {
+        trainer.train_epoch(&train);
+        let acc = trainer.accuracy(&test);
+        if is_leader {
+            println!("Epoch {epoch:2} done, Accuracy: {:5.2} %", acc * 100.0);
+        }
+    }
+    if is_leader {
+        println!("# training+eval {:.3} s on {} images (tcp)", sw.elapsed_s(), cfg.images);
+        if let Some(path) = args.get("save") {
+            trainer.net.save(path)?;
+            println!("# saved network to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<(), AnyError> {
+    let path = args.get("load").ok_or("eval needs --load FILE")?;
+    let net = Network::<f32>::load(path)?;
+    let mut cfg = config_from_args(args)?;
+    cfg.dims = net.dims().to_vec();
+    let (_, test) = load_data(&cfg);
+    let acc = net.accuracy(&test.images, &test.one_hot());
+    println!("{path}: accuracy {:5.2} % on {} samples", acc * 100.0, test.len());
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args) -> Result<(), AnyError> {
+    let cfg = config_from_args(args)?;
+    let max_images: usize = args.get_parsed("max-images", 12)?;
+    let runs: usize = args.get_parsed("runs", 3)?;
+    let (train, test) = load_data(&cfg);
+    println!(
+        "# scaling sweep: dims {:?} batch {} epochs {} engine {} ({} runs each)",
+        cfg.dims, cfg.batch_size, cfg.epochs, cfg.engine.name(), runs
+    );
+    let mut table =
+        neural_rs::metrics::Table::new(&["Cores", "Elapsed (s)", "Parallel efficiency"]);
+    let mut t1 = 0.0f64;
+    let image_counts: Vec<usize> =
+        (1..=max_images).filter(|&n| n <= 2 || n % 2 == 0 || n == max_images).collect();
+    for &n in &image_counts {
+        let spec = ParallelSpec {
+            images: n,
+            algo: cfg.algo,
+            opts: cfg.trainer_options(),
+            engine: cfg.engine,
+            artifacts: Some((cfg.artifacts_dir.clone(), cfg.artifact_config.clone())),
+            eval_each_epoch: false,
+        };
+        let times: Vec<f64> =
+            (0..runs).map(|_| train_parallel(&spec, &train, &test).train_s).collect();
+        let s = Summary::of(&times);
+        if n == 1 {
+            t1 = s.mean;
+        }
+        let pe = t1 / (n as f64 * s.mean);
+        table.row(&[
+            n.to_string(),
+            neural_rs::metrics::Table::fmt_summary(&s),
+            format!("{pe:.3}"),
+        ]);
+        println!("images={n}: {} (PE {pe:.3})", neural_rs::metrics::Table::fmt_summary(&s));
+    }
+    println!("\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), AnyError> {
+    let out = PathBuf::from(args.get_or("out", "data/mnist"));
+    let n: usize = args.get_parsed("n", 60_000)?;
+    let test_n = (n / 6).max(1);
+    let seed: u64 = args.get_parsed("seed", 42)?;
+    std::fs::create_dir_all(&out)?;
+    let train: Dataset<f32> = synthesize(n, seed);
+    let test: Dataset<f32> = synthesize(test_n, seed ^ 0x5EED_0F5E_ED00_7E57);
+    train.to_idx_files(out.join("train-images-idx3-ubyte"), out.join("train-labels-idx1-ubyte"))?;
+    test.to_idx_files(out.join("t10k-images-idx3-ubyte"), out.join("t10k-labels-idx1-ubyte"))?;
+    println!("wrote {n} train + {test_n} test synthetic digits to {}", out.display());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), AnyError> {
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&root)?;
+    println!("artifacts at {} ({} configs):", root.display(), manifest.configs.len());
+    for (name, meta) in &manifest.configs {
+        println!(
+            "  {name:12} dims {:?} act {} micro-batch {} dtype {} entries [{}]",
+            meta.dims,
+            meta.activation,
+            meta.micro_batch,
+            meta.dtype,
+            meta.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Measurement utilities for the benchmark harness: wall timers, repeated
+//! runs with mean ± std (the paper reports 5-run statistics), RSS memory
+//! probing (Table 1's memory column), and markdown table emission.
+
+use crate::tensor::Summary;
+use std::time::Instant;
+
+/// A simple wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.elapsed_s();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Run `f` `n` times, returning per-run wall times (seconds). `f` receives
+/// the run index. A warmup run can be requested (not measured).
+pub fn time_runs(n: usize, warmup: bool, mut f: impl FnMut(usize)) -> Vec<f64> {
+    if warmup {
+        f(usize::MAX);
+    }
+    (0..n)
+        .map(|i| {
+            let sw = Stopwatch::start();
+            f(i);
+            sw.elapsed_s()
+        })
+        .collect()
+}
+
+/// Resident set size of this process in bytes (Linux), or None elsewhere.
+pub fn rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Peak resident set size in bytes (VmHWM), the fairer Table 1 metric.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Markdown table builder for bench reports (the repo's tables mirror the
+/// paper's).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Format a measurement like the paper: "12.068 ± 0.136".
+    pub fn fmt_summary(s: &Summary) -> String {
+        format!("{:.3} ± {:.3}", s.mean, s.std)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t = sw.elapsed_s();
+        assert!(t >= 0.015, "t={t}");
+    }
+
+    #[test]
+    fn time_runs_counts_and_warmup() {
+        let mut calls = Vec::new();
+        let times = time_runs(3, true, |i| calls.push(i));
+        assert_eq!(times.len(), 3);
+        assert_eq!(calls, vec![usize::MAX, 0, 1, 2]);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn rss_is_plausible_on_linux() {
+        if let Some(rss) = rss_bytes() {
+            assert!(rss > 1 << 20, "rss {rss} should exceed 1 MiB");
+            let peak = peak_rss_bytes().unwrap();
+            assert!(peak >= rss, "peak {peak} >= current {rss}");
+        }
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["Cores", "Elapsed (s)"]);
+        t.row(&["1".into(), "12.068 ± 0.136".into()]);
+        t.row(&["12".into(), "1.581 ± 0.046".into()]);
+        let out = t.render();
+        assert!(out.contains("| Cores |"));
+        assert!(out.contains("| 12    |"));
+        assert_eq!(out.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        Table::new(&["a"]).row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Activation functions and their derivatives.
+//!
+//! The paper ships Gaussian, RELU, sigmoid, step, and tangent hyperbolic
+//! activations; the network stores a procedure pointer for the function and
+//! one for its derivative, selected by name at construction (Listing 2).
+//! Here the same selection is an enum, parsed from the same names.
+
+use crate::tensor::Scalar;
+
+/// The activation functions supported by neural-fortran, plus the
+/// leaky-RELU and ELU extensions (listed as future work in the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Gaussian,
+    Relu,
+    Sigmoid,
+    Step,
+    Tanh,
+    /// Extension: leaky RELU with slope 0.01 for x < 0.
+    LeakyRelu,
+    /// Extension: exponential linear unit (alpha = 1).
+    Elu,
+}
+
+impl Activation {
+    /// All supported activations (for sweeps and tests).
+    pub const ALL: [Activation; 7] = [
+        Activation::Gaussian,
+        Activation::Relu,
+        Activation::Sigmoid,
+        Activation::Step,
+        Activation::Tanh,
+        Activation::LeakyRelu,
+        Activation::Elu,
+    ];
+
+    /// Parse the paper's activation names (case-insensitive), as in
+    /// `network_type([3, 5, 2], 'tanh')`.
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "gaussian" => Some(Self::Gaussian),
+            "relu" => Some(Self::Relu),
+            "sigmoid" => Some(Self::Sigmoid),
+            "step" => Some(Self::Step),
+            "tanh" => Some(Self::Tanh),
+            "leaky_relu" | "leakyrelu" => Some(Self::LeakyRelu),
+            "elu" => Some(Self::Elu),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (round-trips through [`Activation::parse`]; used in
+    /// network files and artifact manifests).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Gaussian => "gaussian",
+            Self::Relu => "relu",
+            Self::Sigmoid => "sigmoid",
+            Self::Step => "step",
+            Self::Tanh => "tanh",
+            Self::LeakyRelu => "leaky_relu",
+            Self::Elu => "elu",
+        }
+    }
+
+    /// σ(x).
+    pub fn apply<T: Scalar>(&self, x: T) -> T {
+        match self {
+            Self::Gaussian => (-(x * x)).exp(),
+            Self::Relu => {
+                if x > T::ZERO {
+                    x
+                } else {
+                    T::ZERO
+                }
+            }
+            Self::Sigmoid => T::ONE / (T::ONE + (-x).exp()),
+            Self::Step => {
+                if x > T::ZERO {
+                    T::ONE
+                } else {
+                    T::ZERO
+                }
+            }
+            Self::Tanh => x.tanh(),
+            Self::LeakyRelu => {
+                if x > T::ZERO {
+                    x
+                } else {
+                    T::from_f64(0.01) * x
+                }
+            }
+            Self::Elu => {
+                if x > T::ZERO {
+                    x
+                } else {
+                    x.exp() - T::ONE
+                }
+            }
+        }
+    }
+
+    /// σ'(x).
+    pub fn prime<T: Scalar>(&self, x: T) -> T {
+        match self {
+            Self::Gaussian => {
+                let two = T::from_f64(2.0);
+                -two * x * (-(x * x)).exp()
+            }
+            Self::Relu => {
+                if x > T::ZERO {
+                    T::ONE
+                } else {
+                    T::ZERO
+                }
+            }
+            Self::Sigmoid => {
+                let s = self.apply(x);
+                s * (T::ONE - s)
+            }
+            // The paper defines step_prime = 0 (the step function is not
+            // trainable; provided for completeness, like neural-fortran).
+            Self::Step => T::ZERO,
+            Self::Tanh => {
+                let t = x.tanh();
+                T::ONE - t * t
+            }
+            Self::LeakyRelu => {
+                if x > T::ZERO {
+                    T::ONE
+                } else {
+                    T::from_f64(0.01)
+                }
+            }
+            Self::Elu => {
+                if x > T::ZERO {
+                    T::ONE
+                } else {
+                    x.exp()
+                }
+            }
+        }
+    }
+
+    /// Apply σ elementwise into a new vector.
+    pub fn apply_vec<T: Scalar>(&self, xs: &[T]) -> Vec<T> {
+        xs.iter().map(|&x| self.apply(x)).collect()
+    }
+
+    /// Apply σ' elementwise into a new vector.
+    pub fn prime_vec<T: Scalar>(&self, xs: &[T]) -> Vec<T> {
+        xs.iter().map(|&x| self.prime(x)).collect()
+    }
+}
+
+impl std::fmt::Display for Activation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Activation {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| format!("unknown activation '{s}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for act in Activation::ALL {
+            assert_eq!(Activation::parse(act.name()), Some(act));
+        }
+        assert_eq!(Activation::parse("TANH"), Some(Activation::Tanh));
+        assert_eq!(Activation::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sigmoid_values() {
+        let s = Activation::Sigmoid;
+        assert!((s.apply(0.0f64) - 0.5).abs() < 1e-12);
+        assert!(s.apply(10.0f64) > 0.9999);
+        assert!(s.apply(-10.0f64) < 0.0001);
+        // σ'(0) = 0.25
+        assert!((s.prime(0.0f64) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tanh_values() {
+        let t = Activation::Tanh;
+        assert_eq!(t.apply(0.0f64), 0.0);
+        assert!((t.prime(0.0f64) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relu_family() {
+        let r = Activation::Relu;
+        assert_eq!(r.apply(-1.0f64), 0.0);
+        assert_eq!(r.apply(2.5f64), 2.5);
+        assert_eq!(r.prime(-1.0f64), 0.0);
+        assert_eq!(r.prime(1.0f64), 1.0);
+
+        let l = Activation::LeakyRelu;
+        assert!((l.apply(-1.0f64) + 0.01).abs() < 1e-12);
+        assert_eq!(l.prime(3.0f64), 1.0);
+
+        let e = Activation::Elu;
+        assert!((e.apply(-1.0f64) - (f64::exp(-1.0) - 1.0)).abs() < 1e-12);
+        assert_eq!(e.apply(2.0f64), 2.0);
+    }
+
+    #[test]
+    fn gaussian_and_step() {
+        let g = Activation::Gaussian;
+        assert_eq!(g.apply(0.0f64), 1.0);
+        assert!((g.apply(1.0f64) - f64::exp(-1.0)).abs() < 1e-12);
+        assert_eq!(g.prime(0.0f64), 0.0);
+
+        let st = Activation::Step;
+        assert_eq!(st.apply(0.5f64), 1.0);
+        assert_eq!(st.apply(-0.5f64), 0.0);
+        assert_eq!(st.prime(123.0f64), 0.0);
+    }
+
+    /// σ' matches a central finite difference for all smooth activations.
+    #[test]
+    fn derivatives_match_finite_differences() {
+        let smooth =
+            [Activation::Gaussian, Activation::Sigmoid, Activation::Tanh, Activation::Elu];
+        let h = 1e-6f64;
+        for act in smooth {
+            for &x in &[-2.0, -0.5, 0.1, 0.9, 2.0] {
+                let fd = (act.apply(x + h) - act.apply(x - h)) / (2.0 * h);
+                let an = act.prime(x);
+                assert!(
+                    (fd - an).abs() < 1e-5,
+                    "{act}: x={x} fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_and_f64_agree() {
+        for act in Activation::ALL {
+            for &x in &[-1.5, 0.0, 0.7] {
+                let a64 = act.apply(x);
+                let a32 = act.apply(x as f32) as f64;
+                assert!((a64 - a32).abs() < 1e-6, "{act} at {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn vec_forms() {
+        let xs = [-1.0f64, 0.0, 1.0];
+        let r = Activation::Relu;
+        assert_eq!(r.apply_vec(&xs), vec![0.0, 0.0, 1.0]);
+        assert_eq!(r.prime_vec(&xs), vec![0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,57 @@
+//! The quadratic cost function used by the paper:
+//! C = ½ Σᵢ (aᵢ − yᵢ)², with ∂C/∂a = (a − y).
+
+use crate::tensor::Scalar;
+
+/// C(a, y) = ½ Σ (a − y)².
+pub fn quadratic_cost<T: Scalar>(a: &[T], y: &[T]) -> T {
+    assert_eq!(a.len(), y.len(), "cost shape mismatch");
+    let half = T::from_f64(0.5);
+    a.iter().zip(y).fold(T::ZERO, |acc, (&ai, &yi)| {
+        let d = ai - yi;
+        acc + half * d * d
+    })
+}
+
+/// ∂C/∂a = (a − y), elementwise.
+pub fn quadratic_cost_prime<T: Scalar>(a: &[T], y: &[T]) -> Vec<T> {
+    assert_eq!(a.len(), y.len(), "cost shape mismatch");
+    a.iter().zip(y).map(|(&ai, &yi)| ai - yi).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_at_target() {
+        assert_eq!(quadratic_cost(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        // ½((1-0)² + (0-2)²) = ½(1+4) = 2.5
+        assert_eq!(quadratic_cost(&[1.0, 0.0], &[0.0, 2.0]), 2.5);
+    }
+
+    #[test]
+    fn prime_is_residual() {
+        assert_eq!(quadratic_cost_prime(&[1.0, 0.0], &[0.0, 2.0]), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn prime_matches_finite_difference() {
+        let y = [0.3f64, -0.7, 1.1];
+        let a = [0.5f64, 0.2, -0.4];
+        let g = quadratic_cost_prime(&a, &y);
+        let h = 1e-6;
+        for i in 0..a.len() {
+            let mut ap = a;
+            let mut am = a;
+            ap[i] += h;
+            am[i] -= h;
+            let fd = (quadratic_cost(&ap, &y) - quadratic_cost(&am, &y)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Weight and bias tendencies (`dw`, `db`) — the paper's `array2d`/`array1d`
+//! wrapper types, plus the flat view used by the collective sum.
+//!
+//! In neural-fortran the tendencies are arrays-of-derived-types summed
+//! across images by `dw_co_sum`/`db_co_sum` (thin wrappers over `co_sum`).
+//! Here [`Gradients`] owns the same structure and exposes
+//! [`Gradients::flatten_into`] / [`Gradients::unflatten_from`] so a single
+//! contiguous buffer can be reduced by any [`crate::collectives`] backend.
+
+use crate::tensor::{Matrix, Scalar};
+
+/// Per-layer weight and bias tendencies for a network of given dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Gradients<T = f32> {
+    /// dw[l] has shape dims[l] × dims[l+1] (outgoing weights of layer l).
+    pub dw: Vec<Matrix<T>>,
+    /// db[l] has length dims[l]. db[0] is unused (input layer has no bias
+    /// update) but kept for index parity with the paper's Listing 7.
+    pub db: Vec<Vec<T>>,
+}
+
+impl<T: Scalar> Gradients<T> {
+    /// Zero gradients for a network with the given layer sizes.
+    pub fn zeros(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "network needs at least input and output layers");
+        let mut dw = Vec::with_capacity(dims.len() - 1);
+        for l in 0..dims.len() - 1 {
+            dw.push(Matrix::zeros(dims[l], dims[l + 1]));
+        }
+        let db = dims.iter().map(|&n| vec![T::ZERO; n]).collect();
+        Self { dw, db }
+    }
+
+    /// Layer sizes this gradient set was built for.
+    pub fn dims(&self) -> Vec<usize> {
+        self.db.iter().map(|b| b.len()).collect()
+    }
+
+    /// Total number of scalar entries (size of the flat view).
+    pub fn flat_len(&self) -> usize {
+        self.dw.iter().map(|m| m.len()).sum::<usize>()
+            + self.db.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Reset all tendencies to zero (buffer reuse in the training loop).
+    pub fn zero_out(&mut self) {
+        for m in &mut self.dw {
+            m.fill_zero();
+        }
+        for b in &mut self.db {
+            b.fill(T::ZERO);
+        }
+    }
+
+    /// Accumulate another gradient set: `self += other`.
+    pub fn add_assign(&mut self, other: &Gradients<T>) {
+        assert_eq!(self.dims(), other.dims(), "gradient dims mismatch");
+        for (a, b) in self.dw.iter_mut().zip(&other.dw) {
+            a.add_assign(b);
+        }
+        for (a, b) in self.db.iter_mut().zip(&other.db) {
+            for (x, &y) in a.iter_mut().zip(b) {
+                *x = *x + y;
+            }
+        }
+    }
+
+    /// Scale all tendencies by a constant (e.g. 1/batch_size).
+    pub fn scale(&mut self, s: T) {
+        for m in &mut self.dw {
+            m.map_inplace(|v| v * s);
+        }
+        for b in &mut self.db {
+            for v in b.iter_mut() {
+                *v = *v * s;
+            }
+        }
+    }
+
+    /// Serialize into a caller-provided flat buffer (must be `flat_len()`
+    /// long). Layout: all dw matrices in layer order (column-major), then
+    /// all db vectors in layer order.
+    pub fn flatten_into(&self, out: &mut [T]) {
+        assert_eq!(out.len(), self.flat_len(), "flat buffer size mismatch");
+        let mut off = 0;
+        for m in &self.dw {
+            out[off..off + m.len()].copy_from_slice(m.as_slice());
+            off += m.len();
+        }
+        for b in &self.db {
+            out[off..off + b.len()].copy_from_slice(b);
+            off += b.len();
+        }
+    }
+
+    /// Inverse of [`Gradients::flatten_into`].
+    pub fn unflatten_from(&mut self, flat: &[T]) {
+        assert_eq!(flat.len(), self.flat_len(), "flat buffer size mismatch");
+        let mut off = 0;
+        for m in &mut self.dw {
+            let n = m.len();
+            m.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        for b in &mut self.db {
+            let n = b.len();
+            b.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// Convenience: flatten into a fresh Vec.
+    pub fn to_flat(&self) -> Vec<T> {
+        let mut v = vec![T::ZERO; self.flat_len()];
+        self.flatten_into(&mut v);
+        v
+    }
+
+    /// Largest |entry| — used in tests and convergence diagnostics.
+    pub fn max_abs(&self) -> f64 {
+        let mut m = 0.0f64;
+        for w in &self.dw {
+            for &v in w.as_slice() {
+                m = m.max(v.abs().to_f64());
+            }
+        }
+        for b in &self.db {
+            for &v in b {
+                m = m.max(v.abs().to_f64());
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shapes() {
+        let g: Gradients<f64> = Gradients::zeros(&[4, 3, 2]);
+        assert_eq!(g.dw.len(), 2);
+        assert_eq!(g.db.len(), 3);
+        assert_eq!(g.dw[0].rows(), 4);
+        assert_eq!(g.dw[0].cols(), 3);
+        assert_eq!(g.dw[1].rows(), 3);
+        assert_eq!(g.dw[1].cols(), 2);
+        assert_eq!(g.flat_len(), 12 + 6 + 4 + 3 + 2);
+        assert_eq!(g.dims(), vec![4, 3, 2]);
+    }
+
+    #[test]
+    fn flatten_round_trip() {
+        let mut g: Gradients<f64> = Gradients::zeros(&[2, 3]);
+        g.dw[0].set(1, 2, 7.0);
+        g.db[1][0] = -3.0;
+        let flat = g.to_flat();
+        let mut h: Gradients<f64> = Gradients::zeros(&[2, 3]);
+        h.unflatten_from(&flat);
+        assert_eq!(g, h);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a: Gradients<f64> = Gradients::zeros(&[2, 2]);
+        let mut b: Gradients<f64> = Gradients::zeros(&[2, 2]);
+        a.dw[0].set(0, 0, 1.0);
+        b.dw[0].set(0, 0, 2.0);
+        b.db[1][1] = 4.0;
+        a.add_assign(&b);
+        assert_eq!(a.dw[0].get(0, 0), 3.0);
+        assert_eq!(a.db[1][1], 4.0);
+        a.scale(0.5);
+        assert_eq!(a.dw[0].get(0, 0), 1.5);
+        assert_eq!(a.db[1][1], 2.0);
+        assert_eq!(a.max_abs(), 2.0);
+        a.zero_out();
+        assert_eq!(a.max_abs(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input and output")]
+    fn single_layer_rejected() {
+        let _: Gradients<f32> = Gradients::zeros(&[5]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Saving and loading networks to and from file (a paper §2 feature).
+//!
+//! Text format modeled on neural-fortran's `save`/`load`:
+//!
+//! ```text
+//! neural-rs network v1
+//! dims 784 30 10
+//! activation sigmoid
+//! dtype f32
+//! biases <layer> <values...>        # one line per layer (skipping input)
+//! weights <layer> <rows> <cols> <column-major values...>
+//! ```
+//!
+//! Values are written with enough digits to round-trip exactly.
+
+use super::activation::Activation;
+use super::network::Network;
+use crate::tensor::Scalar;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Errors from network file I/O.
+#[derive(Debug, thiserror::Error)]
+pub enum IoError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
+    Err(IoError::Parse { line, msg: msg.into() })
+}
+
+impl<T: Scalar> Network<T> {
+    /// Serialize to a writer in the text format above.
+    pub fn save_to(&self, w: &mut impl Write) -> Result<(), IoError> {
+        writeln!(w, "neural-rs network v1")?;
+        write!(w, "dims")?;
+        for d in self.dims() {
+            write!(w, " {d}")?;
+        }
+        writeln!(w)?;
+        writeln!(w, "activation {}", self.activation().name())?;
+        writeln!(w, "dtype {}", std::any::type_name::<T>())?;
+        for (n, layer) in self.layers().iter().enumerate().skip(1) {
+            write!(w, "biases {n}")?;
+            for &b in &layer.b {
+                write!(w, " {:?}", b)?;
+            }
+            writeln!(w)?;
+        }
+        for (n, layer) in self.layers().iter().enumerate() {
+            if layer.w.is_empty() {
+                continue;
+            }
+            write!(w, "weights {n} {} {}", layer.w.rows(), layer.w.cols())?;
+            for &v in layer.w.as_slice() {
+                write!(w, " {:?}", v)?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Save to a file path.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), IoError> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        self.save_to(&mut w)
+    }
+
+    /// Deserialize from a reader.
+    pub fn load_from(r: impl std::io::Read) -> Result<Self, IoError> {
+        let reader = BufReader::new(r);
+        let mut dims: Option<Vec<usize>> = None;
+        let mut activation = Activation::Sigmoid;
+        let mut net: Option<Network<T>> = None;
+
+        for (lineno, line) in reader.lines().enumerate() {
+            let lineno = lineno + 1;
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_ascii_whitespace();
+            let key = toks.next().unwrap();
+            match key {
+                "neural-rs" => {
+                    if line != "neural-rs network v1" {
+                        return perr(lineno, format!("unsupported header '{line}'"));
+                    }
+                }
+                "dims" => {
+                    let d: Result<Vec<usize>, _> = toks.map(|t| t.parse()).collect();
+                    match d {
+                        Ok(d) if d.len() >= 2 => dims = Some(d),
+                        _ => return perr(lineno, "bad dims"),
+                    }
+                }
+                "activation" => {
+                    let name = toks.next().ok_or(IoError::Parse {
+                        line: lineno,
+                        msg: "missing activation name".into(),
+                    })?;
+                    activation = Activation::parse(name)
+                        .ok_or_else(|| IoError::Parse {
+                            line: lineno,
+                            msg: format!("unknown activation '{name}'"),
+                        })?;
+                }
+                "dtype" => { /* informational; values parse into T regardless */ }
+                "biases" | "weights" => {
+                    let dims = match &dims {
+                        Some(d) => d.clone(),
+                        None => return perr(lineno, "dims must come before parameters"),
+                    };
+                    let net = net.get_or_insert_with(|| Network::new(&dims, activation, 0));
+                    // Keep the parsed activation even if it appeared after dims.
+                    if net.activation() != activation {
+                        let mut rebuilt = Network::new(&dims, activation, 0);
+                        let flat = net.params_to_flat();
+                        rebuilt.params_unflatten_from(&flat);
+                        *net = rebuilt;
+                    }
+                    let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                        Some(i) => i,
+                        None => return perr(lineno, "missing layer index"),
+                    };
+                    if idx >= dims.len() {
+                        return perr(lineno, format!("layer index {idx} out of range"));
+                    }
+                    if key == "biases" {
+                        let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                        let vals =
+                            vals.ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                        if vals.len() != dims[idx] {
+                            return perr(
+                                lineno,
+                                format!("expected {} biases, got {}", dims[idx], vals.len()),
+                            );
+                        }
+                        net.layers_mut()[idx].b = vals;
+                    } else {
+                        let rows: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                            Some(v) => v,
+                            None => return perr(lineno, "missing rows"),
+                        };
+                        let cols: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                            Some(v) => v,
+                            None => return perr(lineno, "missing cols"),
+                        };
+                        if rows != dims[idx] || idx + 1 >= dims.len() || cols != dims[idx + 1] {
+                            return perr(lineno, "weight shape inconsistent with dims");
+                        }
+                        let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                        let vals =
+                            vals.ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                        if vals.len() != rows * cols {
+                            return perr(
+                                lineno,
+                                format!("expected {} weights, got {}", rows * cols, vals.len()),
+                            );
+                        }
+                        net.layers_mut()[idx].w = crate::tensor::Matrix::from_vec(rows, cols, vals);
+                    }
+                }
+                other => return perr(lineno, format!("unknown key '{other}'")),
+            }
+        }
+        net.ok_or(IoError::Parse { line: 0, msg: "file contained no network".into() })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, IoError> {
+        let f = std::fs::File::open(path)?;
+        Self::load_from(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_round_trip_f64() {
+        let net = Network::<f64>::new(&[4, 6, 3], Activation::Tanh, 77);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let loaded = Network::<f64>::load_from(&buf[..]).unwrap();
+        assert_eq!(loaded.dims(), net.dims());
+        assert_eq!(loaded.activation(), Activation::Tanh);
+        assert!(net.params_close(&loaded, 0.0), "exact round trip expected");
+    }
+
+    #[test]
+    fn save_load_round_trip_f32() {
+        let net = Network::<f32>::new(&[2, 3, 2], Activation::Relu, 5);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let loaded = Network::<f32>::load_from(&buf[..]).unwrap();
+        assert!(net.params_close(&loaded, 0.0));
+    }
+
+    #[test]
+    fn loaded_network_predicts_identically() {
+        let net = Network::<f64>::new(&[3, 5, 2], Activation::Sigmoid, 11);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let loaded = Network::<f64>::load_from(&buf[..]).unwrap();
+        let x = [0.1, -0.5, 0.9];
+        assert_eq!(net.output(&x), loaded.output(&x));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Network::<f32>::load_from("not a network".as_bytes()).is_err());
+        assert!(Network::<f32>::load_from("".as_bytes()).is_err());
+        assert!(
+            Network::<f32>::load_from("neural-rs network v1\nbiases 1 0.0".as_bytes()).is_err(),
+            "parameters before dims must fail"
+        );
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let text = "neural-rs network v1\ndims 2 2\nweights 0 3 2 1 2 3 4 5 6\n";
+        let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
+        assert!(matches!(err, IoError::Parse { .. }));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let net = Network::<f32>::new(&[2, 2], Activation::Step, 1);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let mut text = String::from_utf8(buf).unwrap();
+        text = format!("# saved network\n\n{text}\n# end\n");
+        let loaded = Network::<f32>::load_from(text.as_bytes()).unwrap();
+        assert_eq!(loaded.activation(), Activation::Step);
+        assert!(net.params_close(&loaded, 0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! The layer class (paper Listing 4 and 5).
+//!
+//! A layer holds activations `a`, biases `b`, the weight matrix `w`
+//! connecting *this* layer to the *next* one (rank 2: this-layer neurons ×
+//! next-layer neurons), and the pre-activation scratch `z` stored by
+//! fwdprop for use in backprop.
+
+use crate::tensor::{Matrix, Rng, Scalar};
+
+/// One dense layer. Mirrors `layer_type` from the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer<T = f32> {
+    /// Activations, one per neuron in this layer.
+    pub a: Vec<T>,
+    /// Biases, one per neuron in this layer.
+    pub b: Vec<T>,
+    /// Weights to the next layer: `w[(i, j)]` connects neuron `i` of this
+    /// layer to neuron `j` of the next. Empty (0×0) for the output layer.
+    pub w: Matrix<T>,
+    /// Pre-activation values `wᵀ·a_prev + b`, stored by fwdprop.
+    pub z: Vec<T>,
+}
+
+impl<T: Scalar> Layer<T> {
+    /// Construct a layer of `this_size` neurons connected to `next_size`
+    /// neurons (0 for the output layer), reproducing Listing 5:
+    /// weights ~ N(0, 1)/this_size, biases and activations zero.
+    ///
+    /// Note: neural-fortran draws biases too ("quasi-random... biases"
+    /// §3.1) but its published constructor zeroes nothing it doesn't use;
+    /// we draw biases from the same scaled normal so networks start
+    /// unbiased yet asymmetric, and document the difference in tests.
+    pub fn new(this_size: usize, next_size: usize, rng: &mut Rng) -> Self {
+        let scale = 1.0 / this_size.max(1) as f64;
+        Self {
+            a: vec![T::ZERO; this_size],
+            b: (0..this_size).map(|_| T::from_f64(rng.normal() * scale)).collect(),
+            w: Matrix::randn_scaled(this_size, next_size, scale, rng),
+            z: vec![T::ZERO; this_size],
+        }
+    }
+
+    /// Number of neurons in this layer.
+    pub fn size(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Number of trainable parameters owned by this layer (its biases and
+    /// the outgoing weights).
+    pub fn param_count(&self) -> usize {
+        self.b.len() + self.w.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_shapes() {
+        let mut rng = Rng::new(1);
+        let l: Layer<f64> = Layer::new(5, 3, &mut rng);
+        assert_eq!(l.size(), 5);
+        assert_eq!(l.a, vec![0.0; 5]);
+        assert_eq!(l.w.rows(), 5);
+        assert_eq!(l.w.cols(), 3);
+        assert_eq!(l.param_count(), 5 + 15);
+    }
+
+    #[test]
+    fn output_layer_has_no_weights() {
+        let mut rng = Rng::new(1);
+        let l: Layer<f32> = Layer::new(4, 0, &mut rng);
+        assert_eq!(l.w.len(), 0);
+        assert_eq!(l.param_count(), 4);
+    }
+
+    #[test]
+    fn weights_are_scaled_by_layer_size() {
+        let mut rng = Rng::new(7);
+        let l: Layer<f64> = Layer::new(100, 100, &mut rng);
+        let std = {
+            let xs = l.w.as_slice();
+            let m: f64 = xs.iter().sum::<f64>() / xs.len() as f64;
+            (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+        };
+        // scale = 1/100 = 0.01
+        assert!((std - 0.01).abs() < 0.002, "std={std}");
+    }
+
+    #[test]
+    fn same_seed_same_layer() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a: Layer<f32> = Layer::new(8, 4, &mut r1);
+        let b: Layer<f32> = Layer::new(8, 4, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,25 @@
+//! Native neural-network engine — "neural-fortran in Rust".
+//!
+//! A complete, dependency-free implementation of the paper's network:
+//! arbitrary-depth dense networks, five activation functions, quadratic
+//! cost, SGD with batch-summed tendencies, Xavier-style init, and text
+//! save/load. It plays two roles in this repo:
+//!
+//! 1. the *comparator framework* for the Table 1 serial benchmark (the
+//!    role Keras + TensorFlow plays in the paper), and
+//! 2. the numerical oracle the PJRT/Pallas path is cross-checked against.
+
+mod activation;
+mod cost;
+mod grads;
+mod io;
+mod optimizer;
+mod layer;
+mod network;
+
+pub use activation::Activation;
+pub use optimizer::{Optimizer, OptimizerKind};
+pub use cost::{quadratic_cost, quadratic_cost_prime};
+pub use grads::Gradients;
+pub use layer::Layer;
+pub use network::Network;

@@ -1,0 +1,595 @@
+//! The network class (paper §3.1–3.4): construction, forward propagation,
+//! backpropagation, SGD update, and the generic train entry points.
+
+use super::activation::Activation;
+use super::cost::{quadratic_cost, quadratic_cost_prime};
+use super::grads::Gradients;
+use super::layer::Layer;
+use crate::tensor::{vecops, Matrix, Rng, Scalar};
+
+/// A feed-forward neural network of arbitrary structure — `network_type`
+/// from the paper. Generic over the float kind (the paper's compile-time
+/// `rk`): `Network<f32>` or `Network<f64>`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network<T = f32> {
+    layers: Vec<Layer<T>>,
+    dims: Vec<usize>,
+    activation: Activation,
+}
+
+impl<T: Scalar> Network<T> {
+    /// Construct a network with the given layer sizes and activation,
+    /// mirroring `net_constructor` (Listing 2) minus the collective sync,
+    /// which lives in [`crate::coordinator::Trainer`] (it owns the
+    /// communicator). The paper defaults the activation to sigmoid; so do
+    /// we via [`Network::with_dims`].
+    pub fn new(dims: &[usize], activation: Activation, seed: u64) -> Self {
+        assert!(dims.len() >= 2, "network needs at least input and output layers");
+        assert!(dims.iter().all(|&d| d > 0), "every layer needs at least one neuron");
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::with_capacity(dims.len());
+        for l in 0..dims.len() {
+            let next = if l + 1 < dims.len() { dims[l + 1] } else { 0 };
+            layers.push(Layer::new(dims[l], next, &mut rng));
+        }
+        // The input layer has no bias in the math (fwdprop copies x into
+        // a_1 directly); keep it zero so parameter serialization, replica
+        // sync, and save/load agree on a canonical representation.
+        layers[0].b.fill(T::ZERO);
+        Self { layers, dims: dims.to_vec(), activation }
+    }
+
+    /// Paper default: sigmoid activation (Listing 2's `else` branch).
+    pub fn with_dims(dims: &[usize], seed: u64) -> Self {
+        Self::new(dims, Activation::Sigmoid, seed)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn activation(&self) -> Activation {
+        self.activation
+    }
+
+    pub fn layers(&self) -> &[Layer<T>] {
+        &self.layers
+    }
+
+    pub fn layers_mut(&mut self) -> &mut [Layer<T>] {
+        &mut self.layers
+    }
+
+    /// Number of trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Input layer size.
+    pub fn input_size(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Output layer size.
+    pub fn output_size(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    // ------------------------------------------------------------------
+    // Forward propagation (paper §3.2)
+    // ------------------------------------------------------------------
+
+    /// Forward propagation storing intermediate `z` and `a` in every layer
+    /// (Listing 6) — required before [`Network::backprop`].
+    pub fn fwdprop(&mut self, x: &[T]) {
+        assert_eq!(x.len(), self.dims[0], "input size mismatch");
+        self.layers[0].a.copy_from_slice(x);
+        for n in 1..self.layers.len() {
+            // z_n = w_{n-1}ᵀ · a_{n-1} + b_n ; a_n = σ(z_n)
+            let z = {
+                let prev = &self.layers[n - 1];
+                let mut z = prev.w.t_matvec(&prev.a);
+                for (zi, &bi) in z.iter_mut().zip(&self.layers[n].b) {
+                    *zi = *zi + bi;
+                }
+                z
+            };
+            let layer = &mut self.layers[n];
+            layer.a.clear();
+            layer.a.extend(z.iter().map(|&v| self.activation.apply(v)));
+            layer.z = z;
+        }
+    }
+
+    /// Pure network output without touching stored state — the paper's
+    /// `network_type % output()`, to be used outside of training.
+    pub fn output(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.dims[0], "input size mismatch");
+        let mut a = x.to_vec();
+        for n in 1..self.layers.len() {
+            let prev = &self.layers[n - 1];
+            let mut z = prev.w.t_matvec(&a);
+            for (zi, &bi) in z.iter_mut().zip(&self.layers[n].b) {
+                *zi = *zi + bi;
+            }
+            a = self.activation.apply_vec(&z);
+        }
+        a
+    }
+
+    /// Batched pure output: columns of `x` are samples (whole-batch
+    /// matrix products — see `grad_batch` for the formulation).
+    pub fn output_batch(&self, x: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
+        let mut a = x.clone();
+        for n in 1..self.layers.len() {
+            let wt = self.layers[n - 1].w.transpose();
+            let mut z = wt.matmul(&a);
+            for j in 0..z.cols() {
+                vecops::axpy(z.col_mut(j), T::ONE, &self.layers[n].b);
+            }
+            z.map_inplace(|v| self.activation.apply(v));
+            a = z;
+        }
+        a
+    }
+
+    // ------------------------------------------------------------------
+    // Backpropagation (paper §3.3, Listing 7)
+    // ------------------------------------------------------------------
+
+    /// Backpropagate after a [`Network::fwdprop`] call, *accumulating*
+    /// tendencies into `grads` (the batch loop and the data-parallel
+    /// coordinator both sum tendencies before applying them).
+    pub fn backprop_into(&self, y: &[T], grads: &mut Gradients<T>) {
+        assert_eq!(y.len(), self.output_size(), "output size mismatch");
+        let last = self.layers.len() - 1;
+
+        // Output layer: δ = (a − y) ⊙ σ'(z)
+        let mut delta: Vec<T> = {
+            let l = &self.layers[last];
+            let resid = quadratic_cost_prime(&l.a, y);
+            let sp = self.activation.prime_vec(&l.z);
+            vecops::hadamard(&resid, &sp)
+        };
+        for (gi, &d) in grads.db[last].iter_mut().zip(&delta) {
+            *gi = *gi + d;
+        }
+        grads.dw[last - 1].rank1_update(T::ONE, &self.layers[last - 1].a, &delta);
+
+        // Hidden layers, walking backward (paper's `do n = size(dims)-1, 2, -1`).
+        for n in (1..last).rev() {
+            let l = &self.layers[n];
+            // δ_n = (w_n · δ_{n+1}) ⊙ σ'(z_n)
+            let back = l.w.matvec(&delta);
+            let sp = self.activation.prime_vec(&l.z);
+            delta = vecops::hadamard(&back, &sp);
+            for (gi, &d) in grads.db[n].iter_mut().zip(&delta) {
+                *gi = *gi + d;
+            }
+            grads.dw[n - 1].rank1_update(T::ONE, &self.layers[n - 1].a, &delta);
+        }
+    }
+
+    /// Non-accumulating variant returning fresh tendencies (the paper's
+    /// `backprop(y, dw, db)` signature).
+    pub fn backprop(&self, y: &[T]) -> Gradients<T> {
+        let mut g = Gradients::zeros(&self.dims);
+        self.backprop_into(y, &mut g);
+        g
+    }
+
+    /// Summed tendencies over a whole batch (columns of x/y are samples).
+    /// This is the compute half of `train_batch`, split out so the
+    /// data-parallel coordinator can interpose the collective sum.
+    ///
+    /// Batched formulation (perf pass, EXPERIMENTS.md §Perf): the
+    /// per-sample recurrences of Listings 6-7 vectorize exactly into
+    /// whole-batch matrix products —
+    ///   Z_n = W_{n-1}ᵀ·A_{n-1} + b_n,  Δ_L = (A_L − Y)⊙σ'(Z_L),
+    ///   dW_{n-1} = A_{n-1}·Δ_nᵀ,       Δ_n = (W_n·Δ_{n+1})⊙σ'(Z_n),
+    /// amortizing every weight-matrix fetch across the batch. Identical
+    /// math to [`Network::grad_batch_per_sample`] (asserted in tests).
+    pub fn grad_batch(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
+        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
+        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
+        assert_eq!(y.rows(), self.output_size(), "output size mismatch");
+        let nlayers = self.layers.len();
+        let mut g = Gradients::zeros(&self.dims);
+        if x.cols() == 0 {
+            return g;
+        }
+
+        // Forward pass over the whole batch, keeping Z and A per layer.
+        let mut a_list: Vec<Matrix<T>> = Vec::with_capacity(nlayers);
+        let mut z_list: Vec<Matrix<T>> = Vec::with_capacity(nlayers);
+        a_list.push(x.clone());
+        z_list.push(Matrix::zeros(0, 0)); // input layer has no z
+        for n in 1..nlayers {
+            // Materializing wᵀ once per batch turns the contraction into
+            // axpy-style stride-1 loops that auto-vectorize; the copy is
+            // amortized over the whole batch (perf pass iteration 3).
+            let wt = self.layers[n - 1].w.transpose();
+            let mut z = wt.matmul(&a_list[n - 1]);
+            for j in 0..z.cols() {
+                vecops::axpy(z.col_mut(j), T::ONE, &self.layers[n].b);
+            }
+            let a = z.map(|v| self.activation.apply(v));
+            z_list.push(z);
+            a_list.push(a);
+        }
+
+        // Output-layer delta: (A − Y) ⊙ σ'(Z).
+        let last = nlayers - 1;
+        let mut delta = {
+            let mut d = a_list[last].clone();
+            d.axpy(-T::ONE, y);
+            let zp = z_list[last].map(|v| self.activation.prime(v));
+            for (dv, &zv) in d.as_mut_slice().iter_mut().zip(zp.as_slice()) {
+                *dv = *dv * zv;
+            }
+            d
+        };
+
+        for n in (1..nlayers).rev() {
+            // dW_{n-1} = A_{n-1} · Δ_nᵀ ; db_n = row-sums of Δ_n.
+            g.dw[n - 1] = a_list[n - 1].nt_matmul(&delta);
+            for j in 0..delta.cols() {
+                vecops::axpy(&mut g.db[n], T::ONE, delta.col(j));
+            }
+            if n > 1 {
+                let mut back = self.layers[n - 1].w.matmul(&delta);
+                let zp = z_list[n - 1].map(|v| self.activation.prime(v));
+                for (bv, &zv) in back.as_mut_slice().iter_mut().zip(zp.as_slice()) {
+                    *bv = *bv * zv;
+                }
+                delta = back;
+            }
+        }
+        // Keep stored activations consistent with the last sample, like
+        // the per-sample path would (cheap, and some callers inspect them).
+        g
+    }
+
+    /// Reference per-sample batch gradient (the paper's literal loop:
+    /// fwdprop + backprop per column). Used to validate the batched path.
+    pub fn grad_batch_per_sample(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
+        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
+        let mut g = Gradients::zeros(&self.dims);
+        for j in 0..x.cols() {
+            self.fwdprop(x.col(j));
+            self.backprop_into(y.col(j), &mut g);
+        }
+        g
+    }
+
+    // ------------------------------------------------------------------
+    // Update and training (paper §3.3–3.4)
+    // ------------------------------------------------------------------
+
+    /// Apply tendencies: `w -= eta·dw`, `b -= eta·db` — the paper's
+    /// `network_type % update()`.
+    pub fn update(&mut self, grads: &Gradients<T>, eta: T) {
+        assert_eq!(grads.dims(), self.dims, "gradient dims mismatch");
+        let neg_eta = -eta;
+        for (n, layer) in self.layers.iter_mut().enumerate() {
+            if n > 0 {
+                vecops::axpy(&mut layer.b, neg_eta, &grads.db[n]);
+            }
+            if n + 1 < self.dims.len() {
+                layer.w.axpy(neg_eta, &grads.dw[n]);
+            }
+        }
+    }
+
+    /// Train on a single sample (Listing 8).
+    pub fn train_single(&mut self, x: &[T], y: &[T], eta: T) {
+        self.fwdprop(x);
+        let g = self.backprop(y);
+        self.update(&g, eta);
+    }
+
+    /// Train on a batch (Listing 9): tendencies are summed over the batch
+    /// and applied once, scaled by `eta / batch_size` as neural-fortran
+    /// does, so `eta` is comparable across batch sizes.
+    pub fn train_batch(&mut self, x: &Matrix<T>, y: &Matrix<T>, eta: T) {
+        let g = self.grad_batch(x, y);
+        let scale = eta / T::from_f64(x.cols() as f64);
+        self.update(&g, scale);
+    }
+
+    // ------------------------------------------------------------------
+    // Evaluation
+    // ------------------------------------------------------------------
+
+    /// Mean quadratic cost over a batch.
+    pub fn loss_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> f64 {
+        assert_eq!(x.cols(), y.cols());
+        let mut total = 0.0;
+        for j in 0..x.cols() {
+            let out = self.output(x.col(j));
+            total += quadratic_cost(&out, y.col(j)).to_f64();
+        }
+        total / x.cols() as f64
+    }
+
+    /// Classification accuracy: fraction of samples whose argmax matches
+    /// the label's argmax — the paper's `net % accuracy()`.
+    pub fn accuracy(&self, x: &Matrix<T>, y: &Matrix<T>) -> f64 {
+        assert_eq!(x.cols(), y.cols());
+        if x.cols() == 0 {
+            return 0.0;
+        }
+        let out = self.output_batch(x);
+        let mut good = 0usize;
+        for j in 0..x.cols() {
+            if vecops::argmax(out.col(j)) == vecops::argmax(y.col(j)) {
+                good += 1;
+            }
+        }
+        good as f64 / x.cols() as f64
+    }
+
+    // ------------------------------------------------------------------
+    // Parameter (de)serialization — used by co_broadcast (replica sync),
+    // the PJRT engine (params are executable inputs), and save/load.
+    // ------------------------------------------------------------------
+
+    /// Number of scalars in the flat parameter view (== flat gradient len).
+    pub fn params_flat_len(&self) -> usize {
+        Gradients::<T>::zeros(&self.dims).flat_len()
+    }
+
+    /// Write all parameters into `out` using the [`Gradients`] layout
+    /// (all w matrices column-major in layer order, then all b vectors).
+    pub fn params_flatten_into(&self, out: &mut [T]) {
+        assert_eq!(out.len(), self.params_flat_len(), "param buffer size mismatch");
+        let mut off = 0;
+        for l in 0..self.dims.len() - 1 {
+            let w = &self.layers[l].w;
+            out[off..off + w.len()].copy_from_slice(w.as_slice());
+            off += w.len();
+        }
+        for layer in &self.layers {
+            out[off..off + layer.b.len()].copy_from_slice(&layer.b);
+            off += layer.b.len();
+        }
+    }
+
+    /// Inverse of [`Network::params_flatten_into`].
+    pub fn params_unflatten_from(&mut self, flat: &[T]) {
+        assert_eq!(flat.len(), self.params_flat_len(), "param buffer size mismatch");
+        let mut off = 0;
+        for l in 0..self.dims.len() - 1 {
+            let w = &mut self.layers[l].w;
+            let n = w.len();
+            w.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        for layer in &mut self.layers {
+            let n = layer.b.len();
+            layer.b.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+
+    /// Convenience: flat parameter vector.
+    pub fn params_to_flat(&self) -> Vec<T> {
+        let mut v = vec![T::ZERO; self.params_flat_len()];
+        self.params_flatten_into(&mut v);
+        v
+    }
+
+    /// True if the two networks' parameters differ nowhere by more than
+    /// `tol` (replica-consistency checks).
+    pub fn params_close(&self, other: &Network<T>, tol: f64) -> bool {
+        self.dims == other.dims
+            && vecops::max_abs_diff(&self.params_to_flat(), &other.params_to_flat()) <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Network<f64> {
+        Network::new(&[3, 5, 2], Activation::Sigmoid, 42)
+    }
+
+    #[test]
+    fn construction_matches_listing_3() {
+        let net = Network::<f32>::new(&[3, 5, 2], Activation::Tanh, 1);
+        assert_eq!(net.dims(), &[3, 5, 2]);
+        assert_eq!(net.activation(), Activation::Tanh);
+        assert_eq!(net.input_size(), 3);
+        assert_eq!(net.output_size(), 2);
+        // params: w(3×5)+w(5×2)+b(5)+b(2) + b(3 input, unused but present)
+        assert_eq!(net.param_count(), 15 + 10 + 3 + 5 + 2);
+    }
+
+    #[test]
+    fn default_activation_is_sigmoid() {
+        let net = Network::<f32>::with_dims(&[2, 2], 0);
+        assert_eq!(net.activation(), Activation::Sigmoid);
+    }
+
+    #[test]
+    fn output_in_sigmoid_range() {
+        let net = tiny();
+        let out = net.output(&[0.5, -0.2, 0.9]);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn fwdprop_and_output_agree() {
+        let mut net = tiny();
+        let x = [0.1, 0.2, 0.3];
+        let pure = net.output(&x);
+        net.fwdprop(&x);
+        assert_eq!(net.layers().last().unwrap().a, pure);
+    }
+
+    #[test]
+    fn backprop_reduces_cost() {
+        let mut net = tiny();
+        let x = [0.5, 0.1, -0.3];
+        let y = [1.0, 0.0];
+        let before = quadratic_cost(&net.output(&x), &y);
+        for _ in 0..50 {
+            net.train_single(&x, &y, 1.0);
+        }
+        let after = quadratic_cost(&net.output(&x), &y);
+        assert!(after < before * 0.2, "before={before} after={after}");
+    }
+
+    /// Gradient check: analytic backprop vs central finite differences on
+    /// every parameter of a small network.
+    #[test]
+    fn backprop_matches_finite_differences() {
+        for act in [Activation::Sigmoid, Activation::Tanh, Activation::Gaussian] {
+            let mut net = Network::<f64>::new(&[2, 3, 2], act, 7);
+            let x = [0.3, -0.6];
+            let y = [0.9, 0.1];
+            net.fwdprop(&x);
+            let g = net.backprop(&y);
+
+            let h = 1e-6;
+            let mut flat = net.params_to_flat();
+            let gflat = {
+                // Gradients layout == params layout.
+                let mut buf = vec![0.0; g.flat_len()];
+                g.flatten_into(&mut buf);
+                buf
+            };
+            for i in 0..flat.len() {
+                let orig = flat[i];
+                flat[i] = orig + h;
+                net.params_unflatten_from(&flat);
+                let cp = quadratic_cost(&net.output(&x), &y);
+                flat[i] = orig - h;
+                net.params_unflatten_from(&flat);
+                let cm = quadratic_cost(&net.output(&x), &y);
+                flat[i] = orig;
+                net.params_unflatten_from(&flat);
+                let fd = (cp - cm) / (2.0 * h);
+                assert!(
+                    (fd - gflat[i]).abs() < 1e-5,
+                    "{act}: param {i}: fd={fd} analytic={}",
+                    gflat[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_grad_equals_per_sample_grad() {
+        let mut net = Network::<f64>::new(&[7, 9, 5, 3], Activation::Tanh, 17);
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_fn(7, 23, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(3, 23, |_, _| rng.uniform_in(0.0, 1.0));
+        let fused = net.grad_batch(&x, &y);
+        let reference = net.grad_batch_per_sample(&x, &y);
+        for l in 0..fused.dw.len() {
+            let d = fused.dw[l].max_abs_diff(&reference.dw[l]);
+            assert!(d < 1e-12, "dw[{l}] diff {d}");
+        }
+        for l in 0..fused.db.len() {
+            let d = vecops::max_abs_diff(&fused.db[l], &reference.db[l]);
+            assert!(d < 1e-12, "db[{l}] diff {d}");
+        }
+    }
+
+    #[test]
+    fn batched_output_equals_per_sample_output() {
+        let net = Network::<f64>::new(&[5, 11, 2], Activation::Sigmoid, 9);
+        let mut rng = Rng::new(5);
+        let x = Matrix::from_fn(5, 17, |_, _| rng.uniform_in(-1.0, 1.0));
+        let batched = net.output_batch(&x);
+        for j in 0..17 {
+            let single = net.output(x.col(j));
+            assert!(vecops::max_abs_diff(&single, batched.col(j)) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn grad_batch_is_sum_of_singles() {
+        let mut net = tiny();
+        let x = Matrix::from_fn(3, 4, |i, j| (i as f64 - j as f64) / 5.0);
+        let y = Matrix::from_fn(2, 4, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
+        let batch = net.grad_batch(&x, &y);
+        let mut acc = Gradients::zeros(&[3, 5, 2]);
+        for j in 0..4 {
+            net.fwdprop(x.col(j));
+            net.backprop_into(y.col(j), &mut acc);
+        }
+        assert_eq!(batch, acc);
+    }
+
+    #[test]
+    fn train_batch_scales_by_batch_size() {
+        // One sample repeated B times with eta must equal a single
+        // train_single with the same eta (mean semantics).
+        let x = [0.2, -0.1, 0.4];
+        let y = [0.0, 1.0];
+        let mut a = tiny();
+        let mut b = tiny();
+        assert!(a.params_close(&b, 0.0));
+        a.train_single(&x, &y, 0.7);
+        let xb = Matrix::from_fn(3, 5, |i, _| x[i]);
+        let yb = Matrix::from_fn(2, 5, |i, _| y[i]);
+        b.train_batch(&xb, &yb, 0.7);
+        assert!(a.params_close(&b, 1e-12));
+    }
+
+    #[test]
+    fn params_round_trip() {
+        let net = tiny();
+        let flat = net.params_to_flat();
+        let mut other = Network::<f64>::new(&[3, 5, 2], Activation::Sigmoid, 999);
+        assert!(!net.params_close(&other, 1e-9));
+        other.params_unflatten_from(&flat);
+        assert!(net.params_close(&other, 0.0));
+    }
+
+    #[test]
+    fn accuracy_on_separable_toy() {
+        // Learn y = [1,0] if x0 > 0 else [0,1].
+        let mut net = Network::<f64>::new(&[1, 8, 2], Activation::Sigmoid, 3);
+        let mut rng = Rng::new(10);
+        let n = 64;
+        let x = Matrix::from_fn(1, n, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(2, n, |i, j| {
+            let pos = x.get(0, j) > 0.0;
+            if (i == 0) == pos {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        for _ in 0..300 {
+            net.train_batch(&x, &y, 3.0);
+        }
+        assert!(net.accuracy(&x, &y) > 0.95, "acc={}", net.accuracy(&x, &y));
+    }
+
+    #[test]
+    fn loss_batch_decreases_under_training() {
+        let mut net = tiny();
+        let x = Matrix::from_fn(3, 8, |i, j| ((i * 7 + j * 3) % 10) as f64 / 10.0);
+        let y = Matrix::from_fn(2, 8, |i, j| ((i + j) % 2) as f64);
+        let before = net.loss_batch(&x, &y);
+        for _ in 0..500 {
+            net.train_batch(&x, &y, 2.0);
+        }
+        let after = net.loss_batch(&x, &y);
+        assert!(after < before * 0.8, "before={before} after={after}");
+    }
+
+    #[test]
+    #[should_panic(expected = "input size mismatch")]
+    fn wrong_input_size_panics() {
+        let net = tiny();
+        let _ = net.output(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Optimizers beyond plain SGD — the paper ships stochastic gradient
+//! descent only and lists richer optimizers as future work; this module
+//! provides that extension: classical momentum and Nesterov momentum,
+//! expressed over the same summed-tendency [`Gradients`] the collectives
+//! reduce, so they compose with data parallelism unchanged (the velocity
+//! state is replicated deterministically on every image).
+
+use super::grads::Gradients;
+use super::network::Network;
+use crate::tensor::Scalar;
+
+/// Optimizer algorithm selection.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum OptimizerKind {
+    /// Plain SGD: `p -= eta * g` (the paper's update()).
+    #[default]
+    Sgd,
+    /// Classical momentum: `v = mu*v + g; p -= eta*v`.
+    Momentum { mu: f64 },
+    /// Nesterov momentum: `v = mu*v + g; p -= eta*(g + mu*v)`.
+    Nesterov { mu: f64 },
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        // "sgd" | "momentum:0.9" | "nesterov:0.9"
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        match name.to_ascii_lowercase().as_str() {
+            "sgd" => Some(Self::Sgd),
+            "momentum" => {
+                let mu = arg.unwrap_or("0.9").parse().ok()?;
+                Some(Self::Momentum { mu })
+            }
+            "nesterov" => {
+                let mu = arg.unwrap_or("0.9").parse().ok()?;
+                Some(Self::Nesterov { mu })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::Sgd => "sgd".into(),
+            Self::Momentum { mu } => format!("momentum:{mu}"),
+            Self::Nesterov { mu } => format!("nesterov:{mu}"),
+        }
+    }
+}
+
+/// Stateful optimizer applying reduced tendencies to a network.
+#[derive(Debug, Clone)]
+pub struct Optimizer<T = f32> {
+    kind: OptimizerKind,
+    /// Velocity state (same layout as the gradients); empty for SGD.
+    velocity: Option<Gradients<T>>,
+}
+
+impl<T: Scalar> Optimizer<T> {
+    pub fn new(kind: OptimizerKind, dims: &[usize]) -> Self {
+        let velocity = match kind {
+            OptimizerKind::Sgd => None,
+            _ => Some(Gradients::zeros(dims)),
+        };
+        Self { kind, velocity }
+    }
+
+    pub fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    /// Apply one step with the (already batch-scaled) learning rate.
+    pub fn step(&mut self, net: &mut Network<T>, grads: &Gradients<T>, eta: T) {
+        match self.kind {
+            OptimizerKind::Sgd => net.update(grads, eta),
+            OptimizerKind::Momentum { mu } => {
+                let v = self.velocity.as_mut().expect("momentum state");
+                let mu = T::from_f64(mu);
+                // v = mu*v + g
+                v.scale(mu);
+                v.add_assign(grads);
+                net.update(v, eta);
+            }
+            OptimizerKind::Nesterov { mu } => {
+                let v = self.velocity.as_mut().expect("nesterov state");
+                let muf = T::from_f64(mu);
+                v.scale(muf);
+                v.add_assign(grads);
+                // p -= eta * (g + mu*v)
+                let mut lookahead = v.clone();
+                lookahead.scale(muf);
+                lookahead.add_assign(grads);
+                net.update(&lookahead, eta);
+            }
+        }
+    }
+
+    /// Reset velocity (e.g. between runs).
+    pub fn reset(&mut self) {
+        if let Some(v) = &mut self.velocity {
+            v.zero_out();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+    use crate::tensor::Matrix;
+
+    fn toy() -> (Network<f64>, Matrix<f64>, Matrix<f64>) {
+        let net = Network::new(&[2, 8, 1], Activation::Tanh, 3);
+        let x = Matrix::from_fn(2, 16, |i, j| ((i + 1) * (j + 1) % 7) as f64 / 7.0);
+        let y = Matrix::from_fn(1, 16, |_, j| {
+            let c = x.col(j);
+            (c[0] - c[1]).tanh() * 0.5 + 0.4
+        });
+        (net, x, y)
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for s in ["sgd", "momentum:0.9", "nesterov:0.75"] {
+            let k = OptimizerKind::parse(s).unwrap();
+            assert_eq!(OptimizerKind::parse(&k.name()), Some(k));
+        }
+        assert_eq!(OptimizerKind::parse("momentum"), Some(OptimizerKind::Momentum { mu: 0.9 }));
+        assert_eq!(OptimizerKind::parse("adamw"), None);
+        assert_eq!(OptimizerKind::parse("momentum:x"), None);
+    }
+
+    #[test]
+    fn sgd_step_matches_plain_update() {
+        let (net0, x, y) = toy();
+        let mut a = net0.clone();
+        let mut b = net0.clone();
+        let g = a.grad_batch(&x, &y);
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, net0.dims());
+        opt.step(&mut a, &g, 0.1);
+        b.update(&g, 0.1);
+        assert!(a.params_close(&b, 0.0));
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let (net0, x, y) = toy();
+        // Two identical steps: with momentum the second step moves further
+        // than the first (velocity accumulation).
+        let mut net = net0.clone();
+        let mut opt = Optimizer::new(OptimizerKind::Momentum { mu: 0.9 }, net0.dims());
+        let g = net.grad_batch(&x, &y);
+        let p0 = net.params_to_flat();
+        opt.step(&mut net, &g, 0.1);
+        let p1 = net.params_to_flat();
+        opt.step(&mut net, &g, 0.1);
+        let p2 = net.params_to_flat();
+        let step1: f64 = p0.iter().zip(&p1).map(|(a, b)| (a - b).abs()).sum();
+        let step2: f64 = p1.iter().zip(&p2).map(|(a, b)| (a - b).abs()).sum();
+        assert!(step2 > step1 * 1.5, "velocity should grow: {step1} vs {step2}");
+    }
+
+    #[test]
+    fn momentum_converges_faster_on_toy_problem() {
+        let (net0, x, y) = toy();
+        let loss_after = |kind: OptimizerKind| {
+            let mut net = net0.clone();
+            let mut opt = Optimizer::new(kind, net0.dims());
+            for _ in 0..120 {
+                let g = net.grad_batch(&x, &y);
+                opt.step(&mut net, &g, 0.02 / 16.0);
+            }
+            net.loss_batch(&x, &y)
+        };
+        let sgd = loss_after(OptimizerKind::Sgd);
+        let mom = loss_after(OptimizerKind::Momentum { mu: 0.9 });
+        let nag = loss_after(OptimizerKind::Nesterov { mu: 0.9 });
+        assert!(mom < sgd, "momentum {mom} should beat sgd {sgd} at this low eta");
+        assert!(nag < sgd, "nesterov {nag} should beat sgd {sgd}");
+    }
+
+    #[test]
+    fn reset_clears_velocity() {
+        let (net0, x, y) = toy();
+        let mut net = net0.clone();
+        let mut opt = Optimizer::new(OptimizerKind::Momentum { mu: 0.9 }, net0.dims());
+        let g = net.grad_batch(&x, &y);
+        opt.step(&mut net, &g, 0.1);
+        opt.reset();
+        // After reset, a step behaves like the first step from scratch.
+        let mut net2 = net.clone();
+        let mut fresh = Optimizer::new(OptimizerKind::Momentum { mu: 0.9 }, net0.dims());
+        let g2 = net.grad_batch(&x, &y);
+        opt.step(&mut net, &g2, 0.1);
+        fresh.step(&mut net2, &g2, 0.1);
+        assert!(net.params_close(&net2, 0.0));
+    }
+}

@@ -1,0 +1,325 @@
+//! PJRT engine: compile HLO-text artifacts once, execute them from the
+//! training hot path.
+//!
+//! Layout contract with `python/compile/model.py` (all zero-copy
+//! reinterpretations, no transposes at runtime):
+//!
+//! - `wt_l` argument [out, in] row-major  == `Layer::w` [in, out] column-major
+//! - `x`    argument [B, in]   row-major  == batch `Matrix` [in, B] column-major
+//! - `y`    argument [B, out]  row-major  == one-hot `Matrix` [out, B] column-major
+//! - grad output `dwt_l` [out, in] row-major == `Gradients::dw[l]` [in, out] column-major
+//! - forward output `a` [B, out] row-major == output `Matrix` [out, B] column-major
+//!
+//! One `Engine` (PJRT CPU client) per image: `PjRtClient` is `Rc`-based and
+//! deliberately not shared across threads — each Fortran image owns its
+//! address space, and so does each worker here.
+
+use super::manifest::NetMeta;
+use crate::nn::{Gradients, Network};
+use crate::tensor::{Matrix, Scalar};
+use std::path::Path;
+
+/// Errors from artifact loading or PJRT execution.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("runtime: {0}")]
+    Invalid(String),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, RuntimeError> {
+    Err(RuntimeError::Invalid(msg.into()))
+}
+
+/// Scalars executable on the PJRT path (f32/f64 — the paper's `rk` kinds
+/// minus real128, which CPU PJRT does not support).
+pub trait PjrtScalar: Scalar + xla::NativeType + xla::ArrayElement {
+    /// Manifest dtype tag ("f32"/"f64").
+    const DTYPE: &'static str;
+}
+
+impl PjrtScalar for f32 {
+    const DTYPE: &'static str = "f32";
+}
+
+impl PjrtScalar for f64 {
+    const DTYPE: &'static str = "f64";
+}
+
+/// A PJRT CPU client. One per image/worker thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Engine, RuntimeError> {
+        // Silence TfrtCpuClient INFO chatter on stderr (must be set before
+        // the first client is constructed; idempotent afterwards).
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "3");
+        }
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO text file.
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::Invalid(format!("non-utf8 path {path:?}")))?;
+        if !path.exists() {
+            return invalid(format!(
+                "artifact {path_str} missing — run `make artifacts` first"
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Load and compile both entry points of a network configuration.
+    pub fn load(&self, meta: &NetMeta) -> Result<CompiledNet, RuntimeError> {
+        let fwd_path = meta
+            .entry_path("forward")
+            .ok_or_else(|| RuntimeError::Invalid("manifest lacks 'forward' entry".into()))?;
+        let grad_path = meta
+            .entry_path("grad")
+            .ok_or_else(|| RuntimeError::Invalid("manifest lacks 'grad' entry".into()))?;
+        Ok(CompiledNet {
+            meta: meta.clone(),
+            client: self.client.clone(),
+            forward: self.compile(&fwd_path)?,
+            grad: self.compile(&grad_path)?,
+        })
+    }
+}
+
+/// A compiled network configuration: `forward` and `grad` executables plus
+/// the metadata needed to marshal arguments.
+pub struct CompiledNet {
+    meta: NetMeta,
+    client: xla::PjRtClient,
+    forward: xla::PjRtLoadedExecutable,
+    grad: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledNet {
+    pub fn meta(&self) -> &NetMeta {
+        &self.meta
+    }
+
+    /// Static micro-batch the artifacts were lowered with.
+    pub fn micro_batch(&self) -> usize {
+        self.meta.micro_batch
+    }
+
+    /// Check that `net` matches this artifact (dims, activation, dtype).
+    fn check_net<T: PjrtScalar>(&self, net: &Network<T>) -> Result<(), RuntimeError> {
+        if net.dims() != self.meta.dims.as_slice() {
+            return invalid(format!(
+                "network dims {:?} != artifact dims {:?}",
+                net.dims(),
+                self.meta.dims
+            ));
+        }
+        if net.activation() != self.meta.activation {
+            return invalid(format!(
+                "network activation {} != artifact activation {}",
+                net.activation(),
+                self.meta.activation
+            ));
+        }
+        if T::DTYPE != self.meta.dtype {
+            return invalid(format!(
+                "scalar type {} != artifact dtype {}",
+                T::DTYPE,
+                self.meta.dtype
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parameter device buffers in AOT argument order (wt_0, b_1, ...).
+    ///
+    /// Device buffers (not literals): the crate's literal-based `execute`
+    /// leaks its input buffers (xla_rs.cc releases them and never frees),
+    /// and `buffer_from_host_buffer` also skips one host copy. Uploaded
+    /// once per training step, reused across all micro-batches.
+    fn param_buffers<T: PjrtScalar>(
+        &self,
+        net: &Network<T>,
+    ) -> Result<Vec<xla::PjRtBuffer>, RuntimeError> {
+        let dims = net.dims();
+        let mut bufs = Vec::with_capacity(2 * (dims.len() - 1));
+        for l in 0..dims.len() - 1 {
+            let w = &net.layers()[l].w;
+            // Column-major [in, out] bytes == row-major [out, in]: zero-copy.
+            bufs.push(self.client.buffer_from_host_buffer(
+                w.as_slice(),
+                &[dims[l + 1], dims[l]],
+                None,
+            )?);
+            bufs.push(self.client.buffer_from_host_buffer(
+                &net.layers()[l + 1].b,
+                &[dims[l + 1]],
+                None,
+            )?);
+        }
+        Ok(bufs)
+    }
+
+    /// Pack a range of batch columns into a [B, rows] device buffer,
+    /// zero-padding up to the static micro-batch.
+    fn batch_buffer<T: PjrtScalar>(
+        &self,
+        m: &Matrix<T>,
+        lo: usize,
+        hi: usize,
+        rows: usize,
+    ) -> Result<xla::PjRtBuffer, RuntimeError> {
+        let bsz = self.meta.micro_batch;
+        debug_assert!(hi - lo <= bsz);
+        if hi - lo == bsz {
+            // Full chunk: the column-major [rows, B] slice is exactly the
+            // row-major [B, rows] argument — zero-copy upload.
+            return Ok(self.client.buffer_from_host_buffer(
+                &m.as_slice()[lo * rows..hi * rows],
+                &[bsz, rows],
+                None,
+            )?);
+        }
+        let mut padded = vec![<T as Scalar>::ZERO; bsz * rows];
+        padded[..(hi - lo) * rows].copy_from_slice(&m.as_slice()[lo * rows..hi * rows]);
+        Ok(self.client.buffer_from_host_buffer(&padded, &[bsz, rows], None)?)
+    }
+
+    /// Network output for an arbitrary-size batch (columns = samples),
+    /// micro-batching + padding internally. The paper's `output()` on the
+    /// AOT path.
+    pub fn forward_batch<T: PjrtScalar>(
+        &self,
+        net: &Network<T>,
+        x: &Matrix<T>,
+    ) -> Result<Matrix<T>, RuntimeError> {
+        self.check_net(net)?;
+        let (in_sz, out_sz) = (self.meta.dims[0], *self.meta.dims.last().unwrap());
+        if x.rows() != in_sz {
+            return invalid(format!("input rows {} != dims[0] {}", x.rows(), in_sz));
+        }
+        let params = self.param_buffers(net)?;
+        let bsz = self.meta.micro_batch;
+        let mut out = Matrix::zeros(out_sz, x.cols());
+        let mut lo = 0;
+        while lo < x.cols() {
+            let hi = (lo + bsz).min(x.cols());
+            let xl = self.batch_buffer(x, lo, hi, in_sz)?;
+            let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            args.push(&xl);
+            let result = self.forward.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+                .to_literal_sync()?;
+            let a = result.to_tuple1()?;
+            let vals: Vec<T> = a.to_vec()?;
+            // vals is [bsz, out] row-major == [out, bsz] column-major.
+            out.as_mut_slice()[lo * out_sz..hi * out_sz]
+                .copy_from_slice(&vals[..(hi - lo) * out_sz]);
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Batch-summed tendencies for an arbitrary-size shard, micro-batching
+    /// with mask padding — the compute half of the paper's `train_batch`,
+    /// executed by the AOT artifacts.
+    pub fn grad_batch<T: PjrtScalar>(
+        &self,
+        net: &Network<T>,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+    ) -> Result<Gradients<T>, RuntimeError> {
+        self.check_net(net)?;
+        let (in_sz, out_sz) = (self.meta.dims[0], *self.meta.dims.last().unwrap());
+        if x.rows() != in_sz || y.rows() != out_sz || x.cols() != y.cols() {
+            return invalid(format!(
+                "bad shard shapes x[{}x{}] y[{}x{}] for dims {:?}",
+                x.rows(),
+                x.cols(),
+                y.rows(),
+                y.cols(),
+                self.meta.dims
+            ));
+        }
+        let params = self.param_buffers(net)?;
+        let bsz = self.meta.micro_batch;
+        let dims = &self.meta.dims;
+        let mut grads = Gradients::zeros(dims);
+
+        let mut lo = 0;
+        while lo < x.cols() {
+            let hi = (lo + bsz).min(x.cols());
+            let xl = self.batch_buffer(x, lo, hi, in_sz)?;
+            let yl = self.batch_buffer(y, lo, hi, out_sz)?;
+            let mut mask = vec![<T as Scalar>::ZERO; bsz];
+            mask[..hi - lo].fill(<T as Scalar>::ONE);
+            let ml = self.client.buffer_from_host_buffer(&mask, &[bsz], None)?;
+
+            let mut args: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            args.push(&xl);
+            args.push(&yl);
+            args.push(&ml);
+            let result =
+                self.grad.execute_b::<&xla::PjRtBuffer>(&args)?[0][0].to_literal_sync()?;
+            let outputs = result.to_tuple()?;
+            if outputs.len() != 2 * (dims.len() - 1) {
+                return invalid(format!(
+                    "grad returned {} outputs, expected {}",
+                    outputs.len(),
+                    2 * (dims.len() - 1)
+                ));
+            }
+            for (l, pair) in outputs.chunks_exact(2).enumerate() {
+                // dwt_l [out, in] row-major == dw[l] [in, out] column-major.
+                let dwt: Vec<T> = pair[0].to_vec()?;
+                let dwm = Matrix::from_vec(dims[l], dims[l + 1], dwt);
+                grads.dw[l].add_assign(&dwm);
+                let db: Vec<T> = pair[1].to_vec()?;
+                crate::tensor::vecops::axpy(&mut grads.db[l + 1], <T as Scalar>::ONE, &db);
+            }
+            lo = hi;
+        }
+        Ok(grads)
+    }
+
+    /// Classification accuracy over a test set via the AOT forward pass.
+    pub fn accuracy<T: PjrtScalar>(
+        &self,
+        net: &Network<T>,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+    ) -> Result<f64, RuntimeError> {
+        if x.cols() == 0 {
+            return Ok(0.0);
+        }
+        let out = self.forward_batch(net, x)?;
+        let mut good = 0usize;
+        for j in 0..x.cols() {
+            if crate::tensor::vecops::argmax(out.col(j)) == crate::tensor::vecops::argmax(y.col(j))
+            {
+                good += 1;
+            }
+        }
+        Ok(good as f64 / x.cols() as f64)
+    }
+}
+
+impl CompiledNet {
+    /// Raw access to the grad executable (profiling probes).
+    pub fn grad_executable(&self) -> &xla::PjRtLoadedExecutable {
+        &self.grad
+    }
+}

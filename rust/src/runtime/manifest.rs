@@ -1,0 +1,224 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+
+use crate::nn::Activation;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Errors loading or validating a manifest.
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest: {0}")]
+    Invalid(String),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, ManifestError> {
+    Err(ManifestError::Invalid(msg.into()))
+}
+
+/// Metadata of one AOT-compiled network configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetMeta {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub activation: Activation,
+    pub micro_batch: usize,
+    /// "f32" or "f64".
+    pub dtype: String,
+    /// Entry-point name -> HLO file name (relative to the config dir).
+    pub entries: BTreeMap<String, String>,
+    /// Directory holding the HLO files.
+    pub dir: PathBuf,
+}
+
+impl NetMeta {
+    fn from_json(name: &str, v: &Json, dir: PathBuf) -> Result<Self, ManifestError> {
+        let dims: Option<Vec<usize>> = v
+            .get("dims")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
+            .flatten();
+        let dims = match dims {
+            Some(d) if d.len() >= 2 && d.iter().all(|&x| x > 0) => d,
+            _ => return invalid(format!("config '{name}': bad dims")),
+        };
+        let act_name = v
+            .get("activation")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': missing activation")))?;
+        let activation = Activation::parse(act_name)
+            .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': unknown activation '{act_name}'")))?;
+        let micro_batch = v
+            .get("micro_batch")
+            .and_then(Json::as_usize)
+            .filter(|&b| b > 0)
+            .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': bad micro_batch")))?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': missing dtype")))?
+            .to_string();
+        if dtype != "f32" && dtype != "f64" {
+            return invalid(format!("config '{name}': unsupported dtype '{dtype}'"));
+        }
+        let mut entries = BTreeMap::new();
+        let eobj = v
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': missing entries")))?;
+        for (k, file) in eobj {
+            let file = file
+                .as_str()
+                .ok_or_else(|| ManifestError::Invalid(format!("config '{name}': bad entry '{k}'")))?;
+            entries.insert(k.clone(), file.to_string());
+        }
+        for required in ["forward", "grad"] {
+            if !entries.contains_key(required) {
+                return invalid(format!("config '{name}': missing entry '{required}'"));
+            }
+        }
+        Ok(NetMeta {
+            name: name.to_string(),
+            dims,
+            activation,
+            micro_batch,
+            dtype,
+            entries,
+            dir,
+        })
+    }
+
+    /// Path of an entry point's HLO file.
+    pub fn entry_path(&self, entry: &str) -> Option<PathBuf> {
+        self.entries.get(entry).map(|f| self.dir.join(f))
+    }
+
+    /// Expected parameter shapes [(rows, cols) for wt, (len,) for b] in the
+    /// AOT argument order: wt_0, b_1, wt_1, b_2, ...
+    pub fn param_layout(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for l in 0..self.dims.len() - 1 {
+            out.push((self.dims[l + 1], self.dims[l])); // wt_l
+            out.push((self.dims[l + 1], 0)); // b_{l+1} (0 marks a vector)
+        }
+        out
+    }
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, NetMeta>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self, ManifestError> {
+        let root = root.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(root.join("manifest.json"))?;
+        let v = Json::parse(&text)?;
+        let cfgs = v
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| ManifestError::Invalid("missing 'configs'".into()))?;
+        let mut configs = BTreeMap::new();
+        for (name, cv) in cfgs {
+            let meta = NetMeta::from_json(name, cv, root.join(name))?;
+            configs.insert(name.clone(), meta);
+        }
+        Ok(Manifest { configs, root })
+    }
+
+    /// Look up a configuration by name.
+    pub fn get(&self, name: &str) -> Result<&NetMeta, ManifestError> {
+        self.configs.get(name).ok_or_else(|| {
+            ManifestError::Invalid(format!(
+                "no config '{name}' in manifest (have: {})",
+                self.configs.keys().cloned().collect::<Vec<_>>().join(", ")
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "nrs-man-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        dir
+    }
+
+    const GOOD: &str = r#"{
+      "version": 1,
+      "configs": {
+        "mnist": {
+          "dims": [784, 30, 10],
+          "activation": "sigmoid",
+          "micro_batch": 100,
+          "dtype": "f32",
+          "entries": {"forward": "forward.hlo.txt", "grad": "grad.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = write_manifest(GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        let meta = m.get("mnist").unwrap();
+        assert_eq!(meta.dims, vec![784, 30, 10]);
+        assert_eq!(meta.activation, Activation::Sigmoid);
+        assert_eq!(meta.micro_batch, 100);
+        assert_eq!(meta.dtype, "f32");
+        assert_eq!(
+            meta.entry_path("grad").unwrap(),
+            dir.join("mnist").join("grad.hlo.txt")
+        );
+        assert_eq!(meta.param_layout(), vec![(30, 784), (30, 0), (10, 30), (10, 0)]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_config_is_a_helpful_error() {
+        let dir = write_manifest(GOOD);
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.to_string().contains("mnist"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        for bad in [
+            r#"{"configs": {"x": {"dims": [5], "activation": "sigmoid", "micro_batch": 1, "dtype": "f32", "entries": {"forward": "f", "grad": "g"}}}}"#,
+            r#"{"configs": {"x": {"dims": [5, 2], "activation": "bogus", "micro_batch": 1, "dtype": "f32", "entries": {"forward": "f", "grad": "g"}}}}"#,
+            r#"{"configs": {"x": {"dims": [5, 2], "activation": "sigmoid", "micro_batch": 0, "dtype": "f32", "entries": {"forward": "f", "grad": "g"}}}}"#,
+            r#"{"configs": {"x": {"dims": [5, 2], "activation": "sigmoid", "micro_batch": 1, "dtype": "f16", "entries": {"forward": "f", "grad": "g"}}}}"#,
+            r#"{"configs": {"x": {"dims": [5, 2], "activation": "sigmoid", "micro_batch": 1, "dtype": "f32", "entries": {"forward": "f"}}}}"#,
+            r#"{"notconfigs": {}}"#,
+        ] {
+            let dir = write_manifest(bad);
+            assert!(Manifest::load(&dir).is_err(), "should reject: {bad}");
+            std::fs::remove_dir_all(dir).unwrap();
+        }
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(matches!(err, ManifestError::Io(_)));
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT execution runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and runs them from the Layer-3 hot path.
+//!
+//! Python never appears at runtime — `make artifacts` runs once at build
+//! time; afterwards the Rust binary is self-contained: it parses
+//! `artifacts/manifest.json`, compiles each entry point on the PJRT CPU
+//! client (`HloModuleProto::from_text_file` → `XlaComputation` →
+//! `client.compile`), and executes with zero-copy buffer reinterpretation
+//! (the Rust column-major matrices *are* the row-major transposed operands
+//! the JAX model was lowered with; see python/compile/model.py).
+
+mod engine;
+mod manifest;
+
+pub use engine::{CompiledNet, Engine, PjrtScalar, RuntimeError};
+pub use manifest::{Manifest, NetMeta};

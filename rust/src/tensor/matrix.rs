@@ -1,0 +1,537 @@
+//! Column-major dense matrix, mirroring Fortran array semantics.
+//!
+//! neural-fortran stores weights as rank-2 `real` arrays and leans on
+//! whole-array arithmetic (`matmul`, `transpose`, elementwise `*`/`+`).
+//! [`Matrix`] reproduces that: column-major storage (Fortran order), a
+//! blocked `matmul`, transpose-aware products used by fwdprop/backprop,
+//! and elementwise combinators.
+
+use super::rng::Rng;
+
+/// Scalar element type for tensors and networks — the Rust analogue of the
+/// paper's compile-time `rk` kind constant (`real32`/`real64`).
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + Send
+    + Sync
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn exp(self) -> Self;
+    fn tanh(self) -> Self;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    /// Parse from decimal text (for network file I/O).
+    fn parse(s: &str) -> Option<Self>;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn exp(self) -> Self {
+        f32::exp(self)
+    }
+    fn tanh(self) -> Self {
+        f32::tanh(self)
+    }
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    fn parse(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn exp(self) -> Self {
+        f64::exp(self)
+    }
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    fn parse(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+/// Column-major (Fortran-order) dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix<T = f32> {
+    rows: usize,
+    cols: usize,
+    /// data[i + j*rows] is element (i, j).
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Matrix<T> {
+    /// A rows×cols matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::ZERO; rows * cols] }
+    }
+
+    /// A rows×cols matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: T) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Xavier-style initialization used by the paper (Listing 5): normal
+    /// deviates scaled by 1/n_neurons, biases left at zero by the caller.
+    pub fn randn_scaled(rows: usize, cols: usize, scale: f64, rng: &mut Rng) -> Self {
+        // Fortran fills column-major; we match so identical seeds give
+        // identical layouts across engines.
+        Self::from_fn(rows, cols, |_, _| T::from_f64(rng.normal() * scale))
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i + j * self.rows] = v;
+    }
+
+    /// Column j as a slice (contiguous in column-major order).
+    pub fn col(&self, j: usize) -> &[T] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    pub fn col_mut(&mut self, j: usize) -> &mut [T] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Copy a range of columns [lo, hi) into a new matrix — the paper's
+    /// `x(:, batch_start:batch_end)` slice.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Matrix<T> {
+        assert!(lo <= hi && hi <= self.cols);
+        Matrix {
+            rows: self.rows,
+            cols: hi - lo,
+            data: self.data[lo * self.rows..hi * self.rows].to_vec(),
+        }
+    }
+
+    /// Gather selected columns into a new matrix.
+    pub fn gather_cols(&self, idx: &[usize]) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for (dst, &src) in idx.iter().enumerate() {
+            out.col_mut(dst).copy_from_slice(self.col(src));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix<T> {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product `self · x` (len(x) == cols).
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.cols, "matvec shape mismatch");
+        let mut y = vec![T::ZERO; self.rows];
+        // Column-major: accumulate one column at a time (stride-1 access).
+        for (j, &xj) in x.iter().enumerate() {
+            let col = self.col(j);
+            for (yi, &cij) in y.iter_mut().zip(col) {
+                *yi = *yi + cij * xj;
+            }
+        }
+        y
+    }
+
+    /// `selfᵀ · x` (len(x) == rows) — the paper's
+    /// `matmul(transpose(w), a)` in fwdprop, without materializing the
+    /// transpose.
+    pub fn t_matvec(&self, x: &[T]) -> Vec<T> {
+        assert_eq!(x.len(), self.rows, "t_matvec shape mismatch");
+        let mut y = vec![T::ZERO; self.cols];
+        for (j, yj) in y.iter_mut().enumerate() {
+            let col = self.col(j);
+            let mut acc = T::ZERO;
+            for (&cij, &xi) in col.iter().zip(x) {
+                acc = acc + cij * xi;
+            }
+            *yj = acc;
+        }
+        y
+    }
+
+    /// General matrix product `self · other`.
+    pub fn matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        // jik order: stride-1 over self's columns and out's columns.
+        for j in 0..other.cols {
+            let ocol = out.col_mut(j);
+            for k in 0..self.cols {
+                let b = other.get(k, j);
+                if b == T::ZERO {
+                    continue;
+                }
+                let acol = self.col(k);
+                for (o, &a) in ocol.iter_mut().zip(acol) {
+                    *o = *o + a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose — both operand
+    /// walks are stride-1 in column-major storage. Shape: [cols, other.cols].
+    pub fn tn_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.rows, other.rows, "tn_matmul shape mismatch");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        for j in 0..other.cols {
+            let bcol = other.col(j);
+            let ocol = out.col_mut(j);
+            for (i, o) in ocol.iter_mut().enumerate() {
+                let acol = &self.data[i * self.rows..(i + 1) * self.rows];
+                let mut acc = T::ZERO;
+                for (&a, &b) in acol.iter().zip(bcol) {
+                    acc = acc + a * b;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    /// Shape: [rows, other.rows].
+    pub fn nt_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.cols, other.cols, "nt_matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for k in 0..self.cols {
+            let acol = self.col(k);
+            let bcol = other.col(k);
+            for (j, &b) in bcol.iter().enumerate() {
+                if b == T::ZERO {
+                    continue;
+                }
+                let ocol = out.col_mut(j);
+                for (o, &a) in ocol.iter_mut().zip(acol) {
+                    *o = *o + a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Rank-1 update: `self += alpha * x yᵀ` (outer product). This is the
+    /// gradient accumulation `dw = matmul(a, δᵀ)` from Listing 7.
+    pub fn rank1_update(&mut self, alpha: T, x: &[T], y: &[T]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        for (j, &yj) in y.iter().enumerate() {
+            let s = alpha * yj;
+            let col = self.col_mut(j);
+            for (c, &xi) in col.iter_mut().zip(x) {
+                *c = *c + s * xi;
+            }
+        }
+    }
+
+    /// Elementwise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(T) -> T) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Matrix<T> {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// `self += alpha * other` (axpy) — the SGD update step.
+    pub fn axpy(&mut self, alpha: T, other: &Matrix<T>) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "axpy shape mismatch");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = *a + alpha * b;
+        }
+    }
+
+    /// Elementwise sum with another matrix, in place.
+    pub fn add_assign(&mut self, other: &Matrix<T>) {
+        self.axpy(T::ONE, other);
+    }
+
+    /// Fill with zeros, preserving shape (buffer reuse in hot loops).
+    pub fn fill_zero(&mut self) {
+        self.data.fill(T::ZERO);
+    }
+
+    /// Frobenius-norm of the difference — convergence / test helper.
+    pub fn max_abs_diff(&self, other: &Matrix<T>) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs().to_f64())
+            .fold(0.0, f64::max)
+    }
+
+    /// Cast to another scalar type (f32 <-> f64).
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+        }
+    }
+}
+
+/// Free-function vector helpers used throughout the native engine.
+pub mod vecops {
+    use super::Scalar;
+
+    /// y += alpha * x
+    pub fn axpy<T: Scalar>(y: &mut [T], alpha: T, x: &[T]) {
+        assert_eq!(y.len(), x.len());
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = *yi + alpha * xi;
+        }
+    }
+
+    /// Elementwise product into a new vector.
+    pub fn hadamard<T: Scalar>(a: &[T], b: &[T]) -> Vec<T> {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| x * y).collect()
+    }
+
+    /// Dot product.
+    pub fn dot<T: Scalar>(a: &[T], b: &[T]) -> T {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).fold(T::ZERO, |acc, (&x, &y)| acc + x * y)
+    }
+
+    /// Index of the maximum element (argmax) — used for digit prediction.
+    pub fn argmax<T: Scalar>(xs: &[T]) -> usize {
+        let mut best = 0;
+        for (i, v) in xs.iter().enumerate() {
+            if *v > xs[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Max |a - b| over the pair.
+    pub fn max_abs_diff<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(&x, &y)| (x - y).abs().to_f64()).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vecops::*;
+    use super::*;
+
+    fn m(rows: usize, cols: usize, vals: &[f64]) -> Matrix<f64> {
+        // Row-major input for readability, stored column-major.
+        Matrix::from_fn(rows, cols, |i, j| vals[i * cols + j])
+    }
+
+    #[test]
+    fn storage_is_column_major() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.as_slice(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(a.get(0, 2), 3.0);
+        assert_eq!(a.get(1, 0), 4.0);
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.cols(), 2);
+        assert_eq!(c.get(0, 0), 58.0);
+        assert_eq!(c.get(0, 1), 64.0);
+        assert_eq!(c.get(1, 0), 139.0);
+        assert_eq!(c.get(1, 1), 154.0);
+    }
+
+    #[test]
+    fn matvec_and_t_matvec_agree_with_matmul() {
+        let a = m(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let x = vec![10.0, 20.0];
+        let y = a.matvec(&x);
+        assert_eq!(y, vec![50.0, 110.0, 170.0]);
+        let xt = vec![1.0, 2.0, 3.0];
+        let yt = a.t_matvec(&xt);
+        // aᵀ = [[1,3,5],[2,4,6]]
+        assert_eq!(yt, vec![22.0, 28.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(2, 1), a.get(1, 2));
+    }
+
+    #[test]
+    fn rank1_update_is_outer_product() {
+        let mut a = Matrix::<f64>::zeros(2, 3);
+        a.rank1_update(2.0, &[1.0, 2.0], &[3.0, 4.0, 5.0]);
+        assert_eq!(a.get(0, 0), 6.0);
+        assert_eq!(a.get(1, 2), 20.0);
+    }
+
+    #[test]
+    fn cols_range_slices_like_fortran() {
+        let a = m(2, 4, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let s = a.cols_range(1, 3);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.col(0), &[2.0, 6.0]);
+        assert_eq!(s.col(1), &[3.0, 7.0]);
+    }
+
+    #[test]
+    fn gather_cols_reorders() {
+        let a = m(1, 3, &[10., 20., 30.]);
+        let g = a.gather_cols(&[2, 0, 2]);
+        assert_eq!(g.as_slice(), &[30.0, 10.0, 30.0]);
+    }
+
+    #[test]
+    fn axpy_updates_in_place() {
+        let mut a = m(2, 2, &[1., 1., 1., 1.]);
+        let b = m(2, 2, &[1., 2., 3., 4.]);
+        a.axpy(-0.5, &b);
+        assert_eq!(a.get(0, 0), 0.5);
+        assert_eq!(a.get(1, 1), -1.0);
+    }
+
+    #[test]
+    fn randn_scaled_has_expected_spread() {
+        let mut rng = Rng::new(123);
+        let w = Matrix::<f64>::randn_scaled(50, 50, 0.1, &mut rng);
+        let mean: f64 = w.as_slice().iter().sum::<f64>() / w.len() as f64;
+        let var: f64 =
+            w.as_slice().iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / w.len() as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var.sqrt() - 0.1).abs() < 0.01, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn cast_preserves_values() {
+        let a = m(2, 2, &[1.5, -2.25, 0.0, 4.0]);
+        let b: Matrix<f32> = a.cast();
+        assert_eq!(b.get(0, 1), -2.25f32);
+        let c: Matrix<f64> = b.cast();
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn vecops_basics() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        let mut y = vec![1.0, 1.0];
+        axpy(&mut y, 2.0, &[1.0, 2.0]);
+        assert_eq!(y, vec![3.0, 5.0]);
+        assert_eq!(hadamard(&[1.0, 2.0], &[3.0, 4.0]), vec![3.0, 8.0]);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::<f64>::zeros(2, 3);
+        let b = Matrix::<f64>::zeros(2, 2);
+        let _ = a.matmul(&b);
+    }
+}

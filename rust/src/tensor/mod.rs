@@ -1,0 +1,15 @@
+//! Dense tensor types and whole-array arithmetic.
+//!
+//! The paper models layers with contiguous Fortran arrays (`a(:)`, `b(:)`,
+//! `w(:,:)`) and relies on whole-array arithmetic plus `matmul`. This module
+//! provides the equivalent Rust substrate: a column-major [`Matrix`] (to
+//! mirror Fortran layout), elementwise ops, blocked matmul, and the
+//! deterministic RNG used for Xavier-style initialization.
+
+mod matrix;
+mod rng;
+mod stats;
+
+pub use matrix::{vecops, Matrix, Scalar};
+pub use rng::Rng;
+pub use stats::{mean, stddev, Summary};

@@ -1,0 +1,139 @@
+//! Minimal property-based testing kit (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly generated inputs; on
+//! failure it retries with progressively simpler inputs from the same
+//! generator (shrinking-lite: the generator receives a `size` hint that
+//! the driver reduces on failure) and reports the smallest failing case
+//! with its seed, so every failure is reproducible.
+
+use crate::tensor::Rng;
+
+/// Context handed to generators: a seeded RNG plus a size hint in 1..=100.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// A usize in [lo, hi] scaled toward lo for small sizes.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = span * self.size / 100;
+        lo + if scaled == 0 { 0 } else { self.rng.below(scaled + 1) }
+    }
+
+    /// A float in [lo, hi].
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// A vector of length `len` built by `f`.
+    pub fn vec_of<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs. Panics with the seed, size,
+/// and message of the smallest failing case found.
+pub fn check<I: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut generate: impl FnMut(&mut Gen) -> I,
+    mut prop: impl FnMut(&I) -> PropResult,
+) {
+    let base_seed = 0xC0FFEE ^ name.len() as u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 1 + (case * 100) / cases.max(1); // grow sizes over the run
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut Gen { rng: &mut rng, size });
+        if let Err(msg) = prop(&input) {
+            // Shrinking-lite: re-generate at smaller sizes from the same
+            // seed; keep the smallest size that still fails.
+            let mut smallest: (usize, I, String) = (size, input, msg);
+            let mut lo = 1usize;
+            while lo < smallest.0 {
+                let mid = (lo + smallest.0) / 2;
+                let mut rng = Rng::new(seed);
+                let candidate = generate(&mut Gen { rng: &mut rng, size: mid });
+                match prop(&candidate) {
+                    Err(m) => smallest = (mid, candidate, m),
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, size={}):\n  input: {:?}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "addition commutes",
+            50,
+            |g| (g.f64_in(-5.0, 5.0), g.f64_in(-5.0, 5.0)),
+            |&(a, b)| {
+                count += 1;
+                ensure(a + b == b + a, "commutativity")
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |g| g.usize_in(0, 100), |_| ensure(false, "nope"));
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // Fails for v.len() >= 5; shrinker should land near the boundary.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "small vectors only",
+                100,
+                |g| {
+                    let n = g.usize_in(0, 50);
+                    g.vec_of(n, |g| g.f64_in(0.0, 1.0))
+                },
+                |v| ensure(v.len() < 5, format!("len={}", v.len())),
+            );
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("property 'small vectors only' failed"));
+    }
+
+    #[test]
+    fn gen_bounds_respected() {
+        let mut rng = Rng::new(1);
+        let mut g = Gen { rng: &mut rng, size: 100 };
+        for _ in 0..1000 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+}

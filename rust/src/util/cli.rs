@@ -1,0 +1,179 @@
+//! Tiny command-line parser: `subcommand --flag value --switch` style,
+//! with `--key=value` also accepted. Built from scratch (no clap offline).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, flags, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Errors from argument parsing/validation.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value '{value}' for --{flag}: {msg}")]
+    BadValue { flag: String, value: String, msg: String },
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `spec` lists the flags that take a
+    /// value; anything else starting with `--` is treated as a switch.
+    pub fn parse<S: AsRef<str>>(
+        raw: &[S],
+        value_flags: &[&str],
+        switch_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.iter().map(|s| s.as_ref().to_string()).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if value_flags.contains(&name.as_str()) {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.flags.insert(name, value);
+                } else if switch_flags.contains(&name.as_str()) {
+                    if inline.is_some() {
+                        return Err(CliError::BadValue {
+                            flag: name.clone(),
+                            value: inline.unwrap(),
+                            msg: "switch takes no value".into(),
+                        });
+                    }
+                    out.switches.push(name);
+                } else {
+                    return Err(CliError::UnknownFlag(name));
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// String flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with a default.
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Presence of a switch.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Typed flag value via FromStr.
+    pub fn get_parsed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| CliError::BadValue {
+                flag: name.to_string(),
+                value: v.to_string(),
+                msg: e.to_string(),
+            }),
+        }
+    }
+
+    /// Comma-separated usize list (e.g. `--dims 784,30,10`).
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim().parse::<usize>().map_err(|e| CliError::BadValue {
+                        flag: name.to_string(),
+                        value: v.to_string(),
+                        msg: e.to_string(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VALS: &[&str] = &["dims", "eta", "epochs", "out"];
+    const SWITCHES: &[&str] = &["verbose", "force"];
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &["train", "--dims", "784,30,10", "--eta=3.0", "--verbose", "extra"],
+            VALS,
+            SWITCHES,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("dims"), Some("784,30,10"));
+        assert_eq!(a.get("eta"), Some("3.0"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("force"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&["x", "--eta", "2.5", "--dims", "3,5,2"], VALS, SWITCHES).unwrap();
+        assert_eq!(a.get_parsed::<f64>("eta", 1.0).unwrap(), 2.5);
+        assert_eq!(a.get_parsed::<u32>("epochs", 30).unwrap(), 30);
+        assert_eq!(a.get_usize_list("dims", &[1]).unwrap(), vec![3, 5, 2]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            Args::parse(&["--bogus"], VALS, SWITCHES),
+            Err(CliError::UnknownFlag(_))
+        ));
+        assert!(matches!(
+            Args::parse(&["--eta"], VALS, SWITCHES),
+            Err(CliError::MissingValue(_))
+        ));
+        let a = Args::parse(&["--eta", "abc"], VALS, SWITCHES).unwrap();
+        assert!(matches!(a.get_parsed::<f64>("eta", 0.0), Err(CliError::BadValue { .. })));
+        let a = Args::parse(&["--dims", "3,x"], VALS, SWITCHES).unwrap();
+        assert!(a.get_usize_list("dims", &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse::<&str>(&[], VALS, SWITCHES).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("out", "artifacts"), "artifacts");
+        assert_eq!(a.get_usize_list("dims", &[784, 30, 10]).unwrap(), vec![784, 30, 10]);
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained substrates: JSON parsing (artifact manifests) and
+//! command-line parsing (no external dependencies are available offline,
+//! so these are built from scratch and tested here).
+
+pub mod cli;
+pub mod json;

@@ -1,0 +1,190 @@
+//! End-to-end CLI tests: drive the real `neural-rs` binary the way a user
+//! would (train/eval/save/load/gen-data/inspect, plus the TCP
+//! distributed-memory mode across OS processes).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_neural-rs"))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("nrs-cli-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("USAGE"));
+    assert!(text.contains("train"));
+    assert!(text.contains("scaling"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails() {
+    let out = bin().args(["train", "--bogus-flag", "1"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown flag"));
+}
+
+#[test]
+fn train_native_save_then_eval() {
+    let dir = tmpdir("train");
+    let model = dir.join("net.txt");
+    let out = bin()
+        .args([
+            "train", "--engine", "native", "--train-n", "1500", "--test-n", "300",
+            "--epochs", "6", "--batch-size", "100", "--dims", "784,20,10",
+            "--data-dir", "/nonexistent", // force synthetic
+            "--save", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Initial accuracy:"), "{text}");
+    assert!(text.contains("Epoch  6 done"), "{text}");
+    assert!(model.exists());
+
+    // eval the saved model on the same synthetic distribution.
+    let out = bin()
+        .args([
+            "eval", "--load", model.to_str().unwrap(), "--test-n", "300",
+            "--data-dir", "/nonexistent",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy"), "{text}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn train_with_config_file_and_override() {
+    let dir = tmpdir("cfg");
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+name = "cli-test"
+[network]
+dims = [784, 16, 10]
+[training]
+epochs = 2
+batch_size = 200
+[data]
+train_n = 800
+test_n = 200
+[runtime]
+engine = "native"
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "train", "--config", cfg.to_str().unwrap(),
+            "--epochs", "3", // CLI overrides the file
+            "--data-dir", "/nonexistent",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Epoch  3 done"), "{text}");
+    assert!(!text.contains("Epoch  4 done"), "{text}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn gen_data_writes_idx_files() {
+    let dir = tmpdir("gendata");
+    let out = bin()
+        .args(["gen-data", "--out", dir.to_str().unwrap(), "--n", "120"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    for f in [
+        "train-images-idx3-ubyte",
+        "train-labels-idx1-ubyte",
+        "t10k-images-idx3-ubyte",
+        "t10k-labels-idx1-ubyte",
+    ] {
+        assert!(dir.join(f).exists(), "missing {f}");
+    }
+    // Round-trip: training should accept the generated IDX directory.
+    let out = bin()
+        .args([
+            "train", "--engine", "native", "--data-dir", dir.to_str().unwrap(),
+            "--train-n", "120", "--test-n", "20", "--epochs", "1",
+            "--batch-size", "30", "--dims", "784,8,10",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn inspect_lists_artifact_configs() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let out = bin().args(["inspect", "--artifacts", artifacts.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mnist"), "{text}");
+    assert!(text.contains("micro-batch"), "{text}");
+}
+
+/// Distributed-memory training: leader + 2 workers as separate OS
+/// processes over TCP, exactly the paper's multi-image execution model.
+#[test]
+fn tcp_three_process_training() {
+    let port = 47311;
+    let addr = format!("127.0.0.1:{port}");
+    let common = [
+        "train", "--comm", "tcp", "--images", "3", "--engine", "native",
+        "--train-n", "600", "--test-n", "150", "--epochs", "2",
+        "--batch-size", "120", "--dims", "784,12,10", "--data-dir", "/nonexistent",
+    ];
+    let mut leader = bin()
+        .args(common)
+        .args(["--tcp-role", "leader", "--tcp-addr", &addr])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let workers: Vec<_> = [2usize, 3]
+        .iter()
+        .map(|img| {
+            bin()
+                .args(common)
+                .args(["--tcp-role", "worker", "--tcp-addr", &addr, "--image", &img.to_string()])
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+
+    let out = leader.wait_with_output().unwrap();
+    for mut w in workers {
+        assert!(w.wait().unwrap().success(), "worker failed");
+    }
+    assert!(out.status.success(), "leader failed");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Initial accuracy:"), "{text}");
+    assert!(text.contains("Epoch  2 done"), "{text}");
+    assert!(text.contains("3 images (tcp)"), "{text}");
+}

@@ -1,0 +1,175 @@
+//! Integration tests across the full stack: artifacts (L1/L2 via AOT) ↔
+//! runtime ↔ native engine ↔ coordinator. These require `make artifacts`
+//! to have populated `artifacts/`; they are skipped (with a loud message)
+//! when artifacts are missing so plain `cargo test` works pre-AOT.
+
+use neural_rs::data::{label_digits, synthesize, Dataset};
+use neural_rs::nn::{Activation, Network};
+use neural_rs::runtime::{Engine, Manifest};
+use neural_rs::tensor::{Matrix, Rng};
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+        None
+    }
+}
+
+/// PJRT grad == native-engine grad on the golden f32 config.
+#[test]
+fn golden_grads_pjrt_matches_native_f32() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("golden").unwrap();
+    let engine = Engine::new().unwrap();
+    let net = engine.load(meta).unwrap();
+
+    let mut network = Network::<f32>::new(&meta.dims, meta.activation, 42);
+    let mut rng = Rng::new(7);
+    // 13 samples: exercises 2 full micro-batches (B=5) + a padded tail.
+    let x = Matrix::from_fn(meta.dims[0], 13, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let y = Matrix::from_fn(*meta.dims.last().unwrap(), 13, |i, j| {
+        if (i + j) % 3 == 0 {
+            1.0
+        } else {
+            0.0
+        }
+    });
+
+    let pjrt = net.grad_batch(&network, &x, &y).unwrap();
+    let native = network.grad_batch(&x, &y);
+
+    assert_eq!(pjrt.dims(), native.dims());
+    for l in 0..pjrt.dw.len() {
+        let d = pjrt.dw[l].max_abs_diff(&native.dw[l]);
+        assert!(d < 2e-5, "dw[{l}] differs by {d}");
+    }
+    for l in 0..pjrt.db.len() {
+        let d = neural_rs::tensor::vecops::max_abs_diff(&pjrt.db[l], &native.db[l]);
+        assert!(d < 2e-5, "db[{l}] differs by {d}");
+    }
+}
+
+/// Same check at f64 with tight tolerance, on the tanh config.
+#[test]
+fn golden_grads_pjrt_matches_native_f64() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("golden64").unwrap();
+    let engine = Engine::new().unwrap();
+    let net = engine.load(meta).unwrap();
+
+    let mut network = Network::<f64>::new(&meta.dims, meta.activation, 3);
+    let mut rng = Rng::new(11);
+    let x = Matrix::from_fn(meta.dims[0], 7, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Matrix::from_fn(*meta.dims.last().unwrap(), 7, |i, j| ((i * j) % 2) as f64);
+
+    let pjrt = net.grad_batch(&network, &x, &y).unwrap();
+    let native = network.grad_batch(&x, &y);
+    for l in 0..pjrt.dw.len() {
+        let d = pjrt.dw[l].max_abs_diff(&native.dw[l]);
+        assert!(d < 1e-11, "dw[{l}] differs by {d}");
+    }
+}
+
+/// PJRT forward == native output over a padded batch.
+#[test]
+fn forward_batch_matches_native_output() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("golden").unwrap();
+    let engine = Engine::new().unwrap();
+    let net = engine.load(meta).unwrap();
+
+    let network = Network::<f32>::new(&meta.dims, meta.activation, 123);
+    let mut rng = Rng::new(5);
+    let x = Matrix::from_fn(meta.dims[0], 11, |_, _| rng.uniform_in(0.0, 1.0) as f32);
+    let pjrt_out = net.forward_batch(&network, &x).unwrap();
+    let native_out = network.output_batch(&x);
+    assert!(
+        pjrt_out.max_abs_diff(&native_out) < 2e-6,
+        "forward mismatch: {}",
+        pjrt_out.max_abs_diff(&native_out)
+    );
+}
+
+/// Accuracy via PJRT forward == accuracy via native engine.
+#[test]
+fn accuracy_paths_agree_on_synthetic_digits() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("mnist").unwrap();
+    let engine = Engine::new().unwrap();
+    let net = engine.load(meta).unwrap();
+
+    let network = Network::<f32>::new(&meta.dims, meta.activation, 9);
+    let test: Dataset<f32> = synthesize(300, 17);
+    let y = test.one_hot();
+    let pjrt_acc = net.accuracy(&network, &test.images, &y).unwrap();
+    let native_acc = network.accuracy(&test.images, &y);
+    assert!(
+        (pjrt_acc - native_acc).abs() < 1e-9,
+        "pjrt {pjrt_acc} vs native {native_acc}"
+    );
+}
+
+/// Engine rejects mismatched networks with helpful errors.
+#[test]
+fn engine_validates_network_against_artifact() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("golden").unwrap();
+    let engine = Engine::new().unwrap();
+    let net = engine.load(meta).unwrap();
+
+    // Wrong dims.
+    let wrong = Network::<f32>::new(&[2, 2], Activation::Sigmoid, 0);
+    let x = Matrix::zeros(2, 1);
+    assert!(net.forward_batch(&wrong, &x).is_err());
+
+    // Wrong activation.
+    let wrong_act = Network::<f32>::new(&meta.dims, Activation::Tanh, 0);
+    let x = Matrix::zeros(meta.dims[0], 1);
+    assert!(net.forward_batch(&wrong_act, &x).is_err());
+}
+
+/// A few SGD steps through the PJRT path must reduce the loss like the
+/// native path does (end-to-end trainability of the AOT artifacts).
+#[test]
+fn pjrt_training_steps_reduce_loss() {
+    let Some(root) = artifacts_root() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let meta = manifest.get("golden").unwrap();
+    let engine = Engine::new().unwrap();
+    let compiled = engine.load(meta).unwrap();
+
+    let mut network = Network::<f32>::new(&meta.dims, meta.activation, 21);
+    let mut rng = Rng::new(2);
+    let n = 20;
+    let x = Matrix::from_fn(meta.dims[0], n, |_, _| rng.uniform_in(0.0, 1.0) as f32);
+    // Learnable target: the class is the argmax of the first 3 inputs.
+    let mut y = Matrix::zeros(3, n);
+    for j in 0..n {
+        let l = neural_rs::tensor::vecops::argmax(&x.col(j)[..3]);
+        y.set(l, j, 1.0);
+    }
+
+    let before = network.loss_batch(&x, &y);
+    for _ in 0..300 {
+        let g = compiled.grad_batch(&network, &x, &y).unwrap();
+        network.update(&g, 5.0 / n as f32);
+    }
+    let after = network.loss_batch(&x, &y);
+    assert!(after < before * 0.5, "loss did not drop: {before} -> {after}");
+}
+
+/// One-hot helper sanity (used by every accuracy path).
+#[test]
+fn label_digits_matches_paper_semantics() {
+    let y: Matrix<f32> = label_digits(&[7]);
+    assert_eq!(y.get(7, 0), 1.0);
+    assert_eq!(y.as_slice().iter().sum::<f32>(), 1.0);
+}

@@ -1,0 +1,307 @@
+//! Property-based tests over the whole-system invariants DESIGN.md §6
+//! calls out, using the in-repo testkit (seeded generation + shrinking).
+
+use neural_rs::collectives::{Communicator, LocalComm, ReduceAlgo, Team};
+use neural_rs::coordinator::{BatchStrategy, Trainer, TrainerOptions};
+use neural_rs::data::{label_digits, shard_bounds, synthesize, Dataset};
+use neural_rs::nn::{Activation, Gradients, Network};
+use neural_rs::tensor::{vecops, Matrix, Rng};
+use neural_rs::testkit::{check, ensure};
+
+/// co_sum: result equals the per-element sum of all deposits, for every
+/// algorithm, team size, and buffer length.
+#[test]
+fn prop_co_sum_is_elementwise_sum() {
+    check(
+        "co_sum elementwise",
+        25,
+        |g| {
+            let n = g.usize_in(1, 8);
+            let len = g.usize_in(1, 4000);
+            let seed = g.rng.next_u64();
+            let algo = ReduceAlgo::ALL[g.usize_in(0, 2)];
+            (n, len, seed, algo)
+        },
+        |&(n, len, seed, algo)| {
+            let comms = Team::with_algo(n, algo);
+            let results: Vec<Vec<f64>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..n)
+                    .map(|rank| {
+                        let comm = &comms[rank];
+                        s.spawn(move || {
+                            let mut rng = Rng::new(seed + rank as u64);
+                            let mut buf: Vec<f64> =
+                                (0..len).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                            let mine = buf.clone();
+                            comm.co_sum(&mut buf);
+                            (mine, buf)
+                        })
+                    })
+                    .collect();
+                let outs: Vec<(Vec<f64>, Vec<f64>)> =
+                    handles.into_iter().map(|h| h.join().unwrap()).collect();
+                // Independent reference sum of the deposits.
+                let mut want = vec![0.0f64; len];
+                for (mine, _) in &outs {
+                    for (w, &m) in want.iter_mut().zip(mine) {
+                        *w += m;
+                    }
+                }
+                outs.into_iter()
+                    .map(|(_, got)| {
+                        got.iter().zip(&want).map(|(g, w)| (g - w).abs()).collect()
+                    })
+                    .collect()
+            });
+            for diffs in results {
+                let max: f64 = diffs.iter().copied().fold(0.0, f64::max);
+                if max > 1e-9 {
+                    return Err(format!("algo {algo:?} n={n} len={len}: max diff {max}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// co_broadcast: every image ends with exactly the source's buffer.
+#[test]
+fn prop_broadcast_replicates_source() {
+    check(
+        "broadcast replicates",
+        20,
+        |g| {
+            let n = g.usize_in(1, 6);
+            let len = g.usize_in(1, 2000);
+            let src = 1 + g.usize_in(0, n - 1);
+            let seed = g.rng.next_u64();
+            (n, len, src, seed)
+        },
+        |&(n, len, src, seed)| {
+            let comms = Team::new(n);
+            let ok = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..n)
+                    .map(|rank| {
+                        let comm = &comms[rank];
+                        s.spawn(move || {
+                            let mut rng = Rng::new(seed + rank as u64);
+                            let mut buf: Vec<f32> =
+                                (0..len).map(|_| rng.uniform() as f32).collect();
+                            let src_copy: Vec<f32> = {
+                                let mut r2 = Rng::new(seed + (src - 1) as u64);
+                                (0..len).map(|_| r2.uniform() as f32).collect()
+                            };
+                            comm.co_broadcast(&mut buf, src);
+                            buf == src_copy
+                        })
+                    })
+                    .collect();
+                handles.into_iter().all(|h| h.join().unwrap())
+            });
+            ensure(ok, "some image did not receive the source buffer")
+        },
+    );
+}
+
+/// Sharding: disjoint cover, balanced within one sample.
+#[test]
+fn prop_shard_bounds_partition() {
+    check(
+        "shard partition",
+        100,
+        |g| (g.usize_in(0, 10_000), g.usize_in(1, 16)),
+        |&(len, n)| {
+            let mut covered = 0usize;
+            let mut prev = 0usize;
+            let mut min_sz = usize::MAX;
+            let mut max_sz = 0usize;
+            for img in 1..=n {
+                let (lo, hi) = shard_bounds(len, img, n);
+                ensure(lo == prev, format!("gap before image {img}"))?;
+                prev = hi;
+                covered += hi - lo;
+                min_sz = min_sz.min(hi - lo);
+                max_sz = max_sz.max(hi - lo);
+            }
+            ensure(prev == len && covered == len, "shards must cover exactly")?;
+            ensure(max_sz - min_sz <= 1, format!("imbalance {min_sz}..{max_sz}"))
+        },
+    );
+}
+
+/// Gradients: flatten/unflatten is an exact round trip for random dims.
+#[test]
+fn prop_gradients_flatten_round_trip() {
+    check(
+        "gradients round trip",
+        50,
+        |g| {
+            let layers = g.usize_in(2, 5);
+            let dims: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 40)).collect();
+            let seed = g.rng.next_u64();
+            (dims, seed)
+        },
+        |&(ref dims, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut g: Gradients<f64> = Gradients::zeros(dims);
+            for m in &mut g.dw {
+                for v in m.as_mut_slice() {
+                    *v = rng.normal();
+                }
+            }
+            for b in &mut g.db {
+                for v in b.iter_mut() {
+                    *v = rng.normal();
+                }
+            }
+            let flat = g.to_flat();
+            let mut h: Gradients<f64> = Gradients::zeros(dims);
+            h.unflatten_from(&flat);
+            ensure(g == h, "round trip mismatch")
+        },
+    );
+}
+
+/// Network save/load: exact round trip for random shapes and activations.
+#[test]
+fn prop_network_io_round_trip() {
+    check(
+        "network io round trip",
+        30,
+        |g| {
+            let layers = g.usize_in(2, 4);
+            let dims: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 30)).collect();
+            let act = Activation::ALL[g.usize_in(0, Activation::ALL.len() - 1)];
+            let seed = g.rng.next_u64();
+            (dims, act, seed)
+        },
+        |&(ref dims, act, seed)| {
+            let net = Network::<f32>::new(dims, act, seed);
+            let mut buf = Vec::new();
+            net.save_to(&mut buf).map_err(|e| e.to_string())?;
+            let loaded = Network::<f32>::load_from(&buf[..]).map_err(|e| e.to_string())?;
+            ensure(net.params_close(&loaded, 0.0), "params changed across save/load")?;
+            ensure(loaded.activation() == act, "activation changed")
+        },
+    );
+}
+
+/// Params flatten layout equals gradients flatten layout (the invariant
+/// the co_broadcast replica sync and SGD update both rely on).
+#[test]
+fn prop_param_and_gradient_layouts_agree() {
+    check(
+        "param/grad layout agreement",
+        30,
+        |g| {
+            let layers = g.usize_in(2, 4);
+            let dims: Vec<usize> = (0..layers).map(|_| g.usize_in(1, 25)).collect();
+            (dims, g.rng.next_u64())
+        },
+        |&(ref dims, seed)| {
+            // update(grads=params, eta=1) must zero the network exactly if
+            // the layouts agree.
+            let mut net = Network::<f64>::new(dims, Activation::Tanh, seed);
+            let flat = net.params_to_flat();
+            let mut g: Gradients<f64> = Gradients::zeros(dims);
+            g.unflatten_from(&flat);
+            net.update(&g, 1.0);
+            let after = net.params_to_flat();
+            let max = after.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+            ensure(max < 1e-12, format!("residual {max}"))
+        },
+    );
+}
+
+/// Data-parallel invariance: training with n images on the same global
+/// batches produces (numerically) the same model as serial training.
+#[test]
+fn prop_parallel_training_matches_serial() {
+    check(
+        "parallel == serial",
+        6,
+        |g| {
+            let n = g.usize_in(2, 5);
+            let hidden = g.usize_in(4, 24);
+            let batch = 8 * g.usize_in(2, 12);
+            let seed = g.rng.next_u64();
+            (n, hidden, batch, seed)
+        },
+        |&(n, hidden, batch, seed)| {
+            let dims = vec![784usize, hidden, 10];
+            let data: Dataset<f32> = synthesize(batch * 3, seed);
+            let opts = TrainerOptions {
+                dims: dims.clone(),
+                activation: Activation::Sigmoid,
+                eta: 2.0,
+                batch_size: batch,
+                epochs: 1,
+                seed,
+                batch_seed: seed ^ 1,
+                strategy: BatchStrategy::RandomStart,
+                optimizer: Default::default(),
+            };
+
+            let serial = {
+                let comm = neural_rs::collectives::NullComm;
+                let mut t = Trainer::new(&comm, opts.clone(), None);
+                for _ in 0..2 {
+                    t.train_epoch(&data);
+                }
+                t.net.params_to_flat()
+            };
+
+            let comms = Team::new(n);
+            let data_ref = &data;
+            let opts_ref = &opts;
+            let parallel: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut t: Trainer<f32, LocalComm> =
+                                Trainer::new(c, opts_ref.clone(), None);
+                            for _ in 0..2 {
+                                t.train_epoch(data_ref);
+                            }
+                            t.net.params_to_flat()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for p in &parallel {
+                let d = vecops::max_abs_diff(p, &serial);
+                if d > 5e-4 {
+                    return Err(format!("n={n} hidden={hidden} batch={batch}: diff {d}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// One-hot labels: a single 1 per column in the right row.
+#[test]
+fn prop_label_digits_one_hot() {
+    check(
+        "label one-hot",
+        50,
+        |g| {
+            let n = g.usize_in(0, 500);
+            let labels: Vec<u8> = (0..n).map(|_| (g.rng.below(10)) as u8).collect();
+            labels
+        },
+        |labels| {
+            let y: Matrix<f32> = label_digits(labels);
+            ensure(y.cols() == labels.len(), "column count")?;
+            for (j, &l) in labels.iter().enumerate() {
+                let col = y.col(j);
+                let total: f32 = col.iter().sum();
+                ensure(total == 1.0, format!("column {j} sums to {total}"))?;
+                ensure(col[l as usize] == 1.0, format!("column {j} misses its label"))?;
+            }
+            Ok(())
+        },
+    );
+}
