@@ -9,7 +9,9 @@
 //! otherwise the synthetic digit corpus (see DESIGN.md §5).
 //!
 //! Run:  cargo run --release --example mnist -- [epochs] [images] [engine]
-//! e.g.  cargo run --release --example mnist -- 30 4 pjrt
+//! e.g.  cargo run --release --example mnist -- 30 4 native
+//! (engine defaults to native; `pjrt` needs a build with --features pjrt
+//! and compiled artifacts)
 //!
 //! The run is recorded in EXPERIMENTS.md (Fig 3 / Listing 13).
 
@@ -24,8 +26,8 @@ fn main() {
     let epochs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(30);
     let images: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
     let engine = match args.get(2).map(|s| s.as_str()) {
-        Some("native") => EngineKind::Native,
-        _ => EngineKind::Pjrt,
+        Some("pjrt") => EngineKind::Pjrt,
+        _ => EngineKind::Native,
     };
 
     // The paper: 50000 training images, 10000 for validation.
@@ -50,7 +52,8 @@ fn main() {
             seed: 0,
             batch_seed: 20190301,
             strategy: Default::default(),
-                optimizer: Default::default(),
+            optimizer: Default::default(),
+            intra_threads: 1,
         },
         engine,
         artifacts: Some(("artifacts".into(), "mnist".into())),

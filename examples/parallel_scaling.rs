@@ -53,6 +53,7 @@ fn main() {
                 batch_seed: 77,
                 strategy: Default::default(),
                 optimizer: Default::default(),
+                intra_threads: 1,
             },
             engine,
             artifacts: Some(("artifacts".into(), "mnist".into())),

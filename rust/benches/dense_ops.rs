@@ -1,86 +1,355 @@
-//! Micro-bench — the L1/L2 hot path: per-call latency of the AOT `grad`
-//! and `forward` executables vs the native engine on the paper's
-//! 784-30-10 micro-batches. This is the number the coordinator's step
-//! time is built from; the §Perf iteration log in EXPERIMENTS.md tracks
-//! it across optimizations.
+//! Micro-bench — the native engine's dense-op hot path, before/after the
+//! blocked-GEMM + workspace rewrite.
+//!
+//! Three variants per op, on the paper's 784-30-10 micro-batch (batch 32)
+//! and a wide 1024x1024x1024 GEMM stress shape:
+//!
+//! - `naive`   — the seed kernels: `w.transpose()` materialized per call,
+//!               triple-loop matmul, ~10 temporaries per gradient;
+//! - `blocked` — the packed/blocked GEMM through a warmed zero-allocation
+//!               [`Workspace`] (the steady-state training path);
+//! - `threads` — the blocked path with output/batch columns sharded over
+//!               scoped std threads (the intra-image axis).
+//!
+//! Results are printed as a table and written to `BENCH_dense_ops.json`
+//! (overwriting the committed baseline) so later PRs have a perf
+//! trajectory to beat. A PJRT section is appended when this build carries
+//! the engine (`--features pjrt`) and `artifacts/` exists.
+//!
+//! Run: `cargo bench --bench dense_ops` (BENCH_FULL=1 for more reps).
 
 use neural_rs::data::synthesize;
 use neural_rs::metrics::{Stopwatch, Table};
-use neural_rs::nn::Network;
-use neural_rs::runtime::{Engine, Manifest};
-use neural_rs::tensor::Summary;
+use neural_rs::nn::{Gradients, Network, Workspace};
+use neural_rs::tensor::{vecops, Matrix, Rng, Summary};
+
+/// Replica of the seed's `grad_batch` (pre-rewrite): transpose copies,
+/// naive kernels, fresh temporaries per call. The baseline the acceptance
+/// speedup is measured against.
+fn grad_batch_seed(net: &Network<f32>, x: &Matrix<f32>, y: &Matrix<f32>) -> Gradients<f32> {
+    let dims = net.dims();
+    let act = net.activation();
+    let nlayers = dims.len();
+    let mut g = Gradients::zeros(dims);
+    let mut a_list: Vec<Matrix<f32>> = Vec::with_capacity(nlayers);
+    let mut z_list: Vec<Matrix<f32>> = Vec::with_capacity(nlayers);
+    a_list.push(x.clone());
+    z_list.push(Matrix::zeros(0, 0));
+    for n in 1..nlayers {
+        let wt = net.layers()[n - 1].w.transpose();
+        let mut z = wt.naive_matmul(&a_list[n - 1]);
+        for j in 0..z.cols() {
+            vecops::axpy(z.col_mut(j), 1.0, &net.layers()[n].b);
+        }
+        let a = z.map(|v| act.apply(v));
+        z_list.push(z);
+        a_list.push(a);
+    }
+    let last = nlayers - 1;
+    let mut delta = {
+        let mut d = a_list[last].clone();
+        d.axpy(-1.0, y);
+        let zp = z_list[last].map(|v| act.prime(v));
+        for (dv, &zv) in d.as_mut_slice().iter_mut().zip(zp.as_slice()) {
+            *dv *= zv;
+        }
+        d
+    };
+    for n in (1..nlayers).rev() {
+        g.dw[n - 1] = a_list[n - 1].naive_nt_matmul(&delta);
+        for j in 0..delta.cols() {
+            vecops::axpy(&mut g.db[n], 1.0, delta.col(j));
+        }
+        if n > 1 {
+            let mut back = net.layers()[n - 1].w.naive_matmul(&delta);
+            let zp = z_list[n - 1].map(|v| act.prime(v));
+            for (bv, &zv) in back.as_mut_slice().iter_mut().zip(zp.as_slice()) {
+                *bv *= zv;
+            }
+            delta = back;
+        }
+    }
+    g
+}
+
+/// Replica of the seed's `output_batch` (transpose + naive matmul).
+fn output_batch_seed(net: &Network<f32>, x: &Matrix<f32>) -> Matrix<f32> {
+    let act = net.activation();
+    let mut a = x.clone();
+    for n in 1..net.dims().len() {
+        let wt = net.layers()[n - 1].w.transpose();
+        let mut z = wt.naive_matmul(&a);
+        for j in 0..z.cols() {
+            vecops::axpy(z.col_mut(j), 1.0, &net.layers()[n].b);
+        }
+        z.map_inplace(|v| act.apply(v));
+        a = z;
+    }
+    a
+}
+
+fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
+    f(); // warmup
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed_s()
+        })
+        .collect();
+    Summary::of(&times)
+}
+
+struct Row {
+    section: &'static str,
+    op: &'static str,
+    variant: String,
+    us_per_call: f64,
+    throughput: f64,
+    throughput_unit: &'static str,
+}
 
 fn main() {
-    let root = std::path::Path::new("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("SKIP: run `make artifacts` first");
-        return;
-    }
-    let manifest = Manifest::load(root).unwrap();
-    let meta = manifest.get("mnist").unwrap();
-    let engine = Engine::new().unwrap();
-    let compiled = engine.load(meta).unwrap();
-    let mut network = Network::<f32>::new(&meta.dims, meta.activation, 1);
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = hw.clamp(2, 8);
+    let mlp_reps = if full { 500 } else { 100 };
+    let gemm_reps = if full { 10 } else { 3 };
+    let naive_gemm_reps = if full { 3 } else { 2 };
+    let mut rows: Vec<Row> = Vec::new();
 
-    let data = synthesize::<f32>(compiled.micro_batch(), 5);
+    // ---- 784-30-10 sigmoid, batch 32 (the paper's Table 1 micro-batch) ----
+    let batch = 32usize;
+    let net = Network::<f32>::new(&[784, 30, 10], neural_rs::nn::Activation::Sigmoid, 1);
+    let data = synthesize::<f32>(batch, 5);
     let x = data.images;
     let y = neural_rs::data::label_digits::<f32>(&data.labels);
+    let b = batch as f64;
+    println!("# dense_ops: 784-30-10 batch {batch} | {hw} hw threads (threaded rows use {threads})");
 
-    let reps = 100;
-    let mut table = Table::new(&["Op", "Engine", "µs/call", "samples/s"]);
-    let b = compiled.micro_batch() as f64;
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(grad_batch_seed(&net, &x, &y));
+    });
+    println!("grad  naive:    {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    let naive_grad = s.mean;
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "grad_batch",
+        variant: "naive_seed".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
 
-    // grad: PJRT
-    let times: Vec<f64> = (0..reps)
-        .map(|_| {
-            let sw = Stopwatch::start();
-            let g = compiled.grad_batch(&network, &x, &y).unwrap();
-            std::hint::black_box(g);
-            sw.elapsed_s()
-        })
-        .collect();
-    let s = Summary::of(&times);
-    println!("grad  pjrt:   {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
-    table.row(&["grad".into(), "pjrt".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+    let mut ws = Workspace::new(net.dims());
+    let mut g = Gradients::zeros(net.dims());
+    net.grad_batch_into(&x, &y, &mut ws, &mut g); // warm the workspace
+    let s = time_reps(mlp_reps, || {
+        g.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut g);
+        std::hint::black_box(&g);
+    });
+    println!("grad  blocked:  {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    let blocked_grad = s.mean;
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "grad_batch",
+        variant: "blocked_workspace".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
 
-    // grad: native
-    let times: Vec<f64> = (0..reps)
-        .map(|_| {
-            let sw = Stopwatch::start();
-            let g = network.grad_batch(&x, &y);
-            std::hint::black_box(g);
-            sw.elapsed_s()
-        })
-        .collect();
-    let s = Summary::of(&times);
-    println!("grad  native: {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
-    table.row(&["grad".into(), "native".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(net.grad_batch_threaded(&x, &y, threads));
+    });
+    println!("grad  threads:  {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    let threaded_grad = s.mean;
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "grad_batch",
+        variant: format!("blocked_threads_{threads}"),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
 
-    // forward: PJRT
-    let times: Vec<f64> = (0..reps)
-        .map(|_| {
-            let sw = Stopwatch::start();
-            let o = compiled.forward_batch(&network, &x).unwrap();
-            std::hint::black_box(o);
-            sw.elapsed_s()
-        })
-        .collect();
-    let s = Summary::of(&times);
-    println!("fwd   pjrt:   {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
-    table.row(&["forward".into(), "pjrt".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(output_batch_seed(&net, &x));
+    });
+    println!("fwd   naive:    {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "forward_batch",
+        variant: "naive_seed".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
 
-    // forward: native
-    let times: Vec<f64> = (0..reps)
-        .map(|_| {
-            let sw = Stopwatch::start();
-            let o = network.output_batch(&x);
-            std::hint::black_box(o);
-            sw.elapsed_s()
-        })
-        .collect();
-    let s = Summary::of(&times);
-    println!("fwd   native: {:9.1} µs/call  ({:.0} samples/s)", s.mean * 1e6, b / s.mean);
-    table.row(&["forward".into(), "native".into(), format!("{:.1}", s.mean * 1e6), format!("{:.0}", b / s.mean)]);
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(net.output_batch(&x));
+    });
+    println!("fwd   blocked:  {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "forward_batch",
+        variant: "blocked".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
 
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(net.output_batch_threaded(&x, threads));
+    });
+    println!("fwd   threads:  {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "forward_batch",
+        variant: format!("blocked_threads_{threads}"),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
+    // ---- wide stress shape: 1024 x 1024 x 1024 GEMM ----
+    let dim = 1024usize;
+    let mut rng = Rng::new(7);
+    let a = Matrix::<f32>::from_fn(dim, dim, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let bm = Matrix::<f32>::from_fn(dim, dim, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    let gflop = 2.0 * (dim as f64).powi(3) / 1e9;
+    println!("# gemm stress: {dim}x{dim}x{dim} ({gflop:.1} GFLOP/call)");
+
+    let s = time_reps(naive_gemm_reps, || {
+        std::hint::black_box(a.naive_matmul(&bm));
+    });
+    println!("gemm  naive:    {:9.1} ms/call ({:6.2} GFLOP/s)", s.mean * 1e3, gflop / s.mean);
+    let naive_gemm_s = s.mean;
+    rows.push(Row {
+        section: "gemm_1024",
+        op: "matmul",
+        variant: "naive".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: gflop / s.mean,
+        throughput_unit: "gflop_per_s",
+    });
+
+    let s = time_reps(gemm_reps, || {
+        std::hint::black_box(a.matmul(&bm));
+    });
+    println!("gemm  blocked:  {:9.1} ms/call ({:6.2} GFLOP/s)", s.mean * 1e3, gflop / s.mean);
+    let blocked_gemm_s = s.mean;
+    rows.push(Row {
+        section: "gemm_1024",
+        op: "matmul",
+        variant: "blocked".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: gflop / s.mean,
+        throughput_unit: "gflop_per_s",
+    });
+
+    let s = time_reps(gemm_reps, || {
+        std::hint::black_box(a.matmul_threaded(&bm, threads));
+    });
+    println!("gemm  threads:  {:9.1} ms/call ({:6.2} GFLOP/s)", s.mean * 1e3, gflop / s.mean);
+    let threaded_gemm_s = s.mean;
+    rows.push(Row {
+        section: "gemm_1024",
+        op: "matmul",
+        variant: format!("blocked_threads_{threads}"),
+        us_per_call: s.mean * 1e6,
+        throughput: gflop / s.mean,
+        throughput_unit: "gflop_per_s",
+    });
+
+    // ---- optional PJRT comparison (needs --features pjrt + artifacts) ----
+    if neural_rs::runtime::pjrt_available() {
+        let root = std::path::Path::new("artifacts");
+        match neural_rs::runtime::Manifest::load(root)
+            .ok()
+            .and_then(|m| m.get("mnist").ok().cloned())
+            .and_then(|meta| {
+                let engine = neural_rs::runtime::Engine::new().ok()?;
+                engine.load(&meta).ok()
+            }) {
+            Some(compiled) => {
+                let s = time_reps(mlp_reps, || {
+                    std::hint::black_box(compiled.grad_batch(&net, &x, &y).unwrap());
+                });
+                println!(
+                    "grad  pjrt:     {:9.1} µs/call ({:9.0} samples/s)",
+                    s.mean * 1e6,
+                    b / s.mean
+                );
+                rows.push(Row {
+                    section: "mlp_784_30_10_b32",
+                    op: "grad_batch",
+                    variant: "pjrt".into(),
+                    us_per_call: s.mean * 1e6,
+                    throughput: b / s.mean,
+                    throughput_unit: "samples_per_s",
+                });
+            }
+            None => eprintln!("# SKIP pjrt rows: artifacts missing (run `make artifacts`)"),
+        }
+    } else {
+        eprintln!("# SKIP pjrt rows: built without --features pjrt");
+    }
+
+    // ---- report ----
+    let grad_speedup = naive_grad / blocked_grad;
+    let grad_threads_speedup = naive_grad / threaded_grad;
+    let gemm_speedup = naive_gemm_s / blocked_gemm_s;
+    let gemm_threads_speedup = naive_gemm_s / threaded_gemm_s;
+    println!(
+        "\n# speedups vs naive seed: grad {grad_speedup:.2}x (threads {grad_threads_speedup:.2}x), \
+         gemm {gemm_speedup:.2}x (threads {gemm_threads_speedup:.2}x)"
+    );
+
+    let mut table = Table::new(&["Section", "Op", "Variant", "µs/call", "Throughput"]);
+    for r in &rows {
+        table.row(&[
+            r.section.to_string(),
+            r.op.to_string(),
+            r.variant.clone(),
+            format!("{:.1}", r.us_per_call),
+            format!("{:.1} {}", r.throughput, r.throughput_unit),
+        ]);
+    }
     println!("\n{}", table.render());
+
+    // ---- machine-readable baseline for later PRs ----
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"dense_ops/v1\",\n");
+    json.push_str("  \"measured\": true,\n");
+    json.push_str("  \"generated_by\": \"cargo bench --bench dense_ops\",\n");
+    json.push_str(&format!("  \"hw_threads\": {hw},\n"));
+    json.push_str(&format!("  \"threaded_variant_threads\": {threads},\n"));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"section\": \"{}\", \"op\": \"{}\", \"variant\": \"{}\", \
+             \"us_per_call\": {:.2}, \"{}\": {:.2}}}{}\n",
+            r.section,
+            r.op,
+            r.variant,
+            r.us_per_call,
+            r.throughput_unit,
+            r.throughput,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"speedups_vs_naive_seed\": {\n");
+    json.push_str(&format!("    \"grad_batch_blocked\": {grad_speedup:.2},\n"));
+    json.push_str(&format!("    \"grad_batch_threaded\": {grad_threads_speedup:.2},\n"));
+    json.push_str(&format!("    \"gemm_1024_blocked\": {gemm_speedup:.2},\n"));
+    json.push_str(&format!("    \"gemm_1024_threaded\": {gemm_threads_speedup:.2}\n"));
+    json.push_str("  }\n}\n");
+    match std::fs::write("BENCH_dense_ops.json", &json) {
+        Ok(()) => println!("# wrote BENCH_dense_ops.json"),
+        Err(e) => eprintln!("# could not write BENCH_dense_ops.json: {e}"),
+    }
 }

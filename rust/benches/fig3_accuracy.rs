@@ -14,10 +14,13 @@ use neural_rs::nn::Activation;
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    let (train_n, test_n, engine) = if full {
+    let (train_n, test_n, engine) = if full && neural_rs::runtime::pjrt_available() {
         (50_000, 10_000, EngineKind::Pjrt)
     } else {
-        (10_000, 2_000, EngineKind::Native)
+        if full {
+            eprintln!("# BENCH_FULL without --features pjrt: using the native engine");
+        }
+        (if full { 50_000 } else { 10_000 }, if full { 10_000 } else { 2_000 }, EngineKind::Native)
     };
     let epochs = 30;
     let (train, test) = load_or_synthesize::<f32>("data/mnist", train_n, test_n, 42);
@@ -35,7 +38,8 @@ fn main() {
             seed: 0,
             batch_seed: 20190301,
             strategy: Default::default(),
-                optimizer: Default::default(),
+            optimizer: Default::default(),
+            intra_threads: 1,
         },
         engine,
         artifacts: Some(("artifacts".into(), "mnist".into())),

@@ -44,7 +44,8 @@ fn run_child(engine: EngineKind) {
             seed: 0,
             batch_seed: 99,
             strategy: Default::default(),
-                optimizer: Default::default(),
+            optimizer: Default::default(),
+            intra_threads: 1,
         },
         engine,
         artifacts: Some(("artifacts".into(), "mnist_b32".into())),
@@ -78,7 +79,13 @@ fn main() {
 
     let exe = std::env::current_exe().expect("own path");
     let mut table = Table::new(&["Framework", "Elapsed (s)", "Peak RSS (MB)"]);
-    for engine in [EngineKind::Pjrt, EngineKind::Native] {
+    let engines: &[EngineKind] = if neural_rs::runtime::pjrt_available() {
+        &[EngineKind::Pjrt, EngineKind::Native]
+    } else {
+        eprintln!("# SKIP pjrt column: built without --features pjrt");
+        &[EngineKind::Native]
+    };
+    for &engine in engines {
         let out = std::process::Command::new(&exe)
             .env("NRS_TABLE1_CHILD", engine.name())
             .output()

@@ -53,6 +53,7 @@ fn main() {
                 batch_seed: 7,
                 strategy: Default::default(),
                 optimizer: Default::default(),
+                intra_threads: 1,
             },
             engine: EngineKind::Native,
             artifacts: None,
@@ -72,6 +73,45 @@ fn main() {
     if hw < 4 {
         println!("# (host has {hw} hw thread(s): threaded scaling is not meaningful here)");
     }
+
+    // ---- intra-image thread sweep (the second scaling axis) ----
+    // One image, batch columns sub-sharded across scoped threads inside
+    // grad_batch — orthogonal to (and composable with) the per-image
+    // sweep above, which the paper's design did not have.
+    println!("\n## intra-image threads mode (images=1, column-sharded grad_batch)");
+    let mut table = Table::new(&["Intra threads", "Elapsed (s)", "Parallel efficiency"]);
+    let mut t1_intra = 0.0;
+    for &t in PAPER_COUNTS.iter().filter(|&&t| t <= hw) {
+        let spec = ParallelSpec {
+            images: 1,
+            algo: ReduceAlgo::Tree,
+            opts: TrainerOptions {
+                dims: vec![784, 30, 10],
+                activation: Activation::Sigmoid,
+                eta: 3.0,
+                batch_size: 1200,
+                epochs,
+                seed: 0,
+                batch_seed: 7,
+                strategy: Default::default(),
+                optimizer: Default::default(),
+                intra_threads: t,
+            },
+            engine: EngineKind::Native,
+            artifacts: None,
+            eval_each_epoch: false,
+        };
+        let times: Vec<f64> =
+            (0..runs).map(|_| train_parallel(&spec, &train, &test).train_s).collect();
+        let s = Summary::of(&times);
+        if t == 1 {
+            t1_intra = s.mean;
+        }
+        let pe = t1_intra / (t as f64 * s.mean);
+        println!("intra={t:2}  {}  PE={pe:.3}", Table::fmt_summary(&s));
+        table.row(&[t.to_string(), Table::fmt_summary(&s), format!("{pe:.3}")]);
+    }
+    println!("\n{}", table.render());
 
     // ---- calibrated virtual-time model (the paper's 12-core sweep) ----
     println!("\n## model mode (costs calibrated from the real engine; see DESIGN.md §5)");

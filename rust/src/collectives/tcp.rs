@@ -51,12 +51,34 @@ impl Opcode {
 }
 
 /// Errors raised by the TCP communicator.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CommError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("protocol: {0}")]
+    Io(std::io::Error),
     Protocol(String),
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Protocol(msg) => write!(f, "protocol: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::Protocol(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 type Result<T> = std::result::Result<T, CommError>;

@@ -54,6 +54,9 @@ pub struct ExperimentConfig {
     pub images: usize,
     pub algo: ReduceAlgo,
     pub comm: CommKind,
+    /// Intra-image gradient threads (native engine only; see
+    /// `TrainerOptions::intra_threads`).
+    pub intra_threads: usize,
     // [runtime]
     pub engine: EngineKind,
     pub artifacts_dir: PathBuf,
@@ -80,7 +83,14 @@ impl Default for ExperimentConfig {
             images: 1,
             algo: ReduceAlgo::Tree,
             comm: CommKind::Local,
-            engine: EngineKind::Pjrt,
+            intra_threads: 1,
+            // The PJRT engine needs a `--features pjrt` build; default to
+            // what the binary at hand can actually run.
+            engine: if crate::runtime::pjrt_available() {
+                EngineKind::Pjrt
+            } else {
+                EngineKind::Native
+            },
             artifacts_dir: PathBuf::from("artifacts"),
             artifact_config: "mnist".into(),
         }
@@ -88,14 +98,43 @@ impl Default for ExperimentConfig {
 }
 
 /// Errors loading an experiment file.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("{0}")]
-    Toml(#[from] TomlError),
-    #[error("config: {0}")]
+    Io(std::io::Error),
+    Toml(TomlError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Toml(e) => write!(f, "{e}"),
+            Self::Invalid(msg) => write!(f, "config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::Toml(e) => Some(e),
+            Self::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+impl From<TomlError> for ConfigError {
+    fn from(e: TomlError) -> Self {
+        Self::Toml(e)
+    }
 }
 
 fn bad<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
@@ -189,6 +228,7 @@ impl ExperimentConfig {
         }
         if let Some(t) = doc.get("parallel") {
             cfg.images = get_usize(t, "images", cfg.images)?.max(1);
+            cfg.intra_threads = get_usize(t, "intra_threads", cfg.intra_threads)?.max(1);
             let algo = get_str(t, "algo", cfg.algo.name())?;
             cfg.algo = ReduceAlgo::parse(algo)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown reduce algo '{algo}'")))?;
@@ -238,6 +278,7 @@ impl ExperimentConfig {
             batch_seed: self.batch_seed,
             strategy: self.strategy,
             optimizer: self.optimizer,
+            intra_threads: self.intra_threads,
         }
     }
 }
@@ -299,6 +340,26 @@ mod tests {
         assert_eq!(c.epochs, 5);
         assert_eq!(c.batch_size, 1000);
         assert_eq!(c.dims, vec![784, 30, 10]);
+        assert_eq!(c.intra_threads, 1);
+    }
+
+    #[test]
+    fn intra_threads_parses_and_clamps() {
+        let c = ExperimentConfig::from_toml("[parallel]\nintra_threads = 4\n").unwrap();
+        assert_eq!(c.intra_threads, 4);
+        assert_eq!(c.trainer_options().intra_threads, 4);
+        let c = ExperimentConfig::from_toml("[parallel]\nintra_threads = 0\n").unwrap();
+        assert_eq!(c.intra_threads, 1, "0 clamps to serial");
+    }
+
+    #[test]
+    fn default_engine_matches_build_features() {
+        let c = ExperimentConfig::default();
+        if crate::runtime::pjrt_available() {
+            assert_eq!(c.engine, EngineKind::Pjrt);
+        } else {
+            assert_eq!(c.engine, EngineKind::Native);
+        }
     }
 
     #[test]

@@ -58,12 +58,19 @@ impl TomlValue {
 }
 
 /// Parse errors with line numbers.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// A parsed document: top-level keys live in the "" table.
 pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;

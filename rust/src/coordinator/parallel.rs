@@ -143,6 +143,7 @@ mod tests {
                 batch_seed: 2,
                 strategy: Default::default(),
                 optimizer: Default::default(),
+                intra_threads: 1,
             },
             engine: EngineKind::Native,
             artifacts: None,

@@ -8,12 +8,34 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 /// Errors from IDX parsing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IdxError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("format: {0}")]
+    Io(std::io::Error),
     Format(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Format(msg) => write!(f, "format: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::Format(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 fn format_err<T>(msg: impl Into<String>) -> Result<T, IdxError> {

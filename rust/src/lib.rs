@@ -21,5 +21,5 @@ pub mod tensor;
 pub mod testkit;
 pub mod util;
 
-pub use nn::{Activation, Gradients, Network};
+pub use nn::{Activation, Gradients, Network, Workspace};
 pub use tensor::Matrix;

@@ -28,7 +28,7 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "dims", "activation", "eta", "batch-size", "epochs", "seed", "batch-seed",
     "strategy", "optimizer", "train-n", "test-n", "data-dir", "data-seed", "images", "algo", "comm",
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
-    "runs", "max-images", "out", "n",
+    "runs", "max-images", "out", "n", "intra-threads",
 ];
 const SWITCH_FLAGS: &[&str] = &["quiet", "eval-each-epoch", "help"];
 
@@ -55,8 +55,9 @@ COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
   --train-n 50000 --test-n 10000
   --data-dir data/mnist  (real MNIST IDX if present, else synthetic)
   --images N             parallel images (default 1)
+  --intra-threads N      intra-image gradient threads (native engine; default 1)
   --algo tree            flat|tree|chunked collective-sum schedule
-  --engine pjrt|native   gradient engine (default pjrt)
+  --engine pjrt|native   gradient engine (default: pjrt when compiled in, else native)
   --artifacts artifacts  AOT artifact root
   --artifact-config mnist
   --save FILE            save the trained network
@@ -130,6 +131,7 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
         cfg.data_dir = PathBuf::from(d);
     }
     cfg.images = args.get_parsed("images", cfg.images)?;
+    cfg.intra_threads = args.get_parsed::<usize>("intra-threads", cfg.intra_threads)?.max(1);
     if let Some(a) = args.get("algo") {
         cfg.algo = neural_rs::collectives::ReduceAlgo::parse(a)
             .ok_or(format!("unknown algo '{a}'"))?;

@@ -20,12 +20,34 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 /// Errors from network file I/O.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum IoError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {line}: {msg}")]
+    Io(std::io::Error),
     Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::Parse { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for IoError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
 }
 
 fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {

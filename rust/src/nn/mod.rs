@@ -16,6 +16,7 @@ mod io;
 mod optimizer;
 mod layer;
 mod network;
+mod workspace;
 
 pub use activation::Activation;
 pub use optimizer::{Optimizer, OptimizerKind};
@@ -23,3 +24,4 @@ pub use cost::{quadratic_cost, quadratic_cost_prime};
 pub use grads::Gradients;
 pub use layer::Layer;
 pub use network::Network;
+pub use workspace::Workspace;

@@ -5,6 +5,8 @@ use super::activation::Activation;
 use super::cost::{quadratic_cost, quadratic_cost_prime};
 use super::grads::Gradients;
 use super::layer::Layer;
+use super::workspace::Workspace;
+use crate::tensor::gemm::{self, Op};
 use crate::tensor::{vecops, Matrix, Rng, Scalar};
 
 /// A feed-forward neural network of arbitrary structure — `network_type`
@@ -118,20 +120,75 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Batched pure output: columns of `x` are samples (whole-batch
-    /// matrix products — see `grad_batch` for the formulation).
+    /// matrix products — see `grad_batch` for the formulation). Runs the
+    /// blocked-GEMM forward pass through a scratch [`Workspace`].
     pub fn output_batch(&self, x: &Matrix<T>) -> Matrix<T> {
+        let mut ws = Workspace::new(&self.dims);
+        self.forward_pass(x, &mut ws);
+        ws.a.last().unwrap().clone()
+    }
+
+    /// [`Network::output_batch`] with the batch columns sharded across
+    /// `threads` scoped std threads (output columns are contiguous in
+    /// column-major storage, so shards write disjoint sub-slices).
+    pub fn output_batch_threaded(&self, x: &Matrix<T>, threads: usize) -> Matrix<T> {
         assert_eq!(x.rows(), self.dims[0], "input size mismatch");
-        let mut a = x.clone();
-        for n in 1..self.layers.len() {
-            let wt = self.layers[n - 1].w.transpose();
-            let mut z = wt.matmul(&a);
-            for j in 0..z.cols() {
-                vecops::axpy(z.col_mut(j), T::ONE, &self.layers[n].b);
-            }
-            z.map_inplace(|v| self.activation.apply(v));
-            a = z;
+        let n = x.cols();
+        let t = threads.max(1).min(n.max(1));
+        if t <= 1 {
+            return self.output_batch(x);
         }
-        a
+        let out_rows = self.output_size();
+        let mut out = Matrix::zeros(out_rows, n);
+        let shards = gemm::col_shards(n, t);
+        let mut rest: &mut [T] = out.as_mut_slice();
+        std::thread::scope(|s| {
+            for &(lo, hi) in &shards {
+                if hi == lo {
+                    continue;
+                }
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * out_rows);
+                rest = tail;
+                s.spawn(move || {
+                    let xs = x.cols_range(lo, hi);
+                    let o = self.output_batch(&xs);
+                    head.copy_from_slice(o.as_slice());
+                });
+            }
+            let _ = rest;
+        });
+        out
+    }
+
+    /// Whole-batch forward pass into the workspace:
+    /// `Z_n = W_{n-1}ᵀ·A_{n-1} + b_n`, `A_n = σ(Z_n)`, with `A_0 = x`
+    /// used in place (never copied). Allocation-free once `ws` is warm.
+    fn forward_pass(&self, x: &Matrix<T>, ws: &mut Workspace<T>) {
+        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
+        assert_eq!(ws.dims(), &self.dims[..], "workspace dims mismatch");
+        let batch = x.cols();
+        ws.bind(batch);
+        let (z, a, scratch) = (&mut ws.z, &mut ws.a, &mut ws.scratch);
+        for n in 1..self.layers.len() {
+            let w = &self.layers[n - 1].w;
+            {
+                let zn = &mut z[n];
+                if n == 1 {
+                    gemm::gemm_into(Op::T, w, Op::N, x, zn, false, scratch);
+                } else {
+                    gemm::gemm_into(Op::T, w, Op::N, &a[n - 1], zn, false, scratch);
+                }
+                let bn = &self.layers[n].b;
+                for j in 0..batch {
+                    vecops::axpy(zn.col_mut(j), T::ONE, bn);
+                }
+            }
+            let zn = &z[n];
+            let an = &mut a[n];
+            for (av, &zv) in an.as_mut_slice().iter_mut().zip(zn.as_slice()) {
+                *av = self.activation.apply(zv);
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -183,72 +240,139 @@ impl<T: Scalar> Network<T> {
     /// This is the compute half of `train_batch`, split out so the
     /// data-parallel coordinator can interpose the collective sum.
     ///
-    /// Batched formulation (perf pass, EXPERIMENTS.md §Perf): the
-    /// per-sample recurrences of Listings 6-7 vectorize exactly into
-    /// whole-batch matrix products —
-    ///   Z_n = W_{n-1}ᵀ·A_{n-1} + b_n,  Δ_L = (A_L − Y)⊙σ'(Z_L),
-    ///   dW_{n-1} = A_{n-1}·Δ_nᵀ,       Δ_n = (W_n·Δ_{n+1})⊙σ'(Z_n),
-    /// amortizing every weight-matrix fetch across the batch. Identical
-    /// math to [`Network::grad_batch_per_sample`] (asserted in tests).
-    pub fn grad_batch(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
-        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
-        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
-        assert_eq!(y.rows(), self.output_size(), "output size mismatch");
-        let nlayers = self.layers.len();
+    /// Convenience wrapper over [`Network::grad_batch_into`] that builds a
+    /// fresh [`Workspace`] and [`Gradients`] per call. Hot loops (the
+    /// trainer, the benches) hold a warmed workspace instead and go
+    /// through `grad_batch_into` directly, which is allocation-free.
+    pub fn grad_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
         let mut g = Gradients::zeros(&self.dims);
-        if x.cols() == 0 {
-            return g;
-        }
+        let mut ws = Workspace::new(&self.dims);
+        self.grad_batch_into(x, y, &mut ws, &mut g);
+        g
+    }
 
-        // Forward pass over the whole batch, keeping Z and A per layer.
-        let mut a_list: Vec<Matrix<T>> = Vec::with_capacity(nlayers);
-        let mut z_list: Vec<Matrix<T>> = Vec::with_capacity(nlayers);
-        a_list.push(x.clone());
-        z_list.push(Matrix::zeros(0, 0)); // input layer has no z
-        for n in 1..nlayers {
-            // Materializing wᵀ once per batch turns the contraction into
-            // axpy-style stride-1 loops that auto-vectorize; the copy is
-            // amortized over the whole batch (perf pass iteration 3).
-            let wt = self.layers[n - 1].w.transpose();
-            let mut z = wt.matmul(&a_list[n - 1]);
-            for j in 0..z.cols() {
-                vecops::axpy(z.col_mut(j), T::ONE, &self.layers[n].b);
-            }
-            let a = z.map(|v| self.activation.apply(v));
-            z_list.push(z);
-            a_list.push(a);
+    /// Batched gradient pass, *accumulating* into `grads` through the
+    /// caller's [`Workspace`] — the zero-allocation training pipeline.
+    ///
+    /// Batched formulation (the paper's Listings 6-7 vectorized into
+    /// whole-batch blocked-GEMM products):
+    ///   Z_n = W_{n-1}ᵀ·A_{n-1} + b_n,  Δ_L = (A_L − Y)⊙σ'(Z_L),
+    ///   dW_{n-1} += A_{n-1}·Δ_nᵀ,      Δ_n = (W_n·Δ_{n+1})⊙σ'(Z_n),
+    /// amortizing every weight-matrix fetch across the batch. The GEMM
+    /// packing absorbs all transposition, so no `w.transpose()` copies are
+    /// ever materialized; `A_0` aliases `x` directly. Identical math to
+    /// [`Network::grad_batch_per_sample`] (asserted in tests).
+    ///
+    /// With `ws` warmed at this (or a larger) batch size, this performs
+    /// zero heap allocations — see `rust/tests/zero_alloc.rs`.
+    pub fn grad_batch_into(
+        &self,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+        ws: &mut Workspace<T>,
+        grads: &mut Gradients<T>,
+    ) {
+        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
+        assert_eq!(y.rows(), self.output_size(), "output size mismatch");
+        // Shape check without `Gradients::dims()` — that collects a Vec,
+        // which would break the zero-allocation contract of this path.
+        assert!(
+            grads.db.len() == self.dims.len()
+                && grads.db.iter().zip(&self.dims).all(|(b, &d)| b.len() == d),
+            "gradient dims mismatch"
+        );
+        let nlayers = self.layers.len();
+        let batch = x.cols();
+        if batch == 0 {
+            return;
         }
+        self.forward_pass(x, ws);
+        ws.bind_delta(batch);
+        let (z, a, delta, scratch) = (&ws.z, &ws.a, &mut ws.delta, &mut ws.scratch);
 
-        // Output-layer delta: (A − Y) ⊙ σ'(Z).
+        // Output-layer delta: Δ_L = (A_L − Y) ⊙ σ'(Z_L).
         let last = nlayers - 1;
-        let mut delta = {
-            let mut d = a_list[last].clone();
-            d.axpy(-T::ONE, y);
-            let zp = z_list[last].map(|v| self.activation.prime(v));
-            for (dv, &zv) in d.as_mut_slice().iter_mut().zip(zp.as_slice()) {
-                *dv = *dv * zv;
+        {
+            let dl = &mut delta[last];
+            for (((dv, &av), &yv), &zv) in dl
+                .as_mut_slice()
+                .iter_mut()
+                .zip(a[last].as_slice())
+                .zip(y.as_slice())
+                .zip(z[last].as_slice())
+            {
+                *dv = (av - yv) * self.activation.prime(zv);
             }
-            d
-        };
+        }
 
         for n in (1..nlayers).rev() {
-            // dW_{n-1} = A_{n-1} · Δ_nᵀ ; db_n = row-sums of Δ_n.
-            g.dw[n - 1] = a_list[n - 1].nt_matmul(&delta);
-            for j in 0..delta.cols() {
-                vecops::axpy(&mut g.db[n], T::ONE, delta.col(j));
+            // dW_{n-1} += A_{n-1} · Δ_nᵀ ; db_n += row-sums of Δ_n.
+            {
+                let dn = &delta[n];
+                let dw = &mut grads.dw[n - 1];
+                if n == 1 {
+                    gemm::gemm_into(Op::N, x, Op::T, dn, dw, true, scratch);
+                } else {
+                    gemm::gemm_into(Op::N, &a[n - 1], Op::T, dn, dw, true, scratch);
+                }
+                let db = &mut grads.db[n];
+                for j in 0..batch {
+                    vecops::axpy(db, T::ONE, dn.col(j));
+                }
             }
             if n > 1 {
-                let mut back = self.layers[n - 1].w.matmul(&delta);
-                let zp = z_list[n - 1].map(|v| self.activation.prime(v));
-                for (bv, &zv) in back.as_mut_slice().iter_mut().zip(zp.as_slice()) {
-                    *bv = *bv * zv;
+                // Δ_{n-1} = (W_{n-1} · Δ_n) ⊙ σ'(Z_{n-1}).
+                let (head, tail) = delta.split_at_mut(n);
+                let dprev = &mut head[n - 1];
+                let dn = &tail[0];
+                gemm::gemm_into(Op::N, &self.layers[n - 1].w, Op::N, dn, dprev, false, scratch);
+                for (dv, &zv) in dprev.as_mut_slice().iter_mut().zip(z[n - 1].as_slice()) {
+                    *dv = *dv * self.activation.prime(zv);
                 }
-                delta = back;
             }
         }
-        // Keep stored activations consistent with the last sample, like
-        // the per-sample path would (cheap, and some callers inspect them).
-        g
+    }
+
+    /// Batched gradient with the batch columns sharded across `threads`
+    /// scoped std threads (the intra-image axis: composes with the
+    /// coordinator's per-image `train_parallel` threads). Each shard runs
+    /// the blocked workspace pipeline privately; partial tendencies are
+    /// summed in shard order, so the result is deterministic for a given
+    /// thread count.
+    pub fn grad_batch_threaded(
+        &self,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+        threads: usize,
+    ) -> Gradients<T> {
+        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
+        let n = x.cols();
+        let t = threads.max(1).min(n.max(1));
+        if t <= 1 {
+            return self.grad_batch(x, y);
+        }
+        let bounds = gemm::col_shards(n, t);
+        let parts: Vec<Gradients<T>> = std::thread::scope(|s| {
+            let handles: Vec<_> = bounds
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let xs = x.cols_range(lo, hi);
+                        let ys = y.cols_range(lo, hi);
+                        self.grad_batch(&xs, &ys)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("intra-image gradient shard panicked"))
+                .collect()
+        });
+        let mut total = Gradients::zeros(&self.dims);
+        for p in &parts {
+            total.add_assign(p);
+        }
+        total
     }
 
     /// Reference per-sample batch gradient (the paper's literal loop:
@@ -302,13 +426,18 @@ impl<T: Scalar> Network<T> {
     // Evaluation
     // ------------------------------------------------------------------
 
-    /// Mean quadratic cost over a batch.
+    /// Mean quadratic cost over a batch, via one batched forward pass
+    /// (the per-sample `output()` loop made per-epoch eval on MNIST feel
+    /// quadratic; this is one blocked-GEMM sweep).
     pub fn loss_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> f64 {
         assert_eq!(x.cols(), y.cols());
+        if x.cols() == 0 {
+            return 0.0;
+        }
+        let out = self.output_batch(x);
         let mut total = 0.0;
         for j in 0..x.cols() {
-            let out = self.output(x.col(j));
-            total += quadratic_cost(&out, y.col(j)).to_f64();
+            total += quadratic_cost(out.col(j), y.col(j)).to_f64();
         }
         total / x.cols() as f64
     }
@@ -497,6 +626,73 @@ mod tests {
         for l in 0..fused.db.len() {
             let d = vecops::max_abs_diff(&fused.db[l], &reference.db[l]);
             assert!(d < 1e-12, "db[{l}] diff {d}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_batch_sizes_matches_fresh() {
+        // One workspace reused at 16, then 5, then 16 columns must give
+        // the same tendencies as fresh per-call state.
+        let net = Network::<f64>::new(&[6, 8, 4], Activation::Sigmoid, 23);
+        let mut rng = Rng::new(8);
+        let mut ws = Workspace::new(net.dims());
+        for &b in &[16usize, 5, 16, 1] {
+            let x = Matrix::from_fn(6, b, |_, _| rng.uniform_in(-1.0, 1.0));
+            let y = Matrix::from_fn(4, b, |_, _| rng.uniform_in(0.0, 1.0));
+            let fresh = net.grad_batch(&x, &y);
+            let mut reused = Gradients::zeros(net.dims());
+            net.grad_batch_into(&x, &y, &mut ws, &mut reused);
+            assert_eq!(fresh, reused, "batch {b}");
+        }
+    }
+
+    #[test]
+    fn grad_batch_into_accumulates() {
+        let net = tiny();
+        let x = Matrix::from_fn(3, 6, |i, j| (i as f64 + j as f64) / 9.0);
+        let y = Matrix::from_fn(2, 6, |i, j| ((i * j) % 2) as f64);
+        let once = net.grad_batch(&x, &y);
+        let mut ws = Workspace::new(net.dims());
+        let mut acc = Gradients::zeros(net.dims());
+        net.grad_batch_into(&x, &y, &mut ws, &mut acc);
+        net.grad_batch_into(&x, &y, &mut ws, &mut acc);
+        for l in 0..once.dw.len() {
+            let mut doubled = once.dw[l].clone();
+            doubled.axpy(1.0, &once.dw[l]);
+            let d = acc.dw[l].max_abs_diff(&doubled);
+            assert!(d < 1e-12, "dw[{l}] accumulation diff {d}");
+        }
+    }
+
+    #[test]
+    fn threaded_grad_matches_single_thread() {
+        let net = Network::<f64>::new(&[7, 9, 5, 3], Activation::Tanh, 17);
+        let mut rng = Rng::new(40);
+        let x = Matrix::from_fn(7, 23, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(3, 23, |_, _| rng.uniform_in(0.0, 1.0));
+        let single = net.grad_batch(&x, &y);
+        for threads in [2usize, 3, 4, 23, 64] {
+            let sharded = net.grad_batch_threaded(&x, &y, threads);
+            for l in 0..single.dw.len() {
+                let d = sharded.dw[l].max_abs_diff(&single.dw[l]);
+                assert!(d < 1e-10, "threads={threads} dw[{l}] diff {d}");
+            }
+            for l in 0..single.db.len() {
+                let d = vecops::max_abs_diff(&sharded.db[l], &single.db[l]);
+                assert!(d < 1e-10, "threads={threads} db[{l}] diff {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_output_matches_single_thread() {
+        let net = Network::<f64>::new(&[5, 11, 2], Activation::Sigmoid, 9);
+        let mut rng = Rng::new(6);
+        let x = Matrix::from_fn(5, 17, |_, _| rng.uniform_in(-1.0, 1.0));
+        let single = net.output_batch(&x);
+        for threads in [2usize, 3, 17, 50] {
+            // Columns are computed independently: sharding is exact.
+            assert_eq!(net.output_batch_threaded(&x, threads), single, "threads={threads}");
         }
     }
 

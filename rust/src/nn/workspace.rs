@@ -1,0 +1,151 @@
+//! Reusable training buffers: the zero-allocation batch pipeline.
+//!
+//! The seed engine allocated ~10 temporary matrices per `grad_batch` call
+//! (a transposed copy of every weight matrix, fresh `Z`/`A`/`Δ` per layer,
+//! a fresh `Gradients`). [`Workspace`] owns all of that state instead:
+//! per-layer `Z`, `A`, and `Δ` matrices plus the GEMM packing scratch.
+//! After one warm-up batch at the largest batch size, a steady-state
+//! training loop calling [`crate::nn::Network::grad_batch_into`] performs
+//! **zero heap allocations per batch** — asserted by a counting global
+//! allocator in `rust/tests/zero_alloc.rs`.
+//!
+//! Rebinding to a smaller batch shrinks the matrices in place
+//! ([`crate::tensor::Matrix::resize_cols`] never reallocates within
+//! capacity), so ragged final mini-batches stay allocation-free too.
+
+use crate::tensor::{GemmScratch, Matrix, Scalar};
+
+/// Per-network training buffers. One per trainer replica (and one per
+/// intra-image shard thread on the threaded path).
+#[derive(Debug, Clone)]
+pub struct Workspace<T = f32> {
+    dims: Vec<usize>,
+    /// Pre-activations per layer; index 0 is an empty placeholder (the
+    /// input layer has no `z`), kept for index parity with the paper.
+    pub(crate) z: Vec<Matrix<T>>,
+    /// Activations per layer; index 0 is empty — the input batch is used
+    /// directly, never copied.
+    pub(crate) a: Vec<Matrix<T>>,
+    /// Backpropagated deltas per layer; index 0 is empty.
+    pub(crate) delta: Vec<Matrix<T>>,
+    /// GEMM packing buffers, shared by every product in the pass.
+    pub(crate) scratch: GemmScratch<T>,
+    /// Batch size the forward buffers (`z`/`a`) are shaped for.
+    batch: usize,
+    /// Batch size the `delta` buffers are shaped for — bound lazily by
+    /// the backward pass, so forward-only callers (`output_batch`,
+    /// `loss_batch`, accuracy sweeps) never pay for them.
+    delta_batch: usize,
+}
+
+impl<T: Scalar> Workspace<T> {
+    /// An empty workspace for a network with the given layer sizes. The
+    /// first batch it sees sizes the buffers (that pass allocates; later
+    /// passes at the same or smaller batch do not).
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "network needs at least input and output layers");
+        let mk = || {
+            let mut v = Vec::with_capacity(dims.len());
+            v.push(Matrix::zeros(0, 0));
+            for &d in &dims[1..] {
+                v.push(Matrix::zeros(d, 0));
+            }
+            v
+        };
+        Self {
+            dims: dims.to_vec(),
+            z: mk(),
+            a: mk(),
+            delta: mk(),
+            scratch: GemmScratch::new(),
+            batch: 0,
+            delta_batch: 0,
+        }
+    }
+
+    /// A workspace pre-sized for `batch` columns (warm from the start,
+    /// apart from the GEMM scratch, which sizes itself on first use).
+    pub fn for_batch(dims: &[usize], batch: usize) -> Self {
+        let mut ws = Self::new(dims);
+        ws.bind(batch);
+        ws.bind_delta(batch);
+        ws
+    }
+
+    /// Layer sizes this workspace serves.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Batch size the buffers are currently shaped for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Re-shape the forward (`z`/`a`) buffers to `batch` columns.
+    /// Allocation-free once the workspace has been warmed at this or a
+    /// larger batch size.
+    pub(crate) fn bind(&mut self, batch: usize) {
+        if self.batch == batch {
+            return;
+        }
+        // Index 0 placeholders stay 0 x 0.
+        for m in self.z.iter_mut().skip(1) {
+            m.resize_cols(batch);
+        }
+        for m in self.a.iter_mut().skip(1) {
+            m.resize_cols(batch);
+        }
+        self.batch = batch;
+    }
+
+    /// Re-shape the backward (`delta`) buffers to `batch` columns, with
+    /// the same allocation behaviour as [`Workspace::bind`].
+    pub(crate) fn bind_delta(&mut self, batch: usize) {
+        if self.delta_batch == batch {
+            return;
+        }
+        for m in self.delta.iter_mut().skip(1) {
+            m.resize_cols(batch);
+        }
+        self.delta_batch = batch;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_track_dims_and_batch() {
+        let mut ws: Workspace<f32> = Workspace::new(&[4, 6, 2]);
+        assert_eq!(ws.dims(), &[4, 6, 2]);
+        assert_eq!(ws.batch(), 0);
+        ws.bind(5);
+        assert_eq!(ws.batch(), 5);
+        assert_eq!(ws.z[1].rows(), 6);
+        assert_eq!(ws.z[1].cols(), 5);
+        assert_eq!(ws.a[2].rows(), 2);
+        // Delta is bound lazily by the backward pass only.
+        assert_eq!(ws.delta[2].cols(), 0);
+        ws.bind_delta(5);
+        assert_eq!(ws.delta[2].cols(), 5);
+        // Index 0 placeholders never grow.
+        assert_eq!(ws.a[0].len(), 0);
+        ws.bind(3);
+        assert_eq!(ws.z[1].cols(), 3);
+    }
+
+    #[test]
+    fn for_batch_prewarms() {
+        let ws: Workspace<f64> = Workspace::for_batch(&[3, 2], 7);
+        assert_eq!(ws.batch(), 7);
+        assert_eq!(ws.z[1].cols(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input and output")]
+    fn rejects_single_layer() {
+        let _: Workspace<f32> = Workspace::new(&[5]);
+    }
+}

@@ -20,12 +20,34 @@ use crate::tensor::{Matrix, Scalar};
 use std::path::Path;
 
 /// Errors from artifact loading or PJRT execution.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
-    #[error("runtime: {0}")]
+    Xla(xla::Error),
     Invalid(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Xla(e) => write!(f, "xla: {e}"),
+            Self::Invalid(msg) => write!(f, "runtime: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Xla(e) => Some(e),
+            Self::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        Self::Xla(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, RuntimeError> {

@@ -1,0 +1,131 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is off (the default
+//! in the offline container, which cannot fetch the `xla` crate).
+//!
+//! The stub preserves the exact API surface of `engine.rs` — same type
+//! names, same signatures — so the trainer, coordinator, CLI, and benches
+//! compile identically with or without the feature. [`Engine::new`]
+//! reports the engine as unavailable; [`CompiledNet`] is uninhabited, so
+//! code downstream of a successful `load` is statically unreachable and
+//! its methods cost nothing.
+
+use super::manifest::NetMeta;
+use crate::nn::{Gradients, Network};
+use crate::tensor::{Matrix, Scalar};
+
+/// Errors from artifact loading or PJRT execution.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// This build carries no PJRT engine.
+    Unavailable,
+    Invalid(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Unavailable => write!(
+                f,
+                "pjrt engine unavailable: built without the `pjrt` feature \
+                 (rebuild with --features pjrt and the xla dependency, or use --engine native)"
+            ),
+            Self::Invalid(msg) => write!(f, "runtime: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Scalars executable on the PJRT path (f32/f64 — the paper's `rk` kinds
+/// minus real128, which CPU PJRT does not support).
+pub trait PjrtScalar: Scalar {
+    /// Manifest dtype tag ("f32"/"f64").
+    const DTYPE: &'static str;
+}
+
+impl PjrtScalar for f32 {
+    const DTYPE: &'static str = "f32";
+}
+
+impl PjrtScalar for f64 {
+    const DTYPE: &'static str = "f64";
+}
+
+/// A PJRT CPU client. One per image/worker thread. (Stub: cannot be
+/// constructed; `new` always reports unavailability.)
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    /// Create the CPU PJRT client — always [`RuntimeError::Unavailable`]
+    /// in a stub build.
+    pub fn new() -> Result<Engine, RuntimeError> {
+        Err(RuntimeError::Unavailable)
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Load and compile both entry points of a network configuration.
+    pub fn load(&self, _meta: &NetMeta) -> Result<CompiledNet, RuntimeError> {
+        Err(RuntimeError::Unavailable)
+    }
+}
+
+/// A compiled network configuration. Uninhabited in stub builds: no value
+/// of this type can exist, so every method body is unreachable.
+pub enum CompiledNet {}
+
+impl CompiledNet {
+    pub fn meta(&self) -> &NetMeta {
+        match *self {}
+    }
+
+    /// Static micro-batch the artifacts were lowered with.
+    pub fn micro_batch(&self) -> usize {
+        match *self {}
+    }
+
+    /// Network output for an arbitrary-size batch (columns = samples).
+    pub fn forward_batch<T: PjrtScalar>(
+        &self,
+        _net: &Network<T>,
+        _x: &Matrix<T>,
+    ) -> Result<Matrix<T>, RuntimeError> {
+        match *self {}
+    }
+
+    /// Batch-summed tendencies for an arbitrary-size shard.
+    pub fn grad_batch<T: PjrtScalar>(
+        &self,
+        _net: &Network<T>,
+        _x: &Matrix<T>,
+        _y: &Matrix<T>,
+    ) -> Result<Gradients<T>, RuntimeError> {
+        match *self {}
+    }
+
+    /// Classification accuracy over a test set via the AOT forward pass.
+    pub fn accuracy<T: PjrtScalar>(
+        &self,
+        _net: &Network<T>,
+        _x: &Matrix<T>,
+        _y: &Matrix<T>,
+    ) -> Result<f64, RuntimeError> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::new().unwrap_err();
+        assert!(err.to_string().contains("pjrt engine unavailable"), "{err}");
+        assert!(!crate::runtime::pjrt_available());
+    }
+}

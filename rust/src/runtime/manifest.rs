@@ -7,14 +7,43 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Errors loading or validating a manifest.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("manifest: {0}")]
+    Io(std::io::Error),
+    Json(crate::util::json::JsonError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Json(e) => write!(f, "json: {e}"),
+            Self::Invalid(msg) => write!(f, "manifest: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            Self::Json(e) => Some(e),
+            Self::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ManifestError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Self::Json(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, ManifestError> {
@@ -41,8 +70,7 @@ impl NetMeta {
         let dims: Option<Vec<usize>> = v
             .get("dims")
             .and_then(Json::as_arr)
-            .map(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>())
-            .flatten();
+            .and_then(|a| a.iter().map(Json::as_usize).collect::<Option<Vec<_>>>());
         let dims = match dims {
             Some(d) if d.len() >= 2 && d.iter().all(|&x| x > 0) => d,
             _ => return invalid(format!("config '{name}': bad dims")),

@@ -8,9 +8,27 @@
 //! `client.compile`), and executes with zero-copy buffer reinterpretation
 //! (the Rust column-major matrices *are* the row-major transposed operands
 //! the JAX model was lowered with; see python/compile/model.py).
+//!
+//! The real engine needs the `xla` crate, which the offline build
+//! container cannot fetch; it is compiled only with `--features pjrt`.
+//! Without the feature, `engine_stub.rs` provides the same API surface
+//! (types, signatures) with constructors that return
+//! [`RuntimeError`]-flavoured "unavailable" errors, so every caller —
+//! trainer, coordinator, CLI, benches — compiles unchanged and degrades
+//! gracefully to the native engine.
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 mod manifest;
 
 pub use engine::{CompiledNet, Engine, PjrtScalar, RuntimeError};
 pub use manifest::{Manifest, NetMeta};
+
+/// Whether this build carries the real PJRT engine. Callers use this to
+/// skip PJRT rows in benches / default to the native engine.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}

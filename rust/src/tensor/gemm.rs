@@ -1,0 +1,516 @@
+//! Cache-blocked, register-tiled GEMM with packed panels — the compute
+//! core of the native engine.
+//!
+//! One kernel serves all three products the network needs (`C = A·B`,
+//! `C = Aᵀ·B`, `C = A·Bᵀ`): transposition is absorbed into the *packing*
+//! step, so forward- and backprop never materialize `w.transpose()`.
+//! The schedule is the classic three-loop blocking (GotoBLAS/BLIS, the
+//! same structure cuDNN uses for its CPU reference paths):
+//!
+//! ```text
+//! for jc in 0..n  step NC            // B panel fits in L3
+//!   for pc in 0..k step KC           // packed B panel  [KC x NC], NR-strips
+//!     for ic in 0..m step MC         // packed A block  [MC x KC], MR-strips
+//!       for jr, ir                   // register tile
+//!         microkernel: MR x NR accumulators over KC
+//! ```
+//!
+//! Packed panels give the microkernel two perfectly contiguous streams
+//! (`MR` and `NR` elements per k-step), which the compiler auto-vectorizes
+//! for both `f32` and `f64` through the generic [`Scalar`] arithmetic.
+//! Partial edge tiles are zero-padded in the packs (adding `x·0` is exact
+//! for finite floats), so the hot loop is branch-free.
+//!
+//! Numerical note: within one k-block the accumulation order is ascending
+//! in `k`, identical to the naive kernels; results are bit-equal to
+//! [`naive_gemm`] whenever `k <= KC` and only reassociate (tolerance-level
+//! differences) beyond that. Property tests pin both behaviours.
+//!
+//! Threading: [`gemm_threaded`] shards the *output columns* (contiguous in
+//! column-major storage) across scoped std threads, each running the
+//! blocked kernel with its own scratch. This is the intra-image axis that
+//! composes with the coordinator's per-image `train_parallel` threads.
+
+use super::matrix::{Matrix, Scalar};
+
+/// Operand orientation: `N` uses the matrix as stored, `T` its transpose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    N,
+    T,
+}
+
+/// Register tile height (rows of C per microkernel call).
+pub const MR: usize = 8;
+/// Register tile width (columns of C per microkernel call).
+pub const NR: usize = 4;
+/// k-dimension block (packed panel depth; fits L1/L2 streams).
+pub const KC: usize = 256;
+/// m-dimension block (rows of the packed A block).
+pub const MC: usize = 128;
+/// n-dimension block (columns of the packed B panel).
+pub const NC: usize = 1024;
+
+/// Reusable packing buffers. Growing happens on first use per shape;
+/// steady-state calls with warmed buffers perform **zero allocations**
+/// (the training-loop contract asserted by `rust/tests/zero_alloc.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct GemmScratch<T> {
+    pack_a: Vec<T>,
+    pack_b: Vec<T>,
+}
+
+impl<T: Scalar> GemmScratch<T> {
+    pub fn new() -> Self {
+        Self { pack_a: Vec::new(), pack_b: Vec::new() }
+    }
+}
+
+/// Contiguous `(lo, hi)` column ranges splitting `n` columns across `t`
+/// shards; the first `n % t` shards are one wider (the same partition as
+/// `data::shard_bounds`). Shared by every column-sharded threaded path —
+/// [`gemm_threaded`], `Network::output_batch_threaded`,
+/// `Network::grad_batch_threaded` — so the off-by-one arithmetic lives in
+/// exactly one place.
+pub fn col_shards(n: usize, t: usize) -> Vec<(usize, usize)> {
+    assert!(t > 0, "need at least one shard");
+    let mut out = Vec::with_capacity(t);
+    let mut lo = 0usize;
+    for r in 0..t {
+        let cols = n / t + usize::from(r < n % t);
+        out.push((lo, lo + cols));
+        lo += cols;
+    }
+    out
+}
+
+/// Logical GEMM dimensions `(m, n, k)` of `op_a(a) · op_b(b)`, asserting
+/// the inner dimensions agree.
+pub fn gemm_dims<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+) -> (usize, usize, usize) {
+    let (m, ka) = match op_a {
+        Op::N => (a.rows(), a.cols()),
+        Op::T => (a.cols(), a.rows()),
+    };
+    let (kb, n) = match op_b {
+        Op::N => (b.rows(), b.cols()),
+        Op::T => (b.cols(), b.rows()),
+    };
+    assert_eq!(ka, kb, "gemm inner-dimension mismatch");
+    (m, n, ka)
+}
+
+/// `c = op_a(a) · op_b(b)` (or `c += ...` when `accumulate`), blocked and
+/// packed, single-threaded. `c` must be pre-shaped to `m x n`.
+pub fn gemm_into<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+    c: &mut Matrix<T>,
+    accumulate: bool,
+    scratch: &mut GemmScratch<T>,
+) {
+    let (m, n, kk) = gemm_dims(op_a, a, op_b, b);
+    assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
+    gemm_cols(op_a, a, op_b, b, m, kk, 0, n, c.as_mut_slice(), accumulate, scratch);
+}
+
+/// Column-sharded threaded variant: output columns are split into
+/// `threads` contiguous ranges (contiguous memory in column-major order),
+/// each computed by a scoped thread with private scratch. Falls back to
+/// the single-threaded kernel for `threads <= 1` or tiny outputs.
+pub fn gemm_threaded<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+    c: &mut Matrix<T>,
+    accumulate: bool,
+    threads: usize,
+) {
+    let (m, n, kk) = gemm_dims(op_a, a, op_b, b);
+    assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
+    let t = threads.max(1).min(n.max(1));
+    if t <= 1 {
+        let mut scratch = GemmScratch::new();
+        gemm_cols(op_a, a, op_b, b, m, kk, 0, n, c.as_mut_slice(), accumulate, &mut scratch);
+        return;
+    }
+    let shards = col_shards(n, t);
+    let mut rest: &mut [T] = c.as_mut_slice();
+    std::thread::scope(|s| {
+        for &(lo, hi) in &shards {
+            if hi == lo {
+                continue;
+            }
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * m);
+            rest = tail;
+            s.spawn(move || {
+                let mut scratch = GemmScratch::new();
+                gemm_cols(op_a, a, op_b, b, m, kk, lo, hi - lo, head, accumulate, &mut scratch);
+            });
+        }
+        let _ = rest;
+    });
+}
+
+/// Triple-loop reference kernel (the seed's semantics), used as the
+/// numerical oracle by property tests and the before/after benches.
+pub fn naive_gemm<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+    c: &mut Matrix<T>,
+    accumulate: bool,
+) {
+    let (m, n, kk) = gemm_dims(op_a, a, op_b, b);
+    assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = if accumulate { c.get(i, j) } else { T::ZERO };
+            for k in 0..kk {
+                let av = match op_a {
+                    Op::N => a.get(i, k),
+                    Op::T => a.get(k, i),
+                };
+                let bv = match op_b {
+                    Op::N => b.get(k, j),
+                    Op::T => b.get(j, k),
+                };
+                acc = acc + av * bv;
+            }
+            c.set(i, j, acc);
+        }
+    }
+}
+
+/// The blocked driver over an explicit output-column range.
+///
+/// `c` holds columns `j0 .. j0+jn` of the logical `m x n` output,
+/// column-major (`c.len() == m * jn`). This is the unit both the
+/// single-threaded and the column-sharded paths bottom out in.
+#[allow(clippy::too_many_arguments)]
+fn gemm_cols<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+    m: usize,
+    kk: usize,
+    j0: usize,
+    jn: usize,
+    c: &mut [T],
+    accumulate: bool,
+    scratch: &mut GemmScratch<T>,
+) {
+    debug_assert_eq!(c.len(), m * jn, "gemm column-slice size mismatch");
+    if !accumulate {
+        c.fill(T::ZERO);
+    }
+    if m == 0 || jn == 0 || kk == 0 {
+        return;
+    }
+    let ad = a.as_slice();
+    let lda = a.rows();
+    let bd = b.as_slice();
+    let ldb = b.rows();
+    let GemmScratch { pack_a, pack_b } = scratch;
+
+    let mut jc = 0;
+    while jc < jn {
+        let nc = NC.min(jn - jc);
+        let b_strips = nc.div_ceil(NR);
+        let mut pc = 0;
+        while pc < kk {
+            let kc = KC.min(kk - pc);
+            let need_b = b_strips * kc * NR;
+            if pack_b.len() < need_b {
+                pack_b.resize(need_b, T::ZERO);
+            }
+            pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, pack_b);
+
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let a_strips = mc.div_ceil(MR);
+                let need_a = a_strips * kc * MR;
+                if pack_a.len() < need_a {
+                    pack_a.resize(need_a, T::ZERO);
+                }
+                pack_block_a(op_a, ad, lda, ic, mc, pc, kc, pack_a);
+
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = NR.min(nc - jr);
+                    let bpan = &pack_b[(jr / NR) * kc * NR..(jr / NR + 1) * kc * NR];
+                    let mut ir = 0;
+                    while ir < mc {
+                        let mr = MR.min(mc - ir);
+                        let apan = &pack_a[(ir / MR) * kc * MR..(ir / MR + 1) * kc * MR];
+                        let mut acc = [[T::ZERO; MR]; NR];
+                        microkernel(kc, apan, bpan, &mut acc);
+                        // Flush the valid region of the register tile.
+                        for (j, accj) in acc.iter().enumerate().take(nr) {
+                            let off = (jc + jr + j) * m + ic + ir;
+                            let col = &mut c[off..off + mr];
+                            for (ci, &av) in col.iter_mut().zip(accj.iter()) {
+                                *ci = *ci + av;
+                            }
+                        }
+                        ir += MR;
+                    }
+                    jr += NR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+/// MR x NR register tile: `acc[j][i] += Σ_k apan[k][i] * bpan[k][j]`.
+/// Both panels stream contiguously (`MR`/`NR` elements per k), which is
+/// what lets the generic loop auto-vectorize.
+#[inline(always)]
+fn microkernel<T: Scalar>(kc: usize, apan: &[T], bpan: &[T], acc: &mut [[T; MR]; NR]) {
+    debug_assert!(apan.len() >= kc * MR && bpan.len() >= kc * NR);
+    for k in 0..kc {
+        let av = &apan[k * MR..k * MR + MR];
+        let bv = &bpan[k * NR..k * NR + NR];
+        for (accj, &bj) in acc.iter_mut().zip(bv.iter()) {
+            for (ai, &aval) in accj.iter_mut().zip(av.iter()) {
+                *ai = *ai + aval * bj;
+            }
+        }
+    }
+}
+
+/// Pack `op(B)[pc..pc+kc, jstart..jstart+nc]` into NR-wide strips:
+/// strip `s` holds columns `s*NR..`, laid out k-major with `NR` contiguous
+/// elements per k (zero-padded past the edge).
+fn pack_panel_b<T: Scalar>(
+    op: Op,
+    b: &[T],
+    ldb: usize,
+    pc: usize,
+    kc: usize,
+    jstart: usize,
+    nc: usize,
+    out: &mut [T],
+) {
+    let mut s = 0usize;
+    let mut jr = 0usize;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        let strip = &mut out[s * kc * NR..(s + 1) * kc * NR];
+        for k in 0..kc {
+            let kg = pc + k;
+            let dst = &mut strip[k * NR..k * NR + NR];
+            for (jj, d) in dst.iter_mut().enumerate() {
+                *d = if jj < nr {
+                    let j = jstart + jr + jj;
+                    match op {
+                        Op::N => b[kg + j * ldb],
+                        Op::T => b[j + kg * ldb],
+                    }
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+        s += 1;
+        jr += NR;
+    }
+}
+
+/// Pack `op(A)[istart..istart+mc, pc..pc+kc]` into MR-tall strips:
+/// strip `s` holds rows `s*MR..`, laid out k-major with `MR` contiguous
+/// elements per k (zero-padded past the edge).
+#[allow(clippy::too_many_arguments)]
+fn pack_block_a<T: Scalar>(
+    op: Op,
+    a: &[T],
+    lda: usize,
+    istart: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    out: &mut [T],
+) {
+    let mut s = 0usize;
+    let mut ir = 0usize;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        let strip = &mut out[s * kc * MR..(s + 1) * kc * MR];
+        for k in 0..kc {
+            let kg = pc + k;
+            let dst = &mut strip[k * MR..k * MR + MR];
+            for (ii, d) in dst.iter_mut().enumerate() {
+                *d = if ii < mr {
+                    let i = istart + ir + ii;
+                    match op {
+                        Op::N => a[i + kg * lda],
+                        Op::T => a[kg + i * lda],
+                    }
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+        s += 1;
+        ir += MR;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix<f64> {
+        Matrix::from_fn(rows, cols, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    fn check_all_ops(m: usize, n: usize, k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        for (op_a, op_b) in [(Op::N, Op::N), (Op::T, Op::N), (Op::N, Op::T), (Op::T, Op::T)] {
+            let a = match op_a {
+                Op::N => rand_matrix(m, k, &mut rng),
+                Op::T => rand_matrix(k, m, &mut rng),
+            };
+            let b = match op_b {
+                Op::N => rand_matrix(k, n, &mut rng),
+                Op::T => rand_matrix(n, k, &mut rng),
+            };
+            let mut want = Matrix::zeros(m, n);
+            naive_gemm(op_a, &a, op_b, &b, &mut want, false);
+            let mut got = Matrix::zeros(m, n);
+            let mut scratch = GemmScratch::new();
+            gemm_into(op_a, &a, op_b, &b, &mut got, false, &mut scratch);
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-12, "{op_a:?}{op_b:?} m={m} n={n} k={k}: diff {d}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_small_and_odd_shapes() {
+        for &(m, n, k) in &[
+            (1, 1, 1),
+            (2, 3, 4),
+            (8, 4, 8),
+            (9, 5, 7),
+            (17, 13, 31),
+            (30, 32, 784),
+            (33, 1, 2),
+            (1, 33, 2),
+        ] {
+            check_all_ops(m, n, k, 42 + (m * 31 + n * 7 + k) as u64);
+        }
+    }
+
+    #[test]
+    fn blocked_handles_empty_dims() {
+        for &(m, n, k) in &[(0, 3, 2), (3, 0, 2), (3, 2, 0), (0, 0, 0)] {
+            let a = Matrix::<f64>::zeros(m, k);
+            let b = Matrix::<f64>::zeros(k, n);
+            let mut c = Matrix::full(m, n, 7.0);
+            let mut scratch = GemmScratch::new();
+            gemm_into(Op::N, &a, Op::N, &b, &mut c, false, &mut scratch);
+            assert!(c.as_slice().iter().all(|&v| v == 0.0), "non-accumulate must zero C");
+            let mut c2 = Matrix::full(m, n, 7.0);
+            gemm_into(Op::N, &a, Op::N, &b, &mut c2, true, &mut scratch);
+            assert!(c2.as_slice().iter().all(|&v| v == 7.0), "accumulate must keep C");
+        }
+    }
+
+    #[test]
+    fn accumulate_adds_onto_existing() {
+        let mut rng = Rng::new(9);
+        let a = rand_matrix(5, 6, &mut rng);
+        let b = rand_matrix(6, 4, &mut rng);
+        let mut c = rand_matrix(5, 4, &mut rng);
+        let mut want = c.clone();
+        naive_gemm(Op::N, &a, Op::N, &b, &mut want, true);
+        let mut scratch = GemmScratch::new();
+        gemm_into(Op::N, &a, Op::N, &b, &mut c, true, &mut scratch);
+        assert!(c.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn threaded_matches_single_thread() {
+        let mut rng = Rng::new(4);
+        let a = rand_matrix(37, 53, &mut rng);
+        let b = rand_matrix(53, 29, &mut rng);
+        let mut want = Matrix::zeros(37, 29);
+        let mut scratch = GemmScratch::new();
+        gemm_into(Op::N, &a, Op::N, &b, &mut want, false, &mut scratch);
+        for threads in [1, 2, 3, 4, 7, 64] {
+            let mut got = Matrix::zeros(37, 29);
+            gemm_threaded(Op::N, &a, Op::N, &b, &mut got, false, threads);
+            assert_eq!(got, want, "threads={threads} must shard deterministically");
+        }
+    }
+
+    #[test]
+    fn bit_equal_to_naive_below_kc() {
+        // k <= KC keeps the accumulation association identical to the
+        // naive kernel: results must be *bit* equal, not just close.
+        let mut rng = Rng::new(11);
+        let a = rand_matrix(19, KC, &mut rng);
+        let b = rand_matrix(KC, 11, &mut rng);
+        let mut want = Matrix::zeros(19, 11);
+        naive_gemm(Op::N, &a, Op::N, &b, &mut want, false);
+        let mut got = Matrix::zeros(19, 11);
+        let mut scratch = GemmScratch::new();
+        gemm_into(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(3);
+        for &(m, n, k) in &[(64, 64, 64), (8, 8, 8), (100, 3, 300)] {
+            let a = rand_matrix(m, k, &mut rng);
+            let b = rand_matrix(k, n, &mut rng);
+            let mut want = Matrix::zeros(m, n);
+            naive_gemm(Op::N, &a, Op::N, &b, &mut want, false);
+            let mut got = Matrix::zeros(m, n);
+            gemm_into(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
+            assert!(got.max_abs_diff(&want) < 1e-12, "shape {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn col_shards_partition_exactly() {
+        for (n, t) in [(0usize, 1usize), (0, 3), (1, 4), (10, 3), (7, 7), (23, 5)] {
+            let shards = col_shards(n, t);
+            assert_eq!(shards.len(), t);
+            assert_eq!(shards.last().unwrap().1, n);
+            let mut prev = 0;
+            let (mut mn, mut mx) = (usize::MAX, 0);
+            for &(lo, hi) in &shards {
+                assert_eq!(lo, prev, "shards must be contiguous (n={n} t={t})");
+                prev = hi;
+                mn = mn.min(hi - lo);
+                mx = mx.max(hi - lo);
+            }
+            assert!(mx - mn <= 1, "imbalanced shards n={n} t={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "gemm inner-dimension mismatch")]
+    fn mismatched_inner_dims_panic() {
+        let a = Matrix::<f32>::zeros(2, 3);
+        let b = Matrix::<f32>::zeros(4, 2);
+        gemm_dims(Op::N, &a, Op::N, &b);
+    }
+}

@@ -2,10 +2,21 @@
 //!
 //! neural-fortran stores weights as rank-2 `real` arrays and leans on
 //! whole-array arithmetic (`matmul`, `transpose`, elementwise `*`/`+`).
-//! [`Matrix`] reproduces that: column-major storage (Fortran order), a
-//! blocked `matmul`, transpose-aware products used by fwdprop/backprop,
-//! and elementwise combinators.
+//! [`Matrix`] reproduces that: column-major storage (Fortran order),
+//! transpose-aware products used by fwdprop/backprop, and elementwise
+//! combinators.
+//!
+//! The matrix products ([`Matrix::matmul`], [`Matrix::tn_matmul`],
+//! [`Matrix::nt_matmul`]) all bottom out in the cache-blocked,
+//! register-tiled GEMM of [`crate::tensor::gemm`]: operands are packed
+//! into `MR`/`NR`-strip panels (transposition absorbed by the packing, so
+//! no `transpose()` copies on the hot path) and an `MR x NR` microkernel
+//! streams both panels contiguously per k-step. See the `gemm` module doc
+//! for the exact loop nest and packing layout. The original triple-loop
+//! kernels survive as `naive_*` methods — the numerical oracle for
+//! property tests and the baseline for the `dense_ops` bench.
 
+use super::gemm::{self, GemmScratch, Op};
 use super::rng::Rng;
 
 /// Scalar element type for tensors and networks — the Rust analogue of the
@@ -245,11 +256,50 @@ impl<T: Scalar> Matrix<T> {
         y
     }
 
-    /// General matrix product `self · other`.
+    /// General matrix product `self · other` (blocked/packed GEMM).
     pub fn matmul(&self, other: &Matrix<T>) -> Matrix<T> {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
-        // jik order: stride-1 over self's columns and out's columns.
+        let mut scratch = GemmScratch::new();
+        gemm::gemm_into(Op::N, self, Op::N, other, &mut out, false, &mut scratch);
+        out
+    }
+
+    /// `self · other` with output columns sharded over `threads` scoped
+    /// std threads (the intra-image parallel axis).
+    pub fn matmul_threaded(&self, other: &Matrix<T>, threads: usize) -> Matrix<T> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        gemm::gemm_threaded(Op::N, self, Op::N, other, &mut out, false, threads);
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose (the packing
+    /// step absorbs the orientation). Shape: [cols, other.cols].
+    pub fn tn_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.rows, other.rows, "tn_matmul shape mismatch");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        let mut scratch = GemmScratch::new();
+        gemm::gemm_into(Op::T, self, Op::N, other, &mut out, false, &mut scratch);
+        out
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    /// Shape: [rows, other.rows].
+    pub fn nt_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.cols, other.cols, "nt_matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        let mut scratch = GemmScratch::new();
+        gemm::gemm_into(Op::N, self, Op::T, other, &mut out, false, &mut scratch);
+        out
+    }
+
+    /// Reference `self · other`: the seed's jik triple loop (stride-1 over
+    /// self's and out's columns). Oracle/baseline only — use
+    /// [`Matrix::matmul`] on hot paths.
+    pub fn naive_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
         for j in 0..other.cols {
             let ocol = out.col_mut(j);
             for k in 0..self.cols {
@@ -266,9 +316,8 @@ impl<T: Scalar> Matrix<T> {
         out
     }
 
-    /// `selfᵀ · other` without materializing the transpose — both operand
-    /// walks are stride-1 in column-major storage. Shape: [cols, other.cols].
-    pub fn tn_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+    /// Reference `selfᵀ · other` (seed kernel). Oracle/baseline only.
+    pub fn naive_tn_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
         assert_eq!(self.rows, other.rows, "tn_matmul shape mismatch");
         let mut out = Matrix::zeros(self.cols, other.cols);
         for j in 0..other.cols {
@@ -286,9 +335,8 @@ impl<T: Scalar> Matrix<T> {
         out
     }
 
-    /// `self · otherᵀ` without materializing the transpose.
-    /// Shape: [rows, other.rows].
-    pub fn nt_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
+    /// Reference `self · otherᵀ` (seed kernel). Oracle/baseline only.
+    pub fn naive_nt_matmul(&self, other: &Matrix<T>) -> Matrix<T> {
         assert_eq!(self.cols, other.cols, "nt_matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.rows);
         for k in 0..self.cols {
@@ -349,6 +397,15 @@ impl<T: Scalar> Matrix<T> {
     /// Fill with zeros, preserving shape (buffer reuse in hot loops).
     pub fn fill_zero(&mut self) {
         self.data.fill(T::ZERO);
+    }
+
+    /// Change the column count in place, keeping `rows` fixed. New columns
+    /// are zeroed. Shrinking and re-growing within the buffer's existing
+    /// capacity performs **no allocation** — the mechanism behind the
+    /// zero-allocation training workspace.
+    pub fn resize_cols(&mut self, new_cols: usize) {
+        self.cols = new_cols;
+        self.data.resize(self.rows * new_cols, T::ZERO);
     }
 
     /// Frobenius-norm of the difference — convergence / test helper.

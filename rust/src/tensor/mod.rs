@@ -3,13 +3,16 @@
 //! The paper models layers with contiguous Fortran arrays (`a(:)`, `b(:)`,
 //! `w(:,:)`) and relies on whole-array arithmetic plus `matmul`. This module
 //! provides the equivalent Rust substrate: a column-major [`Matrix`] (to
-//! mirror Fortran layout), elementwise ops, blocked matmul, and the
-//! deterministic RNG used for Xavier-style initialization.
+//! mirror Fortran layout), elementwise ops, the cache-blocked packed GEMM
+//! in [`gemm`] (single-threaded and column-sharded), and the deterministic
+//! RNG used for Xavier-style initialization.
 
+pub mod gemm;
 mod matrix;
 mod rng;
 mod stats;
 
+pub use gemm::GemmScratch;
 pub use matrix::{vecops, Matrix, Scalar};
 pub use rng::Rng;
 pub use stats::{mean, stddev, Summary};

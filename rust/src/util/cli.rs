@@ -13,15 +13,26 @@ pub struct Args {
 }
 
 /// Errors from argument parsing/validation.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value '{value}' for --{flag}: {msg}")]
     BadValue { flag: String, value: String, msg: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownFlag(name) => write!(f, "unknown flag --{name}"),
+            Self::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            Self::BadValue { flag, value, msg } => {
+                write!(f, "invalid value '{value}' for --{flag}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (without argv[0]). `spec` lists the flags that take a

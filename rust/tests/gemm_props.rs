@@ -1,0 +1,209 @@
+//! Property tests for the blocked GEMM backend and the workspace gradient
+//! pipeline: the blocked/packed/threaded kernels must agree with the
+//! naive reference on odd, rectangular, and empty shapes for both float
+//! kinds, and the workspace `grad_batch` path must agree with the paper's
+//! literal per-sample loop.
+
+use neural_rs::nn::{Activation, Gradients, Network, Workspace};
+use neural_rs::tensor::gemm::{gemm_into, gemm_threaded, naive_gemm, GemmScratch, Op};
+use neural_rs::tensor::{vecops, Matrix, Rng, Scalar};
+use neural_rs::testkit::{check, ensure};
+
+fn rand_matrix<T: Scalar>(rows: usize, cols: usize, rng: &mut Rng) -> Matrix<T> {
+    Matrix::from_fn(rows, cols, |_, _| T::from_f64(rng.uniform_in(-1.0, 1.0)))
+}
+
+fn op_from(bit: usize) -> Op {
+    if bit == 0 {
+        Op::N
+    } else {
+        Op::T
+    }
+}
+
+/// Shared body: blocked and threaded GEMM vs the naive oracle at a given
+/// tolerance, for one scalar type.
+fn gemm_agrees<T: Scalar>(
+    (m, n, k): (usize, usize, usize),
+    (op_a, op_b): (Op, Op),
+    accumulate: bool,
+    threads: usize,
+    seed: u64,
+    tol: f64,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let a: Matrix<T> = match op_a {
+        Op::N => rand_matrix(m, k, &mut rng),
+        Op::T => rand_matrix(k, m, &mut rng),
+    };
+    let b: Matrix<T> = match op_b {
+        Op::N => rand_matrix(k, n, &mut rng),
+        Op::T => rand_matrix(n, k, &mut rng),
+    };
+    let c0: Matrix<T> = rand_matrix(m, n, &mut rng);
+
+    let mut want = c0.clone();
+    naive_gemm(op_a, &a, op_b, &b, &mut want, accumulate);
+
+    let mut got = c0.clone();
+    let mut scratch = GemmScratch::new();
+    gemm_into(op_a, &a, op_b, &b, &mut got, accumulate, &mut scratch);
+    let d = got.max_abs_diff(&want);
+    ensure(d < tol, format!("blocked {op_a:?}{op_b:?} {m}x{n}x{k} acc={accumulate}: diff {d}"))?;
+
+    let mut got_t = c0;
+    gemm_threaded(op_a, &a, op_b, &b, &mut got_t, accumulate, threads);
+    let d = got_t.max_abs_diff(&want);
+    ensure(
+        d < tol,
+        format!("threaded({threads}) {op_a:?}{op_b:?} {m}x{n}x{k} acc={accumulate}: diff {d}"),
+    )
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive_f64() {
+    check(
+        "blocked gemm == naive (f64)",
+        60,
+        |g| {
+            let m = g.usize_in(0, 40);
+            let n = g.usize_in(0, 40);
+            let k = g.usize_in(0, 300); // crosses the KC=256 reassociation edge
+            let ops = (op_from(g.rng.below(2)), op_from(g.rng.below(2)));
+            let acc = g.rng.below(2) == 1;
+            let threads = 1 + g.rng.below(5);
+            (m, n, k, ops, acc, threads, g.rng.next_u64())
+        },
+        |&(m, n, k, ops, acc, threads, seed)| {
+            gemm_agrees::<f64>((m, n, k), ops, acc, threads, seed, 1e-10)
+        },
+    );
+}
+
+#[test]
+fn prop_blocked_gemm_matches_naive_f32() {
+    check(
+        "blocked gemm == naive (f32)",
+        60,
+        |g| {
+            let m = g.usize_in(0, 40);
+            let n = g.usize_in(0, 40);
+            let k = g.usize_in(0, 300);
+            let ops = (op_from(g.rng.below(2)), op_from(g.rng.below(2)));
+            let acc = g.rng.below(2) == 1;
+            let threads = 1 + g.rng.below(5);
+            (m, n, k, ops, acc, threads, g.rng.next_u64())
+        },
+        |&(m, n, k, ops, acc, threads, seed)| {
+            // k*eps accumulation slack on [-1,1] operands.
+            gemm_agrees::<f32>((m, n, k), ops, acc, threads, seed, 1e-3)
+        },
+    );
+}
+
+/// Shared body for the gradient agreement properties: workspace path and
+/// threaded path vs the paper's literal per-sample fwdprop/backprop loop.
+fn grads_agree<T: Scalar>(
+    dims: &[usize],
+    batch: usize,
+    act: Activation,
+    threads: usize,
+    seed: u64,
+    tol: f64,
+) -> Result<(), String> {
+    let mut net = Network::<T>::new(dims, act, seed);
+    let mut rng = Rng::new(seed ^ 0xABCD_1234);
+    let x: Matrix<T> = rand_matrix(dims[0], batch, &mut rng);
+    let y: Matrix<T> =
+        Matrix::from_fn(*dims.last().unwrap(), batch, |_, _| T::from_f64(rng.uniform()));
+
+    let mut ws = Workspace::new(dims);
+    let mut blocked = Gradients::zeros(dims);
+    net.grad_batch_into(&x, &y, &mut ws, &mut blocked);
+    let threaded = net.grad_batch_threaded(&x, &y, threads);
+    let reference = net.grad_batch_per_sample(&x, &y);
+
+    for l in 0..reference.dw.len() {
+        let d = blocked.dw[l].max_abs_diff(&reference.dw[l]);
+        ensure(d < tol, format!("{act} dims {dims:?} b={batch}: blocked dw[{l}] diff {d}"))?;
+        let d = threaded.dw[l].max_abs_diff(&reference.dw[l]);
+        ensure(d < tol, format!("{act} dims {dims:?} b={batch}: threaded dw[{l}] diff {d}"))?;
+    }
+    for l in 0..reference.db.len() {
+        let d = vecops::max_abs_diff(&blocked.db[l], &reference.db[l]);
+        ensure(d < tol, format!("{act} dims {dims:?} b={batch}: blocked db[{l}] diff {d}"))?;
+        let d = vecops::max_abs_diff(&threaded.db[l], &reference.db[l]);
+        ensure(d < tol, format!("{act} dims {dims:?} b={batch}: threaded db[{l}] diff {d}"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_workspace_grad_matches_per_sample_f64() {
+    check(
+        "workspace/threaded grad == per-sample (f64)",
+        30,
+        |g| {
+            let layers = 2 + g.usize_in(0, 2);
+            let dims: Vec<usize> = (0..layers).map(|_| 1 + g.usize_in(0, 29)).collect();
+            let batch = g.usize_in(0, 40);
+            let act = Activation::ALL[g.rng.below(Activation::ALL.len())];
+            let threads = 1 + g.rng.below(4);
+            (dims, batch, act, threads, g.rng.next_u64())
+        },
+        |&(ref dims, batch, act, threads, seed)| {
+            grads_agree::<f64>(dims, batch, act, threads, seed, 1e-10)
+        },
+    );
+}
+
+#[test]
+fn prop_workspace_grad_matches_per_sample_f32() {
+    check(
+        "workspace/threaded grad == per-sample (f32)",
+        30,
+        |g| {
+            let layers = 2 + g.usize_in(0, 2);
+            let dims: Vec<usize> = (0..layers).map(|_| 1 + g.usize_in(0, 29)).collect();
+            let batch = g.usize_in(0, 40);
+            let act = Activation::ALL[g.rng.below(Activation::ALL.len())];
+            let threads = 1 + g.rng.below(4);
+            (dims, batch, act, threads, g.rng.next_u64())
+        },
+        |&(ref dims, batch, act, threads, seed)| {
+            grads_agree::<f32>(dims, batch, act, threads, seed, 1e-5)
+        },
+    );
+}
+
+/// The batched forward pass (and its threaded variant) must match the
+/// per-sample `output()` on random shapes.
+#[test]
+fn prop_output_batch_matches_per_sample() {
+    check(
+        "output_batch == per-sample output",
+        30,
+        |g| {
+            let layers = 2 + g.usize_in(0, 2);
+            let dims: Vec<usize> = (0..layers).map(|_| 1 + g.usize_in(0, 24)).collect();
+            let batch = g.usize_in(0, 30);
+            let threads = 1 + g.rng.below(4);
+            (dims, batch, threads, g.rng.next_u64())
+        },
+        |&(ref dims, batch, threads, seed)| {
+            let net = Network::<f64>::new(dims, Activation::Tanh, seed);
+            let mut rng = Rng::new(seed ^ 77);
+            let x: Matrix<f64> = rand_matrix(dims[0], batch, &mut rng);
+            let batched = net.output_batch(&x);
+            let sharded = net.output_batch_threaded(&x, threads);
+            for j in 0..batch {
+                let single = net.output(x.col(j));
+                let d = vecops::max_abs_diff(&single, batched.col(j));
+                ensure(d < 1e-12, format!("dims {dims:?} col {j}: batched diff {d}"))?;
+                let d = vecops::max_abs_diff(&single, sharded.col(j));
+                ensure(d < 1e-12, format!("dims {dims:?} col {j}: threaded diff {d}"))?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -27,7 +27,7 @@ fn golden_grads_pjrt_matches_native_f32() {
     let engine = Engine::new().unwrap();
     let net = engine.load(meta).unwrap();
 
-    let mut network = Network::<f32>::new(&meta.dims, meta.activation, 42);
+    let network = Network::<f32>::new(&meta.dims, meta.activation, 42);
     let mut rng = Rng::new(7);
     // 13 samples: exercises 2 full micro-batches (B=5) + a padded tail.
     let x = Matrix::from_fn(meta.dims[0], 13, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
@@ -62,7 +62,7 @@ fn golden_grads_pjrt_matches_native_f64() {
     let engine = Engine::new().unwrap();
     let net = engine.load(meta).unwrap();
 
-    let mut network = Network::<f64>::new(&meta.dims, meta.activation, 3);
+    let network = Network::<f64>::new(&meta.dims, meta.activation, 3);
     let mut rng = Rng::new(11);
     let x = Matrix::from_fn(meta.dims[0], 7, |_, _| rng.uniform_in(-1.0, 1.0));
     let y = Matrix::from_fn(*meta.dims.last().unwrap(), 7, |i, j| ((i * j) % 2) as f64);

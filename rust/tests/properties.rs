@@ -240,6 +240,7 @@ fn prop_parallel_training_matches_serial() {
                 batch_seed: seed ^ 1,
                 strategy: BatchStrategy::RandomStart,
                 optimizer: Default::default(),
+                intra_threads: 1,
             };
 
             let serial = {

@@ -1,0 +1,93 @@
+//! The zero-allocation training contract: with a warmed [`Workspace`],
+//! steady-state `grad_batch_into` performs **no heap allocations at all**
+//! — no transposed weight copies, no per-layer temporaries, no gradient
+//! scratch. Asserted with a counting global allocator.
+//!
+//! This file deliberately contains a single `#[test]`: the counter is
+//! process-global, and a sibling test allocating concurrently would flip
+//! it spuriously.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use neural_rs::data::{label_digits, synthesize};
+use neural_rs::nn::{Activation, Gradients, Network, Workspace};
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warmed_grad_batch_performs_zero_allocations() {
+    // The paper's Table 1 configuration: 784-30-10 sigmoid, batch 32.
+    let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+    let data = synthesize::<f32>(32, 5);
+    let x = data.images;
+    let y = label_digits::<f32>(&data.labels);
+    // A ragged tail batch, pre-sliced so slicing itself isn't counted.
+    let x_tail = x.cols_range(0, 20);
+    let y_tail = y.cols_range(0, 20);
+
+    let mut ws = Workspace::new(net.dims());
+    let mut grads = Gradients::zeros(net.dims());
+
+    // Warm-up: sizes every Z/A/Δ buffer and the GEMM packing scratch at
+    // the largest batch this loop will see.
+    for _ in 0..2 {
+        grads.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut grads);
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..10 {
+        // The trainer's steady state: zero the accumulator, accumulate a
+        // full batch, then a ragged tail batch (shrink + regrow in place).
+        grads.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut grads);
+        net.grad_batch_into(&x_tail, &y_tail, &mut ws, &mut grads);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state grad_batch_into made {count} heap allocations (want 0)"
+    );
+
+    // Sanity: the warmed path still computes the right thing.
+    grads.zero_out();
+    net.grad_batch_into(&x, &y, &mut ws, &mut grads);
+    let fresh = net.grad_batch(&x, &y);
+    assert_eq!(grads, fresh, "zero-alloc path must stay numerically identical");
+}
