@@ -1,0 +1,304 @@
+//! Load generator for the online inference server (`serve/`): spawns an
+//! in-process HTTP server plus a pool of keep-alive client threads, and
+//! measures end-to-end throughput and client-side latency percentiles
+//! with micro-batching ON (`max_batch 16`, 1 ms window) vs OFF
+//! (`max_batch 1`) on the same worker count — the acceptance comparison
+//! for dynamic batching (coalesced calls are what make batched GEMM pay
+//! off; cuDNN's argument, measured here end to end through HTTP).
+//!
+//! Results are printed as a table and written to `BENCH_serve.json`
+//! (overwriting the committed baseline). Run:
+//! `cargo bench --bench serve_load` (`BENCH_FULL=1` for longer runs).
+
+use neural_rs::config::ServeConfig;
+use neural_rs::metrics::{Stopwatch, Table};
+use neural_rs::nn::{Activation, Network};
+use neural_rs::serve::{ModelRegistry, Server};
+use neural_rs::tensor::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+/// Serving model: wide enough that the forward pass (not HTTP parsing)
+/// dominates, so batching has something to amortize.
+const DIMS: [usize; 4] = [784, 256, 128, 10];
+
+/// One keep-alive HTTP exchange; returns the status code.
+fn exchange(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    request: &[u8],
+) -> std::io::Result<u16> {
+    stream.write_all(request)?;
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "server closed"));
+    }
+    let status: u16 =
+        line.split_ascii_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header)? == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "in headers"));
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some(v) = header
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().to_string())
+        {
+            content_length = v.parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(status)
+}
+
+fn predict_request(addr: SocketAddr, input: &[f64]) -> String {
+    let mut vals = String::with_capacity(input.len() * 8);
+    for (i, v) in input.iter().enumerate() {
+        if i > 0 {
+            vals.push(',');
+        }
+        vals.push_str(&format!("{v:.4}"));
+    }
+    let body = format!("{{\"input\":[{vals}]}}");
+    format!(
+        "POST /v1/predict HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+struct ModeResult {
+    name: &'static str,
+    max_batch: usize,
+    max_wait_us: u64,
+    requests: u64,
+    errors: u64,
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_ms: f64,
+    mean_batch: f64,
+    max_batch_seen: u64,
+    shed: u64,
+}
+
+fn run_mode(
+    name: &'static str,
+    max_batch: usize,
+    max_wait_us: u64,
+    workers: usize,
+    clients: usize,
+    duration: Duration,
+) -> ModeResult {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("default", Network::<f32>::new(&DIMS, Activation::Sigmoid, 1));
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch,
+        max_wait_us,
+        queue_depth: 4096,
+        workers,
+        infer_threads: 1,
+        hot_reload: false,
+        ..ServeConfig::default()
+    };
+    let mut handle = Server::start(&cfg, registry).expect("server start");
+    let addr = handle.addr();
+
+    let mut rng = Rng::new(42);
+    let input: Vec<f64> = (0..DIMS[0]).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+    let request = Arc::new(predict_request(addr, &input).into_bytes());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let request = Arc::clone(&request);
+            let stop = Arc::clone(&stop);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || -> (Vec<f64>, u64) {
+                let stream = TcpStream::connect(addr).expect("connect");
+                let _ = stream.set_nodelay(true);
+                let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+                let mut stream = stream;
+                // Warm the connection, the JSON parser, and the worker
+                // workspaces before measuring.
+                for _ in 0..5 {
+                    let _ = exchange(&mut stream, &mut reader, &request);
+                }
+                barrier.wait();
+                let mut latencies_ms = Vec::with_capacity(1 << 14);
+                let mut errors = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let t = Instant::now();
+                    match exchange(&mut stream, &mut reader, &request) {
+                        Ok(200) => latencies_ms.push(t.elapsed().as_secs_f64() * 1e3),
+                        _ => errors += 1,
+                    }
+                }
+                (latencies_ms, errors)
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let sw = Stopwatch::start();
+    std::thread::sleep(duration);
+    stop.store(true, Ordering::Relaxed);
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut errors = 0u64;
+    for t in threads {
+        let (lat, errs) = t.join().expect("client thread");
+        latencies_ms.extend(lat);
+        errors += errs;
+    }
+    let wall_s = sw.elapsed_s();
+
+    let metrics = handle.metrics();
+    let (mean_batch, max_batch_seen, shed) =
+        (metrics.mean_batch(), metrics.max_batch(), metrics.shed());
+    handle.shutdown();
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = latencies_ms.len() as u64;
+    let mean_ms = if requests == 0 {
+        0.0
+    } else {
+        latencies_ms.iter().sum::<f64>() / requests as f64
+    };
+    ModeResult {
+        name,
+        max_batch,
+        max_wait_us,
+        requests,
+        errors,
+        wall_s,
+        rps: requests as f64 / wall_s,
+        p50_ms: percentile_ms(&latencies_ms, 0.50),
+        p95_ms: percentile_ms(&latencies_ms, 0.95),
+        p99_ms: percentile_ms(&latencies_ms, 0.99),
+        mean_ms,
+        mean_batch,
+        max_batch_seen,
+        shed,
+    }
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let clients = hw.clamp(4, 16);
+    let workers = 2usize;
+    let duration = Duration::from_millis(if full { 4000 } else { 1200 });
+    println!(
+        "# serve_load: dims {DIMS:?} | {clients} clients, {workers} workers, \
+         {:.1} s per mode | {hw} hw threads",
+        duration.as_secs_f64()
+    );
+
+    let modes = [
+        run_mode("batch1", 1, 0, workers, clients, duration),
+        run_mode("microbatch16", 16, 1000, workers, clients, duration),
+    ];
+
+    let mut table = Table::new(&[
+        "Mode",
+        "max_batch",
+        "Requests",
+        "Throughput (req/s)",
+        "p50 (ms)",
+        "p95 (ms)",
+        "p99 (ms)",
+        "Mean batch",
+    ]);
+    for m in &modes {
+        println!(
+            "{:>14}: {:8.0} req/s | p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms | \
+             mean batch {:.2} (max {}) | {} errors, {} shed",
+            m.name, m.rps, m.p50_ms, m.p95_ms, m.p99_ms, m.mean_batch, m.max_batch_seen,
+            m.errors, m.shed
+        );
+        table.row(&[
+            m.name.to_string(),
+            m.max_batch.to_string(),
+            m.requests.to_string(),
+            format!("{:.0}", m.rps),
+            format!("{:.2}", m.p50_ms),
+            format!("{:.2}", m.p95_ms),
+            format!("{:.2}", m.p99_ms),
+            format!("{:.2}", m.mean_batch),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    let speedup = if modes[0].rps > 0.0 { modes[1].rps / modes[0].rps } else { 0.0 };
+    println!("# micro-batching speedup vs batch-1 serving: {speedup:.2}x");
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"serve_load/v1\",\n");
+    json.push_str("  \"measured\": true,\n");
+    json.push_str("  \"generated_by\": \"cargo bench --bench serve_load\",\n");
+    json.push_str(&format!("  \"hw_threads\": {hw},\n"));
+    json.push_str(&format!("  \"clients\": {clients},\n"));
+    json.push_str(&format!("  \"workers\": {workers},\n"));
+    json.push_str(&format!("  \"duration_s\": {:.2},\n", duration.as_secs_f64()));
+    json.push_str(&format!(
+        "  \"model_dims\": [{}],\n",
+        DIMS.map(|d| d.to_string()).join(",")
+    ));
+    json.push_str("  \"modes\": [\n");
+    for (i, m) in modes.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"max_batch\": {}, \"max_wait_us\": {}, \
+             \"requests\": {}, \"errors\": {}, \"shed\": {}, \"wall_s\": {:.3}, \
+             \"rps\": {:.1}, \"latency_ms\": {{\"p50\": {:.3}, \"p95\": {:.3}, \
+             \"p99\": {:.3}, \"mean\": {:.3}}}, \"mean_batch\": {:.2}, \
+             \"max_batch_seen\": {}}}{}\n",
+            m.name,
+            m.max_batch,
+            m.max_wait_us,
+            m.requests,
+            m.errors,
+            m.shed,
+            m.wall_s,
+            m.rps,
+            m.p50_ms,
+            m.p95_ms,
+            m.p99_ms,
+            m.mean_ms,
+            m.mean_batch,
+            m.max_batch_seen,
+            if i + 1 < modes.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"speedup_microbatch_vs_batch1\": {speedup:.2}\n"
+    ));
+    json.push_str("}\n");
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("# wrote BENCH_serve.json"),
+        Err(e) => eprintln!("# could not write BENCH_serve.json: {e}"),
+    }
+}

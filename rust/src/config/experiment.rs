@@ -29,6 +29,52 @@ impl CommKind {
     }
 }
 
+/// `[serve]` — the online inference server (`neural-rs serve`; see
+/// `crate::serve`). Plain data here; `serve::Server` translates it into a
+/// `BatchPolicy` + listener, keeping `config` free of `serve` types.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks an ephemeral port (benches/tests).
+    pub addr: String,
+    /// Checkpoint served as model "default". Empty = not configured
+    /// (the CLI then requires `--model`).
+    pub model_path: PathBuf,
+    /// Additional named models, from `models = ["name=path", ...]`.
+    pub extra_models: Vec<(String, PathBuf)>,
+    /// Close a micro-batch at this many coalesced requests.
+    pub max_batch: usize,
+    /// ... or when the oldest queued request has waited this long.
+    pub max_wait_us: u64,
+    /// Bounded queue depth; overflow is shed with HTTP 503.
+    pub queue_depth: usize,
+    /// Worker threads per model, each with a warm workspace.
+    pub workers: usize,
+    /// Column-shard each batched forward over this many threads
+    /// (1 = zero-allocation warm-workspace path).
+    pub infer_threads: usize,
+    /// Poll file-backed models and hot-reload rewritten checkpoints.
+    pub hot_reload: bool,
+    /// Hot-reload poll interval.
+    pub reload_poll_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".into(),
+            model_path: PathBuf::new(),
+            extra_models: Vec::new(),
+            max_batch: 16,
+            max_wait_us: 1000,
+            queue_depth: 1024,
+            workers: 2,
+            infer_threads: 1,
+            hot_reload: true,
+            reload_poll_ms: 500,
+        }
+    }
+}
+
 /// Everything a training run needs. Mirrors the paper's Listing 12 knobs
 /// plus the parallel/runtime choices.
 #[derive(Debug, Clone)]
@@ -61,6 +107,8 @@ pub struct ExperimentConfig {
     pub engine: EngineKind,
     pub artifacts_dir: PathBuf,
     pub artifact_config: String,
+    // [serve]
+    pub serve: ServeConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -93,6 +141,7 @@ impl Default for ExperimentConfig {
             },
             artifacts_dir: PathBuf::from("artifacts"),
             artifact_config: "mnist".into(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -181,6 +230,15 @@ fn get_str<'a>(t: &'a Table, key: &str, default: &'a str) -> Result<&'a str, Con
     }
 }
 
+fn get_bool(t: &Table, key: &str, default: bool) -> Result<bool, ConfigError> {
+    match t.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| ConfigError::Invalid(format!("'{key}' must be a boolean"))),
+    }
+}
+
 impl ExperimentConfig {
     /// Load from a TOML file, filling unspecified keys with defaults.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self, ConfigError> {
@@ -236,6 +294,47 @@ impl ExperimentConfig {
             cfg.comm = CommKind::parse(comm)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown comm '{comm}'")))?;
         }
+        if let Some(t) = doc.get("serve") {
+            cfg.serve.addr = get_str(t, "addr", &cfg.serve.addr)?.to_string();
+            cfg.serve.model_path =
+                PathBuf::from(get_str(t, "model", &cfg.serve.model_path.to_string_lossy())?);
+            if let Some(v) = t.get("models") {
+                let items = match v {
+                    TomlValue::Array(items) => items,
+                    _ => {
+                        return bad("[serve] models must be an array of \"name=path\" strings")
+                    }
+                };
+                cfg.serve.extra_models.clear();
+                for item in items {
+                    let s = item
+                        .as_str()
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(
+                                "[serve] models entries must be \"name=path\" strings".into(),
+                            )
+                        })?;
+                    let (name, path) = s.split_once('=').ok_or_else(|| {
+                        ConfigError::Invalid(format!(
+                            "[serve] models entry '{s}' is not \"name=path\""
+                        ))
+                    })?;
+                    if name.trim().is_empty() || path.trim().is_empty() {
+                        return bad(format!("[serve] models entry '{s}' is not \"name=path\""));
+                    }
+                    cfg.serve
+                        .extra_models
+                        .push((name.trim().to_string(), PathBuf::from(path.trim())));
+                }
+            }
+            cfg.serve.max_batch = get_usize(t, "max_batch", cfg.serve.max_batch)?;
+            cfg.serve.max_wait_us = get_u64(t, "max_wait_us", cfg.serve.max_wait_us)?;
+            cfg.serve.queue_depth = get_usize(t, "queue_depth", cfg.serve.queue_depth)?;
+            cfg.serve.workers = get_usize(t, "workers", cfg.serve.workers)?;
+            cfg.serve.infer_threads = get_usize(t, "infer_threads", cfg.serve.infer_threads)?;
+            cfg.serve.hot_reload = get_bool(t, "hot_reload", cfg.serve.hot_reload)?;
+            cfg.serve.reload_poll_ms = get_u64(t, "reload_poll_ms", cfg.serve.reload_poll_ms)?;
+        }
         if let Some(t) = doc.get("runtime") {
             let engine = get_str(t, "engine", cfg.engine.name())?;
             cfg.engine = EngineKind::parse(engine)
@@ -262,6 +361,15 @@ impl ExperimentConfig {
         }
         if self.train_n == 0 || self.test_n == 0 {
             return bad("train_n/test_n must be positive");
+        }
+        if self.serve.max_batch == 0 {
+            return bad("[serve] max_batch must be positive");
+        }
+        if self.serve.queue_depth < self.serve.max_batch {
+            return bad("[serve] queue_depth must be >= max_batch");
+        }
+        if self.serve.workers == 0 {
+            return bad("[serve] workers must be positive");
         }
         Ok(())
     }
@@ -373,8 +481,58 @@ mod tests {
             "[training]\noptimizer = \"adamw\"\n",
             "[runtime]\nengine = \"bogus\"\n",
             "[training]\nepochs = \"many\"\n",
+            "[serve]\nmax_batch = 0\n",
+            "[serve]\nmax_batch = 8\nqueue_depth = 4\n",
+            "[serve]\nworkers = 0\n",
+            "[serve]\nmodels = [\"nopath\"]\n",
+            "[serve]\nmodels = [42]\n",
+            "[serve]\nhot_reload = \"yes\"\n",
         ] {
             assert!(ExperimentConfig::from_toml(bad).is_err(), "should reject: {bad}");
         }
+    }
+
+    #[test]
+    fn serve_section_parses_and_defaults() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [serve]
+            addr = "127.0.0.1:9901"
+            model = "models/mnist.txt"
+            models = ["canary=models/canary.txt", "big = models/big.txt"]
+            max_batch = 32
+            max_wait_us = 250
+            queue_depth = 64
+            workers = 4
+            infer_threads = 2
+            hot_reload = false
+            reload_poll_ms = 100
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.addr, "127.0.0.1:9901");
+        assert_eq!(c.serve.model_path, PathBuf::from("models/mnist.txt"));
+        assert_eq!(
+            c.serve.extra_models,
+            vec![
+                ("canary".to_string(), PathBuf::from("models/canary.txt")),
+                ("big".to_string(), PathBuf::from("models/big.txt")),
+            ]
+        );
+        assert_eq!(c.serve.max_batch, 32);
+        assert_eq!(c.serve.max_wait_us, 250);
+        assert_eq!(c.serve.queue_depth, 64);
+        assert_eq!(c.serve.workers, 4);
+        assert_eq!(c.serve.infer_threads, 2);
+        assert!(!c.serve.hot_reload);
+        assert_eq!(c.serve.reload_poll_ms, 100);
+
+        // Defaults when the section is absent.
+        let d = ExperimentConfig::from_toml("[training]\nepochs = 1\n").unwrap();
+        assert_eq!(d.serve.max_batch, 16);
+        assert_eq!(d.serve.max_wait_us, 1000);
+        assert_eq!(d.serve.workers, 2);
+        assert!(d.serve.hot_reload);
+        assert!(d.serve.model_path.as_os_str().is_empty());
     }
 }

@@ -17,6 +17,7 @@ pub mod data;
 pub mod metrics;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

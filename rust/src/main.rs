@@ -18,19 +18,22 @@ use neural_rs::data::{load_or_synthesize, synthesize, Dataset};
 use neural_rs::metrics::{peak_rss_bytes, Stopwatch};
 use neural_rs::nn::{Activation, Network};
 use neural_rs::runtime::{Engine, Manifest};
+use neural_rs::serve::{ModelRegistry, Server};
 use neural_rs::tensor::Summary;
 use neural_rs::util::cli::Args;
 use std::net::SocketAddr;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 const VALUE_FLAGS: &[&str] = &[
     "config", "dims", "activation", "eta", "batch-size", "epochs", "seed", "batch-seed",
     "strategy", "optimizer", "train-n", "test-n", "data-dir", "data-seed", "images", "algo", "comm",
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
-    "runs", "max-images", "out", "n", "intra-threads",
+    "runs", "max-images", "out", "n", "intra-threads", "addr", "model", "max-batch",
+    "max-wait-us", "queue-depth", "workers", "infer-threads",
 ];
-const SWITCH_FLAGS: &[&str] = &["quiet", "eval-each-epoch", "help"];
+const SWITCH_FLAGS: &[&str] = &["quiet", "eval-each-epoch", "help", "no-hot-reload"];
 
 const HELP: &str = "neural-rs — parallel neural networks (neural-fortran reproduction)
 
@@ -39,6 +42,7 @@ USAGE: neural-rs <subcommand> [flags]
 SUBCOMMANDS
   train       train a network
   eval        evaluate a saved network (--load FILE)
+  serve       online inference server over a saved network (--model FILE)
   scaling     strong-scaling sweep (--max-images N --runs R)
   gen-data    write synthetic digits as IDX files (--out DIR --n COUNT)
   inspect     list AOT artifact configurations (--artifacts DIR)
@@ -63,6 +67,19 @@ COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
   --save FILE            save the trained network
   --comm local|tcp       communicator backend
   --tcp-role leader|worker --tcp-addr HOST:PORT --image K   (tcp mode)
+
+SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
+  --model FILE           checkpoint to serve as model 'default'
+  --addr 127.0.0.1:8080  listen address (port 0 = ephemeral)
+  --max-batch 16         close a micro-batch at this many requests
+  --max-wait-us 1000     ... or when the oldest request waited this long
+  --queue-depth 1024     bounded queue; overflow is shed with HTTP 503
+  --workers 2            worker threads, each with a warm workspace
+  --infer-threads 1      column-shard each batched forward (1 = zero-alloc)
+  --no-hot-reload        do not watch the checkpoint file for changes
+
+  Endpoints: POST /v1/predict {\"input\": [f32...], \"model\": \"default\"}
+             GET /healthz | GET /metrics | POST /admin/shutdown
 ";
 
 fn main() {
@@ -81,6 +98,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
         Some("scaling") => cmd_scaling(&args),
         Some("gen-data") => cmd_gen_data(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -147,6 +165,20 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
     }
     if let Some(a) = args.get("artifact-config") {
         cfg.artifact_config = a.to_string();
+    }
+    if let Some(a) = args.get("addr") {
+        cfg.serve.addr = a.to_string();
+    }
+    if let Some(m) = args.get("model") {
+        cfg.serve.model_path = PathBuf::from(m);
+    }
+    cfg.serve.max_batch = args.get_parsed("max-batch", cfg.serve.max_batch)?;
+    cfg.serve.max_wait_us = args.get_parsed("max-wait-us", cfg.serve.max_wait_us)?;
+    cfg.serve.queue_depth = args.get_parsed("queue-depth", cfg.serve.queue_depth)?;
+    cfg.serve.workers = args.get_parsed("workers", cfg.serve.workers)?;
+    cfg.serve.infer_threads = args.get_parsed("infer-threads", cfg.serve.infer_threads)?;
+    if args.has("no-hot-reload") {
+        cfg.serve.hot_reload = false;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -268,6 +300,36 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
             println!("# saved network to {path}");
         }
     }
+    Ok(())
+}
+
+/// Online inference: load checkpoint(s) into a registry, start the
+/// micro-batching HTTP server, and block until `POST /admin/shutdown`.
+fn cmd_serve(args: &Args) -> Result<(), AnyError> {
+    let cfg = config_from_args(args)?;
+    if cfg.serve.model_path.as_os_str().is_empty() {
+        return Err("serve needs --model FILE (or [serve] model in the config)".into());
+    }
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_file("default", &cfg.serve.model_path)?;
+    println!("# loaded model 'default' from {}", cfg.serve.model_path.display());
+    for (name, path) in &cfg.serve.extra_models {
+        registry.load_file(name, path)?;
+        println!("# loaded model '{name}' from {}", path.display());
+    }
+    let mut handle = Server::start(&cfg.serve, registry)?;
+    println!(
+        "# serving on http://{} | max_batch {} max_wait {} µs queue {} workers {}{}",
+        handle.addr(),
+        cfg.serve.max_batch,
+        cfg.serve.max_wait_us,
+        cfg.serve.queue_depth,
+        cfg.serve.workers,
+        if cfg.serve.hot_reload { " | hot-reload on" } else { "" },
+    );
+    println!("# endpoints: POST /v1/predict | GET /healthz | GET /metrics | POST /admin/shutdown");
+    handle.wait();
+    println!("# server shut down");
     Ok(())
 }
 

@@ -2,6 +2,10 @@
 //! runs with mean ± std (the paper reports 5-run statistics), RSS memory
 //! probing (Table 1's memory column), and markdown table emission.
 
+pub mod serving;
+
+pub use serving::{LatencyHistogram, ServeMetrics};
+
 use crate::tensor::Summary;
 use std::time::Instant;
 

@@ -1,0 +1,323 @@
+//! Serving metrics: lock-free latency histogram (p50/p95/p99), batch-size
+//! distribution, throughput, and shed counters for the online inference
+//! server (`crate::serve`). Everything here is atomics over fixed-size
+//! arrays so the hot serving path records measurements without taking a
+//! lock or touching the heap — recording composes with the zero-allocation
+//! steady-state contract asserted in `rust/tests/serve_zero_alloc.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Number of power-of-two latency buckets: bucket `i` counts samples in
+/// `[2^(i-1), 2^i)` microseconds, so 40 buckets reach ~2^39 µs (≈ 6 days)
+/// — far beyond any sane request latency.
+const LATENCY_BUCKETS: usize = 40;
+
+/// Exact batch-size bins `1..=MAX_EXACT_BATCH`; larger batches land in the
+/// overflow bin (index `MAX_EXACT_BATCH`).
+const MAX_EXACT_BATCH: usize = 64;
+
+// Interior mutability in a `const` is exactly what array-repeat
+// initialization of atomics needs: every use instantiates a fresh atomic.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Log-scaled latency histogram with lock-free recording.
+///
+/// Percentiles are read from the power-of-two buckets, reporting the
+/// bucket's upper bound — a conservative estimate whose relative error is
+/// bounded by 2x, which is plenty to compare serving configurations.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [ZERO; LATENCY_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // floor(log2(us)) + 1 with us clamped to >= 1, so 1 µs lands in
+        // bucket 1 (covering [1, 2)).
+        let us = us.max(1);
+        ((64 - us.leading_zeros()) as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Record one sample, in microseconds. Lock- and allocation-free.
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds (0.0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Largest recorded sample in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (`p` in [0, 1]) in microseconds: the upper
+    /// bound of the bucket holding the p-th sample. 0.0 when empty.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        self.max_us() as f64
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregate serving metrics shared by the request handlers, the
+/// micro-batcher workers, and the `/metrics` endpoint.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    /// Server-side request latency (enqueue → response written into the
+    /// caller's buffer), excluding HTTP parse time.
+    pub latency: LatencyHistogram,
+    requests: AtomicU64,
+    shed: AtomicU64,
+    batches: AtomicU64,
+    batch_samples: AtomicU64,
+    batch_hist: [AtomicU64; MAX_EXACT_BATCH + 1],
+    max_batch: AtomicU64,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            latency: LatencyHistogram::new(),
+            requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_samples: AtomicU64::new(0),
+            batch_hist: [ZERO; MAX_EXACT_BATCH + 1],
+            max_batch: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// One request accepted into the queue.
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request rejected because the bounded queue was full.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One coalesced batch of `size` requests executed.
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_samples.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_hist[size.min(MAX_EXACT_BATCH)].fetch_add(1, Ordering::Relaxed);
+        self.max_batch.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean coalesced batch size (0.0 before the first batch).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches();
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_samples.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Largest coalesced batch observed.
+    pub fn max_batch(&self) -> u64 {
+        self.max_batch.load(Ordering::Relaxed)
+    }
+
+    /// How many batches had exactly `size` requests (sizes above 64 share
+    /// the overflow bin).
+    pub fn batches_of_size(&self, size: usize) -> u64 {
+        self.batch_hist[size.min(MAX_EXACT_BATCH)].load(Ordering::Relaxed)
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Completed requests per second over the server's lifetime.
+    pub fn throughput_rps(&self) -> f64 {
+        let up = self.uptime_s();
+        if up <= 0.0 {
+            return 0.0;
+        }
+        self.latency.count() as f64 / up
+    }
+
+    /// Render in Prometheus text exposition format for `GET /metrics`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let mut line = |name: &str, v: f64| {
+            out.push_str(name);
+            out.push(' ');
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                out.push_str(&(v as i64).to_string());
+            } else {
+                out.push_str(&format!("{v:.3}"));
+            }
+            out.push('\n');
+        };
+        line("neural_rs_serve_requests_total", self.requests() as f64);
+        line("neural_rs_serve_shed_total", self.shed() as f64);
+        line("neural_rs_serve_responses_total", self.latency.count() as f64);
+        line("neural_rs_serve_batches_total", self.batches() as f64);
+        line("neural_rs_serve_batch_size_mean", self.mean_batch());
+        line("neural_rs_serve_batch_size_max", self.max_batch() as f64);
+        line(
+            "neural_rs_serve_latency_us{quantile=\"0.50\"}",
+            self.latency.percentile_us(0.50),
+        );
+        line(
+            "neural_rs_serve_latency_us{quantile=\"0.95\"}",
+            self.latency.percentile_us(0.95),
+        );
+        line(
+            "neural_rs_serve_latency_us{quantile=\"0.99\"}",
+            self.latency.percentile_us(0.99),
+        );
+        line("neural_rs_serve_latency_us_mean", self.latency.mean_us());
+        line("neural_rs_serve_latency_us_max", self.latency.max_us() as f64);
+        line("neural_rs_serve_uptime_seconds", self.uptime_s());
+        line("neural_rs_serve_throughput_rps", self.throughput_rps());
+        out
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_are_ordered_and_plausible() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.percentile_us(0.50);
+        let p95 = h.percentile_us(0.95);
+        let p99 = h.percentile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        // p50 of mostly-tens-of-µs samples must sit in the tens-to-low-
+        // hundreds bucket range; p99 must see the 5 ms outlier.
+        assert!((16.0..=128.0).contains(&p50), "p50={p50}");
+        assert!(p99 >= 4096.0, "p99={p99}");
+        assert!((h.mean_us() - 545.0).abs() < 1.0);
+        assert_eq!(h.max_us(), 5000);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn tiny_and_huge_samples_stay_in_range() {
+        let h = LatencyHistogram::new();
+        h.record_us(0); // clamps to the 1 µs bucket
+        h.record_us(u64::MAX); // clamps to the top bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(0.1) >= 1.0);
+        assert!(h.percentile_us(1.0) > 0.0);
+    }
+
+    #[test]
+    fn batch_distribution_and_counters() {
+        let m = ServeMetrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_request();
+        m.record_shed();
+        m.record_batch(1);
+        m.record_batch(8);
+        m.record_batch(8);
+        m.record_batch(1000); // overflow bin
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.shed(), 1);
+        assert_eq!(m.batches(), 4);
+        assert_eq!(m.batches_of_size(8), 2);
+        assert_eq!(m.batches_of_size(1), 1);
+        assert_eq!(m.batches_of_size(999), 1, "overflow bin shared above 64");
+        assert_eq!(m.max_batch(), 1000);
+        assert!((m.mean_batch() - (1.0 + 8.0 + 8.0 + 1000.0) / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_rendering_contains_series() {
+        let m = ServeMetrics::new();
+        m.record_request();
+        m.latency.record_us(120);
+        m.record_batch(4);
+        let text = m.render_prometheus();
+        for series in [
+            "neural_rs_serve_requests_total 1",
+            "neural_rs_serve_batches_total 1",
+            "neural_rs_serve_latency_us{quantile=\"0.50\"}",
+            "neural_rs_serve_throughput_rps",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
+    }
+}

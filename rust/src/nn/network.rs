@@ -128,6 +128,16 @@ impl<T: Scalar> Network<T> {
         ws.a.last().unwrap().clone()
     }
 
+    /// Batched pure output through a caller-owned workspace — the
+    /// serving hot path ([`crate::serve::MicroBatcher`]): allocation-free
+    /// once `ws` is warm at this (or a larger) batch size. The returned
+    /// reference points into the workspace's last activation buffer and
+    /// is valid until the next pass through `ws`.
+    pub fn output_batch_with<'w>(&self, x: &Matrix<T>, ws: &'w mut Workspace<T>) -> &'w Matrix<T> {
+        self.forward_pass(x, ws);
+        ws.a.last().unwrap()
+    }
+
     /// [`Network::output_batch`] with the batch columns sharded across
     /// `threads` scoped std threads (output columns are contiguous in
     /// column-major storage, so shards write disjoint sub-slices).
@@ -693,6 +703,19 @@ mod tests {
         for threads in [2usize, 3, 17, 50] {
             // Columns are computed independently: sharding is exact.
             assert_eq!(net.output_batch_threaded(&x, threads), single, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn output_batch_with_matches_output_batch_across_batch_sizes() {
+        let net = Network::<f64>::new(&[5, 11, 2], Activation::Tanh, 9);
+        let mut rng = Rng::new(12);
+        let mut ws = Workspace::new(net.dims());
+        for &b in &[9usize, 3, 9, 1] {
+            let x = Matrix::from_fn(5, b, |_, _| rng.uniform_in(-1.0, 1.0));
+            let fresh = net.output_batch(&x);
+            let warm = net.output_batch_with(&x, &mut ws);
+            assert_eq!(warm, &fresh, "batch {b}");
         }
     }
 

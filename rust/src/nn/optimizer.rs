@@ -22,6 +22,19 @@ pub enum OptimizerKind {
 }
 
 impl OptimizerKind {
+    /// Parse and validate a momentum coefficient: the velocity recursion
+    /// `v = mu*v + g` is contractive only for `mu` in `[0, 1)`, and
+    /// NaN/inf would poison every parameter on the first step — reject
+    /// all of those at parse time rather than diverging at step time.
+    fn parse_mu(arg: Option<&str>) -> Option<f64> {
+        let mu: f64 = arg.unwrap_or("0.9").parse().ok()?;
+        if mu.is_finite() && (0.0..1.0).contains(&mu) {
+            Some(mu)
+        } else {
+            None
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         // "sgd" | "momentum:0.9" | "nesterov:0.9"
         let (name, arg) = match s.split_once(':') {
@@ -30,14 +43,8 @@ impl OptimizerKind {
         };
         match name.to_ascii_lowercase().as_str() {
             "sgd" => Some(Self::Sgd),
-            "momentum" => {
-                let mu = arg.unwrap_or("0.9").parse().ok()?;
-                Some(Self::Momentum { mu })
-            }
-            "nesterov" => {
-                let mu = arg.unwrap_or("0.9").parse().ok()?;
-                Some(Self::Nesterov { mu })
-            }
+            "momentum" => Some(Self::Momentum { mu: Self::parse_mu(arg)? }),
+            "nesterov" => Some(Self::Nesterov { mu: Self::parse_mu(arg)? }),
             _ => None,
         }
     }
@@ -131,6 +138,36 @@ mod tests {
         assert_eq!(OptimizerKind::parse("momentum"), Some(OptimizerKind::Momentum { mu: 0.9 }));
         assert_eq!(OptimizerKind::parse("adamw"), None);
         assert_eq!(OptimizerKind::parse("momentum:x"), None);
+    }
+
+    /// The parser must reject non-finite and out-of-range momentum
+    /// coefficients (`v = mu*v + g` diverges for mu >= 1, and NaN/inf
+    /// poison every parameter on the first step).
+    #[test]
+    fn parse_rejects_nonfinite_and_out_of_range_momentum() {
+        for s in [
+            "momentum:NaN",
+            "momentum:nan",
+            "momentum:inf",
+            "momentum:-inf",
+            "momentum:-1",
+            "momentum:-0.1",
+            "momentum:1",
+            "momentum:1.5",
+            "nesterov:NaN",
+            "nesterov:inf",
+            "nesterov:-1",
+            "nesterov:1",
+        ] {
+            assert_eq!(OptimizerKind::parse(s), None, "must reject '{s}'");
+        }
+        // Boundary values that are valid: 0 (plain SGD dynamics) and
+        // anything strictly below 1.
+        assert_eq!(OptimizerKind::parse("momentum:0"), Some(OptimizerKind::Momentum { mu: 0.0 }));
+        assert_eq!(
+            OptimizerKind::parse("nesterov:0.999"),
+            Some(OptimizerKind::Nesterov { mu: 0.999 })
+        );
     }
 
     #[test]

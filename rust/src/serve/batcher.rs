@@ -1,0 +1,473 @@
+//! Dynamic micro-batching: coalesce concurrent single-sample requests
+//! into one batched forward pass.
+//!
+//! Shape: clients submit through [`MicroBatcher::infer`], which parks the
+//! calling thread on its [`ClientHandle`]'s slot until a worker delivers
+//! the result. Workers drain the shared bounded queue in batches: a batch
+//! closes when it reaches `max_batch` requests **or** the oldest queued
+//! request has waited `max_wait` (the classic dynamic-batching window —
+//! throughput from coalescing, bounded added latency). A full queue sheds
+//! new submissions immediately ([`ServeError::Overloaded`]) instead of
+//! queueing unboundedly — the backpressure half of the contract.
+//!
+//! Every worker owns a warm [`Workspace`] plus a pre-sized input matrix,
+//! and every [`ClientHandle`] owns pre-sized input/output buffers, so a
+//! steady-state request performs **zero heap allocations** end to end:
+//! submit is an `Arc` clone pushed into a pre-reserved `VecDeque`; the
+//! worker copies request columns into its warm matrix, runs the blocked-
+//! GEMM forward pass through [`crate::nn::Network::output_batch_with`],
+//! and copies result columns back into each slot. Asserted by the counting
+//! global allocator in `rust/tests/serve_zero_alloc.rs`.
+//!
+//! Workers re-resolve their model from the [`ModelRegistry`] once per
+//! batch (read lock + `Arc` clone), so a hot-reloaded checkpoint goes
+//! live on the very next batch. A reload that changes the layer sizes
+//! re-warms the worker state (one-off allocation) and fails in-flight
+//! requests whose buffers no longer fit ([`ServeError::ModelChanged`]).
+
+use super::registry::ModelRegistry;
+use super::ServeError;
+use crate::metrics::serving::ServeMetrics;
+use crate::nn::Workspace;
+use crate::tensor::Matrix;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching/queueing knobs (the `[serve]` config section, minus HTTP).
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Close a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Close a batch when its oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Bounded queue depth; submissions beyond it are shed.
+    pub queue_depth: usize,
+    /// Worker threads, each with its own warm workspace.
+    pub workers: usize,
+    /// Column-shard the batched forward pass over this many threads
+    /// (`output_batch_threaded`). 1 = the zero-allocation warm-workspace
+    /// path; >1 trades steady-state allocations for intra-batch
+    /// parallelism — only worth it for very large models or batches.
+    pub infer_threads: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            max_wait: Duration::from_micros(1000),
+            queue_depth: 1024,
+            workers: 2,
+            infer_threads: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Owned by the client; not in the queue.
+    Idle,
+    /// In the queue (or in a worker's in-flight batch), awaiting a result.
+    Queued,
+    /// Output delivered.
+    Done,
+    /// Failed; the variant says why.
+    Failed(Fail),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fail {
+    ModelChanged,
+    Shutdown,
+}
+
+#[derive(Debug)]
+struct SlotState {
+    input: Vec<f32>,
+    output: Vec<f32>,
+    phase: Phase,
+}
+
+#[derive(Debug)]
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// A client's reusable request slot. Create once per serving thread
+/// ([`MicroBatcher::client`]) and reuse across requests — the pre-sized
+/// buffers are what make steady-state submission allocation-free. Not for
+/// concurrent use by multiple threads at once.
+#[derive(Debug)]
+pub struct ClientHandle {
+    slot: Arc<Slot>,
+}
+
+#[derive(Debug)]
+struct QueueState {
+    /// Pre-reserved to `queue_depth`; pushes never reallocate.
+    queue: VecDeque<(Arc<Slot>, Instant)>,
+    shutdown: bool,
+}
+
+#[derive(Debug)]
+struct Shared {
+    q: Mutex<QueueState>,
+    /// Workers wait here for submissions (and batch-window timeouts).
+    cv: Condvar,
+    registry: Arc<ModelRegistry>,
+    model: String,
+    metrics: Arc<ServeMetrics>,
+    max_batch: usize,
+    max_wait: Duration,
+    infer_threads: usize,
+}
+
+/// The dynamic micro-batching queue plus its worker pool for one model.
+#[derive(Debug)]
+pub struct MicroBatcher {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    policy: BatchPolicy,
+    /// Layer sizes at start — fallback only; live sizes come from the
+    /// registry so a dims-changing hot reload is survivable (fresh
+    /// handles pick up the new sizes).
+    start_input_size: usize,
+    start_output_size: usize,
+}
+
+impl MicroBatcher {
+    /// Spawn the worker pool for `model` (which must already be in the
+    /// registry — its layer sizes fix the handle buffer sizes).
+    pub fn start(
+        registry: Arc<ModelRegistry>,
+        model: &str,
+        policy: BatchPolicy,
+        metrics: Arc<ServeMetrics>,
+    ) -> Result<Self, ServeError> {
+        let net = registry
+            .get(model)
+            .ok_or_else(|| ServeError::Model(format!("unknown model '{model}'")))?;
+        let (input_size, output_size) = (net.input_size(), net.output_size());
+        drop(net);
+        let policy = BatchPolicy {
+            max_batch: policy.max_batch.max(1),
+            max_wait: policy.max_wait,
+            queue_depth: policy.queue_depth.max(policy.max_batch.max(1)),
+            workers: policy.workers.max(1),
+            infer_threads: policy.infer_threads.max(1),
+        };
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState {
+                queue: VecDeque::with_capacity(policy.queue_depth),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            registry,
+            model: model.to_string(),
+            metrics,
+            max_batch: policy.max_batch,
+            max_wait: policy.max_wait,
+            infer_threads: policy.infer_threads,
+        });
+        let workers = (0..policy.workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("serve-{model}-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn serve worker")
+            })
+            .collect();
+        Ok(Self {
+            shared,
+            workers: Mutex::new(workers),
+            policy,
+            start_input_size: input_size,
+            start_output_size: output_size,
+        })
+    }
+
+    /// The model's *current* input layer size (per-request value count) —
+    /// tracks hot reloads. Allocation-free (registry read lock).
+    pub fn input_size(&self) -> usize {
+        self.shared
+            .registry
+            .get(&self.shared.model)
+            .map(|net| net.input_size())
+            .unwrap_or(self.start_input_size)
+    }
+
+    /// The model's *current* output layer size — tracks hot reloads.
+    pub fn output_size(&self) -> usize {
+        self.shared
+            .registry
+            .get(&self.shared.model)
+            .map(|net| net.output_size())
+            .unwrap_or(self.start_output_size)
+    }
+
+    /// The effective (clamped) batching policy.
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// Requests currently queued (not yet drained into a batch).
+    pub fn queue_len(&self) -> usize {
+        self.shared.q.lock().unwrap().queue.len()
+    }
+
+    /// A reusable request slot sized for the model as it is *now* — after
+    /// a dims-changing hot reload, old handles fail with
+    /// [`ServeError::ModelChanged`] and a fresh handle picks up the new
+    /// sizes.
+    pub fn client(&self) -> ClientHandle {
+        ClientHandle {
+            slot: Arc::new(Slot {
+                state: Mutex::new(SlotState {
+                    input: vec![0.0; self.input_size()],
+                    output: vec![0.0; self.output_size()],
+                    phase: Phase::Idle,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Submit one sample and block until its result lands in `output`.
+    /// Allocation-free with a reused handle and pre-sized buffers. Sheds
+    /// immediately ([`ServeError::Overloaded`]) when the queue is full.
+    ///
+    /// Shapes are validated against the *handle's* buffers (fixed at
+    /// [`MicroBatcher::client`] time); the worker re-validates against
+    /// the live model, so a handle predating a dims-changing hot reload
+    /// fails with [`ServeError::ModelChanged`] — re-create it and retry.
+    pub fn infer(
+        &self,
+        handle: &ClientHandle,
+        input: &[f32],
+        output: &mut [f32],
+    ) -> Result<(), ServeError> {
+        {
+            let mut st = handle.slot.state.lock().unwrap();
+            assert_ne!(st.phase, Phase::Queued, "ClientHandle used from two threads at once");
+            if input.len() != st.input.len() {
+                return Err(ServeError::BadShape {
+                    expected: st.input.len(),
+                    got: input.len(),
+                });
+            }
+            if output.len() != st.output.len() {
+                return Err(ServeError::BadShape {
+                    expected: st.output.len(),
+                    got: output.len(),
+                });
+            }
+            st.input.copy_from_slice(input);
+            st.phase = Phase::Queued;
+        }
+        let enqueued_at = Instant::now();
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.shutdown {
+                handle.slot.state.lock().unwrap().phase = Phase::Idle;
+                return Err(ServeError::ShuttingDown);
+            }
+            if q.queue.len() >= self.policy.queue_depth {
+                self.shared.metrics.record_shed();
+                handle.slot.state.lock().unwrap().phase = Phase::Idle;
+                return Err(ServeError::Overloaded);
+            }
+            q.queue.push_back((Arc::clone(&handle.slot), enqueued_at));
+            self.shared.metrics.record_request();
+            // notify_all, not notify_one: a single notification can be
+            // consumed by a worker mid-window (which just re-checks its
+            // size condition), leaving an idle sibling asleep.
+            self.shared.cv.notify_all();
+        }
+        let mut st = handle.slot.state.lock().unwrap();
+        while st.phase == Phase::Queued {
+            st = handle.slot.cv.wait(st).unwrap();
+        }
+        let phase = st.phase;
+        st.phase = Phase::Idle;
+        match phase {
+            Phase::Done => {
+                output.copy_from_slice(&st.output);
+                Ok(())
+            }
+            Phase::Failed(Fail::ModelChanged) => Err(ServeError::ModelChanged),
+            Phase::Failed(Fail::Shutdown) => Err(ServeError::ShuttingDown),
+            Phase::Idle | Phase::Queued => unreachable!("worker left slot unfinished"),
+        }
+    }
+
+    /// Stop accepting work, fail pending requests, and join the workers.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if !q.shutdown {
+                q.shutdown = true;
+                while let Some((slot, _)) = q.queue.pop_front() {
+                    let mut st = slot.state.lock().unwrap();
+                    st.phase = Phase::Failed(Fail::Shutdown);
+                    slot.cv.notify_all();
+                }
+            }
+            self.shared.cv.notify_all();
+        }
+        let mut workers = self.workers.lock().unwrap();
+        for h in workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MicroBatcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One worker: wait for work, run the batching window, drain, infer,
+/// deliver, repeat. Multiple workers share the queue; drains are disjoint
+/// because the queue lock is held across them.
+fn worker_loop(sh: &Shared) {
+    let mut dims: Vec<usize> = match sh.registry.get(&sh.model) {
+        Some(net) => net.dims().to_vec(),
+        None => return,
+    };
+    let mut ws = Workspace::<f32>::for_batch(&dims, sh.max_batch);
+    let mut x = Matrix::<f32>::zeros(dims[0], sh.max_batch);
+    let mut batch: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(sh.max_batch);
+    // Warm the GEMM packing scratch at the full batch size so the first
+    // real batch is already on the zero-allocation path.
+    if let Some(net) = sh.registry.get(&sh.model) {
+        let _ = net.output_batch_with(&x, &mut ws);
+    }
+
+    let mut q = sh.q.lock().unwrap();
+    loop {
+        if q.shutdown {
+            return;
+        }
+        if q.queue.is_empty() {
+            q = sh.cv.wait(q).unwrap();
+            continue;
+        }
+        // Batching window: close at max_batch or the oldest deadline.
+        let deadline = q.queue.front().unwrap().1 + sh.max_wait;
+        while q.queue.len() < sh.max_batch && !q.shutdown {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = sh.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if q.queue.is_empty() {
+                // A sibling worker drained the window out from under us.
+                break;
+            }
+        }
+        if q.shutdown {
+            return;
+        }
+        let take = q.queue.len().min(sh.max_batch);
+        if take == 0 {
+            continue;
+        }
+        batch.clear();
+        for _ in 0..take {
+            batch.push(q.queue.pop_front().unwrap());
+        }
+        drop(q);
+
+        run_batch(sh, &batch, &mut dims, &mut ws, &mut x);
+        batch.clear();
+        q = sh.q.lock().unwrap();
+    }
+}
+
+fn run_batch(
+    sh: &Shared,
+    batch: &[(Arc<Slot>, Instant)],
+    dims: &mut Vec<usize>,
+    ws: &mut Workspace<f32>,
+    x: &mut Matrix<f32>,
+) {
+    let net = match sh.registry.get(&sh.model) {
+        Some(net) => net,
+        None => {
+            fail_all(batch, Fail::ModelChanged);
+            return;
+        }
+    };
+    if net.dims() != &dims[..] {
+        // Hot reload changed the architecture: re-warm (one-off
+        // allocation, deliberately off the steady-state path).
+        *dims = net.dims().to_vec();
+        *ws = Workspace::for_batch(dims, sh.max_batch);
+        *x = Matrix::zeros(dims[0], sh.max_batch);
+    }
+    let n = batch.len();
+    let in_len = net.input_size();
+    let out_len = net.output_size();
+    x.resize_cols(n);
+    for (j, (slot, _)) in batch.iter().enumerate() {
+        let st = slot.state.lock().unwrap();
+        if st.input.len() == in_len {
+            x.col_mut(j).copy_from_slice(&st.input);
+        } else {
+            // Stale handle from before a dims-changing reload: keep the
+            // column defined, fail the slot at delivery.
+            for v in x.col_mut(j) {
+                *v = 0.0;
+            }
+        }
+    }
+    // Record metrics *before* waking any waiter, so the batch and its
+    // latencies are always visible by the time a response is: tests (and
+    // scrapes racing a response) never observe a completed request whose
+    // batch is missing from the counters. Latency is therefore
+    // enqueue → compute-done (delivery wakeups are microseconds).
+    let record = |sh: &Shared| {
+        sh.metrics.record_batch(n);
+        let now = Instant::now();
+        for (_, t) in batch {
+            sh.metrics.latency.record_us(now.duration_since(*t).as_micros() as u64);
+        }
+    };
+    if sh.infer_threads > 1 && n > 1 {
+        let out = net.output_batch_threaded(x, sh.infer_threads);
+        record(sh);
+        deliver(batch, in_len, out_len, &out);
+    } else {
+        let out = net.output_batch_with(x, ws);
+        record(sh);
+        deliver(batch, in_len, out_len, out);
+    }
+}
+
+fn deliver(batch: &[(Arc<Slot>, Instant)], in_len: usize, out_len: usize, out: &Matrix<f32>) {
+    for (j, (slot, _)) in batch.iter().enumerate() {
+        let mut st = slot.state.lock().unwrap();
+        if st.input.len() != in_len || st.output.len() != out_len {
+            st.phase = Phase::Failed(Fail::ModelChanged);
+        } else {
+            st.output.copy_from_slice(out.col(j));
+            st.phase = Phase::Done;
+        }
+        slot.cv.notify_all();
+    }
+}
+
+fn fail_all(batch: &[(Arc<Slot>, Instant)], fail: Fail) {
+    for (slot, _) in batch {
+        let mut st = slot.state.lock().unwrap();
+        st.phase = Phase::Failed(fail);
+        slot.cv.notify_all();
+    }
+}

@@ -1,0 +1,482 @@
+//! Minimal std-only HTTP/1.1 front end for the micro-batching server.
+//!
+//! One acceptor thread (non-blocking accept so shutdown is prompt), one
+//! handler thread per connection with keep-alive, per-model
+//! [`MicroBatcher`]s behind it, and an optional hot-reload poller. Scope
+//! is deliberately small: enough HTTP for `curl`, load generators, and
+//! orchestration health checks — request line + headers + Content-Length
+//! bodies; no chunked encoding, no TLS.
+//!
+//! Endpoints:
+//!
+//! - `POST /v1/predict` — body `{"model": "default", "input": [f32...]}`
+//!   (`model` optional); replies `{"model", "argmax", "output", "latency_us"}`.
+//! - `GET  /healthz` — `{"status":"ok","models":[...]}`.
+//! - `GET  /metrics` — Prometheus text ([`ServeMetrics::render_prometheus`]).
+//! - `POST /admin/shutdown` — graceful shutdown: stop accepting, drain,
+//!   join workers.
+
+use super::batcher::{BatchPolicy, ClientHandle, MicroBatcher};
+use super::registry::ModelRegistry;
+use super::ServeError;
+use crate::config::ServeConfig;
+use crate::metrics::serving::ServeMetrics;
+use crate::tensor::vecops;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Largest accepted request body (a 784-float MNIST sample is ~6 KB; 4 MB
+/// leaves room for very wide inputs without letting a client OOM us).
+const MAX_BODY: usize = 4 << 20;
+
+/// Largest accepted request line / header line, and maximum header count
+/// — without these, a peer streaming newline-free bytes would grow
+/// `read_line`'s String without bound.
+const MAX_LINE: u64 = 8 * 1024;
+const MAX_HEADERS: usize = 100;
+
+/// Idle keep-alive connections are closed after this long.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Shared server context handed to every connection thread.
+struct Ctx {
+    registry: Arc<ModelRegistry>,
+    batchers: BTreeMap<String, Arc<MicroBatcher>>,
+    metrics: Arc<ServeMetrics>,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// The online inference server. [`Server::start`] returns a
+/// [`ServerHandle`]; the listening socket, acceptor, workers, and poller
+/// all shut down when the handle is dropped (or explicitly).
+pub struct Server;
+
+/// Running server: address, metrics, and shutdown control.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    poller: Option<JoinHandle<()>>,
+    batchers: Vec<Arc<MicroBatcher>>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`, spawn one micro-batcher per registered model plus
+    /// the acceptor (and hot-reload poller if enabled), and return
+    /// immediately. Models must already be in the registry.
+    pub fn start(
+        cfg: &ServeConfig,
+        registry: Arc<ModelRegistry>,
+    ) -> Result<ServerHandle, ServeError> {
+        if registry.is_empty() {
+            return Err(ServeError::Model(
+                "registry has no models; load a checkpoint first".into(),
+            ));
+        }
+        let metrics = Arc::new(ServeMetrics::new());
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch,
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+            queue_depth: cfg.queue_depth,
+            workers: cfg.workers,
+            infer_threads: cfg.infer_threads,
+        };
+        let mut batchers = BTreeMap::new();
+        for name in registry.names() {
+            let b = MicroBatcher::start(
+                Arc::clone(&registry),
+                &name,
+                policy.clone(),
+                Arc::clone(&metrics),
+            )?;
+            batchers.insert(name, Arc::new(b));
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let ctx = Arc::new(Ctx {
+            registry: Arc::clone(&registry),
+            batchers,
+            metrics: Arc::clone(&metrics),
+            shutdown: Arc::clone(&shutdown),
+        });
+        let handle_batchers: Vec<Arc<MicroBatcher>> = ctx.batchers.values().cloned().collect();
+        let acceptor = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(&listener, &ctx))
+                .expect("spawn acceptor")
+        };
+        let poller = if cfg.hot_reload {
+            let sd = Arc::clone(&shutdown);
+            let poll = Duration::from_millis(cfg.reload_poll_ms.max(10));
+            Some(
+                std::thread::Builder::new()
+                    .name("serve-reload".into())
+                    .spawn(move || {
+                        let mut waited = Duration::ZERO;
+                        while !sd.load(Ordering::SeqCst) {
+                            // Sleep in small slices so shutdown is prompt
+                            // even with a long poll interval.
+                            std::thread::sleep(Duration::from_millis(25));
+                            waited += Duration::from_millis(25);
+                            if waited < poll {
+                                continue;
+                            }
+                            waited = Duration::ZERO;
+                            for name in registry.poll_reload() {
+                                eprintln!("# serve: hot-reloaded model '{name}'");
+                            }
+                        }
+                    })
+                    .expect("spawn reload poller"),
+            )
+        } else {
+            None
+        };
+        Ok(ServerHandle {
+            addr,
+            shutdown,
+            acceptor: Some(acceptor),
+            poller,
+            batchers: handle_batchers,
+            metrics,
+        })
+    }
+}
+
+impl ServerHandle {
+    /// The bound address (port resolved, so `addr: "127.0.0.1:0"` works).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live serving metrics (shared with the `/metrics` endpoint).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn is_shut_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until the server shuts down (e.g. via `POST /admin/shutdown`),
+    /// then release every serving resource.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        self.finish();
+    }
+
+    /// Graceful shutdown: stop accepting, fail queued requests, join the
+    /// acceptor, poller, and worker pools. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wait();
+    }
+
+    fn finish(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(p) = self.poller.take() {
+            let _ = p.join();
+        }
+        for b in &self.batchers {
+            b.shutdown();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, ctx: &Arc<Ctx>) {
+    while !ctx.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let ctx = Arc::clone(ctx);
+                let _ = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || {
+                        let _ = handle_connection(stream, &ctx);
+                    });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    close: bool,
+}
+
+/// `read_line` with a hard length cap: a line longer than [`MAX_LINE`]
+/// (no newline within the limit) is an error instead of unbounded growth.
+fn read_line_limited(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+) -> std::io::Result<usize> {
+    let n = reader.by_ref().take(MAX_LINE).read_line(line)?;
+    if n as u64 >= MAX_LINE && !line.ends_with('\n') {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "line too long"));
+    }
+    Ok(n)
+}
+
+/// Read one request. `Ok(None)` means the peer closed (or idled out) and
+/// the connection should end quietly.
+fn read_request(reader: &mut BufReader<TcpStream>) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    match read_line_limited(reader, &mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e),
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "bad request line"));
+    }
+    let mut content_length = 0usize;
+    let mut close = false;
+    let mut header_count = 0usize;
+    loop {
+        header_count += 1;
+        if header_count > MAX_HEADERS {
+            return Err(std::io::Error::new(ErrorKind::InvalidData, "too many headers"));
+        }
+        let mut header = String::new();
+        if read_line_limited(reader, &mut header)? == 0 {
+            return Ok(None);
+        }
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value
+                    .parse()
+                    .map_err(|_| std::io::Error::new(ErrorKind::InvalidData, "bad length"))?;
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                close = true;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(std::io::Error::new(ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { method, path, body, close }))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    close: bool,
+) -> std::io::Result<()> {
+    let conn = if close { "close" } else { "keep-alive" };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+    close: bool,
+) -> std::io::Result<()> {
+    respond(stream, status, reason, "application/json", body, close)
+}
+
+fn error_json(msg: &str) -> String {
+    Json::Obj(BTreeMap::from([("error".to_string(), Json::Str(msg.into()))])).to_string()
+}
+
+/// Per-connection serving state: one warm `ClientHandle` + output buffer
+/// per model, created on first use and reused for every later request on
+/// this connection.
+struct ConnState {
+    handles: BTreeMap<String, (ClientHandle, Vec<f32>)>,
+}
+
+fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut conn = ConnState { handles: BTreeMap::new() };
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()),
+            Err(_) => {
+                let _ = respond_json(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    &error_json("malformed request"),
+                    true,
+                );
+                return Ok(());
+            }
+        };
+        let close = req.close;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                // Json::Arr/Json::Str so model names are escaped properly.
+                let models =
+                    Json::Arr(ctx.registry.names().into_iter().map(Json::Str).collect());
+                let body = format!("{{\"status\":\"ok\",\"models\":{models}}}");
+                respond_json(&mut stream, 200, "OK", &body, close)?;
+            }
+            ("GET", "/metrics") => {
+                let body = ctx.metrics.render_prometheus();
+                respond(
+                    &mut stream,
+                    200,
+                    "OK",
+                    "text/plain; version=0.0.4",
+                    &body,
+                    close,
+                )?;
+            }
+            ("POST", "/admin/shutdown") => {
+                ctx.shutdown.store(true, Ordering::SeqCst);
+                respond_json(&mut stream, 200, "OK", "{\"status\":\"shutting down\"}", true)?;
+                return Ok(());
+            }
+            ("POST", "/v1/predict") => {
+                let (status, reason, body) = predict(ctx, &mut conn, &req.body);
+                respond_json(&mut stream, status, reason, &body, close)?;
+            }
+            (_, path) => {
+                respond_json(
+                    &mut stream,
+                    404,
+                    "Not Found",
+                    &error_json(&format!("no such endpoint: {path}")),
+                    close,
+                )?;
+            }
+        }
+        if close {
+            return Ok(());
+        }
+    }
+}
+
+fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "Bad Request", error_json("body is not utf-8")),
+    };
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return (400, "Bad Request", error_json(&format!("bad json: {e}"))),
+    };
+    let model = doc.get("model").and_then(Json::as_str).unwrap_or("default").to_string();
+    let batcher = match ctx.batchers.get(&model) {
+        Some(b) => b,
+        None => {
+            return (404, "Not Found", error_json(&format!("unknown model '{model}'")));
+        }
+    };
+    let input_json = match doc.get("input").and_then(Json::as_arr) {
+        Some(a) => a,
+        None => return (400, "Bad Request", error_json("missing 'input' array")),
+    };
+    if input_json.len() != batcher.input_size() {
+        return (
+            400,
+            "Bad Request",
+            error_json(&format!(
+                "'input' must have {} values, got {}",
+                batcher.input_size(),
+                input_json.len()
+            )),
+        );
+    }
+    let mut input = Vec::with_capacity(input_json.len());
+    for v in input_json {
+        match v.as_f64() {
+            Some(f) => input.push(f as f32),
+            None => return (400, "Bad Request", error_json("'input' must be numbers")),
+        }
+    }
+    let (handle, out) = conn.handles.entry(model.clone()).or_insert_with(|| {
+        (batcher.client(), vec![0.0f32; batcher.output_size()])
+    });
+    let sw = Instant::now();
+    match batcher.infer(handle, &input, out) {
+        Ok(()) => {
+            let latency_us = sw.elapsed().as_micros();
+            let argmax = vecops::argmax(&out[..]);
+            let mut scores = String::with_capacity(out.len() * 12);
+            for (i, v) in out.iter().enumerate() {
+                if i > 0 {
+                    scores.push(',');
+                }
+                scores.push_str(&format!("{v:?}"));
+            }
+            (
+                200,
+                "OK",
+                format!(
+                    "{{\"model\":\"{model}\",\"argmax\":{argmax},\
+                     \"output\":[{scores}],\"latency_us\":{latency_us}}}"
+                ),
+            )
+        }
+        Err(ServeError::Overloaded) => {
+            (503, "Service Unavailable", error_json("overloaded: request shed"))
+        }
+        Err(ServeError::ShuttingDown) => {
+            (503, "Service Unavailable", error_json("shutting down"))
+        }
+        Err(ServeError::ModelChanged) => {
+            // Stale per-connection buffers after a dims-changing reload:
+            // drop them so the next request re-sizes against the new model.
+            conn.handles.remove(&model);
+            (409, "Conflict", error_json("model changed; retry"))
+        }
+        Err(e) => (400, "Bad Request", error_json(&e.to_string())),
+    }
+}

@@ -1,0 +1,84 @@
+//! Online inference serving — the repo's first *serving* workload next to
+//! training (the ROADMAP's "serve heavy traffic" north star).
+//!
+//! Layers, bottom to top:
+//!
+//! - [`ModelRegistry`] (`registry.rs`): named, file-backed checkpoints
+//!   loaded through `nn/io`, with polling hot-reload — a rewritten
+//!   checkpoint is picked up without restarting the server.
+//! - [`MicroBatcher`] (`batcher.rs`): a bounded submission queue that
+//!   coalesces concurrent single-sample requests into one batched forward
+//!   pass (cuDNN's lesson: batched primitives only pay off when callers
+//!   are coalesced). A pool of worker threads each owns a warm
+//!   [`crate::nn::Workspace`], so steady-state serving performs **zero
+//!   heap allocations** (asserted in `rust/tests/serve_zero_alloc.rs`).
+//!   Overflow is shed immediately — backpressure instead of unbounded
+//!   queueing.
+//! - [`Server`] (`http.rs`): a std-only HTTP/1.1 front end over
+//!   `TcpListener` — `POST /v1/predict`, `GET /healthz`, `GET /metrics`
+//!   (Prometheus text), `POST /admin/shutdown` — with keep-alive
+//!   connections and graceful shutdown.
+//!
+//! Metrics (latency percentiles, batch-size distribution, shed count)
+//! live in [`crate::metrics::serving`]. The load generator driving all of
+//! this end-to-end is `rust/benches/serve_load.rs`.
+
+mod batcher;
+mod http;
+mod registry;
+
+pub use batcher::{BatchPolicy, ClientHandle, MicroBatcher};
+pub use http::{Server, ServerHandle};
+pub use registry::ModelRegistry;
+
+/// Errors from the serving subsystem.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Socket / filesystem failure.
+    Io(std::io::Error),
+    /// Registry problem: unknown model name, unreadable or malformed
+    /// checkpoint.
+    Model(String),
+    /// The bounded request queue is full — the request was shed. Clients
+    /// should back off and retry (HTTP maps this to 503).
+    Overloaded,
+    /// The server is shutting down.
+    ShuttingDown,
+    /// Request input/output buffer does not match the model's layer sizes.
+    BadShape { expected: usize, got: usize },
+    /// The model was hot-reloaded with different layer sizes while this
+    /// request was in flight; re-create the client handle and retry.
+    ModelChanged,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Model(msg) => write!(f, "model: {msg}"),
+            Self::Overloaded => write!(f, "request queue full (shed); retry later"),
+            Self::ShuttingDown => write!(f, "server is shutting down"),
+            Self::BadShape { expected, got } => {
+                write!(f, "bad shape: expected {expected} values, got {got}")
+            }
+            Self::ModelChanged => {
+                write!(f, "model layer sizes changed under this request (hot reload)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ServeError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}

@@ -1,0 +1,232 @@
+//! Named model registry with polling hot-reload.
+//!
+//! Models come from two places: in-memory networks ([`ModelRegistry::insert`],
+//! used by tests and the load bench) and file-backed checkpoints saved via
+//! `nn/io` ([`ModelRegistry::load_file`]). File-backed entries remember the
+//! source path plus its `(mtime, len)` fingerprint; [`ModelRegistry::poll_reload`]
+//! re-stats every source and reloads the ones whose fingerprint changed, so
+//! a retrained checkpoint written over the old file goes live without a
+//! restart. A rewrite that keeps both mtime and length identical is not
+//! detected — acceptable for a polling design; checkpoint writers always
+//! touch mtime in practice.
+//!
+//! Readers get `Arc<Network<f32>>` snapshots: an in-flight batch keeps the
+//! parameters it started with even if a reload lands mid-flight, and the
+//! lookup itself is a read-lock plus an `Arc` clone — no allocation on the
+//! serving hot path.
+
+use super::ServeError;
+use crate::nn::Network;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+use std::time::SystemTime;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Fingerprint {
+    mtime: SystemTime,
+    len: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Source {
+    path: PathBuf,
+    fingerprint: Fingerprint,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    net: Arc<Network<f32>>,
+    source: Option<Source>,
+}
+
+/// Thread-safe registry of named serving models.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Entry>>,
+}
+
+fn fingerprint(path: &Path) -> Result<Fingerprint, ServeError> {
+    let meta = std::fs::metadata(path)?;
+    Ok(Fingerprint {
+        mtime: meta.modified().unwrap_or(SystemTime::UNIX_EPOCH),
+        len: meta.len(),
+    })
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) an in-memory model. Not hot-reloadable.
+    pub fn insert(&self, name: &str, net: Network<f32>) {
+        let mut models = self.models.write().unwrap();
+        models.insert(name.to_string(), Entry { net: Arc::new(net), source: None });
+    }
+
+    /// Load (or replace) a model from a checkpoint saved via `nn/io`,
+    /// remembering the path for hot reload.
+    pub fn load_file(&self, name: &str, path: impl AsRef<Path>) -> Result<(), ServeError> {
+        let path = path.as_ref();
+        let fp = fingerprint(path)?;
+        let net = Network::<f32>::load(path)
+            .map_err(|e| ServeError::Model(format!("{}: {e}", path.display())))?;
+        let mut models = self.models.write().unwrap();
+        models.insert(
+            name.to_string(),
+            Entry {
+                net: Arc::new(net),
+                source: Some(Source { path: path.to_path_buf(), fingerprint: fp }),
+            },
+        );
+        Ok(())
+    }
+
+    /// Snapshot of the named model's parameters. Allocation-free (read
+    /// lock + `Arc` clone), so safe on the serving hot path.
+    pub fn get(&self, name: &str) -> Option<Arc<Network<f32>>> {
+        let models = self.models.read().unwrap();
+        models.get(name).map(|e| Arc::clone(&e.net))
+    }
+
+    /// Registered model names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let models = self.models.read().unwrap();
+        models.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Re-stat every file-backed model and reload the ones whose
+    /// `(mtime, len)` fingerprint changed. Returns the reloaded names. A
+    /// checkpoint that fails to stat or parse keeps serving its previous
+    /// parameters (the error is reported on stderr), so a half-written
+    /// file can never take down the server.
+    pub fn poll_reload(&self) -> Vec<String> {
+        let candidates: Vec<(String, Source)> = {
+            let models = self.models.read().unwrap();
+            models
+                .iter()
+                .filter_map(|(name, e)| e.source.clone().map(|s| (name.clone(), s)))
+                .collect()
+        };
+        let mut reloaded = Vec::new();
+        for (name, source) in candidates {
+            let fp = match fingerprint(&source.path) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    eprintln!("# serve: cannot stat model '{name}': {e}");
+                    continue;
+                }
+            };
+            if fp == source.fingerprint {
+                continue;
+            }
+            match Network::<f32>::load(&source.path) {
+                Ok(net) => {
+                    let mut models = self.models.write().unwrap();
+                    // Replace only if the entry still points at this path
+                    // (it may have been re-registered meanwhile).
+                    if let Some(e) = models.get_mut(&name) {
+                        if e.source.as_ref().map(|s| &s.path) == Some(&source.path) {
+                            e.net = Arc::new(net);
+                            e.source =
+                                Some(Source { path: source.path, fingerprint: fp });
+                            reloaded.push(name);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "# serve: model '{name}' changed on disk but failed to load \
+                         ({e}); keeping previous parameters"
+                    );
+                }
+            }
+        }
+        reloaded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Activation;
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("nrs-registry-{tag}-{}.txt", std::process::id()))
+    }
+
+    #[test]
+    fn insert_and_get() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        reg.insert("a", Network::new(&[3, 4, 2], Activation::Tanh, 1));
+        reg.insert("b", Network::new(&[3, 4, 2], Activation::Tanh, 2));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.get("a").is_some());
+        assert!(reg.get("missing").is_none());
+        // Snapshots are independent of later replacement.
+        let old = reg.get("a").unwrap();
+        reg.insert("a", Network::new(&[3, 4, 2], Activation::Tanh, 99));
+        let new = reg.get("a").unwrap();
+        assert!(!old.params_close(&new, 1e-9), "replacement must change params");
+    }
+
+    #[test]
+    fn load_file_round_trip_and_errors() {
+        let path = tmpfile("load");
+        let net = Network::<f32>::new(&[5, 6, 3], Activation::Sigmoid, 7);
+        net.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        reg.load_file("m", &path).unwrap();
+        let loaded = reg.get("m").unwrap();
+        assert!(net.params_close(&loaded, 0.0));
+
+        assert!(matches!(
+            reg.load_file("x", "/nonexistent/net.txt"),
+            Err(ServeError::Io(_))
+        ));
+        std::fs::write(&path, "not a network").unwrap();
+        assert!(matches!(reg.load_file("x", &path), Err(ServeError::Model(_))));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn poll_reload_picks_up_rewritten_checkpoint() {
+        let path = tmpfile("reload");
+        let first = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 1);
+        first.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        reg.load_file("m", &path).unwrap();
+        assert!(reg.poll_reload().is_empty(), "unchanged file must not reload");
+
+        // Rewrite with different parameters; append a comment so the file
+        // length definitely changes even on coarse-mtime filesystems.
+        let second = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 2);
+        second.save(&path).unwrap();
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "# retrained").unwrap();
+        }
+        assert_eq!(reg.poll_reload(), vec!["m".to_string()]);
+        let live = reg.get("m").unwrap();
+        assert!(second.params_close(&live, 0.0), "reload must serve the new params");
+
+        // A garbage rewrite keeps the previous parameters alive.
+        std::fs::write(&path, "corrupted checkpoint").unwrap();
+        assert!(reg.poll_reload().is_empty());
+        let still = reg.get("m").unwrap();
+        assert!(second.params_close(&still, 0.0), "bad reload must not evict");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

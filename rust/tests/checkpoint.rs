@@ -1,0 +1,58 @@
+//! Checkpoint round-trip coverage: every activation function and both
+//! scalar kinds through `nn/io` save → load → bit-identical
+//! `output_batch`. The serving registry (`serve::ModelRegistry`) loads
+//! checkpoints through exactly this path, so hot-reload correctness
+//! rests on these invariants.
+
+use neural_rs::nn::{Activation, Network};
+use neural_rs::tensor::{Matrix, Rng, Scalar};
+
+fn assert_round_trip<T: Scalar>(act: Activation, seed: u64) {
+    let dims = [7usize, 9, 4];
+    let net = Network::<T>::new(&dims, act, seed);
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    let loaded = Network::<T>::load_from(&buf[..]).unwrap();
+    assert_eq!(loaded.dims(), net.dims(), "{act}: dims must survive");
+    assert_eq!(loaded.activation(), act, "{act}: activation must survive");
+    assert!(net.params_close(&loaded, 0.0), "{act}: params must round-trip exactly");
+
+    // The served quantity: batched outputs must be *bit-identical*, not
+    // just close — the text format writes full-precision values.
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let x = Matrix::<T>::from_fn(dims[0], 13, |_, _| T::from_f64(rng.uniform_in(-1.0, 1.0)));
+    assert_eq!(
+        net.output_batch(&x),
+        loaded.output_batch(&x),
+        "{act}: outputs must be bit-identical after reload"
+    );
+}
+
+#[test]
+fn every_activation_round_trips_f32() {
+    for (i, act) in Activation::ALL.into_iter().enumerate() {
+        assert_round_trip::<f32>(act, 11 + i as u64);
+    }
+}
+
+#[test]
+fn every_activation_round_trips_f64() {
+    for (i, act) in Activation::ALL.into_iter().enumerate() {
+        assert_round_trip::<f64>(act, 29 + i as u64);
+    }
+}
+
+/// The same contract through real files — the path the serving registry
+/// takes when loading and hot-reloading checkpoints.
+#[test]
+fn file_backed_round_trip_predicts_identically() {
+    let path = std::env::temp_dir()
+        .join(format!("nrs-checkpoint-{}.txt", std::process::id()));
+    let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 3);
+    net.save(&path).unwrap();
+    let loaded = Network::<f32>::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let mut rng = Rng::new(7);
+    let x = Matrix::<f32>::from_fn(784, 5, |_, _| rng.uniform_in(0.0, 1.0) as f32);
+    assert_eq!(net.output_batch(&x), loaded.output_batch(&x));
+}

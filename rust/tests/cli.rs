@@ -136,6 +136,112 @@ fn gen_data_writes_idx_files() {
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+/// The serving acceptance path: train → save, `serve --config <toml>`,
+/// then `POST /v1/predict` must return the same argmax the checkpoint
+/// computes in-process.
+#[test]
+fn serve_answers_predict_with_correct_argmax() {
+    use std::io::{Read, Write};
+
+    let dir = tmpdir("serve");
+    let model = dir.join("net.txt");
+    let out = bin()
+        .args([
+            "train", "--engine", "native", "--train-n", "1000", "--test-n", "200",
+            "--epochs", "3", "--batch-size", "100", "--dims", "784,16,10",
+            "--data-dir", "/nonexistent", "--save", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    let port = 47417;
+    let cfg = dir.join("serve.toml");
+    std::fs::write(
+        &cfg,
+        format!(
+            "[serve]\naddr = \"127.0.0.1:{port}\"\nmodel = \"{}\"\n\
+             max_batch = 8\nmax_wait_us = 500\nworkers = 2\nhot_reload = false\n",
+            model.display()
+        ),
+    )
+    .unwrap();
+    let mut server = bin()
+        .args(["serve", "--config", cfg.to_str().unwrap()])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    let addr = format!("127.0.0.1:{port}");
+    let http = |method: &str, path: &str, body: &str| -> (u16, String) {
+        let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        let status = text
+            .lines()
+            .next()
+            .and_then(|l| l.split_ascii_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let payload =
+            text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, payload)
+    };
+
+    // Wait for the listener to come up.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        if std::net::TcpStream::connect(&addr).is_ok() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "server never came up");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let (status, body) = http("GET", "/healthz", "");
+    assert_eq!(status, 200, "{body}");
+
+    // Ask the server about a real synthetic digit and compare with the
+    // checkpoint evaluated in-process.
+    let data = neural_rs::data::synthesize::<f32>(3, 99);
+    let net = neural_rs::nn::Network::<f32>::load(&model).unwrap();
+    for j in 0..3 {
+        let sample = data.images.col(j);
+        let expect = neural_rs::tensor::vecops::argmax(&net.output(sample));
+        let mut req = String::from("{\"input\":[");
+        for (i, v) in sample.iter().enumerate() {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push_str(&format!("{v}"));
+        }
+        req.push_str("]}");
+        let (status, body) = http("POST", "/v1/predict", &req);
+        assert_eq!(status, 200, "{body}");
+        let argmax: usize = body
+            .split("\"argmax\":")
+            .nth(1)
+            .and_then(|s| s.split(',').next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert_eq!(argmax, expect, "sample {j}: server and local argmax differ: {body}");
+    }
+
+    let (status, _) = http("POST", "/admin/shutdown", "");
+    assert_eq!(status, 200);
+    let out = server.wait_with_output().unwrap();
+    assert!(out.status.success(), "server exit: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serving on http://"), "{text}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
 #[test]
 fn inspect_lists_artifact_configs() {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

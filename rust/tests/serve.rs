@@ -1,0 +1,312 @@
+//! Serving subsystem integration tests: micro-batch coalescing under
+//! concurrent submitters, `max_wait` flush timing, bounded-queue
+//! shedding, in-flight model hot-swap, and the HTTP server end to end.
+//! (The zero-allocation steady-state assertion lives in its own binary,
+//! `rust/tests/serve_zero_alloc.rs`, because it needs a process-global
+//! counting allocator.)
+
+use neural_rs::config::ServeConfig;
+use neural_rs::metrics::ServeMetrics;
+use neural_rs::nn::{Activation, Network};
+use neural_rs::serve::{BatchPolicy, MicroBatcher, ModelRegistry, ServeError, Server};
+use neural_rs::tensor::vecops;
+use neural_rs::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+fn small_net(seed: u64) -> Network<f32> {
+    Network::new(&[6, 8, 3], Activation::Sigmoid, seed)
+}
+
+fn batcher_with(
+    net: &Network<f32>,
+    policy: BatchPolicy,
+) -> (Arc<MicroBatcher>, Arc<ServeMetrics>, Arc<ModelRegistry>) {
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("m", net.clone());
+    let metrics = Arc::new(ServeMetrics::new());
+    let b = MicroBatcher::start(Arc::clone(&registry), "m", policy, Arc::clone(&metrics))
+        .unwrap();
+    (Arc::new(b), metrics, registry)
+}
+
+/// Eight concurrent submitters with an 8-wide batch window must coalesce
+/// into exactly one batch — and return long before the (generous) window
+/// deadline, because hitting `max_batch` closes the batch early.
+#[test]
+fn coalesces_concurrent_submitters_into_one_batch() {
+    let net = small_net(7);
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_secs(3),
+        queue_depth: 64,
+        workers: 1,
+        infer_threads: 1,
+    };
+    let (b, metrics, _reg) = batcher_with(&net, policy);
+    let barrier = Arc::new(Barrier::new(8));
+    let sw = Instant::now();
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            let b = Arc::clone(&b);
+            let barrier = Arc::clone(&barrier);
+            let net = net.clone();
+            std::thread::spawn(move || {
+                let handle = b.client();
+                let input: Vec<f32> = (0..6).map(|k| (i * 6 + k) as f32 / 48.0).collect();
+                let mut out = [0.0f32; 3];
+                barrier.wait();
+                b.infer(&handle, &input, &mut out).unwrap();
+                // Each coalesced result must match the model applied to
+                // that caller's own sample.
+                let expect = net.output(&input);
+                assert!(
+                    vecops::max_abs_diff(&out, &expect) < 1e-4,
+                    "submitter {i}: batched result diverged"
+                );
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let elapsed = sw.elapsed();
+    assert!(
+        elapsed < Duration::from_millis(1500),
+        "hitting max_batch must close the window early (took {elapsed:?})"
+    );
+    assert_eq!(metrics.requests(), 8);
+    assert_eq!(metrics.batches(), 1, "eight submitters must coalesce into one batch");
+    assert_eq!(metrics.batches_of_size(8), 1);
+    assert_eq!(metrics.latency.count(), 8);
+}
+
+/// A lone request can never fill the batch, so the `max_wait` deadline is
+/// what flushes it: with a 150 ms window the request takes >= ~150 ms;
+/// with a zero window it returns almost immediately.
+#[test]
+fn max_wait_deadline_flushes_partial_batches() {
+    let net = small_net(9);
+    let slow = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(150),
+        queue_depth: 64,
+        workers: 1,
+        infer_threads: 1,
+    };
+    let (b, metrics, _reg) = batcher_with(&net, slow);
+    let handle = b.client();
+    let input = [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6];
+    let mut out = [0.0f32; 3];
+    let sw = Instant::now();
+    b.infer(&handle, &input, &mut out).unwrap();
+    let waited = sw.elapsed();
+    assert!(
+        waited >= Duration::from_millis(100),
+        "partial batch must wait for the window (returned after {waited:?})"
+    );
+    assert!(waited < Duration::from_secs(5), "but not forever ({waited:?})");
+    assert_eq!(metrics.batches_of_size(1), 1);
+
+    let fast = BatchPolicy { max_wait: Duration::ZERO, ..b.policy().clone() };
+    let (b2, _m2, _r2) = batcher_with(&net, fast);
+    let handle2 = b2.client();
+    let sw = Instant::now();
+    b2.infer(&handle2, &input, &mut out).unwrap();
+    let waited = sw.elapsed();
+    assert!(
+        waited < Duration::from_millis(100),
+        "zero window must flush immediately (took {waited:?})"
+    );
+}
+
+/// Submissions beyond `queue_depth` are shed immediately with
+/// `Overloaded` — bounded memory and fail-fast backpressure instead of
+/// unbounded queueing.
+#[test]
+fn bounded_queue_sheds_overflow_immediately() {
+    let net = small_net(11);
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(1500),
+        queue_depth: 4,
+        workers: 1,
+        infer_threads: 1,
+    };
+    let (b, metrics, _reg) = batcher_with(&net, policy);
+    // Fill the queue: four submitters block inside the batching window.
+    let blocked: Vec<_> = (0..4)
+        .map(|_| {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let handle = b.client();
+                let input = [0.5f32; 6];
+                let mut out = [0.0f32; 3];
+                b.infer(&handle, &input, &mut out).unwrap();
+            })
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while b.queue_len() < 4 {
+        assert!(Instant::now() < deadline, "queue never filled (len {})", b.queue_len());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // The fifth submission must shed, and do so immediately (not after
+    // the 1.5 s window).
+    let handle = b.client();
+    let input = [0.5f32; 6];
+    let mut out = [0.0f32; 3];
+    let sw = Instant::now();
+    let res = b.infer(&handle, &input, &mut out);
+    assert!(matches!(res, Err(ServeError::Overloaded)), "expected shed, got {res:?}");
+    assert!(
+        sw.elapsed() < Duration::from_millis(100),
+        "shed must be immediate ({:?})",
+        sw.elapsed()
+    );
+    assert_eq!(metrics.shed(), 1);
+    for t in blocked {
+        t.join().unwrap();
+    }
+    assert_eq!(metrics.requests(), 4, "shed submissions are not counted as accepted");
+    // The handle still works once there is room again.
+    b.infer(&handle, &input, &mut out).unwrap();
+}
+
+/// Workers re-resolve their model from the registry once per batch, so a
+/// swapped model (the in-memory analogue of checkpoint hot-reload) serves
+/// on the very next request.
+#[test]
+fn model_swap_serves_on_next_batch() {
+    let net1 = small_net(21);
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::ZERO,
+        queue_depth: 16,
+        workers: 1,
+        infer_threads: 1,
+    };
+    let (b, _metrics, registry) = batcher_with(&net1, policy);
+    let handle = b.client();
+    let input = [0.3f32, -0.1, 0.7, 0.0, 0.2, -0.4];
+    let mut before = [0.0f32; 3];
+    b.infer(&handle, &input, &mut before).unwrap();
+
+    let net2 = small_net(22);
+    registry.insert("m", net2.clone());
+    let mut after = [0.0f32; 3];
+    b.infer(&handle, &input, &mut after).unwrap();
+    assert!(
+        vecops::max_abs_diff(&before, &after) > 1e-6,
+        "swap must change the served outputs"
+    );
+    let expect = net2.output(&input);
+    assert!(vecops::max_abs_diff(&after, &expect) < 1e-4, "must serve the new model");
+}
+
+// ---------------------------------------------------------------------
+// HTTP end-to-end
+// ---------------------------------------------------------------------
+
+/// One-shot HTTP exchange (Connection: close) against the test server.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let status: u16 = text
+        .lines()
+        .next()
+        .and_then(|l| l.split_ascii_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let payload = match text.split_once("\r\n\r\n") {
+        Some((_, b)) => b.to_string(),
+        None => String::new(),
+    };
+    (status, payload)
+}
+
+#[test]
+fn http_server_end_to_end() {
+    let net = small_net(31);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("default", net.clone());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 4,
+        max_wait_us: 500,
+        queue_depth: 64,
+        workers: 2,
+        infer_threads: 1,
+        hot_reload: false,
+        ..ServeConfig::default()
+    };
+    let mut handle = Server::start(&cfg, registry).unwrap();
+    let addr = handle.addr();
+
+    // Health.
+    let (status, body) = http(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"status\":\"ok\""), "{body}");
+    assert!(body.contains("default"), "{body}");
+
+    // Prediction: scores must match the model, argmax must match scores.
+    let input = [0.9f32, 0.1, 0.4, 0.0, 0.6, 0.2];
+    let req = format!(
+        "{{\"model\":\"default\",\"input\":[{}]}}",
+        input.map(|v| format!("{v}")).join(",")
+    );
+    let (status, body) = http(addr, "POST", "/v1/predict", Some(&req));
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    let argmax = doc.get("argmax").and_then(Json::as_usize).unwrap();
+    let scores: Vec<f32> = doc
+        .get("output")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(scores.len(), 3);
+    let expect = net.output(&input);
+    assert!(vecops::max_abs_diff(&scores, &expect) < 1e-4, "{scores:?} vs {expect:?}");
+    assert_eq!(argmax, vecops::argmax(&scores));
+    assert!(doc.get("latency_us").is_some(), "{body}");
+
+    // Error paths.
+    let (status, _) = http(addr, "POST", "/v1/predict", Some("{\"input\":[1,2]}"));
+    assert_eq!(status, 400, "wrong input size");
+    let (status, _) = http(addr, "POST", "/v1/predict", Some("not json"));
+    assert_eq!(status, 400, "malformed json");
+    let (status, _) = http(addr, "POST", "/v1/predict", Some("{\"input\":[\"x\"]}"));
+    assert_eq!(status, 400, "non-numeric input");
+    let (status, body) =
+        http(addr, "POST", "/v1/predict", Some("{\"model\":\"nope\",\"input\":[0]}"));
+    assert_eq!(status, 404, "unknown model: {body}");
+    let (status, _) = http(addr, "GET", "/nope", None);
+    assert_eq!(status, 404, "unknown endpoint");
+
+    // Metrics reflect the traffic above.
+    let (status, body) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(body.contains("neural_rs_serve_requests_total"), "{body}");
+    assert!(body.contains("neural_rs_serve_batches_total"), "{body}");
+    assert!(handle.metrics().requests() >= 1);
+
+    // Graceful shutdown via the admin endpoint; wait() must return.
+    let (status, _) = http(addr, "POST", "/admin/shutdown", None);
+    assert_eq!(status, 200);
+    handle.wait();
+    assert!(handle.is_shut_down());
+}

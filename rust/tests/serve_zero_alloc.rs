@@ -1,0 +1,147 @@
+//! The zero-allocation *serving* contract: once the micro-batcher's
+//! workers and the clients' handles are warm, steady-state inference —
+//! submit, coalesce, batched forward pass, deliver, metrics — performs
+//! **no heap allocations at all**, across every thread involved. Asserted
+//! with the same counting global allocator as `rust/tests/zero_alloc.rs`.
+//!
+//! This file deliberately contains a single `#[test]`: the counter is
+//! process-global, and a sibling test allocating concurrently would flip
+//! it spuriously.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use neural_rs::metrics::ServeMetrics;
+use neural_rs::nn::{Activation, Network};
+use neural_rs::serve::{BatchPolicy, MicroBatcher, ModelRegistry};
+use neural_rs::tensor::vecops;
+
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warmed_steady_state_serving_performs_zero_allocations() {
+    // The paper's MNIST architecture, served by 2 workers to 3 clients.
+    let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("default", net.clone());
+    let metrics = Arc::new(ServeMetrics::new());
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(300),
+        queue_depth: 64,
+        workers: 2,
+        infer_threads: 1,
+    };
+    let batcher = Arc::new(
+        MicroBatcher::start(Arc::clone(&registry), "default", policy, Arc::clone(&metrics))
+            .unwrap(),
+    );
+
+    const CLIENTS: usize = 3;
+    const WARMUP: usize = 100;
+    const MEASURED: usize = 300;
+    // Four sync points: `ready` (warmup finished everywhere), `start`
+    // (main has turned counting on while clients were parked between the
+    // two), `done` (measured loop finished), `exit` (counting is off, so
+    // teardown never races the counting window).
+    let ready = Arc::new(Barrier::new(CLIENTS + 1));
+    let start = Arc::new(Barrier::new(CLIENTS + 1));
+    let done = Arc::new(Barrier::new(CLIENTS + 1));
+    let exit = Arc::new(Barrier::new(CLIENTS + 1));
+
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let batcher = Arc::clone(&batcher);
+            let net = net.clone();
+            let (ready, start, done, exit) = (
+                Arc::clone(&ready),
+                Arc::clone(&start),
+                Arc::clone(&done),
+                Arc::clone(&exit),
+            );
+            std::thread::spawn(move || {
+                let handle = batcher.client();
+                let input: Vec<f32> =
+                    (0..784).map(|k| ((c * 784 + k) % 97) as f32 / 97.0).collect();
+                let mut out = vec![0.0f32; 10];
+                for _ in 0..WARMUP {
+                    batcher.infer(&handle, &input, &mut out).unwrap();
+                }
+                ready.wait();
+                start.wait();
+                for _ in 0..MEASURED {
+                    batcher.infer(&handle, &input, &mut out).unwrap();
+                }
+                done.wait();
+                exit.wait();
+                // Correctness spot-check: the warm path still computes
+                // the right thing for this client's sample.
+                let expect = net.output(&input);
+                assert!(
+                    vecops::max_abs_diff(&out, &expect) < 1e-4,
+                    "client {c}: warm serving path diverged"
+                );
+            })
+        })
+        .collect();
+
+    // All clients are parked between `ready` and `start` while counting
+    // turns on, and between `done` and `exit` while it turns off — the
+    // window covers exactly the measured loops.
+    ready.wait();
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    start.wait();
+    done.wait();
+    COUNTING.store(false, Ordering::SeqCst);
+    exit.wait();
+    for t in clients {
+        t.join().unwrap();
+    }
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state serving made {count} heap allocations across \
+         {CLIENTS} clients x {MEASURED} requests (want 0)"
+    );
+    assert!(
+        metrics.latency.count() >= (CLIENTS * (WARMUP + MEASURED)) as u64,
+        "every request must be measured"
+    );
+    assert_eq!(metrics.shed(), 0, "queue depth 64 must never shed this load");
+}
