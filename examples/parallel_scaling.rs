@@ -46,6 +46,7 @@ fn main() {
             opts: TrainerOptions {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
+                layers: vec![],
                 eta: 3.0,
                 batch_size: 1200,
                 epochs: 5,

@@ -36,10 +36,10 @@ fn grad_batch_seed(net: &Network<f32>, x: &Matrix<f32>, y: &Matrix<f32>) -> Grad
     a_list.push(x.clone());
     z_list.push(Matrix::zeros(0, 0));
     for n in 1..nlayers {
-        let wt = net.layers()[n - 1].w.transpose();
+        let wt = net.dense_weight(n - 1).transpose();
         let mut z = wt.naive_matmul(&a_list[n - 1]);
         for j in 0..z.cols() {
-            vecops::axpy(z.col_mut(j), 1.0, &net.layers()[n].b);
+            vecops::axpy(z.col_mut(j), 1.0, net.dense_bias(n - 1));
         }
         let a = z.map(|v| act.apply(v));
         z_list.push(z);
@@ -61,7 +61,7 @@ fn grad_batch_seed(net: &Network<f32>, x: &Matrix<f32>, y: &Matrix<f32>) -> Grad
             vecops::axpy(&mut g.db[n], 1.0, delta.col(j));
         }
         if n > 1 {
-            let mut back = net.layers()[n - 1].w.naive_matmul(&delta);
+            let mut back = net.dense_weight(n - 1).naive_matmul(&delta);
             let zp = z_list[n - 1].map(|v| act.prime(v));
             for (bv, &zv) in back.as_mut_slice().iter_mut().zip(zp.as_slice()) {
                 *bv *= zv;
@@ -77,10 +77,10 @@ fn output_batch_seed(net: &Network<f32>, x: &Matrix<f32>) -> Matrix<f32> {
     let act = net.activation();
     let mut a = x.clone();
     for n in 1..net.dims().len() {
-        let wt = net.layers()[n - 1].w.transpose();
+        let wt = net.dense_weight(n - 1).transpose();
         let mut z = wt.naive_matmul(&a);
         for j in 0..z.cols() {
-            vecops::axpy(z.col_mut(j), 1.0, &net.layers()[n].b);
+            vecops::axpy(z.col_mut(j), 1.0, net.dense_bias(n - 1));
         }
         z.map_inplace(|v| act.apply(v));
         a = z;

@@ -6,15 +6,37 @@
 //! asserts the shape.
 //!
 //! BENCH_FULL=1 runs the paper-scale corpus (50k/10k, PJRT engine).
+//! FIG3_LAYERS=dropout swaps in the layer-graph MNIST config
+//! (Dense→Dropout→Dense→Softmax with cross-entropy) so layer-graph
+//! regressions show up in the accuracy trajectory, not just unit tests.
 
 use neural_rs::collectives::ReduceAlgo;
 use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
 use neural_rs::data::load_or_synthesize;
-use neural_rs::nn::Activation;
+use neural_rs::nn::{Activation, LayerSpec};
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    let (train_n, test_n, engine) = if full && neural_rs::runtime::pjrt_available() {
+    let layered = std::env::var("FIG3_LAYERS").map(|v| v == "dropout").unwrap_or(false);
+    // The paper's all-sigmoid quadratic-cost stack, or the layer-graph
+    // variant. Cross-entropy gradients are undamped at the head, so the
+    // layered config runs a smaller eta.
+    let (layers, eta) = if layered {
+        (
+            vec![
+                LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
+                LayerSpec::Dropout { rate: 0.1 },
+                LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+                LayerSpec::Softmax,
+            ],
+            0.5,
+        )
+    } else {
+        (vec![], 3.0)
+    };
+    // The AOT artifacts encode a plain dense stack; the layered config
+    // always runs on the native engine.
+    let (train_n, test_n, engine) = if full && !layered && neural_rs::runtime::pjrt_available() {
         (50_000, 10_000, EngineKind::Pjrt)
     } else {
         if full {
@@ -24,7 +46,12 @@ fn main() {
     };
     let epochs = 30;
     let (train, test) = load_or_synthesize::<f32>("data/mnist", train_n, test_n, 42);
-    println!("# Fig 3: accuracy vs epochs ({} samples, engine {})", train.len(), engine.name());
+    println!(
+        "# Fig 3: accuracy vs epochs ({} samples, engine {}, model {})",
+        train.len(),
+        engine.name(),
+        if layered { "dense-dropout-dense-softmax" } else { "784-30-10 sigmoid" }
+    );
 
     let spec = ParallelSpec {
         images: 1,
@@ -32,7 +59,8 @@ fn main() {
         opts: TrainerOptions {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
-            eta: 3.0,
+            layers,
+            eta,
             batch_size: 1000,
             epochs,
             seed: 0,

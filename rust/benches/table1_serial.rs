@@ -38,6 +38,7 @@ fn run_child(engine: EngineKind) {
         opts: TrainerOptions {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
+            layers: vec![],
             eta: 3.0,
             batch_size: 32, // Keras' default batch size, as the paper uses
             epochs,

@@ -4,8 +4,7 @@
 use super::toml::{self, TomlError, TomlValue};
 use crate::collectives::ReduceAlgo;
 use crate::coordinator::{BatchStrategy, EngineKind, TrainerOptions};
-use crate::nn::OptimizerKind;
-use crate::nn::Activation;
+use crate::nn::{validate_specs, Activation, LayerSpec, OptimizerKind};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -80,9 +79,15 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub name: String,
-    // [network]
+    // [network] — the flat form: a homogeneous dense stack. When
+    // `layers` is non-empty (the [model] form below), `dims` holds the
+    // *derived* dense chain (`[input, units...]`) instead.
     pub dims: Vec<usize>,
     pub activation: Activation,
+    // [model] + [[model.layers]] — the layer-graph form. Each entry is
+    // one op; the old dims+activation pair is accepted and desugars to
+    // an all-dense pipeline (empty `layers` here).
+    pub layers: Vec<LayerSpec>,
     // [training]
     pub eta: f64,
     pub batch_size: usize,
@@ -117,6 +122,7 @@ impl Default for ExperimentConfig {
             name: "mnist".into(),
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
+            layers: Vec::new(),
             eta: 3.0,
             batch_size: 1000,
             epochs: 30,
@@ -265,6 +271,95 @@ impl ExperimentConfig {
             cfg.activation = Activation::parse(act)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown activation '{act}'")))?;
         }
+        // [model] + [[model.layers]]: the layer-graph form. Validated
+        // here so a bad pipeline fails at TOML-parse time with an
+        // actionable message, not as a panic deep in construction.
+        let has_layer_tables = doc.contains_key("model.layers.0");
+        if doc.contains_key("model") || has_layer_tables {
+            let input = match doc.get("model").and_then(|t| t.get("input")) {
+                Some(v) => v
+                    .as_int()
+                    .and_then(|i| usize::try_from(i).ok())
+                    .filter(|&i| i > 0)
+                    .ok_or_else(|| {
+                        ConfigError::Invalid(
+                            "[model] input must be a positive integer (the sample size, \
+                             e.g. input = 784)"
+                                .into(),
+                        )
+                    })?,
+                None => {
+                    return bad(
+                        "[model] needs 'input = N' (the sample size) before its \
+                         [[model.layers]] entries",
+                    )
+                }
+            };
+            if !has_layer_tables {
+                return bad(
+                    "[model] declares an input size but no [[model.layers]] entries; \
+                     add one [[model.layers]] table per layer",
+                );
+            }
+            let mut specs = Vec::new();
+            let mut i = 0;
+            while let Some(lt) = doc.get(&format!("model.layers.{i}")) {
+                let ty = get_str(lt, "type", "")?;
+                match ty {
+                    "dense" => {
+                        let units = get_usize(lt, "units", 0)?;
+                        let act = get_str(lt, "activation", cfg.activation.name())?;
+                        let activation = Activation::parse(act).ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "[[model.layers]] #{i}: unknown activation '{act}'"
+                            ))
+                        })?;
+                        specs.push(LayerSpec::Dense { units, activation });
+                    }
+                    "dropout" => {
+                        let rate = match lt.get("rate") {
+                            Some(v) => v.as_float().ok_or_else(|| {
+                                ConfigError::Invalid(format!(
+                                    "[[model.layers]] #{i}: dropout 'rate' must be a number"
+                                ))
+                            })?,
+                            None => {
+                                return bad(format!(
+                                    "[[model.layers]] #{i}: dropout needs 'rate = R' with \
+                                     R in [0, 1)"
+                                ))
+                            }
+                        };
+                        specs.push(LayerSpec::Dropout { rate });
+                    }
+                    "softmax" => specs.push(LayerSpec::Softmax),
+                    "" => {
+                        return bad(format!(
+                            "[[model.layers]] #{i}: missing 'type' \
+                             (dense | dropout | softmax)"
+                        ))
+                    }
+                    other => {
+                        return bad(format!(
+                            "[[model.layers]] #{i}: unknown layer type '{other}' \
+                             (expected dense | dropout | softmax)"
+                        ))
+                    }
+                }
+                i += 1;
+            }
+            let chain = validate_specs(input, &specs)
+                .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
+            cfg.dims = chain;
+            cfg.layers = specs;
+            // Keep the display/default activation in sync with the first
+            // dense layer.
+            if let Some(LayerSpec::Dense { activation, .. }) =
+                cfg.layers.iter().find(|s| matches!(s, LayerSpec::Dense { .. }))
+            {
+                cfg.activation = *activation;
+            }
+        }
         if let Some(t) = doc.get("training") {
             cfg.eta = get_f64(t, "eta", cfg.eta)?;
             cfg.batch_size = get_usize(t, "batch_size", cfg.batch_size)?;
@@ -353,6 +448,18 @@ impl ExperimentConfig {
         if self.dims.len() < 2 || self.dims.iter().any(|&d| d == 0) {
             return bad("dims needs >= 2 positive layers");
         }
+        if !self.layers.is_empty() {
+            // A CLI --dims override cannot coexist with a [model] layer
+            // pipeline: the dims are derived from the pipeline.
+            let chain = validate_specs(self.dims[0], &self.layers)
+                .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
+            if chain != self.dims {
+                return bad(
+                    "dims conflicts with the [model] layer pipeline (dims is derived \
+                     from the layers; drop --dims / [network] dims or the [model] section)",
+                );
+            }
+        }
         if self.eta <= 0.0 {
             return bad("eta must be positive");
         }
@@ -379,6 +486,7 @@ impl ExperimentConfig {
         TrainerOptions {
             dims: self.dims.clone(),
             activation: self.activation,
+            layers: self.layers.clone(),
             eta: self.eta,
             batch_size: self.batch_size,
             epochs: self.epochs,
@@ -489,6 +597,86 @@ mod tests {
             "[serve]\nhot_reload = \"yes\"\n",
         ] {
             assert!(ExperimentConfig::from_toml(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn model_layers_parse_and_derive_dims() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [model]
+            input = 784
+            [[model.layers]]
+            type = "dense"
+            units = 30
+            activation = "sigmoid"
+            [[model.layers]]
+            type = "dropout"
+            rate = 0.2
+            [[model.layers]]
+            type = "dense"
+            units = 10
+            [[model.layers]]
+            type = "softmax"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.dims, vec![784, 30, 10], "dims is the derived dense chain");
+        assert_eq!(c.layers.len(), 4);
+        assert_eq!(c.layers[1], LayerSpec::Dropout { rate: 0.2 });
+        assert_eq!(c.layers[3], LayerSpec::Softmax);
+        assert_eq!(c.activation, Activation::Sigmoid);
+        let opts = c.trainer_options();
+        assert_eq!(opts.layers, c.layers);
+        assert_eq!(opts.dims, c.dims);
+    }
+
+    #[test]
+    fn model_layers_rejected_with_actionable_messages() {
+        let cases: &[(&str, &str)] = &[
+            ("[model]\ninput = 784\n", "no [[model.layers]]"),
+            ("[[model.layers]]\ntype = \"dense\"\nunits = 4\n", "input"),
+            ("[model]\ninput = 0\n[[model.layers]]\ntype = \"dense\"\nunits = 4\n", "positive"),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"dense\"\nunits = 0\n",
+                "zero neurons",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n\
+                 [[model.layers]]\ntype = \"dropout\"\nrate = 1.0\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 2\n",
+                "outside [0, 1)",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n\
+                 [[model.layers]]\ntype = \"dropout\"\n",
+                "rate",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"dropout\"\nrate = 0.5\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "first layer",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n\
+                 [[model.layers]]\ntype = \"dropout\"\nrate = 0.5\n",
+                "last layer",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"softmax\"\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "final layer",
+            ),
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"conv2d\"\n",
+                "unknown layer type",
+            ),
+            ("[model]\ninput = 4\n[[model.layers]]\nunits = 3\n", "missing 'type'"),
+        ];
+        for (text, needle) in cases {
+            let err = ExperimentConfig::from_toml(text).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(needle), "'{msg}' should mention '{needle}' for:\n{text}");
         }
     }
 

@@ -1,8 +1,11 @@
 //! Minimal TOML-subset parser for experiment files.
 //!
-//! Supported: `[section]` tables (one level), `key = value` with string,
-//! integer, float, boolean, and homogeneous-array values, `#` comments.
-//! Enough for `configs/*.toml`; unknown syntax is a loud error.
+//! Supported: `[section]` tables (one level), `[[section]]`
+//! array-of-tables (each occurrence becomes a table named
+//! `section.<index>`, counted from 0 — how `[[model.layers]]` entries
+//! reach the config layer), `key = value` with string, integer, float,
+//! boolean, and homogeneous-array values, `#` comments. Enough for
+//! `configs/*.toml`; unknown syntax is a loud error.
 
 use std::collections::BTreeMap;
 
@@ -84,11 +87,28 @@ pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
     let mut doc: TomlDoc = BTreeMap::new();
     doc.insert(String::new(), BTreeMap::new());
     let mut section = String::new();
+    let mut array_counts: BTreeMap<String, usize> = BTreeMap::new();
 
     for (lineno, raw) in text.lines().enumerate() {
         let lineno = lineno + 1;
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[") {
+            // Array-of-tables: every [[name]] occurrence opens a fresh
+            // table stored as "name.<index>".
+            let name = match name.strip_suffix("]]") {
+                Some(n) => n.trim(),
+                None => return err(lineno, "unterminated array-of-tables header"),
+            };
+            if name.is_empty() || name.contains('[') || name.contains(']') {
+                return err(lineno, "bad array-of-tables name");
+            }
+            let idx = array_counts.entry(name.to_string()).or_insert(0);
+            section = format!("{name}.{idx}");
+            *idx += 1;
+            doc.entry(section.clone()).or_default();
             continue;
         }
         if let Some(name) = line.strip_prefix('[') {
@@ -220,6 +240,38 @@ mod tests {
             "k = 1\nk = 2\n",
             "k = what\n",
         ] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn array_of_tables_get_indexed_names() {
+        let doc = parse(
+            r#"
+            [model]
+            input = 784
+            [[model.layers]]
+            type = "dense"
+            units = 30
+            [[model.layers]]
+            type = "dropout"
+            rate = 0.2
+            [[model.layers]]
+            type = "softmax"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["model"]["input"].as_int(), Some(784));
+        assert_eq!(doc["model.layers.0"]["type"].as_str(), Some("dense"));
+        assert_eq!(doc["model.layers.0"]["units"].as_int(), Some(30));
+        assert_eq!(doc["model.layers.1"]["rate"].as_float(), Some(0.2));
+        assert_eq!(doc["model.layers.2"]["type"].as_str(), Some("softmax"));
+        assert!(!doc.contains_key("model.layers.3"));
+    }
+
+    #[test]
+    fn rejects_malformed_array_of_tables() {
+        for bad in ["[[unterminated\n", "[[x]\n", "[[ ]]\n", "[[a[b]]\n"] {
             assert!(parse(bad).is_err(), "should reject: {bad}");
         }
     }

@@ -136,6 +136,7 @@ mod tests {
             opts: TrainerOptions {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
+                layers: vec![],
                 eta: 3.0,
                 batch_size: 200,
                 epochs,

@@ -79,7 +79,26 @@ SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
   --no-hot-reload        do not watch the checkpoint file for changes
 
   Endpoints: POST /v1/predict {\"input\": [f32...], \"model\": \"default\"}
-             GET /healthz | GET /metrics | POST /admin/shutdown
+             GET /v1/models | GET /healthz | GET /metrics | POST /admin/shutdown
+
+MODEL CONFIG (TOML)
+  The flat form ([network] dims + activation) builds a homogeneous dense
+  stack. The layer-graph form declares one [[model.layers]] table per
+  layer (type = dense | dropout | softmax):
+    [model]
+    input = 784
+    [[model.layers]]
+    type = \"dense\"
+    units = 30
+    activation = \"sigmoid\"
+    [[model.layers]]
+    type = \"dropout\"
+    rate = 0.2
+    [[model.layers]]
+    type = \"dense\"
+    units = 10
+    [[model.layers]]
+    type = \"softmax\"
 ";
 
 fn main() {
@@ -199,6 +218,10 @@ fn cmd_train(args: &Args) -> Result<(), AnyError> {
 fn cmd_train_local(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
     let quiet = args.has("quiet");
     let (train, test) = load_data(cfg);
+    if !quiet && !cfg.layers.is_empty() {
+        let kinds: Vec<&str> = cfg.layers.iter().map(|s| s.kind()).collect();
+        println!("# model: input {} | layers [{}]", cfg.dims[0], kinds.join(", "));
+    }
     if !quiet {
         println!(
             "# {} | dims {:?} {} | eta {} batch {} epochs {} | {} images ({}) | engine {}",
@@ -327,7 +350,10 @@ fn cmd_serve(args: &Args) -> Result<(), AnyError> {
         cfg.serve.workers,
         if cfg.serve.hot_reload { " | hot-reload on" } else { "" },
     );
-    println!("# endpoints: POST /v1/predict | GET /healthz | GET /metrics | POST /admin/shutdown");
+    println!(
+        "# endpoints: POST /v1/predict | GET /v1/models | GET /healthz | GET /metrics \
+         | POST /admin/shutdown"
+    );
     handle.wait();
     println!("# server shut down");
     Ok(())

@@ -1,5 +1,6 @@
-//! The quadratic cost function used by the paper:
-//! C = ½ Σᵢ (aᵢ − yᵢ)², with ∂C/∂a = (a − y).
+//! Cost functions: the paper's quadratic cost
+//! C = ½ Σᵢ (aᵢ − yᵢ)² with ∂C/∂a = (a − y), plus the cross-entropy
+//! loss paired with the fused softmax output head.
 
 use crate::tensor::Scalar;
 
@@ -17,6 +18,20 @@ pub fn quadratic_cost<T: Scalar>(a: &[T], y: &[T]) -> T {
 pub fn quadratic_cost_prime<T: Scalar>(a: &[T], y: &[T]) -> Vec<T> {
     assert_eq!(a.len(), y.len(), "cost shape mismatch");
     a.iter().zip(y).map(|(&ai, &yi)| ai - yi).collect()
+}
+
+/// Cross-entropy: C(a, y) = −Σᵢ yᵢ ln(aᵢ), for `a` a probability
+/// distribution (the softmax head's output). Probabilities are floored
+/// at a tiny positive value so an exp-underflow zero cannot produce an
+/// infinite loss. Paired with softmax, ∂C/∂z = (a − y) — the fused
+/// backward the network computes directly.
+pub fn cross_entropy_cost<T: Scalar>(a: &[T], y: &[T]) -> T {
+    assert_eq!(a.len(), y.len(), "cost shape mismatch");
+    let floor = T::from_f64(1e-30);
+    a.iter().zip(y).fold(T::ZERO, |acc, (&ai, &yi)| {
+        let p = if ai > floor { ai } else { floor };
+        acc - yi * p.ln()
+    })
 }
 
 #[cfg(test)]
@@ -37,6 +52,19 @@ mod tests {
     #[test]
     fn prime_is_residual() {
         assert_eq!(quadratic_cost_prime(&[1.0, 0.0], &[0.0, 2.0]), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn cross_entropy_known_values() {
+        // One-hot y picks out -ln(a_label).
+        let a = [0.25f64, 0.5, 0.25];
+        let y = [0.0f64, 1.0, 0.0];
+        assert!((cross_entropy_cost(&a, &y) - 0.5f64.ln().abs()).abs() < 1e-12);
+        // A perfect prediction costs ~0.
+        assert!(cross_entropy_cost(&[1.0f64, 0.0], &[1.0, 0.0]) < 1e-12);
+        // A zero probability on the label is floored, not infinite.
+        let c = cross_entropy_cost(&[0.0f32, 1.0], &[1.0, 0.0]);
+        assert!(c.is_finite() && c > 10.0, "floored CE should be large but finite, got {c}");
     }
 
     #[test]

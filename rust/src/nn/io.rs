@@ -1,21 +1,31 @@
 //! Saving and loading networks to and from file (a paper §2 feature).
 //!
-//! Text format modeled on neural-fortran's `save`/`load`:
+//! Text format modeled on neural-fortran's `save`/`load`, extended with
+//! layer-type tags for the heterogeneous layer graph. Networks are
+//! written as **v2**:
 //!
 //! ```text
-//! neural-rs network v1
-//! dims 784 30 10
-//! activation sigmoid
+//! neural-rs network v2
 //! dtype f32
-//! biases <layer> <values...>        # one line per layer (skipping input)
-//! weights <layer> <rows> <cols> <column-major values...>
+//! input 784
+//! layer 0 dense 30 sigmoid
+//! layer 1 dropout 0.2 12345          # rate, mask seed
+//! layer 2 dense 10 sigmoid
+//! layer 3 softmax
+//! dense 0 biases <values...>         # one line per dense op (out-bias)
+//! dense 0 weights <rows> <cols> <column-major values...>
 //! ```
 //!
-//! Values are written with enough digits to round-trip exactly.
+//! The pre-layer-graph **v1** format (homogeneous dense stack, one
+//! global activation) is still *loaded* — a v1 checkpoint deserializes
+//! into the equivalent all-dense pipeline bit-for-bit, so retrained and
+//! archived models keep serving. Values are written with enough digits
+//! to round-trip exactly.
 
 use super::activation::Activation;
+use super::layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Softmax};
 use super::network::Network;
-use crate::tensor::Scalar;
+use crate::tensor::{Matrix, Scalar};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
@@ -54,30 +64,92 @@ fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
     Err(IoError::Parse { line, msg: msg.into() })
 }
 
-impl<T: Scalar> Network<T> {
-    /// Serialize to a writer in the text format above.
-    pub fn save_to(&self, w: &mut impl Write) -> Result<(), IoError> {
-        writeln!(w, "neural-rs network v1")?;
-        write!(w, "dims")?;
-        for d in self.dims() {
-            write!(w, " {d}")?;
+/// A parsed v2 `layer` line, pre-construction.
+#[derive(Debug, Clone)]
+enum SpecLine {
+    Dense { units: usize, activation: Activation },
+    Dropout { rate: f64, seed: u64 },
+    Softmax,
+}
+
+impl SpecLine {
+    fn as_spec(&self) -> LayerSpec {
+        match self {
+            Self::Dense { units, activation } => {
+                LayerSpec::Dense { units: *units, activation: *activation }
+            }
+            Self::Dropout { rate, .. } => LayerSpec::Dropout { rate: *rate },
+            Self::Softmax => LayerSpec::Softmax,
         }
-        writeln!(w)?;
-        writeln!(w, "activation {}", self.activation().name())?;
+    }
+}
+
+/// Build a zero-parameter network from validated v2 layer lines,
+/// preserving dropout mask seeds. Parameters are filled in afterwards
+/// from the `dense` lines.
+fn build_v2_skeleton<T: Scalar>(
+    lineno: usize,
+    input: Option<usize>,
+    lines: &[SpecLine],
+) -> Result<Network<T>, IoError> {
+    let input = match input {
+        Some(i) => i,
+        None => return perr(lineno, "an 'input' line must come before parameters"),
+    };
+    let specs: Vec<LayerSpec> = lines.iter().map(SpecLine::as_spec).collect();
+    if let Err(e) = validate_specs(input, &specs) {
+        return perr(lineno, format!("invalid layer pipeline: {e}"));
+    }
+    let mut cur = input;
+    let mut ops: Vec<Box<dyn LayerOp<T>>> = Vec::with_capacity(lines.len());
+    for line in lines {
+        match line {
+            SpecLine::Dense { units, activation } => {
+                ops.push(Box::new(Dense::from_parts(
+                    Matrix::zeros(cur, *units),
+                    vec![T::ZERO; *units],
+                    *activation,
+                )));
+                cur = *units;
+            }
+            SpecLine::Dropout { rate, seed } => {
+                ops.push(Box::new(Dropout::new(cur, *rate, *seed)));
+            }
+            SpecLine::Softmax => ops.push(Box::new(Softmax::new(cur))),
+        }
+    }
+    match Network::from_ops(ops) {
+        Ok(net) => Ok(net),
+        Err(e) => perr(lineno, e),
+    }
+}
+
+impl<T: Scalar> Network<T> {
+    /// Serialize to a writer in the v2 tagged-layer text format above.
+    pub fn save_to(&self, w: &mut impl Write) -> Result<(), IoError> {
+        writeln!(w, "neural-rs network v2")?;
         writeln!(w, "dtype {}", std::any::type_name::<T>())?;
-        for (n, layer) in self.layers().iter().enumerate().skip(1) {
-            write!(w, "biases {n}")?;
-            for &b in &layer.b {
+        writeln!(w, "input {}", self.input_size())?;
+        for (i, op) in self.ops().iter().enumerate() {
+            match op.spec() {
+                LayerSpec::Dense { units, activation } => {
+                    writeln!(w, "layer {i} dense {units} {activation}")?;
+                }
+                LayerSpec::Dropout { rate } => {
+                    writeln!(w, "layer {i} dropout {rate:?} {}", op.mask_seed())?;
+                }
+                LayerSpec::Softmax => writeln!(w, "layer {i} softmax")?,
+            }
+        }
+        for l in 0..self.dense_count() {
+            write!(w, "dense {l} biases")?;
+            for &b in self.dense_bias(l) {
                 write!(w, " {:?}", b)?;
             }
             writeln!(w)?;
-        }
-        for (n, layer) in self.layers().iter().enumerate() {
-            if layer.w.is_empty() {
-                continue;
-            }
-            write!(w, "weights {n} {} {}", layer.w.rows(), layer.w.cols())?;
-            for &v in layer.w.as_slice() {
+            let wm = self.dense_weight(l);
+            write!(w, "dense {l} weights {} {}", wm.rows(), wm.cols())?;
+            for &v in wm.as_slice() {
                 write!(w, " {:?}", v)?;
             }
             writeln!(w)?;
@@ -92,14 +164,46 @@ impl<T: Scalar> Network<T> {
         self.save_to(&mut w)
     }
 
-    /// Deserialize from a reader.
+    /// Deserialize from a reader. Accepts both the current v2 format and
+    /// legacy v1 dense checkpoints. Streaming: only the pre-header prefix
+    /// (comments/blanks) is buffered to sniff the version; parameter
+    /// lines are parsed and dropped one at a time.
     pub fn load_from(r: impl std::io::Read) -> Result<Self, IoError> {
         let reader = BufReader::new(r);
+        let mut lines = reader.lines();
+        let mut prefix: Vec<String> = Vec::new();
+        let mut v1 = false;
+        for line in lines.by_ref() {
+            let line = line?;
+            let header = {
+                let t = line.trim();
+                if !t.is_empty() && !t.starts_with('#') {
+                    v1 = t == "neural-rs network v1";
+                    true
+                } else {
+                    false
+                }
+            };
+            prefix.push(line);
+            if header {
+                break;
+            }
+        }
+        let all = prefix.into_iter().map(Ok::<_, std::io::Error>).chain(lines);
+        if v1 {
+            Self::load_v1(all)
+        } else {
+            Self::load_v2(all)
+        }
+    }
+
+    /// Legacy v1 loader: homogeneous dense stack, one global activation.
+    fn load_v1(lines: impl Iterator<Item = std::io::Result<String>>) -> Result<Self, IoError> {
         let mut dims: Option<Vec<usize>> = None;
         let mut activation = Activation::Sigmoid;
         let mut net: Option<Network<T>> = None;
 
-        for (lineno, line) in reader.lines().enumerate() {
+        for (lineno, line) in lines.enumerate() {
             let lineno = lineno + 1;
             let line = line?;
             let line = line.trim();
@@ -117,7 +221,7 @@ impl<T: Scalar> Network<T> {
                 "dims" => {
                     let d: Result<Vec<usize>, _> = toks.map(|t| t.parse()).collect();
                     match d {
-                        Ok(d) if d.len() >= 2 => dims = Some(d),
+                        Ok(d) if d.len() >= 2 && d.iter().all(|&x| x > 0) => dims = Some(d),
                         _ => return perr(lineno, "bad dims"),
                     }
                 }
@@ -126,11 +230,10 @@ impl<T: Scalar> Network<T> {
                         line: lineno,
                         msg: "missing activation name".into(),
                     })?;
-                    activation = Activation::parse(name)
-                        .ok_or_else(|| IoError::Parse {
-                            line: lineno,
-                            msg: format!("unknown activation '{name}'"),
-                        })?;
+                    activation = Activation::parse(name).ok_or_else(|| IoError::Parse {
+                        line: lineno,
+                        msg: format!("unknown activation '{name}'"),
+                    })?;
                 }
                 "dtype" => { /* informational; values parse into T regardless */ }
                 "biases" | "weights" => {
@@ -163,7 +266,14 @@ impl<T: Scalar> Network<T> {
                                 format!("expected {} biases, got {}", dims[idx], vals.len()),
                             );
                         }
-                        net.layers_mut()[idx].b = vals;
+                        if idx == 0 {
+                            // The input layer's phantom bias: kept only
+                            // for flat-layout parity.
+                            *net.input_bias_mut() = vals;
+                        } else {
+                            let (_, b) = net.dense_params_mut(idx - 1);
+                            *b = vals;
+                        }
                     } else {
                         let rows: usize = match toks.next().and_then(|t| t.parse().ok()) {
                             Some(v) => v,
@@ -185,7 +295,161 @@ impl<T: Scalar> Network<T> {
                                 format!("expected {} weights, got {}", rows * cols, vals.len()),
                             );
                         }
-                        net.layers_mut()[idx].w = crate::tensor::Matrix::from_vec(rows, cols, vals);
+                        let (w, _) = net.dense_params_mut(idx);
+                        *w = Matrix::from_vec(rows, cols, vals);
+                    }
+                }
+                other => return perr(lineno, format!("unknown key '{other}'")),
+            }
+        }
+        net.ok_or(IoError::Parse { line: 0, msg: "file contained no network".into() })
+    }
+
+    /// v2 loader: tagged layer list, per-dense parameters.
+    fn load_v2(lines: impl Iterator<Item = std::io::Result<String>>) -> Result<Self, IoError> {
+        let mut input: Option<usize> = None;
+        let mut spec_lines: Vec<SpecLine> = Vec::new();
+        let mut net: Option<Network<T>> = None;
+
+        for (lineno, line) in lines.enumerate() {
+            let lineno = lineno + 1;
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_ascii_whitespace();
+            let key = toks.next().unwrap();
+            match key {
+                "neural-rs" => {
+                    if line != "neural-rs network v2" {
+                        return perr(lineno, format!("unsupported header '{line}'"));
+                    }
+                }
+                "dtype" => { /* informational; values parse into T regardless */ }
+                "input" => match toks.next().and_then(|t| t.parse::<usize>().ok()) {
+                    Some(n) if n > 0 => input = Some(n),
+                    _ => return perr(lineno, "input must be a positive integer"),
+                },
+                "layer" => {
+                    if net.is_some() {
+                        return perr(lineno, "layer lines must precede parameters");
+                    }
+                    let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                        Some(i) => i,
+                        None => return perr(lineno, "missing layer index"),
+                    };
+                    if idx != spec_lines.len() {
+                        return perr(
+                            lineno,
+                            format!(
+                                "layer indices must be consecutive from 0; expected {}, got {idx}",
+                                spec_lines.len()
+                            ),
+                        );
+                    }
+                    let kind = toks.next().unwrap_or("");
+                    let parsed = match kind {
+                        "dense" => {
+                            let units: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(u) if u > 0 => u,
+                                _ => return perr(lineno, "dense needs a positive unit count"),
+                            };
+                            let name = toks.next().unwrap_or("");
+                            let activation = match Activation::parse(name) {
+                                Some(a) => a,
+                                None => {
+                                    return perr(lineno, format!("unknown activation '{name}'"))
+                                }
+                            };
+                            SpecLine::Dense { units, activation }
+                        }
+                        "dropout" => {
+                            let rate: f64 = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(r) => r,
+                                None => return perr(lineno, "dropout needs a rate"),
+                            };
+                            if !rate.is_finite() || !(0.0..1.0).contains(&rate) {
+                                return perr(
+                                    lineno,
+                                    format!("dropout rate {rate} is outside [0, 1)"),
+                                );
+                            }
+                            let seed: u64 =
+                                toks.next().and_then(|t| t.parse().ok()).unwrap_or(0);
+                            SpecLine::Dropout { rate, seed }
+                        }
+                        "softmax" => SpecLine::Softmax,
+                        other => {
+                            return perr(lineno, format!("unknown layer kind '{other}'"))
+                        }
+                    };
+                    spec_lines.push(parsed);
+                }
+                "dense" => {
+                    if net.is_none() {
+                        net = Some(build_v2_skeleton(lineno, input, &spec_lines)?);
+                    }
+                    let net = net.as_mut().unwrap();
+                    let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                        Some(i) => i,
+                        None => return perr(lineno, "missing dense index"),
+                    };
+                    if idx >= net.dense_count() {
+                        return perr(lineno, format!("dense index {idx} out of range"));
+                    }
+                    match toks.next() {
+                        Some("biases") => {
+                            let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                            let vals = vals
+                                .ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                            let (_, b) = net.dense_params_mut(idx);
+                            if vals.len() != b.len() {
+                                return perr(
+                                    lineno,
+                                    format!("expected {} biases, got {}", b.len(), vals.len()),
+                                );
+                            }
+                            *b = vals;
+                        }
+                        Some("weights") => {
+                            let rows: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(v) => v,
+                                None => return perr(lineno, "missing rows"),
+                            };
+                            let cols: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(v) => v,
+                                None => return perr(lineno, "missing cols"),
+                            };
+                            let (w, _) = net.dense_params_mut(idx);
+                            if rows != w.rows() || cols != w.cols() {
+                                return perr(
+                                    lineno,
+                                    format!(
+                                        "weight shape {rows}x{cols} inconsistent with layer \
+                                         ({}x{})",
+                                        w.rows(),
+                                        w.cols()
+                                    ),
+                                );
+                            }
+                            let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                            let vals = vals
+                                .ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                            if vals.len() != rows * cols {
+                                return perr(
+                                    lineno,
+                                    format!("expected {} weights, got {}", rows * cols, vals.len()),
+                                );
+                            }
+                            *w = Matrix::from_vec(rows, cols, vals);
+                        }
+                        other => {
+                            return perr(
+                                lineno,
+                                format!("expected 'biases' or 'weights', got {other:?}"),
+                            )
+                        }
                     }
                 }
                 other => return perr(lineno, format!("unknown key '{other}'")),
@@ -226,6 +490,32 @@ mod tests {
     }
 
     #[test]
+    fn layered_pipeline_round_trips_with_seeds() {
+        let specs = vec![
+            LayerSpec::Dense { units: 6, activation: Activation::Relu },
+            LayerSpec::Dropout { rate: 0.125 },
+            LayerSpec::Dense { units: 4, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        let net: Network<f32> = Network::from_specs(5, &specs, 31);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("neural-rs network v2"), "{text}");
+        assert!(text.contains("layer 1 dropout 0.125"), "{text}");
+        assert!(text.contains("layer 3 softmax"), "{text}");
+        let loaded = Network::<f32>::load_from(&buf[..]).unwrap();
+        assert_eq!(loaded.spec_list(), net.spec_list());
+        assert!(net.params_close(&loaded, 0.0));
+        assert_eq!(loaded, net, "specs + params + dropout seeds must survive");
+        // The mask seed is preserved, so the op lists match exactly.
+        assert_eq!(
+            loaded.ops().iter().map(|o| o.mask_seed()).collect::<Vec<_>>(),
+            net.ops().iter().map(|o| o.mask_seed()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     fn loaded_network_predicts_identically() {
         let net = Network::<f64>::new(&[3, 5, 2], Activation::Sigmoid, 11);
         let mut buf = Vec::new();
@@ -236,12 +526,38 @@ mod tests {
     }
 
     #[test]
+    fn v1_dense_checkpoint_still_loads() {
+        // A hand-written v1 file: 2-2 tanh with known parameters.
+        let text = "neural-rs network v1\n\
+                    dims 2 2\n\
+                    activation tanh\n\
+                    dtype f32\n\
+                    biases 1 0.25 -0.5\n\
+                    weights 0 2 2 1.0 2.0 3.0 4.0\n";
+        let net = Network::<f32>::load_from(text.as_bytes()).unwrap();
+        assert_eq!(net.dims(), &[2, 2]);
+        assert_eq!(net.activation(), Activation::Tanh);
+        assert_eq!(net.dense_bias(0), &[0.25, -0.5]);
+        assert_eq!(net.dense_weight(0).as_slice(), &[1.0, 2.0, 3.0, 4.0]);
+        // And re-saving writes v2 that loads back identically.
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let again = Network::<f32>::load_from(&buf[..]).unwrap();
+        assert!(net.params_close(&again, 0.0));
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Network::<f32>::load_from("not a network".as_bytes()).is_err());
         assert!(Network::<f32>::load_from("".as_bytes()).is_err());
         assert!(
             Network::<f32>::load_from("neural-rs network v1\nbiases 1 0.0".as_bytes()).is_err(),
             "parameters before dims must fail"
+        );
+        assert!(
+            Network::<f32>::load_from("neural-rs network v2\ndense 0 biases 0.0".as_bytes())
+                .is_err(),
+            "v2 parameters before input/layers must fail"
         );
     }
 
@@ -250,6 +566,38 @@ mod tests {
         let text = "neural-rs network v1\ndims 2 2\nweights 0 3 2 1 2 3 4 5 6\n";
         let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
         assert!(matches!(err, IoError::Parse { .. }));
+
+        let text = "neural-rs network v2\ninput 2\nlayer 0 dense 2 tanh\n\
+                    dense 0 weights 3 2 1 2 3 4 5 6\n";
+        let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
+        assert!(matches!(err, IoError::Parse { .. }));
+    }
+
+    #[test]
+    fn rejects_invalid_v2_pipelines() {
+        for (text, needle) in [
+            (
+                "neural-rs network v2\ninput 2\nlayer 0 dense 2 tanh\n\
+                 layer 1 dropout 1.5 0\nlayer 2 dense 2 tanh\ndense 0 biases 0 0\n",
+                "outside [0, 1)",
+            ),
+            (
+                "neural-rs network v2\ninput 2\nlayer 0 softmax\nlayer 1 dense 2 tanh\n\
+                 dense 0 biases 0 0\n",
+                "final layer",
+            ),
+            (
+                "neural-rs network v2\ninput 2\nlayer 0 dense 2 bogus\ndense 0 biases 0 0\n",
+                "unknown activation",
+            ),
+            (
+                "neural-rs network v2\ninput 2\nlayer 1 dense 2 tanh\ndense 0 biases 0 0\n",
+                "consecutive",
+            ),
+        ] {
+            let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
+            assert!(err.to_string().contains(needle), "'{err}' lacks '{needle}' for:\n{text}");
+        }
     }
 
     #[test]

@@ -1,0 +1,705 @@
+//! Composable layer primitives — the [`LayerOp`] trait and its initial
+//! implementations.
+//!
+//! The paper's `network_type` is a homogeneous stack of dense layers with
+//! one global activation. The reference implementation has since grown a
+//! menagerie of layer types (dense, dropout, flatten, conv, ...), and the
+//! array-language literature argues the same decomposition: express each
+//! layer as a self-contained forward/backward primitive over whole-batch
+//! arrays, so a new architecture is *composition*, not surgery on a
+//! monolith. [`LayerOp`] is that primitive:
+//!
+//! - **shape negotiation** — [`LayerOp::in_size`] / [`LayerOp::out_size`]
+//!   chain ops into a pipeline; [`LayerOp::cache_rows`] tells the
+//!   [`crate::nn::Workspace`] how much per-op scratch to pre-allocate
+//!   (pre-activations for dense, the mask for dropout, nothing for
+//!   softmax), so the zero-allocation training contract survives
+//!   heterogeneity;
+//! - **parameter views** — [`LayerOp::params`] / [`LayerOp::params_mut`]
+//!   expose the trainable state (dense only), which keeps the flat
+//!   parameter/gradient layout the collectives reduce identical to the
+//!   dense-only engine's;
+//! - **whole-batch math** — [`LayerOp::forward_batch_into`] and
+//!   [`LayerOp::backward_batch_into`] run on `[rows, batch]` column-major
+//!   matrices through the blocked GEMM, never allocating once the
+//!   workspace is warm.
+//!
+//! Three ops ship today: [`Dense`] (the paper's layer, now with a
+//! *per-layer* activation), [`Dropout`] (seeded inverted dropout with a
+//! train/eval mode flag), and [`Softmax`] (an output head fused with the
+//! cross-entropy loss in the backward pass).
+
+use super::activation::Activation;
+use crate::tensor::gemm::{self, GemmScratch, Op};
+use crate::tensor::{vecops, Matrix, Rng, Scalar};
+
+/// Forward-pass mode: [`Mode::Train`] applies stochastic layers
+/// (dropout); [`Mode::Eval`] runs them as the identity. Purely-functional
+/// ops (dense, softmax) behave identically in both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Train,
+    Eval,
+}
+
+/// Config-level description of one layer — what a `[[model.layers]]`
+/// entry in the experiment TOML desugars to, and what
+/// [`crate::nn::Network::from_specs`] instantiates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerSpec {
+    /// Fully-connected layer of `units` neurons with its own activation.
+    Dense { units: usize, activation: Activation },
+    /// Inverted dropout: each input is zeroed with probability `rate`
+    /// during training and the survivors are scaled by `1/(1-rate)`, so
+    /// eval-mode forward needs no rescaling.
+    Dropout { rate: f64 },
+    /// Softmax output head, fused with the cross-entropy loss.
+    Softmax,
+}
+
+impl LayerSpec {
+    /// Canonical kind tag ("dense" | "dropout" | "softmax").
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Dense { .. } => "dense",
+            Self::Dropout { .. } => "dropout",
+            Self::Softmax => "softmax",
+        }
+    }
+}
+
+/// Validate a layer-spec pipeline and return its dense chain — the input
+/// size followed by every dense layer's output size (the `dims` the
+/// gradient/collective layout is keyed by).
+///
+/// Rejected at this level (so bad configs fail at parse time with an
+/// actionable message instead of panicking deep in construction):
+/// zero-neuron dense layers, dropout rates outside `[0, 1)`, dropout as
+/// the first or last layer, softmax anywhere but last, and pipelines with
+/// no trainable layer at all.
+pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, String> {
+    if input == 0 {
+        return Err("model input size must be positive".into());
+    }
+    if specs.is_empty() {
+        return Err("model needs at least one layer".into());
+    }
+    let last = specs.len() - 1;
+    let mut chain = vec![input];
+    for (i, spec) in specs.iter().enumerate() {
+        match spec {
+            LayerSpec::Dense { units, .. } => {
+                if *units == 0 {
+                    return Err(format!(
+                        "layer {i} (dense) has zero neurons; every layer needs at least one"
+                    ));
+                }
+                chain.push(*units);
+            }
+            LayerSpec::Dropout { rate } => {
+                if !rate.is_finite() || !(0.0..1.0).contains(rate) {
+                    return Err(format!(
+                        "layer {i} (dropout) has rate {rate}, which is outside [0, 1); \
+                         1.0 would drop everything and negative rates are meaningless"
+                    ));
+                }
+                if i == 0 {
+                    return Err(
+                        "dropout cannot be the first layer: it would zero raw inputs \
+                         before any computation"
+                            .into(),
+                    );
+                }
+                if i == last {
+                    return Err(
+                        "dropout cannot be the last layer: it would randomly zero the \
+                         model's outputs"
+                            .into(),
+                    );
+                }
+            }
+            LayerSpec::Softmax => {
+                if i != last {
+                    return Err(format!(
+                        "layer {i} (softmax) must be the final layer: its backward pass \
+                         is fused with the cross-entropy loss"
+                    ));
+                }
+            }
+        }
+    }
+    if chain.len() < 2 {
+        return Err("model has no dense layer, so it has no trainable parameters".into());
+    }
+    Ok(chain)
+}
+
+/// One layer of the network pipeline: a self-contained forward/backward
+/// primitive over whole-batch column-major matrices. See the module doc
+/// for the contract; [`crate::nn::Network`] owns an ordered `Vec` of
+/// boxed `LayerOp`s and [`crate::nn::Workspace`] holds their negotiated
+/// scratch.
+pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
+    /// Kind tag ("dense" | "dropout" | "softmax") — used by checkpoint v2
+    /// and the serving `/v1/models` endpoint.
+    fn kind(&self) -> &'static str;
+
+    /// Rows this op consumes.
+    fn in_size(&self) -> usize;
+
+    /// Rows this op produces.
+    fn out_size(&self) -> usize;
+
+    /// Rows of per-batch-column cache this op needs the workspace to
+    /// carry from forward to backward (0 = stateless).
+    fn cache_rows(&self) -> usize {
+        0
+    }
+
+    /// Trainable scalars owned by this op.
+    fn param_count(&self) -> usize {
+        0
+    }
+
+    /// Views of the trainable parameters `(weights, biases)`, if any.
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        None
+    }
+
+    /// Mutable views of the trainable parameters, if any.
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        None
+    }
+
+    /// Seed for this op's stochastic state (dropout masks); 0 for
+    /// deterministic ops. The workspace seeds one mask RNG per op from it.
+    fn mask_seed(&self) -> u64 {
+        0
+    }
+
+    /// The config-level spec this op instantiates.
+    fn spec(&self) -> LayerSpec;
+
+    /// One-line human summary, e.g. `dense(784->30, sigmoid)` — used by
+    /// `/v1/models` and the README layer table.
+    fn summary(&self) -> String;
+
+    /// Whole-batch forward pass: read `x` (`[in, B]`), write `out`
+    /// (`[out, B]`) and `cache` (`[cache_rows, B]`). Allocation-free.
+    /// `mask_rng` is this op's private mask stream (dropout only).
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+        mode: Mode,
+        mask_rng: &mut Rng,
+    );
+
+    /// Whole-batch backward pass. `x` is the op's forward input, `d_out`
+    /// holds `dC/d(out)` on entry and may be consumed in place, `cache`
+    /// is what forward stored. Writes `dC/d(x)` into `d_in` (skipped for
+    /// the first op, which has nothing below it) and *accumulates*
+    /// parameter tendencies into the `grads` views when the op owns
+    /// parameters. Allocation-free.
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        scratch: &mut GemmScratch<T>,
+    );
+
+    /// Clone into a box (object-safe `Clone`).
+    fn clone_box(&self) -> Box<dyn LayerOp<T>>;
+}
+
+impl<T: Scalar> Clone for Box<dyn LayerOp<T>> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------
+
+/// Fully-connected layer with a per-layer activation: the paper's
+/// `layer_type`, generalized. Forward `A = σ(Wᵀ·X + b)`; backward
+/// `δ = dC/dA ⊙ σ'(Z)`, `dW += X·δᵀ`, `db += Σ_cols δ`, `dC/dX = W·δ`.
+/// All products run through the blocked/packed GEMM of
+/// [`crate::tensor::gemm`], so no transposed copies are ever
+/// materialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense<T = f32> {
+    /// Weights: `w[(i, j)]` connects input `i` to output `j`
+    /// (`[in, out]`, column-major).
+    pub w: Matrix<T>,
+    /// Output biases, length `out`.
+    pub b: Vec<T>,
+    /// This layer's activation.
+    pub activation: Activation,
+}
+
+impl<T: Scalar> Dense<T> {
+    /// A dense op from explicit parts (checkpoint loading, tests).
+    pub fn from_parts(w: Matrix<T>, b: Vec<T>, activation: Activation) -> Self {
+        assert_eq!(w.cols(), b.len(), "dense bias length must match weight columns");
+        Self { w, b, activation }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Dense<T> {
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+
+    fn in_size(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn out_size(&self) -> usize {
+        self.w.cols()
+    }
+
+    fn cache_rows(&self) -> usize {
+        // Pre-activations Z, needed by the backward σ' factor.
+        self.w.cols()
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.w, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.w, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Dense { units: self.w.cols(), activation: self.activation }
+    }
+
+    fn summary(&self) -> String {
+        format!("dense({}->{}, {})", self.w.rows(), self.w.cols(), self.activation)
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        // Z = Wᵀ·X + b (packing absorbs the transposition), A = σ(Z).
+        gemm::gemm_into(Op::T, &self.w, Op::N, x, cache, false, scratch);
+        for j in 0..x.cols() {
+            vecops::axpy(cache.col_mut(j), T::ONE, &self.b);
+        }
+        for (av, &zv) in out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
+            *av = self.activation.apply(zv);
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        scratch: &mut GemmScratch<T>,
+    ) {
+        // δ = dC/dA ⊙ σ'(Z), in place on the incoming delta.
+        for (dv, &zv) in d_out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
+            *dv = *dv * self.activation.prime(zv);
+        }
+        if let Some((dw, db)) = grads {
+            // dW += X·δᵀ ; db += row-sums of δ.
+            gemm::gemm_into(Op::N, x, Op::T, d_out, dw, true, scratch);
+            for j in 0..d_out.cols() {
+                vecops::axpy(db, T::ONE, d_out.col(j));
+            }
+        }
+        if let Some(d_in) = d_in {
+            // dC/dX = W·δ.
+            gemm::gemm_into(Op::N, &self.w, Op::N, d_out, d_in, false, scratch);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dropout
+// ---------------------------------------------------------------------
+
+/// Seeded inverted dropout. In [`Mode::Train`] each element is zeroed
+/// with probability `rate` and the survivors are scaled by
+/// `1/(1 - rate)`; the applied mask is stored in the workspace cache so
+/// backward replays it exactly. In [`Mode::Eval`] the op is the
+/// identity — no rescaling needed, which is what keeps the serving
+/// forward path allocation-free and branch-trivial.
+///
+/// The mask stream is owned by the *workspace* (one RNG seeded from
+/// [`Dropout::seed`] per op), not the op itself: ops stay `&self` on the
+/// hot path, and two replicas with identical workspaces draw identical
+/// masks — the determinism the tests assert.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dropout {
+    /// Rows passed through (in == out).
+    pub size: usize,
+    /// Drop probability in `[0, 1)`.
+    pub rate: f64,
+    /// Mask-stream seed.
+    pub seed: u64,
+}
+
+impl Dropout {
+    pub fn new(size: usize, rate: f64, seed: u64) -> Self {
+        assert!(rate.is_finite() && (0.0..1.0).contains(&rate), "dropout rate must be in [0,1)");
+        assert!(size > 0, "dropout needs at least one input");
+        Self { size, rate, seed }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Dropout {
+    fn kind(&self) -> &'static str {
+        "dropout"
+    }
+
+    fn in_size(&self) -> usize {
+        self.size
+    }
+
+    fn out_size(&self) -> usize {
+        self.size
+    }
+
+    fn cache_rows(&self) -> usize {
+        // The applied mask (0 or 1/(1-rate) per element).
+        self.size
+    }
+
+    fn mask_seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Dropout { rate: self.rate }
+    }
+
+    fn summary(&self) -> String {
+        format!("dropout(p={})", self.rate)
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        mode: Mode,
+        mask_rng: &mut Rng,
+    ) {
+        match mode {
+            Mode::Eval => {
+                out.as_mut_slice().copy_from_slice(x.as_slice());
+            }
+            Mode::Train => {
+                let scale = T::from_f64(1.0 / (1.0 - self.rate));
+                for ((ov, &xv), mv) in out
+                    .as_mut_slice()
+                    .iter_mut()
+                    .zip(x.as_slice())
+                    .zip(cache.as_mut_slice().iter_mut())
+                {
+                    let m = if mask_rng.uniform() < self.rate { T::ZERO } else { scale };
+                    *mv = m;
+                    *ov = xv * m;
+                }
+            }
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        _x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        if let Some(d_in) = d_in {
+            // Replay the stored mask: dC/dX = dC/dA ⊙ mask.
+            for ((iv, &ov), &mv) in d_in
+                .as_mut_slice()
+                .iter_mut()
+                .zip(d_out.as_slice())
+                .zip(cache.as_slice())
+            {
+                *iv = ov * mv;
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Softmax (fused with cross-entropy)
+// ---------------------------------------------------------------------
+
+/// Softmax output head, numerically stabilized (max-shifted) per column.
+///
+/// Its backward pass is *fused with the cross-entropy loss*:
+/// `dC/dZ = softmax(Z) − Y`, which [`crate::nn::Network::grad_batch_into`]
+/// computes directly at the top of backpropagation and injects *below*
+/// this op. The op therefore never runs a standalone backward — a softmax
+/// anywhere but the output position is rejected at spec validation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Softmax {
+    /// Rows passed through (in == out).
+    pub size: usize,
+}
+
+impl Softmax {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "softmax needs at least one input");
+        Self { size }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Softmax {
+    fn kind(&self) -> &'static str {
+        "softmax"
+    }
+
+    fn in_size(&self) -> usize {
+        self.size
+    }
+
+    fn out_size(&self) -> usize {
+        self.size
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Softmax
+    }
+
+    fn summary(&self) -> String {
+        "softmax".into()
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        _cache: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        for j in 0..x.cols() {
+            let col = x.col(j);
+            let ocol = out.col_mut(j);
+            let mut mx = col[0];
+            for &v in col {
+                if v > mx {
+                    mx = v;
+                }
+            }
+            let mut sum = T::ZERO;
+            for (ov, &v) in ocol.iter_mut().zip(col) {
+                let e = (v - mx).exp();
+                *ov = e;
+                sum = sum + e;
+            }
+            for ov in ocol.iter_mut() {
+                *ov = *ov / sum;
+            }
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        _x: &Matrix<T>,
+        _d_out: &mut Matrix<T>,
+        _d_in: Option<&mut Matrix<T>>,
+        _cache: &Matrix<T>,
+        _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        unreachable!(
+            "softmax backward is fused with the cross-entropy loss; the network \
+             injects (A - Y) below the head instead of calling this"
+        );
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_2x3() -> Dense<f64> {
+        let w = Matrix::from_fn(2, 3, |i, j| (i as f64 + 1.0) * 0.1 + j as f64 * 0.01);
+        Dense::from_parts(w, vec![0.5, -0.5, 0.0], Activation::Tanh)
+    }
+
+    #[test]
+    fn dense_shapes_and_views() {
+        let d = dense_2x3();
+        assert_eq!(LayerOp::<f64>::kind(&d), "dense");
+        assert_eq!(LayerOp::<f64>::in_size(&d), 2);
+        assert_eq!(LayerOp::<f64>::out_size(&d), 3);
+        assert_eq!(LayerOp::<f64>::cache_rows(&d), 3);
+        assert_eq!(LayerOp::<f64>::param_count(&d), 6 + 3);
+        let (w, b) = LayerOp::<f64>::params(&d).unwrap();
+        assert_eq!(w.rows(), 2);
+        assert_eq!(b.len(), 3);
+        assert_eq!(
+            LayerOp::<f64>::spec(&d),
+            LayerSpec::Dense { units: 3, activation: Activation::Tanh }
+        );
+        assert_eq!(LayerOp::<f64>::summary(&d), "dense(2->3, tanh)");
+    }
+
+    #[test]
+    fn dense_forward_matches_hand_math() {
+        let d = dense_2x3();
+        let x = Matrix::from_fn(2, 1, |i, _| (i as f64 + 1.0) * 2.0); // [2, 4]
+        let mut out = Matrix::zeros(3, 1);
+        let mut cache = Matrix::zeros(3, 1);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        d.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        for k in 0..3 {
+            let z = d.w.get(0, k) * 2.0 + d.w.get(1, k) * 4.0 + d.b[k];
+            assert!((cache.get(k, 0) - z).abs() < 1e-12, "z[{k}]");
+            assert!((out.get(k, 0) - z.tanh()).abs() < 1e-12, "a[{k}]");
+        }
+    }
+
+    #[test]
+    fn dropout_eval_is_identity_and_train_masks() {
+        let dr = Dropout::new(4, 0.5, 9);
+        let x = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64 + 1.0);
+        let mut out = Matrix::zeros(4, 3);
+        let mut cache = Matrix::zeros(4, 3);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(9);
+        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        assert_eq!(out, x, "eval mode must be the identity");
+
+        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Train, &mut rng);
+        let mut zeros = 0;
+        for (o, x) in out.as_slice().iter().zip(x.as_slice()) {
+            if *o == 0.0 {
+                zeros += 1;
+            } else {
+                assert!((o / x - 2.0).abs() < 1e-12, "survivors scale by 1/(1-p)");
+            }
+        }
+        assert!(zeros > 0 && zeros < 12, "p=0.5 on 12 values should drop some, not all");
+
+        // Same seed, same masks.
+        let mut out2 = Matrix::zeros(4, 3);
+        let mut cache2 = Matrix::zeros(4, 3);
+        let mut rng2 = Rng::new(9);
+        dr.forward_batch_into(&x, &mut out2, &mut cache2, &mut scratch, Mode::Eval, &mut rng2);
+        dr.forward_batch_into(&x, &mut out2, &mut cache2, &mut scratch, Mode::Train, &mut rng2);
+        assert_eq!(out, out2, "identical mask streams must give identical outputs");
+    }
+
+    #[test]
+    fn dropout_backward_replays_mask() {
+        let dr = Dropout::new(3, 0.4, 4);
+        let x = Matrix::full(3, 2, 1.0f64);
+        let mut out = Matrix::zeros(3, 2);
+        let mut cache = Matrix::zeros(3, 2);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(4);
+        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Train, &mut rng);
+        let mut d_out = Matrix::full(3, 2, 1.0f64);
+        let mut d_in = Matrix::zeros(3, 2);
+        LayerOp::<f64>::backward_batch_into(
+            &dr,
+            &x,
+            &mut d_out,
+            Some(&mut d_in),
+            &cache,
+            None,
+            &mut scratch,
+        );
+        assert_eq!(d_in.as_slice(), cache.as_slice(), "unit upstream grad passes the mask");
+    }
+
+    #[test]
+    fn softmax_columns_are_distributions() {
+        let sm = Softmax::new(4);
+        let x =
+            Matrix::from_fn(4, 3, |i, j| (i as f64) * 0.7 - (j as f64) * 0.3 + 100.0 * j as f64);
+        let mut out = Matrix::zeros(4, 3);
+        let mut cache = Matrix::zeros(0, 3);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        sm.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        for j in 0..3 {
+            let col = out.col(j);
+            let sum: f64 = col.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "column {j} sums to {sum}");
+            assert!(col.iter().all(|&p| p > 0.0 && p < 1.0));
+            // Monotone with the logits: argmax preserved.
+            assert_eq!(vecops::argmax(col), vecops::argmax(x.col(j)));
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_pipelines() {
+        let dense = |u| LayerSpec::Dense { units: u, activation: Activation::Sigmoid };
+        // Good pipeline: chain is the dense dims.
+        let chain = validate_specs(
+            784,
+            &[dense(30), LayerSpec::Dropout { rate: 0.2 }, dense(10), LayerSpec::Softmax],
+        )
+        .unwrap();
+        assert_eq!(chain, vec![784, 30, 10]);
+
+        for (input, specs, needle) in [
+            (0, vec![dense(3)], "input size"),
+            (4, vec![], "at least one layer"),
+            (4, vec![dense(0)], "zero neurons"),
+            (4, vec![dense(3), LayerSpec::Dropout { rate: 1.0 }, dense(2)], "outside [0, 1)"),
+            (4, vec![dense(3), LayerSpec::Dropout { rate: -0.1 }, dense(2)], "outside [0, 1)"),
+            (
+                4,
+                vec![dense(3), LayerSpec::Dropout { rate: f64::NAN }, dense(2)],
+                "outside [0, 1)",
+            ),
+            (4, vec![LayerSpec::Dropout { rate: 0.5 }, dense(3)], "first layer"),
+            (4, vec![dense(3), LayerSpec::Dropout { rate: 0.5 }], "last layer"),
+            (4, vec![LayerSpec::Softmax, dense(3)], "final layer"),
+            (4, vec![LayerSpec::Softmax], "no dense layer"),
+        ] {
+            let err = validate_specs(input, &specs).unwrap_err();
+            assert!(err.contains(needle), "specs {specs:?}: error '{err}' lacks '{needle}'");
+        }
+    }
+}

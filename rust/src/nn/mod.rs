@@ -1,9 +1,12 @@
 //! Native neural-network engine — "neural-fortran in Rust".
 //!
-//! A complete, dependency-free implementation of the paper's network:
-//! arbitrary-depth dense networks, five activation functions, quadratic
-//! cost, SGD with batch-summed tendencies, Xavier-style init, and text
-//! save/load. It plays two roles in this repo:
+//! A complete, dependency-free implementation of the paper's network,
+//! generalized from the paper's homogeneous dense stack into a pipeline
+//! of composable [`LayerOp`]s: dense layers with per-layer activations,
+//! seeded dropout, a fused softmax+cross-entropy head, quadratic and
+//! cross-entropy costs, SGD with batch-summed tendencies, Xavier-style
+//! init, and tagged text save/load (v2, with v1 dense checkpoints still
+//! loadable). It plays two roles in this repo:
 //!
 //! 1. the *comparator framework* for the Table 1 serial benchmark (the
 //!    role Keras + TensorFlow plays in the paper), and
@@ -13,15 +16,15 @@ mod activation;
 mod cost;
 mod grads;
 mod io;
-mod optimizer;
-mod layer;
+mod layers;
 mod network;
+mod optimizer;
 mod workspace;
 
 pub use activation::Activation;
-pub use optimizer::{Optimizer, OptimizerKind};
-pub use cost::{quadratic_cost, quadratic_cost_prime};
+pub use cost::{cross_entropy_cost, quadratic_cost, quadratic_cost_prime};
 pub use grads::Gradients;
-pub use layer::Layer;
+pub use layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Mode, Softmax};
 pub use network::Network;
+pub use optimizer::{Optimizer, OptimizerKind};
 pub use workspace::Workspace;

@@ -1,44 +1,93 @@
-//! The network class (paper §3.1–3.4): construction, forward propagation,
-//! backpropagation, SGD update, and the generic train entry points.
+//! The network class (paper §3.1–3.4), generalized from the paper's
+//! homogeneous dense stack into an ordered pipeline of boxed
+//! [`LayerOp`]s: construction, forward propagation, backpropagation, SGD
+//! update, and the generic train entry points.
+//!
+//! Two invariants keep the heterogeneous graph compatible with everything
+//! the dense-only engine built:
+//!
+//! 1. **The dense chain is still `dims`.** Only [`Dense`] ops own
+//!    parameters, and their shapes form the chain
+//!    `dims[l] × dims[l+1]` — so [`Gradients`], the collective
+//!    flat-buffer layout, the optimizer velocity state, and v1
+//!    checkpoints are all unchanged. Dropout and softmax are
+//!    size-preserving and parameter-free.
+//! 2. **Bit-identical dense math.** For a plain dense stack the forward/
+//!    backward pipeline performs the exact float operations (and RNG
+//!    draws at construction) of the pre-layer-graph engine, so seeded
+//!    runs and the Figure 3 accuracy trajectory reproduce exactly.
 
 use super::activation::Activation;
-use super::cost::{quadratic_cost, quadratic_cost_prime};
+use super::cost::{cross_entropy_cost, quadratic_cost};
 use super::grads::Gradients;
-use super::layer::Layer;
+use super::layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Mode, Softmax};
 use super::workspace::Workspace;
-use crate::tensor::gemm::{self, Op};
-use crate::tensor::{vecops, Matrix, Rng, Scalar};
+use crate::tensor::{gemm, vecops, Matrix, Rng, Scalar};
 
-/// A feed-forward neural network of arbitrary structure — `network_type`
-/// from the paper. Generic over the float kind (the paper's compile-time
-/// `rk`): `Network<f32>` or `Network<f64>`.
-#[derive(Debug, Clone, PartialEq)]
+/// A feed-forward neural network — the paper's `network_type`, now an
+/// ordered pipeline of composable layer ops. Generic over the float kind
+/// (the paper's compile-time `rk`): `Network<f32>` or `Network<f64>`.
+#[derive(Debug)]
 pub struct Network<T = f32> {
-    layers: Vec<Layer<T>>,
+    /// The pipeline, in forward order.
+    ops: Vec<Box<dyn LayerOp<T>>>,
+    /// Dense-chain sizes: the input size followed by every dense op's
+    /// output size. This is the paper's `dims` and the key for the
+    /// [`Gradients`]/collectives layout.
     dims: Vec<usize>,
-    activation: Activation,
+    /// Boundary sizes per op: `sizes[0]` = input, `sizes[i]` = output of
+    /// op `i-1`.
+    sizes: Vec<usize>,
+    /// Negotiated cache rows per boundary (0 for stateless ops).
+    cache_rows: Vec<usize>,
+    /// Op index of each dense op, in order.
+    dense_ops: Vec<usize>,
+    /// For op `i`: its dense index, if it is a dense op.
+    dense_of_op: Vec<Option<usize>>,
+    /// True when the last op is a fused softmax+cross-entropy head.
+    softmax_head: bool,
+    /// The input layer's phantom bias (always zero) — kept so the flat
+    /// parameter layout stays identical to the paper's per-layer scheme
+    /// (and to v1 checkpoints / the collective broadcast buffers).
+    input_bias: Vec<T>,
+}
+
+impl<T: Scalar> Clone for Network<T> {
+    fn clone(&self) -> Self {
+        Self {
+            ops: self.ops.clone(),
+            dims: self.dims.clone(),
+            sizes: self.sizes.clone(),
+            cache_rows: self.cache_rows.clone(),
+            dense_ops: self.dense_ops.clone(),
+            dense_of_op: self.dense_of_op.clone(),
+            softmax_head: self.softmax_head,
+            input_bias: self.input_bias.clone(),
+        }
+    }
+}
+
+impl<T: Scalar> PartialEq for Network<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.dims == other.dims
+            && self.spec_list() == other.spec_list()
+            && self.params_to_flat() == other.params_to_flat()
+    }
 }
 
 impl<T: Scalar> Network<T> {
-    /// Construct a network with the given layer sizes and activation,
-    /// mirroring `net_constructor` (Listing 2) minus the collective sync,
-    /// which lives in [`crate::coordinator::Trainer`] (it owns the
-    /// communicator). The paper defaults the activation to sigmoid; so do
-    /// we via [`Network::with_dims`].
+    /// Construct a plain dense network with the given layer sizes and one
+    /// shared activation, mirroring `net_constructor` (Listing 2) minus
+    /// the collective sync, which lives in [`crate::coordinator::Trainer`]
+    /// (it owns the communicator). The paper defaults the activation to
+    /// sigmoid; so do we via [`Network::with_dims`]. Same-seeded networks
+    /// are bit-identical to the pre-layer-graph engine's.
     pub fn new(dims: &[usize], activation: Activation, seed: u64) -> Self {
         assert!(dims.len() >= 2, "network needs at least input and output layers");
         assert!(dims.iter().all(|&d| d > 0), "every layer needs at least one neuron");
-        let mut rng = Rng::new(seed);
-        let mut layers = Vec::with_capacity(dims.len());
-        for l in 0..dims.len() {
-            let next = if l + 1 < dims.len() { dims[l + 1] } else { 0 };
-            layers.push(Layer::new(dims[l], next, &mut rng));
-        }
-        // The input layer has no bias in the math (fwdprop copies x into
-        // a_1 directly); keep it zero so parameter serialization, replica
-        // sync, and save/load agree on a canonical representation.
-        layers[0].b.fill(T::ZERO);
-        Self { layers, dims: dims.to_vec(), activation }
+        let specs: Vec<LayerSpec> =
+            dims[1..].iter().map(|&units| LayerSpec::Dense { units, activation }).collect();
+        Self::from_specs(dims[0], &specs, seed)
     }
 
     /// Paper default: sigmoid activation (Listing 2's `else` branch).
@@ -46,103 +95,276 @@ impl<T: Scalar> Network<T> {
         Self::new(dims, Activation::Sigmoid, seed)
     }
 
+    /// Construct a heterogeneous pipeline from layer specs (what a
+    /// `[[model.layers]]` config desugars to). Panics on an invalid
+    /// pipeline — validate with [`validate_specs`] first for a
+    /// recoverable error.
+    ///
+    /// Weight initialization reproduces the paper's draw order exactly:
+    /// walking the dense chain, each node draws its biases then its
+    /// outgoing weights (scaled normals, 1/fan-in), so a
+    /// dense→dropout→dense pipeline starts from the *same* dense
+    /// parameters as the equivalent dense-only stack — dropout and
+    /// softmax consume no randomness at construction.
+    pub fn from_specs(input: usize, specs: &[LayerSpec], seed: u64) -> Self {
+        let chain = match validate_specs(input, specs) {
+            Ok(c) => c,
+            Err(e) => panic!("invalid layer specs: {e}"),
+        };
+        let mut rng = Rng::new(seed);
+        // The seed engine's exact draw sequence: for every chain node,
+        // biases (discarded for the input node) then outgoing weights.
+        let mut biases: Vec<Vec<T>> = Vec::with_capacity(chain.len());
+        let mut weights: Vec<Matrix<T>> = Vec::with_capacity(chain.len() - 1);
+        for l in 0..chain.len() {
+            let scale = 1.0 / chain[l] as f64;
+            biases.push((0..chain[l]).map(|_| T::from_f64(rng.normal() * scale)).collect());
+            if l + 1 < chain.len() {
+                weights.push(Matrix::randn_scaled(chain[l], chain[l + 1], scale, &mut rng));
+            }
+        }
+        let mut weights = weights.into_iter();
+        let mut biases = biases.into_iter().skip(1);
+
+        let mut ops: Vec<Box<dyn LayerOp<T>>> = Vec::with_capacity(specs.len());
+        let mut cur = input;
+        for (i, spec) in specs.iter().enumerate() {
+            match spec {
+                LayerSpec::Dense { units, activation } => {
+                    let w = weights.next().expect("dense chain/spec mismatch");
+                    let b = biases.next().expect("dense chain/spec mismatch");
+                    ops.push(Box::new(Dense::from_parts(w, b, *activation)));
+                    cur = *units;
+                }
+                LayerSpec::Dropout { rate } => {
+                    // Per-op mask seed, derived deterministically from the
+                    // construction seed and the op position.
+                    let mask_seed = seed ^ 0xD80B_0000_0000_0000 ^ (i as u64);
+                    ops.push(Box::new(Dropout::new(cur, *rate, mask_seed)));
+                }
+                LayerSpec::Softmax => ops.push(Box::new(Softmax::new(cur))),
+            }
+        }
+        Self::from_ops(ops).expect("validated specs must assemble")
+    }
+
+    /// Assemble a network from ready-made ops (checkpoint loading). Fails
+    /// on shape-chain mismatches or parameter-free pipelines.
+    pub(crate) fn from_ops(ops: Vec<Box<dyn LayerOp<T>>>) -> Result<Self, String> {
+        if ops.is_empty() {
+            return Err("network needs at least one layer op".into());
+        }
+        let mut sizes = vec![ops[0].in_size()];
+        let mut cache_rows = vec![0usize];
+        let mut dims = vec![ops[0].in_size()];
+        let mut dense_ops = Vec::new();
+        let mut dense_of_op = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            let cur = *sizes.last().unwrap();
+            if op.in_size() != cur {
+                return Err(format!(
+                    "layer {i} ({}) expects {} inputs but the previous layer produces {cur}",
+                    op.kind(),
+                    op.in_size()
+                ));
+            }
+            sizes.push(op.out_size());
+            cache_rows.push(op.cache_rows());
+            if op.params().is_some() {
+                dense_of_op.push(Some(dense_ops.len()));
+                dense_ops.push(i);
+                dims.push(op.out_size());
+            } else {
+                dense_of_op.push(None);
+            }
+        }
+        if dense_ops.is_empty() {
+            return Err("network has no trainable dense layer".into());
+        }
+        let softmax_head = ops.last().unwrap().kind() == "softmax";
+        let input_bias = vec![T::ZERO; dims[0]];
+        Ok(Self { ops, dims, sizes, cache_rows, dense_ops, dense_of_op, softmax_head, input_bias })
+    }
+
+    /// Dense-chain sizes (the paper's `dims`): input size plus every
+    /// dense op's output size. Keys the gradient/collective layout.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
 
+    /// Per-op boundary sizes: `[input, out_0, out_1, ...]`.
+    pub fn boundary_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Per-op negotiated cache heights (see [`LayerOp::cache_rows`]).
+    pub fn cache_rows(&self) -> &[usize] {
+        &self.cache_rows
+    }
+
+    /// The op pipeline, in forward order.
+    pub fn ops(&self) -> &[Box<dyn LayerOp<T>>] {
+        &self.ops
+    }
+
+    /// Config-level description of the pipeline.
+    pub fn spec_list(&self) -> Vec<LayerSpec> {
+        self.ops.iter().map(|op| op.spec()).collect()
+    }
+
+    /// One-line summaries of every op (`/v1/models`, diagnostics).
+    pub fn layer_summaries(&self) -> Vec<String> {
+        self.ops.iter().map(|op| op.summary()).collect()
+    }
+
+    /// The first dense op's activation — for a uniform dense stack this
+    /// is *the* activation (the paper's single global σ); heterogeneous
+    /// pipelines carry one per dense op.
     pub fn activation(&self) -> Activation {
-        self.activation
+        match self.ops[self.dense_ops[0]].spec() {
+            LayerSpec::Dense { activation, .. } => activation,
+            _ => unreachable!("dense_ops indexes dense ops"),
+        }
     }
 
-    pub fn layers(&self) -> &[Layer<T>] {
-        &self.layers
+    /// `Some(σ)` iff the pipeline is a plain dense stack with one shared
+    /// activation — the shape the paper's AOT/PJRT artifacts support.
+    pub fn uniform_activation(&self) -> Option<Activation> {
+        let mut acts = self.ops.iter().map(|op| match op.spec() {
+            LayerSpec::Dense { activation, .. } => Some(activation),
+            _ => None,
+        });
+        let first = acts.next().flatten()?;
+        for a in acts {
+            if a != Some(first) {
+                return None;
+            }
+        }
+        Some(first)
     }
 
-    pub fn layers_mut(&mut self) -> &mut [Layer<T>] {
-        &mut self.layers
+    /// True when the output head is the fused softmax+cross-entropy op.
+    pub fn has_softmax_head(&self) -> bool {
+        self.softmax_head
     }
 
-    /// Number of trainable parameters.
+    /// Number of dense (parameter-owning) ops.
+    pub fn dense_count(&self) -> usize {
+        self.dense_ops.len()
+    }
+
+    /// Dense op `l`'s weights (`dims[l] × dims[l+1]`).
+    pub fn dense_weight(&self, l: usize) -> &Matrix<T> {
+        self.ops[self.dense_ops[l]].params().expect("dense op has params").0
+    }
+
+    /// Dense op `l`'s output biases (length `dims[l+1]`).
+    pub fn dense_bias(&self, l: usize) -> &[T] {
+        self.ops[self.dense_ops[l]].params().expect("dense op has params").1
+    }
+
+    pub(crate) fn dense_params_mut(&mut self, l: usize) -> (&mut Matrix<T>, &mut Vec<T>) {
+        self.ops[self.dense_ops[l]].params_mut().expect("dense op has params")
+    }
+
+    pub(crate) fn input_bias_mut(&mut self) -> &mut Vec<T> {
+        &mut self.input_bias
+    }
+
+    /// Number of trainable parameters (including the input layer's
+    /// phantom bias, for parity with the paper's `layer_type` count).
     pub fn param_count(&self) -> usize {
-        self.layers.iter().map(|l| l.param_count()).sum()
+        self.params_flat_len()
     }
 
     /// Input layer size.
     pub fn input_size(&self) -> usize {
-        self.dims[0]
+        self.sizes[0]
     }
 
     /// Output layer size.
     pub fn output_size(&self) -> usize {
-        *self.dims.last().unwrap()
+        *self.sizes.last().unwrap()
     }
 
     // ------------------------------------------------------------------
     // Forward propagation (paper §3.2)
     // ------------------------------------------------------------------
 
-    /// Forward propagation storing intermediate `z` and `a` in every layer
-    /// (Listing 6) — required before [`Network::backprop`].
-    pub fn fwdprop(&mut self, x: &[T]) {
-        assert_eq!(x.len(), self.dims[0], "input size mismatch");
-        self.layers[0].a.copy_from_slice(x);
-        for n in 1..self.layers.len() {
-            // z_n = w_{n-1}ᵀ · a_{n-1} + b_n ; a_n = σ(z_n)
-            let z = {
-                let prev = &self.layers[n - 1];
-                let mut z = prev.w.t_matvec(&prev.a);
-                for (zi, &bi) in z.iter_mut().zip(&self.layers[n].b) {
-                    *zi = *zi + bi;
-                }
-                z
-            };
-            let layer = &mut self.layers[n];
-            layer.a.clear();
-            layer.a.extend(z.iter().map(|&v| self.activation.apply(v)));
-            layer.z = z;
+    /// Whole-batch forward pass through the op pipeline into the
+    /// workspace: op `i` reads boundary `i` (the input batch `x` for
+    /// `i == 0`, used in place and never copied) and writes its
+    /// activations and negotiated cache at boundary `i+1`.
+    /// Allocation-free once `ws` is warm.
+    fn forward_pass(&self, x: &Matrix<T>, ws: &mut Workspace<T>, mode: Mode) {
+        assert_eq!(x.rows(), self.sizes[0], "input size mismatch");
+        assert!(
+            ws.fits(&self.sizes, &self.cache_rows),
+            "workspace was negotiated for a different network"
+        );
+        let batch = x.cols();
+        ws.bind(batch);
+        let (a, z, rngs, scratch) =
+            (&mut ws.a, &mut ws.z, &mut ws.mask_rngs, &mut ws.scratch);
+        for (i, op) in self.ops.iter().enumerate() {
+            let (head, tail) = a.split_at_mut(i + 1);
+            let input: &Matrix<T> = if i == 0 { x } else { &head[i] };
+            op.forward_batch_into(
+                input,
+                &mut tail[0],
+                &mut z[i + 1],
+                scratch,
+                mode,
+                &mut rngs[i + 1],
+            );
         }
     }
 
-    /// Pure network output without touching stored state — the paper's
+    /// Forward pass with an explicit [`Mode`] through a caller-owned
+    /// workspace, returning the output activations. [`Mode::Train`]
+    /// applies dropout (advancing the workspace's mask streams);
+    /// [`Mode::Eval`] is the serving path. Allocation-free once warm.
+    pub fn forward_with<'w>(
+        &self,
+        x: &Matrix<T>,
+        ws: &'w mut Workspace<T>,
+        mode: Mode,
+    ) -> &'w Matrix<T> {
+        self.forward_pass(x, ws, mode);
+        ws.a.last().unwrap()
+    }
+
+    /// Pure network output for one sample in eval mode — the paper's
     /// `network_type % output()`, to be used outside of training.
     pub fn output(&self, x: &[T]) -> Vec<T> {
-        assert_eq!(x.len(), self.dims[0], "input size mismatch");
-        let mut a = x.to_vec();
-        for n in 1..self.layers.len() {
-            let prev = &self.layers[n - 1];
-            let mut z = prev.w.t_matvec(&a);
-            for (zi, &bi) in z.iter_mut().zip(&self.layers[n].b) {
-                *zi = *zi + bi;
-            }
-            a = self.activation.apply_vec(&z);
-        }
-        a
+        assert_eq!(x.len(), self.sizes[0], "input size mismatch");
+        let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+        self.output_batch(&xm).into_vec()
     }
 
-    /// Batched pure output: columns of `x` are samples (whole-batch
-    /// matrix products — see `grad_batch` for the formulation). Runs the
-    /// blocked-GEMM forward pass through a scratch [`Workspace`].
+    /// Batched eval-mode output: columns of `x` are samples (whole-batch
+    /// matrix products through the blocked GEMM and a scratch
+    /// [`Workspace`]).
     pub fn output_batch(&self, x: &Matrix<T>) -> Matrix<T> {
-        let mut ws = Workspace::new(&self.dims);
-        self.forward_pass(x, &mut ws);
+        let mut ws = Workspace::for_net(self);
+        self.forward_pass(x, &mut ws, Mode::Eval);
         ws.a.last().unwrap().clone()
     }
 
-    /// Batched pure output through a caller-owned workspace — the
+    /// Batched eval-mode output through a caller-owned workspace — the
     /// serving hot path ([`crate::serve::MicroBatcher`]): allocation-free
     /// once `ws` is warm at this (or a larger) batch size. The returned
     /// reference points into the workspace's last activation buffer and
     /// is valid until the next pass through `ws`.
     pub fn output_batch_with<'w>(&self, x: &Matrix<T>, ws: &'w mut Workspace<T>) -> &'w Matrix<T> {
-        self.forward_pass(x, ws);
-        ws.a.last().unwrap()
+        self.forward_with(x, ws, Mode::Eval)
     }
 
     /// [`Network::output_batch`] with the batch columns sharded across
     /// `threads` scoped std threads (output columns are contiguous in
     /// column-major storage, so shards write disjoint sub-slices).
     pub fn output_batch_threaded(&self, x: &Matrix<T>, threads: usize) -> Matrix<T> {
-        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
+        assert_eq!(x.rows(), self.sizes[0], "input size mismatch");
         let n = x.cols();
         let t = threads.max(1).min(n.max(1));
         if t <= 1 {
@@ -170,81 +392,9 @@ impl<T: Scalar> Network<T> {
         out
     }
 
-    /// Whole-batch forward pass into the workspace:
-    /// `Z_n = W_{n-1}ᵀ·A_{n-1} + b_n`, `A_n = σ(Z_n)`, with `A_0 = x`
-    /// used in place (never copied). Allocation-free once `ws` is warm.
-    fn forward_pass(&self, x: &Matrix<T>, ws: &mut Workspace<T>) {
-        assert_eq!(x.rows(), self.dims[0], "input size mismatch");
-        assert_eq!(ws.dims(), &self.dims[..], "workspace dims mismatch");
-        let batch = x.cols();
-        ws.bind(batch);
-        let (z, a, scratch) = (&mut ws.z, &mut ws.a, &mut ws.scratch);
-        for n in 1..self.layers.len() {
-            let w = &self.layers[n - 1].w;
-            {
-                let zn = &mut z[n];
-                if n == 1 {
-                    gemm::gemm_into(Op::T, w, Op::N, x, zn, false, scratch);
-                } else {
-                    gemm::gemm_into(Op::T, w, Op::N, &a[n - 1], zn, false, scratch);
-                }
-                let bn = &self.layers[n].b;
-                for j in 0..batch {
-                    vecops::axpy(zn.col_mut(j), T::ONE, bn);
-                }
-            }
-            let zn = &z[n];
-            let an = &mut a[n];
-            for (av, &zv) in an.as_mut_slice().iter_mut().zip(zn.as_slice()) {
-                *av = self.activation.apply(zv);
-            }
-        }
-    }
-
     // ------------------------------------------------------------------
     // Backpropagation (paper §3.3, Listing 7)
     // ------------------------------------------------------------------
-
-    /// Backpropagate after a [`Network::fwdprop`] call, *accumulating*
-    /// tendencies into `grads` (the batch loop and the data-parallel
-    /// coordinator both sum tendencies before applying them).
-    pub fn backprop_into(&self, y: &[T], grads: &mut Gradients<T>) {
-        assert_eq!(y.len(), self.output_size(), "output size mismatch");
-        let last = self.layers.len() - 1;
-
-        // Output layer: δ = (a − y) ⊙ σ'(z)
-        let mut delta: Vec<T> = {
-            let l = &self.layers[last];
-            let resid = quadratic_cost_prime(&l.a, y);
-            let sp = self.activation.prime_vec(&l.z);
-            vecops::hadamard(&resid, &sp)
-        };
-        for (gi, &d) in grads.db[last].iter_mut().zip(&delta) {
-            *gi = *gi + d;
-        }
-        grads.dw[last - 1].rank1_update(T::ONE, &self.layers[last - 1].a, &delta);
-
-        // Hidden layers, walking backward (paper's `do n = size(dims)-1, 2, -1`).
-        for n in (1..last).rev() {
-            let l = &self.layers[n];
-            // δ_n = (w_n · δ_{n+1}) ⊙ σ'(z_n)
-            let back = l.w.matvec(&delta);
-            let sp = self.activation.prime_vec(&l.z);
-            delta = vecops::hadamard(&back, &sp);
-            for (gi, &d) in grads.db[n].iter_mut().zip(&delta) {
-                *gi = *gi + d;
-            }
-            grads.dw[n - 1].rank1_update(T::ONE, &self.layers[n - 1].a, &delta);
-        }
-    }
-
-    /// Non-accumulating variant returning fresh tendencies (the paper's
-    /// `backprop(y, dw, db)` signature).
-    pub fn backprop(&self, y: &[T]) -> Gradients<T> {
-        let mut g = Gradients::zeros(&self.dims);
-        self.backprop_into(y, &mut g);
-        g
-    }
 
     /// Summed tendencies over a whole batch (columns of x/y are samples).
     /// This is the compute half of `train_batch`, split out so the
@@ -256,7 +406,7 @@ impl<T: Scalar> Network<T> {
     /// through `grad_batch_into` directly, which is allocation-free.
     pub fn grad_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
         let mut g = Gradients::zeros(&self.dims);
-        let mut ws = Workspace::new(&self.dims);
+        let mut ws = Workspace::for_net(self);
         self.grad_batch_into(x, y, &mut ws, &mut g);
         g
     }
@@ -264,17 +414,21 @@ impl<T: Scalar> Network<T> {
     /// Batched gradient pass, *accumulating* into `grads` through the
     /// caller's [`Workspace`] — the zero-allocation training pipeline.
     ///
-    /// Batched formulation (the paper's Listings 6-7 vectorized into
-    /// whole-batch blocked-GEMM products):
-    ///   Z_n = W_{n-1}ᵀ·A_{n-1} + b_n,  Δ_L = (A_L − Y)⊙σ'(Z_L),
-    ///   dW_{n-1} += A_{n-1}·Δ_nᵀ,      Δ_n = (W_n·Δ_{n+1})⊙σ'(Z_n),
-    /// amortizing every weight-matrix fetch across the batch. The GEMM
-    /// packing absorbs all transposition, so no `w.transpose()` copies are
-    /// ever materialized; `A_0` aliases `x` directly. Identical math to
-    /// [`Network::grad_batch_per_sample`] (asserted in tests).
+    /// The forward pass runs in [`Mode::Train`] (dropout active, masks
+    /// drawn from the workspace's seeded streams); then the cost
+    /// derivative enters at the top and each op's
+    /// [`LayerOp::backward_batch_into`] walks it down, accumulating dense
+    /// tendencies into the [`Gradients`] views for its dense index:
     ///
-    /// With `ws` warmed at this (or a larger) batch size, this performs
-    /// zero heap allocations — see `rust/tests/zero_alloc.rs`.
+    /// - quadratic head: `Δ_top = A_out − Y`, handed to the last op
+    ///   (whose backward multiplies by its σ');
+    /// - fused softmax+cross-entropy head: `Δ = softmax(Z) − Y` is
+    ///   injected directly *below* the head, which is skipped.
+    ///
+    /// For a plain dense stack this performs the exact float operations
+    /// of the paper's batched Listings 6-7 (asserted in tests). With `ws`
+    /// warmed at this (or a larger) batch size, it performs zero heap
+    /// allocations — see `rust/tests/zero_alloc.rs`.
     pub fn grad_batch_into(
         &self,
         x: &Matrix<T>,
@@ -291,53 +445,43 @@ impl<T: Scalar> Network<T> {
                 && grads.db.iter().zip(&self.dims).all(|(b, &d)| b.len() == d),
             "gradient dims mismatch"
         );
-        let nlayers = self.layers.len();
         let batch = x.cols();
         if batch == 0 {
             return;
         }
-        self.forward_pass(x, ws);
+        self.forward_pass(x, ws, Mode::Train);
         ws.bind_delta(batch);
+        let nops = self.ops.len();
         let (z, a, delta, scratch) = (&ws.z, &ws.a, &mut ws.delta, &mut ws.scratch);
 
-        // Output-layer delta: Δ_L = (A_L − Y) ⊙ σ'(Z_L).
-        let last = nlayers - 1;
+        // Cost derivative at the top. `top` is the highest boundary the
+        // backward loop consumes: below the head when it is fused.
+        let top = if self.softmax_head { nops - 1 } else { nops };
         {
-            let dl = &mut delta[last];
-            for (((dv, &av), &yv), &zv) in dl
-                .as_mut_slice()
-                .iter_mut()
-                .zip(a[last].as_slice())
-                .zip(y.as_slice())
-                .zip(z[last].as_slice())
+            let dl = &mut delta[top];
+            for ((dv, &av), &yv) in
+                dl.as_mut_slice().iter_mut().zip(a[nops].as_slice()).zip(y.as_slice())
             {
-                *dv = (av - yv) * self.activation.prime(zv);
+                *dv = av - yv;
             }
         }
 
-        for n in (1..nlayers).rev() {
-            // dW_{n-1} += A_{n-1} · Δ_nᵀ ; db_n += row-sums of Δ_n.
-            {
-                let dn = &delta[n];
-                let dw = &mut grads.dw[n - 1];
-                if n == 1 {
-                    gemm::gemm_into(Op::N, x, Op::T, dn, dw, true, scratch);
-                } else {
-                    gemm::gemm_into(Op::N, &a[n - 1], Op::T, dn, dw, true, scratch);
-                }
-                let db = &mut grads.db[n];
-                for j in 0..batch {
-                    vecops::axpy(db, T::ONE, dn.col(j));
-                }
-            }
-            if n > 1 {
-                // Δ_{n-1} = (W_{n-1} · Δ_n) ⊙ σ'(Z_{n-1}).
-                let (head, tail) = delta.split_at_mut(n);
-                let dprev = &mut head[n - 1];
-                let dn = &tail[0];
-                gemm::gemm_into(Op::N, &self.layers[n - 1].w, Op::N, dn, dprev, false, scratch);
-                for (dv, &zv) in dprev.as_mut_slice().iter_mut().zip(z[n - 1].as_slice()) {
-                    *dv = *dv * self.activation.prime(zv);
+        for i in (0..top).rev() {
+            let (dhead, dtail) = delta.split_at_mut(i + 1);
+            let d_out = &mut dtail[0];
+            let d_in = if i > 0 { Some(&mut dhead[i]) } else { None };
+            let input: &Matrix<T> = if i == 0 { x } else { &a[i] };
+            match self.dense_of_op[i] {
+                Some(d) => self.ops[i].backward_batch_into(
+                    input,
+                    d_out,
+                    d_in,
+                    &z[i + 1],
+                    Some((&mut grads.dw[d], &mut grads.db[d + 1])),
+                    scratch,
+                ),
+                None => {
+                    self.ops[i].backward_batch_into(input, d_out, d_in, &z[i + 1], None, scratch)
                 }
             }
         }
@@ -349,6 +493,14 @@ impl<T: Scalar> Network<T> {
     /// the blocked workspace pipeline privately; partial tendencies are
     /// summed in shard order, so the result is deterministic for a given
     /// thread count.
+    ///
+    /// Dropout caveat: each shard draws its masks from a fresh per-call
+    /// workspace, so *repeated* calls replay the same mask sequence —
+    /// across a training loop dropout degenerates toward a static
+    /// pruning pattern. Dropout networks should train through a
+    /// persistent workspace ([`Network::grad_batch_into`], the
+    /// `intra_threads = 1` trainer path), whose mask streams advance
+    /// from batch to batch.
     pub fn grad_batch_threaded(
         &self,
         x: &Matrix<T>,
@@ -386,13 +538,16 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Reference per-sample batch gradient (the paper's literal loop:
-    /// fwdprop + backprop per column). Used to validate the batched path.
-    pub fn grad_batch_per_sample(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
+    /// one forward/backward per column, through the same op pipeline at
+    /// batch 1). Used to validate the batched path.
+    pub fn grad_batch_per_sample(&self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
         assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
         let mut g = Gradients::zeros(&self.dims);
+        let mut ws = Workspace::for_net(self);
         for j in 0..x.cols() {
-            self.fwdprop(x.col(j));
-            self.backprop_into(y.col(j), &mut g);
+            let xj = x.cols_range(j, j + 1);
+            let yj = y.cols_range(j, j + 1);
+            self.grad_batch_into(&xj, &yj, &mut ws, &mut g);
         }
         g
     }
@@ -401,26 +556,28 @@ impl<T: Scalar> Network<T> {
     // Update and training (paper §3.3–3.4)
     // ------------------------------------------------------------------
 
-    /// Apply tendencies: `w -= eta·dw`, `b -= eta·db` — the paper's
-    /// `network_type % update()`.
+    /// Apply tendencies to the dense params: `w -= eta·dw`,
+    /// `b -= eta·db` — the paper's `network_type % update()`.
+    /// Parameter-free ops (dropout, softmax) are untouched, and the
+    /// input layer's phantom bias stays zero.
     pub fn update(&mut self, grads: &Gradients<T>, eta: T) {
         assert_eq!(grads.dims(), self.dims, "gradient dims mismatch");
         let neg_eta = -eta;
-        for (n, layer) in self.layers.iter_mut().enumerate() {
-            if n > 0 {
-                vecops::axpy(&mut layer.b, neg_eta, &grads.db[n]);
-            }
-            if n + 1 < self.dims.len() {
-                layer.w.axpy(neg_eta, &grads.dw[n]);
-            }
+        for l in 0..self.dense_ops.len() {
+            let opi = self.dense_ops[l];
+            let (w, b) = self.ops[opi].params_mut().expect("dense op has params");
+            w.axpy(neg_eta, &grads.dw[l]);
+            vecops::axpy(b, neg_eta, &grads.db[l + 1]);
         }
     }
 
     /// Train on a single sample (Listing 8).
     pub fn train_single(&mut self, x: &[T], y: &[T], eta: T) {
-        self.fwdprop(x);
-        let g = self.backprop(y);
-        self.update(&g, eta);
+        assert_eq!(x.len(), self.input_size(), "input size mismatch");
+        assert_eq!(y.len(), self.output_size(), "output size mismatch");
+        let xm = Matrix::from_vec(x.len(), 1, x.to_vec());
+        let ym = Matrix::from_vec(y.len(), 1, y.to_vec());
+        self.train_batch(&xm, &ym, eta);
     }
 
     /// Train on a batch (Listing 9): tendencies are summed over the batch
@@ -436,9 +593,9 @@ impl<T: Scalar> Network<T> {
     // Evaluation
     // ------------------------------------------------------------------
 
-    /// Mean quadratic cost over a batch, via one batched forward pass
-    /// (the per-sample `output()` loop made per-epoch eval on MNIST feel
-    /// quadratic; this is one blocked-GEMM sweep).
+    /// Mean eval-mode cost over a batch, via one batched forward pass:
+    /// cross-entropy when the network carries the fused softmax head,
+    /// the paper's quadratic cost otherwise.
     pub fn loss_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> f64 {
         assert_eq!(x.cols(), y.cols());
         if x.cols() == 0 {
@@ -447,13 +604,18 @@ impl<T: Scalar> Network<T> {
         let out = self.output_batch(x);
         let mut total = 0.0;
         for j in 0..x.cols() {
-            total += quadratic_cost(out.col(j), y.col(j)).to_f64();
+            total += if self.softmax_head {
+                cross_entropy_cost(out.col(j), y.col(j)).to_f64()
+            } else {
+                quadratic_cost(out.col(j), y.col(j)).to_f64()
+            };
         }
         total / x.cols() as f64
     }
 
     /// Classification accuracy: fraction of samples whose argmax matches
-    /// the label's argmax — the paper's `net % accuracy()`.
+    /// the label's argmax — the paper's `net % accuracy()`. (Softmax is
+    /// monotone, so the head never changes the argmax.)
     pub fn accuracy(&self, x: &Matrix<T>, y: &Matrix<T>) -> f64 {
         assert_eq!(x.cols(), y.cols());
         if x.cols() == 0 {
@@ -474,24 +636,32 @@ impl<T: Scalar> Network<T> {
     // the PJRT engine (params are executable inputs), and save/load.
     // ------------------------------------------------------------------
 
-    /// Number of scalars in the flat parameter view (== flat gradient len).
+    /// Number of scalars in the flat parameter view (== flat gradient
+    /// len for this network's `dims`).
     pub fn params_flat_len(&self) -> usize {
-        Gradients::<T>::zeros(&self.dims).flat_len()
+        let w: usize = (0..self.dims.len() - 1).map(|l| self.dims[l] * self.dims[l + 1]).sum();
+        w + self.dims.iter().sum::<usize>()
     }
 
     /// Write all parameters into `out` using the [`Gradients`] layout
-    /// (all w matrices column-major in layer order, then all b vectors).
+    /// (all dense w matrices column-major in order, then all b vectors —
+    /// the input layer's phantom zeros first). Identical to the
+    /// pre-layer-graph layout, so v1 checkpoints and replica broadcasts
+    /// are unchanged.
     pub fn params_flatten_into(&self, out: &mut [T]) {
         assert_eq!(out.len(), self.params_flat_len(), "param buffer size mismatch");
         let mut off = 0;
-        for l in 0..self.dims.len() - 1 {
-            let w = &self.layers[l].w;
+        for l in 0..self.dense_ops.len() {
+            let w = self.dense_weight(l);
             out[off..off + w.len()].copy_from_slice(w.as_slice());
             off += w.len();
         }
-        for layer in &self.layers {
-            out[off..off + layer.b.len()].copy_from_slice(&layer.b);
-            off += layer.b.len();
+        out[off..off + self.input_bias.len()].copy_from_slice(&self.input_bias);
+        off += self.input_bias.len();
+        for l in 0..self.dense_ops.len() {
+            let b = self.dense_bias(l);
+            out[off..off + b.len()].copy_from_slice(b);
+            off += b.len();
         }
     }
 
@@ -499,15 +669,19 @@ impl<T: Scalar> Network<T> {
     pub fn params_unflatten_from(&mut self, flat: &[T]) {
         assert_eq!(flat.len(), self.params_flat_len(), "param buffer size mismatch");
         let mut off = 0;
-        for l in 0..self.dims.len() - 1 {
-            let w = &mut self.layers[l].w;
+        for l in 0..self.dense_ops.len() {
+            let (w, _) = self.dense_params_mut(l);
             let n = w.len();
             w.as_mut_slice().copy_from_slice(&flat[off..off + n]);
             off += n;
         }
-        for layer in &mut self.layers {
-            let n = layer.b.len();
-            layer.b.copy_from_slice(&flat[off..off + n]);
+        let n0 = self.input_bias.len();
+        self.input_bias.copy_from_slice(&flat[off..off + n0]);
+        off += n0;
+        for l in 0..self.dense_ops.len() {
+            let (_, b) = self.dense_params_mut(l);
+            let n = b.len();
+            b.copy_from_slice(&flat[off..off + n]);
             off += n;
         }
     }
@@ -535,21 +709,54 @@ mod tests {
         Network::new(&[3, 5, 2], Activation::Sigmoid, 42)
     }
 
+    fn mlp_specs() -> Vec<LayerSpec> {
+        vec![
+            LayerSpec::Dense { units: 5, activation: Activation::Sigmoid },
+            LayerSpec::Dropout { rate: 0.25 },
+            LayerSpec::Dense { units: 2, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ]
+    }
+
     #[test]
     fn construction_matches_listing_3() {
         let net = Network::<f32>::new(&[3, 5, 2], Activation::Tanh, 1);
         assert_eq!(net.dims(), &[3, 5, 2]);
         assert_eq!(net.activation(), Activation::Tanh);
+        assert_eq!(net.uniform_activation(), Some(Activation::Tanh));
         assert_eq!(net.input_size(), 3);
         assert_eq!(net.output_size(), 2);
         // params: w(3×5)+w(5×2)+b(5)+b(2) + b(3 input, unused but present)
         assert_eq!(net.param_count(), 15 + 10 + 3 + 5 + 2);
+        assert_eq!(net.dense_count(), 2);
+        assert_eq!(net.dense_weight(0).rows(), 3);
+        assert_eq!(net.dense_weight(1).cols(), 2);
+        assert_eq!(net.dense_bias(1).len(), 2);
+        assert!(!net.has_softmax_head());
     }
 
     #[test]
     fn default_activation_is_sigmoid() {
         let net = Network::<f32>::with_dims(&[2, 2], 0);
         assert_eq!(net.activation(), Activation::Sigmoid);
+    }
+
+    #[test]
+    fn heterogeneous_pipeline_construction() {
+        let net: Network<f64> = Network::from_specs(3, &mlp_specs(), 7);
+        assert_eq!(net.dims(), &[3, 5, 2], "dims is the dense chain");
+        assert_eq!(net.boundary_sizes(), &[3, 5, 5, 2, 2]);
+        assert_eq!(net.cache_rows(), &[0, 5, 5, 2, 0]);
+        assert!(net.has_softmax_head());
+        assert_eq!(net.uniform_activation(), None, "dropout breaks plain-dense shape");
+        assert_eq!(
+            net.layer_summaries(),
+            vec!["dense(3->5, sigmoid)", "dropout(p=0.25)", "dense(5->2, sigmoid)", "softmax"]
+        );
+        // Same construction seed, same dense chain: dropout and softmax
+        // consume no randomness, so dense params match the plain stack's.
+        let plain = Network::<f64>::new(&[3, 5, 2], Activation::Sigmoid, 7);
+        assert_eq!(net.params_to_flat(), plain.params_to_flat());
     }
 
     #[test]
@@ -561,12 +768,34 @@ mod tests {
     }
 
     #[test]
-    fn fwdprop_and_output_agree() {
-        let mut net = tiny();
-        let x = [0.1, 0.2, 0.3];
-        let pure = net.output(&x);
-        net.fwdprop(&x);
-        assert_eq!(net.layers().last().unwrap().a, pure);
+    fn softmax_head_outputs_distribution() {
+        let net: Network<f64> = Network::from_specs(3, &mlp_specs(), 11);
+        let out = net.output(&[0.4, -0.1, 0.8]);
+        let sum: f64 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "softmax outputs must sum to 1, got {sum}");
+    }
+
+    #[test]
+    fn eval_mode_ignores_dropout_train_mode_applies_it() {
+        let net: Network<f64> = Network::from_specs(
+            4,
+            &[
+                LayerSpec::Dense { units: 16, activation: Activation::Tanh },
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            ],
+            5,
+        );
+        let x = Matrix::from_fn(4, 6, |i, j| (i as f64 - j as f64) / 5.0);
+        let mut ws = Workspace::for_net(&net);
+        let eval1 = net.forward_with(&x, &mut ws, Mode::Eval).clone();
+        let eval2 = net.output_batch(&x);
+        assert_eq!(eval1, eval2, "eval mode is deterministic");
+        let train = net.forward_with(&x, &mut ws, Mode::Train).clone();
+        assert!(
+            eval1.max_abs_diff(&train) > 1e-9,
+            "p=0.5 dropout must change train-mode outputs"
+        );
     }
 
     #[test]
@@ -583,32 +812,26 @@ mod tests {
     }
 
     /// Gradient check: analytic backprop vs central finite differences on
-    /// every parameter of a small network.
+    /// every parameter of a small network, per activation.
     #[test]
-    fn backprop_matches_finite_differences() {
+    fn grad_matches_finite_differences() {
         for act in [Activation::Sigmoid, Activation::Tanh, Activation::Gaussian] {
             let mut net = Network::<f64>::new(&[2, 3, 2], act, 7);
-            let x = [0.3, -0.6];
-            let y = [0.9, 0.1];
-            net.fwdprop(&x);
-            let g = net.backprop(&y);
+            let x = Matrix::from_vec(2, 1, vec![0.3, -0.6]);
+            let y = Matrix::from_vec(2, 1, vec![0.9, 0.1]);
+            let g = net.grad_batch(&x, &y);
 
             let h = 1e-6;
             let mut flat = net.params_to_flat();
-            let gflat = {
-                // Gradients layout == params layout.
-                let mut buf = vec![0.0; g.flat_len()];
-                g.flatten_into(&mut buf);
-                buf
-            };
+            let gflat = g.to_flat(); // Gradients layout == params layout.
             for i in 0..flat.len() {
                 let orig = flat[i];
                 flat[i] = orig + h;
                 net.params_unflatten_from(&flat);
-                let cp = quadratic_cost(&net.output(&x), &y);
+                let cp = quadratic_cost(&net.output(&[0.3, -0.6]), &[0.9, 0.1]);
                 flat[i] = orig - h;
                 net.params_unflatten_from(&flat);
-                let cm = quadratic_cost(&net.output(&x), &y);
+                let cm = quadratic_cost(&net.output(&[0.3, -0.6]), &[0.9, 0.1]);
                 flat[i] = orig;
                 net.params_unflatten_from(&flat);
                 let fd = (cp - cm) / (2.0 * h);
@@ -621,9 +844,43 @@ mod tests {
         }
     }
 
+    /// Same check through the fused softmax+cross-entropy head.
+    #[test]
+    fn softmax_head_grad_matches_finite_differences() {
+        let specs = vec![
+            LayerSpec::Dense { units: 4, activation: Activation::Tanh },
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        let mut net: Network<f64> = Network::from_specs(2, &specs, 13);
+        let x = Matrix::from_vec(2, 1, vec![0.4, -0.2]);
+        let y = Matrix::from_vec(3, 1, vec![0.0, 1.0, 0.0]);
+        let g = net.grad_batch(&x, &y);
+        let h = 1e-6;
+        let mut flat = net.params_to_flat();
+        let gflat = g.to_flat();
+        for i in 0..flat.len() {
+            let orig = flat[i];
+            flat[i] = orig + h;
+            net.params_unflatten_from(&flat);
+            let cp = net.loss_batch(&x, &y);
+            flat[i] = orig - h;
+            net.params_unflatten_from(&flat);
+            let cm = net.loss_batch(&x, &y);
+            flat[i] = orig;
+            net.params_unflatten_from(&flat);
+            let fd = (cp - cm) / (2.0 * h);
+            assert!(
+                (fd - gflat[i]).abs() < 1e-5,
+                "softmax head: param {i}: fd={fd} analytic={}",
+                gflat[i]
+            );
+        }
+    }
+
     #[test]
     fn batched_grad_equals_per_sample_grad() {
-        let mut net = Network::<f64>::new(&[7, 9, 5, 3], Activation::Tanh, 17);
+        let net = Network::<f64>::new(&[7, 9, 5, 3], Activation::Tanh, 17);
         let mut rng = Rng::new(4);
         let x = Matrix::from_fn(7, 23, |_, _| rng.uniform_in(-1.0, 1.0));
         let y = Matrix::from_fn(3, 23, |_, _| rng.uniform_in(0.0, 1.0));
@@ -645,7 +902,7 @@ mod tests {
         // the same tendencies as fresh per-call state.
         let net = Network::<f64>::new(&[6, 8, 4], Activation::Sigmoid, 23);
         let mut rng = Rng::new(8);
-        let mut ws = Workspace::new(net.dims());
+        let mut ws = Workspace::for_net(&net);
         for &b in &[16usize, 5, 16, 1] {
             let x = Matrix::from_fn(6, b, |_, _| rng.uniform_in(-1.0, 1.0));
             let y = Matrix::from_fn(4, b, |_, _| rng.uniform_in(0.0, 1.0));
@@ -662,7 +919,7 @@ mod tests {
         let x = Matrix::from_fn(3, 6, |i, j| (i as f64 + j as f64) / 9.0);
         let y = Matrix::from_fn(2, 6, |i, j| ((i * j) % 2) as f64);
         let once = net.grad_batch(&x, &y);
-        let mut ws = Workspace::new(net.dims());
+        let mut ws = Workspace::for_net(&net);
         let mut acc = Gradients::zeros(net.dims());
         net.grad_batch_into(&x, &y, &mut ws, &mut acc);
         net.grad_batch_into(&x, &y, &mut ws, &mut acc);
@@ -710,7 +967,7 @@ mod tests {
     fn output_batch_with_matches_output_batch_across_batch_sizes() {
         let net = Network::<f64>::new(&[5, 11, 2], Activation::Tanh, 9);
         let mut rng = Rng::new(12);
-        let mut ws = Workspace::new(net.dims());
+        let mut ws = Workspace::for_net(&net);
         for &b in &[9usize, 3, 9, 1] {
             let x = Matrix::from_fn(5, b, |_, _| rng.uniform_in(-1.0, 1.0));
             let fresh = net.output_batch(&x);
@@ -733,14 +990,16 @@ mod tests {
 
     #[test]
     fn grad_batch_is_sum_of_singles() {
-        let mut net = tiny();
+        let net = tiny();
         let x = Matrix::from_fn(3, 4, |i, j| (i as f64 - j as f64) / 5.0);
         let y = Matrix::from_fn(2, 4, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
         let batch = net.grad_batch(&x, &y);
         let mut acc = Gradients::zeros(&[3, 5, 2]);
+        let mut ws = Workspace::for_net(&net);
         for j in 0..4 {
-            net.fwdprop(x.col(j));
-            net.backprop_into(y.col(j), &mut acc);
+            let xj = x.cols_range(j, j + 1);
+            let yj = y.cols_range(j, j + 1);
+            net.grad_batch_into(&xj, &yj, &mut ws, &mut acc);
         }
         assert_eq!(batch, acc);
     }
@@ -769,6 +1028,7 @@ mod tests {
         assert!(!net.params_close(&other, 1e-9));
         other.params_unflatten_from(&flat);
         assert!(net.params_close(&other, 0.0));
+        assert_eq!(net, other, "same specs + same params == equal networks");
     }
 
     #[test]
@@ -790,6 +1050,37 @@ mod tests {
             net.train_batch(&x, &y, 3.0);
         }
         assert!(net.accuracy(&x, &y) > 0.95, "acc={}", net.accuracy(&x, &y));
+    }
+
+    #[test]
+    fn softmax_head_learns_separable_toy_faster_guard() {
+        // The same toy through dense→softmax with cross-entropy; the head
+        // must train (and loss_batch must report finite CE throughout).
+        let specs = vec![
+            LayerSpec::Dense { units: 8, activation: Activation::Sigmoid },
+            LayerSpec::Dense { units: 2, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        let mut net: Network<f64> = Network::from_specs(1, &specs, 3);
+        let mut rng = Rng::new(10);
+        let n = 64;
+        let x = Matrix::from_fn(1, n, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(2, n, |i, j| {
+            let pos = x.get(0, j) > 0.0;
+            if (i == 0) == pos {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let before = net.loss_batch(&x, &y);
+        for _ in 0..500 {
+            net.train_batch(&x, &y, 1.0);
+        }
+        let after = net.loss_batch(&x, &y);
+        assert!(before.is_finite() && after.is_finite());
+        assert!(after < before * 0.5, "CE loss must drop: {before} -> {after}");
+        assert!(net.accuracy(&x, &y) > 0.9, "acc={}", net.accuracy(&x, &y));
     }
 
     #[test]

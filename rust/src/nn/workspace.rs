@@ -1,70 +1,122 @@
-//! Reusable training buffers: the zero-allocation batch pipeline.
+//! Reusable training buffers: the zero-allocation batch pipeline,
+//! negotiated per layer op.
 //!
-//! The seed engine allocated ~10 temporary matrices per `grad_batch` call
-//! (a transposed copy of every weight matrix, fresh `Z`/`A`/`Δ` per layer,
-//! a fresh `Gradients`). [`Workspace`] owns all of that state instead:
-//! per-layer `Z`, `A`, and `Δ` matrices plus the GEMM packing scratch.
+//! [`Workspace`] owns every piece of mutable per-pass state the layer
+//! pipeline needs: per-op activations `A`, per-op caches (pre-activation
+//! `Z` for dense, the applied mask for dropout — whatever
+//! [`crate::nn::LayerOp::cache_rows`] negotiated), backward deltas `Δ`,
+//! the GEMM packing scratch, and one mask RNG per op (dropout's
+//! stochastic state lives *here*, not in the op, so ops stay `&self` on
+//! the hot path and mask streams are deterministic per workspace).
+//!
 //! After one warm-up batch at the largest batch size, a steady-state
 //! training loop calling [`crate::nn::Network::grad_batch_into`] performs
 //! **zero heap allocations per batch** — asserted by a counting global
-//! allocator in `rust/tests/zero_alloc.rs`.
-//!
-//! Rebinding to a smaller batch shrinks the matrices in place
-//! ([`crate::tensor::Matrix::resize_cols`] never reallocates within
-//! capacity), so ragged final mini-batches stay allocation-free too.
+//! allocator in `rust/tests/zero_alloc.rs`, and the serving equivalent in
+//! `rust/tests/serve_zero_alloc.rs`. Rebinding to a smaller batch shrinks
+//! the matrices in place ([`crate::tensor::Matrix::resize_cols`] never
+//! reallocates within capacity), so ragged final mini-batches stay
+//! allocation-free too.
 
-use crate::tensor::{GemmScratch, Matrix, Scalar};
+use super::network::Network;
+use crate::tensor::{GemmScratch, Matrix, Rng, Scalar};
 
 /// Per-network training buffers. One per trainer replica (and one per
-/// intra-image shard thread on the threaded path).
+/// intra-image shard thread on the threaded path, and one per serving
+/// worker).
 #[derive(Debug, Clone)]
 pub struct Workspace<T = f32> {
-    dims: Vec<usize>,
-    /// Pre-activations per layer; index 0 is an empty placeholder (the
-    /// input layer has no `z`), kept for index parity with the paper.
+    /// Boundary sizes: `sizes[0]` is the input size, `sizes[i]` the
+    /// output size of op `i-1`.
+    sizes: Vec<usize>,
+    /// Cache rows per boundary: `cache_rows[i]` is op `i-1`'s negotiated
+    /// cache height (0 = stateless op). Index 0 is always 0.
+    cache_rows: Vec<usize>,
+    /// Per-op caches; index 0 is an empty placeholder for index parity
+    /// with the paper's 1-based layers.
     pub(crate) z: Vec<Matrix<T>>,
-    /// Activations per layer; index 0 is empty — the input batch is used
-    /// directly, never copied.
+    /// Activations per boundary; index 0 is empty — the input batch is
+    /// used directly, never copied.
     pub(crate) a: Vec<Matrix<T>>,
-    /// Backpropagated deltas per layer; index 0 is empty.
+    /// Backpropagated deltas per boundary; index 0 is empty.
     pub(crate) delta: Vec<Matrix<T>>,
     /// GEMM packing buffers, shared by every product in the pass.
     pub(crate) scratch: GemmScratch<T>,
+    /// One mask stream per boundary, seeded from the op's
+    /// [`crate::nn::LayerOp::mask_seed`] (only dropout consumes it).
+    pub(crate) mask_rngs: Vec<Rng>,
     /// Batch size the forward buffers (`z`/`a`) are shaped for.
     batch: usize,
     /// Batch size the `delta` buffers are shaped for — bound lazily by
     /// the backward pass, so forward-only callers (`output_batch`,
-    /// `loss_batch`, accuracy sweeps) never pay for them.
+    /// `loss_batch`, accuracy sweeps, serving) never pay for them.
     delta_batch: usize,
 }
 
 impl<T: Scalar> Workspace<T> {
-    /// An empty workspace for a network with the given layer sizes. The
-    /// first batch it sees sizes the buffers (that pass allocates; later
-    /// passes at the same or smaller batch do not).
-    pub fn new(dims: &[usize]) -> Self {
-        assert!(dims.len() >= 2, "network needs at least input and output layers");
-        let mk = || {
-            let mut v = Vec::with_capacity(dims.len());
+    fn from_layout(sizes: Vec<usize>, cache_rows: Vec<usize>, seeds: &[u64]) -> Self {
+        assert!(sizes.len() >= 2, "network needs at least input and output layers");
+        assert_eq!(sizes.len(), cache_rows.len());
+        assert_eq!(sizes.len(), seeds.len());
+        let mk = |rows: &[usize]| {
+            let mut v = Vec::with_capacity(rows.len());
             v.push(Matrix::zeros(0, 0));
-            for &d in &dims[1..] {
-                v.push(Matrix::zeros(d, 0));
+            for &r in &rows[1..] {
+                v.push(Matrix::zeros(r, 0));
             }
             v
         };
+        let mask_rngs = seeds.iter().map(|&s| Rng::new(s)).collect();
         Self {
-            dims: dims.to_vec(),
-            z: mk(),
-            a: mk(),
-            delta: mk(),
+            z: mk(&cache_rows),
+            a: mk(&sizes),
+            delta: mk(&sizes),
+            sizes,
+            cache_rows,
             scratch: GemmScratch::new(),
+            mask_rngs,
             batch: 0,
             delta_batch: 0,
         }
     }
 
-    /// A workspace pre-sized for `batch` columns (warm from the start,
-    /// apart from the GEMM scratch, which sizes itself on first use).
+    /// An empty workspace for a *plain dense chain* with the given layer
+    /// sizes (every op dense, caching its pre-activations). The general
+    /// constructor is [`Workspace::for_net`], which negotiates shapes
+    /// with each op; this shorthand exists for the dense-only benches and
+    /// tests. The first batch it sees sizes the buffers (that pass
+    /// allocates; later passes at the same or smaller batch do not).
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "network needs at least input and output layers");
+        let mut cache = dims.to_vec();
+        cache[0] = 0;
+        let seeds = vec![0u64; dims.len()];
+        Self::from_layout(dims.to_vec(), cache, &seeds)
+    }
+
+    /// An empty workspace negotiated against `net`'s op pipeline — one
+    /// activation/cache/delta buffer per op, shaped by the op's
+    /// [`crate::nn::LayerOp`] views, plus a mask RNG seeded per op.
+    pub fn for_net(net: &Network<T>) -> Self {
+        let sizes = net.boundary_sizes().to_vec();
+        let cache = net.cache_rows().to_vec();
+        let mut seeds = vec![0u64];
+        seeds.extend(net.ops().iter().map(|op| op.mask_seed()));
+        Self::from_layout(sizes, cache, &seeds)
+    }
+
+    /// [`Workspace::for_net`] pre-sized for `batch` columns (warm from
+    /// the start, apart from the GEMM scratch, which sizes itself on
+    /// first use).
+    pub fn for_net_batch(net: &Network<T>, batch: usize) -> Self {
+        let mut ws = Self::for_net(net);
+        ws.bind(batch);
+        ws.bind_delta(batch);
+        ws
+    }
+
+    /// A dense-chain workspace pre-sized for `batch` columns — see
+    /// [`Workspace::new`].
     pub fn for_batch(dims: &[usize], batch: usize) -> Self {
         let mut ws = Self::new(dims);
         ws.bind(batch);
@@ -72,9 +124,16 @@ impl<T: Scalar> Workspace<T> {
         ws
     }
 
-    /// Layer sizes this workspace serves.
-    pub fn dims(&self) -> &[usize] {
-        &self.dims
+    /// Boundary sizes this workspace serves (`[input, out_0, out_1, ...]`).
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// True if this workspace's negotiated layout fits the given
+    /// boundary/cache shape (the check [`crate::nn::Network`] runs before
+    /// every pass — allocation-free slice compares).
+    pub(crate) fn fits(&self, sizes: &[usize], cache_rows: &[usize]) -> bool {
+        self.sizes == sizes && self.cache_rows == cache_rows
     }
 
     /// Batch size the buffers are currently shaped for.
@@ -115,11 +174,12 @@ impl<T: Scalar> Workspace<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::{Activation, LayerSpec};
 
     #[test]
     fn buffers_track_dims_and_batch() {
         let mut ws: Workspace<f32> = Workspace::new(&[4, 6, 2]);
-        assert_eq!(ws.dims(), &[4, 6, 2]);
+        assert_eq!(ws.sizes(), &[4, 6, 2]);
         assert_eq!(ws.batch(), 0);
         ws.bind(5);
         assert_eq!(ws.batch(), 5);
@@ -141,6 +201,29 @@ mod tests {
         let ws: Workspace<f64> = Workspace::for_batch(&[3, 2], 7);
         assert_eq!(ws.batch(), 7);
         assert_eq!(ws.z[1].cols(), 7);
+    }
+
+    #[test]
+    fn negotiates_heterogeneous_caches() {
+        let net: Network<f32> = Network::from_specs(
+            4,
+            &[
+                LayerSpec::Dense { units: 6, activation: Activation::Relu },
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+                LayerSpec::Softmax,
+            ],
+            1,
+        );
+        let mut ws = Workspace::for_net(&net);
+        assert_eq!(ws.sizes(), &[4, 6, 6, 3, 3]);
+        ws.bind(8);
+        assert_eq!(ws.z[1].rows(), 6, "dense caches pre-activations");
+        assert_eq!(ws.z[2].rows(), 6, "dropout caches its mask");
+        assert_eq!(ws.z[4].rows(), 0, "softmax is stateless");
+        assert_eq!(ws.a[4].rows(), 3);
+        assert!(ws.fits(net.boundary_sizes(), net.cache_rows()));
+        assert!(!ws.fits(&[4, 6, 3], &[0, 6, 3]));
     }
 
     #[test]

@@ -141,7 +141,8 @@ impl CompiledNet {
         self.meta.micro_batch
     }
 
-    /// Check that `net` matches this artifact (dims, activation, dtype).
+    /// Check that `net` matches this artifact (plain dense shape, dims,
+    /// activation, dtype).
     fn check_net<T: PjrtScalar>(&self, net: &Network<T>) -> Result<(), RuntimeError> {
         if net.dims() != self.meta.dims.as_slice() {
             return invalid(format!(
@@ -150,11 +151,21 @@ impl CompiledNet {
                 self.meta.dims
             ));
         }
-        if net.activation() != self.meta.activation {
+        let act = match net.uniform_activation() {
+            Some(a) => a,
+            None => {
+                return invalid(
+                    "AOT artifacts encode a plain dense stack with one activation; \
+                     layer-graph networks (dropout/softmax/mixed activations) need \
+                     --engine native"
+                        .to_string(),
+                )
+            }
+        };
+        if act != self.meta.activation {
             return invalid(format!(
                 "network activation {} != artifact activation {}",
-                net.activation(),
-                self.meta.activation
+                act, self.meta.activation
             ));
         }
         if T::DTYPE != self.meta.dtype {
@@ -180,7 +191,7 @@ impl CompiledNet {
         let dims = net.dims();
         let mut bufs = Vec::with_capacity(2 * (dims.len() - 1));
         for l in 0..dims.len() - 1 {
-            let w = &net.layers()[l].w;
+            let w = net.dense_weight(l);
             // Column-major [in, out] bytes == row-major [out, in]: zero-copy.
             bufs.push(self.client.buffer_from_host_buffer(
                 w.as_slice(),
@@ -188,7 +199,7 @@ impl CompiledNet {
                 None,
             )?);
             bufs.push(self.client.buffer_from_host_buffer(
-                &net.layers()[l + 1].b,
+                net.dense_bias(l),
                 &[dims[l + 1]],
                 None,
             )?);

@@ -336,18 +336,22 @@ impl Drop for MicroBatcher {
 /// deliver, repeat. Multiple workers share the queue; drains are disjoint
 /// because the queue lock is held across them.
 fn worker_loop(sh: &Shared) {
-    let mut dims: Vec<usize> = match sh.registry.get(&sh.model) {
-        Some(net) => net.dims().to_vec(),
-        None => return,
-    };
-    let mut ws = Workspace::<f32>::for_batch(&dims, sh.max_batch);
-    let mut x = Matrix::<f32>::zeros(dims[0], sh.max_batch);
+    // One registry snapshot seeds all worker state, so the shape vectors,
+    // workspace, and input matrix always describe the same model even if
+    // a hot reload lands during startup. The workspace is negotiated
+    // against the model's op pipeline (per-op activations, caches); the
+    // boundary/cache shape vectors are what later reloads are compared
+    // against (alloc-free slice compares).
+    let Some(net) = sh.registry.get(&sh.model) else { return };
+    let mut sizes: Vec<usize> = net.boundary_sizes().to_vec();
+    let mut cache: Vec<usize> = net.cache_rows().to_vec();
+    let mut ws = Workspace::<f32>::for_net_batch(&net, sh.max_batch);
+    let mut x = Matrix::<f32>::zeros(sizes[0], sh.max_batch);
     let mut batch: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(sh.max_batch);
     // Warm the GEMM packing scratch at the full batch size so the first
     // real batch is already on the zero-allocation path.
-    if let Some(net) = sh.registry.get(&sh.model) {
-        let _ = net.output_batch_with(&x, &mut ws);
-    }
+    let _ = net.output_batch_with(&x, &mut ws);
+    drop(net);
 
     let mut q = sh.q.lock().unwrap();
     loop {
@@ -385,7 +389,7 @@ fn worker_loop(sh: &Shared) {
         }
         drop(q);
 
-        run_batch(sh, &batch, &mut dims, &mut ws, &mut x);
+        run_batch(sh, &batch, &mut sizes, &mut cache, &mut ws, &mut x);
         batch.clear();
         q = sh.q.lock().unwrap();
     }
@@ -394,7 +398,8 @@ fn worker_loop(sh: &Shared) {
 fn run_batch(
     sh: &Shared,
     batch: &[(Arc<Slot>, Instant)],
-    dims: &mut Vec<usize>,
+    sizes: &mut Vec<usize>,
+    cache: &mut Vec<usize>,
     ws: &mut Workspace<f32>,
     x: &mut Matrix<f32>,
 ) {
@@ -405,12 +410,14 @@ fn run_batch(
             return;
         }
     };
-    if net.dims() != &dims[..] {
-        // Hot reload changed the architecture: re-warm (one-off
-        // allocation, deliberately off the steady-state path).
-        *dims = net.dims().to_vec();
-        *ws = Workspace::for_batch(dims, sh.max_batch);
-        *x = Matrix::zeros(dims[0], sh.max_batch);
+    if net.boundary_sizes() != &sizes[..] || net.cache_rows() != &cache[..] {
+        // Hot reload changed the architecture (layer sizes or op
+        // shapes): re-warm (one-off allocation, deliberately off the
+        // steady-state path).
+        *sizes = net.boundary_sizes().to_vec();
+        *cache = net.cache_rows().to_vec();
+        *ws = Workspace::for_net_batch(&net, sh.max_batch);
+        *x = Matrix::zeros(sizes[0], sh.max_batch);
     }
     let n = batch.len();
     let in_len = net.input_size();

@@ -11,6 +11,9 @@
 //!
 //! - `POST /v1/predict` — body `{"model": "default", "input": [f32...]}`
 //!   (`model` optional); replies `{"model", "argmax", "output", "latency_us"}`.
+//! - `GET  /v1/models` — registry listing with input/output sizes,
+//!   parameter counts, and per-layer summaries (the first step toward
+//!   multi-model routing).
 //! - `GET  /healthz` — `{"status":"ok","models":[...]}`.
 //! - `GET  /metrics` — Prometheus text ([`ServeMetrics::render_prometheus`]).
 //! - `POST /admin/shutdown` — graceful shutdown: stop accepting, drain,
@@ -367,6 +370,10 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
                 let body = format!("{{\"status\":\"ok\",\"models\":{models}}}");
                 respond_json(&mut stream, 200, "OK", &body, close)?;
             }
+            ("GET", "/v1/models") => {
+                let body = models_json(ctx);
+                respond_json(&mut stream, 200, "OK", &body, close)?;
+            }
             ("GET", "/metrics") => {
                 let body = ctx.metrics.render_prometheus();
                 respond(
@@ -401,6 +408,25 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
             return Ok(());
         }
     }
+}
+
+/// `GET /v1/models`: one entry per registry model with its pipeline
+/// summary — shape negotiation made visible to clients (and the first
+/// step toward multi-model routing).
+fn models_json(ctx: &Ctx) -> String {
+    let mut models = Vec::new();
+    for name in ctx.registry.names() {
+        let Some(net) = ctx.registry.get(&name) else { continue };
+        let layers = Json::Arr(net.layer_summaries().into_iter().map(Json::Str).collect());
+        models.push(Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::Str(name)),
+            ("input".to_string(), Json::Num(net.input_size() as f64)),
+            ("output".to_string(), Json::Num(net.output_size() as f64)),
+            ("params".to_string(), Json::Num(net.param_count() as f64)),
+            ("layers".to_string(), layers),
+        ])));
+    }
+    Json::Obj(BTreeMap::from([("models".to_string(), Json::Arr(models))])).to_string()
 }
 
 fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, String) {

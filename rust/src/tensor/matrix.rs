@@ -41,6 +41,7 @@ pub trait Scalar:
     fn from_f64(v: f64) -> Self;
     fn to_f64(self) -> f64;
     fn exp(self) -> Self;
+    fn ln(self) -> Self;
     fn tanh(self) -> Self;
     fn abs(self) -> Self;
     fn sqrt(self) -> Self;
@@ -59,6 +60,9 @@ impl Scalar for f32 {
     }
     fn exp(self) -> Self {
         f32::exp(self)
+    }
+    fn ln(self) -> Self {
+        f32::ln(self)
     }
     fn tanh(self) -> Self {
         f32::tanh(self)
@@ -85,6 +89,9 @@ impl Scalar for f64 {
     }
     fn exp(self) -> Self {
         f64::exp(self)
+    }
+    fn ln(self) -> Self {
+        f64::ln(self)
     }
     fn tanh(self) -> Self {
         f64::tanh(self)

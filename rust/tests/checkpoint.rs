@@ -1,11 +1,17 @@
-//! Checkpoint round-trip coverage: every activation function and both
-//! scalar kinds through `nn/io` save → load → bit-identical
-//! `output_batch`. The serving registry (`serve::ModelRegistry`) loads
-//! checkpoints through exactly this path, so hot-reload correctness
-//! rests on these invariants.
+//! Checkpoint round-trip coverage: every activation function, every
+//! layer kind, and both scalar kinds through `nn/io` save → load →
+//! bit-identical `output_batch`; plus the committed **v1 fixture** that
+//! proves legacy dense checkpoints keep loading (and serving) after the
+//! layer-graph refactor. The serving registry (`serve::ModelRegistry`)
+//! loads checkpoints through exactly this path, so hot-reload
+//! correctness rests on these invariants.
 
-use neural_rs::nn::{Activation, Network};
+use neural_rs::nn::{Activation, LayerSpec, Network};
 use neural_rs::tensor::{Matrix, Rng, Scalar};
+
+/// The committed legacy checkpoint: a 6-5-4 tanh v1 file with exact
+/// binary-fraction parameters.
+const V1_FIXTURE: &str = include_str!("fixtures/v1_dense_6_5_4.txt");
 
 fn assert_round_trip<T: Scalar>(act: Activation, seed: u64) {
     let dims = [7usize, 9, 4];
@@ -40,6 +46,120 @@ fn every_activation_round_trips_f64() {
     for (i, act) in Activation::ALL.into_iter().enumerate() {
         assert_round_trip::<f64>(act, 29 + i as u64);
     }
+}
+
+/// v2 round trip for every layer kind, both scalar kinds: specs, dropout
+/// seeds, and parameters all survive, and outputs are bit-identical.
+fn assert_layered_round_trip<T: Scalar>(specs: &[LayerSpec], input: usize, seed: u64) {
+    let net = Network::<T>::from_specs(input, specs, seed);
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    let loaded = Network::<T>::load_from(&buf[..]).unwrap();
+    assert_eq!(loaded.spec_list(), net.spec_list(), "{specs:?}");
+    assert!(net.params_close(&loaded, 0.0), "{specs:?}");
+    let mut rng = Rng::new(seed ^ 0xFACE);
+    let x = Matrix::<T>::from_fn(input, 7, |_, _| T::from_f64(rng.uniform_in(-1.0, 1.0)));
+    assert_eq!(net.output_batch(&x), loaded.output_batch(&x), "{specs:?}");
+}
+
+#[test]
+fn every_layer_kind_round_trips_f32_and_f64() {
+    let dense = |u: usize, a: Activation| LayerSpec::Dense { units: u, activation: a };
+    let pipelines: Vec<Vec<LayerSpec>> = vec![
+        vec![dense(4, Activation::Tanh)],
+        vec![
+            dense(6, Activation::Relu),
+            LayerSpec::Dropout { rate: 0.5 },
+            dense(3, Activation::Sigmoid),
+        ],
+        vec![dense(5, Activation::Sigmoid), LayerSpec::Softmax],
+        vec![
+            dense(6, Activation::Elu),
+            LayerSpec::Dropout { rate: 0.125 },
+            dense(4, Activation::Sigmoid),
+            LayerSpec::Softmax,
+        ],
+    ];
+    for (i, specs) in pipelines.iter().enumerate() {
+        assert_layered_round_trip::<f32>(specs, 5, 100 + i as u64);
+        assert_layered_round_trip::<f64>(specs, 5, 200 + i as u64);
+    }
+}
+
+/// The committed v1 fixture loads into the layer graph bit-for-bit: the
+/// legacy homogeneous-dense format deserializes to the equivalent dense
+/// pipeline with exactly the stored parameters.
+#[test]
+fn v1_fixture_loads_bit_for_bit() {
+    let net = Network::<f32>::load_from(V1_FIXTURE.as_bytes()).unwrap();
+    assert_eq!(net.dims(), &[6, 5, 4]);
+    assert_eq!(net.activation(), Activation::Tanh);
+    assert_eq!(net.dense_count(), 2);
+    assert_eq!(
+        net.layer_summaries(),
+        vec!["dense(6->5, tanh)", "dense(5->4, tanh)"]
+    );
+    // Spot-check the exact stored values (binary fractions: no rounding).
+    assert_eq!(net.dense_bias(0), &[0.0625, 0.125, 0.1875, 0.25, 0.3125]);
+    assert_eq!(net.dense_bias(1), &[-0.03125, -0.0625, -0.09375, -0.125]);
+    assert_eq!(net.dense_weight(0).get(0, 0), -0.234375);
+    assert_eq!(net.dense_weight(1).get(4, 3), 0.421875);
+
+    // Same contract at f64: the text parses into either scalar kind.
+    let net64 = Network::<f64>::load_from(V1_FIXTURE.as_bytes()).unwrap();
+    assert_eq!(net64.dense_bias(0)[2], 0.1875f64);
+}
+
+/// v1 → v2 migration: re-saving the fixture writes the tagged format,
+/// which loads back with identical parameters and outputs.
+#[test]
+fn v1_fixture_resaves_as_v2_identically() {
+    let v1 = Network::<f32>::load_from(V1_FIXTURE.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    v1.save_to(&mut buf).unwrap();
+    let text = String::from_utf8(buf.clone()).unwrap();
+    assert!(text.starts_with("neural-rs network v2"), "{text}");
+    assert!(text.contains("layer 0 dense 5 tanh"), "{text}");
+    let v2 = Network::<f32>::load_from(&buf[..]).unwrap();
+    assert!(v1.params_close(&v2, 0.0));
+    let mut rng = Rng::new(6);
+    let x = Matrix::<f32>::from_fn(6, 9, |_, _| rng.uniform_in(-1.0, 1.0) as f32);
+    assert_eq!(v1.output_batch(&x), v2.output_batch(&x));
+}
+
+/// The acceptance path: the v1 fixture (a file on disk, exactly as a
+/// user's archived checkpoint would be) loads into the serving registry
+/// and answers inference through the micro-batcher.
+#[test]
+fn v1_fixture_loads_and_serves() {
+    use neural_rs::metrics::ServeMetrics;
+    use neural_rs::serve::{BatchPolicy, MicroBatcher, ModelRegistry};
+    use std::sync::Arc;
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/v1_dense_6_5_4.txt");
+    let registry = Arc::new(ModelRegistry::new());
+    registry.load_file("legacy", &path).unwrap();
+    let net = Network::<f32>::load(&path).unwrap();
+
+    let batcher = MicroBatcher::start(
+        Arc::clone(&registry),
+        "legacy",
+        BatchPolicy::default(),
+        Arc::new(ServeMetrics::new()),
+    )
+    .unwrap();
+    assert_eq!(batcher.input_size(), 6);
+    assert_eq!(batcher.output_size(), 4);
+    let handle = batcher.client();
+    let input = [0.25f32, -0.5, 0.125, 0.75, -0.25, 0.0];
+    let mut out = [0.0f32; 4];
+    batcher.infer(&handle, &input, &mut out).unwrap();
+    let expect = net.output(&input);
+    assert!(
+        neural_rs::tensor::vecops::max_abs_diff(&out, &expect) < 1e-6,
+        "served output {out:?} != local {expect:?}"
+    );
 }
 
 /// The same contract through real files — the path the serving registry

@@ -107,6 +107,92 @@ engine = "native"
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+/// The layer-graph config form: a Dense→Dropout→Dense→Softmax pipeline
+/// declared via [[model.layers]] trains, saves a v2 checkpoint, and
+/// evals through the same binary.
+#[test]
+fn train_with_model_layers_config() {
+    let dir = tmpdir("layers");
+    let cfg = dir.join("layers.toml");
+    let model = dir.join("net.txt");
+    std::fs::write(
+        &cfg,
+        r#"
+name = "layer-graph"
+[model]
+input = 784
+[[model.layers]]
+type = "dense"
+units = 16
+activation = "sigmoid"
+[[model.layers]]
+type = "dropout"
+rate = 0.1
+[[model.layers]]
+type = "dense"
+units = 10
+[[model.layers]]
+type = "softmax"
+[training]
+eta = 0.5
+epochs = 2
+batch_size = 100
+[data]
+train_n = 600
+test_n = 150
+[runtime]
+engine = "native"
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "train", "--config", cfg.to_str().unwrap(), "--data-dir", "/nonexistent",
+            "--save", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("dense, dropout, dense, softmax"), "{text}");
+    assert!(text.contains("Epoch  2 done"), "{text}");
+    let saved = std::fs::read_to_string(&model).unwrap();
+    assert!(saved.starts_with("neural-rs network v2"), "{saved}");
+    assert!(saved.contains("layer 3 softmax"), "{saved}");
+
+    let out = bin()
+        .args([
+            "eval", "--load", model.to_str().unwrap(), "--test-n", "150",
+            "--data-dir", "/nonexistent",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// Bad layer pipelines die at config-parse time with actionable errors.
+#[test]
+fn rejects_invalid_model_layers_config() {
+    let dir = tmpdir("badlayers");
+    let cfg = dir.join("bad.toml");
+    std::fs::write(
+        &cfg,
+        "[model]\ninput = 784\n[[model.layers]]\ntype = \"dense\"\nunits = 16\n\
+         [[model.layers]]\ntype = \"dropout\"\nrate = 1.5\n\
+         [[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+    )
+    .unwrap();
+    let out = bin()
+        .args(["train", "--config", cfg.to_str().unwrap(), "--data-dir", "/nonexistent"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("outside [0, 1)"), "{err}");
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
 #[test]
 fn gen_data_writes_idx_files() {
     let dir = tmpdir("gendata");

@@ -111,7 +111,7 @@ fn grads_agree<T: Scalar>(
     seed: u64,
     tol: f64,
 ) -> Result<(), String> {
-    let mut net = Network::<T>::new(dims, act, seed);
+    let net = Network::<T>::new(dims, act, seed);
     let mut rng = Rng::new(seed ^ 0xABCD_1234);
     let x: Matrix<T> = rand_matrix(dims[0], batch, &mut rng);
     let y: Matrix<T> =

@@ -4,7 +4,9 @@
 use neural_rs::collectives::{Communicator, LocalComm, ReduceAlgo, Team};
 use neural_rs::coordinator::{BatchStrategy, Trainer, TrainerOptions};
 use neural_rs::data::{label_digits, shard_bounds, synthesize, Dataset};
-use neural_rs::nn::{Activation, Gradients, Network};
+use neural_rs::nn::{
+    cross_entropy_cost, Activation, Gradients, LayerSpec, Mode, Network, Workspace,
+};
 use neural_rs::tensor::{vecops, Matrix, Rng};
 use neural_rs::testkit::{check, ensure};
 
@@ -233,6 +235,7 @@ fn prop_parallel_training_matches_serial() {
             let opts = TrainerOptions {
                 dims: dims.clone(),
                 activation: Activation::Sigmoid,
+                layers: vec![],
                 eta: 2.0,
                 batch_size: batch,
                 epochs: 1,
@@ -280,6 +283,113 @@ fn prop_parallel_training_matches_serial() {
             Ok(())
         },
     );
+}
+
+fn dropout_stack() -> Vec<LayerSpec> {
+    vec![
+        LayerSpec::Dense { units: 5, activation: Activation::Tanh },
+        LayerSpec::Dropout { rate: 0.3 },
+        LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+        LayerSpec::Softmax,
+    ]
+}
+
+/// Dropout determinism: the mask stream is seeded, so identically-built
+/// networks produce identical gradients and identical trained parameters.
+#[test]
+fn dropout_same_seed_training_is_deterministic() {
+    let mut rng = Rng::new(77);
+    let x = Matrix::from_fn(4, 12, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Matrix::from_fn(3, 12, |i, j| if j % 3 == i { 1.0 } else { 0.0 });
+
+    let run = || {
+        let mut net: Network<f64> = Network::from_specs(4, &dropout_stack(), 21);
+        for _ in 0..5 {
+            net.train_batch(&x, &y, 0.5);
+        }
+        net.params_to_flat()
+    };
+    assert_eq!(run(), run(), "same seed + same batches must give identical parameters");
+
+    // And a single gradient is reproducible call to call (fresh
+    // workspaces restart the seeded mask stream).
+    let net: Network<f64> = Network::from_specs(4, &dropout_stack(), 21);
+    let g1 = net.grad_batch(&x, &y);
+    let g2 = net.grad_batch(&x, &y);
+    assert_eq!(g1, g2);
+}
+
+/// Eval-mode forward ignores dropout entirely: the dropout pipeline's
+/// eval output equals the dropout-free pipeline's (construction draws
+/// identical dense parameters), while train-mode output differs.
+#[test]
+fn dropout_eval_is_identity_train_is_not() {
+    let with: Network<f64> = Network::from_specs(4, &dropout_stack(), 9);
+    let without_specs: Vec<LayerSpec> =
+        dropout_stack().into_iter().filter(|s| !matches!(s, LayerSpec::Dropout { .. })).collect();
+    let without: Network<f64> = Network::from_specs(4, &without_specs, 9);
+
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_fn(4, 9, |_, _| rng.uniform_in(-1.0, 1.0));
+    assert_eq!(
+        with.output_batch(&x),
+        without.output_batch(&x),
+        "eval-mode dropout must be the identity"
+    );
+
+    let mut ws = Workspace::for_net(&with);
+    let eval = with.forward_with(&x, &mut ws, Mode::Eval).clone();
+    let train = with.forward_with(&x, &mut ws, Mode::Train).clone();
+    assert!(
+        eval.max_abs_diff(&train) > 1e-9,
+        "train-mode forward must apply the masks (p=0.3 on 45 values)"
+    );
+}
+
+/// Finite-difference gradient check through the full heterogeneous stack
+/// (Dense→Dropout→Dense→Softmax with cross-entropy): the masks are a
+/// deterministic function of the seeded workspace, so the train-mode
+/// loss is differentiable and must match analytic backprop.
+#[test]
+fn dropout_stack_gradient_matches_finite_differences() {
+    let mut net: Network<f64> = Network::from_specs(4, &dropout_stack(), 33);
+    let mut rng = Rng::new(14);
+    let x = Matrix::from_fn(4, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Matrix::from_fn(3, 2, |i, j| if (i + j) % 3 == 0 { 1.0 } else { 0.0 });
+
+    // Summed train-mode cross-entropy through a fresh workspace — the
+    // same mask stream grad_batch's fresh workspace draws.
+    let loss = |net: &Network<f64>, x: &Matrix<f64>, y: &Matrix<f64>| -> f64 {
+        let mut ws = Workspace::for_net(net);
+        let out = net.forward_with(x, &mut ws, Mode::Train);
+        let mut total = 0.0;
+        for j in 0..x.cols() {
+            total += cross_entropy_cost(out.col(j), y.col(j));
+        }
+        total
+    };
+
+    let g = net.grad_batch(&x, &y);
+    let gflat = g.to_flat();
+    let mut flat = net.params_to_flat();
+    let h = 1e-6;
+    for i in 0..flat.len() {
+        let orig = flat[i];
+        flat[i] = orig + h;
+        net.params_unflatten_from(&flat);
+        let cp = loss(&net, &x, &y);
+        flat[i] = orig - h;
+        net.params_unflatten_from(&flat);
+        let cm = loss(&net, &x, &y);
+        flat[i] = orig;
+        net.params_unflatten_from(&flat);
+        let fd = (cp - cm) / (2.0 * h);
+        assert!(
+            (fd - gflat[i]).abs() < 1e-5,
+            "param {i}: fd={fd} analytic={}",
+            gflat[i]
+        );
+    }
 }
 
 /// One-hot labels: a single 1 per column in the right row.

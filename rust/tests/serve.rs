@@ -261,6 +261,30 @@ fn http_server_end_to_end() {
     assert!(body.contains("\"status\":\"ok\""), "{body}");
     assert!(body.contains("default"), "{body}");
 
+    // Model listing: registry entries with sizes and layer summaries.
+    let (status, body) = http(addr, "GET", "/v1/models", None);
+    assert_eq!(status, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    let models = doc.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(models.len(), 1);
+    let m = &models[0];
+    assert_eq!(m.get("name").and_then(Json::as_str), Some("default"));
+    assert_eq!(m.get("input").and_then(Json::as_usize), Some(6));
+    assert_eq!(m.get("output").and_then(Json::as_usize), Some(3));
+    assert_eq!(
+        m.get("params").and_then(Json::as_usize),
+        Some(net.param_count()),
+        "{body}"
+    );
+    let layers: Vec<&str> = m
+        .get("layers")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(layers, vec!["dense(6->8, sigmoid)", "dense(8->3, sigmoid)"], "{body}");
+
     // Prediction: scores must match the model, argmax must match scores.
     let input = [0.9f32, 0.1, 0.4, 0.0, 0.6, 0.2];
     let req = format!(

@@ -11,7 +11,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use neural_rs::data::{label_digits, synthesize};
-use neural_rs::nn::{Activation, Gradients, Network, Workspace};
+use neural_rs::nn::{Activation, Gradients, LayerSpec, Network, Workspace};
 
 struct CountingAlloc;
 
@@ -50,8 +50,22 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 #[test]
 fn warmed_grad_batch_performs_zero_allocations() {
-    // The paper's Table 1 configuration: 784-30-10 sigmoid, batch 32.
+    // The paper's Table 1 configuration: 784-30-10 sigmoid, batch 32 —
+    // plus the layer-graph stack (dense→dropout→dense→softmax), which
+    // must honor the same contract: per-op scratch (activations, caches,
+    // dropout masks) is allocated once at workspace construction, never
+    // in the hot loop.
     let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
+    let layered = Network::<f32>::from_specs(
+        784,
+        &[
+            LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
+            LayerSpec::Dropout { rate: 0.2 },
+            LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ],
+        1,
+    );
     let data = synthesize::<f32>(32, 5);
     let x = data.images;
     let y = label_digits::<f32>(&data.labels);
@@ -61,12 +75,16 @@ fn warmed_grad_batch_performs_zero_allocations() {
 
     let mut ws = Workspace::new(net.dims());
     let mut grads = Gradients::zeros(net.dims());
+    let mut ws_layered = Workspace::for_net(&layered);
+    let mut grads_layered = Gradients::zeros(layered.dims());
 
-    // Warm-up: sizes every Z/A/Δ buffer and the GEMM packing scratch at
-    // the largest batch this loop will see.
+    // Warm-up: sizes every A/Z/Δ buffer (and the dropout mask cache) and
+    // the GEMM packing scratch at the largest batch this loop will see.
     for _ in 0..2 {
         grads.zero_out();
         net.grad_batch_into(&x, &y, &mut ws, &mut grads);
+        grads_layered.zero_out();
+        layered.grad_batch_into(&x, &y, &mut ws_layered, &mut grads_layered);
     }
 
     ALLOCS.store(0, Ordering::SeqCst);
@@ -77,6 +95,9 @@ fn warmed_grad_batch_performs_zero_allocations() {
         grads.zero_out();
         net.grad_batch_into(&x, &y, &mut ws, &mut grads);
         net.grad_batch_into(&x_tail, &y_tail, &mut ws, &mut grads);
+        grads_layered.zero_out();
+        layered.grad_batch_into(&x, &y, &mut ws_layered, &mut grads_layered);
+        layered.grad_batch_into(&x_tail, &y_tail, &mut ws_layered, &mut grads_layered);
     }
     COUNTING.store(false, Ordering::SeqCst);
     let count = ALLOCS.load(Ordering::SeqCst);
