@@ -47,6 +47,7 @@ fn main() {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: vec![],
+            image: None,
             eta: 3.0,
             batch_size: 1000,
             epochs,

@@ -6,36 +6,62 @@
 //! asserts the shape.
 //!
 //! BENCH_FULL=1 runs the paper-scale corpus (50k/10k, PJRT engine).
-//! FIG3_LAYERS=dropout swaps in the layer-graph MNIST config
-//! (Dense→Dropout→Dense→Softmax with cross-entropy) so layer-graph
-//! regressions show up in the accuracy trajectory, not just unit tests.
+//! FIG3_LAYERS selects the model:
+//!   - unset: the paper's all-sigmoid quadratic-cost dense stack;
+//!   - `dropout`: Dense→Dropout→Dense→Softmax with cross-entropy;
+//!   - `conv`: Conv2d→MaxPool2d→Flatten→Dense→Softmax — the image
+//!     pipeline through the full trainer, so conv/pool/flatten
+//!     regressions show up in the accuracy trajectory, not just unit
+//!     tests.
 
 use neural_rs::collectives::ReduceAlgo;
 use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
 use neural_rs::data::load_or_synthesize;
-use neural_rs::nn::{Activation, LayerSpec};
+use neural_rs::nn::{Activation, ImageDims, LayerSpec};
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
-    let layered = std::env::var("FIG3_LAYERS").map(|v| v == "dropout").unwrap_or(false);
-    // The paper's all-sigmoid quadratic-cost stack, or the layer-graph
+    let variant = std::env::var("FIG3_LAYERS").unwrap_or_default();
+    // The paper's all-sigmoid quadratic-cost stack, or a layer-graph
     // variant. Cross-entropy gradients are undamped at the head, so the
-    // layered config runs a smaller eta.
-    let (layers, eta) = if layered {
-        (
+    // layered configs run a smaller eta.
+    let (layers, image, eta, dims, label) = match variant.as_str() {
+        "dropout" => (
             vec![
                 LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
                 LayerSpec::Dropout { rate: 0.1 },
                 LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
                 LayerSpec::Softmax,
             ],
+            None,
             0.5,
-        )
-    } else {
-        (vec![], 3.0)
+            vec![784, 30, 10],
+            "dense-dropout-dense-softmax",
+        ),
+        "conv" => (
+            // conv(8, k3, s2): 8x13x13; pool(k2, s2): 8x6x6 = 288.
+            vec![
+                LayerSpec::Conv2d {
+                    filters: 8,
+                    kernel: 3,
+                    stride: 2,
+                    activation: Activation::Relu,
+                },
+                LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+                LayerSpec::Softmax,
+            ],
+            Some(ImageDims::new(1, 28, 28)),
+            0.5,
+            vec![784, 8 * 13 * 13, 10],
+            "conv-pool-flatten-dense-softmax",
+        ),
+        _ => (vec![], None, 3.0, vec![784, 30, 10], "784-30-10 sigmoid"),
     };
-    // The AOT artifacts encode a plain dense stack; the layered config
-    // always runs on the native engine.
+    let layered = !layers.is_empty();
+    // The AOT artifacts encode a plain dense stack; the layered configs
+    // always run on the native engine.
     let (train_n, test_n, engine) = if full && !layered && neural_rs::runtime::pjrt_available() {
         (50_000, 10_000, EngineKind::Pjrt)
     } else {
@@ -50,16 +76,17 @@ fn main() {
         "# Fig 3: accuracy vs epochs ({} samples, engine {}, model {})",
         train.len(),
         engine.name(),
-        if layered { "dense-dropout-dense-softmax" } else { "784-30-10 sigmoid" }
+        label
     );
 
     let spec = ParallelSpec {
         images: 1,
         algo: ReduceAlgo::Flat,
         opts: TrainerOptions {
-            dims: vec![784, 30, 10],
+            dims,
             activation: Activation::Sigmoid,
             layers,
+            image,
             eta,
             batch_size: 1000,
             epochs,

@@ -47,6 +47,7 @@ fn main() {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
                 layers: vec![],
+                image: None,
                 eta: 3.0,
                 batch_size: 1200,
                 epochs,
@@ -90,6 +91,7 @@ fn main() {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
                 layers: vec![],
+                image: None,
                 eta: 3.0,
                 batch_size: 1200,
                 epochs,

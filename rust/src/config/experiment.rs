@@ -4,7 +4,7 @@
 use super::toml::{self, TomlError, TomlValue};
 use crate::collectives::ReduceAlgo;
 use crate::coordinator::{BatchStrategy, EngineKind, TrainerOptions};
-use crate::nn::{validate_specs, Activation, LayerSpec, OptimizerKind};
+use crate::nn::{validate_specs_image, Activation, ImageDims, LayerSpec, OptimizerKind};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -88,6 +88,9 @@ pub struct ExperimentConfig {
     // one op; the old dims+activation pair is accepted and desugars to
     // an all-dense pipeline (empty `layers` here).
     pub layers: Vec<LayerSpec>,
+    /// `[model] image = [c, h, w]` — input geometry for pipelines with
+    /// conv2d/maxpool2d layers. `None` for flat (dense-chain) inputs.
+    pub image: Option<ImageDims>,
     // [training]
     pub eta: f64,
     pub batch_size: usize,
@@ -123,6 +126,7 @@ impl Default for ExperimentConfig {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: Vec::new(),
+            image: None,
             eta: 3.0,
             batch_size: 1000,
             epochs: 30,
@@ -276,6 +280,25 @@ impl ExperimentConfig {
         // actionable message, not as a panic deep in construction.
         let has_layer_tables = doc.contains_key("model.layers.0");
         if doc.contains_key("model") || has_layer_tables {
+            // Optional image geometry: `image = [c, h, w]`. Conv/pool
+            // layers require it; with it, `input` may be omitted (it is
+            // then derived as c*h*w).
+            let image = match doc.get("model").and_then(|t| t.get("image")) {
+                None => None,
+                Some(v) => {
+                    let dims = v
+                        .as_usize_array()
+                        .filter(|d| d.len() == 3 && d.iter().all(|&x| x > 0))
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(
+                                "[model] image must be three positive integers \
+                                 [channels, height, width], e.g. image = [1, 28, 28]"
+                                    .into(),
+                            )
+                        })?;
+                    Some(ImageDims::new(dims[0], dims[1], dims[2]))
+                }
+            };
             let input = match doc.get("model").and_then(|t| t.get("input")) {
                 Some(v) => v
                     .as_int()
@@ -288,12 +311,15 @@ impl ExperimentConfig {
                                 .into(),
                         )
                     })?,
-                None => {
-                    return bad(
-                        "[model] needs 'input = N' (the sample size) before its \
-                         [[model.layers]] entries",
-                    )
-                }
+                None => match image {
+                    Some(img) => img.len(),
+                    None => {
+                        return bad(
+                            "[model] needs 'input = N' (the sample size) or \
+                             'image = [c, h, w]' before its [[model.layers]] entries",
+                        )
+                    }
+                },
             };
             if !has_layer_tables {
                 return bad(
@@ -333,25 +359,57 @@ impl ExperimentConfig {
                         specs.push(LayerSpec::Dropout { rate });
                     }
                     "softmax" => specs.push(LayerSpec::Softmax),
+                    "conv2d" => {
+                        let filters = get_usize(lt, "filters", 0)?;
+                        let kernel = get_usize(lt, "kernel", 0)?;
+                        let stride = get_usize(lt, "stride", 1)?;
+                        let act = get_str(lt, "activation", cfg.activation.name())?;
+                        let activation = Activation::parse(act).ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "[[model.layers]] #{i}: unknown activation '{act}'"
+                            ))
+                        })?;
+                        if filters == 0 || kernel == 0 {
+                            return bad(format!(
+                                "[[model.layers]] #{i}: conv2d needs 'filters = F' and \
+                                 'kernel = K' (positive; 'stride' defaults to 1)"
+                            ));
+                        }
+                        specs.push(LayerSpec::Conv2d { filters, kernel, stride, activation });
+                    }
+                    "maxpool2d" => {
+                        let kernel = get_usize(lt, "kernel", 0)?;
+                        if kernel == 0 {
+                            return bad(format!(
+                                "[[model.layers]] #{i}: maxpool2d needs 'kernel = K' \
+                                 (positive; 'stride' defaults to the kernel)"
+                            ));
+                        }
+                        let stride = get_usize(lt, "stride", kernel)?;
+                        specs.push(LayerSpec::MaxPool2d { kernel, stride });
+                    }
+                    "flatten" => specs.push(LayerSpec::Flatten),
                     "" => {
                         return bad(format!(
                             "[[model.layers]] #{i}: missing 'type' \
-                             (dense | dropout | softmax)"
+                             (dense | dropout | softmax | conv2d | maxpool2d | flatten)"
                         ))
                     }
                     other => {
                         return bad(format!(
                             "[[model.layers]] #{i}: unknown layer type '{other}' \
-                             (expected dense | dropout | softmax)"
+                             (expected dense | dropout | softmax | conv2d | maxpool2d | \
+                             flatten)"
                         ))
                     }
                 }
                 i += 1;
             }
-            let chain = validate_specs(input, &specs)
+            let chain = validate_specs_image(input, image, &specs)
                 .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
             cfg.dims = chain;
             cfg.layers = specs;
+            cfg.image = image;
             // Keep the display/default activation in sync with the first
             // dense layer.
             if let Some(LayerSpec::Dense { activation, .. }) =
@@ -451,7 +509,7 @@ impl ExperimentConfig {
         if !self.layers.is_empty() {
             // A CLI --dims override cannot coexist with a [model] layer
             // pipeline: the dims are derived from the pipeline.
-            let chain = validate_specs(self.dims[0], &self.layers)
+            let chain = validate_specs_image(self.dims[0], self.image, &self.layers)
                 .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
             if chain != self.dims {
                 return bad(
@@ -487,6 +545,7 @@ impl ExperimentConfig {
             dims: self.dims.clone(),
             activation: self.activation,
             layers: self.layers.clone(),
+            image: self.image,
             eta: self.eta,
             batch_size: self.batch_size,
             epochs: self.epochs,
@@ -631,6 +690,62 @@ mod tests {
         assert_eq!(opts.dims, c.dims);
     }
 
+    /// The conv acceptance config: [model] image + conv2d → maxpool2d →
+    /// flatten → dense → softmax parses, derives the parameter chain, and
+    /// threads the geometry into the trainer options.
+    #[test]
+    fn conv_model_layers_parse_and_derive_geometry() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [model]
+            image = [1, 28, 28]
+            [[model.layers]]
+            type = "conv2d"
+            filters = 8
+            kernel = 3
+            activation = "relu"
+            [[model.layers]]
+            type = "maxpool2d"
+            kernel = 2
+            [[model.layers]]
+            type = "flatten"
+            [[model.layers]]
+            type = "dense"
+            units = 10
+            [[model.layers]]
+            type = "softmax"
+            "#,
+        )
+        .unwrap();
+        // conv (stride defaults to 1): 8x26x26; pool (stride defaults to
+        // kernel): 8x13x13; flatten: 1352.
+        assert_eq!(c.dims, vec![784, 8 * 26 * 26, 10]);
+        assert_eq!(c.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(c.layers.len(), 5);
+        assert_eq!(
+            c.layers[0],
+            LayerSpec::Conv2d { filters: 8, kernel: 3, stride: 1, activation: Activation::Relu }
+        );
+        assert_eq!(c.layers[1], LayerSpec::MaxPool2d { kernel: 2, stride: 2 });
+        assert_eq!(c.layers[2], LayerSpec::Flatten);
+        let opts = c.trainer_options();
+        assert_eq!(opts.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(opts.dims[0], 784, "input derived from the image geometry");
+    }
+
+    /// The committed example config stays parseable (and is what the
+    /// README/CLI help point users at).
+    #[test]
+    fn committed_conv_config_parses() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/mnist_conv.toml");
+        let c = ExperimentConfig::from_file(path).unwrap();
+        assert_eq!(c.name, "mnist-conv");
+        assert_eq!(c.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(c.dims, vec![784, 8 * 13 * 13, 10]);
+        assert_eq!(c.layers.len(), 5);
+        assert_eq!(c.eta, 0.5);
+    }
+
     #[test]
     fn model_layers_rejected_with_actionable_messages() {
         let cases: &[(&str, &str)] = &[
@@ -668,10 +783,46 @@ mod tests {
                 "final layer",
             ),
             (
-                "[model]\ninput = 4\n[[model.layers]]\ntype = \"conv2d\"\n",
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"avgpool\"\n",
                 "unknown layer type",
             ),
             ("[model]\ninput = 4\n[[model.layers]]\nunits = 3\n", "missing 'type'"),
+            // conv2d/maxpool2d geometry failures surface at parse time.
+            (
+                "[model]\ninput = 4\n[[model.layers]]\ntype = \"conv2d\"\n",
+                "conv2d needs 'filters",
+            ),
+            (
+                "[model]\nimage = [1, 28]\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "three positive integers",
+            ),
+            (
+                "[model]\ninput = 100\nimage = [1, 28, 28]\n\
+                 [[model.layers]]\ntype = \"flatten\"\n[[model.layers]]\ntype = \"dense\"\n\
+                 units = 3\n",
+                "elements but input is 100",
+            ),
+            (
+                "[model]\nimage = [1, 28, 28]\n[[model.layers]]\ntype = \"conv2d\"\n\
+                 filters = 4\nkernel = 29\n[[model.layers]]\ntype = \"flatten\"\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "exceeds the 28x28",
+            ),
+            (
+                "[model]\ninput = 784\n[[model.layers]]\ntype = \"conv2d\"\nfilters = 4\n\
+                 kernel = 3\n[[model.layers]]\ntype = \"flatten\"\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "needs image geometry",
+            ),
+            (
+                "[model]\nimage = [1, 28, 28]\n[[model.layers]]\ntype = \"conv2d\"\n\
+                 filters = 4\nkernel = 3\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+                "insert a flatten",
+            ),
+            (
+                "[model]\nimage = [1, 28, 28]\n[[model.layers]]\ntype = \"maxpool2d\"\n",
+                "maxpool2d needs 'kernel",
+            ),
         ];
         for (text, needle) in cases {
             let err = ExperimentConfig::from_toml(text).unwrap_err();

@@ -2,7 +2,9 @@
 
 use crate::collectives::Communicator;
 use crate::data::{label_digits, shard_bounds, Dataset};
-use crate::nn::{Activation, Gradients, LayerSpec, Network, Optimizer, OptimizerKind, Workspace};
+use crate::nn::{
+    Activation, Gradients, ImageDims, LayerSpec, Network, Optimizer, OptimizerKind, Workspace,
+};
 use crate::runtime::{CompiledNet, PjrtScalar};
 use crate::tensor::{Matrix, Rng};
 #[allow(unused_imports)]
@@ -66,6 +68,9 @@ pub struct TrainerOptions {
     /// Layer-graph pipeline (the `[[model.layers]]` form). Empty = the
     /// classic dims+activation dense stack.
     pub layers: Vec<LayerSpec>,
+    /// `c×h×w` input geometry for pipelines with conv2d/maxpool2d layers
+    /// (the `[model] image` key). `None` for flat (dense-chain) inputs.
+    pub image: Option<ImageDims>,
     /// Learning rate (applied as eta/global_batch to summed tendencies).
     pub eta: f64,
     /// Global mini-batch size, split across images.
@@ -86,10 +91,10 @@ pub struct TrainerOptions {
     /// image's shard columns are sub-sharded across this many scoped
     /// threads (a second scaling axis the paper never had, on top of the
     /// per-image data parallelism). 1 = the zero-allocation serial
-    /// workspace path. With a dropout pipeline prefer 1: the threaded
-    /// path's per-call workspaces replay the same mask sequence every
-    /// batch (see [`crate::nn::Network::grad_batch_threaded`]), while
-    /// the serial path's persistent workspace draws fresh masks.
+    /// workspace path. Dropout pipelines draw fresh masks on both paths:
+    /// the trainer threads its step counter into the shard workspaces
+    /// (see [`crate::nn::Network::grad_batch_threaded_at`]), so masks
+    /// advance from batch to batch instead of replaying.
     pub intra_threads: usize,
 }
 
@@ -99,6 +104,7 @@ impl Default for TrainerOptions {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: Vec::new(),
+            image: None,
             eta: 3.0,
             batch_size: 1000,
             epochs: 30,
@@ -145,6 +151,9 @@ pub struct Trainer<'c, T, C: Communicator> {
     /// Shuffled-epoch state.
     order: Vec<usize>,
     cursor: usize,
+    /// Global training-step counter, threaded into the intra-image shard
+    /// workspaces so threaded dropout draws fresh masks every batch.
+    step: u64,
 }
 
 impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
@@ -161,7 +170,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         let mut net = if opts.layers.is_empty() {
             Network::<T>::new(&opts.dims, opts.activation, seed)
         } else {
-            Network::<T>::from_specs(opts.dims[0], &opts.layers, seed)
+            Network::<T>::from_specs_image(opts.dims[0], opts.image, &opts.layers, seed)
         };
 
         // sync(1): broadcast image 1's parameters to all replicas.
@@ -169,12 +178,13 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         comm.co_broadcast(&mut flat, 1);
         net.params_unflatten_from(&flat);
 
-        // Gradients/optimizer state are keyed by the dense chain; the
-        // workspace is negotiated per layer op.
-        let grads = Gradients::zeros(net.dims());
+        // Gradients/optimizer state are keyed by the network's parameter
+        // blocks (one per dense/conv op); the workspace is negotiated per
+        // layer op.
+        let grads = net.zero_grads();
         let workspace = Workspace::for_net(&net);
         let batch_rng = Rng::new(opts.batch_seed);
-        let optimizer = Optimizer::new(opts.optimizer, net.dims());
+        let optimizer = Optimizer::for_net(opts.optimizer, &net);
         Self {
             comm,
             net,
@@ -187,6 +197,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             workspace,
             order: Vec::new(),
             cursor: 0,
+            step: 0,
         }
     }
 
@@ -242,8 +253,15 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             }
             None if self.opts.intra_threads > 1 => {
                 // Intra-image column sharding: a second scaling axis on
-                // top of the per-image team.
-                let g = self.net.grad_batch_threaded(&xs, &ys, self.opts.intra_threads);
+                // top of the per-image team. The step counter advances
+                // the shard workspaces' dropout mask streams, so masks
+                // stay fresh across batches (the ROADMAP replay bug).
+                let g = self.net.grad_batch_threaded_at(
+                    &xs,
+                    &ys,
+                    self.opts.intra_threads,
+                    self.step,
+                );
                 self.grads.add_assign(&g);
             }
             None => {
@@ -261,6 +279,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         let mut stats = EpochStats::default();
         let sw = crate::metrics::Stopwatch::start();
         stats.samples = self.shard_grads(x, y);
+        self.step = self.step.wrapping_add(1);
         stats.grad_s = sw.elapsed_s();
 
         // Collective sum of the tendencies (paper step 3).
@@ -366,6 +385,7 @@ mod tests {
             dims: dims.to_vec(),
             activation: Activation::Sigmoid,
             layers: Vec::new(),
+            image: None,
             eta: 3.0,
             batch_size: bs,
             epochs: 1,
@@ -618,6 +638,58 @@ mod tests {
         });
         assert_eq!(accs[0], accs[1]);
         assert!(accs[0] > 0.45, "layered pipeline should learn digits (acc={})", accs[0]);
+    }
+
+    /// The conv acceptance path at trainer level: a
+    /// conv→pool→flatten→dense→softmax pipeline declared via
+    /// `TrainerOptions::{layers, image}` trains on the synthetic digits
+    /// and stays replica-consistent under data parallelism.
+    #[test]
+    fn conv_pipeline_trains_and_stays_replica_consistent() {
+        let train = synthesize::<f32>(1000, 71);
+        let test = synthesize::<f32>(200, 72);
+        let layers = vec![
+            LayerSpec::Conv2d { filters: 4, kernel: 4, stride: 3, activation: Activation::Relu },
+            LayerSpec::MaxPool2d { kernel: 3, stride: 3 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        // conv: (28-4)/3+1 = 9 -> 4x9x9 = 324; pool: 3 -> 4x3x3 = 36.
+        let mut o = opts(&[784, 324, 10], 100);
+        o.layers = layers;
+        o.image = Some(ImageDims::new(1, 28, 28));
+        o.eta = 1.0; // cross-entropy gradients are undamped at the head
+        let comms = Team::new(2);
+        let (train_ref, test_ref) = (&train, &test);
+        let o_ref = &o;
+        let results: Vec<(f64, f64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut t: Trainer<f32, LocalComm> =
+                            Trainer::new(c, o_ref.clone(), None);
+                        assert_eq!(t.net.dims(), &[784, 324, 10]);
+                        assert_eq!(t.net.conv_count(), 1);
+                        assert!(t.net.has_softmax_head());
+                        let initial = t.accuracy(test_ref);
+                        for _ in 0..12 {
+                            t.train_epoch(train_ref);
+                        }
+                        assert_eq!(t.replica_divergence(), 0.0);
+                        (initial, t.accuracy(test_ref))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], results[1]);
+        let (initial, after) = results[0];
+        assert!(
+            after > initial + 0.2 && after > 0.35,
+            "conv pipeline should learn digits (acc {initial} -> {after})"
+        );
     }
 
     #[test]

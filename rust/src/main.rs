@@ -84,16 +84,19 @@ SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
 MODEL CONFIG (TOML)
   The flat form ([network] dims + activation) builds a homogeneous dense
   stack. The layer-graph form declares one [[model.layers]] table per
-  layer (type = dense | dropout | softmax):
+  layer (type = dense | dropout | softmax | conv2d | maxpool2d | flatten).
+  Conv/pool layers need [model] image = [c, h, w] (input derives as c*h*w):
     [model]
-    input = 784
+    image = [1, 28, 28]
     [[model.layers]]
-    type = \"dense\"
-    units = 30
-    activation = \"sigmoid\"
+    type = \"conv2d\"
+    filters = 8
+    kernel = 3        # stride defaults to 1, activation to [network]'s
     [[model.layers]]
-    type = \"dropout\"
-    rate = 0.2
+    type = \"maxpool2d\"
+    kernel = 2        # stride defaults to the kernel
+    [[model.layers]]
+    type = \"flatten\"
     [[model.layers]]
     type = \"dense\"
     units = 10

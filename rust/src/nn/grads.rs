@@ -9,18 +9,25 @@
 
 use crate::tensor::{Matrix, Scalar};
 
-/// Per-layer weight and bias tendencies for a network of given dims.
+/// Per-parameter-block weight and bias tendencies. One block per
+/// parameter-owning op (dense/conv), in pipeline order; for a plain
+/// dense stack block `l` is the paper's layer `l`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Gradients<T = f32> {
-    /// dw[l] has shape dims[l] × dims[l+1] (outgoing weights of layer l).
+    /// dw[k] matches parameter op k's weight matrix: `dims[l] × dims[l+1]`
+    /// for dense, `[kernel²·in_c, filters]` for conv2d.
     pub dw: Vec<Matrix<T>>,
-    /// db[l] has length dims[l]. db[0] is unused (input layer has no bias
-    /// update) but kept for index parity with the paper's Listing 7.
+    /// db[k+1] matches parameter op k's bias vector (boundary size for
+    /// dense, filter count for conv). db[0] is the input layer's phantom
+    /// bias — unused, but kept for index parity with the paper's
+    /// Listing 7 (and the v1 flat layout).
     pub db: Vec<Vec<T>>,
 }
 
 impl<T: Scalar> Gradients<T> {
-    /// Zero gradients for a network with the given layer sizes.
+    /// Zero gradients for a *plain dense chain* with the given layer
+    /// sizes. Networks with conv blocks build theirs via
+    /// `Network::zero_grads`, which reads each op's actual shapes.
     pub fn zeros(dims: &[usize]) -> Self {
         assert!(dims.len() >= 2, "network needs at least input and output layers");
         let mut dw = Vec::with_capacity(dims.len() - 1);

@@ -8,13 +8,23 @@
 //! neural-rs network v2
 //! dtype f32
 //! input 784
-//! layer 0 dense 30 sigmoid
-//! layer 1 dropout 0.2 12345          # rate, mask seed
-//! layer 2 dense 10 sigmoid
-//! layer 3 softmax
+//! image 1 28 28                      # only for conv/pool pipelines (c h w)
+//! layer 0 conv2d 8 3 1 relu          # filters, kernel, stride, activation
+//! layer 1 maxpool2d 2 2              # kernel, stride
+//! layer 2 flatten
+//! layer 3 dense 10 sigmoid
+//! layer 4 dropout 0.2 12345          # rate, mask seed
+//! layer 5 softmax
+//! conv 0 biases <values...>          # one line per conv op (per-filter)
+//! conv 0 weights <rows> <cols> <column-major values...>
 //! dense 0 biases <values...>         # one line per dense op (out-bias)
 //! dense 0 weights <rows> <cols> <column-major values...>
 //! ```
+//!
+//! Conv/pool geometry is *derived*, not stored per layer: the `image`
+//! line plus each layer's kernel/stride resolve every plane shape at
+//! load time through the same planner the TOML config uses, so a file
+//! with inconsistent geometry fails with the planner's message.
 //!
 //! The pre-layer-graph **v1** format (homogeneous dense stack, one
 //! global activation) is still *loaded* — a v1 checkpoint deserializes
@@ -23,7 +33,10 @@
 //! to round-trip exactly.
 
 use super::activation::Activation;
-use super::layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Softmax};
+use super::layers::{
+    plan_specs, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp, LayerSpec, MaxPool2d,
+    Planned, Softmax,
+};
 use super::network::Network;
 use crate::tensor::{Matrix, Scalar};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -70,6 +83,9 @@ enum SpecLine {
     Dense { units: usize, activation: Activation },
     Dropout { rate: f64, seed: u64 },
     Softmax,
+    Conv2d { filters: usize, kernel: usize, stride: usize, activation: Activation },
+    MaxPool2d { kernel: usize, stride: usize },
+    Flatten,
 }
 
 impl SpecLine {
@@ -80,16 +96,28 @@ impl SpecLine {
             }
             Self::Dropout { rate, .. } => LayerSpec::Dropout { rate: *rate },
             Self::Softmax => LayerSpec::Softmax,
+            Self::Conv2d { filters, kernel, stride, activation } => LayerSpec::Conv2d {
+                filters: *filters,
+                kernel: *kernel,
+                stride: *stride,
+                activation: *activation,
+            },
+            Self::MaxPool2d { kernel, stride } => {
+                LayerSpec::MaxPool2d { kernel: *kernel, stride: *stride }
+            }
+            Self::Flatten => LayerSpec::Flatten,
         }
     }
 }
 
 /// Build a zero-parameter network from validated v2 layer lines,
-/// preserving dropout mask seeds. Parameters are filled in afterwards
-/// from the `dense` lines.
+/// preserving dropout mask seeds, with conv/pool geometry resolved by
+/// the same planner the TOML config uses. Parameters are filled in
+/// afterwards from the `dense`/`conv` lines.
 fn build_v2_skeleton<T: Scalar>(
     lineno: usize,
     input: Option<usize>,
+    image: Option<ImageDims>,
     lines: &[SpecLine],
 ) -> Result<Network<T>, IoError> {
     let input = match input {
@@ -97,25 +125,46 @@ fn build_v2_skeleton<T: Scalar>(
         None => return perr(lineno, "an 'input' line must come before parameters"),
     };
     let specs: Vec<LayerSpec> = lines.iter().map(SpecLine::as_spec).collect();
-    if let Err(e) = validate_specs(input, &specs) {
-        return perr(lineno, format!("invalid layer pipeline: {e}"));
-    }
-    let mut cur = input;
+    let planned = match plan_specs(input, image, &specs) {
+        Ok((_, p)) => p,
+        Err(e) => return perr(lineno, format!("invalid layer pipeline: {e}")),
+    };
     let mut ops: Vec<Box<dyn LayerOp<T>>> = Vec::with_capacity(lines.len());
-    for line in lines {
-        match line {
-            SpecLine::Dense { units, activation } => {
+    for (line, p) in lines.iter().zip(&planned) {
+        match (line, p) {
+            (SpecLine::Dense { activation, .. }, Planned::Dense { in_size, units, .. }) => {
                 ops.push(Box::new(Dense::from_parts(
-                    Matrix::zeros(cur, *units),
+                    Matrix::zeros(*in_size, *units),
                     vec![T::ZERO; *units],
                     *activation,
                 )));
-                cur = *units;
             }
-            SpecLine::Dropout { rate, seed } => {
-                ops.push(Box::new(Dropout::new(cur, *rate, *seed)));
+            (SpecLine::Dropout { seed, .. }, Planned::Dropout { size, rate }) => {
+                ops.push(Box::new(Dropout::new(*size, *rate, *seed)));
             }
-            SpecLine::Softmax => ops.push(Box::new(Softmax::new(cur))),
+            (SpecLine::Softmax, Planned::Softmax { size }) => {
+                ops.push(Box::new(Softmax::new(*size)));
+            }
+            (
+                SpecLine::Conv2d { activation, .. },
+                Planned::Conv2d { img, filters, kernel, stride, .. },
+            ) => {
+                ops.push(Box::new(Conv2d::from_parts(
+                    *img,
+                    *kernel,
+                    *stride,
+                    Matrix::zeros(kernel * kernel * img.c, *filters),
+                    vec![T::ZERO; *filters],
+                    *activation,
+                )));
+            }
+            (SpecLine::MaxPool2d { .. }, Planned::MaxPool2d { img, kernel, stride }) => {
+                ops.push(Box::new(MaxPool2d::new(*img, *kernel, *stride)));
+            }
+            (SpecLine::Flatten, Planned::Flatten { img }) => {
+                ops.push(Box::new(Flatten::new(*img)));
+            }
+            _ => return perr(lineno, "layer line / plan mismatch (internal)"),
         }
     }
     match Network::from_ops(ops) {
@@ -130,6 +179,9 @@ impl<T: Scalar> Network<T> {
         writeln!(w, "neural-rs network v2")?;
         writeln!(w, "dtype {}", std::any::type_name::<T>())?;
         writeln!(w, "input {}", self.input_size())?;
+        if let Some(img) = self.input_image() {
+            writeln!(w, "image {} {} {}", img.c, img.h, img.w)?;
+        }
         for (i, op) in self.ops().iter().enumerate() {
             match op.spec() {
                 LayerSpec::Dense { units, activation } => {
@@ -139,7 +191,27 @@ impl<T: Scalar> Network<T> {
                     writeln!(w, "layer {i} dropout {rate:?} {}", op.mask_seed())?;
                 }
                 LayerSpec::Softmax => writeln!(w, "layer {i} softmax")?,
+                LayerSpec::Conv2d { filters, kernel, stride, activation } => {
+                    writeln!(w, "layer {i} conv2d {filters} {kernel} {stride} {activation}")?;
+                }
+                LayerSpec::MaxPool2d { kernel, stride } => {
+                    writeln!(w, "layer {i} maxpool2d {kernel} {stride}")?;
+                }
+                LayerSpec::Flatten => writeln!(w, "layer {i} flatten")?,
             }
+        }
+        for k in 0..self.conv_count() {
+            write!(w, "conv {k} biases")?;
+            for &b in self.conv_bias(k) {
+                write!(w, " {:?}", b)?;
+            }
+            writeln!(w)?;
+            let wm = self.conv_weight(k);
+            write!(w, "conv {k} weights {} {}", wm.rows(), wm.cols())?;
+            for &v in wm.as_slice() {
+                write!(w, " {:?}", v)?;
+            }
+            writeln!(w)?;
         }
         for l in 0..self.dense_count() {
             write!(w, "dense {l} biases")?;
@@ -305,9 +377,10 @@ impl<T: Scalar> Network<T> {
         net.ok_or(IoError::Parse { line: 0, msg: "file contained no network".into() })
     }
 
-    /// v2 loader: tagged layer list, per-dense parameters.
+    /// v2 loader: tagged layer list, per-dense/per-conv parameters.
     fn load_v2(lines: impl Iterator<Item = std::io::Result<String>>) -> Result<Self, IoError> {
         let mut input: Option<usize> = None;
+        let mut image: Option<ImageDims> = None;
         let mut spec_lines: Vec<SpecLine> = Vec::new();
         let mut net: Option<Network<T>> = None;
 
@@ -331,6 +404,20 @@ impl<T: Scalar> Network<T> {
                     Some(n) if n > 0 => input = Some(n),
                     _ => return perr(lineno, "input must be a positive integer"),
                 },
+                "image" => {
+                    let dims: Option<Vec<usize>> = toks.map(|t| t.parse().ok()).collect();
+                    match dims.as_deref() {
+                        Some([c, h, w]) if *c > 0 && *h > 0 && *w > 0 => {
+                            image = Some(ImageDims::new(*c, *h, *w));
+                        }
+                        _ => {
+                            return perr(
+                                lineno,
+                                "image needs three positive integers (channels height width)",
+                            )
+                        }
+                    }
+                }
                 "layer" => {
                     if net.is_some() {
                         return perr(lineno, "layer lines must precede parameters");
@@ -380,30 +467,70 @@ impl<T: Scalar> Network<T> {
                             SpecLine::Dropout { rate, seed }
                         }
                         "softmax" => SpecLine::Softmax,
+                        "conv2d" => {
+                            let filters: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(f) if f > 0 => f,
+                                _ => return perr(lineno, "conv2d needs a positive filter count"),
+                            };
+                            let kernel: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(k) if k > 0 => k,
+                                _ => return perr(lineno, "conv2d needs a positive kernel"),
+                            };
+                            let stride: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(s) if s > 0 => s,
+                                _ => return perr(lineno, "conv2d needs a positive stride"),
+                            };
+                            let name = toks.next().unwrap_or("");
+                            let activation = match Activation::parse(name) {
+                                Some(a) => a,
+                                None => {
+                                    return perr(lineno, format!("unknown activation '{name}'"))
+                                }
+                            };
+                            SpecLine::Conv2d { filters, kernel, stride, activation }
+                        }
+                        "maxpool2d" => {
+                            let kernel: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(k) if k > 0 => k,
+                                _ => return perr(lineno, "maxpool2d needs a positive kernel"),
+                            };
+                            let stride: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(s) if s > 0 => s,
+                                _ => return perr(lineno, "maxpool2d needs a positive stride"),
+                            };
+                            SpecLine::MaxPool2d { kernel, stride }
+                        }
+                        "flatten" => SpecLine::Flatten,
                         other => {
                             return perr(lineno, format!("unknown layer kind '{other}'"))
                         }
                     };
                     spec_lines.push(parsed);
                 }
-                "dense" => {
+                kind @ ("dense" | "conv") => {
                     if net.is_none() {
-                        net = Some(build_v2_skeleton(lineno, input, &spec_lines)?);
+                        net = Some(build_v2_skeleton(lineno, input, image, &spec_lines)?);
                     }
                     let net = net.as_mut().unwrap();
                     let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
                         Some(i) => i,
-                        None => return perr(lineno, "missing dense index"),
+                        None => return perr(lineno, format!("missing {kind} index")),
                     };
-                    if idx >= net.dense_count() {
-                        return perr(lineno, format!("dense index {idx} out of range"));
+                    let count =
+                        if kind == "dense" { net.dense_count() } else { net.conv_count() };
+                    if idx >= count {
+                        return perr(lineno, format!("{kind} index {idx} out of range"));
                     }
                     match toks.next() {
                         Some("biases") => {
                             let vals: Option<Vec<T>> = toks.map(T::parse).collect();
                             let vals = vals
                                 .ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
-                            let (_, b) = net.dense_params_mut(idx);
+                            let (_, b) = if kind == "dense" {
+                                net.dense_params_mut(idx)
+                            } else {
+                                net.conv_params_mut(idx)
+                            };
                             if vals.len() != b.len() {
                                 return perr(
                                     lineno,
@@ -421,7 +548,11 @@ impl<T: Scalar> Network<T> {
                                 Some(v) => v,
                                 None => return perr(lineno, "missing cols"),
                             };
-                            let (w, _) = net.dense_params_mut(idx);
+                            let (w, _) = if kind == "dense" {
+                                net.dense_params_mut(idx)
+                            } else {
+                                net.conv_params_mut(idx)
+                            };
                             if rows != w.rows() || cols != w.cols() {
                                 return perr(
                                     lineno,
@@ -513,6 +644,70 @@ mod tests {
             loaded.ops().iter().map(|o| o.mask_seed()).collect::<Vec<_>>(),
             net.ops().iter().map(|o| o.mask_seed()).collect::<Vec<_>>()
         );
+    }
+
+    /// Conv pipelines round-trip through v2 with their geometry derived
+    /// from the `image` line (per-layer kernel/stride re-planned on load).
+    #[test]
+    fn conv_pipeline_round_trips_with_geometry() {
+        let specs = vec![
+            LayerSpec::Conv2d { filters: 2, kernel: 3, stride: 1, activation: Activation::Relu },
+            LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        let net: Network<f32> =
+            Network::from_specs_image(36, Some(ImageDims::new(1, 6, 6)), &specs, 9);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.contains("image 1 6 6"), "{text}");
+        assert!(text.contains("layer 0 conv2d 2 3 1 relu"), "{text}");
+        assert!(text.contains("layer 1 maxpool2d 2 2"), "{text}");
+        assert!(text.contains("layer 2 flatten"), "{text}");
+        assert!(text.contains("conv 0 weights 9 2"), "{text}");
+        let loaded = Network::<f32>::load_from(&buf[..]).unwrap();
+        assert_eq!(loaded.spec_list(), net.spec_list());
+        assert_eq!(loaded.input_image(), Some(ImageDims::new(1, 6, 6)));
+        assert!(net.params_close(&loaded, 0.0));
+        let mut rng = crate::tensor::Rng::new(77);
+        let x = Matrix::<f32>::from_fn(36, 5, |_, _| rng.uniform_in(0.0, 1.0) as f32);
+        assert_eq!(net.output_batch(&x), loaded.output_batch(&x), "bit-identical after reload");
+    }
+
+    /// A conv checkpoint missing its `image` line (or carrying broken
+    /// geometry) fails with the planner's actionable message.
+    #[test]
+    fn conv_checkpoint_geometry_errors_are_actionable() {
+        for (text, needle) in [
+            (
+                "neural-rs network v2\ninput 36\nlayer 0 conv2d 2 3 1 relu\n\
+                 layer 1 flatten\nlayer 2 dense 3 sigmoid\nconv 0 biases 0 0\n",
+                "needs image geometry",
+            ),
+            (
+                "neural-rs network v2\ninput 36\nimage 1 6 6\nlayer 0 conv2d 2 9 1 relu\n\
+                 layer 1 flatten\nlayer 2 dense 3 sigmoid\nconv 0 biases 0 0\n",
+                "exceeds the 6x6",
+            ),
+            (
+                "neural-rs network v2\ninput 36\nimage 1 6 7\nlayer 0 conv2d 2 3 1 relu\n\
+                 layer 1 flatten\nlayer 2 dense 3 sigmoid\nconv 0 biases 0 0\n",
+                "elements but input is 36",
+            ),
+            (
+                "neural-rs network v2\ninput 36\nimage 1 6\nlayer 0 conv2d 2 3 1 relu\n",
+                "three positive integers",
+            ),
+            (
+                "neural-rs network v2\ninput 36\nimage 1 6 6\nlayer 0 conv2d 2 3 0 relu\n",
+                "positive stride",
+            ),
+        ] {
+            let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
+            assert!(err.to_string().contains(needle), "'{err}' lacks '{needle}' for:\n{text}");
+        }
     }
 
     #[test]

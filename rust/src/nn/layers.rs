@@ -1,4 +1,4 @@
-//! Composable layer primitives — the [`LayerOp`] trait and its initial
+//! Composable layer primitives — the [`LayerOp`] trait and its
 //! implementations.
 //!
 //! The paper's `network_type` is a homogeneous stack of dense layers with
@@ -11,23 +11,35 @@
 //!
 //! - **shape negotiation** — [`LayerOp::in_size`] / [`LayerOp::out_size`]
 //!   chain ops into a pipeline; [`LayerOp::cache_rows`] tells the
-//!   [`crate::nn::Workspace`] how much per-op scratch to pre-allocate
-//!   (pre-activations for dense, the mask for dropout, nothing for
-//!   softmax), so the zero-allocation training contract survives
-//!   heterogeneity;
+//!   [`crate::nn::Workspace`] how much forward→backward cache to
+//!   pre-allocate (pre-activations for dense/conv, the mask for dropout,
+//!   argmax indices for maxpool) and [`LayerOp::work_rows`] how much
+//!   in-pass working memory (the conv im2col panel), so the
+//!   zero-allocation training contract survives heterogeneity;
 //! - **parameter views** — [`LayerOp::params`] / [`LayerOp::params_mut`]
-//!   expose the trainable state (dense only), which keeps the flat
-//!   parameter/gradient layout the collectives reduce identical to the
-//!   dense-only engine's;
+//!   expose the trainable state (dense and conv), which keys the flat
+//!   parameter/gradient layout the collectives reduce;
 //! - **whole-batch math** — [`LayerOp::forward_batch_into`] and
 //!   [`LayerOp::backward_batch_into`] run on `[rows, batch]` column-major
 //!   matrices through the blocked GEMM, never allocating once the
 //!   workspace is warm.
 //!
-//! Three ops ship today: [`Dense`] (the paper's layer, now with a
-//! *per-layer* activation), [`Dropout`] (seeded inverted dropout with a
-//! train/eval mode flag), and [`Softmax`] (an output head fused with the
-//! cross-entropy loss in the backward pass).
+//! Ops shipped today: [`Dense`] (the paper's layer, with a *per-layer*
+//! activation), [`Dropout`] (seeded inverted dropout with a train/eval
+//! mode flag), [`Softmax`] (an output head fused with the cross-entropy
+//! loss), and the image pipeline — [`Conv2d`] (valid-padding strided
+//! convolution lowered to the blocked GEMM via im2col, cuDNN's core
+//! insight), [`MaxPool2d`], and [`Flatten`] (the shape bridge from image
+//! planes to the dense chain).
+//!
+//! # Image layout
+//!
+//! Image-shaped boundaries are flattened **channel-fastest** ("HWC"):
+//! element `(y, x, c)` of a `c×h×w` plane lives at `(y*w + x)*c_count + c`
+//! of the boundary column. For single-channel input (MNIST) this is the
+//! plain row-major pixel order the datasets already use, and it lets the
+//! whole-batch conv forward/backward run as *one* GEMM per pass over the
+//! `[patch, out_channel]` panels.
 
 use super::activation::Activation;
 use crate::tensor::gemm::{self, GemmScratch, Op};
@@ -35,11 +47,60 @@ use crate::tensor::{vecops, Matrix, Rng, Scalar};
 
 /// Forward-pass mode: [`Mode::Train`] applies stochastic layers
 /// (dropout); [`Mode::Eval`] runs them as the identity. Purely-functional
-/// ops (dense, softmax) behave identically in both.
+/// ops (dense, softmax, conv, pool, flatten) behave identically in both.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     Train,
     Eval,
+}
+
+/// Largest maxpool input plane (elements) whose argmax indices stay
+/// exactly representable in the f32 workspace cache (2^24).
+const MAXPOOL_INDEX_LIMIT: usize = 1 << 24;
+
+/// `c × h × w` image geometry carried along the conv/pool segment of a
+/// pipeline (channels, height, width).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageDims {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ImageDims {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+
+    /// Flattened element count (`c*h*w`) — the boundary size.
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Output geometry of a valid-padding `kernel`/`stride` window over
+    /// this plane, or an error naming the violated constraint.
+    fn windowed(&self, what: &str, kernel: usize, stride: usize) -> Result<(usize, usize), String> {
+        if kernel == 0 || stride == 0 {
+            return Err(format!("{what}: kernel and stride must be positive"));
+        }
+        if kernel > self.h || kernel > self.w {
+            return Err(format!(
+                "{what}: kernel {kernel} exceeds the {}x{} input plane",
+                self.h, self.w
+            ));
+        }
+        Ok(((self.h - kernel) / stride + 1, (self.w - kernel) / stride + 1))
+    }
+}
+
+impl std::fmt::Display for ImageDims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.c, self.h, self.w)
+    }
 }
 
 /// Config-level description of one layer — what a `[[model.layers]]`
@@ -55,46 +116,111 @@ pub enum LayerSpec {
     Dropout { rate: f64 },
     /// Softmax output head, fused with the cross-entropy loss.
     Softmax,
+    /// Valid-padding strided 2D convolution: `filters` output channels,
+    /// square `kernel`, per-layer activation. Needs image geometry
+    /// (`[model] image = [c, h, w]`).
+    Conv2d { filters: usize, kernel: usize, stride: usize, activation: Activation },
+    /// Valid-padding strided 2D max pooling over each channel plane.
+    MaxPool2d { kernel: usize, stride: usize },
+    /// Shape bridge: ends the image segment, handing the flattened
+    /// `c*h*w` vector to the dense chain.
+    Flatten,
 }
 
 impl LayerSpec {
-    /// Canonical kind tag ("dense" | "dropout" | "softmax").
+    /// Canonical kind tag
+    /// ("dense" | "dropout" | "softmax" | "conv2d" | "maxpool2d" | "flatten").
     pub fn kind(&self) -> &'static str {
         match self {
             Self::Dense { .. } => "dense",
             Self::Dropout { .. } => "dropout",
             Self::Softmax => "softmax",
+            Self::Conv2d { .. } => "conv2d",
+            Self::MaxPool2d { .. } => "maxpool2d",
+            Self::Flatten => "flatten",
         }
     }
 }
 
-/// Validate a layer-spec pipeline and return its dense chain — the input
-/// size followed by every dense layer's output size (the `dims` the
-/// gradient/collective layout is keyed by).
+/// One spec with its geometry resolved — what the planner hands the
+/// builders (`Network::from_specs_image`, the checkpoint v2 skeleton).
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Planned {
+    Dense { in_size: usize, units: usize, activation: Activation },
+    Dropout { size: usize, rate: f64 },
+    Softmax { size: usize },
+    Conv2d { img: ImageDims, filters: usize, kernel: usize, stride: usize, activation: Activation },
+    MaxPool2d { img: ImageDims, kernel: usize, stride: usize },
+    Flatten { img: ImageDims },
+}
+
+/// Data shape flowing between ops during validation: a flat vector
+/// (dense-ready) or an image plane (conv/pool-ready).
+#[derive(Clone, Copy)]
+enum Shape {
+    Flat(usize),
+    Image(ImageDims),
+}
+
+/// Validate a layer-spec pipeline against the declared input (and
+/// optional image geometry) and resolve every op's shapes.
 ///
-/// Rejected at this level (so bad configs fail at parse time with an
-/// actionable message instead of panicking deep in construction):
-/// zero-neuron dense layers, dropout rates outside `[0, 1)`, dropout as
-/// the first or last layer, softmax anywhere but last, and pipelines with
-/// no trainable layer at all.
-pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, String> {
+/// Rejected here (so bad configs fail at parse time with an actionable
+/// message instead of panicking deep in construction): zero-neuron dense
+/// layers, dropout rates outside `[0, 1)`, dropout as the first or last
+/// layer, softmax anywhere but last, conv/pool without image geometry or
+/// with kernels larger than their input plane, dense/softmax directly on
+/// image-shaped data (flatten first), flatten without an image segment,
+/// and pipelines with no trainable layer at all.
+pub(crate) fn plan_specs(
+    input: usize,
+    image: Option<ImageDims>,
+    specs: &[LayerSpec],
+) -> Result<(Vec<usize>, Vec<Planned>), String> {
     if input == 0 {
         return Err("model input size must be positive".into());
     }
     if specs.is_empty() {
         return Err("model needs at least one layer".into());
     }
+    let mut shape = match image {
+        Some(img) => {
+            if img.c == 0 || img.h == 0 || img.w == 0 {
+                return Err(format!("image geometry {img} has a zero dimension"));
+            }
+            if img.len() != input {
+                return Err(format!(
+                    "image geometry {img} has {} elements but input is {input}",
+                    img.len()
+                ));
+            }
+            Shape::Image(img)
+        }
+        None => Shape::Flat(input),
+    };
     let last = specs.len() - 1;
     let mut chain = vec![input];
+    let mut planned = Vec::with_capacity(specs.len());
     for (i, spec) in specs.iter().enumerate() {
         match spec {
-            LayerSpec::Dense { units, .. } => {
+            LayerSpec::Dense { units, activation } => {
                 if *units == 0 {
                     return Err(format!(
                         "layer {i} (dense) has zero neurons; every layer needs at least one"
                     ));
                 }
+                let in_size = match shape {
+                    Shape::Flat(n) => n,
+                    Shape::Image(img) => {
+                        return Err(format!(
+                            "layer {i} (dense) follows image-shaped data ({img}); \
+                             insert a flatten layer first"
+                        ))
+                    }
+                };
+                planned.push(Planned::Dense { in_size, units: *units, activation: *activation });
                 chain.push(*units);
+                shape = Shape::Flat(*units);
             }
             LayerSpec::Dropout { rate } => {
                 if !rate.is_finite() || !(0.0..1.0).contains(rate) {
@@ -117,6 +243,11 @@ pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, S
                             .into(),
                     );
                 }
+                let size = match shape {
+                    Shape::Flat(n) => n,
+                    Shape::Image(img) => img.len(),
+                };
+                planned.push(Planned::Dropout { size, rate: *rate });
             }
             LayerSpec::Softmax => {
                 if i != last {
@@ -125,13 +256,109 @@ pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, S
                          is fused with the cross-entropy loss"
                     ));
                 }
+                let size = match shape {
+                    Shape::Flat(n) => n,
+                    Shape::Image(img) => {
+                        return Err(format!(
+                            "layer {i} (softmax) follows image-shaped data ({img}); \
+                             insert a flatten layer first"
+                        ))
+                    }
+                };
+                planned.push(Planned::Softmax { size });
+            }
+            LayerSpec::Conv2d { filters, kernel, stride, activation } => {
+                let img = match shape {
+                    Shape::Image(img) => img,
+                    Shape::Flat(_) => {
+                        return Err(format!(
+                            "layer {i} (conv2d) needs image geometry; declare \
+                             [model] image = [c, h, w] and keep conv layers before \
+                             any flatten"
+                        ))
+                    }
+                };
+                if *filters == 0 {
+                    return Err(format!("layer {i} (conv2d) needs at least one filter"));
+                }
+                let (oh, ow) = img
+                    .windowed(&format!("layer {i} (conv2d)"), *kernel, *stride)?;
+                planned.push(Planned::Conv2d {
+                    img,
+                    filters: *filters,
+                    kernel: *kernel,
+                    stride: *stride,
+                    activation: *activation,
+                });
+                let out = ImageDims::new(*filters, oh, ow);
+                chain.push(out.len());
+                shape = Shape::Image(out);
+            }
+            LayerSpec::MaxPool2d { kernel, stride } => {
+                let img = match shape {
+                    Shape::Image(img) => img,
+                    Shape::Flat(_) => {
+                        return Err(format!(
+                            "layer {i} (maxpool2d) needs image geometry; declare \
+                             [model] image = [c, h, w] and keep pool layers before \
+                             any flatten"
+                        ))
+                    }
+                };
+                let (oh, ow) =
+                    img.windowed(&format!("layer {i} (maxpool2d)"), *kernel, *stride)?;
+                if img.len() > MAXPOOL_INDEX_LIMIT {
+                    return Err(format!(
+                        "layer {i} (maxpool2d) input plane {img} has {} elements; the \
+                         argmax cache stores input indices as network floats, which \
+                         are exact only up to 2^24 elements",
+                        img.len()
+                    ));
+                }
+                planned.push(Planned::MaxPool2d { img, kernel: *kernel, stride: *stride });
+                shape = Shape::Image(ImageDims::new(img.c, oh, ow));
+            }
+            LayerSpec::Flatten => {
+                let img = match shape {
+                    Shape::Image(img) => img,
+                    Shape::Flat(_) => {
+                        return Err(format!(
+                            "layer {i} (flatten) has nothing to flatten: the data is \
+                             already a flat vector (flatten belongs after conv/pool \
+                             layers)"
+                        ))
+                    }
+                };
+                planned.push(Planned::Flatten { img });
+                shape = Shape::Flat(img.len());
             }
         }
     }
     if chain.len() < 2 {
-        return Err("model has no dense layer, so it has no trainable parameters".into());
+        return Err("model has no trainable (dense/conv2d) layer, so it has no \
+                    parameters"
+            .into());
     }
-    Ok(chain)
+    Ok((chain, planned))
+}
+
+/// Validate a layer-spec pipeline and return its **parameter chain** —
+/// the input size followed by every parameter-owning (dense/conv) op's
+/// output size. For dense-only pipelines this is the paper's `dims`.
+/// `image` supplies the `c×h×w` geometry conv/pool layers need.
+pub fn validate_specs_image(
+    input: usize,
+    image: Option<ImageDims>,
+    specs: &[LayerSpec],
+) -> Result<Vec<usize>, String> {
+    plan_specs(input, image, specs).map(|(chain, _)| chain)
+}
+
+/// [`validate_specs_image`] without image geometry (dense-chain
+/// pipelines; conv/pool layers are rejected with a pointer to
+/// `[model] image`).
+pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, String> {
+    validate_specs_image(input, None, specs)
 }
 
 /// One layer of the network pipeline: a self-contained forward/backward
@@ -140,8 +367,9 @@ pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, S
 /// boxed `LayerOp`s and [`crate::nn::Workspace`] holds their negotiated
 /// scratch.
 pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
-    /// Kind tag ("dense" | "dropout" | "softmax") — used by checkpoint v2
-    /// and the serving `/v1/models` endpoint.
+    /// Kind tag ("dense" | "dropout" | "softmax" | "conv2d" |
+    /// "maxpool2d" | "flatten") — used by checkpoint v2 and the serving
+    /// `/v1/models` endpoint.
     fn kind(&self) -> &'static str;
 
     /// Rows this op consumes.
@@ -154,6 +382,23 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     /// carry from forward to backward (0 = stateless).
     fn cache_rows(&self) -> usize {
         0
+    }
+
+    /// Rows of per-batch-column *working* buffer this op needs live
+    /// during both passes (the conv im2col panel; 0 for everything else).
+    /// Unlike the cache, the op may overwrite it mid-backward.
+    fn work_rows(&self) -> usize {
+        0
+    }
+
+    /// Image geometry this op consumes, when it is image-shaped.
+    fn in_image(&self) -> Option<ImageDims> {
+        None
+    }
+
+    /// Image geometry this op produces, when it is image-shaped.
+    fn out_image(&self) -> Option<ImageDims> {
+        None
     }
 
     /// Trainable scalars owned by this op.
@@ -185,13 +430,16 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     fn summary(&self) -> String;
 
     /// Whole-batch forward pass: read `x` (`[in, B]`), write `out`
-    /// (`[out, B]`) and `cache` (`[cache_rows, B]`). Allocation-free.
-    /// `mask_rng` is this op's private mask stream (dropout only).
+    /// (`[out, B]`), `cache` (`[cache_rows, B]`), and `work`
+    /// (`[work_rows, B]`). Allocation-free. `mask_rng` is this op's
+    /// private mask stream (dropout only).
+    #[allow(clippy::too_many_arguments)]
     fn forward_batch_into(
         &self,
         x: &Matrix<T>,
         out: &mut Matrix<T>,
         cache: &mut Matrix<T>,
+        work: &mut Matrix<T>,
         scratch: &mut GemmScratch<T>,
         mode: Mode,
         mask_rng: &mut Rng,
@@ -199,16 +447,19 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
 
     /// Whole-batch backward pass. `x` is the op's forward input, `d_out`
     /// holds `dC/d(out)` on entry and may be consumed in place, `cache`
-    /// is what forward stored. Writes `dC/d(x)` into `d_in` (skipped for
-    /// the first op, which has nothing below it) and *accumulates*
-    /// parameter tendencies into the `grads` views when the op owns
-    /// parameters. Allocation-free.
+    /// is what forward stored, `work` is the forward pass's working
+    /// buffer (readable, and overwritable once the op is done with it).
+    /// Writes `dC/d(x)` into `d_in` (skipped for the first op, which has
+    /// nothing below it) and *accumulates* parameter tendencies into the
+    /// `grads` views when the op owns parameters. Allocation-free.
+    #[allow(clippy::too_many_arguments)]
     fn backward_batch_into(
         &self,
         x: &Matrix<T>,
         d_out: &mut Matrix<T>,
         d_in: Option<&mut Matrix<T>>,
         cache: &Matrix<T>,
+        work: &mut Matrix<T>,
         grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         scratch: &mut GemmScratch<T>,
     );
@@ -295,6 +546,7 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         x: &Matrix<T>,
         out: &mut Matrix<T>,
         cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
         scratch: &mut GemmScratch<T>,
         _mode: Mode,
         _mask_rng: &mut Rng,
@@ -315,6 +567,7 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         d_out: &mut Matrix<T>,
         d_in: Option<&mut Matrix<T>>,
         cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
         grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         scratch: &mut GemmScratch<T>,
     ) {
@@ -408,6 +661,7 @@ impl<T: Scalar> LayerOp<T> for Dropout {
         x: &Matrix<T>,
         out: &mut Matrix<T>,
         cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
         _scratch: &mut GemmScratch<T>,
         mode: Mode,
         mask_rng: &mut Rng,
@@ -438,6 +692,7 @@ impl<T: Scalar> LayerOp<T> for Dropout {
         d_out: &mut Matrix<T>,
         d_in: Option<&mut Matrix<T>>,
         cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
         _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         _scratch: &mut GemmScratch<T>,
     ) {
@@ -509,6 +764,7 @@ impl<T: Scalar> LayerOp<T> for Softmax {
         x: &Matrix<T>,
         out: &mut Matrix<T>,
         _cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
         _scratch: &mut GemmScratch<T>,
         _mode: Mode,
         _mask_rng: &mut Rng,
@@ -540,6 +796,7 @@ impl<T: Scalar> LayerOp<T> for Softmax {
         _d_out: &mut Matrix<T>,
         _d_in: Option<&mut Matrix<T>>,
         _cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
         _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         _scratch: &mut GemmScratch<T>,
     ) {
@@ -547,6 +804,527 @@ impl<T: Scalar> LayerOp<T> for Softmax {
             "softmax backward is fused with the cross-entropy loss; the network \
              injects (A - Y) below the head instead of calling this"
         );
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Conv2d
+// ---------------------------------------------------------------------
+
+/// Valid-padding strided 2D convolution with a per-layer activation,
+/// lowered to the blocked GEMM via im2col — cuDNN's core insight that
+/// convolution is best served by matrix-multiply primitives.
+///
+/// Weights live as a `[kernel²·in_c, filters]` column-major matrix whose
+/// rows use the same channel-fastest patch order im2col produces, so the
+/// whole batch runs as **one** GEMM per pass:
+///
+/// - forward: im2col every column into the workspace work panel (viewed
+///   as the `[K, P·B]` patch matrix, `K = kernel²·in_c`,
+///   `P = out_h·out_w`), then `Z = Wᵀ·col` lands directly in the
+///   channel-fastest output layout; `A = σ(Z + b)`;
+/// - backward: `δ = dC/dA ⊙ σ'(Z)`, `dW += col·δᵀ` (one GEMM, summing
+///   over the batch exactly as the tendencies want), `db += Σ δ` per
+///   channel, and `dC/dX = col2im(W·δ)` — the `W·δ` GEMM overwrites the
+///   im2col panel (dW no longer needs it) before the scatter-add.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Conv2d<T = f32> {
+    /// Input geometry.
+    pub img: ImageDims,
+    /// Square kernel side.
+    pub kernel: usize,
+    /// Stride (valid padding: output plane is `(h-k)/s+1 × (w-k)/s+1`).
+    pub stride: usize,
+    /// Weights `[kernel²·in_c, filters]`, rows in channel-fastest patch
+    /// order (`(ky·kernel + kx)·in_c + c`).
+    pub w: Matrix<T>,
+    /// Per-filter biases, length `filters`.
+    pub b: Vec<T>,
+    /// This layer's activation.
+    pub activation: Activation,
+}
+
+impl<T: Scalar> Conv2d<T> {
+    /// A conv op from explicit parts (checkpoint loading, tests).
+    pub fn from_parts(
+        img: ImageDims,
+        kernel: usize,
+        stride: usize,
+        w: Matrix<T>,
+        b: Vec<T>,
+        activation: Activation,
+    ) -> Self {
+        img.windowed("conv2d", kernel, stride).expect("conv2d geometry must be valid");
+        assert_eq!(w.rows(), kernel * kernel * img.c, "conv2d weight rows must be kernel²·in_c");
+        assert_eq!(w.cols(), b.len(), "conv2d bias length must match filter count");
+        assert!(!b.is_empty(), "conv2d needs at least one filter");
+        Self { img, kernel, stride, w, b, activation }
+    }
+
+    /// Number of output filters (channels).
+    pub fn filters(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// im2col patch length `K = kernel²·in_c`.
+    fn patch_len(&self) -> usize {
+        self.kernel * self.kernel * self.img.c
+    }
+
+    /// Output geometry.
+    pub fn out_dims(&self) -> ImageDims {
+        let (oh, ow) = self
+            .img
+            .windowed("conv2d", self.kernel, self.stride)
+            .expect("validated at construction");
+        ImageDims::new(self.filters(), oh, ow)
+    }
+
+    /// Output plane size `P = out_h·out_w`.
+    fn out_plane(&self) -> usize {
+        let o = self.out_dims();
+        o.h * o.w
+    }
+
+    /// Gather one column's patches into `col` (`K·P` values, patch-major,
+    /// channel-fastest within each patch). With the channel-fastest
+    /// boundary layout every kernel row is one contiguous memcpy.
+    fn im2col(&self, x: &[T], col: &mut [T]) {
+        let (c, w) = (self.img.c, self.img.w);
+        let (k, s) = (self.kernel, self.stride);
+        let out = self.out_dims();
+        let krow = k * c;
+        let mut dst = 0usize;
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                for ky in 0..k {
+                    let src = ((oy * s + ky) * w + ox * s) * c;
+                    col[dst..dst + krow].copy_from_slice(&x[src..src + krow]);
+                    dst += krow;
+                }
+            }
+        }
+    }
+
+    /// Scatter-add one column's patch gradients back onto the input
+    /// plane (`dx` must be pre-zeroed): the transpose of [`Conv2d::im2col`].
+    fn col2im(&self, col: &[T], dx: &mut [T]) {
+        let (c, w) = (self.img.c, self.img.w);
+        let (k, s) = (self.kernel, self.stride);
+        let out = self.out_dims();
+        let krow = k * c;
+        let mut src = 0usize;
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                for ky in 0..k {
+                    let dst = ((oy * s + ky) * w + ox * s) * c;
+                    for (d, &v) in dx[dst..dst + krow].iter_mut().zip(&col[src..src + krow]) {
+                        *d = *d + v;
+                    }
+                    src += krow;
+                }
+            }
+        }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Conv2d<T> {
+    fn kind(&self) -> &'static str {
+        "conv2d"
+    }
+
+    fn in_size(&self) -> usize {
+        self.img.len()
+    }
+
+    fn out_size(&self) -> usize {
+        self.out_dims().len()
+    }
+
+    fn cache_rows(&self) -> usize {
+        // Pre-activations Z, needed by the backward σ' factor.
+        self.out_dims().len()
+    }
+
+    fn work_rows(&self) -> usize {
+        // The im2col patch panel.
+        self.patch_len() * self.out_plane()
+    }
+
+    fn in_image(&self) -> Option<ImageDims> {
+        Some(self.img)
+    }
+
+    fn out_image(&self) -> Option<ImageDims> {
+        Some(self.out_dims())
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.w, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.w, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Conv2d {
+            filters: self.filters(),
+            kernel: self.kernel,
+            stride: self.stride,
+            activation: self.activation,
+        }
+    }
+
+    fn summary(&self) -> String {
+        format!(
+            "conv2d({} -> {}, k{} s{}, {})",
+            self.img,
+            self.out_dims(),
+            self.kernel,
+            self.stride,
+            self.activation
+        )
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        work: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let b = x.cols();
+        let (kp, p, f) = (self.patch_len(), self.out_plane(), self.filters());
+        for j in 0..b {
+            self.im2col(x.col(j), work.col_mut(j));
+        }
+        // One whole-batch GEMM: Z [f, P·B] = Wᵀ [f, K] · col [K, P·B].
+        // The work buffer ([K·P, B]) *is* the [K, P·B] patch matrix and
+        // the cache ([f·P, B]) *is* the [f, P·B] output, both without a
+        // single copy — the channel-fastest layout makes them line up.
+        gemm::gemm_slices(
+            Op::T,
+            self.w.as_slice(),
+            kp,
+            Op::N,
+            work.as_slice(),
+            kp,
+            f,
+            p * b,
+            kp,
+            cache.as_mut_slice(),
+            false,
+            scratch,
+        );
+        // Bias per filter, then A = σ(Z).
+        for zrow in cache.as_mut_slice().chunks_exact_mut(f) {
+            vecops::axpy(zrow, T::ONE, &self.b);
+        }
+        for (av, &zv) in out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
+            *av = self.activation.apply(zv);
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        _x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        work: &mut Matrix<T>,
+        grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        scratch: &mut GemmScratch<T>,
+    ) {
+        let b = d_out.cols();
+        let (kp, p, f) = (self.patch_len(), self.out_plane(), self.filters());
+        let q = p * b;
+        // δ = dC/dA ⊙ σ'(Z), in place on the incoming delta.
+        for (dv, &zv) in d_out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
+            *dv = *dv * self.activation.prime(zv);
+        }
+        if let Some((dw, db)) = grads {
+            // dW += col [K, Q] · δᵀ [Q, f] — one GEMM sums the batch.
+            gemm::gemm_slices(
+                Op::N,
+                work.as_slice(),
+                kp,
+                Op::T,
+                d_out.as_slice(),
+                f,
+                kp,
+                f,
+                q,
+                dw.as_mut_slice(),
+                true,
+                scratch,
+            );
+            // db[c] += Σ over every output position of δ[c, ·].
+            for drow in d_out.as_slice().chunks_exact(f) {
+                vecops::axpy(db, T::ONE, drow);
+            }
+        }
+        if let Some(d_in) = d_in {
+            // dcol [K, Q] = W [K, f] · δ [f, Q], overwriting the im2col
+            // panel (dW is done with it), then scatter-add per column.
+            gemm::gemm_slices(
+                Op::N,
+                self.w.as_slice(),
+                kp,
+                Op::N,
+                d_out.as_slice(),
+                f,
+                kp,
+                q,
+                f,
+                work.as_mut_slice(),
+                false,
+                scratch,
+            );
+            d_in.fill_zero();
+            for j in 0..b {
+                self.col2im(work.col(j), d_in.col_mut(j));
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// MaxPool2d
+// ---------------------------------------------------------------------
+
+/// Valid-padding strided 2D max pooling over each channel plane. The
+/// forward pass caches the winning input index per output element (as an
+/// exactly-representable float), so backward routes each upstream
+/// gradient to the argmax position — accumulating where overlapping
+/// windows share a winner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaxPool2d {
+    /// Input geometry.
+    pub img: ImageDims,
+    /// Square window side.
+    pub kernel: usize,
+    /// Stride.
+    pub stride: usize,
+}
+
+impl MaxPool2d {
+    pub fn new(img: ImageDims, kernel: usize, stride: usize) -> Self {
+        img.windowed("maxpool2d", kernel, stride).expect("maxpool2d geometry must be valid");
+        assert!(img.c > 0, "maxpool2d needs at least one channel");
+        // The argmax cache stores input indices as network floats; f32
+        // represents integers exactly only up to 2^24. The planner
+        // rejects larger planes at parse time; this is the belt for ops
+        // assembled directly.
+        assert!(
+            img.len() <= MAXPOOL_INDEX_LIMIT,
+            "maxpool2d input plane exceeds 2^24 elements; argmax indices would not \
+             be exactly representable as f32"
+        );
+        Self { img, kernel, stride }
+    }
+
+    /// Output geometry (same channel count, pooled plane).
+    pub fn out_dims(&self) -> ImageDims {
+        let (oh, ow) = self
+            .img
+            .windowed("maxpool2d", self.kernel, self.stride)
+            .expect("validated at construction");
+        ImageDims::new(self.img.c, oh, ow)
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for MaxPool2d {
+    fn kind(&self) -> &'static str {
+        "maxpool2d"
+    }
+
+    fn in_size(&self) -> usize {
+        self.img.len()
+    }
+
+    fn out_size(&self) -> usize {
+        self.out_dims().len()
+    }
+
+    fn cache_rows(&self) -> usize {
+        // The argmax input index per output element.
+        self.out_dims().len()
+    }
+
+    fn in_image(&self) -> Option<ImageDims> {
+        Some(self.img)
+    }
+
+    fn out_image(&self) -> Option<ImageDims> {
+        Some(self.out_dims())
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::MaxPool2d { kernel: self.kernel, stride: self.stride }
+    }
+
+    fn summary(&self) -> String {
+        format!("maxpool2d({} -> {}, k{} s{})", self.img, self.out_dims(), self.kernel, self.stride)
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let (c, w) = (self.img.c, self.img.w);
+        let (k, s) = (self.kernel, self.stride);
+        let o = self.out_dims();
+        for j in 0..x.cols() {
+            let xc = x.col(j);
+            let oc = out.col_mut(j);
+            let cc = cache.col_mut(j);
+            for oy in 0..o.h {
+                for ox in 0..o.w {
+                    let obase = (oy * o.w + ox) * c;
+                    for ch in 0..c {
+                        let mut best_i = ((oy * s) * w + ox * s) * c + ch;
+                        let mut best = xc[best_i];
+                        for ky in 0..k {
+                            let rbase = ((oy * s + ky) * w + ox * s) * c + ch;
+                            for kx in 0..k {
+                                let i = rbase + kx * c;
+                                if xc[i] > best {
+                                    best = xc[i];
+                                    best_i = i;
+                                }
+                            }
+                        }
+                        oc[obase + ch] = best;
+                        cc[obase + ch] = T::from_f64(best_i as f64);
+                    }
+                }
+            }
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        _x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
+        _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        if let Some(d_in) = d_in {
+            d_in.fill_zero();
+            for j in 0..d_out.cols() {
+                let dc = d_out.col(j);
+                let cc = cache.col(j);
+                let di = d_in.col_mut(j);
+                for (&dv, &iv) in dc.iter().zip(cc) {
+                    let i = iv.to_f64() as usize;
+                    di[i] = di[i] + dv;
+                }
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flatten
+// ---------------------------------------------------------------------
+
+/// Shape bridge from image planes to the dense chain. The boundary data
+/// is already a flat column (channel-fastest), so forward/backward are
+/// plain copies — the op exists to make the geometry hand-off explicit
+/// and validated (dense layers refuse image-shaped input without it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Flatten {
+    /// The image geometry being flattened.
+    pub img: ImageDims,
+}
+
+impl Flatten {
+    pub fn new(img: ImageDims) -> Self {
+        assert!(!img.is_empty(), "flatten needs a non-empty image");
+        Self { img }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Flatten {
+    fn kind(&self) -> &'static str {
+        "flatten"
+    }
+
+    fn in_size(&self) -> usize {
+        self.img.len()
+    }
+
+    fn out_size(&self) -> usize {
+        self.img.len()
+    }
+
+    fn in_image(&self) -> Option<ImageDims> {
+        Some(self.img)
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Flatten
+    }
+
+    fn summary(&self) -> String {
+        format!("flatten({} -> {})", self.img, self.img.len())
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        _cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        out.as_mut_slice().copy_from_slice(x.as_slice());
+    }
+
+    fn backward_batch_into(
+        &self,
+        _x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        _cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
+        _grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        if let Some(d_in) = d_in {
+            d_in.as_mut_slice().copy_from_slice(d_out.as_slice());
+        }
     }
 
     fn clone_box(&self) -> Box<dyn LayerOp<T>> {
@@ -570,6 +1348,7 @@ mod tests {
         assert_eq!(LayerOp::<f64>::in_size(&d), 2);
         assert_eq!(LayerOp::<f64>::out_size(&d), 3);
         assert_eq!(LayerOp::<f64>::cache_rows(&d), 3);
+        assert_eq!(LayerOp::<f64>::work_rows(&d), 0);
         assert_eq!(LayerOp::<f64>::param_count(&d), 6 + 3);
         let (w, b) = LayerOp::<f64>::params(&d).unwrap();
         assert_eq!(w.rows(), 2);
@@ -587,9 +1366,18 @@ mod tests {
         let x = Matrix::from_fn(2, 1, |i, _| (i as f64 + 1.0) * 2.0); // [2, 4]
         let mut out = Matrix::zeros(3, 1);
         let mut cache = Matrix::zeros(3, 1);
+        let mut work = Matrix::zeros(0, 1);
         let mut scratch = GemmScratch::new();
         let mut rng = Rng::new(0);
-        d.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        d.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
         for k in 0..3 {
             let z = d.w.get(0, k) * 2.0 + d.w.get(1, k) * 4.0 + d.b[k];
             assert!((cache.get(k, 0) - z).abs() < 1e-12, "z[{k}]");
@@ -603,12 +1391,29 @@ mod tests {
         let x = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64 + 1.0);
         let mut out = Matrix::zeros(4, 3);
         let mut cache = Matrix::zeros(4, 3);
+        let mut work = Matrix::zeros(0, 3);
         let mut scratch = GemmScratch::new();
         let mut rng = Rng::new(9);
-        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        dr.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
         assert_eq!(out, x, "eval mode must be the identity");
 
-        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Train, &mut rng);
+        dr.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Train,
+            &mut rng,
+        );
         let mut zeros = 0;
         for (o, x) in out.as_slice().iter().zip(x.as_slice()) {
             if *o == 0.0 {
@@ -623,8 +1428,24 @@ mod tests {
         let mut out2 = Matrix::zeros(4, 3);
         let mut cache2 = Matrix::zeros(4, 3);
         let mut rng2 = Rng::new(9);
-        dr.forward_batch_into(&x, &mut out2, &mut cache2, &mut scratch, Mode::Eval, &mut rng2);
-        dr.forward_batch_into(&x, &mut out2, &mut cache2, &mut scratch, Mode::Train, &mut rng2);
+        dr.forward_batch_into(
+            &x,
+            &mut out2,
+            &mut cache2,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng2,
+        );
+        dr.forward_batch_into(
+            &x,
+            &mut out2,
+            &mut cache2,
+            &mut work,
+            &mut scratch,
+            Mode::Train,
+            &mut rng2,
+        );
         assert_eq!(out, out2, "identical mask streams must give identical outputs");
     }
 
@@ -634,9 +1455,18 @@ mod tests {
         let x = Matrix::full(3, 2, 1.0f64);
         let mut out = Matrix::zeros(3, 2);
         let mut cache = Matrix::zeros(3, 2);
+        let mut work = Matrix::zeros(0, 2);
         let mut scratch = GemmScratch::new();
         let mut rng = Rng::new(4);
-        dr.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Train, &mut rng);
+        dr.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Train,
+            &mut rng,
+        );
         let mut d_out = Matrix::full(3, 2, 1.0f64);
         let mut d_in = Matrix::zeros(3, 2);
         LayerOp::<f64>::backward_batch_into(
@@ -645,6 +1475,7 @@ mod tests {
             &mut d_out,
             Some(&mut d_in),
             &cache,
+            &mut work,
             None,
             &mut scratch,
         );
@@ -658,9 +1489,18 @@ mod tests {
             Matrix::from_fn(4, 3, |i, j| (i as f64) * 0.7 - (j as f64) * 0.3 + 100.0 * j as f64);
         let mut out = Matrix::zeros(4, 3);
         let mut cache = Matrix::zeros(0, 3);
+        let mut work = Matrix::zeros(0, 3);
         let mut scratch = GemmScratch::new();
         let mut rng = Rng::new(0);
-        sm.forward_batch_into(&x, &mut out, &mut cache, &mut scratch, Mode::Eval, &mut rng);
+        sm.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
         for j in 0..3 {
             let col = out.col(j);
             let sum: f64 = col.iter().sum();
@@ -669,6 +1509,185 @@ mod tests {
             // Monotone with the logits: argmax preserved.
             assert_eq!(vecops::argmax(col), vecops::argmax(x.col(j)));
         }
+    }
+
+    /// Conv2d forward against a hand-computed 1-channel 3x3 example.
+    #[test]
+    fn conv_forward_matches_hand_math() {
+        // 1x3x3 input, one 2x2 filter, stride 1, identity-ish weights.
+        let img = ImageDims::new(1, 3, 3);
+        let w = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]); // (ky,kx): (0,0)(0,1)(1,0)(1,1)
+        let conv = Conv2d::from_parts(img, 2, 1, w, vec![0.5], Activation::Relu);
+        assert_eq!(LayerOp::<f64>::in_size(&conv), 9);
+        assert_eq!(LayerOp::<f64>::out_size(&conv), 4);
+        assert_eq!(LayerOp::<f64>::work_rows(&conv), 4 * 4);
+        assert_eq!(conv.out_dims(), ImageDims::new(1, 2, 2));
+
+        // x (row-major pixels) = 0..9
+        let x = Matrix::from_vec(9, 1, (0..9).map(|v| v as f64).collect());
+        let mut out = Matrix::zeros(4, 1);
+        let mut cache = Matrix::zeros(4, 1);
+        let mut work = Matrix::zeros(16, 1);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        conv.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
+        // Patch (0,0) = [0,1,3,4] -> 0*1+1*2+3*3+4*4 = 27, +bias = 27.5
+        // Patch (0,1) = [1,2,4,5] -> 1+4+12+20 = 37.5 with bias
+        // Patch (1,0) = [3,4,6,7] -> 3+8+18+28 = 57.5
+        // Patch (1,1) = [4,5,7,8] -> 4+10+21+32 = 67.5
+        let want = [27.5, 37.5, 57.5, 67.5];
+        for (i, &wv) in want.iter().enumerate() {
+            assert!((cache.get(i, 0) - wv).abs() < 1e-12, "z[{i}]={}", cache.get(i, 0));
+            assert!((out.get(i, 0) - wv).abs() < 1e-12, "relu passes positives");
+        }
+    }
+
+    /// Multi-channel, multi-filter conv agrees with a naive direct
+    /// convolution loop across a whole batch.
+    #[test]
+    fn conv_forward_matches_naive_convolution() {
+        let img = ImageDims::new(2, 5, 4);
+        let (kernel, stride, filters) = (3usize, 2usize, 3usize);
+        let mut rng = Rng::new(55);
+        let kp = kernel * kernel * img.c;
+        let w = Matrix::from_fn(kp, filters, |_, _| rng.uniform_in(-1.0, 1.0));
+        let b: Vec<f64> = (0..filters).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+        let conv = Conv2d::from_parts(img, kernel, stride, w, b.clone(), Activation::Tanh);
+        let o = conv.out_dims();
+        assert_eq!(o, ImageDims::new(3, 2, 1));
+
+        let batch = 4;
+        let x = Matrix::from_fn(img.len(), batch, |_, _| rng.uniform_in(-1.0, 1.0));
+        let mut out = Matrix::zeros(o.len(), batch);
+        let mut cache = Matrix::zeros(o.len(), batch);
+        let mut work = Matrix::zeros(LayerOp::<f64>::work_rows(&conv), batch);
+        let mut scratch = GemmScratch::new();
+        let mut mask = Rng::new(0);
+        conv.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Train,
+            &mut mask,
+        );
+
+        for j in 0..batch {
+            let xc = x.col(j);
+            for oy in 0..o.h {
+                for ox in 0..o.w {
+                    for f in 0..filters {
+                        let mut acc = b[f];
+                        for ky in 0..kernel {
+                            for kx in 0..kernel {
+                                for c in 0..img.c {
+                                    let xi = ((oy * stride + ky) * img.w + ox * stride + kx)
+                                        * img.c
+                                        + c;
+                                    let wi = (ky * kernel + kx) * img.c + c;
+                                    acc += xc[xi] * conv.w.get(wi, f);
+                                }
+                            }
+                        }
+                        let e = (oy * o.w + ox) * o.c + f;
+                        assert!(
+                            (cache.get(e, j) - acc).abs() < 1e-10,
+                            "z mismatch at sample {j} pos ({oy},{ox}) filter {f}"
+                        );
+                        assert!((out.get(e, j) - acc.tanh()).abs() < 1e-10);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_forward_and_backward_route_argmax() {
+        let img = ImageDims::new(1, 4, 4);
+        let pool = MaxPool2d::new(img, 2, 2);
+        assert_eq!(pool.out_dims(), ImageDims::new(1, 2, 2));
+        // Pixels 0..16 row-major: each 2x2 window's max is its bottom-right.
+        let x = Matrix::from_vec(16, 1, (0..16).map(|v| v as f64).collect());
+        let mut out = Matrix::zeros(4, 1);
+        let mut cache = Matrix::zeros(4, 1);
+        let mut work = Matrix::zeros(0, 1);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        pool.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
+        assert_eq!(out.as_slice(), &[5.0, 7.0, 13.0, 15.0]);
+        assert_eq!(cache.as_slice(), &[5.0, 7.0, 13.0, 15.0], "indices equal values here");
+
+        let mut d_out = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut d_in = Matrix::zeros(16, 1);
+        LayerOp::<f64>::backward_batch_into(
+            &pool,
+            &x,
+            &mut d_out,
+            Some(&mut d_in),
+            &cache,
+            &mut work,
+            None,
+            &mut scratch,
+        );
+        let mut want = vec![0.0; 16];
+        want[5] = 1.0;
+        want[7] = 2.0;
+        want[13] = 3.0;
+        want[15] = 4.0;
+        assert_eq!(d_in.as_slice(), &want[..]);
+    }
+
+    #[test]
+    fn flatten_is_identity_both_ways() {
+        let fl = Flatten::new(ImageDims::new(2, 3, 2));
+        assert_eq!(LayerOp::<f64>::in_size(&fl), 12);
+        assert_eq!(LayerOp::<f64>::out_size(&fl), 12);
+        let x = Matrix::from_fn(12, 2, |i, j| (i + 13 * j) as f64);
+        let mut out = Matrix::zeros(12, 2);
+        let mut cache = Matrix::zeros(0, 2);
+        let mut work = Matrix::zeros(0, 2);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        fl.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch,
+            Mode::Eval,
+            &mut rng,
+        );
+        assert_eq!(out, x);
+        let mut d_out = Matrix::from_fn(12, 2, |i, j| (i * 2 + j) as f64);
+        let mut d_in = Matrix::zeros(12, 2);
+        LayerOp::<f64>::backward_batch_into(
+            &fl,
+            &x,
+            &mut d_out,
+            Some(&mut d_in),
+            &cache,
+            &mut work,
+            None,
+            &mut scratch,
+        );
+        assert_eq!(d_in, d_out);
     }
 
     #[test]
@@ -696,10 +1715,84 @@ mod tests {
             (4, vec![LayerSpec::Dropout { rate: 0.5 }, dense(3)], "first layer"),
             (4, vec![dense(3), LayerSpec::Dropout { rate: 0.5 }], "last layer"),
             (4, vec![LayerSpec::Softmax, dense(3)], "final layer"),
-            (4, vec![LayerSpec::Softmax], "no dense layer"),
+            (4, vec![LayerSpec::Softmax], "no trainable"),
+            (4, vec![LayerSpec::Flatten, dense(2)], "nothing to flatten"),
+            (
+                4,
+                vec![
+                    LayerSpec::Conv2d {
+                        filters: 2,
+                        kernel: 2,
+                        stride: 1,
+                        activation: Activation::Relu,
+                    },
+                    dense(2),
+                ],
+                "needs image geometry",
+            ),
+            (4, vec![LayerSpec::MaxPool2d { kernel: 2, stride: 2 }, dense(2)], "needs image"),
         ] {
             let err = validate_specs(input, &specs).unwrap_err();
             assert!(err.contains(needle), "specs {specs:?}: error '{err}' lacks '{needle}'");
         }
+    }
+
+    /// Geometry-aware validation: good conv pipelines resolve, bad
+    /// kernel/stride/channel geometry and missing flatten are rejected
+    /// with actionable messages.
+    #[test]
+    fn conv_spec_validation_tracks_geometry() {
+        let dense = |u| LayerSpec::Dense { units: u, activation: Activation::Sigmoid };
+        let conv = |f, k, s| LayerSpec::Conv2d {
+            filters: f,
+            kernel: k,
+            stride: s,
+            activation: Activation::Relu,
+        };
+        let pool = |k, s| LayerSpec::MaxPool2d { kernel: k, stride: s };
+        let img = Some(ImageDims::new(1, 28, 28));
+
+        // conv(8,k3,s1): 8x26x26; pool(k2,s2): 8x13x13; flatten: 1352.
+        let chain = validate_specs_image(
+            784,
+            img,
+            &[conv(8, 3, 1), pool(2, 2), LayerSpec::Flatten, dense(10), LayerSpec::Softmax],
+        )
+        .unwrap();
+        assert_eq!(chain, vec![784, 8 * 26 * 26, 10], "chain = input + param-op outs");
+
+        for (image, specs, needle) in [
+            (Some(ImageDims::new(1, 27, 28)), vec![conv(4, 3, 1), LayerSpec::Flatten, dense(2)],
+             "756 elements but input is 784"),
+            (Some(ImageDims::new(0, 28, 28)), vec![conv(4, 3, 1)], "zero dimension"),
+            (img, vec![conv(0, 3, 1), LayerSpec::Flatten, dense(2)], "at least one filter"),
+            (img, vec![conv(4, 0, 1), LayerSpec::Flatten, dense(2)], "must be positive"),
+            (img, vec![conv(4, 3, 0), LayerSpec::Flatten, dense(2)], "must be positive"),
+            (img, vec![conv(4, 29, 1), LayerSpec::Flatten, dense(2)], "exceeds the 28x28"),
+            (img, vec![conv(4, 3, 1), dense(10)], "insert a flatten"),
+            (img, vec![conv(4, 3, 1), LayerSpec::Softmax], "insert a flatten"),
+            (img, vec![dense(10)], "insert a flatten"),
+            (
+                img,
+                vec![conv(4, 3, 1), LayerSpec::Flatten, pool(2, 2), dense(2)],
+                "needs image geometry",
+            ),
+            (img, vec![pool(29, 1), LayerSpec::Flatten, dense(2)], "exceeds the 28x28"),
+            (img, vec![pool(2, 2), LayerSpec::Flatten], "no trainable"),
+        ] {
+            let err = validate_specs_image(784, image, &specs).unwrap_err();
+            assert!(err.contains(needle), "specs {specs:?}: error '{err}' lacks '{needle}'");
+        }
+
+        // Maxpool argmax indices live in the f32 workspace cache: planes
+        // beyond 2^24 elements are rejected at validation time.
+        let huge = ImageDims::new(64, 640, 640); // 26.2M elements
+        let err = validate_specs_image(
+            huge.len(),
+            Some(huge),
+            &[pool(2, 2), LayerSpec::Flatten, dense(2)],
+        )
+        .unwrap_err();
+        assert!(err.contains("2^24"), "{err}");
     }
 }

@@ -3,10 +3,11 @@
 //! A complete, dependency-free implementation of the paper's network,
 //! generalized from the paper's homogeneous dense stack into a pipeline
 //! of composable [`LayerOp`]s: dense layers with per-layer activations,
-//! seeded dropout, a fused softmax+cross-entropy head, quadratic and
-//! cross-entropy costs, SGD with batch-summed tendencies, Xavier-style
-//! init, and tagged text save/load (v2, with v1 dense checkpoints still
-//! loadable). It plays two roles in this repo:
+//! seeded dropout, a fused softmax+cross-entropy head, the image ops
+//! (conv2d lowered to the blocked GEMM via im2col, maxpool2d, flatten),
+//! quadratic and cross-entropy costs, SGD with batch-summed tendencies,
+//! Xavier-style init, and tagged text save/load (v2, with v1 dense
+//! checkpoints still loadable). It plays two roles in this repo:
 //!
 //! 1. the *comparator framework* for the Table 1 serial benchmark (the
 //!    role Keras + TensorFlow plays in the paper), and
@@ -24,7 +25,10 @@ mod workspace;
 pub use activation::Activation;
 pub use cost::{cross_entropy_cost, quadratic_cost, quadratic_cost_prime};
 pub use grads::Gradients;
-pub use layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Mode, Softmax};
+pub use layers::{
+    validate_specs, validate_specs_image, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp,
+    LayerSpec, MaxPool2d, Mode, Softmax,
+};
 pub use network::Network;
 pub use optimizer::{Optimizer, OptimizerKind};
 pub use workspace::Workspace;

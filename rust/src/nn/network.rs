@@ -6,12 +6,14 @@
 //! Two invariants keep the heterogeneous graph compatible with everything
 //! the dense-only engine built:
 //!
-//! 1. **The dense chain is still `dims`.** Only [`Dense`] ops own
-//!    parameters, and their shapes form the chain
-//!    `dims[l] × dims[l+1]` — so [`Gradients`], the collective
-//!    flat-buffer layout, the optimizer velocity state, and v1
-//!    checkpoints are all unchanged. Dropout and softmax are
-//!    size-preserving and parameter-free.
+//! 1. **Parameter blocks chain through `dims`.** Every parameter-owning
+//!    op (dense *and* conv2d) contributes one `(weights, biases)` block
+//!    to the [`Gradients`] layout, in pipeline order, with the input
+//!    layer's phantom bias first in the bias section — so for a plain
+//!    dense stack the flat layout, the collective reduce buffers, the
+//!    optimizer velocity state, and v1 checkpoints are all bit-identical
+//!    to the pre-layer-graph engine's. Dropout, softmax, maxpool, and
+//!    flatten are parameter-free.
 //! 2. **Bit-identical dense math.** For a plain dense stack the forward/
 //!    backward pipeline performs the exact float operations (and RNG
 //!    draws at construction) of the pre-layer-graph engine, so seeded
@@ -20,7 +22,10 @@
 use super::activation::Activation;
 use super::cost::{cross_entropy_cost, quadratic_cost};
 use super::grads::Gradients;
-use super::layers::{validate_specs, Dense, Dropout, LayerOp, LayerSpec, Mode, Softmax};
+use super::layers::{
+    plan_specs, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp, LayerSpec, MaxPool2d, Mode,
+    Planned, Softmax,
+};
 use super::workspace::Workspace;
 use crate::tensor::{gemm, vecops, Matrix, Rng, Scalar};
 
@@ -31,19 +36,26 @@ use crate::tensor::{gemm, vecops, Matrix, Rng, Scalar};
 pub struct Network<T = f32> {
     /// The pipeline, in forward order.
     ops: Vec<Box<dyn LayerOp<T>>>,
-    /// Dense-chain sizes: the input size followed by every dense op's
-    /// output size. This is the paper's `dims` and the key for the
-    /// [`Gradients`]/collectives layout.
+    /// Parameter-chain sizes: the input size followed by every
+    /// parameter-owning op's output size. For a plain dense stack this is
+    /// the paper's `dims`.
     dims: Vec<usize>,
     /// Boundary sizes per op: `sizes[0]` = input, `sizes[i]` = output of
     /// op `i-1`.
     sizes: Vec<usize>,
     /// Negotiated cache rows per boundary (0 for stateless ops).
     cache_rows: Vec<usize>,
-    /// Op index of each dense op, in order.
+    /// Negotiated working-buffer rows per boundary (conv im2col panels).
+    work_rows: Vec<usize>,
+    /// Op index of each parameter-owning op (dense/conv), in order —
+    /// block `k` of a [`Gradients`] belongs to op `param_ops[k]`.
+    param_ops: Vec<usize>,
+    /// Op index of each dense op, in order (v1 checkpoints, AOT engine).
     dense_ops: Vec<usize>,
-    /// For op `i`: its dense index, if it is a dense op.
-    dense_of_op: Vec<Option<usize>>,
+    /// Op index of each conv op, in order (checkpoint v2 param lines).
+    conv_ops: Vec<usize>,
+    /// For op `i`: its parameter-block index, if it owns parameters.
+    param_of_op: Vec<Option<usize>>,
     /// True when the last op is a fused softmax+cross-entropy head.
     softmax_head: bool,
     /// The input layer's phantom bias (always zero) — kept so the flat
@@ -59,8 +71,11 @@ impl<T: Scalar> Clone for Network<T> {
             dims: self.dims.clone(),
             sizes: self.sizes.clone(),
             cache_rows: self.cache_rows.clone(),
+            work_rows: self.work_rows.clone(),
+            param_ops: self.param_ops.clone(),
             dense_ops: self.dense_ops.clone(),
-            dense_of_op: self.dense_of_op.clone(),
+            conv_ops: self.conv_ops.clone(),
+            param_of_op: self.param_of_op.clone(),
             softmax_head: self.softmax_head,
             input_bias: self.input_bias.clone(),
         }
@@ -96,69 +111,141 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Construct a heterogeneous pipeline from layer specs (what a
-    /// `[[model.layers]]` config desugars to). Panics on an invalid
-    /// pipeline — validate with [`validate_specs`] first for a
-    /// recoverable error.
-    ///
-    /// Weight initialization reproduces the paper's draw order exactly:
-    /// walking the dense chain, each node draws its biases then its
-    /// outgoing weights (scaled normals, 1/fan-in), so a
-    /// dense→dropout→dense pipeline starts from the *same* dense
-    /// parameters as the equivalent dense-only stack — dropout and
-    /// softmax consume no randomness at construction.
+    /// `[[model.layers]]` config desugars to); see
+    /// [`Network::from_specs_image`] for pipelines with conv/pool layers.
+    /// Panics on an invalid pipeline — validate with
+    /// [`super::layers::validate_specs`] first for a recoverable error.
     pub fn from_specs(input: usize, specs: &[LayerSpec], seed: u64) -> Self {
-        let chain = match validate_specs(input, specs) {
-            Ok(c) => c,
+        Self::from_specs_image(input, None, specs, seed)
+    }
+
+    /// Construct a pipeline from layer specs with optional `c×h×w` input
+    /// geometry (required as soon as the pipeline contains conv2d or
+    /// maxpool2d layers). Panics on an invalid pipeline — validate with
+    /// [`super::layers::validate_specs_image`] first for a recoverable
+    /// error.
+    ///
+    /// Weight initialization for **dense-chain pipelines** (no conv/pool)
+    /// reproduces the paper's draw order exactly: walking the dense
+    /// chain, each node draws its biases then its outgoing weights
+    /// (scaled normals, 1/fan-in), so a dense→dropout→dense pipeline
+    /// starts from the *same* dense parameters as the equivalent
+    /// dense-only stack — dropout and softmax consume no randomness at
+    /// construction. Pipelines with conv/pool layers draw per parameter
+    /// op in pipeline order (biases then weights, 1/fan-in scaling),
+    /// deterministically in `seed`.
+    pub fn from_specs_image(
+        input: usize,
+        image: Option<ImageDims>,
+        specs: &[LayerSpec],
+        seed: u64,
+    ) -> Self {
+        let (chain, planned) = match plan_specs(input, image, specs) {
+            Ok(v) => v,
             Err(e) => panic!("invalid layer specs: {e}"),
         };
+        let dense_chain_only = planned.iter().all(|p| {
+            matches!(p, Planned::Dense { .. } | Planned::Dropout { .. } | Planned::Softmax { .. })
+        });
         let mut rng = Rng::new(seed);
-        // The seed engine's exact draw sequence: for every chain node,
-        // biases (discarded for the input node) then outgoing weights.
-        let mut biases: Vec<Vec<T>> = Vec::with_capacity(chain.len());
-        let mut weights: Vec<Matrix<T>> = Vec::with_capacity(chain.len() - 1);
-        for l in 0..chain.len() {
-            let scale = 1.0 / chain[l] as f64;
-            biases.push((0..chain[l]).map(|_| T::from_f64(rng.normal() * scale)).collect());
-            if l + 1 < chain.len() {
-                weights.push(Matrix::randn_scaled(chain[l], chain[l + 1], scale, &mut rng));
+        let mut ops: Vec<Box<dyn LayerOp<T>>> = Vec::with_capacity(planned.len());
+        if dense_chain_only {
+            // The seed engine's exact draw sequence: for every chain node,
+            // biases (discarded for the input node) then outgoing weights.
+            let mut biases: Vec<Vec<T>> = Vec::with_capacity(chain.len());
+            let mut weights: Vec<Matrix<T>> = Vec::with_capacity(chain.len() - 1);
+            for l in 0..chain.len() {
+                let scale = 1.0 / chain[l] as f64;
+                biases.push((0..chain[l]).map(|_| T::from_f64(rng.normal() * scale)).collect());
+                if l + 1 < chain.len() {
+                    weights.push(Matrix::randn_scaled(chain[l], chain[l + 1], scale, &mut rng));
+                }
+            }
+            let mut weights = weights.into_iter();
+            let mut biases = biases.into_iter().skip(1);
+            for (i, p) in planned.iter().enumerate() {
+                match p {
+                    Planned::Dense { activation, .. } => {
+                        let w = weights.next().expect("dense chain/spec mismatch");
+                        let b = biases.next().expect("dense chain/spec mismatch");
+                        ops.push(Box::new(Dense::from_parts(w, b, *activation)));
+                    }
+                    Planned::Dropout { size, rate } => {
+                        ops.push(Box::new(Dropout::new(*size, *rate, mask_seed(seed, i))));
+                    }
+                    Planned::Softmax { size } => ops.push(Box::new(Softmax::new(*size))),
+                    _ => unreachable!("dense-chain pipelines hold no conv/pool/flatten ops"),
+                }
+            }
+        } else {
+            // Conv pipelines: per-op draws in pipeline order — biases
+            // then weights, 1/fan-in scaling (1/K for conv patches).
+            for (i, p) in planned.iter().enumerate() {
+                match p {
+                    Planned::Dense { in_size, units, activation } => {
+                        let bscale = 1.0 / *units as f64;
+                        let b: Vec<T> =
+                            (0..*units).map(|_| T::from_f64(rng.normal() * bscale)).collect();
+                        let w = Matrix::randn_scaled(
+                            *in_size,
+                            *units,
+                            1.0 / *in_size as f64,
+                            &mut rng,
+                        );
+                        ops.push(Box::new(Dense::from_parts(w, b, *activation)));
+                    }
+                    Planned::Dropout { size, rate } => {
+                        ops.push(Box::new(Dropout::new(*size, *rate, mask_seed(seed, i))));
+                    }
+                    Planned::Softmax { size } => ops.push(Box::new(Softmax::new(*size))),
+                    Planned::Conv2d { img, filters, kernel, stride, activation } => {
+                        let fan_in = kernel * kernel * img.c;
+                        let bscale = 1.0 / *filters as f64;
+                        let b: Vec<T> =
+                            (0..*filters).map(|_| T::from_f64(rng.normal() * bscale)).collect();
+                        let w = Matrix::randn_scaled(
+                            fan_in,
+                            *filters,
+                            1.0 / fan_in as f64,
+                            &mut rng,
+                        );
+                        ops.push(Box::new(Conv2d::from_parts(
+                            *img,
+                            *kernel,
+                            *stride,
+                            w,
+                            b,
+                            *activation,
+                        )));
+                    }
+                    Planned::MaxPool2d { img, kernel, stride } => {
+                        ops.push(Box::new(MaxPool2d::new(*img, *kernel, *stride)));
+                    }
+                    Planned::Flatten { img } => ops.push(Box::new(Flatten::new(*img))),
+                }
             }
         }
-        let mut weights = weights.into_iter();
-        let mut biases = biases.into_iter().skip(1);
-
-        let mut ops: Vec<Box<dyn LayerOp<T>>> = Vec::with_capacity(specs.len());
-        let mut cur = input;
-        for (i, spec) in specs.iter().enumerate() {
-            match spec {
-                LayerSpec::Dense { units, activation } => {
-                    let w = weights.next().expect("dense chain/spec mismatch");
-                    let b = biases.next().expect("dense chain/spec mismatch");
-                    ops.push(Box::new(Dense::from_parts(w, b, *activation)));
-                    cur = *units;
-                }
-                LayerSpec::Dropout { rate } => {
-                    // Per-op mask seed, derived deterministically from the
-                    // construction seed and the op position.
-                    let mask_seed = seed ^ 0xD80B_0000_0000_0000 ^ (i as u64);
-                    ops.push(Box::new(Dropout::new(cur, *rate, mask_seed)));
-                }
-                LayerSpec::Softmax => ops.push(Box::new(Softmax::new(cur))),
-            }
-        }
-        Self::from_ops(ops).expect("validated specs must assemble")
+        let net = Self::from_ops(ops).expect("validated specs must assemble");
+        debug_assert_eq!(net.dims, chain, "plan/assembly parameter chains must agree");
+        net
     }
 
     /// Assemble a network from ready-made ops (checkpoint loading). Fails
-    /// on shape-chain mismatches or parameter-free pipelines.
+    /// on shape-chain mismatches, image-geometry mismatches, or
+    /// parameter-free pipelines.
     pub(crate) fn from_ops(ops: Vec<Box<dyn LayerOp<T>>>) -> Result<Self, String> {
         if ops.is_empty() {
             return Err("network needs at least one layer op".into());
         }
         let mut sizes = vec![ops[0].in_size()];
         let mut cache_rows = vec![0usize];
+        let mut work_rows = vec![0usize];
         let mut dims = vec![ops[0].in_size()];
+        let mut param_ops = Vec::new();
         let mut dense_ops = Vec::new();
-        let mut dense_of_op = Vec::with_capacity(ops.len());
+        let mut conv_ops = Vec::new();
+        let mut param_of_op = Vec::with_capacity(ops.len());
+        let mut img: Option<ImageDims> = None;
         for (i, op) in ops.iter().enumerate() {
             let cur = *sizes.last().unwrap();
             if op.in_size() != cur {
@@ -168,26 +255,62 @@ impl<T: Scalar> Network<T> {
                     op.in_size()
                 ));
             }
+            if let (Some(want), Some(have)) = (op.in_image(), img) {
+                if want != have {
+                    return Err(format!(
+                        "layer {i} ({}) expects a {want} image but the previous layer \
+                         produces {have}",
+                        op.kind()
+                    ));
+                }
+            }
+            img = match op.out_image() {
+                Some(o) => Some(o),
+                // Dropout is shape-agnostic and passes geometry through;
+                // dense/softmax/flatten hand a flat vector downstream.
+                None if op.kind() == "dropout" => img,
+                None => None,
+            };
             sizes.push(op.out_size());
             cache_rows.push(op.cache_rows());
+            work_rows.push(op.work_rows());
             if op.params().is_some() {
-                dense_of_op.push(Some(dense_ops.len()));
-                dense_ops.push(i);
+                param_of_op.push(Some(param_ops.len()));
+                param_ops.push(i);
                 dims.push(op.out_size());
+                match op.kind() {
+                    "dense" => dense_ops.push(i),
+                    "conv2d" => conv_ops.push(i),
+                    other => {
+                        return Err(format!("unknown parameter-owning layer kind '{other}'"))
+                    }
+                }
             } else {
-                dense_of_op.push(None);
+                param_of_op.push(None);
             }
         }
-        if dense_ops.is_empty() {
-            return Err("network has no trainable dense layer".into());
+        if param_ops.is_empty() {
+            return Err("network has no trainable dense/conv layer".into());
         }
         let softmax_head = ops.last().unwrap().kind() == "softmax";
         let input_bias = vec![T::ZERO; dims[0]];
-        Ok(Self { ops, dims, sizes, cache_rows, dense_ops, dense_of_op, softmax_head, input_bias })
+        Ok(Self {
+            ops,
+            dims,
+            sizes,
+            cache_rows,
+            work_rows,
+            param_ops,
+            dense_ops,
+            conv_ops,
+            param_of_op,
+            softmax_head,
+            input_bias,
+        })
     }
 
-    /// Dense-chain sizes (the paper's `dims`): input size plus every
-    /// dense op's output size. Keys the gradient/collective layout.
+    /// Parameter-chain sizes (the paper's `dims` for dense stacks):
+    /// input size plus every parameter-owning op's output size.
     pub fn dims(&self) -> &[usize] {
         &self.dims
     }
@@ -200,6 +323,12 @@ impl<T: Scalar> Network<T> {
     /// Per-op negotiated cache heights (see [`LayerOp::cache_rows`]).
     pub fn cache_rows(&self) -> &[usize] {
         &self.cache_rows
+    }
+
+    /// Per-op negotiated working-buffer heights (see
+    /// [`LayerOp::work_rows`]).
+    pub fn work_rows(&self) -> &[usize] {
+        &self.work_rows
     }
 
     /// The op pipeline, in forward order.
@@ -217,14 +346,25 @@ impl<T: Scalar> Network<T> {
         self.ops.iter().map(|op| op.summary()).collect()
     }
 
-    /// The first dense op's activation — for a uniform dense stack this
-    /// is *the* activation (the paper's single global σ); heterogeneous
-    /// pipelines carry one per dense op.
+    /// The input's image geometry, when the pipeline starts image-shaped
+    /// (first op conv2d/maxpool2d/flatten). Written to checkpoint v2 so
+    /// conv pipelines rebuild their geometry on load.
+    pub fn input_image(&self) -> Option<ImageDims> {
+        self.ops[0].in_image()
+    }
+
+    /// The first parameter-owning op's activation — for a uniform dense
+    /// stack this is *the* activation (the paper's single global σ);
+    /// heterogeneous pipelines carry one per dense/conv op.
     pub fn activation(&self) -> Activation {
-        match self.ops[self.dense_ops[0]].spec() {
-            LayerSpec::Dense { activation, .. } => activation,
-            _ => unreachable!("dense_ops indexes dense ops"),
+        for &i in &self.param_ops {
+            match self.ops[i].spec() {
+                LayerSpec::Dense { activation, .. }
+                | LayerSpec::Conv2d { activation, .. } => return activation,
+                _ => {}
+            }
         }
+        unreachable!("param_ops indexes dense/conv ops, which carry activations")
     }
 
     /// `Some(σ)` iff the pipeline is a plain dense stack with one shared
@@ -248,27 +388,80 @@ impl<T: Scalar> Network<T> {
         self.softmax_head
     }
 
-    /// Number of dense (parameter-owning) ops.
+    /// Number of parameter-owning (dense/conv) ops.
+    pub fn param_op_count(&self) -> usize {
+        self.param_ops.len()
+    }
+
+    /// Number of dense (fully-connected) ops.
     pub fn dense_count(&self) -> usize {
         self.dense_ops.len()
     }
 
-    /// Dense op `l`'s weights (`dims[l] × dims[l+1]`).
+    /// Number of conv2d ops.
+    pub fn conv_count(&self) -> usize {
+        self.conv_ops.len()
+    }
+
+    /// Dense op `l`'s weights (for a plain stack: `dims[l] × dims[l+1]`).
     pub fn dense_weight(&self, l: usize) -> &Matrix<T> {
         self.ops[self.dense_ops[l]].params().expect("dense op has params").0
     }
 
-    /// Dense op `l`'s output biases (length `dims[l+1]`).
+    /// Dense op `l`'s output biases.
     pub fn dense_bias(&self, l: usize) -> &[T] {
         self.ops[self.dense_ops[l]].params().expect("dense op has params").1
+    }
+
+    /// Conv op `k`'s weights (`[kernel²·in_c, filters]`).
+    pub fn conv_weight(&self, k: usize) -> &Matrix<T> {
+        self.ops[self.conv_ops[k]].params().expect("conv op has params").0
+    }
+
+    /// Conv op `k`'s per-filter biases.
+    pub fn conv_bias(&self, k: usize) -> &[T] {
+        self.ops[self.conv_ops[k]].params().expect("conv op has params").1
     }
 
     pub(crate) fn dense_params_mut(&mut self, l: usize) -> (&mut Matrix<T>, &mut Vec<T>) {
         self.ops[self.dense_ops[l]].params_mut().expect("dense op has params")
     }
 
+    pub(crate) fn conv_params_mut(&mut self, k: usize) -> (&mut Matrix<T>, &mut Vec<T>) {
+        self.ops[self.conv_ops[k]].params_mut().expect("conv op has params")
+    }
+
     pub(crate) fn input_bias_mut(&mut self) -> &mut Vec<T> {
         &mut self.input_bias
+    }
+
+    /// Zeroed gradients shaped for this network's parameter blocks — the
+    /// generalization of `Gradients::zeros(dims)` that covers conv ops
+    /// (whose bias length is the filter count, not the boundary size).
+    pub fn zero_grads(&self) -> Gradients<T> {
+        let mut dw = Vec::with_capacity(self.param_ops.len());
+        let mut db = Vec::with_capacity(self.param_ops.len() + 1);
+        db.push(vec![T::ZERO; self.input_bias.len()]);
+        for &i in &self.param_ops {
+            let (w, b) = self.ops[i].params().expect("param op has params");
+            dw.push(Matrix::zeros(w.rows(), w.cols()));
+            db.push(vec![T::ZERO; b.len()]);
+        }
+        Gradients { dw, db }
+    }
+
+    /// True when `grads` matches this network's parameter-block shapes
+    /// (allocation-free — safe on the hot path).
+    pub fn grads_fit(&self, grads: &Gradients<T>) -> bool {
+        grads.dw.len() == self.param_ops.len()
+            && grads.db.len() == self.param_ops.len() + 1
+            && grads.db[0].len() == self.input_bias.len()
+            && self.param_ops.iter().enumerate().all(|(k, &i)| {
+                let (w, b) = self.ops[i].params().expect("param op has params");
+                grads.dw[k].rows() == w.rows()
+                    && grads.dw[k].cols() == w.cols()
+                    && grads.db[k + 1].len() == b.len()
+            })
     }
 
     /// Number of trainable parameters (including the input layer's
@@ -294,18 +487,18 @@ impl<T: Scalar> Network<T> {
     /// Whole-batch forward pass through the op pipeline into the
     /// workspace: op `i` reads boundary `i` (the input batch `x` for
     /// `i == 0`, used in place and never copied) and writes its
-    /// activations and negotiated cache at boundary `i+1`.
-    /// Allocation-free once `ws` is warm.
+    /// activations, negotiated cache, and working buffer at boundary
+    /// `i+1`. Allocation-free once `ws` is warm.
     fn forward_pass(&self, x: &Matrix<T>, ws: &mut Workspace<T>, mode: Mode) {
         assert_eq!(x.rows(), self.sizes[0], "input size mismatch");
         assert!(
-            ws.fits(&self.sizes, &self.cache_rows),
+            ws.fits(&self.sizes, &self.cache_rows, &self.work_rows),
             "workspace was negotiated for a different network"
         );
         let batch = x.cols();
         ws.bind(batch);
-        let (a, z, rngs, scratch) =
-            (&mut ws.a, &mut ws.z, &mut ws.mask_rngs, &mut ws.scratch);
+        let (a, z, work, rngs, scratch) =
+            (&mut ws.a, &mut ws.z, &mut ws.work, &mut ws.mask_rngs, &mut ws.scratch);
         for (i, op) in self.ops.iter().enumerate() {
             let (head, tail) = a.split_at_mut(i + 1);
             let input: &Matrix<T> = if i == 0 { x } else { &head[i] };
@@ -313,6 +506,7 @@ impl<T: Scalar> Network<T> {
                 input,
                 &mut tail[0],
                 &mut z[i + 1],
+                &mut work[i + 1],
                 scratch,
                 mode,
                 &mut rngs[i + 1],
@@ -405,7 +599,7 @@ impl<T: Scalar> Network<T> {
     /// trainer, the benches) hold a warmed workspace instead and go
     /// through `grad_batch_into` directly, which is allocation-free.
     pub fn grad_batch(&self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
-        let mut g = Gradients::zeros(&self.dims);
+        let mut g = self.zero_grads();
         let mut ws = Workspace::for_net(self);
         self.grad_batch_into(x, y, &mut ws, &mut g);
         g
@@ -417,8 +611,9 @@ impl<T: Scalar> Network<T> {
     /// The forward pass runs in [`Mode::Train`] (dropout active, masks
     /// drawn from the workspace's seeded streams); then the cost
     /// derivative enters at the top and each op's
-    /// [`LayerOp::backward_batch_into`] walks it down, accumulating dense
-    /// tendencies into the [`Gradients`] views for its dense index:
+    /// [`LayerOp::backward_batch_into`] walks it down, accumulating
+    /// parameter tendencies into the [`Gradients`] views for its block
+    /// index:
     ///
     /// - quadratic head: `Δ_top = A_out − Y`, handed to the last op
     ///   (whose backward multiplies by its σ');
@@ -438,13 +633,7 @@ impl<T: Scalar> Network<T> {
     ) {
         assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
         assert_eq!(y.rows(), self.output_size(), "output size mismatch");
-        // Shape check without `Gradients::dims()` — that collects a Vec,
-        // which would break the zero-allocation contract of this path.
-        assert!(
-            grads.db.len() == self.dims.len()
-                && grads.db.iter().zip(&self.dims).all(|(b, &d)| b.len() == d),
-            "gradient dims mismatch"
-        );
+        assert!(self.grads_fit(grads), "gradient dims mismatch");
         let batch = x.cols();
         if batch == 0 {
             return;
@@ -452,7 +641,8 @@ impl<T: Scalar> Network<T> {
         self.forward_pass(x, ws, Mode::Train);
         ws.bind_delta(batch);
         let nops = self.ops.len();
-        let (z, a, delta, scratch) = (&ws.z, &ws.a, &mut ws.delta, &mut ws.scratch);
+        let (z, a, work, delta, scratch) =
+            (&ws.z, &ws.a, &mut ws.work, &mut ws.delta, &mut ws.scratch);
 
         // Cost derivative at the top. `top` is the highest boundary the
         // backward loop consumes: below the head when it is fused.
@@ -471,20 +661,41 @@ impl<T: Scalar> Network<T> {
             let d_out = &mut dtail[0];
             let d_in = if i > 0 { Some(&mut dhead[i]) } else { None };
             let input: &Matrix<T> = if i == 0 { x } else { &a[i] };
-            match self.dense_of_op[i] {
-                Some(d) => self.ops[i].backward_batch_into(
+            match self.param_of_op[i] {
+                Some(k) => self.ops[i].backward_batch_into(
                     input,
                     d_out,
                     d_in,
                     &z[i + 1],
-                    Some((&mut grads.dw[d], &mut grads.db[d + 1])),
+                    &mut work[i + 1],
+                    Some((&mut grads.dw[k], &mut grads.db[k + 1])),
                     scratch,
                 ),
-                None => {
-                    self.ops[i].backward_batch_into(input, d_out, d_in, &z[i + 1], None, scratch)
-                }
+                None => self.ops[i].backward_batch_into(
+                    input,
+                    d_out,
+                    d_in,
+                    &z[i + 1],
+                    &mut work[i + 1],
+                    None,
+                    scratch,
+                ),
             }
         }
+    }
+
+    /// Batched gradient with the batch columns sharded across `threads`
+    /// scoped std threads — see [`Network::grad_batch_threaded_at`].
+    /// This entry fixes the mask stream to step 0; training loops must
+    /// pass their step counter via `grad_batch_threaded_at` so dropout
+    /// draws fresh masks every batch.
+    pub fn grad_batch_threaded(
+        &self,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+        threads: usize,
+    ) -> Gradients<T> {
+        self.grad_batch_threaded_at(x, y, threads, 0)
     }
 
     /// Batched gradient with the batch columns sharded across `threads`
@@ -492,36 +703,45 @@ impl<T: Scalar> Network<T> {
     /// coordinator's per-image `train_parallel` threads). Each shard runs
     /// the blocked workspace pipeline privately; partial tendencies are
     /// summed in shard order, so the result is deterministic for a given
-    /// thread count.
+    /// `(threads, step)` pair.
     ///
-    /// Dropout caveat: each shard draws its masks from a fresh per-call
-    /// workspace, so *repeated* calls replay the same mask sequence —
-    /// across a training loop dropout degenerates toward a static
-    /// pruning pattern. Dropout networks should train through a
-    /// persistent workspace ([`Network::grad_batch_into`], the
-    /// `intra_threads = 1` trainer path), whose mask streams advance
-    /// from batch to batch.
-    pub fn grad_batch_threaded(
+    /// `step` advances the shard workspaces' dropout mask streams: shard
+    /// `s` of step `n` seeds its masks from `(mask_seed, n, s)`, so
+    /// repeated calls across a training loop draw *fresh* masks instead
+    /// of replaying the first batch's pattern (the historical bug with
+    /// per-call workspaces), while the same `(n, s)` replays exactly —
+    /// determinism the tests assert.
+    pub fn grad_batch_threaded_at(
         &self,
         x: &Matrix<T>,
         y: &Matrix<T>,
         threads: usize,
+        step: u64,
     ) -> Gradients<T> {
         assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
         let n = x.cols();
         let t = threads.max(1).min(n.max(1));
         if t <= 1 {
-            return self.grad_batch(x, y);
+            // Serial fallback still honors the step stream, so dropout
+            // masks stay fresh when a tiny batch collapses the shard set.
+            let mut ws = Workspace::for_net_at(self, shard_stream(step, 0));
+            let mut g = self.zero_grads();
+            self.grad_batch_into(x, y, &mut ws, &mut g);
+            return g;
         }
         let bounds = gemm::col_shards(n, t);
         let parts: Vec<Gradients<T>> = std::thread::scope(|s| {
             let handles: Vec<_> = bounds
                 .iter()
-                .map(|&(lo, hi)| {
+                .enumerate()
+                .map(|(si, &(lo, hi))| {
                     s.spawn(move || {
                         let xs = x.cols_range(lo, hi);
                         let ys = y.cols_range(lo, hi);
-                        self.grad_batch(&xs, &ys)
+                        let mut ws = Workspace::for_net_at(self, shard_stream(step, si));
+                        let mut g = self.zero_grads();
+                        self.grad_batch_into(&xs, &ys, &mut ws, &mut g);
+                        g
                     })
                 })
                 .collect();
@@ -530,7 +750,7 @@ impl<T: Scalar> Network<T> {
                 .map(|h| h.join().expect("intra-image gradient shard panicked"))
                 .collect()
         });
-        let mut total = Gradients::zeros(&self.dims);
+        let mut total = self.zero_grads();
         for p in &parts {
             total.add_assign(p);
         }
@@ -542,7 +762,7 @@ impl<T: Scalar> Network<T> {
     /// batch 1). Used to validate the batched path.
     pub fn grad_batch_per_sample(&self, x: &Matrix<T>, y: &Matrix<T>) -> Gradients<T> {
         assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
-        let mut g = Gradients::zeros(&self.dims);
+        let mut g = self.zero_grads();
         let mut ws = Workspace::for_net(self);
         for j in 0..x.cols() {
             let xj = x.cols_range(j, j + 1);
@@ -556,18 +776,18 @@ impl<T: Scalar> Network<T> {
     // Update and training (paper §3.3–3.4)
     // ------------------------------------------------------------------
 
-    /// Apply tendencies to the dense params: `w -= eta·dw`,
+    /// Apply tendencies to the dense/conv params: `w -= eta·dw`,
     /// `b -= eta·db` — the paper's `network_type % update()`.
-    /// Parameter-free ops (dropout, softmax) are untouched, and the
-    /// input layer's phantom bias stays zero.
+    /// Parameter-free ops (dropout, softmax, maxpool, flatten) are
+    /// untouched, and the input layer's phantom bias stays zero.
     pub fn update(&mut self, grads: &Gradients<T>, eta: T) {
-        assert_eq!(grads.dims(), self.dims, "gradient dims mismatch");
+        assert!(self.grads_fit(grads), "gradient dims mismatch");
         let neg_eta = -eta;
-        for l in 0..self.dense_ops.len() {
-            let opi = self.dense_ops[l];
-            let (w, b) = self.ops[opi].params_mut().expect("dense op has params");
-            w.axpy(neg_eta, &grads.dw[l]);
-            vecops::axpy(b, neg_eta, &grads.db[l + 1]);
+        for k in 0..self.param_ops.len() {
+            let opi = self.param_ops[k];
+            let (w, b) = self.ops[opi].params_mut().expect("param op has params");
+            w.axpy(neg_eta, &grads.dw[k]);
+            vecops::axpy(b, neg_eta, &grads.db[k + 1]);
         }
     }
 
@@ -637,29 +857,33 @@ impl<T: Scalar> Network<T> {
     // ------------------------------------------------------------------
 
     /// Number of scalars in the flat parameter view (== flat gradient
-    /// len for this network's `dims`).
+    /// len for this network's parameter blocks).
     pub fn params_flat_len(&self) -> usize {
-        let w: usize = (0..self.dims.len() - 1).map(|l| self.dims[l] * self.dims[l + 1]).sum();
-        w + self.dims.iter().sum::<usize>()
+        let mut n = self.input_bias.len();
+        for &i in &self.param_ops {
+            let (w, b) = self.ops[i].params().expect("param op has params");
+            n += w.len() + b.len();
+        }
+        n
     }
 
     /// Write all parameters into `out` using the [`Gradients`] layout
-    /// (all dense w matrices column-major in order, then all b vectors —
-    /// the input layer's phantom zeros first). Identical to the
-    /// pre-layer-graph layout, so v1 checkpoints and replica broadcasts
-    /// are unchanged.
+    /// (all dense/conv w matrices column-major in block order, then all
+    /// b vectors — the input layer's phantom zeros first). Identical to
+    /// the pre-layer-graph layout for dense stacks, so v1 checkpoints
+    /// and replica broadcasts are unchanged.
     pub fn params_flatten_into(&self, out: &mut [T]) {
         assert_eq!(out.len(), self.params_flat_len(), "param buffer size mismatch");
         let mut off = 0;
-        for l in 0..self.dense_ops.len() {
-            let w = self.dense_weight(l);
+        for &i in &self.param_ops {
+            let (w, _) = self.ops[i].params().expect("param op has params");
             out[off..off + w.len()].copy_from_slice(w.as_slice());
             off += w.len();
         }
         out[off..off + self.input_bias.len()].copy_from_slice(&self.input_bias);
         off += self.input_bias.len();
-        for l in 0..self.dense_ops.len() {
-            let b = self.dense_bias(l);
+        for &i in &self.param_ops {
+            let (_, b) = self.ops[i].params().expect("param op has params");
             out[off..off + b.len()].copy_from_slice(b);
             off += b.len();
         }
@@ -669,8 +893,9 @@ impl<T: Scalar> Network<T> {
     pub fn params_unflatten_from(&mut self, flat: &[T]) {
         assert_eq!(flat.len(), self.params_flat_len(), "param buffer size mismatch");
         let mut off = 0;
-        for l in 0..self.dense_ops.len() {
-            let (w, _) = self.dense_params_mut(l);
+        let ops = &mut self.ops;
+        for &opi in &self.param_ops {
+            let (w, _) = ops[opi].params_mut().expect("param op has params");
             let n = w.len();
             w.as_mut_slice().copy_from_slice(&flat[off..off + n]);
             off += n;
@@ -678,8 +903,8 @@ impl<T: Scalar> Network<T> {
         let n0 = self.input_bias.len();
         self.input_bias.copy_from_slice(&flat[off..off + n0]);
         off += n0;
-        for l in 0..self.dense_ops.len() {
-            let (_, b) = self.dense_params_mut(l);
+        for &opi in &self.param_ops {
+            let (_, b) = ops[opi].params_mut().expect("param op has params");
             let n = b.len();
             b.copy_from_slice(&flat[off..off + n]);
             off += n;
@@ -697,8 +922,24 @@ impl<T: Scalar> Network<T> {
     /// `tol` (replica-consistency checks).
     pub fn params_close(&self, other: &Network<T>, tol: f64) -> bool {
         self.dims == other.dims
+            && self.params_flat_len() == other.params_flat_len()
             && vecops::max_abs_diff(&self.params_to_flat(), &other.params_to_flat()) <= tol
     }
+}
+
+/// Deterministic per-op dropout mask seed, derived from the construction
+/// seed and the op position.
+fn mask_seed(seed: u64, op_index: usize) -> u64 {
+    seed ^ 0xD80B_0000_0000_0000 ^ (op_index as u64)
+}
+
+/// Mask-stream id for shard `shard` of training step `step` on the
+/// threaded gradient path. Golden-ratio/Murmur-style multiplies keep
+/// distinct `(step, shard)` pairs from colliding before the workspace's
+/// SplitMix expansion scrambles them further.
+fn shard_stream(step: u64, shard: usize) -> u64 {
+    step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (shard as u64 + 1).wrapping_mul(0xFF51_AFD7_ED55_8CCD)
 }
 
 #[cfg(test)]
@@ -718,6 +959,21 @@ mod tests {
         ]
     }
 
+    /// A small conv pipeline on 1x6x6 inputs:
+    /// conv(2, k3, s1) -> 2x4x4; pool(k2, s2) -> 2x2x2; flatten; dense 3.
+    fn conv_specs() -> Vec<LayerSpec> {
+        vec![
+            LayerSpec::Conv2d { filters: 2, kernel: 3, stride: 1, activation: Activation::Tanh },
+            LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+        ]
+    }
+
+    fn conv_net(seed: u64) -> Network<f64> {
+        Network::from_specs_image(36, Some(ImageDims::new(1, 6, 6)), &conv_specs(), seed)
+    }
+
     #[test]
     fn construction_matches_listing_3() {
         let net = Network::<f32>::new(&[3, 5, 2], Activation::Tanh, 1);
@@ -729,10 +985,13 @@ mod tests {
         // params: w(3×5)+w(5×2)+b(5)+b(2) + b(3 input, unused but present)
         assert_eq!(net.param_count(), 15 + 10 + 3 + 5 + 2);
         assert_eq!(net.dense_count(), 2);
+        assert_eq!(net.conv_count(), 0);
+        assert_eq!(net.param_op_count(), 2);
         assert_eq!(net.dense_weight(0).rows(), 3);
         assert_eq!(net.dense_weight(1).cols(), 2);
         assert_eq!(net.dense_bias(1).len(), 2);
         assert!(!net.has_softmax_head());
+        assert_eq!(net.input_image(), None);
     }
 
     #[test]
@@ -744,9 +1003,10 @@ mod tests {
     #[test]
     fn heterogeneous_pipeline_construction() {
         let net: Network<f64> = Network::from_specs(3, &mlp_specs(), 7);
-        assert_eq!(net.dims(), &[3, 5, 2], "dims is the dense chain");
+        assert_eq!(net.dims(), &[3, 5, 2], "dims is the parameter chain");
         assert_eq!(net.boundary_sizes(), &[3, 5, 5, 2, 2]);
         assert_eq!(net.cache_rows(), &[0, 5, 5, 2, 0]);
+        assert_eq!(net.work_rows(), &[0, 0, 0, 0, 0], "dense pipelines need no work panels");
         assert!(net.has_softmax_head());
         assert_eq!(net.uniform_activation(), None, "dropout breaks plain-dense shape");
         assert_eq!(
@@ -757,6 +1017,39 @@ mod tests {
         // consume no randomness, so dense params match the plain stack's.
         let plain = Network::<f64>::new(&[3, 5, 2], Activation::Sigmoid, 7);
         assert_eq!(net.params_to_flat(), plain.params_to_flat());
+    }
+
+    #[test]
+    fn conv_pipeline_construction() {
+        let net = conv_net(11);
+        assert_eq!(net.dims(), &[36, 32, 3], "input + conv out + dense out");
+        assert_eq!(net.boundary_sizes(), &[36, 32, 8, 8, 3]);
+        assert_eq!(net.cache_rows(), &[0, 32, 8, 0, 3]);
+        assert_eq!(net.work_rows(), &[0, 9 * 16, 0, 0, 0], "conv negotiates its im2col panel");
+        assert_eq!(net.param_op_count(), 2);
+        assert_eq!(net.conv_count(), 1);
+        assert_eq!(net.dense_count(), 1);
+        assert_eq!(net.input_image(), Some(ImageDims::new(1, 6, 6)));
+        assert_eq!(net.uniform_activation(), None, "conv pipelines are not plain dense stacks");
+        assert_eq!(net.activation(), Activation::Tanh, "first param op's activation");
+        assert_eq!(net.conv_weight(0).rows(), 9);
+        assert_eq!(net.conv_weight(0).cols(), 2);
+        assert_eq!(net.conv_bias(0).len(), 2);
+        assert_eq!(
+            net.layer_summaries(),
+            vec![
+                "conv2d(1x6x6 -> 2x4x4, k3 s1, tanh)",
+                "maxpool2d(2x4x4 -> 2x2x2, k2 s2)",
+                "flatten(2x2x2 -> 8)",
+                "dense(8->3, sigmoid)",
+            ]
+        );
+        // Flat parameter layout: conv w (18) + dense w (24) + input
+        // phantom (36) + conv b (2) + dense b (3).
+        assert_eq!(net.params_flat_len(), 18 + 24 + 36 + 2 + 3);
+        // Construction is deterministic in the seed.
+        assert_eq!(net.params_to_flat(), conv_net(11).params_to_flat());
+        assert_ne!(net.params_to_flat(), conv_net(12).params_to_flat());
     }
 
     #[test]
@@ -896,6 +1189,40 @@ mod tests {
         }
     }
 
+    /// The conv pipeline's whole-batch GEMM path must agree with the
+    /// same pipeline run one sample at a time.
+    #[test]
+    fn conv_batched_grad_equals_per_sample_grad() {
+        let net = conv_net(19);
+        let mut rng = Rng::new(23);
+        let x = Matrix::from_fn(36, 11, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(3, 11, |_, _| rng.uniform_in(0.0, 1.0));
+        let fused = net.grad_batch(&x, &y);
+        let reference = net.grad_batch_per_sample(&x, &y);
+        for l in 0..fused.dw.len() {
+            let d = fused.dw[l].max_abs_diff(&reference.dw[l]);
+            assert!(d < 1e-10, "dw[{l}] diff {d}");
+        }
+        for l in 0..fused.db.len() {
+            let d = vecops::max_abs_diff(&fused.db[l], &reference.db[l]);
+            assert!(d < 1e-10, "db[{l}] diff {d}");
+        }
+    }
+
+    #[test]
+    fn conv_training_reduces_loss() {
+        let mut net = conv_net(3);
+        let mut rng = Rng::new(31);
+        let x = Matrix::from_fn(36, 16, |_, _| rng.uniform_in(0.0, 1.0));
+        let y = Matrix::from_fn(3, 16, |i, j| if j % 3 == i { 1.0 } else { 0.0 });
+        let before = net.loss_batch(&x, &y);
+        for _ in 0..500 {
+            net.train_batch(&x, &y, 1.0);
+        }
+        let after = net.loss_batch(&x, &y);
+        assert!(after < before * 0.7, "conv training must reduce loss: {before} -> {after}");
+    }
+
     #[test]
     fn workspace_reuse_across_batch_sizes_matches_fresh() {
         // One workspace reused at 16, then 5, then 16 columns must give
@@ -907,7 +1234,24 @@ mod tests {
             let x = Matrix::from_fn(6, b, |_, _| rng.uniform_in(-1.0, 1.0));
             let y = Matrix::from_fn(4, b, |_, _| rng.uniform_in(0.0, 1.0));
             let fresh = net.grad_batch(&x, &y);
-            let mut reused = Gradients::zeros(net.dims());
+            let mut reused = net.zero_grads();
+            net.grad_batch_into(&x, &y, &mut ws, &mut reused);
+            assert_eq!(fresh, reused, "batch {b}");
+        }
+    }
+
+    /// Conv workspaces shrink and regrow across ragged batches exactly
+    /// like dense ones (the im2col panel resizes in place).
+    #[test]
+    fn conv_workspace_reuse_across_batch_sizes_matches_fresh() {
+        let net = conv_net(29);
+        let mut rng = Rng::new(9);
+        let mut ws = Workspace::for_net(&net);
+        for &b in &[8usize, 3, 8, 1] {
+            let x = Matrix::from_fn(36, b, |_, _| rng.uniform_in(-1.0, 1.0));
+            let y = Matrix::from_fn(3, b, |_, _| rng.uniform_in(0.0, 1.0));
+            let fresh = net.grad_batch(&x, &y);
+            let mut reused = net.zero_grads();
             net.grad_batch_into(&x, &y, &mut ws, &mut reused);
             assert_eq!(fresh, reused, "batch {b}");
         }
@@ -920,7 +1264,7 @@ mod tests {
         let y = Matrix::from_fn(2, 6, |i, j| ((i * j) % 2) as f64);
         let once = net.grad_batch(&x, &y);
         let mut ws = Workspace::for_net(&net);
-        let mut acc = Gradients::zeros(net.dims());
+        let mut acc = net.zero_grads();
         net.grad_batch_into(&x, &y, &mut ws, &mut acc);
         net.grad_batch_into(&x, &y, &mut ws, &mut acc);
         for l in 0..once.dw.len() {
@@ -949,6 +1293,40 @@ mod tests {
                 assert!(d < 1e-10, "threads={threads} db[{l}] diff {d}");
             }
         }
+    }
+
+    /// The ROADMAP dropout bug, fixed: consecutive threaded steps must
+    /// draw *different* masks (the per-call shard workspaces used to
+    /// replay the same stream every batch), while the same step replays
+    /// deterministically.
+    #[test]
+    fn threaded_dropout_masks_advance_with_the_step_counter() {
+        let specs = vec![
+            LayerSpec::Dense { units: 16, activation: Activation::Tanh },
+            LayerSpec::Dropout { rate: 0.5 },
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+        ];
+        let net: Network<f64> = Network::from_specs(6, &specs, 51);
+        let mut rng = Rng::new(52);
+        let x = Matrix::from_fn(6, 12, |_, _| rng.uniform_in(-1.0, 1.0));
+        let y = Matrix::from_fn(3, 12, |_, _| rng.uniform_in(0.0, 1.0));
+
+        let g0 = net.grad_batch_threaded_at(&x, &y, 3, 0);
+        let g0_again = net.grad_batch_threaded_at(&x, &y, 3, 0);
+        assert_eq!(g0, g0_again, "same step must replay the same masks");
+        let g1 = net.grad_batch_threaded_at(&x, &y, 3, 1);
+        let diff = g0
+            .dw
+            .iter()
+            .zip(&g1.dw)
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0f64, f64::max);
+        assert!(diff > 1e-12, "step 1 must draw different dropout masks than step 0");
+        // Dropout-free pipelines are step-invariant (pure perf knob).
+        let plain = Network::<f64>::new(&[6, 16, 3], Activation::Tanh, 51);
+        let p0 = plain.grad_batch_threaded_at(&x, &y, 3, 0);
+        let p1 = plain.grad_batch_threaded_at(&x, &y, 3, 9);
+        assert_eq!(p0, p1, "without dropout the step counter must not change anything");
     }
 
     #[test]
@@ -985,6 +1363,20 @@ mod tests {
         for j in 0..17 {
             let single = net.output(x.col(j));
             assert!(vecops::max_abs_diff(&single, batched.col(j)) < 1e-14);
+        }
+    }
+
+    /// Same per-sample-vs-batched agreement through the conv pipeline
+    /// (exercises the [K, P·B] panel view at batch 1 vs batch N).
+    #[test]
+    fn conv_batched_output_equals_per_sample_output() {
+        let net = conv_net(43);
+        let mut rng = Rng::new(44);
+        let x = Matrix::from_fn(36, 9, |_, _| rng.uniform_in(-1.0, 1.0));
+        let batched = net.output_batch(&x);
+        for j in 0..9 {
+            let single = net.output(x.col(j));
+            assert!(vecops::max_abs_diff(&single, batched.col(j)) < 1e-12, "sample {j}");
         }
     }
 
@@ -1029,6 +1421,27 @@ mod tests {
         other.params_unflatten_from(&flat);
         assert!(net.params_close(&other, 0.0));
         assert_eq!(net, other, "same specs + same params == equal networks");
+    }
+
+    /// The flat parameter layout round-trips through conv pipelines too —
+    /// the invariant the collective broadcast and optimizer rely on.
+    #[test]
+    fn conv_params_round_trip() {
+        let net = conv_net(61);
+        let flat = net.params_to_flat();
+        let mut other = conv_net(62);
+        assert!(!net.params_close(&other, 1e-9));
+        other.params_unflatten_from(&flat);
+        assert!(net.params_close(&other, 0.0));
+        assert_eq!(net, other);
+        // update(grads=params, eta=1) zeroes the network exactly iff the
+        // gradient layout equals the parameter layout.
+        let mut zeroed = net.clone();
+        let mut g = net.zero_grads();
+        g.unflatten_from(&flat);
+        zeroed.update(&g, 1.0);
+        let max = zeroed.params_to_flat().iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!(max < 1e-12, "residual {max}");
     }
 
     #[test]

@@ -67,10 +67,25 @@ pub struct Optimizer<T = f32> {
 }
 
 impl<T: Scalar> Optimizer<T> {
+    /// An optimizer for a plain dense chain (`dims` keys the velocity
+    /// layout). Pipelines with conv layers carry per-op parameter blocks
+    /// whose bias lengths differ from the boundary sizes — build those
+    /// with [`Optimizer::for_net`].
     pub fn new(kind: OptimizerKind, dims: &[usize]) -> Self {
         let velocity = match kind {
             OptimizerKind::Sgd => None,
             _ => Some(Gradients::zeros(dims)),
+        };
+        Self { kind, velocity }
+    }
+
+    /// An optimizer whose velocity state matches `net`'s parameter
+    /// blocks exactly (dense *and* conv) — the constructor the trainer
+    /// uses.
+    pub fn for_net(kind: OptimizerKind, net: &Network<T>) -> Self {
+        let velocity = match kind {
+            OptimizerKind::Sgd => None,
+            _ => Some(net.zero_grads()),
         };
         Self { kind, velocity }
     }
@@ -217,6 +232,32 @@ mod tests {
         let nag = loss_after(OptimizerKind::Nesterov { mu: 0.9 });
         assert!(mom < sgd, "momentum {mom} should beat sgd {sgd} at this low eta");
         assert!(nag < sgd, "nesterov {nag} should beat sgd {sgd}");
+    }
+
+    /// `for_net` velocity matches conv parameter blocks (bias length =
+    /// filter count, not boundary size), so momentum steps through conv
+    /// pipelines without shape panics and actually moves the parameters.
+    #[test]
+    fn for_net_handles_conv_parameter_blocks() {
+        use crate::nn::{ImageDims, LayerSpec};
+        let specs = vec![
+            LayerSpec::Conv2d { filters: 2, kernel: 3, stride: 1, activation: Activation::Tanh },
+            LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+        ];
+        let mut net: Network<f64> =
+            Network::from_specs_image(36, Some(ImageDims::new(1, 6, 6)), &specs, 5);
+        let x = Matrix::from_fn(36, 6, |i, j| ((i * 5 + j * 3) % 11) as f64 / 11.0);
+        let y = Matrix::from_fn(3, 6, |i, j| if j % 3 == i { 1.0 } else { 0.0 });
+        let mut opt = Optimizer::for_net(OptimizerKind::Momentum { mu: 0.9 }, &net);
+        let g = net.grad_batch(&x, &y);
+        let before = net.params_to_flat();
+        opt.step(&mut net, &g, 0.05);
+        opt.step(&mut net, &g, 0.05);
+        let after = net.params_to_flat();
+        let moved: f64 = before.iter().zip(&after).map(|(a, b)| (a - b).abs()).sum();
+        assert!(moved > 0.0, "momentum must move conv parameters");
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //!
 //! [`Workspace`] owns every piece of mutable per-pass state the layer
 //! pipeline needs: per-op activations `A`, per-op caches (pre-activation
-//! `Z` for dense, the applied mask for dropout — whatever
-//! [`crate::nn::LayerOp::cache_rows`] negotiated), backward deltas `Δ`,
-//! the GEMM packing scratch, and one mask RNG per op (dropout's
-//! stochastic state lives *here*, not in the op, so ops stay `&self` on
-//! the hot path and mask streams are deterministic per workspace).
+//! `Z` for dense/conv, the applied mask for dropout, argmax indices for
+//! maxpool — whatever [`crate::nn::LayerOp::cache_rows`] negotiated),
+//! per-op working buffers (the conv im2col panel, via
+//! [`crate::nn::LayerOp::work_rows`]), backward deltas `Δ`, the GEMM
+//! packing scratch, and one mask RNG per op (dropout's stochastic state
+//! lives *here*, not in the op, so ops stay `&self` on the hot path and
+//! mask streams are deterministic per workspace).
 //!
 //! After one warm-up batch at the largest batch size, a steady-state
 //! training loop calling [`crate::nn::Network::grad_batch_into`] performs
@@ -32,9 +34,13 @@ pub struct Workspace<T = f32> {
     /// Cache rows per boundary: `cache_rows[i]` is op `i-1`'s negotiated
     /// cache height (0 = stateless op). Index 0 is always 0.
     cache_rows: Vec<usize>,
+    /// Working-buffer rows per boundary (op `i-1`'s im2col panel etc.).
+    work_rows: Vec<usize>,
     /// Per-op caches; index 0 is an empty placeholder for index parity
     /// with the paper's 1-based layers.
     pub(crate) z: Vec<Matrix<T>>,
+    /// Per-op working buffers; index 0 is an empty placeholder.
+    pub(crate) work: Vec<Matrix<T>>,
     /// Activations per boundary; index 0 is empty — the input batch is
     /// used directly, never copied.
     pub(crate) a: Vec<Matrix<T>>,
@@ -45,7 +51,7 @@ pub struct Workspace<T = f32> {
     /// One mask stream per boundary, seeded from the op's
     /// [`crate::nn::LayerOp::mask_seed`] (only dropout consumes it).
     pub(crate) mask_rngs: Vec<Rng>,
-    /// Batch size the forward buffers (`z`/`a`) are shaped for.
+    /// Batch size the forward buffers (`z`/`a`/`work`) are shaped for.
     batch: usize,
     /// Batch size the `delta` buffers are shaped for — bound lazily by
     /// the backward pass, so forward-only callers (`output_batch`,
@@ -54,9 +60,15 @@ pub struct Workspace<T = f32> {
 }
 
 impl<T: Scalar> Workspace<T> {
-    fn from_layout(sizes: Vec<usize>, cache_rows: Vec<usize>, seeds: &[u64]) -> Self {
+    fn from_layout(
+        sizes: Vec<usize>,
+        cache_rows: Vec<usize>,
+        work_rows: Vec<usize>,
+        seeds: &[u64],
+    ) -> Self {
         assert!(sizes.len() >= 2, "network needs at least input and output layers");
         assert_eq!(sizes.len(), cache_rows.len());
+        assert_eq!(sizes.len(), work_rows.len());
         assert_eq!(sizes.len(), seeds.len());
         let mk = |rows: &[usize]| {
             let mut v = Vec::with_capacity(rows.len());
@@ -69,10 +81,12 @@ impl<T: Scalar> Workspace<T> {
         let mask_rngs = seeds.iter().map(|&s| Rng::new(s)).collect();
         Self {
             z: mk(&cache_rows),
+            work: mk(&work_rows),
             a: mk(&sizes),
             delta: mk(&sizes),
             sizes,
             cache_rows,
+            work_rows,
             scratch: GemmScratch::new(),
             mask_rngs,
             batch: 0,
@@ -91,18 +105,38 @@ impl<T: Scalar> Workspace<T> {
         let mut cache = dims.to_vec();
         cache[0] = 0;
         let seeds = vec![0u64; dims.len()];
-        Self::from_layout(dims.to_vec(), cache, &seeds)
+        Self::from_layout(dims.to_vec(), cache, vec![0; dims.len()], &seeds)
     }
 
     /// An empty workspace negotiated against `net`'s op pipeline — one
-    /// activation/cache/delta buffer per op, shaped by the op's
+    /// activation/cache/work/delta buffer per op, shaped by the op's
     /// [`crate::nn::LayerOp`] views, plus a mask RNG seeded per op.
     pub fn for_net(net: &Network<T>) -> Self {
+        Self::for_net_at(net, 0)
+    }
+
+    /// [`Workspace::for_net`] with the per-op mask seeds advanced to an
+    /// independent `stream` (step counter ⊕ shard index on the threaded
+    /// gradient path). Stream 0 is the base stream `for_net` uses; any
+    /// other value derives decorrelated-but-deterministic mask RNGs, so
+    /// per-call shard workspaces draw *fresh* dropout masks every
+    /// training step instead of replaying the first batch's masks.
+    pub fn for_net_at(net: &Network<T>, stream: u64) -> Self {
         let sizes = net.boundary_sizes().to_vec();
         let cache = net.cache_rows().to_vec();
+        let work = net.work_rows().to_vec();
+        // SplitMix64-style mixing inside Rng::new scrambles whatever we
+        // feed it; the golden-ratio multiply keeps distinct streams from
+        // colliding for small step/shard combinations. Stream 0 maps to
+        // the raw op seed, preserving for_net's historical streams. The
+        // mix applies to EVERY op seed — including a (legal) dropout
+        // seed of 0 from a seedless checkpoint line — because an
+        // unmixed seed would replay the same masks every step; ops that
+        // never consume their RNG are unaffected either way.
+        let mix = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut seeds = vec![0u64];
-        seeds.extend(net.ops().iter().map(|op| op.mask_seed()));
-        Self::from_layout(sizes, cache, &seeds)
+        seeds.extend(net.ops().iter().map(|op| op.mask_seed() ^ mix));
+        Self::from_layout(sizes, cache, work, &seeds)
     }
 
     /// [`Workspace::for_net`] pre-sized for `batch` columns (warm from
@@ -130,10 +164,10 @@ impl<T: Scalar> Workspace<T> {
     }
 
     /// True if this workspace's negotiated layout fits the given
-    /// boundary/cache shape (the check [`crate::nn::Network`] runs before
-    /// every pass — allocation-free slice compares).
-    pub(crate) fn fits(&self, sizes: &[usize], cache_rows: &[usize]) -> bool {
-        self.sizes == sizes && self.cache_rows == cache_rows
+    /// boundary/cache/work shape (the check [`crate::nn::Network`] runs
+    /// before every pass — allocation-free slice compares).
+    pub(crate) fn fits(&self, sizes: &[usize], cache_rows: &[usize], work_rows: &[usize]) -> bool {
+        self.sizes == sizes && self.cache_rows == cache_rows && self.work_rows == work_rows
     }
 
     /// Batch size the buffers are currently shaped for.
@@ -141,7 +175,7 @@ impl<T: Scalar> Workspace<T> {
         self.batch
     }
 
-    /// Re-shape the forward (`z`/`a`) buffers to `batch` columns.
+    /// Re-shape the forward (`z`/`a`/`work`) buffers to `batch` columns.
     /// Allocation-free once the workspace has been warmed at this or a
     /// larger batch size.
     pub(crate) fn bind(&mut self, batch: usize) {
@@ -150,6 +184,9 @@ impl<T: Scalar> Workspace<T> {
         }
         // Index 0 placeholders stay 0 x 0.
         for m in self.z.iter_mut().skip(1) {
+            m.resize_cols(batch);
+        }
+        for m in self.work.iter_mut().skip(1) {
             m.resize_cols(batch);
         }
         for m in self.a.iter_mut().skip(1) {
@@ -174,7 +211,7 @@ impl<T: Scalar> Workspace<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::{Activation, LayerSpec};
+    use crate::nn::{Activation, ImageDims, LayerSpec};
 
     #[test]
     fn buffers_track_dims_and_batch() {
@@ -222,8 +259,63 @@ mod tests {
         assert_eq!(ws.z[2].rows(), 6, "dropout caches its mask");
         assert_eq!(ws.z[4].rows(), 0, "softmax is stateless");
         assert_eq!(ws.a[4].rows(), 3);
-        assert!(ws.fits(net.boundary_sizes(), net.cache_rows()));
-        assert!(!ws.fits(&[4, 6, 3], &[0, 6, 3]));
+        assert!(ws.work.iter().all(|m| m.rows() == 0), "dense pipelines need no work panels");
+        assert!(ws.fits(net.boundary_sizes(), net.cache_rows(), net.work_rows()));
+        assert!(!ws.fits(&[4, 6, 3], &[0, 6, 3], &[0, 0, 0]));
+    }
+
+    #[test]
+    fn negotiates_conv_work_panels() {
+        let net: Network<f32> = Network::from_specs_image(
+            36,
+            Some(ImageDims::new(1, 6, 6)),
+            &[
+                LayerSpec::Conv2d {
+                    filters: 2,
+                    kernel: 3,
+                    stride: 1,
+                    activation: Activation::Relu,
+                },
+                LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            ],
+            7,
+        );
+        let mut ws = Workspace::for_net(&net);
+        // conv: out 2x4x4=32, K=9, P=16 -> work 144; pool: out 2x2x2=8.
+        assert_eq!(ws.sizes(), &[36, 32, 8, 8, 3]);
+        ws.bind(4);
+        assert_eq!(ws.z[1].rows(), 32, "conv caches pre-activations");
+        assert_eq!(ws.work[1].rows(), 9 * 16, "conv negotiates its im2col panel");
+        assert_eq!(ws.z[2].rows(), 8, "maxpool caches argmax indices");
+        assert_eq!(ws.work[2].rows(), 0);
+        assert_eq!(ws.z[3].rows(), 0, "flatten is stateless");
+        assert!(ws.fits(net.boundary_sizes(), net.cache_rows(), net.work_rows()));
+    }
+
+    /// Distinct streams derive distinct (but deterministic) mask RNGs —
+    /// the mechanism behind fresh dropout masks on the threaded path.
+    #[test]
+    fn mask_streams_differ_per_stream_and_repeat_within() {
+        let net: Network<f32> = Network::from_specs(
+            4,
+            &[
+                LayerSpec::Dense { units: 6, activation: Activation::Tanh },
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Dense { units: 2, activation: Activation::Sigmoid },
+            ],
+            3,
+        );
+        let draw = |stream: u64| {
+            let mut ws: Workspace<f32> = Workspace::for_net_at(&net, stream);
+            // Boundary 2 is the dropout op's stream.
+            (0..8).map(|_| ws.mask_rngs[2].next_u64()).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(0), draw(0), "same stream must replay");
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(0), draw(1), "different streams must decorrelate");
+        assert_ne!(draw(1), draw(2));
     }
 
     #[test]

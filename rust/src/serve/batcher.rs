@@ -345,6 +345,7 @@ fn worker_loop(sh: &Shared) {
     let Some(net) = sh.registry.get(&sh.model) else { return };
     let mut sizes: Vec<usize> = net.boundary_sizes().to_vec();
     let mut cache: Vec<usize> = net.cache_rows().to_vec();
+    let mut work: Vec<usize> = net.work_rows().to_vec();
     let mut ws = Workspace::<f32>::for_net_batch(&net, sh.max_batch);
     let mut x = Matrix::<f32>::zeros(sizes[0], sh.max_batch);
     let mut batch: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(sh.max_batch);
@@ -389,17 +390,19 @@ fn worker_loop(sh: &Shared) {
         }
         drop(q);
 
-        run_batch(sh, &batch, &mut sizes, &mut cache, &mut ws, &mut x);
+        run_batch(sh, &batch, &mut sizes, &mut cache, &mut work, &mut ws, &mut x);
         batch.clear();
         q = sh.q.lock().unwrap();
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     sh: &Shared,
     batch: &[(Arc<Slot>, Instant)],
     sizes: &mut Vec<usize>,
     cache: &mut Vec<usize>,
+    work: &mut Vec<usize>,
     ws: &mut Workspace<f32>,
     x: &mut Matrix<f32>,
 ) {
@@ -410,12 +413,16 @@ fn run_batch(
             return;
         }
     };
-    if net.boundary_sizes() != &sizes[..] || net.cache_rows() != &cache[..] {
+    if net.boundary_sizes() != &sizes[..]
+        || net.cache_rows() != &cache[..]
+        || net.work_rows() != &work[..]
+    {
         // Hot reload changed the architecture (layer sizes or op
-        // shapes): re-warm (one-off allocation, deliberately off the
-        // steady-state path).
+        // shapes, incl. conv im2col panels): re-warm (one-off
+        // allocation, deliberately off the steady-state path).
         *sizes = net.boundary_sizes().to_vec();
         *cache = net.cache_rows().to_vec();
+        *work = net.work_rows().to_vec();
         *ws = Workspace::for_net_batch(&net, sh.max_batch);
         *x = Matrix::zeros(sizes[0], sh.max_batch);
     }

@@ -120,6 +120,48 @@ pub fn gemm_into<T: Scalar>(
     gemm_cols(op_a, a, op_b, b, m, kk, 0, n, c.as_mut_slice(), accumulate, scratch);
 }
 
+/// `c = op_a(a) · op_b(b)` (or `c += ...`) over raw column-major slices
+/// with explicit leading dimensions — the entry point for operands that
+/// live inside larger workspace buffers (the conv im2col panels, which
+/// view one flat buffer as a `[K, P·B]` patch matrix without copying).
+/// `a` is `lda`-major with logical shape `op_a(a) : m x k`, `b` likewise,
+/// and `c` holds the full `m x n` output. Same blocked/packed kernel and
+/// zero-allocation behaviour as [`gemm_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_slices<T: Scalar>(
+    op_a: Op,
+    a: &[T],
+    lda: usize,
+    op_b: Op,
+    b: &[T],
+    ldb: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [T],
+    accumulate: bool,
+    scratch: &mut GemmScratch<T>,
+) {
+    let (a_rows, a_cols) = match op_a {
+        Op::N => (m, k),
+        Op::T => (k, m),
+    };
+    let (b_rows, b_cols) = match op_b {
+        Op::N => (k, n),
+        Op::T => (n, k),
+    };
+    assert_eq!(c.len(), m * n, "gemm_slices: output size mismatch");
+    if a_cols > 0 {
+        assert!(lda >= a_rows, "gemm_slices: lda {lda} < logical rows {a_rows}");
+        assert!(a.len() >= lda * (a_cols - 1) + a_rows, "gemm_slices: a too short");
+    }
+    if b_cols > 0 {
+        assert!(ldb >= b_rows, "gemm_slices: ldb {ldb} < logical rows {b_rows}");
+        assert!(b.len() >= ldb * (b_cols - 1) + b_rows, "gemm_slices: b too short");
+    }
+    gemm_panels(op_a, a, lda, op_b, b, ldb, m, k, 0, n, c, accumulate, scratch);
+}
+
 /// Column-sharded threaded variant: output columns are split into
 /// `threads` contiguous ranges (contiguous memory in column-major order),
 /// each computed by a scoped thread with private scratch. Falls back to
@@ -209,6 +251,41 @@ fn gemm_cols<T: Scalar>(
     accumulate: bool,
     scratch: &mut GemmScratch<T>,
 ) {
+    gemm_panels(
+        op_a,
+        a.as_slice(),
+        a.rows(),
+        op_b,
+        b.as_slice(),
+        b.rows(),
+        m,
+        kk,
+        j0,
+        jn,
+        c,
+        accumulate,
+        scratch,
+    );
+}
+
+/// Slice-level blocked driver shared by [`gemm_cols`] (Matrix operands)
+/// and [`gemm_slices`] (workspace sub-buffer operands).
+#[allow(clippy::too_many_arguments)]
+fn gemm_panels<T: Scalar>(
+    op_a: Op,
+    ad: &[T],
+    lda: usize,
+    op_b: Op,
+    bd: &[T],
+    ldb: usize,
+    m: usize,
+    kk: usize,
+    j0: usize,
+    jn: usize,
+    c: &mut [T],
+    accumulate: bool,
+    scratch: &mut GemmScratch<T>,
+) {
     debug_assert_eq!(c.len(), m * jn, "gemm column-slice size mismatch");
     if !accumulate {
         c.fill(T::ZERO);
@@ -216,10 +293,6 @@ fn gemm_cols<T: Scalar>(
     if m == 0 || jn == 0 || kk == 0 {
         return;
     }
-    let ad = a.as_slice();
-    let lda = a.rows();
-    let bd = b.as_slice();
-    let ldb = b.rows();
     let GemmScratch { pack_a, pack_b } = scratch;
 
     let mut jc = 0;
@@ -485,6 +558,60 @@ mod tests {
             let mut got = Matrix::zeros(m, n);
             gemm_into(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
             assert!(got.max_abs_diff(&want) < 1e-12, "shape {m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn gemm_slices_matches_gemm_into() {
+        let mut rng = Rng::new(21);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (9, 5, 7), (26, 8, 9), (676, 8, 9)] {
+            for (op_a, op_b) in [(Op::N, Op::N), (Op::T, Op::N), (Op::N, Op::T)] {
+                let a = match op_a {
+                    Op::N => rand_matrix(m, k, &mut rng),
+                    Op::T => rand_matrix(k, m, &mut rng),
+                };
+                let b = match op_b {
+                    Op::N => rand_matrix(k, n, &mut rng),
+                    Op::T => rand_matrix(n, k, &mut rng),
+                };
+                let mut want = Matrix::zeros(m, n);
+                let mut scratch = GemmScratch::new();
+                gemm_into(op_a, &a, op_b, &b, &mut want, false, &mut scratch);
+                let mut got = vec![0.0f64; m * n];
+                gemm_slices(
+                    op_a,
+                    a.as_slice(),
+                    a.rows(),
+                    op_b,
+                    b.as_slice(),
+                    b.rows(),
+                    m,
+                    n,
+                    k,
+                    &mut got,
+                    false,
+                    &mut scratch,
+                );
+                assert_eq!(got, want.as_slice(), "{op_a:?}{op_b:?} {m}x{n}x{k}");
+                // Accumulate path adds onto existing contents.
+                gemm_slices(
+                    op_a,
+                    a.as_slice(),
+                    a.rows(),
+                    op_b,
+                    b.as_slice(),
+                    b.rows(),
+                    m,
+                    n,
+                    k,
+                    &mut got,
+                    true,
+                    &mut scratch,
+                );
+                let doubled: Vec<f64> = want.as_slice().iter().map(|&v| 2.0 * v).collect();
+                let d = crate::tensor::vecops::max_abs_diff(&got, &doubled);
+                assert!(d < 1e-12, "accumulate diff {d}");
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! loads checkpoints through exactly this path, so hot-reload
 //! correctness rests on these invariants.
 
-use neural_rs::nn::{Activation, LayerSpec, Network};
+use neural_rs::nn::{Activation, ImageDims, LayerSpec, Network};
 use neural_rs::tensor::{Matrix, Rng, Scalar};
 
 /// The committed legacy checkpoint: a 6-5-4 tanh v1 file with exact
@@ -83,6 +83,59 @@ fn every_layer_kind_round_trips_f32_and_f64() {
     for (i, specs) in pipelines.iter().enumerate() {
         assert_layered_round_trip::<f32>(specs, 5, 100 + i as u64);
         assert_layered_round_trip::<f64>(specs, 5, 200 + i as u64);
+    }
+}
+
+/// v2 round trip for the image layer kinds (conv2d/maxpool2d/flatten),
+/// both scalar kinds: geometry, specs, and parameters all survive, and
+/// outputs are bit-identical — the invariant conv checkpoints serve on.
+fn assert_conv_round_trip<T: Scalar>(specs: &[LayerSpec], img: ImageDims, seed: u64) {
+    let net = Network::<T>::from_specs_image(img.len(), Some(img), specs, seed);
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    let loaded = Network::<T>::load_from(&buf[..]).unwrap();
+    assert_eq!(loaded.spec_list(), net.spec_list(), "{specs:?}");
+    assert_eq!(loaded.input_image(), Some(img), "{specs:?}");
+    assert!(net.params_close(&loaded, 0.0), "{specs:?}");
+    let mut rng = Rng::new(seed ^ 0xC0DE);
+    let x = Matrix::<T>::from_fn(img.len(), 6, |_, _| T::from_f64(rng.uniform_in(0.0, 1.0)));
+    assert_eq!(net.output_batch(&x), loaded.output_batch(&x), "{specs:?}");
+}
+
+#[test]
+fn conv_layer_kinds_round_trip_f32_and_f64() {
+    let conv = |f: usize, k: usize, s: usize, a: Activation| LayerSpec::Conv2d {
+        filters: f,
+        kernel: k,
+        stride: s,
+        activation: a,
+    };
+    let dense = |u: usize, a: Activation| LayerSpec::Dense { units: u, activation: a };
+    let img = ImageDims::new(1, 8, 8);
+    let pipelines: Vec<Vec<LayerSpec>> = vec![
+        // conv -> flatten -> dense
+        vec![conv(3, 3, 1, Activation::Relu), LayerSpec::Flatten, dense(4, Activation::Tanh)],
+        // conv -> pool -> flatten -> dense -> softmax (the acceptance shape)
+        vec![
+            conv(2, 3, 1, Activation::Tanh),
+            LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+            LayerSpec::Flatten,
+            dense(5, Activation::Sigmoid),
+            LayerSpec::Softmax,
+        ],
+        // stacked convs with stride, then dropout in the dense chain
+        vec![
+            conv(4, 3, 2, Activation::Relu),
+            conv(2, 2, 1, Activation::Tanh),
+            LayerSpec::Flatten,
+            LayerSpec::Dropout { rate: 0.25 },
+            dense(3, Activation::Sigmoid),
+            LayerSpec::Softmax,
+        ],
+    ];
+    for (i, specs) in pipelines.iter().enumerate() {
+        assert_conv_round_trip::<f32>(specs, img, 300 + i as u64);
+        assert_conv_round_trip::<f64>(specs, img, 400 + i as u64);
     }
 }
 

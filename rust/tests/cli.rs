@@ -171,6 +171,163 @@ engine = "native"
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+/// The conv acceptance path end-to-end: a [[model.layers]] TOML with
+/// conv2d→maxpool2d→flatten→dense→softmax trains through the CLI, saves
+/// a v2 checkpoint that round-trips bit-for-bit, and serves predictions
+/// through `POST /v1/predict` that match the checkpoint run in-process.
+#[test]
+fn conv_config_trains_saves_and_serves() {
+    use std::io::{Read, Write};
+
+    let dir = tmpdir("conv");
+    let cfg = dir.join("conv.toml");
+    let model = dir.join("conv-net.txt");
+    std::fs::write(
+        &cfg,
+        r#"
+name = "conv-e2e"
+[model]
+image = [1, 28, 28]
+[[model.layers]]
+type = "conv2d"
+filters = 4
+kernel = 5
+stride = 2
+activation = "relu"
+[[model.layers]]
+type = "maxpool2d"
+kernel = 2
+[[model.layers]]
+type = "flatten"
+[[model.layers]]
+type = "dense"
+units = 10
+[[model.layers]]
+type = "softmax"
+[training]
+eta = 0.5
+epochs = 2
+batch_size = 100
+[data]
+train_n = 600
+test_n = 150
+[runtime]
+engine = "native"
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "train", "--config", cfg.to_str().unwrap(), "--data-dir", "/nonexistent",
+            "--save", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("conv2d, maxpool2d, flatten, dense, softmax"), "{text}");
+    assert!(text.contains("Epoch  2 done"), "{text}");
+
+    // v2 checkpoint with the geometry lines, bit-for-bit round trip.
+    let saved = std::fs::read_to_string(&model).unwrap();
+    assert!(saved.starts_with("neural-rs network v2"), "{saved}");
+    assert!(saved.contains("image 1 28 28"), "{saved}");
+    assert!(saved.contains("layer 0 conv2d 4 5 2 relu"), "{saved}");
+    assert!(saved.contains("layer 1 maxpool2d 2 2"), "{saved}");
+    let net = neural_rs::nn::Network::<f32>::load(&model).unwrap();
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    assert_eq!(
+        saved.as_bytes(),
+        &buf[..],
+        "checkpoint must round-trip bit-for-bit through load + save"
+    );
+
+    // Serve it and compare /v1/predict argmax with the in-process model.
+    let port = 47419;
+    let serve_cfg = dir.join("serve.toml");
+    std::fs::write(
+        &serve_cfg,
+        format!(
+            "[serve]\naddr = \"127.0.0.1:{port}\"\nmodel = \"{}\"\n\
+             max_batch = 8\nmax_wait_us = 500\nworkers = 2\nhot_reload = false\n",
+            model.display()
+        ),
+    )
+    .unwrap();
+    let mut server = bin()
+        .args(["serve", "--config", serve_cfg.to_str().unwrap()])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let addr = format!("127.0.0.1:{port}");
+    let http = |method: &str, path: &str, body: &str| -> (u16, String) {
+        let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        let status = text
+            .lines()
+            .next()
+            .and_then(|l| l.split_ascii_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let payload =
+            text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, payload)
+    };
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        if std::net::TcpStream::connect(&addr).is_ok() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "server never came up");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // /v1/models surfaces the conv pipeline summaries.
+    let (status, body) = http("GET", "/v1/models", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("conv2d(1x28x28 -> 4x12x12, k5 s2, relu)"), "{body}");
+    assert!(body.contains("maxpool2d(4x12x12 -> 4x6x6, k2 s2)"), "{body}");
+    assert!(body.contains("flatten(4x6x6 -> 144)"), "{body}");
+
+    let data = neural_rs::data::synthesize::<f32>(2, 123);
+    for j in 0..2 {
+        let sample = data.images.col(j);
+        let expect = neural_rs::tensor::vecops::argmax(&net.output(sample));
+        let mut req = String::from("{\"input\":[");
+        for (i, v) in sample.iter().enumerate() {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push_str(&format!("{v}"));
+        }
+        req.push_str("]}");
+        let (status, body) = http("POST", "/v1/predict", &req);
+        assert_eq!(status, 200, "{body}");
+        let argmax: usize = body
+            .split("\"argmax\":")
+            .nth(1)
+            .and_then(|s| s.split(',').next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert_eq!(argmax, expect, "sample {j}: server and local argmax differ: {body}");
+    }
+
+    let (status, _) = http("POST", "/admin/shutdown", "");
+    assert_eq!(status, 200);
+    let out = server.wait_with_output().unwrap();
+    assert!(out.status.success(), "server exit: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
 /// Bad layer pipelines die at config-parse time with actionable errors.
 #[test]
 fn rejects_invalid_model_layers_config() {

@@ -5,7 +5,7 @@ use neural_rs::collectives::{Communicator, LocalComm, ReduceAlgo, Team};
 use neural_rs::coordinator::{BatchStrategy, Trainer, TrainerOptions};
 use neural_rs::data::{label_digits, shard_bounds, synthesize, Dataset};
 use neural_rs::nn::{
-    cross_entropy_cost, Activation, Gradients, LayerSpec, Mode, Network, Workspace,
+    cross_entropy_cost, Activation, Gradients, ImageDims, LayerSpec, Mode, Network, Workspace,
 };
 use neural_rs::tensor::{vecops, Matrix, Rng};
 use neural_rs::testkit::{check, ensure};
@@ -236,6 +236,7 @@ fn prop_parallel_training_matches_serial() {
                 dims: dims.clone(),
                 activation: Activation::Sigmoid,
                 layers: vec![],
+                image: None,
                 eta: 2.0,
                 batch_size: batch,
                 epochs: 1,
@@ -387,6 +388,92 @@ fn dropout_stack_gradient_matches_finite_differences() {
         assert!(
             (fd - gflat[i]).abs() < 1e-5,
             "param {i}: fd={fd} analytic={}",
+            gflat[i]
+        );
+    }
+}
+
+/// Finite-difference gradient check through the full image stack
+/// (Conv2d→MaxPool2d→Flatten→Dense→Softmax with cross-entropy): the
+/// analytic im2col/col2im backward and the argmax routing must match
+/// central differences on every parameter — conv weights, conv biases,
+/// and the dense chain behind the flatten.
+#[test]
+fn conv_stack_gradient_matches_finite_differences() {
+    let specs = vec![
+        LayerSpec::Conv2d { filters: 2, kernel: 3, stride: 1, activation: Activation::Tanh },
+        LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+        LayerSpec::Flatten,
+        LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+        LayerSpec::Softmax,
+    ];
+    let img = ImageDims::new(1, 6, 6);
+    let mut net: Network<f64> = Network::from_specs_image(36, Some(img), &specs, 91);
+    // Irregular inputs keep the pooling argmax away from exact ties, so
+    // the train-mode loss is differentiable at this point.
+    let mut rng = Rng::new(92);
+    let x = Matrix::from_fn(36, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Matrix::from_fn(3, 3, |i, j| if (i + j) % 3 == 0 { 1.0 } else { 0.0 });
+
+    let g = net.grad_batch(&x, &y);
+    let gflat = g.to_flat();
+    let mut flat = net.params_to_flat();
+    assert_eq!(gflat.len(), flat.len(), "gradient layout must equal parameter layout");
+    let h = 1e-6;
+    for i in 0..flat.len() {
+        let orig = flat[i];
+        flat[i] = orig + h;
+        net.params_unflatten_from(&flat);
+        let cp = net.loss_batch(&x, &y) * x.cols() as f64;
+        flat[i] = orig - h;
+        net.params_unflatten_from(&flat);
+        let cm = net.loss_batch(&x, &y) * x.cols() as f64;
+        flat[i] = orig;
+        net.params_unflatten_from(&flat);
+        let fd = (cp - cm) / (2.0 * h);
+        assert!(
+            (fd - gflat[i]).abs() < 1e-5,
+            "conv stack param {i}: fd={fd} analytic={}",
+            gflat[i]
+        );
+    }
+}
+
+/// The same check through a multi-channel, strided, quadratic-cost
+/// pipeline (no softmax head, relu pooling survivor routing): conv on
+/// 2-channel input, overlapping pool windows (stride < kernel).
+#[test]
+fn multichannel_conv_gradient_matches_finite_differences() {
+    let specs = vec![
+        LayerSpec::Conv2d { filters: 3, kernel: 2, stride: 2, activation: Activation::Sigmoid },
+        LayerSpec::MaxPool2d { kernel: 2, stride: 1 },
+        LayerSpec::Flatten,
+        LayerSpec::Dense { units: 2, activation: Activation::Tanh },
+    ];
+    let img = ImageDims::new(2, 6, 6);
+    let mut net: Network<f64> = Network::from_specs_image(72, Some(img), &specs, 83);
+    let mut rng = Rng::new(84);
+    let x = Matrix::from_fn(72, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let y = Matrix::from_fn(2, 2, |_, _| rng.uniform_in(0.0, 1.0));
+
+    let g = net.grad_batch(&x, &y);
+    let gflat = g.to_flat();
+    let mut flat = net.params_to_flat();
+    let h = 1e-6;
+    for i in 0..flat.len() {
+        let orig = flat[i];
+        flat[i] = orig + h;
+        net.params_unflatten_from(&flat);
+        let cp = net.loss_batch(&x, &y) * x.cols() as f64;
+        flat[i] = orig - h;
+        net.params_unflatten_from(&flat);
+        let cm = net.loss_batch(&x, &y) * x.cols() as f64;
+        flat[i] = orig;
+        net.params_unflatten_from(&flat);
+        let fd = (cp - cm) / (2.0 * h);
+        assert!(
+            (fd - gflat[i]).abs() < 1e-5,
+            "multichannel conv param {i}: fd={fd} analytic={}",
             gflat[i]
         );
     }

@@ -11,7 +11,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use neural_rs::data::{label_digits, synthesize};
-use neural_rs::nn::{Activation, Gradients, LayerSpec, Network, Workspace};
+use neural_rs::nn::{Activation, Gradients, ImageDims, LayerSpec, Network, Workspace};
 
 struct CountingAlloc;
 
@@ -51,16 +51,30 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn warmed_grad_batch_performs_zero_allocations() {
     // The paper's Table 1 configuration: 784-30-10 sigmoid, batch 32 —
-    // plus the layer-graph stack (dense→dropout→dense→softmax), which
+    // plus the layer-graph stack (dense→dropout→dense→softmax) and the
+    // image pipeline (conv2d→maxpool2d→flatten→dense→softmax), which
     // must honor the same contract: per-op scratch (activations, caches,
-    // dropout masks) is allocated once at workspace construction, never
-    // in the hot loop.
+    // dropout masks, the conv im2col panel) is allocated once at
+    // workspace construction, never in the hot loop.
     let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
     let layered = Network::<f32>::from_specs(
         784,
         &[
             LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
             LayerSpec::Dropout { rate: 0.2 },
+            LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ],
+        1,
+    );
+    // conv(4, k5, s2): 4x12x12; pool(k2, s2): 4x6x6 = 144; dense 10.
+    let conv = Network::<f32>::from_specs_image(
+        784,
+        Some(ImageDims::new(1, 28, 28)),
+        &[
+            LayerSpec::Conv2d { filters: 4, kernel: 5, stride: 2, activation: Activation::Relu },
+            LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+            LayerSpec::Flatten,
             LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
             LayerSpec::Softmax,
         ],
@@ -76,15 +90,20 @@ fn warmed_grad_batch_performs_zero_allocations() {
     let mut ws = Workspace::new(net.dims());
     let mut grads = Gradients::zeros(net.dims());
     let mut ws_layered = Workspace::for_net(&layered);
-    let mut grads_layered = Gradients::zeros(layered.dims());
+    let mut grads_layered = layered.zero_grads();
+    let mut ws_conv = Workspace::for_net(&conv);
+    let mut grads_conv = conv.zero_grads();
 
-    // Warm-up: sizes every A/Z/Δ buffer (and the dropout mask cache) and
-    // the GEMM packing scratch at the largest batch this loop will see.
+    // Warm-up: sizes every A/Z/Δ/work buffer (incl. the dropout mask
+    // cache and the conv im2col panel) and the GEMM packing scratch at
+    // the largest batch this loop will see.
     for _ in 0..2 {
         grads.zero_out();
         net.grad_batch_into(&x, &y, &mut ws, &mut grads);
         grads_layered.zero_out();
         layered.grad_batch_into(&x, &y, &mut ws_layered, &mut grads_layered);
+        grads_conv.zero_out();
+        conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
     }
 
     ALLOCS.store(0, Ordering::SeqCst);
@@ -98,6 +117,9 @@ fn warmed_grad_batch_performs_zero_allocations() {
         grads_layered.zero_out();
         layered.grad_batch_into(&x, &y, &mut ws_layered, &mut grads_layered);
         layered.grad_batch_into(&x_tail, &y_tail, &mut ws_layered, &mut grads_layered);
+        grads_conv.zero_out();
+        conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
+        conv.grad_batch_into(&x_tail, &y_tail, &mut ws_conv, &mut grads_conv);
     }
     COUNTING.store(false, Ordering::SeqCst);
     let count = ALLOCS.load(Ordering::SeqCst);
@@ -106,9 +128,13 @@ fn warmed_grad_batch_performs_zero_allocations() {
         "steady-state grad_batch_into made {count} heap allocations (want 0)"
     );
 
-    // Sanity: the warmed path still computes the right thing.
+    // Sanity: the warmed paths still compute the right thing.
     grads.zero_out();
     net.grad_batch_into(&x, &y, &mut ws, &mut grads);
     let fresh = net.grad_batch(&x, &y);
     assert_eq!(grads, fresh, "zero-alloc path must stay numerically identical");
+    grads_conv.zero_out();
+    conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
+    let fresh_conv = conv.grad_batch(&x, &y);
+    assert_eq!(grads_conv, fresh_conv, "conv zero-alloc path must stay numerically identical");
 }

@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Compares a freshly generated bench JSON (BENCH_dense_ops.json /
+BENCH_serve.json) against a baseline from a previous run and fails when
+any throughput metric regressed by more than the threshold (default 25%).
+
+Usage:
+    check_bench_regression.py [--threshold 0.25] BASELINE CURRENT
+
+Schema-aware:
+  - dense_ops/v1: results[] rows keyed by (section, op, variant) with a
+    samples_per_s / gflop_per_s throughput field (higher is better);
+  - serve_load/v1: modes[] keyed by name with an rps field.
+
+Baselines whose "measured" flag is false (the committed placeholders from
+the toolchain-less build container) or whose metrics are null/zero carry
+no signal: those comparisons are skipped with a note, never failed, so
+the gate arms itself automatically once the first measured artifact
+exists.
+"""
+
+import argparse
+import json
+import sys
+
+
+def metrics(doc):
+    """Yield (key, value) throughput metrics for a bench JSON document."""
+    schema = doc.get("schema", "")
+    if schema.startswith("dense_ops"):
+        for row in doc.get("results", []):
+            key = "{}/{}/{}".format(
+                row.get("section"), row.get("op"), row.get("variant")
+            )
+            for field in ("samples_per_s", "gflop_per_s"):
+                if field in row:
+                    yield f"{key}:{field}", row[field]
+    elif schema.startswith("serve_load"):
+        for mode in doc.get("modes", []):
+            yield "mode/{}:rps".format(mode.get("name")), mode.get("rps")
+    else:
+        print(f"note: unknown schema '{schema}'; nothing to compare")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="maximum allowed fractional regression (default 0.25)")
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    if not base.get("measured", False):
+        print(f"SKIP {args.baseline}: baseline is an unmeasured placeholder "
+              "(no previous CI artifact yet); gate passes vacuously")
+        return 0
+    if not cur.get("measured", False):
+        print(f"FAIL {args.current}: current run did not record measured=true")
+        return 1
+
+    base_metrics = dict(metrics(base))
+    cur_metrics = dict(metrics(cur))
+    failures = []
+    compared = 0
+    for key, now in cur_metrics.items():
+        was = base_metrics.get(key)
+        # Null/zero baselines (skipped rows, e.g. pjrt-off) carry no signal.
+        if was is None or now is None or not was or was <= 0:
+            print(f"  skip {key}: baseline={was!r} current={now!r}")
+            continue
+        compared += 1
+        change = (now - was) / was
+        status = "ok"
+        if change < -args.threshold:
+            status = "REGRESSION"
+            failures.append((key, was, now, change))
+        print(f"  {status:>10} {key}: {was:.1f} -> {now:.1f} ({change:+.1%})")
+
+    # A measured baseline metric that vanished from the current run is a
+    # silent total regression (renamed/dropped bench variant) — fail loud
+    # instead of letting the surviving metrics carry the gate.
+    for key, was in base_metrics.items():
+        if key in cur_metrics or was is None or not was or was <= 0:
+            continue
+        print(f"  REGRESSION {key}: {was:.1f} -> MISSING from current results")
+        failures.append((key, was, float("nan"), -1.0))
+
+    if not compared:
+        print("note: no comparable metrics between baseline and current; "
+              "gate passes vacuously")
+        return 0
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed more than "
+              f"{args.threshold:.0%} vs {args.baseline}:")
+        for key, was, now, change in failures:
+            print(f"  {key}: {was:.1f} -> {now:.1f} ({change:+.1%})")
+        return 1
+    print(f"\nbench gate OK: {compared} metric(s) within {args.threshold:.0%} "
+          f"of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
