@@ -1,0 +1,174 @@
+//! Micro-bench — conv pipeline throughput (im2col + one whole-batch
+//! GEMM per pass) across the kernel dispatch table.
+//!
+//! Three variants on an MNIST-shaped conv stack
+//! (conv 8×k3s2 → maxpool k2s2 → flatten → dense 10 → softmax, batch 32):
+//!
+//! - `blocked_scalar_kernel` — dispatch pinned to the portable scalar
+//!   tile (the `PALLAS_FORCE_SCALAR=1` fallback);
+//! - `blocked_simd` — whatever microkernel the runtime dispatch selected
+//!   (AVX2+FMA / NEON / scalar on plain hosts), fused epilogues on;
+//! - `pooled_threads_N` — the SIMD path with batch columns sharded over
+//!   the persistent worker pool through reused [`GradShards`].
+//!
+//! Results are printed as a table and written to `BENCH_conv_ops.json`
+//! (schema `conv_ops/v1`, same row shape as dense_ops), which
+//! `scripts/check_bench_regression.py` gates in CI.
+//!
+//! Run: `cargo bench --bench conv_ops` (BENCH_FULL=1 for more reps).
+
+use neural_rs::data::{label_digits, synthesize};
+use neural_rs::metrics::{Stopwatch, Table};
+use neural_rs::nn::{Activation, GradShards, ImageDims, LayerSpec, Network, Workspace};
+use neural_rs::tensor::simd::{self, KernelKind};
+use neural_rs::tensor::Summary;
+
+fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
+    f(); // warmup
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed_s()
+        })
+        .collect();
+    Summary::of(&times)
+}
+
+struct Row {
+    op: &'static str,
+    variant: String,
+    us_per_call: f64,
+    samples_per_s: f64,
+}
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").is_ok();
+    let reps = if full { 200 } else { 50 };
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = hw.clamp(2, 8);
+    let batch = 32usize;
+    let b = batch as f64;
+
+    println!("# pallas {}", simd::describe());
+    println!("# conv_ops: 1x28x28 conv8k3s2 -> pool2s2 -> dense10 -> softmax, batch {batch}");
+
+    // conv(8,k3,s2): 8x13x13 = 1352; pool(k2,s2): 8x6x6 = 288; dense 10.
+    let specs = vec![
+        LayerSpec::Conv2d { filters: 8, kernel: 3, stride: 2, activation: Activation::Relu },
+        LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+        LayerSpec::Flatten,
+        LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+        LayerSpec::Softmax,
+    ];
+    let net: Network<f32> =
+        Network::from_specs_image(784, Some(ImageDims::new(1, 28, 28)), &specs, 5);
+    let data = synthesize::<f32>(batch, 9);
+    let x = data.images;
+    let y = label_digits::<f32>(&data.labels);
+
+    let mut rows: Vec<Row> = Vec::new();
+    let simd_kind = simd::detected();
+    let kinds = [(KernelKind::Scalar, "blocked_scalar_kernel"), (simd_kind, "blocked_simd")];
+
+    for (kind, variant) in kinds {
+        simd::force(Some(kind));
+        let mut ws = Workspace::for_net(&net);
+        let mut g = net.zero_grads();
+        g.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut g); // warm under this kernel
+        let s = time_reps(reps, || {
+            g.zero_out();
+            net.grad_batch_into(&x, &y, &mut ws, &mut g);
+            std::hint::black_box(&g);
+        });
+        println!(
+            "grad  {:22} {:9.1} µs/call ({:9.0} samples/s)",
+            variant,
+            s.mean * 1e6,
+            b / s.mean
+        );
+        rows.push(Row {
+            op: "grad_batch",
+            variant: variant.into(),
+            us_per_call: s.mean * 1e6,
+            samples_per_s: b / s.mean,
+        });
+
+        let s = time_reps(reps, || {
+            std::hint::black_box(net.output_batch_with(&x, &mut ws));
+        });
+        println!(
+            "fwd   {:22} {:9.1} µs/call ({:9.0} samples/s)",
+            variant,
+            s.mean * 1e6,
+            b / s.mean
+        );
+        rows.push(Row {
+            op: "forward_batch",
+            variant: variant.into(),
+            us_per_call: s.mean * 1e6,
+            samples_per_s: b / s.mean,
+        });
+        simd::force(None);
+    }
+
+    // Pooled-threaded gradient through reused shard state (the trainer's
+    // intra_threads steady state: no spawn, no steady-state allocation).
+    let mut shards = GradShards::for_net(&net, threads);
+    let mut total = net.zero_grads();
+    total.zero_out();
+    net.grad_batch_threaded_into(&x, &y, &mut shards, 0, &mut total); // warm
+    let mut step = 1u64;
+    let s = time_reps(reps, || {
+        total.zero_out();
+        net.grad_batch_threaded_into(&x, &y, &mut shards, step, &mut total);
+        step += 1;
+        std::hint::black_box(&total);
+    });
+    let variant = format!("pooled_threads_{threads}");
+    println!("grad  {:22} {:9.1} µs/call ({:9.0} samples/s)", variant, s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        op: "grad_batch",
+        variant,
+        us_per_call: s.mean * 1e6,
+        samples_per_s: b / s.mean,
+    });
+
+    let mut table = Table::new(&["Op", "Variant", "µs/call", "samples/s"]);
+    for r in &rows {
+        table.row(&[
+            r.op.to_string(),
+            r.variant.clone(),
+            format!("{:.1}", r.us_per_call),
+            format!("{:.1}", r.samples_per_s),
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"conv_ops/v1\",\n");
+    json.push_str("  \"measured\": true,\n");
+    json.push_str("  \"generated_by\": \"cargo bench --bench conv_ops\",\n");
+    json.push_str(&format!("  \"hw_threads\": {hw},\n"));
+    json.push_str(&format!("  \"threaded_variant_threads\": {threads},\n"));
+    json.push_str(&format!("  \"simd_kernel\": \"{}\",\n", simd_kind.name()));
+    json.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"section\": \"conv_mnist_b32\", \"op\": \"{}\", \"variant\": \"{}\", \
+             \"us_per_call\": {:.2}, \"samples_per_s\": {:.2}}}{}\n",
+            r.op,
+            r.variant,
+            r.us_per_call,
+            r.samples_per_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_conv_ops.json", &json) {
+        Ok(()) => println!("# wrote BENCH_conv_ops.json"),
+        Err(e) => eprintln!("# could not write BENCH_conv_ops.json: {e}"),
+    }
+}

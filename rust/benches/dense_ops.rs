@@ -1,15 +1,23 @@
 //! Micro-bench — the native engine's dense-op hot path, before/after the
 //! blocked-GEMM + workspace rewrite.
 //!
-//! Three variants per op, on the paper's 784-30-10 micro-batch (batch 32)
-//! and a wide 1024x1024x1024 GEMM stress shape:
+//! Variants per op, on the paper's 784-30-10 micro-batch (batch 32) and
+//! a wide 1024x1024x1024 GEMM stress shape:
 //!
 //! - `naive`   — the seed kernels: `w.transpose()` materialized per call,
 //!               triple-loop matmul, ~10 temporaries per gradient;
 //! - `blocked` — the packed/blocked GEMM through a warmed zero-allocation
-//!               [`Workspace`] (the steady-state training path);
+//!               [`Workspace`] (the steady-state training path), running
+//!               whatever SIMD microkernel the runtime dispatch selected
+//!               and the fused bias/activation epilogue;
+//! - `blocked_scalar_kernel` — the same path pinned to the portable
+//!               scalar tile (what `PALLAS_FORCE_SCALAR=1` gives you), so
+//!               the SIMD speedup is visible in one file;
+//! - `blocked_unfused_epilogue` — blocked GEMM but with the legacy
+//!               separate bias + activation passes (the fused-epilogue
+//!               win, isolated);
 //! - `threads` — the blocked path with output/batch columns sharded over
-//!               scoped std threads (the intra-image axis).
+//!               the persistent worker pool (the intra-image axis).
 //!
 //! Results are printed as a table and written to `BENCH_dense_ops.json`
 //! (overwriting the committed baseline) so later PRs have a perf
@@ -21,6 +29,7 @@
 use neural_rs::data::synthesize;
 use neural_rs::metrics::{Stopwatch, Table};
 use neural_rs::nn::{Gradients, Network, Workspace};
+use neural_rs::tensor::simd::{self, KernelKind};
 use neural_rs::tensor::{vecops, Matrix, Rng, Summary};
 
 /// Replica of the seed's `grad_batch` (pre-rewrite): transpose copies,
@@ -88,6 +97,24 @@ fn output_batch_seed(net: &Network<f32>, x: &Matrix<f32>) -> Matrix<f32> {
     a
 }
 
+/// Blocked GEMM forward with the *legacy unfused* epilogue: one packed
+/// GEMM per layer, then separate full passes for the bias add and the
+/// activation — the pre-fusion memory traffic, isolated so the fused
+/// rows have a direct baseline.
+fn output_batch_unfused(net: &Network<f32>, x: &Matrix<f32>) -> Matrix<f32> {
+    let act = net.activation();
+    let mut a = x.clone();
+    for n in 1..net.dims().len() {
+        let mut z = net.dense_weight(n - 1).tn_matmul(&a);
+        for j in 0..z.cols() {
+            vecops::axpy(z.col_mut(j), 1.0, net.dense_bias(n - 1));
+        }
+        z.map_inplace(|v| act.apply(v));
+        a = z;
+    }
+    a
+}
+
 fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
     f(); // warmup
     let times: Vec<f64> = (0..reps)
@@ -125,6 +152,7 @@ fn main() {
     let x = data.images;
     let y = neural_rs::data::label_digits::<f32>(&data.labels);
     let b = batch as f64;
+    println!("# pallas {}", simd::describe());
     println!("# dense_ops: 784-30-10 batch {batch} | {hw} hw threads (threaded rows use {threads})");
 
     let s = time_reps(mlp_reps, || {
@@ -155,6 +183,27 @@ fn main() {
         section: "mlp_784_30_10_b32",
         op: "grad_batch",
         variant: "blocked_workspace".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
+    // Same warmed-workspace path pinned to the portable scalar tile:
+    // the SIMD-vs-scalar delta for the gradient step.
+    simd::force(Some(KernelKind::Scalar));
+    g.zero_out();
+    net.grad_batch_into(&x, &y, &mut ws, &mut g); // re-warm under scalar
+    let s = time_reps(mlp_reps, || {
+        g.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut g);
+        std::hint::black_box(&g);
+    });
+    simd::force(None);
+    println!("grad  scalar:   {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "grad_batch",
+        variant: "blocked_scalar_kernel".into(),
         us_per_call: s.mean * 1e6,
         throughput: b / s.mean,
         throughput_unit: "samples_per_s",
@@ -195,6 +244,22 @@ fn main() {
         section: "mlp_784_30_10_b32",
         op: "forward_batch",
         variant: "blocked".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
+    // Blocked GEMM but with the legacy separate bias/σ passes — the
+    // direct baseline for the fused-epilogue rows above it (the gate
+    // checks fused `blocked` ≥ this, modulo the threshold).
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(output_batch_unfused(&net, &x));
+    });
+    println!("fwd   unfused:  {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "forward_batch",
+        variant: "blocked_unfused_epilogue".into(),
         us_per_call: s.mean * 1e6,
         throughput: b / s.mean,
         throughput_unit: "samples_per_s",
@@ -244,6 +309,21 @@ fn main() {
         section: "gemm_1024",
         op: "matmul",
         variant: "blocked".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: gflop / s.mean,
+        throughput_unit: "gflop_per_s",
+    });
+
+    simd::force(Some(KernelKind::Scalar));
+    let s = time_reps(gemm_reps, || {
+        std::hint::black_box(a.matmul(&bm));
+    });
+    simd::force(None);
+    println!("gemm  scalar:   {:9.1} ms/call ({:6.2} GFLOP/s)", s.mean * 1e3, gflop / s.mean);
+    rows.push(Row {
+        section: "gemm_1024",
+        op: "matmul",
+        variant: "blocked_scalar_kernel".into(),
         us_per_call: s.mean * 1e6,
         throughput: gflop / s.mean,
         throughput_unit: "gflop_per_s",

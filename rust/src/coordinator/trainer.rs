@@ -3,7 +3,8 @@
 use crate::collectives::Communicator;
 use crate::data::{label_digits, shard_bounds, Dataset};
 use crate::nn::{
-    Activation, Gradients, ImageDims, LayerSpec, Network, Optimizer, OptimizerKind, Workspace,
+    Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Optimizer, OptimizerKind,
+    Workspace,
 };
 use crate::runtime::{CompiledNet, PjrtScalar};
 use crate::tensor::{Matrix, Rng};
@@ -148,6 +149,12 @@ pub struct Trainer<'c, T, C: Communicator> {
     /// after the first batch warms it, the steady-state gradient step
     /// performs zero heap allocations.
     workspace: Workspace<T>,
+    /// Reused per-shard buffers for the pooled intra-image threaded
+    /// gradient path (`intra_threads > 1` only): warm workspaces and
+    /// staged inputs per shard, so the threaded steady state is as
+    /// allocation-free as the serial one — and spawn-free, since the
+    /// shards fan out on the persistent worker pool.
+    shards: Option<GradShards<T>>,
     /// Shuffled-epoch state.
     order: Vec<usize>,
     cursor: usize,
@@ -183,6 +190,14 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         // layer op.
         let grads = net.zero_grads();
         let workspace = Workspace::for_net(&net);
+        // Per-shard threaded buffers only matter on the native engine
+        // path (the pjrt arm never column-shards), so skip the
+        // parameter-sized allocations when an engine is present.
+        let shards = if engine.is_none() && opts.intra_threads > 1 {
+            Some(GradShards::for_net(&net, opts.intra_threads))
+        } else {
+            None
+        };
         let batch_rng = Rng::new(opts.batch_seed);
         let optimizer = Optimizer::for_net(opts.optimizer, &net);
         Self {
@@ -195,6 +210,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             flat,
             grads,
             workspace,
+            shards,
             order: Vec::new(),
             cursor: 0,
             step: 0,
@@ -253,16 +269,15 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             }
             None if self.opts.intra_threads > 1 => {
                 // Intra-image column sharding: a second scaling axis on
-                // top of the per-image team. The step counter advances
-                // the shard workspaces' dropout mask streams, so masks
-                // stay fresh across batches (the ROADMAP replay bug).
-                let g = self.net.grad_batch_threaded_at(
-                    &xs,
-                    &ys,
-                    self.opts.intra_threads,
-                    self.step,
-                );
-                self.grads.add_assign(&g);
+                // top of the per-image team, fanned out on the
+                // persistent worker pool through the trainer's reused
+                // shard buffers (no spawn, no steady-state allocation).
+                // The step counter advances the shard workspaces'
+                // dropout mask streams, so masks stay fresh across
+                // batches (the ROADMAP replay bug).
+                let shards =
+                    self.shards.as_mut().expect("intra-thread shards built at construction");
+                self.net.grad_batch_threaded_into(&xs, &ys, shards, self.step, &mut self.grads);
             }
             None => {
                 // Zero-allocation steady state: accumulate straight into

@@ -117,6 +117,10 @@ fn main() {
         println!("{HELP}");
         return;
     }
+    // The selected-kernel line: which GEMM/epilogue dispatch this process
+    // runs with (see the README perf section; PALLAS_FORCE_SCALAR=1 pins
+    // the portable kernel).
+    eprintln!("# pallas {}", neural_rs::tensor::simd::describe());
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),

@@ -5,6 +5,7 @@
 //! one for its derivative, selected by name at construction (Listing 2).
 //! Here the same selection is an enum, parsed from the same names.
 
+use crate::tensor::simd;
 use crate::tensor::Scalar;
 
 /// The activation functions supported by neural-fortran, plus the
@@ -142,14 +143,90 @@ impl Activation {
         }
     }
 
-    /// Apply σ elementwise into a new vector.
-    pub fn apply_vec<T: Scalar>(&self, xs: &[T]) -> Vec<T> {
-        xs.iter().map(|&x| self.apply(x)).collect()
+    /// Apply σ elementwise **in place** — no allocation, so warm-path
+    /// callers stay inside the zero-allocation training contract.
+    pub fn apply_vec<T: Scalar>(&self, xs: &mut [T]) {
+        for x in xs.iter_mut() {
+            *x = self.apply(*x);
+        }
     }
 
-    /// Apply σ' elementwise into a new vector.
-    pub fn prime_vec<T: Scalar>(&self, xs: &[T]) -> Vec<T> {
-        xs.iter().map(|&x| self.prime(x)).collect()
+    /// Apply σ' elementwise **in place**.
+    pub fn prime_vec<T: Scalar>(&self, xs: &mut [T]) {
+        for x in xs.iter_mut() {
+            *x = self.prime(*x);
+        }
+    }
+
+    /// The dispatch-table id of this activation, when the SIMD table
+    /// carries a vectorized kernel family for it.
+    fn simd_id(&self) -> Option<simd::ActId> {
+        match self {
+            Self::Relu => Some(simd::ActId::Relu),
+            Self::Sigmoid => Some(simd::ActId::Sigmoid),
+            Self::Tanh => Some(simd::ActId::Tanh),
+            _ => None,
+        }
+    }
+
+    /// σ as a slice kernel `out[i] = σ(z[i])` — what the fused GEMM
+    /// epilogue ([`crate::tensor::Epilogue`]) consumes. Routed through
+    /// the runtime dispatch table: relu/sigmoid/tanh get the arch's
+    /// vectorized kernel when one exists (relu is bit-exact with the
+    /// scalar formula; sigmoid/tanh agree within ~1e-6 absolute), every
+    /// other combination falls back to the generic scalar loop, which is
+    /// bit-exact with [`Activation::apply`].
+    pub fn apply_kernel<T: Scalar>(&self) -> simd::SliceFn<T> {
+        if let Some(id) = self.simd_id() {
+            if let Some(k) = T::simd_act(id, false) {
+                return k;
+            }
+        }
+        match self {
+            Self::Gaussian => apply_slice::<T, 0>,
+            Self::Relu => apply_slice::<T, 1>,
+            Self::Sigmoid => apply_slice::<T, 2>,
+            Self::Step => apply_slice::<T, 3>,
+            Self::Tanh => apply_slice::<T, 4>,
+            Self::LeakyRelu => apply_slice::<T, 5>,
+            Self::Elu => apply_slice::<T, 6>,
+        }
+    }
+
+    /// σ' as a slice kernel — the activation-prime-stash epilogue's
+    /// second output. Same dispatch rules as [`Activation::apply_kernel`].
+    pub fn prime_kernel<T: Scalar>(&self) -> simd::SliceFn<T> {
+        if let Some(id) = self.simd_id() {
+            if let Some(k) = T::simd_act(id, true) {
+                return k;
+            }
+        }
+        match self {
+            Self::Gaussian => prime_slice::<T, 0>,
+            Self::Relu => prime_slice::<T, 1>,
+            Self::Sigmoid => prime_slice::<T, 2>,
+            Self::Step => prime_slice::<T, 3>,
+            Self::Tanh => prime_slice::<T, 4>,
+            Self::LeakyRelu => prime_slice::<T, 5>,
+            Self::Elu => prime_slice::<T, 6>,
+        }
+    }
+}
+
+/// Generic σ slice kernel, monomorphized per activation (`A` indexes
+/// [`Activation::ALL`]) so it coerces to a plain fn pointer.
+fn apply_slice<T: Scalar, const A: usize>(zs: &[T], out: &mut [T]) {
+    let act = Activation::ALL[A];
+    for (o, &z) in out.iter_mut().zip(zs) {
+        *o = act.apply(z);
+    }
+}
+
+/// Generic σ' slice kernel, monomorphized per activation.
+fn prime_slice<T: Scalar, const A: usize>(zs: &[T], out: &mut [T]) {
+    let act = Activation::ALL[A];
+    for (o, &z) in out.iter_mut().zip(zs) {
+        *o = act.prime(z);
     }
 }
 
@@ -256,10 +333,47 @@ mod tests {
     }
 
     #[test]
-    fn vec_forms() {
-        let xs = [-1.0f64, 0.0, 1.0];
+    fn vec_forms_are_in_place() {
         let r = Activation::Relu;
-        assert_eq!(r.apply_vec(&xs), vec![0.0, 0.0, 1.0]);
-        assert_eq!(r.prime_vec(&xs), vec![0.0, 0.0, 1.0]);
+        let mut xs = [-1.0f64, 0.0, 1.0];
+        r.apply_vec(&mut xs);
+        assert_eq!(xs, [0.0, 0.0, 1.0]);
+        let mut ps = [-1.0f64, 0.0, 1.0];
+        r.prime_vec(&mut ps);
+        assert_eq!(ps, [0.0, 0.0, 1.0]);
+    }
+
+    /// Every activation's slice kernels must agree with the elementwise
+    /// forms — the contract the fused GEMM epilogue relies on. f64 has no
+    /// SIMD activation kernels, so agreement is bitwise; f32 may route
+    /// relu/sigmoid/tanh through the dispatch table, so it gets an
+    /// absolute tolerance instead.
+    #[test]
+    fn slice_kernels_match_elementwise_forms() {
+        let zs64: Vec<f64> = (-40..=40).map(|i| i as f64 * 0.25).collect();
+        let zs32: Vec<f32> = zs64.iter().map(|&v| v as f32).collect();
+        for act in Activation::ALL {
+            let mut out = vec![0.0f64; zs64.len()];
+            act.apply_kernel::<f64>()(&zs64, &mut out);
+            for (&z, &o) in zs64.iter().zip(&out) {
+                assert_eq!(o, act.apply(z), "{act}: f64 apply kernel at z={z}");
+            }
+            act.prime_kernel::<f64>()(&zs64, &mut out);
+            for (&z, &o) in zs64.iter().zip(&out) {
+                assert_eq!(o, act.prime(z), "{act}: f64 prime kernel at z={z}");
+            }
+
+            let mut out32 = vec![0.0f32; zs32.len()];
+            act.apply_kernel::<f32>()(&zs32, &mut out32);
+            for (&z, &o) in zs32.iter().zip(&out32) {
+                let want = act.apply(z);
+                assert!((o - want).abs() < 1e-5, "{act}: f32 apply kernel {o} vs {want}");
+            }
+            act.prime_kernel::<f32>()(&zs32, &mut out32);
+            for (&z, &o) in zs32.iter().zip(&out32) {
+                let want = act.prime(z);
+                assert!((o - want).abs() < 1e-5, "{act}: f32 prime kernel {o} vs {want}");
+            }
+        }
     }
 }

@@ -42,7 +42,7 @@
 //! `[patch, out_channel]` panels.
 
 use super::activation::Activation;
-use crate::tensor::gemm::{self, GemmScratch, Op};
+use crate::tensor::gemm::{self, Epilogue, GemmScratch, Op};
 use crate::tensor::{vecops, Matrix, Rng, Scalar};
 
 /// Forward-pass mode: [`Mode::Train`] applies stochastic layers
@@ -449,6 +449,9 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     /// holds `dC/d(out)` on entry and may be consumed in place, `cache`
     /// is what forward stored, `work` is the forward pass's working
     /// buffer (readable, and overwritable once the op is done with it).
+    /// Backward must follow a [`Mode::Train`] forward through the same
+    /// workspace: ops may rely on state only that mode writes (dropout's
+    /// mask cache, dense's σ' work stash).
     /// Writes `dC/d(x)` into `d_in` (skipped for the first op, which has
     /// nothing below it) and *accumulates* parameter tendencies into the
     /// `grads` views when the op owns parameters. Allocation-free.
@@ -484,6 +487,14 @@ impl<T: Scalar> Clone for Box<dyn LayerOp<T>> {
 /// All products run through the blocked/packed GEMM of
 /// [`crate::tensor::gemm`], so no transposed copies are ever
 /// materialized.
+///
+/// The forward bias add and activation are **fused into the GEMM's
+/// C-write** (the [`Epilogue`]): no second pass over Z. Training-mode
+/// forward additionally stashes `σ'(Z)` in the op's work buffer
+/// (bias+activation-prime-stash), so backward's `δ = dC/dA ⊙ σ'(Z)` is a
+/// pure elementwise product — no σ' recomputation. All of it is
+/// bit-identical to the historical two-pass form under the scalar
+/// kernel; SIMD kernels agree within ulp-scale tolerances.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dense<T = f32> {
     /// Weights: `w[(i, j)]` connects input `i` to output `j`
@@ -521,6 +532,13 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         self.w.cols()
     }
 
+    fn work_rows(&self) -> usize {
+        // σ'(Z), stashed by the train-mode fused forward epilogue and
+        // consumed by backward (valid forward→backward, like the conv
+        // im2col panel).
+        self.w.cols()
+    }
+
     fn param_count(&self) -> usize {
         self.w.len() + self.b.len()
     }
@@ -546,19 +564,30 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         x: &Matrix<T>,
         out: &mut Matrix<T>,
         cache: &mut Matrix<T>,
-        _work: &mut Matrix<T>,
+        work: &mut Matrix<T>,
         scratch: &mut GemmScratch<T>,
-        _mode: Mode,
+        mode: Mode,
         _mask_rng: &mut Rng,
     ) {
-        // Z = Wᵀ·X + b (packing absorbs the transposition), A = σ(Z).
-        gemm::gemm_into(Op::T, &self.w, Op::N, x, cache, false, scratch);
-        for j in 0..x.cols() {
-            vecops::axpy(cache.col_mut(j), T::ONE, &self.b);
-        }
-        for (av, &zv) in out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
-            *av = self.activation.apply(zv);
-        }
+        // Z = Wᵀ·X + b (packing absorbs the transposition), A = σ(Z) —
+        // bias and activation fused into the GEMM's C-write. Train-mode
+        // forward also stashes σ'(Z) in the work buffer for backward;
+        // eval (the serving path) skips the stash.
+        let ep = match mode {
+            Mode::Eval => Epilogue::BiasAct {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                out: out.as_mut_slice(),
+            },
+            Mode::Train => Epilogue::BiasActStash {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                prime: self.activation.prime_kernel::<T>(),
+                out: out.as_mut_slice(),
+                stash: work.as_mut_slice(),
+            },
+        };
+        gemm::gemm_into_ep(Op::T, &self.w, Op::N, x, cache, false, ep, scratch);
     }
 
     fn backward_batch_into(
@@ -566,14 +595,16 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         x: &Matrix<T>,
         d_out: &mut Matrix<T>,
         d_in: Option<&mut Matrix<T>>,
-        cache: &Matrix<T>,
-        _work: &mut Matrix<T>,
+        _cache: &Matrix<T>,
+        work: &mut Matrix<T>,
         grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         scratch: &mut GemmScratch<T>,
     ) {
-        // δ = dC/dA ⊙ σ'(Z), in place on the incoming delta.
-        for (dv, &zv) in d_out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
-            *dv = *dv * self.activation.prime(zv);
+        // δ = dC/dA ⊙ σ'(Z). The σ' factor was stashed by the train-mode
+        // fused forward (same value the old recomputation produced, so
+        // dense numerics stay bit-identical).
+        for (dv, &pv) in d_out.as_mut_slice().iter_mut().zip(work.as_slice()) {
+            *dv = *dv * pv;
         }
         if let Some((dw, db)) = grads {
             // dW += X·δᵀ ; db += row-sums of δ.
@@ -1014,7 +1045,16 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
         // The work buffer ([K·P, B]) *is* the [K, P·B] patch matrix and
         // the cache ([f·P, B]) *is* the [f, P·B] output, both without a
         // single copy — the channel-fastest layout makes them line up.
-        gemm::gemm_slices(
+        // The per-filter bias (one entry per output row of the [f, P·B]
+        // view) and A = σ(Z) are fused into the GEMM's C-write; backward
+        // recomputes σ' from the cached Z (the conv work panel is the
+        // im2col patch matrix, so there is no room for a stash).
+        let ep = Epilogue::BiasAct {
+            bias: &self.b,
+            apply: self.activation.apply_kernel::<T>(),
+            out: out.as_mut_slice(),
+        };
+        gemm::gemm_slices_ep(
             Op::T,
             self.w.as_slice(),
             kp,
@@ -1026,15 +1066,9 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
             kp,
             cache.as_mut_slice(),
             false,
+            ep,
             scratch,
         );
-        // Bias per filter, then A = σ(Z).
-        for zrow in cache.as_mut_slice().chunks_exact_mut(f) {
-            vecops::axpy(zrow, T::ONE, &self.b);
-        }
-        for (av, &zv) in out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
-            *av = self.activation.apply(zv);
-        }
     }
 
     fn backward_batch_into(
@@ -1203,20 +1237,41 @@ impl<T: Scalar> LayerOp<T> for MaxPool2d {
             for oy in 0..o.h {
                 for ox in 0..o.w {
                     let obase = (oy * o.w + ox) * c;
+                    // Pass 1 — branch-light window max: seed from the
+                    // window's (0,0) position, then fold every position
+                    // in with a pure max/select over the contiguous
+                    // channel run (no data-dependent branches, so the
+                    // autovectorizer can chew across channels).
+                    let first = ((oy * s) * w + ox * s) * c;
+                    oc[obase..obase + c].copy_from_slice(&xc[first..first + c]);
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let rbase = ((oy * s + ky) * w + ox * s + kx) * c;
+                            let win = &xc[rbase..rbase + c];
+                            let acc = &mut oc[obase..obase + c];
+                            for (m, &v) in acc.iter_mut().zip(win) {
+                                *m = if v > *m { v } else { *m };
+                            }
+                        }
+                    }
+                    // Pass 2 — argmax recovery: the first window index
+                    // holding the max, in the same ky-major scan order
+                    // the old compare-and-branch loop used, so routed
+                    // gradients are bit-identical. (NaN windows match
+                    // nothing and keep the (0,0) fallback, the old
+                    // loop's behaviour too.)
                     for ch in 0..c {
-                        let mut best_i = ((oy * s) * w + ox * s) * c + ch;
-                        let mut best = xc[best_i];
-                        for ky in 0..k {
-                            let rbase = ((oy * s + ky) * w + ox * s) * c + ch;
+                        let best = oc[obase + ch];
+                        let mut best_i = first + ch;
+                        'scan: for ky in 0..k {
                             for kx in 0..k {
-                                let i = rbase + kx * c;
-                                if xc[i] > best {
-                                    best = xc[i];
+                                let i = ((oy * s + ky) * w + ox * s + kx) * c + ch;
+                                if xc[i] == best {
                                     best_i = i;
+                                    break 'scan;
                                 }
                             }
                         }
-                        oc[obase + ch] = best;
                         cc[obase + ch] = T::from_f64(best_i as f64);
                     }
                 }
@@ -1348,7 +1403,7 @@ mod tests {
         assert_eq!(LayerOp::<f64>::in_size(&d), 2);
         assert_eq!(LayerOp::<f64>::out_size(&d), 3);
         assert_eq!(LayerOp::<f64>::cache_rows(&d), 3);
-        assert_eq!(LayerOp::<f64>::work_rows(&d), 0);
+        assert_eq!(LayerOp::<f64>::work_rows(&d), 3, "σ' stash for the fused backward");
         assert_eq!(LayerOp::<f64>::param_count(&d), 6 + 3);
         let (w, b) = LayerOp::<f64>::params(&d).unwrap();
         assert_eq!(w.rows(), 2);

@@ -29,6 +29,6 @@ pub use layers::{
     validate_specs, validate_specs_image, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp,
     LayerSpec, MaxPool2d, Mode, Softmax,
 };
-pub use network::Network;
+pub use network::{GradShards, Network};
 pub use optimizer::{Optimizer, OptimizerKind};
 pub use workspace::Workspace;

@@ -27,6 +27,7 @@ use super::layers::{
     Planned, Softmax,
 };
 use super::workspace::Workspace;
+use crate::tensor::pool::{self, SyncPtr};
 use crate::tensor::{gemm, vecops, Matrix, Rng, Scalar};
 
 /// A feed-forward neural network — the paper's `network_type`, now an
@@ -555,8 +556,9 @@ impl<T: Scalar> Network<T> {
     }
 
     /// [`Network::output_batch`] with the batch columns sharded across
-    /// `threads` scoped std threads (output columns are contiguous in
-    /// column-major storage, so shards write disjoint sub-slices).
+    /// the persistent worker pool (output columns are contiguous in
+    /// column-major storage, so shards write disjoint sub-slices). No
+    /// threads are spawned per call.
     pub fn output_batch_threaded(&self, x: &Matrix<T>, threads: usize) -> Matrix<T> {
         assert_eq!(x.rows(), self.sizes[0], "input size mismatch");
         let n = x.cols();
@@ -566,22 +568,19 @@ impl<T: Scalar> Network<T> {
         }
         let out_rows = self.output_size();
         let mut out = Matrix::zeros(out_rows, n);
-        let shards = gemm::col_shards(n, t);
-        let mut rest: &mut [T] = out.as_mut_slice();
-        std::thread::scope(|s| {
-            for &(lo, hi) in &shards {
-                if hi == lo {
-                    continue;
-                }
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * out_rows);
-                rest = tail;
-                s.spawn(move || {
-                    let xs = x.cols_range(lo, hi);
-                    let o = self.output_batch(&xs);
-                    head.copy_from_slice(o.as_slice());
-                });
+        let optr = SyncPtr::new(out.as_mut_slice().as_mut_ptr());
+        pool::run(t, &|si| {
+            let (lo, hi) = gemm::col_shard(n, t, si);
+            if hi == lo {
+                return;
             }
-            let _ = rest;
+            let xs = x.cols_range(lo, hi);
+            let o = self.output_batch(&xs);
+            // SAFETY: shards write disjoint column ranges of `out`.
+            let head = unsafe {
+                std::slice::from_raw_parts_mut(optr.get().add(lo * out_rows), (hi - lo) * out_rows)
+            };
+            head.copy_from_slice(o.as_slice());
         });
         out
     }
@@ -685,7 +684,7 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Batched gradient with the batch columns sharded across `threads`
-    /// scoped std threads — see [`Network::grad_batch_threaded_at`].
+    /// pool tasks — see [`Network::grad_batch_threaded_at`].
     /// This entry fixes the mask stream to step 0; training loops must
     /// pass their step counter via `grad_batch_threaded_at` so dropout
     /// draws fresh masks every batch.
@@ -699,11 +698,11 @@ impl<T: Scalar> Network<T> {
     }
 
     /// Batched gradient with the batch columns sharded across `threads`
-    /// scoped std threads (the intra-image axis: composes with the
-    /// coordinator's per-image `train_parallel` threads). Each shard runs
-    /// the blocked workspace pipeline privately; partial tendencies are
-    /// summed in shard order, so the result is deterministic for a given
-    /// `(threads, step)` pair.
+    /// pool tasks (the intra-image axis: composes with the coordinator's
+    /// per-image `train_parallel` threads). Builds fresh per-shard state
+    /// per call — hot loops (the trainer) hold a [`GradShards`] and call
+    /// [`Network::grad_batch_threaded_into`] instead, which is both
+    /// spawn-free *and* allocation-free at steady state.
     ///
     /// `step` advances the shard workspaces' dropout mask streams: shard
     /// `s` of step `n` seeds its masks from `(mask_seed, n, s)`, so
@@ -719,42 +718,62 @@ impl<T: Scalar> Network<T> {
         step: u64,
     ) -> Gradients<T> {
         assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
-        let n = x.cols();
-        let t = threads.max(1).min(n.max(1));
-        if t <= 1 {
-            // Serial fallback still honors the step stream, so dropout
-            // masks stay fresh when a tiny batch collapses the shard set.
-            let mut ws = Workspace::for_net_at(self, shard_stream(step, 0));
-            let mut g = self.zero_grads();
-            self.grad_batch_into(x, y, &mut ws, &mut g);
-            return g;
-        }
-        let bounds = gemm::col_shards(n, t);
-        let parts: Vec<Gradients<T>> = std::thread::scope(|s| {
-            let handles: Vec<_> = bounds
-                .iter()
-                .enumerate()
-                .map(|(si, &(lo, hi))| {
-                    s.spawn(move || {
-                        let xs = x.cols_range(lo, hi);
-                        let ys = y.cols_range(lo, hi);
-                        let mut ws = Workspace::for_net_at(self, shard_stream(step, si));
-                        let mut g = self.zero_grads();
-                        self.grad_batch_into(&xs, &ys, &mut ws, &mut g);
-                        g
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("intra-image gradient shard panicked"))
-                .collect()
-        });
+        let t = threads.max(1).min(x.cols().max(1));
+        let mut shards = GradShards::for_net(self, t);
         let mut total = self.zero_grads();
-        for p in &parts {
-            total.add_assign(p);
-        }
+        self.grad_batch_threaded_into(x, y, &mut shards, step, &mut total);
         total
+    }
+
+    /// The pooled, zero-allocation threaded gradient pass: shard the
+    /// batch columns over `shards` (caller-owned, reused across steps),
+    /// run every shard's forward/backward on the persistent worker pool,
+    /// and **accumulate** the partial tendencies into `total` in shard
+    /// order (deterministic for a given `(shards.threads(), step)`).
+    ///
+    /// Per call this (a) reseeds each shard workspace's mask streams to
+    /// `(step, shard)` in place, (b) stages each shard's input columns
+    /// into the slot's reused buffers, (c) fans the shards out on the
+    /// pool — no thread spawn, and with warm slots no heap allocation
+    /// (the `zero_alloc.rs` contract, extended to the threaded path).
+    /// Numerics are identical to [`Network::grad_batch_threaded_at`]:
+    /// same shard partition, same mask streams, same summation order.
+    pub fn grad_batch_threaded_into(
+        &self,
+        x: &Matrix<T>,
+        y: &Matrix<T>,
+        shards: &mut GradShards<T>,
+        step: u64,
+        total: &mut Gradients<T>,
+    ) {
+        assert_eq!(x.cols(), y.cols(), "x/y batch size mismatch");
+        assert_eq!(x.rows(), self.input_size(), "input size mismatch");
+        assert_eq!(y.rows(), self.output_size(), "output size mismatch");
+        assert!(self.grads_fit(total), "gradient dims mismatch");
+        let n = x.cols();
+        let t = shards.slots.len();
+        let (ir, or) = (x.rows(), y.rows());
+        let slots = SyncPtr::new(shards.slots.as_mut_ptr());
+        pool::run(t, &|si| {
+            // SAFETY: each task touches exactly its own slot.
+            let slot = unsafe { &mut *slots.get().add(si) };
+            let (lo, hi) = gemm::col_shard(n, t, si);
+            // Stage inside the task so the input/label memcpys
+            // parallelize with the other shards' work.
+            slot.ws.reseed_masks(self, shard_stream(step, si));
+            slot.grads.zero_out();
+            slot.x.resize_cols(hi - lo);
+            slot.y.resize_cols(hi - lo);
+            if hi == lo {
+                return; // more shards than samples: an empty shard is legal
+            }
+            slot.x.as_mut_slice().copy_from_slice(&x.as_slice()[lo * ir..hi * ir]);
+            slot.y.as_mut_slice().copy_from_slice(&y.as_slice()[lo * or..hi * or]);
+            self.grad_batch_into(&slot.x, &slot.y, &mut slot.ws, &mut slot.grads);
+        });
+        for slot in &shards.slots {
+            total.add_assign(&slot.grads);
+        }
     }
 
     /// Reference per-sample batch gradient (the paper's literal loop:
@@ -927,6 +946,47 @@ impl<T: Scalar> Network<T> {
     }
 }
 
+/// Reusable per-shard state for [`Network::grad_batch_threaded_into`]:
+/// one warm workspace, gradient accumulator, and staged input/label
+/// buffer per shard. Built once (per trainer, per thread count) and
+/// reused every step, so the pooled threaded gradient path performs zero
+/// heap allocations at steady state.
+#[derive(Debug)]
+pub struct GradShards<T = f32> {
+    slots: Vec<ShardSlot<T>>,
+}
+
+#[derive(Debug)]
+struct ShardSlot<T> {
+    ws: Workspace<T>,
+    grads: Gradients<T>,
+    x: Matrix<T>,
+    y: Matrix<T>,
+}
+
+impl<T: Scalar> GradShards<T> {
+    /// Shard state for `threads` shards of `net`'s gradient pass. The
+    /// first batch through each slot sizes its buffers (that pass
+    /// allocates; later passes at the same or smaller batch do not).
+    pub fn for_net(net: &Network<T>, threads: usize) -> Self {
+        let t = threads.max(1);
+        let slots = (0..t)
+            .map(|_| ShardSlot {
+                ws: Workspace::for_net(net),
+                grads: net.zero_grads(),
+                x: Matrix::zeros(net.input_size(), 0),
+                y: Matrix::zeros(net.output_size(), 0),
+            })
+            .collect();
+        Self { slots }
+    }
+
+    /// Number of shards this state fans out to.
+    pub fn threads(&self) -> usize {
+        self.slots.len()
+    }
+}
+
 /// Deterministic per-op dropout mask seed, derived from the construction
 /// seed and the op position.
 fn mask_seed(seed: u64, op_index: usize) -> u64 {
@@ -1006,7 +1066,7 @@ mod tests {
         assert_eq!(net.dims(), &[3, 5, 2], "dims is the parameter chain");
         assert_eq!(net.boundary_sizes(), &[3, 5, 5, 2, 2]);
         assert_eq!(net.cache_rows(), &[0, 5, 5, 2, 0]);
-        assert_eq!(net.work_rows(), &[0, 0, 0, 0, 0], "dense pipelines need no work panels");
+        assert_eq!(net.work_rows(), &[0, 5, 0, 2, 0], "dense ops stash σ' in their work buffers");
         assert!(net.has_softmax_head());
         assert_eq!(net.uniform_activation(), None, "dropout breaks plain-dense shape");
         assert_eq!(
@@ -1025,7 +1085,11 @@ mod tests {
         assert_eq!(net.dims(), &[36, 32, 3], "input + conv out + dense out");
         assert_eq!(net.boundary_sizes(), &[36, 32, 8, 8, 3]);
         assert_eq!(net.cache_rows(), &[0, 32, 8, 0, 3]);
-        assert_eq!(net.work_rows(), &[0, 9 * 16, 0, 0, 0], "conv negotiates its im2col panel");
+        assert_eq!(
+            net.work_rows(),
+            &[0, 9 * 16, 0, 0, 3],
+            "conv negotiates its im2col panel; dense its σ' stash"
+        );
         assert_eq!(net.param_op_count(), 2);
         assert_eq!(net.conv_count(), 1);
         assert_eq!(net.dense_count(), 1);

@@ -95,7 +95,8 @@ impl<T: Scalar> Workspace<T> {
     }
 
     /// An empty workspace for a *plain dense chain* with the given layer
-    /// sizes (every op dense, caching its pre-activations). The general
+    /// sizes (every op dense, caching its pre-activations Z and stashing
+    /// σ'(Z) in its work buffer — the fused-epilogue layout). The general
     /// constructor is [`Workspace::for_net`], which negotiates shapes
     /// with each op; this shorthand exists for the dense-only benches and
     /// tests. The first batch it sees sizes the buffers (that pass
@@ -105,7 +106,8 @@ impl<T: Scalar> Workspace<T> {
         let mut cache = dims.to_vec();
         cache[0] = 0;
         let seeds = vec![0u64; dims.len()];
-        Self::from_layout(dims.to_vec(), cache, vec![0; dims.len()], &seeds)
+        let work = cache.clone();
+        Self::from_layout(dims.to_vec(), cache, work, &seeds)
     }
 
     /// An empty workspace negotiated against `net`'s op pipeline — one
@@ -206,6 +208,21 @@ impl<T: Scalar> Workspace<T> {
         }
         self.delta_batch = batch;
     }
+
+    /// Re-seed the per-op mask streams to `stream` **in place** — exactly
+    /// the streams [`Workspace::for_net_at`] would construct, without
+    /// rebuilding (or reallocating) any buffer. This is what lets the
+    /// pooled threaded gradient path reuse warm per-shard workspaces
+    /// across training steps while still drawing fresh, deterministic
+    /// dropout masks every batch.
+    pub fn reseed_masks(&mut self, net: &Network<T>, stream: u64) {
+        assert_eq!(self.mask_rngs.len(), net.ops().len() + 1, "workspace/net op count mismatch");
+        let mix = stream.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.mask_rngs[0] = Rng::new(0);
+        for (rng, op) in self.mask_rngs[1..].iter_mut().zip(net.ops()) {
+            *rng = Rng::new(op.mask_seed() ^ mix);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -259,7 +276,9 @@ mod tests {
         assert_eq!(ws.z[2].rows(), 6, "dropout caches its mask");
         assert_eq!(ws.z[4].rows(), 0, "softmax is stateless");
         assert_eq!(ws.a[4].rows(), 3);
-        assert!(ws.work.iter().all(|m| m.rows() == 0), "dense pipelines need no work panels");
+        assert_eq!(ws.work[1].rows(), 6, "dense stashes σ' in its work buffer");
+        assert_eq!(ws.work[2].rows(), 0, "dropout needs no work panel");
+        assert_eq!(ws.work[3].rows(), 3);
         assert!(ws.fits(net.boundary_sizes(), net.cache_rows(), net.work_rows()));
         assert!(!ws.fits(&[4, 6, 3], &[0, 6, 3], &[0, 0, 0]));
     }
@@ -316,6 +335,32 @@ mod tests {
         assert_eq!(draw(7), draw(7));
         assert_ne!(draw(0), draw(1), "different streams must decorrelate");
         assert_ne!(draw(1), draw(2));
+    }
+
+    /// In-place reseeding must reproduce `for_net_at`'s streams exactly —
+    /// the equivalence the pooled threaded gradient path relies on when
+    /// it reuses warm shard workspaces across steps.
+    #[test]
+    fn reseed_masks_matches_for_net_at() {
+        let net: Network<f32> = Network::from_specs(
+            4,
+            &[
+                LayerSpec::Dense { units: 6, activation: Activation::Tanh },
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Dense { units: 2, activation: Activation::Sigmoid },
+            ],
+            3,
+        );
+        let mut reused: Workspace<f32> = Workspace::for_net(&net);
+        for stream in [0u64, 1, 7, 1 << 40] {
+            let mut fresh: Workspace<f32> = Workspace::for_net_at(&net, stream);
+            reused.reseed_masks(&net, stream);
+            for b in 0..fresh.mask_rngs.len() {
+                let want: Vec<u64> = (0..4).map(|_| fresh.mask_rngs[b].next_u64()).collect();
+                let got: Vec<u64> = (0..4).map(|_| reused.mask_rngs[b].next_u64()).collect();
+                assert_eq!(got, want, "stream {stream} boundary {b}");
+            }
+        }
     }
 
     #[test]

@@ -46,10 +46,11 @@ pub struct BatchPolicy {
     pub queue_depth: usize,
     /// Worker threads, each with its own warm workspace.
     pub workers: usize,
-    /// Column-shard the batched forward pass over this many threads
-    /// (`output_batch_threaded`). 1 = the zero-allocation warm-workspace
-    /// path; >1 trades steady-state allocations for intra-batch
-    /// parallelism — only worth it for very large models or batches.
+    /// Column-shard the batched forward pass over this many tasks on the
+    /// persistent worker pool (`output_batch_threaded` — no per-request
+    /// thread spawn). 1 = the zero-allocation warm-workspace path; >1
+    /// trades steady-state allocations for intra-batch parallelism —
+    /// only worth it for very large models or batches.
     pub infer_threads: usize,
 }
 

@@ -9,29 +9,43 @@
 //!
 //! ```text
 //! for jc in 0..n  step NC            // B panel fits in L3
-//!   for pc in 0..k step KC           // packed B panel  [KC x NC], NR-strips
-//!     for ic in 0..m step MC         // packed A block  [MC x KC], MR-strips
+//!   for pc in 0..k step KC           // packed B panel  [KC x NC], nr-strips
+//!     for ic in 0..m step MC         // packed A block  [MC x KC], mr-strips
 //!       for jr, ir                   // register tile
-//!         microkernel: MR x NR accumulators over KC
+//!         microkernel: mr x nr accumulators over KC
+//!   epilogue over the finished NC columns (bias + activation, fused)
 //! ```
 //!
-//! Packed panels give the microkernel two perfectly contiguous streams
-//! (`MR` and `NR` elements per k-step), which the compiler auto-vectorizes
-//! for both `f32` and `f64` through the generic [`Scalar`] arithmetic.
-//! Partial edge tiles are zero-padded in the packs (adding `x·0` is exact
-//! for finite floats), so the hot loop is branch-free.
+//! The `mr x nr` microkernel is **runtime-dispatched** through
+//! [`crate::tensor::simd`]: AVX2+FMA tiles on x86_64, NEON tiles on
+//! aarch64, and the portable scalar tile everywhere else (pinnable via
+//! `PALLAS_FORCE_SCALAR=1`). Packing strips follow the active kernel's
+//! tile geometry, and partial edge tiles are zero-padded in the packs
+//! (adding `x·0` is exact for finite floats), so every kernel's hot loop
+//! is branch-free.
 //!
-//! Numerical note: within one k-block the accumulation order is ascending
-//! in `k`, identical to the naive kernels; results are bit-equal to
-//! [`naive_gemm`] whenever `k <= KC` and only reassociate (tolerance-level
-//! differences) beyond that. Property tests pin both behaviours.
+//! The optional [`Epilogue`] fuses the per-row bias add and the
+//! activation (and optionally its derivative stash) into the C-write:
+//! each finished NC-column block is transformed while still cache-hot,
+//! which removes the separate full-buffer bias/σ passes the dense and
+//! conv layers used to pay.
 //!
-//! Threading: [`gemm_threaded`] shards the *output columns* (contiguous in
-//! column-major storage) across scoped std threads, each running the
-//! blocked kernel with its own scratch. This is the intra-image axis that
-//! composes with the coordinator's per-image `train_parallel` threads.
+//! Numerical note: for a **fixed kernel choice** results are
+//! deterministic, independent of column offset or shard placement (each
+//! output element's k-accumulation chain never changes). The scalar
+//! kernel reproduces the pre-dispatch engine bit-for-bit — within one
+//! k-block its accumulation order equals the naive kernels', so results
+//! are bit-equal to [`naive_gemm`] whenever `k <= KC` (property tests pin
+//! this on the scalar path; SIMD kernels agree within ulp-scale FMA
+//! tolerances, pinned by `rust/tests/simd_props.rs`).
+//!
+//! Threading: [`gemm_threaded`] shards the *output columns* (contiguous
+//! in column-major storage) across the persistent
+//! [`crate::tensor::pool`] — no per-call thread spawn/join.
 
 use super::matrix::{Matrix, Scalar};
+use super::pool::{self, SyncPtr};
+use super::simd::{self, SliceFn, TileKernel};
 
 /// Operand orientation: `N` uses the matrix as stored, `T` its transpose.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,9 +54,10 @@ pub enum Op {
     T,
 }
 
-/// Register tile height (rows of C per microkernel call).
+/// Scalar-kernel register tile height (SIMD kernels may use wider tiles;
+/// see [`crate::tensor::simd`]).
 pub const MR: usize = 8;
-/// Register tile width (columns of C per microkernel call).
+/// Scalar-kernel register tile width.
 pub const NR: usize = 4;
 /// k-dimension block (packed panel depth; fits L1/L2 streams).
 pub const KC: usize = 256;
@@ -66,22 +81,52 @@ impl<T: Scalar> GemmScratch<T> {
     }
 }
 
-/// Contiguous `(lo, hi)` column ranges splitting `n` columns across `t`
-/// shards; the first `n % t` shards are one wider (the same partition as
-/// `data::shard_bounds`). Shared by every column-sharded threaded path —
-/// [`gemm_threaded`], `Network::output_batch_threaded`,
-/// `Network::grad_batch_threaded` — so the off-by-one arithmetic lives in
-/// exactly one place.
+/// What to do with C as each NC-column block finishes — the fusion hook
+/// that lets `Dense`/`Conv2d` fold their bias add and activation into
+/// the GEMM instead of paying a second full pass over Z.
+///
+/// For the bias variants, `bias` must have `m` entries (one per output
+/// row) and `out`/`stash` must mirror C's layout exactly. After the GEMM,
+/// C holds `Z = A·B (+ C₀) + bias`, `out` holds `σ(Z)`, and (stash
+/// variant) `stash` holds `σ'(Z)` — the forward cache, activation, and
+/// backward prime factor of a layer, produced in one cache-hot sweep.
+pub enum Epilogue<'a, T> {
+    /// Plain GEMM: C is left as computed.
+    None,
+    /// `C += bias` per row, then `out = σ(C)`.
+    BiasAct {
+        bias: &'a [T],
+        /// σ as a slice kernel (vectorized where the dispatch table has
+        /// one — see `Activation::apply_kernel`).
+        apply: SliceFn<T>,
+        out: &'a mut [T],
+    },
+    /// [`Epilogue::BiasAct`] plus `stash = σ'(C)` — the
+    /// activation-prime-stash the dense backward pass multiplies by.
+    BiasActStash {
+        bias: &'a [T],
+        apply: SliceFn<T>,
+        prime: SliceFn<T>,
+        out: &'a mut [T],
+        stash: &'a mut [T],
+    },
+}
+
+/// Contiguous `(lo, hi)` column range of shard `i` of `t` splitting `n`
+/// columns; the first `n % t` shards are one wider (the same partition
+/// as `data::shard_bounds`). Closed-form so threaded hot paths need no
+/// shard vector.
+pub fn col_shard(n: usize, t: usize, i: usize) -> (usize, usize) {
+    assert!(t > 0 && i < t, "shard index out of range");
+    let (q, r) = (n / t, n % t);
+    let lo = i * q + i.min(r);
+    (lo, lo + q + usize::from(i < r))
+}
+
+/// All `t` shard ranges of [`col_shard`] — shared by every column-sharded
+/// threaded path so the off-by-one arithmetic lives in exactly one place.
 pub fn col_shards(n: usize, t: usize) -> Vec<(usize, usize)> {
-    assert!(t > 0, "need at least one shard");
-    let mut out = Vec::with_capacity(t);
-    let mut lo = 0usize;
-    for r in 0..t {
-        let cols = n / t + usize::from(r < n % t);
-        out.push((lo, lo + cols));
-        lo += cols;
-    }
-    out
+    (0..t).map(|i| col_shard(n, t, i)).collect()
 }
 
 /// Logical GEMM dimensions `(m, n, k)` of `op_a(a) · op_b(b)`, asserting
@@ -115,9 +160,40 @@ pub fn gemm_into<T: Scalar>(
     accumulate: bool,
     scratch: &mut GemmScratch<T>,
 ) {
+    gemm_into_ep(op_a, a, op_b, b, c, accumulate, Epilogue::None, scratch);
+}
+
+/// [`gemm_into`] with a fused [`Epilogue`] applied to each finished
+/// column block while it is still cache-hot.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_ep<T: Scalar>(
+    op_a: Op,
+    a: &Matrix<T>,
+    op_b: Op,
+    b: &Matrix<T>,
+    c: &mut Matrix<T>,
+    accumulate: bool,
+    ep: Epilogue<'_, T>,
+    scratch: &mut GemmScratch<T>,
+) {
     let (m, n, kk) = gemm_dims(op_a, a, op_b, b);
     assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
-    gemm_cols(op_a, a, op_b, b, m, kk, 0, n, c.as_mut_slice(), accumulate, scratch);
+    gemm_panels(
+        op_a,
+        a.as_slice(),
+        a.rows(),
+        op_b,
+        b.as_slice(),
+        b.rows(),
+        m,
+        kk,
+        0,
+        n,
+        c.as_mut_slice(),
+        accumulate,
+        ep,
+        scratch,
+    );
 }
 
 /// `c = op_a(a) · op_b(b)` (or `c += ...`) over raw column-major slices
@@ -142,6 +218,26 @@ pub fn gemm_slices<T: Scalar>(
     accumulate: bool,
     scratch: &mut GemmScratch<T>,
 ) {
+    gemm_slices_ep(op_a, a, lda, op_b, b, ldb, m, n, k, c, accumulate, Epilogue::None, scratch);
+}
+
+/// [`gemm_slices`] with a fused [`Epilogue`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_slices_ep<T: Scalar>(
+    op_a: Op,
+    a: &[T],
+    lda: usize,
+    op_b: Op,
+    b: &[T],
+    ldb: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [T],
+    accumulate: bool,
+    ep: Epilogue<'_, T>,
+    scratch: &mut GemmScratch<T>,
+) {
     let (a_rows, a_cols) = match op_a {
         Op::N => (m, k),
         Op::T => (k, m),
@@ -159,13 +255,15 @@ pub fn gemm_slices<T: Scalar>(
         assert!(ldb >= b_rows, "gemm_slices: ldb {ldb} < logical rows {b_rows}");
         assert!(b.len() >= ldb * (b_cols - 1) + b_rows, "gemm_slices: b too short");
     }
-    gemm_panels(op_a, a, lda, op_b, b, ldb, m, k, 0, n, c, accumulate, scratch);
+    gemm_panels(op_a, a, lda, op_b, b, ldb, m, k, 0, n, c, accumulate, ep, scratch);
 }
 
 /// Column-sharded threaded variant: output columns are split into
 /// `threads` contiguous ranges (contiguous memory in column-major order),
-/// each computed by a scoped thread with private scratch. Falls back to
-/// the single-threaded kernel for `threads <= 1` or tiny outputs.
+/// each computed on the persistent worker pool with private scratch.
+/// Falls back to the single-threaded kernel for `threads <= 1` or tiny
+/// outputs. No threads are spawned per call — the pool parks its workers
+/// between batches (`rust/tests/simd_props.rs` pins this).
 pub fn gemm_threaded<T: Scalar>(
     op_a: Op,
     a: &Matrix<T>,
@@ -183,21 +281,17 @@ pub fn gemm_threaded<T: Scalar>(
         gemm_cols(op_a, a, op_b, b, m, kk, 0, n, c.as_mut_slice(), accumulate, &mut scratch);
         return;
     }
-    let shards = col_shards(n, t);
-    let mut rest: &mut [T] = c.as_mut_slice();
-    std::thread::scope(|s| {
-        for &(lo, hi) in &shards {
-            if hi == lo {
-                continue;
-            }
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * m);
-            rest = tail;
-            s.spawn(move || {
-                let mut scratch = GemmScratch::new();
-                gemm_cols(op_a, a, op_b, b, m, kk, lo, hi - lo, head, accumulate, &mut scratch);
-            });
+    let cptr = SyncPtr::new(c.as_mut_slice().as_mut_ptr());
+    pool::run(t, &|si| {
+        let (lo, hi) = col_shard(n, t, si);
+        if hi == lo {
+            return;
         }
-        let _ = rest;
+        // SAFETY: shards index disjoint column ranges of C.
+        let head =
+            unsafe { std::slice::from_raw_parts_mut(cptr.get().add(lo * m), (hi - lo) * m) };
+        let mut scratch = GemmScratch::new();
+        gemm_cols(op_a, a, op_b, b, m, kk, lo, hi - lo, head, accumulate, &mut scratch);
     });
 }
 
@@ -264,12 +358,13 @@ fn gemm_cols<T: Scalar>(
         jn,
         c,
         accumulate,
+        Epilogue::None,
         scratch,
     );
 }
 
-/// Slice-level blocked driver shared by [`gemm_cols`] (Matrix operands)
-/// and [`gemm_slices`] (workspace sub-buffer operands).
+/// Slice-level blocked driver shared by every entry point; fetches the
+/// runtime-dispatched tile kernel and delegates to [`gemm_panels_with`].
 #[allow(clippy::too_many_arguments)]
 fn gemm_panels<T: Scalar>(
     op_a: Op,
@@ -284,90 +379,148 @@ fn gemm_panels<T: Scalar>(
     jn: usize,
     c: &mut [T],
     accumulate: bool,
+    ep: Epilogue<'_, T>,
+    scratch: &mut GemmScratch<T>,
+) {
+    let kern = T::tile_kernel(simd::kind());
+    gemm_panels_with(
+        &kern, op_a, ad, lda, op_b, bd, ldb, m, kk, j0, jn, c, accumulate, ep, scratch,
+    )
+}
+
+/// The blocked schedule, parameterized over the tile kernel (packing
+/// strips follow its `mr`/`nr`). Tests drive this directly with
+/// [`simd::scalar_kernel`] to pin bit-exact behaviour independent of the
+/// host's dispatch.
+#[allow(clippy::too_many_arguments)]
+fn gemm_panels_with<T: Scalar>(
+    kern: &TileKernel<T>,
+    op_a: Op,
+    ad: &[T],
+    lda: usize,
+    op_b: Op,
+    bd: &[T],
+    ldb: usize,
+    m: usize,
+    kk: usize,
+    j0: usize,
+    jn: usize,
+    c: &mut [T],
+    accumulate: bool,
+    mut ep: Epilogue<'_, T>,
     scratch: &mut GemmScratch<T>,
 ) {
     debug_assert_eq!(c.len(), m * jn, "gemm column-slice size mismatch");
+    match &ep {
+        Epilogue::None => {}
+        Epilogue::BiasAct { bias, out, .. } => {
+            assert_eq!(bias.len(), m, "epilogue bias length must equal output rows");
+            assert_eq!(out.len(), c.len(), "epilogue out must mirror C");
+        }
+        Epilogue::BiasActStash { bias, out, stash, .. } => {
+            assert_eq!(bias.len(), m, "epilogue bias length must equal output rows");
+            assert_eq!(out.len(), c.len(), "epilogue out must mirror C");
+            assert_eq!(stash.len(), c.len(), "epilogue stash must mirror C");
+        }
+    }
     if !accumulate {
         c.fill(T::ZERO);
     }
-    if m == 0 || jn == 0 || kk == 0 {
+    if m == 0 || jn == 0 {
         return;
     }
+    if kk == 0 {
+        apply_epilogue(&mut ep, c, m, 0, jn);
+        return;
+    }
+    let (mr, nr) = (kern.mr, kern.nr);
     let GemmScratch { pack_a, pack_b } = scratch;
 
     let mut jc = 0;
     while jc < jn {
         let nc = NC.min(jn - jc);
-        let b_strips = nc.div_ceil(NR);
+        let b_strips = nc.div_ceil(nr);
         let mut pc = 0;
         while pc < kk {
             let kc = KC.min(kk - pc);
-            let need_b = b_strips * kc * NR;
+            let need_b = b_strips * kc * nr;
             if pack_b.len() < need_b {
                 pack_b.resize(need_b, T::ZERO);
             }
-            pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, pack_b);
+            pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, nr, pack_b);
 
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
-                let a_strips = mc.div_ceil(MR);
-                let need_a = a_strips * kc * MR;
+                let a_strips = mc.div_ceil(mr);
+                let need_a = a_strips * kc * mr;
                 if pack_a.len() < need_a {
                     pack_a.resize(need_a, T::ZERO);
                 }
-                pack_block_a(op_a, ad, lda, ic, mc, pc, kc, pack_a);
+                pack_block_a(op_a, ad, lda, ic, mc, pc, kc, mr, pack_a);
 
                 let mut jr = 0;
                 while jr < nc {
-                    let nr = NR.min(nc - jr);
-                    let bpan = &pack_b[(jr / NR) * kc * NR..(jr / NR + 1) * kc * NR];
+                    let nr_eff = nr.min(nc - jr);
+                    let bpan = &pack_b[(jr / nr) * kc * nr..(jr / nr + 1) * kc * nr];
                     let mut ir = 0;
                     while ir < mc {
-                        let mr = MR.min(mc - ir);
-                        let apan = &pack_a[(ir / MR) * kc * MR..(ir / MR + 1) * kc * MR];
-                        let mut acc = [[T::ZERO; MR]; NR];
-                        microkernel(kc, apan, bpan, &mut acc);
-                        // Flush the valid region of the register tile.
-                        for (j, accj) in acc.iter().enumerate().take(nr) {
-                            let off = (jc + jr + j) * m + ic + ir;
-                            let col = &mut c[off..off + mr];
-                            for (ci, &av) in col.iter_mut().zip(accj.iter()) {
-                                *ci = *ci + av;
-                            }
-                        }
-                        ir += MR;
+                        let mr_eff = mr.min(mc - ir);
+                        let apan = &pack_a[(ir / mr) * kc * mr..(ir / mr + 1) * kc * mr];
+                        let off = (jc + jr) * m + ic + ir;
+                        (kern.tile)(kc, apan, bpan, &mut c[off..], m, mr_eff, nr_eff);
+                        ir += mr;
                     }
-                    jr += NR;
+                    jr += nr;
                 }
                 ic += MC;
             }
             pc += KC;
         }
+        // The NC-column block is complete across all of k: fuse the
+        // bias/activation write while it is still cache-hot.
+        apply_epilogue(&mut ep, c, m, jc, nc);
         jc += NC;
     }
 }
 
-/// MR x NR register tile: `acc[j][i] += Σ_k apan[k][i] * bpan[k][j]`.
-/// Both panels stream contiguously (`MR`/`NR` elements per k), which is
-/// what lets the generic loop auto-vectorize.
-#[inline(always)]
-fn microkernel<T: Scalar>(kc: usize, apan: &[T], bpan: &[T], acc: &mut [[T; MR]; NR]) {
-    debug_assert!(apan.len() >= kc * MR && bpan.len() >= kc * NR);
-    for k in 0..kc {
-        let av = &apan[k * MR..k * MR + MR];
-        let bv = &bpan[k * NR..k * NR + NR];
-        for (accj, &bj) in acc.iter_mut().zip(bv.iter()) {
-            for (ai, &aval) in accj.iter_mut().zip(av.iter()) {
-                *ai = *ai + aval * bj;
+/// Apply the fused epilogue to columns `jc .. jc+nc` of the local C
+/// slice: `z += bias` per row, `out = σ(z)` (and `stash = σ'(z)`).
+fn apply_epilogue<T: Scalar>(
+    ep: &mut Epilogue<'_, T>,
+    c: &mut [T],
+    m: usize,
+    jc: usize,
+    nc: usize,
+) {
+    match ep {
+        Epilogue::None => {}
+        Epilogue::BiasAct { bias, apply, out } => {
+            for j in jc..jc + nc {
+                let z = &mut c[j * m..(j + 1) * m];
+                for (zv, &bv) in z.iter_mut().zip(bias.iter()) {
+                    *zv = *zv + bv;
+                }
+                (*apply)(z, &mut out[j * m..(j + 1) * m]);
+            }
+        }
+        Epilogue::BiasActStash { bias, apply, prime, out, stash } => {
+            for j in jc..jc + nc {
+                let z = &mut c[j * m..(j + 1) * m];
+                for (zv, &bv) in z.iter_mut().zip(bias.iter()) {
+                    *zv = *zv + bv;
+                }
+                (*apply)(z, &mut out[j * m..(j + 1) * m]);
+                (*prime)(z, &mut stash[j * m..(j + 1) * m]);
             }
         }
     }
 }
 
-/// Pack `op(B)[pc..pc+kc, jstart..jstart+nc]` into NR-wide strips:
-/// strip `s` holds columns `s*NR..`, laid out k-major with `NR` contiguous
-/// elements per k (zero-padded past the edge).
+/// Pack `op(B)[pc..pc+kc, jstart..jstart+nc]` into `nr`-wide strips:
+/// strip `s` holds columns `s*nr..`, laid out k-major with `nr`
+/// contiguous elements per k (zero-padded past the edge).
+#[allow(clippy::too_many_arguments)]
 fn pack_panel_b<T: Scalar>(
     op: Op,
     b: &[T],
@@ -376,18 +529,19 @@ fn pack_panel_b<T: Scalar>(
     kc: usize,
     jstart: usize,
     nc: usize,
+    nr: usize,
     out: &mut [T],
 ) {
     let mut s = 0usize;
     let mut jr = 0usize;
     while jr < nc {
-        let nr = NR.min(nc - jr);
-        let strip = &mut out[s * kc * NR..(s + 1) * kc * NR];
+        let nr_eff = nr.min(nc - jr);
+        let strip = &mut out[s * kc * nr..(s + 1) * kc * nr];
         for k in 0..kc {
             let kg = pc + k;
-            let dst = &mut strip[k * NR..k * NR + NR];
+            let dst = &mut strip[k * nr..k * nr + nr];
             for (jj, d) in dst.iter_mut().enumerate() {
-                *d = if jj < nr {
+                *d = if jj < nr_eff {
                     let j = jstart + jr + jj;
                     match op {
                         Op::N => b[kg + j * ldb],
@@ -399,12 +553,12 @@ fn pack_panel_b<T: Scalar>(
             }
         }
         s += 1;
-        jr += NR;
+        jr += nr;
     }
 }
 
-/// Pack `op(A)[istart..istart+mc, pc..pc+kc]` into MR-tall strips:
-/// strip `s` holds rows `s*MR..`, laid out k-major with `MR` contiguous
+/// Pack `op(A)[istart..istart+mc, pc..pc+kc]` into `mr`-tall strips:
+/// strip `s` holds rows `s*mr..`, laid out k-major with `mr` contiguous
 /// elements per k (zero-padded past the edge).
 #[allow(clippy::too_many_arguments)]
 fn pack_block_a<T: Scalar>(
@@ -415,18 +569,19 @@ fn pack_block_a<T: Scalar>(
     mc: usize,
     pc: usize,
     kc: usize,
+    mr: usize,
     out: &mut [T],
 ) {
     let mut s = 0usize;
     let mut ir = 0usize;
     while ir < mc {
-        let mr = MR.min(mc - ir);
-        let strip = &mut out[s * kc * MR..(s + 1) * kc * MR];
+        let mr_eff = mr.min(mc - ir);
+        let strip = &mut out[s * kc * mr..(s + 1) * kc * mr];
         for k in 0..kc {
             let kg = pc + k;
-            let dst = &mut strip[k * MR..k * MR + MR];
+            let dst = &mut strip[k * mr..k * mr + mr];
             for (ii, d) in dst.iter_mut().enumerate() {
-                *d = if ii < mr {
+                *d = if ii < mr_eff {
                     let i = istart + ir + ii;
                     match op {
                         Op::N => a[i + kg * lda],
@@ -438,7 +593,7 @@ fn pack_block_a<T: Scalar>(
             }
         }
         s += 1;
-        ir += MR;
+        ir += mr;
     }
 }
 
@@ -449,6 +604,41 @@ mod tests {
 
     fn rand_matrix(rows: usize, cols: usize, rng: &mut Rng) -> Matrix<f64> {
         Matrix::from_fn(rows, cols, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    /// Scalar-pinned gemm: drives the blocked schedule with the portable
+    /// tile explicitly, independent of the host's dispatch — the entry
+    /// the bit-exactness contracts below are written against. (The
+    /// active-dispatch path is covered at ulp tolerances by
+    /// `rust/tests/simd_props.rs`.)
+    fn gemm_into_scalar(
+        op_a: Op,
+        a: &Matrix<f64>,
+        op_b: Op,
+        b: &Matrix<f64>,
+        c: &mut Matrix<f64>,
+        accumulate: bool,
+        scratch: &mut GemmScratch<f64>,
+    ) {
+        let (m, n, kk) = gemm_dims(op_a, a, op_b, b);
+        assert_eq!((c.rows(), c.cols()), (m, n), "gemm output shape mismatch");
+        gemm_panels_with(
+            &simd::scalar_kernel::<f64>(),
+            op_a,
+            a.as_slice(),
+            a.rows(),
+            op_b,
+            b.as_slice(),
+            b.rows(),
+            m,
+            kk,
+            0,
+            n,
+            c.as_mut_slice(),
+            accumulate,
+            Epilogue::None,
+            scratch,
+        );
     }
 
     fn check_all_ops(m: usize, n: usize, k: usize, seed: u64) {
@@ -466,7 +656,7 @@ mod tests {
             naive_gemm(op_a, &a, op_b, &b, &mut want, false);
             let mut got = Matrix::zeros(m, n);
             let mut scratch = GemmScratch::new();
-            gemm_into(op_a, &a, op_b, &b, &mut got, false, &mut scratch);
+            gemm_into_scalar(op_a, &a, op_b, &b, &mut got, false, &mut scratch);
             let d = got.max_abs_diff(&want);
             assert!(d < 1e-12, "{op_a:?}{op_b:?} m={m} n={n} k={k}: diff {d}");
         }
@@ -512,7 +702,7 @@ mod tests {
         let mut want = c.clone();
         naive_gemm(Op::N, &a, Op::N, &b, &mut want, true);
         let mut scratch = GemmScratch::new();
-        gemm_into(Op::N, &a, Op::N, &b, &mut c, true, &mut scratch);
+        gemm_into_scalar(Op::N, &a, Op::N, &b, &mut c, true, &mut scratch);
         assert!(c.max_abs_diff(&want) < 1e-12);
     }
 
@@ -533,8 +723,10 @@ mod tests {
 
     #[test]
     fn bit_equal_to_naive_below_kc() {
-        // k <= KC keeps the accumulation association identical to the
-        // naive kernel: results must be *bit* equal, not just close.
+        // k <= KC keeps the scalar kernel's accumulation association
+        // identical to the naive kernel: results must be *bit* equal,
+        // not just close (SIMD kernels trade this for FMA throughput,
+        // which is why this test pins the scalar tile).
         let mut rng = Rng::new(11);
         let a = rand_matrix(19, KC, &mut rng);
         let b = rand_matrix(KC, 11, &mut rng);
@@ -542,7 +734,7 @@ mod tests {
         naive_gemm(Op::N, &a, Op::N, &b, &mut want, false);
         let mut got = Matrix::zeros(19, 11);
         let mut scratch = GemmScratch::new();
-        gemm_into(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
+        gemm_into_scalar(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
         assert_eq!(got, want);
     }
 
@@ -556,7 +748,7 @@ mod tests {
             let mut want = Matrix::zeros(m, n);
             naive_gemm(Op::N, &a, Op::N, &b, &mut want, false);
             let mut got = Matrix::zeros(m, n);
-            gemm_into(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
+            gemm_into_scalar(Op::N, &a, Op::N, &b, &mut got, false, &mut scratch);
             assert!(got.max_abs_diff(&want) < 1e-12, "shape {m}x{n}x{k}");
         }
     }
@@ -615,6 +807,98 @@ mod tests {
         }
     }
 
+    /// The fused epilogue must equal the classic two-pass form (gemm,
+    /// then bias axpy, then σ) — bit-for-bit on the scalar kernel.
+    #[test]
+    fn fused_epilogue_matches_two_pass_bit_exact() {
+        fn sigmoid_slice(z: &[f64], out: &mut [f64]) {
+            for (o, &v) in out.iter_mut().zip(z) {
+                *o = 1.0 / (1.0 + (-v).exp());
+            }
+        }
+        fn sigmoid_prime_slice(z: &[f64], out: &mut [f64]) {
+            for (o, &v) in out.iter_mut().zip(z) {
+                let s = 1.0 / (1.0 + (-v).exp());
+                *o = s * (1.0 - s);
+            }
+        }
+        let mut rng = Rng::new(31);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (8, 4, 8), (13, 9, 300), (30, 32, 17)] {
+            let a = rand_matrix(m, k, &mut rng);
+            let b = rand_matrix(k, n, &mut rng);
+            let bias: Vec<f64> = (0..m).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+
+            // Reference: scalar-pinned gemm, then the two separate passes.
+            let mut z_ref = Matrix::zeros(m, n);
+            let mut scratch = GemmScratch::new();
+            gemm_into_scalar(Op::N, &a, Op::N, &b, &mut z_ref, false, &mut scratch);
+            for j in 0..n {
+                crate::tensor::vecops::axpy(z_ref.col_mut(j), 1.0, &bias);
+            }
+            let mut out_ref = vec![0.0f64; m * n];
+            let mut stash_ref = vec![0.0f64; m * n];
+            sigmoid_slice(z_ref.as_slice(), &mut out_ref);
+            sigmoid_prime_slice(z_ref.as_slice(), &mut stash_ref);
+
+            // Fused: one scalar-pinned gemm with the stash epilogue.
+            let mut z = Matrix::zeros(m, n);
+            let mut out = vec![0.0f64; m * n];
+            let mut stash = vec![0.0f64; m * n];
+            gemm_panels_with(
+                &simd::scalar_kernel::<f64>(),
+                Op::N,
+                a.as_slice(),
+                a.rows(),
+                Op::N,
+                b.as_slice(),
+                b.rows(),
+                m,
+                k,
+                0,
+                n,
+                z.as_mut_slice(),
+                false,
+                Epilogue::BiasActStash {
+                    bias: &bias,
+                    apply: sigmoid_slice,
+                    prime: sigmoid_prime_slice,
+                    out: &mut out,
+                    stash: &mut stash,
+                },
+                &mut scratch,
+            );
+            assert_eq!(z, z_ref, "{m}x{n}x{k}: Z must carry bias");
+            assert_eq!(out, out_ref, "{m}x{n}x{k}: σ(Z)");
+            assert_eq!(stash, stash_ref, "{m}x{n}x{k}: σ'(Z)");
+        }
+    }
+
+    /// Epilogue with k = 0 still applies bias + σ to the zeroed C.
+    #[test]
+    fn epilogue_applies_on_empty_k() {
+        fn ident(z: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(z);
+        }
+        let a = Matrix::<f64>::zeros(3, 0);
+        let b = Matrix::<f64>::zeros(0, 2);
+        let mut c = Matrix::full(3, 2, 9.0);
+        let mut out = vec![0.0f64; 6];
+        let bias = vec![1.0, 2.0, 3.0];
+        let mut scratch = GemmScratch::new();
+        gemm_into_ep(
+            Op::N,
+            &a,
+            Op::N,
+            &b,
+            &mut c,
+            false,
+            Epilogue::BiasAct { bias: &bias, apply: ident, out: &mut out },
+            &mut scratch,
+        );
+        assert_eq!(c.as_slice(), &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
     #[test]
     fn col_shards_partition_exactly() {
         for (n, t) in [(0usize, 1usize), (0, 3), (1, 4), (10, 3), (7, 7), (23, 5)] {
@@ -623,8 +907,9 @@ mod tests {
             assert_eq!(shards.last().unwrap().1, n);
             let mut prev = 0;
             let (mut mn, mut mx) = (usize::MAX, 0);
-            for &(lo, hi) in &shards {
+            for (i, &(lo, hi)) in shards.iter().enumerate() {
                 assert_eq!(lo, prev, "shards must be contiguous (n={n} t={t})");
+                assert_eq!((lo, hi), col_shard(n, t, i), "closed form must agree");
                 prev = hi;
                 mn = mn.min(hi - lo);
                 mx = mx.max(hi - lo);

@@ -18,6 +18,7 @@
 
 use super::gemm::{self, GemmScratch, Op};
 use super::rng::Rng;
+use super::simd;
 
 /// Scalar element type for tensors and networks — the Rust analogue of the
 /// paper's compile-time `rk` kind constant (`real32`/`real64`).
@@ -47,6 +48,23 @@ pub trait Scalar:
     fn sqrt(self) -> Self;
     /// Parse from decimal text (for network file I/O).
     fn parse(s: &str) -> Option<Self>;
+
+    /// The GEMM register-tile kernel this type uses for a dispatch kind —
+    /// the hook that routes the blocked GEMM through the runtime SIMD
+    /// dispatch table ([`simd`]). Kinds a type has no kernel for fall
+    /// back to the portable scalar tile.
+    fn tile_kernel(kind: simd::KernelKind) -> simd::TileKernel<Self>
+    where
+        Self: Sized;
+
+    /// Arch-vectorized activation slice kernel for the *active* dispatch,
+    /// if this type has one in the table (`None` = generic scalar loop).
+    fn simd_act(_id: simd::ActId, _prime: bool) -> Option<simd::SliceFn<Self>>
+    where
+        Self: Sized,
+    {
+        None
+    }
 }
 
 impl Scalar for f32 {
@@ -76,6 +94,12 @@ impl Scalar for f32 {
     fn parse(s: &str) -> Option<Self> {
         s.parse().ok()
     }
+    fn tile_kernel(kind: simd::KernelKind) -> simd::TileKernel<Self> {
+        simd::f32_tile_kernel(kind)
+    }
+    fn simd_act(id: simd::ActId, prime: bool) -> Option<simd::SliceFn<Self>> {
+        simd::f32_act_kernel(id, prime)
+    }
 }
 
 impl Scalar for f64 {
@@ -104,6 +128,9 @@ impl Scalar for f64 {
     }
     fn parse(s: &str) -> Option<Self> {
         s.parse().ok()
+    }
+    fn tile_kernel(kind: simd::KernelKind) -> simd::TileKernel<Self> {
+        simd::f64_tile_kernel(kind)
     }
 }
 

@@ -4,15 +4,20 @@
 //! `w(:,:)`) and relies on whole-array arithmetic plus `matmul`. This module
 //! provides the equivalent Rust substrate: a column-major [`Matrix`] (to
 //! mirror Fortran layout), elementwise ops, the cache-blocked packed GEMM
-//! in [`gemm`] (single-threaded and column-sharded), and the deterministic
-//! RNG used for Xavier-style initialization.
+//! in [`gemm`] (single-threaded and column-sharded) with its
+//! runtime-dispatched SIMD microkernels in [`simd`] and fused
+//! bias/activation epilogues, the persistent worker [`pool`] every
+//! threaded hot path shards onto, and the deterministic RNG used for
+//! Xavier-style initialization.
 
 pub mod gemm;
 mod matrix;
+pub mod pool;
 mod rng;
+pub mod simd;
 mod stats;
 
-pub use gemm::GemmScratch;
+pub use gemm::{Epilogue, GemmScratch};
 pub use matrix::{vecops, Matrix, Scalar};
 pub use rng::Rng;
 pub use stats::{mean, stddev, Summary};

@@ -1,0 +1,340 @@
+//! Persistent worker pool — the scatter–gather substrate every threaded
+//! hot path runs on.
+//!
+//! The pre-pool engine paid `std::thread::scope` spawn/join on **every**
+//! threaded GEMM, every threaded gradient step, and every sharded batch
+//! forward: microseconds of kernel time per call on paths invoked tens of
+//! thousands of times per training run. This pool replaces all of that
+//! with workers spawned **once** (lazily, on the first threaded call) and
+//! parked on a condvar between batches:
+//!
+//! - [`run`]`(tasks, f)` publishes a batch of `tasks` indices; parked
+//!   workers and the *caller itself* claim indices from a shared atomic
+//!   counter (the caller's participation guarantees progress even when
+//!   every worker is busy with someone else's batch, so nested and
+//!   concurrent `run`s cannot deadlock);
+//! - the batch descriptor lives on the **caller's stack** — no boxed
+//!   closures, no channels. Steady-state `run` performs **zero heap
+//!   allocations** (the queue's capacity is pre-reserved), extending the
+//!   `rust/tests/zero_alloc.rs` contract to the threaded paths;
+//! - per-worker bookkeeping lives in cache-line-padded slots so the
+//!   claim counters never false-share;
+//! - worker panics are caught, forwarded, and re-raised on the caller —
+//!   same observable behaviour as the scoped-thread join it replaces.
+//!
+//! Lifetime safety: a worker touches a batch only between checking it out
+//! (`active += 1`, under the queue lock, while the batch is still queued)
+//! and releasing it (`active -= 1`, its final access). The caller removes
+//! the batch from the queue *before* waiting for `done == total &&
+//! active == 0`, so no worker can begin or still hold a checkout when the
+//! caller's stack frame (and the batch with it) goes away.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// One published batch: a type-erased `Fn(usize)` plus claim/finish
+/// counters. Lives on the caller's stack for the duration of [`run`].
+struct Batch {
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+    next: AtomicUsize,
+    done: AtomicUsize,
+    active: AtomicUsize,
+    panicked: AtomicBool,
+    total: usize,
+}
+
+/// Cache-line-padded per-worker slot (claim statistics; the padding keeps
+/// neighbouring workers' counters out of each other's lines).
+#[repr(align(64))]
+struct Slot {
+    tasks: AtomicUsize,
+}
+
+struct Shared {
+    /// Batches with unclaimed indices, newest last. Raw pointers are
+    /// guarded by the checkout protocol described in the module doc.
+    queue: Mutex<Vec<*const Batch>>,
+    /// Workers park here between batches.
+    work_cv: Condvar,
+    /// Callers park here while waiting for their batch to drain.
+    idle_mx: Mutex<()>,
+    idle_cv: Condvar,
+    /// Threads ever spawned (the thread-count regression test's probe).
+    spawned: AtomicUsize,
+    slots: Vec<Slot>,
+}
+
+// SAFETY: the raw batch pointers in the queue are only dereferenced under
+// the checkout protocol (see the module doc); everything else is atomics
+// and std sync primitives.
+unsafe impl Send for Shared {}
+unsafe impl Sync for Shared {}
+
+struct Pool {
+    shared: &'static Shared,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        // The caller participates in every batch, so N-1 workers saturate
+        // N hardware threads; capped to keep the park/wake fan-out sane.
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = hw.saturating_sub(1).min(15);
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            queue: Mutex::new(Vec::with_capacity(32)),
+            work_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+            idle_cv: Condvar::new(),
+            spawned: AtomicUsize::new(0),
+            slots: (0..workers.max(1)).map(|_| Slot { tasks: AtomicUsize::new(0) }).collect(),
+        }));
+        for wid in 0..workers {
+            shared.spawned.fetch_add(1, Ordering::SeqCst);
+            std::thread::Builder::new()
+                .name(format!("pallas-pool-{wid}"))
+                .spawn(move || worker_loop(shared, wid))
+                .expect("failed to spawn pool worker");
+        }
+        eprintln!("# pallas pool: {workers} persistent worker(s) ({hw} hw threads)");
+        Pool { shared, workers }
+    })
+}
+
+/// Number of persistent workers (0 on single-core hosts — [`run`] then
+/// executes inline). Initializes the pool.
+pub fn workers() -> usize {
+    pool().workers
+}
+
+/// Total worker threads ever spawned by this process. Constant after the
+/// pool's lazy init — the thread-count regression tests assert exactly
+/// that (per-call `thread::scope` spawning would grow an equivalent
+/// counter without bound).
+pub fn spawned() -> usize {
+    pool().shared.spawned.load(Ordering::SeqCst)
+}
+
+/// Tasks executed by pool workers so far (excludes caller participation).
+pub fn worker_tasks() -> usize {
+    pool().shared.slots.iter().map(|s| s.tasks.load(Ordering::Relaxed)).sum()
+}
+
+/// Run `f(0) .. f(tasks-1)` across the pool workers and the calling
+/// thread, returning when all have finished. Tasks must touch disjoint
+/// data (shard pattern); ordering across tasks is unspecified. Panics in
+/// any task are re-raised here after the batch fully drains.
+pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: &F) {
+    if tasks == 0 {
+        return;
+    }
+    let p = pool();
+    if tasks == 1 || p.workers == 0 {
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+
+    unsafe fn trampoline<F: Fn(usize)>(ctx: *const (), i: usize) {
+        (*(ctx as *const F))(i);
+    }
+
+    let batch = Batch {
+        call: trampoline::<F>,
+        ctx: f as *const F as *const (),
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        active: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        total: tasks,
+    };
+    let bptr = &batch as *const Batch;
+    {
+        let mut q = p.shared.queue.lock().unwrap();
+        q.push(bptr);
+    }
+    p.shared.work_cv.notify_all();
+
+    // Participate: claim indices exactly like a worker.
+    drain(&batch);
+
+    // Remove the batch so no further worker can check it out...
+    {
+        let mut q = p.shared.queue.lock().unwrap();
+        q.retain(|&b| b != bptr);
+    }
+    // ...then wait for in-flight workers to finish and release it. The
+    // timeout makes the loop immune to lost wakeups.
+    {
+        let mut g = p.shared.idle_mx.lock().unwrap();
+        while batch.done.load(Ordering::SeqCst) < tasks
+            || batch.active.load(Ordering::SeqCst) > 0
+        {
+            let (gg, _) = p.shared.idle_cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            g = gg;
+        }
+    }
+    if batch.panicked.load(Ordering::SeqCst) {
+        panic!("worker pool task panicked");
+    }
+}
+
+/// Claim and execute indices from `batch` until none remain. Returns the
+/// number executed. Panics inside tasks are recorded, never propagated
+/// (the batch owner re-raises).
+fn drain(batch: &Batch) -> usize {
+    let mut ran = 0usize;
+    loop {
+        let i = batch.next.fetch_add(1, Ordering::SeqCst);
+        if i >= batch.total {
+            return ran;
+        }
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: ctx points at the caller's `F`, alive until the
+            // batch owner returns — which it cannot do before `done`
+            // reaches `total`, counting this very task.
+            unsafe { (batch.call)(batch.ctx, i) }
+        }))
+        .is_ok();
+        if !ok {
+            batch.panicked.store(true, Ordering::SeqCst);
+        }
+        batch.done.fetch_add(1, Ordering::SeqCst);
+        ran += 1;
+    }
+}
+
+fn worker_loop(shared: &'static Shared, wid: usize) {
+    loop {
+        let bptr: *const Batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                let found = q.iter().copied().find(|&b| {
+                    // SAFETY: pointers in the queue are live (owners
+                    // remove theirs before returning).
+                    let b = unsafe { &*b };
+                    b.next.load(Ordering::SeqCst) < b.total
+                });
+                match found {
+                    Some(b) => {
+                        // Check out under the lock, while still queued.
+                        unsafe { &*b }.active.fetch_add(1, Ordering::SeqCst);
+                        break b;
+                    }
+                    None => q = shared.work_cv.wait(q).unwrap(),
+                }
+            }
+        };
+        // SAFETY: checked out above; released below as the final access.
+        let batch = unsafe { &*bptr };
+        let ran = drain(batch);
+        shared.slots[wid].tasks.fetch_add(ran, Ordering::Relaxed);
+        batch.active.fetch_sub(1, Ordering::SeqCst);
+        // `batch` must not be touched past this point. Wake its owner.
+        let _g = shared.idle_mx.lock().unwrap();
+        shared.idle_cv.notify_all();
+    }
+}
+
+/// Wrapper making a raw pointer `Send + Sync`, so disjoint shards of one
+/// buffer can be written from pool tasks through a shared closure.
+/// Safety is entirely the caller's: every task index must address a
+/// disjoint region.
+pub struct SyncPtr<T>(*mut T);
+
+// SAFETY: see type-level contract — disjointness is promised by callers.
+unsafe impl<T> Send for SyncPtr<T> {}
+unsafe impl<T> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn reuses_workers_across_many_batches() {
+        run(4, &|_| {});
+        let after_first = spawned();
+        assert!(after_first <= workers().max(1), "spawned {after_first}");
+        let tasks_before = worker_tasks();
+        for _ in 0..200 {
+            run(8, &|i| {
+                std::hint::black_box(i * i);
+            });
+        }
+        assert_eq!(spawned(), after_first, "pool must never respawn workers per call");
+        // The per-worker slot counters are monotone (the caller may win
+        // every race, so no lower bound is portable; sibling tests share
+        // the pool, so no upper bound is either).
+        assert!(worker_tasks() >= tasks_before, "worker slot counters must be monotone");
+    }
+
+    #[test]
+    fn concurrent_batches_all_complete() {
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..20 {
+                        run(13, &|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 20 * 13);
+    }
+
+    #[test]
+    fn disjoint_writes_through_sync_ptr() {
+        let mut data = vec![0usize; 64];
+        let ptr = SyncPtr::new(data.as_mut_ptr());
+        run(8, &|i| {
+            let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(i * 8), 8) };
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = i * 8 + k;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let caught = std::panic::catch_unwind(|| {
+            run(6, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err(), "pool must re-raise task panics");
+    }
+}

@@ -1,0 +1,428 @@
+//! x86_64 AVX2+FMA microkernels: 8x8 f32 / 8x4 f64 GEMM tiles and the
+//! vectorized epilogue activations (relu bit-exact with the scalar
+//! formula; sigmoid/tanh through a Cephes-style polynomial `exp`).
+//!
+//! Every function here is reached only through the dispatch table in the
+//! parent module, which selects AVX2 after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! — the `unsafe` blocks below rely on exactly that guarantee.
+
+use super::{ActId, SliceFn, TileKernel};
+use std::arch::x86_64::*;
+
+/// 8x8 f32 tile: one `__m256` A-column per k-step against 8 broadcast B
+/// values — 8 FMA accumulators, the widest tile 16 ymm registers allow
+/// with the A stream and broadcast in flight.
+pub(crate) fn f32_kernel() -> TileKernel<f32> {
+    TileKernel { mr: 8, nr: 8, name: "avx2+fma 8x8", tile: tile_f32 }
+}
+
+/// 8x4 f64 tile: two `__m256d` halves per A-column, 8 FMA accumulators.
+pub(crate) fn f64_kernel() -> TileKernel<f64> {
+    TileKernel { mr: 8, nr: 4, name: "avx2+fma 8x4", tile: tile_f64 }
+}
+
+fn tile_f32(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 8 && bpan.len() >= kc * 8);
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { tile_f32_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tile_f32_impl(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [_mm256_setzero_ps(); 8];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a = _mm256_loadu_ps(ap);
+        for (j, accj) in acc.iter_mut().enumerate() {
+            *accj = _mm256_fmadd_ps(a, _mm256_set1_ps(*bp.add(j)), *accj);
+        }
+        ap = ap.add(8);
+        bp = bp.add(8);
+    }
+    if mr_eff == 8 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), *accj));
+        }
+    } else {
+        let mut buf = [0.0f32; 8];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            _mm256_storeu_ps(buf.as_mut_ptr(), *accj);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+fn tile_f64(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 8 && bpan.len() >= kc * 4);
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { tile_f64_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tile_f64_impl(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [[_mm256_setzero_pd(); 2]; 4];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a0 = _mm256_loadu_pd(ap);
+        let a1 = _mm256_loadu_pd(ap.add(4));
+        for (j, accj) in acc.iter_mut().enumerate() {
+            let b = _mm256_set1_pd(*bp.add(j));
+            accj[0] = _mm256_fmadd_pd(a0, b, accj[0]);
+            accj[1] = _mm256_fmadd_pd(a1, b, accj[1]);
+        }
+        ap = ap.add(8);
+        bp = bp.add(4);
+    }
+    if mr_eff == 8 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            _mm256_storeu_pd(cp, _mm256_add_pd(_mm256_loadu_pd(cp), accj[0]));
+            let cp4 = cp.add(4);
+            _mm256_storeu_pd(cp4, _mm256_add_pd(_mm256_loadu_pd(cp4), accj[1]));
+        }
+    } else {
+        let mut buf = [0.0f64; 8];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            _mm256_storeu_pd(buf.as_mut_ptr(), accj[0]);
+            _mm256_storeu_pd(buf.as_mut_ptr().add(4), accj[1]);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Epilogue activation kernels
+// ---------------------------------------------------------------------
+
+/// The vectorized f32 epilogue kernel for an activation (and its prime).
+pub(crate) fn act_kernel(id: ActId, prime: bool) -> SliceFn<f32> {
+    match (id, prime) {
+        (ActId::Relu, false) => relu_ps,
+        (ActId::Relu, true) => relu_prime_ps,
+        (ActId::Sigmoid, false) => sigmoid_ps,
+        (ActId::Sigmoid, true) => sigmoid_prime_ps,
+        (ActId::Tanh, false) => tanh_ps,
+        (ActId::Tanh, true) => tanh_prime_ps,
+    }
+}
+
+fn relu_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { relu_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn relu_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        // max(v, 0) matches `if v > 0 { v } else { 0 }` bit-for-bit,
+        // including -0.0 -> +0.0 and NaN -> 0 (maxps yields the second
+        // operand unless the first compares strictly greater).
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_max_ps(v, zero));
+        i += 8;
+    }
+    while i < n {
+        let v = z[i];
+        out[i] = if v > 0.0 { v } else { 0.0 };
+        i += 1;
+    }
+}
+
+fn relu_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { relu_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn relu_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = _mm256_setzero_ps();
+    let one = _mm256_set1_ps(1.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        let mask = _mm256_cmp_ps::<_CMP_GT_OQ>(v, zero);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_and_ps(mask, one));
+        i += 8;
+    }
+    while i < n {
+        out[i] = if z[i] > 0.0 { 1.0 } else { 0.0 };
+        i += 1;
+    }
+}
+
+fn sigmoid_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { sigmoid_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn sigmoid_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm256_set1_ps(1.0);
+    let zero = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        let e = exp256(_mm256_sub_ps(zero, v));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_div_ps(one, _mm256_add_ps(one, e)));
+        i += 8;
+    }
+    while i < n {
+        out[i] = 1.0 / (1.0 + (-z[i]).exp());
+        i += 1;
+    }
+}
+
+fn sigmoid_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { sigmoid_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn sigmoid_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm256_set1_ps(1.0);
+    let zero = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        let e = exp256(_mm256_sub_ps(zero, v));
+        let s = _mm256_div_ps(one, _mm256_add_ps(one, e));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(s, _mm256_sub_ps(one, s)));
+        i += 8;
+    }
+    while i < n {
+        let s = 1.0 / (1.0 + (-z[i]).exp());
+        out[i] = s * (1.0 - s);
+        i += 1;
+    }
+}
+
+fn tanh_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { tanh_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tanh_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        // tanh(v) = 1 - 2/(e^{2v} + 1); exp256's clamp saturates the
+        // tails to exactly ±1.
+        let e = exp256(_mm256_add_ps(v, v));
+        let t = _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e, one)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), t);
+        i += 8;
+    }
+    while i < n {
+        out[i] = z[i].tanh();
+        i += 1;
+    }
+}
+
+fn tanh_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX2+FMA via runtime feature detection.
+    unsafe { tanh_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tanh_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm256_set1_ps(1.0);
+    let two = _mm256_set1_ps(2.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_ps(z.as_ptr().add(i));
+        let e = exp256(_mm256_add_ps(v, v));
+        let t = _mm256_sub_ps(one, _mm256_div_ps(two, _mm256_add_ps(e, one)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_sub_ps(one, _mm256_mul_ps(t, t)));
+        i += 8;
+    }
+    while i < n {
+        let t = z[i].tanh();
+        out[i] = 1.0 - t * t;
+        i += 1;
+    }
+}
+
+/// Vectorized e^x (Cephes-style range reduction + degree-5 polynomial,
+/// ~2 ulp over the clamped domain) — the workhorse behind the sigmoid
+/// and tanh epilogues. Inputs are clamped to the finite-result range, so
+/// the tails saturate instead of overflowing.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn exp256(x: __m256) -> __m256 {
+    const EXP_HI: f32 = 88.376_26;
+    const EXP_LO: f32 = -88.376_26;
+    const LOG2EF: f32 = 1.442_695;
+    // Cody–Waite split of ln 2 (C1 exactly representable).
+    const C1: f32 = 0.693_359_375;
+    const C2: f32 = -2.121_944_4e-4;
+    const P0: f32 = 1.987_569_1e-4;
+    const P1: f32 = 1.398_2e-3;
+    const P2: f32 = 8.333_452e-3;
+    const P3: f32 = 4.166_58e-2;
+    const P4: f32 = 1.666_666_5e-1;
+    const P5: f32 = 5.0e-1;
+    let one = _mm256_set1_ps(1.0);
+    let x = _mm256_min_ps(_mm256_set1_ps(EXP_HI), _mm256_max_ps(_mm256_set1_ps(EXP_LO), x));
+    // n = round-to-floor(x * log2(e) + 0.5); r = x - n*ln2 in two steps.
+    let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(LOG2EF), _mm256_set1_ps(0.5)));
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C1), x);
+    let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C2), r);
+    let mut y = _mm256_set1_ps(P0);
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P1));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P2));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P3));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P4));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(P5));
+    let r2 = _mm256_mul_ps(r, r);
+    y = _mm256_fmadd_ps(y, r2, _mm256_add_ps(r, one));
+    // Scale by 2^n through the exponent field.
+    let n = _mm256_cvtps_epi32(fx);
+    let pow2n =
+        _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(n, _mm256_set1_epi32(127))));
+    _mm256_mul_ps(y, pow2n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::simd::{detected, KernelKind};
+
+    fn avx2_available() -> bool {
+        detected() == KernelKind::Avx2
+    }
+
+    #[test]
+    fn f32_tile_matches_scalar_reference() {
+        if !avx2_available() {
+            eprintln!("SKIP: host has no AVX2+FMA");
+            return;
+        }
+        let k = f32_kernel();
+        let (mr, nr, kc) = (k.mr, k.nr, 17usize);
+        let apan: Vec<f32> = (0..kc * mr).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+        let bpan: Vec<f32> = (0..kc * nr).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        for (mr_eff, nr_eff) in [(mr, nr), (3, nr), (mr, 2), (1, 1), (5, 3)] {
+            let mut got = vec![0.5f32; mr * nr];
+            let mut want = got.clone();
+            (k.tile)(kc, &apan, &bpan, &mut got, mr, mr_eff, nr_eff);
+            for j in 0..nr_eff {
+                for i in 0..mr_eff {
+                    let mut acc = 0.0f64;
+                    for kk in 0..kc {
+                        acc += apan[kk * mr + i] as f64 * bpan[kk * nr + j] as f64;
+                    }
+                    want[j * mr + i] += acc as f32;
+                }
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "tile {mr_eff}x{nr_eff}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn exp_poly_tracks_libm() {
+        if !avx2_available() {
+            eprintln!("SKIP: host has no AVX2+FMA");
+            return;
+        }
+        let xs: Vec<f32> = (-1000..=1000).map(|i| i as f32 * 0.05).collect();
+        let mut got = vec![0.0f32; xs.len()];
+        // Drive exp through the sigmoid kernel: s = 1/(1+e^{-x}).
+        sigmoid_ps(&xs, &mut got);
+        for (&x, &s) in xs.iter().zip(&got) {
+            let want = 1.0f64 / (1.0 + (-x as f64).exp());
+            assert!((s as f64 - want).abs() < 1e-6, "sigmoid({x}) = {s}, want {want}");
+        }
+        let mut t = vec![0.0f32; xs.len()];
+        tanh_ps(&xs, &mut t);
+        for (&x, &tv) in xs.iter().zip(&t) {
+            let want = (x as f64).tanh();
+            assert!((tv as f64 - want).abs() < 1e-6, "tanh({x}) = {tv}, want {want}");
+        }
+    }
+
+    #[test]
+    fn relu_kernels_are_bit_exact() {
+        if !avx2_available() {
+            eprintln!("SKIP: host has no AVX2+FMA");
+            return;
+        }
+        let xs: Vec<f32> = vec![-2.0, -0.0, 0.0, 1.5, f32::NAN, 3.0, -7.25, 0.125, 9.0];
+        let mut got = vec![9.9f32; xs.len()];
+        relu_ps(&xs, &mut got);
+        for (&x, &g) in xs.iter().zip(&got) {
+            let want = if x > 0.0 { x } else { 0.0 };
+            assert_eq!(g.to_bits(), want.to_bits(), "relu({x})");
+        }
+        let mut gp = vec![9.9f32; xs.len()];
+        relu_prime_ps(&xs, &mut gp);
+        for (&x, &g) in xs.iter().zip(&gp) {
+            let want = if x > 0.0 { 1.0f32 } else { 0.0 };
+            assert_eq!(g.to_bits(), want.to_bits(), "relu'({x})");
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! Runtime-dispatched SIMD microkernels — the compute dispatch table.
+//!
+//! The blocked GEMM of [`crate::tensor::gemm`] bottoms out in an `MR x NR`
+//! register tile. The portable tile ([`scalar_kernel`]) is a generic loop
+//! the compiler auto-vectorizes on a good day; this module adds *explicit*
+//! arch kernels — AVX2+FMA on `x86_64` ([`avx2`], wider 8x8 f32 tiles),
+//! NEON on `aarch64` ([`neon`]) — selected **once at runtime** and cached:
+//!
+//! - [`kind`] probes the host (`is_x86_feature_detected!`-style) on first
+//!   use and caches the answer in an atomic;
+//! - `PALLAS_FORCE_SCALAR=1` in the environment pins the portable scalar
+//!   kernel (the fallback CI keeps honest with a dedicated job);
+//! - [`force`] lets tests and benches flip the dispatch explicitly to
+//!   compare paths inside one process.
+//!
+//! The same table carries the vectorized **epilogue** activation kernels
+//! (relu on both arches — bit-exact with the scalar formula — plus
+//! sigmoid/tanh via a polynomial `exp` on AVX2), which the fused GEMM
+//! epilogue of [`crate::tensor::gemm::Epilogue`] consumes. Numerics
+//! contract: for a *fixed* kernel choice results are deterministic, and
+//! the scalar kernel reproduces the pre-dispatch engine bit-for-bit; SIMD
+//! kernels may differ from scalar by FMA/reassociation at ulp scale
+//! (`rust/tests/simd_props.rs` pins the tolerances).
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use super::matrix::Scalar;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A slice kernel `out[i] = f(z[i])` — the shape of every epilogue
+/// activation kernel (vectorized or scalar).
+pub type SliceFn<T> = fn(&[T], &mut [T]);
+
+/// Which microkernel family the dispatch selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable generic tile (the pre-dispatch engine, bit-for-bit).
+    Scalar,
+    /// x86_64 AVX2 + FMA tiles.
+    Avx2,
+    /// aarch64 NEON tiles.
+    Neon,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Avx2 => "avx2+fma",
+            Self::Neon => "neon",
+        }
+    }
+}
+
+/// Activations with a vectorized epilogue kernel in the dispatch table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActId {
+    Relu,
+    Sigmoid,
+    Tanh,
+}
+
+/// One register-tile microkernel: computes a full `mr x nr` tile over the
+/// packed panels and **adds** the valid `mr_eff x nr_eff` region onto `c`
+/// (column stride `ldc`). Panels are zero-padded to full tiles by the
+/// packing step, so the k-loop is branch-free for every kernel.
+pub type TileFn<T> = fn(
+    kc: usize,
+    apan: &[T],
+    bpan: &[T],
+    c: &mut [T],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+);
+
+/// A dispatchable GEMM tile kernel: its tile geometry (which also drives
+/// the packing layout) and the tile function itself.
+#[derive(Debug, Clone, Copy)]
+pub struct TileKernel<T> {
+    /// Tile height (rows of C per call); packing strips are this tall.
+    pub mr: usize,
+    /// Tile width (columns of C per call); packing strips are this wide.
+    pub nr: usize,
+    /// Human-readable kernel name (the startup log line).
+    pub name: &'static str,
+    pub tile: TileFn<T>,
+}
+
+/// Scalar tile geometry (the historical `gemm::MR`/`gemm::NR`).
+pub(crate) const SMR: usize = 8;
+pub(crate) const SNR: usize = 4;
+
+const CODE_UNSET: u8 = 0;
+const CODE_SCALAR: u8 = 1;
+const CODE_AVX2: u8 = 2;
+const CODE_NEON: u8 = 3;
+
+/// Cached dispatch decision (0 = not yet probed).
+static ACTIVE: AtomicU8 = AtomicU8::new(CODE_UNSET);
+
+fn code(kind: KernelKind) -> u8 {
+    match kind {
+        KernelKind::Scalar => CODE_SCALAR,
+        KernelKind::Avx2 => CODE_AVX2,
+        KernelKind::Neon => CODE_NEON,
+    }
+}
+
+/// The kernel family the active dispatch uses. First call probes the host
+/// (honoring `PALLAS_FORCE_SCALAR=1`); later calls are one atomic load.
+pub fn kind() -> KernelKind {
+    match ACTIVE.load(Ordering::Relaxed) {
+        CODE_SCALAR => KernelKind::Scalar,
+        CODE_AVX2 => KernelKind::Avx2,
+        CODE_NEON => KernelKind::Neon,
+        _ => {
+            let k = if force_scalar_env() { KernelKind::Scalar } else { detected() };
+            ACTIVE.store(code(k), Ordering::Relaxed);
+            k
+        }
+    }
+}
+
+/// Override the dispatch (tests and benches compare paths inside one
+/// process). `None` restores the automatic probe on next use. Forcing a
+/// SIMD kind the host does not support would execute illegal
+/// instructions, so only [`KernelKind::Scalar`] and [`detected`] are
+/// accepted.
+pub fn force(kind: Option<KernelKind>) {
+    match kind {
+        Some(k) => {
+            assert!(
+                k == KernelKind::Scalar || k == detected(),
+                "cannot force {k:?}: host supports {:?}",
+                detected()
+            );
+            ACTIVE.store(code(k), Ordering::Relaxed);
+        }
+        None => ACTIVE.store(CODE_UNSET, Ordering::Relaxed),
+    }
+}
+
+fn force_scalar_env() -> bool {
+    std::env::var_os("PALLAS_FORCE_SCALAR").is_some_and(|v| v == "1")
+}
+
+/// The best kernel family this host can execute (ignores the env pin and
+/// any [`force`] override).
+#[cfg(target_arch = "x86_64")]
+pub fn detected() -> KernelKind {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        KernelKind::Avx2
+    } else {
+        KernelKind::Scalar
+    }
+}
+
+/// The best kernel family this host can execute (ignores the env pin and
+/// any [`force`] override).
+#[cfg(target_arch = "aarch64")]
+pub fn detected() -> KernelKind {
+    // NEON is baseline on aarch64.
+    KernelKind::Neon
+}
+
+/// The best kernel family this host can execute (ignores the env pin and
+/// any [`force`] override).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn detected() -> KernelKind {
+    KernelKind::Scalar
+}
+
+/// One-line description of the active dispatch — the selected-kernel line
+/// logged at startup (see the README perf section).
+pub fn describe() -> String {
+    let k = kind();
+    format!(
+        "compute dispatch: {} (f32 {}, f64 {}); fused GEMM epilogues; \
+         PALLAS_FORCE_SCALAR=1 pins the portable kernel",
+        k.name(),
+        f32::tile_kernel(k).name,
+        f64::tile_kernel(k).name,
+    )
+}
+
+/// The portable generic tile — byte-for-byte the arithmetic of the
+/// pre-dispatch engine's microkernel, kept as the fallback and as the
+/// numerics baseline the checkpoint/bit-exactness tests pin.
+pub fn scalar_kernel<T: Scalar>() -> TileKernel<T> {
+    TileKernel { mr: SMR, nr: SNR, name: "scalar 8x4", tile: scalar_tile::<T> }
+}
+
+/// `acc[j][i] += Σ_k apan[k][i] * bpan[k][j]`, then flush the valid
+/// region onto C. Both panels stream contiguously (`SMR`/`SNR` elements
+/// per k), which is what lets the generic loop auto-vectorize.
+fn scalar_tile<T: Scalar>(
+    kc: usize,
+    apan: &[T],
+    bpan: &[T],
+    c: &mut [T],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * SMR && bpan.len() >= kc * SNR);
+    let mut acc = [[T::ZERO; SMR]; SNR];
+    for k in 0..kc {
+        let av = &apan[k * SMR..k * SMR + SMR];
+        let bv = &bpan[k * SNR..k * SNR + SNR];
+        for (accj, &bj) in acc.iter_mut().zip(bv.iter()) {
+            for (ai, &aval) in accj.iter_mut().zip(av.iter()) {
+                *ai = *ai + aval * bj;
+            }
+        }
+    }
+    for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+        let col = &mut c[j * ldc..j * ldc + mr_eff];
+        for (ci, &av) in col.iter_mut().zip(accj.iter()) {
+            *ci = *ci + av;
+        }
+    }
+}
+
+/// f32 tile kernel for a dispatch kind (scalar fallback for kinds this
+/// build has no kernel for).
+pub(crate) fn f32_tile_kernel(kind: KernelKind) -> TileKernel<f32> {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => avx2::f32_kernel(),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => neon::f32_kernel(),
+        _ => scalar_kernel::<f32>(),
+    }
+}
+
+/// f64 tile kernel for a dispatch kind.
+pub(crate) fn f64_tile_kernel(kind: KernelKind) -> TileKernel<f64> {
+    match kind {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => avx2::f64_kernel(),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => neon::f64_kernel(),
+        _ => scalar_kernel::<f64>(),
+    }
+}
+
+/// Vectorized f32 activation slice kernel for the *active* dispatch, if
+/// the table carries one (`None` = use the generic scalar loop).
+pub(crate) fn f32_act_kernel(id: ActId, prime: bool) -> Option<SliceFn<f32>> {
+    match kind() {
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => Some(avx2::act_kernel(id, prime)),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => neon::act_kernel(id, prime),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_kernel_has_historic_tile() {
+        let k = scalar_kernel::<f64>();
+        assert_eq!((k.mr, k.nr), (SMR, SNR));
+        assert_eq!(k.name, "scalar 8x4");
+    }
+
+    #[test]
+    fn scalar_tile_computes_outer_products() {
+        // kc=2, apan rows [1,2,..8] then [10,20,..80]; bpan [1,0,0,0] / [0,1,0,0].
+        let mut apan = vec![0.0f64; 2 * SMR];
+        let mut bpan = vec![0.0f64; 2 * SNR];
+        for i in 0..SMR {
+            apan[i] = (i + 1) as f64;
+            apan[SMR + i] = 10.0 * (i + 1) as f64;
+        }
+        bpan[0] = 1.0; // k=0 contributes to column 0
+        bpan[SNR + 1] = 1.0; // k=1 contributes to column 1
+        let mut c = vec![0.0f64; SMR * SNR];
+        scalar_tile(2, &apan, &bpan, &mut c, SMR, SMR, SNR);
+        assert_eq!(c[0], 1.0);
+        assert_eq!(c[7], 8.0);
+        assert_eq!(c[SMR], 10.0, "column 1 takes the k=1 row");
+        assert_eq!(c[SMR + 7], 80.0);
+        assert!(c[2 * SMR..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn scalar_tile_flushes_only_valid_region() {
+        let apan = vec![1.0f64; SMR];
+        let bpan = vec![1.0f64; SNR];
+        let mut c = vec![0.0f64; SMR * SNR];
+        scalar_tile(1, &apan, &bpan, &mut c, SMR, 3, 2);
+        let written: usize = c.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(written, 6, "3x2 valid region only");
+        assert_eq!(c[0], 1.0);
+        assert_eq!(c[SMR + 2], 1.0);
+        assert_eq!(c[3], 0.0, "row 3 is past mr_eff");
+    }
+
+    // NOTE: `force()` is exercised only in `rust/tests/simd_props.rs`,
+    // which serializes its tests — flipping the global dispatch from a
+    // unit test would race sibling tests running in the same process.
+
+    #[test]
+    fn kind_is_stable_across_calls() {
+        assert_eq!(kind(), kind());
+        let k = detected();
+        assert!(matches!(k, KernelKind::Scalar | KernelKind::Avx2 | KernelKind::Neon));
+    }
+
+    #[test]
+    fn describe_names_the_kernels() {
+        let line = describe();
+        assert!(line.contains("PALLAS_FORCE_SCALAR"), "{line}");
+        assert!(line.contains(kind().name()), "{line}");
+    }
+}

@@ -1,0 +1,197 @@
+//! aarch64 NEON microkernels: 8x4 f32 / 4x4 f64 GEMM tiles and the relu
+//! epilogue pair. NEON is baseline on aarch64, so no runtime feature
+//! probe is needed — the dispatch table still routes through
+//! [`super::kind`] so `PALLAS_FORCE_SCALAR=1` and [`super::force`] work
+//! identically on ARM hosts.
+//!
+//! The transcendental epilogues (sigmoid/tanh) intentionally stay on the
+//! generic scalar path here: this target is exercised in CI only as a
+//! `cargo check` cross-compile, and a polynomial `exp` we can never run
+//! is a liability, not a kernel. The fusion win (no second memory pass)
+//! is arch-independent and applies regardless.
+
+use super::{ActId, SliceFn, TileKernel};
+use core::arch::aarch64::*;
+
+/// 8x4 f32 tile: two `float32x4_t` halves per A-column against 4
+/// broadcast B values — 8 FMA accumulators.
+pub(crate) fn f32_kernel() -> TileKernel<f32> {
+    TileKernel { mr: 8, nr: 4, name: "neon 8x4", tile: tile_f32 }
+}
+
+/// 4x4 f64 tile: two `float64x2_t` halves per A-column, 8 FMA
+/// accumulators.
+pub(crate) fn f64_kernel() -> TileKernel<f64> {
+    TileKernel { mr: 4, nr: 4, name: "neon 4x4", tile: tile_f64 }
+}
+
+fn tile_f32(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 8 && bpan.len() >= kc * 4);
+    // SAFETY: NEON is baseline on every aarch64 target.
+    unsafe { tile_f32_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+unsafe fn tile_f32_impl(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [[vdupq_n_f32(0.0); 2]; 4];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a0 = vld1q_f32(ap);
+        let a1 = vld1q_f32(ap.add(4));
+        for (j, accj) in acc.iter_mut().enumerate() {
+            let b = vdupq_n_f32(*bp.add(j));
+            accj[0] = vfmaq_f32(accj[0], a0, b);
+            accj[1] = vfmaq_f32(accj[1], a1, b);
+        }
+        ap = ap.add(8);
+        bp = bp.add(4);
+    }
+    if mr_eff == 8 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            vst1q_f32(cp, vaddq_f32(vld1q_f32(cp), accj[0]));
+            let cp4 = cp.add(4);
+            vst1q_f32(cp4, vaddq_f32(vld1q_f32(cp4), accj[1]));
+        }
+    } else {
+        let mut buf = [0.0f32; 8];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            vst1q_f32(buf.as_mut_ptr(), accj[0]);
+            vst1q_f32(buf.as_mut_ptr().add(4), accj[1]);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+fn tile_f64(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 4 && bpan.len() >= kc * 4);
+    // SAFETY: NEON is baseline on every aarch64 target.
+    unsafe { tile_f64_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+unsafe fn tile_f64_impl(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [[vdupq_n_f64(0.0); 2]; 4];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a0 = vld1q_f64(ap);
+        let a1 = vld1q_f64(ap.add(2));
+        for (j, accj) in acc.iter_mut().enumerate() {
+            let b = vdupq_n_f64(*bp.add(j));
+            accj[0] = vfmaq_f64(accj[0], a0, b);
+            accj[1] = vfmaq_f64(accj[1], a1, b);
+        }
+        ap = ap.add(4);
+        bp = bp.add(4);
+    }
+    if mr_eff == 4 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            vst1q_f64(cp, vaddq_f64(vld1q_f64(cp), accj[0]));
+            let cp2 = cp.add(2);
+            vst1q_f64(cp2, vaddq_f64(vld1q_f64(cp2), accj[1]));
+        }
+    } else {
+        let mut buf = [0.0f64; 4];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            vst1q_f64(buf.as_mut_ptr(), accj[0]);
+            vst1q_f64(buf.as_mut_ptr().add(2), accj[1]);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Epilogue activation kernels
+// ---------------------------------------------------------------------
+
+/// The vectorized f32 epilogue kernels this arch carries (relu pair
+/// only; `None` falls back to the generic scalar loop).
+pub(crate) fn act_kernel(id: ActId, prime: bool) -> Option<SliceFn<f32>> {
+    match (id, prime) {
+        (ActId::Relu, false) => Some(relu_ps),
+        (ActId::Relu, true) => Some(relu_prime_ps),
+        _ => None,
+    }
+}
+
+fn relu_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: NEON is baseline on every aarch64 target.
+    unsafe { relu_impl(z, out) }
+}
+
+unsafe fn relu_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_f32(z.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vmaxq_f32(v, zero));
+        i += 4;
+    }
+    while i < n {
+        let v = z[i];
+        out[i] = if v > 0.0 { v } else { 0.0 };
+        i += 1;
+    }
+}
+
+fn relu_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: NEON is baseline on every aarch64 target.
+    unsafe { relu_prime_impl(z, out) }
+}
+
+unsafe fn relu_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = vdupq_n_f32(0.0);
+    let one_bits = vreinterpretq_u32_f32(vdupq_n_f32(1.0));
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_f32(z.as_ptr().add(i));
+        let mask = vcgtq_f32(v, zero);
+        vst1q_f32(out.as_mut_ptr().add(i), vreinterpretq_f32_u32(vandq_u32(mask, one_bits)));
+        i += 4;
+    }
+    while i < n {
+        out[i] = if z[i] > 0.0 { 1.0 } else { 0.0 };
+        i += 1;
+    }
+}

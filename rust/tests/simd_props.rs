@@ -1,0 +1,316 @@
+//! Property tests for the runtime SIMD dispatch: the arch microkernels
+//! and fused epilogues must agree with the pinned scalar kernel within
+//! ulp-scale tolerances on every mr/nr remainder shape, gradients must
+//! survive a finite-difference check under both dispatches, and the
+//! threaded paths must reuse the persistent worker pool instead of
+//! spawning per call.
+//!
+//! Every test takes a process-wide lock before touching
+//! [`simd::force`]: the dispatch is global, and flipping it under a
+//! concurrently running test would corrupt its same-kernel comparisons.
+
+use neural_rs::nn::{Activation, GradShards, ImageDims, LayerSpec, Network};
+use neural_rs::tensor::gemm::{self, Epilogue, GemmScratch, Op};
+use neural_rs::tensor::simd::{self, KernelKind};
+use neural_rs::tensor::{pool, vecops, Matrix, Rng, Scalar};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+fn dispatch_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    // A poisoned lock just means another test failed; keep going.
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the dispatch forced to `kind`, restoring auto-probe
+/// afterwards.
+fn with_kind<R>(kind: KernelKind, f: impl FnOnce() -> R) -> R {
+    simd::force(Some(kind));
+    let r = f();
+    simd::force(None);
+    r
+}
+
+fn rand_matrix<T: Scalar>(rows: usize, cols: usize, rng: &mut Rng) -> Matrix<T> {
+    Matrix::from_fn(rows, cols, |_, _| T::from_f64(rng.uniform_in(-1.0, 1.0)))
+}
+
+/// SIMD vs scalar GEMM over every tile-remainder class (tiles are at
+/// most 8 wide/tall, so shapes 1..=9 plus multiples cover all edges),
+/// all four op orientations, and the accumulate path.
+fn gemm_agreement<T: Scalar>(tol: f64) {
+    let simd_kind = simd::detected();
+    let ms = [1usize, 2, 3, 5, 7, 8, 9, 16, 17, 33];
+    let ns = [1usize, 3, 4, 7, 8, 9, 17, 33];
+    let ks = [1usize, 7, 64, 300];
+    let mut rng = Rng::new(0x51AD);
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &ks {
+                let ops = [(Op::N, Op::N), (Op::T, Op::N), (Op::N, Op::T), (Op::T, Op::T)];
+                let (op_a, op_b) = ops[(m + n + k) % 4];
+                let accumulate = (m + k) % 2 == 0;
+                let a: Matrix<T> = match op_a {
+                    Op::N => rand_matrix(m, k, &mut rng),
+                    Op::T => rand_matrix(k, m, &mut rng),
+                };
+                let b: Matrix<T> = match op_b {
+                    Op::N => rand_matrix(k, n, &mut rng),
+                    Op::T => rand_matrix(n, k, &mut rng),
+                };
+                let c0: Matrix<T> = rand_matrix(m, n, &mut rng);
+
+                let mut want = c0.clone();
+                with_kind(KernelKind::Scalar, || {
+                    let mut scratch = GemmScratch::new();
+                    gemm::gemm_into(op_a, &a, op_b, &b, &mut want, accumulate, &mut scratch);
+                });
+                let mut got = c0.clone();
+                with_kind(simd_kind, || {
+                    let mut scratch = GemmScratch::new();
+                    gemm::gemm_into(op_a, &a, op_b, &b, &mut got, accumulate, &mut scratch);
+                });
+                let d = got.max_abs_diff(&want);
+                assert!(
+                    d < tol,
+                    "{op_a:?}{op_b:?} m={m} n={n} k={k} acc={accumulate}: diff {d}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_gemm_matches_scalar_f64() {
+    let _g = dispatch_lock();
+    gemm_agreement::<f64>(1e-10);
+}
+
+#[test]
+fn simd_gemm_matches_scalar_f32() {
+    let _g = dispatch_lock();
+    // k·eps accumulation + FMA-vs-mul/add slack on [-1,1] operands.
+    gemm_agreement::<f32>(1e-3);
+}
+
+/// Fused GEMM epilogue vs the classic two-pass form, for every
+/// activation, under both dispatches.
+fn epilogue_agreement<T: Scalar>(tol: f64) {
+    let kinds = [KernelKind::Scalar, simd::detected()];
+    let mut rng = Rng::new(77);
+    for act in Activation::ALL {
+        for kind in kinds {
+            for &(m, n, k) in &[(1usize, 1usize, 1usize), (8, 8, 8), (13, 9, 300), (17, 5, 31)] {
+                let a: Matrix<T> = rand_matrix(m, k, &mut rng);
+                let b: Matrix<T> = rand_matrix(k, n, &mut rng);
+                let bias: Vec<T> = (0..m).map(|_| T::from_f64(rng.uniform_in(-0.5, 0.5))).collect();
+                let (z, out, stash) = with_kind(kind, || {
+                    let mut z = Matrix::zeros(m, n);
+                    let mut out = vec![T::ZERO; m * n];
+                    let mut stash = vec![T::ZERO; m * n];
+                    let mut scratch = GemmScratch::new();
+                    gemm::gemm_into_ep(
+                        Op::N,
+                        &a,
+                        Op::N,
+                        &b,
+                        &mut z,
+                        false,
+                        Epilogue::BiasActStash {
+                            bias: &bias,
+                            apply: act.apply_kernel::<T>(),
+                            prime: act.prime_kernel::<T>(),
+                            out: &mut out,
+                            stash: &mut stash,
+                        },
+                        &mut scratch,
+                    );
+                    (z, out, stash)
+                });
+                // Unfused reference under the *same* dispatch: gemm, then
+                // bias, then elementwise σ / σ'.
+                let z_ref = with_kind(kind, || {
+                    let mut zr = Matrix::zeros(m, n);
+                    let mut scratch = GemmScratch::new();
+                    gemm::gemm_into(Op::N, &a, Op::N, &b, &mut zr, false, &mut scratch);
+                    for j in 0..n {
+                        vecops::axpy(zr.col_mut(j), T::ONE, &bias);
+                    }
+                    zr
+                });
+                assert_eq!(z, z_ref, "{act}/{kind:?} {m}x{n}x{k}: Z must match bit-for-bit");
+                for (i, (&o, &zv)) in out.iter().zip(z_ref.as_slice()).enumerate() {
+                    let want = act.apply(zv).to_f64();
+                    let d = (o.to_f64() - want).abs();
+                    assert!(d < tol, "{act}/{kind:?} {m}x{n}x{k}: out[{i}] diff {d}");
+                }
+                for (i, (&s, &zv)) in stash.iter().zip(z_ref.as_slice()).enumerate() {
+                    let want = act.prime(zv).to_f64();
+                    let d = (s.to_f64() - want).abs();
+                    assert!(d < tol, "{act}/{kind:?} {m}x{n}x{k}: stash[{i}] diff {d}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_epilogue_matches_unfused_f64() {
+    let _g = dispatch_lock();
+    // f64 has no SIMD activation kernels, so agreement is exact; keep a
+    // hair of slack for the dispatch-kind comparison being elementwise.
+    epilogue_agreement::<f64>(1e-12);
+}
+
+#[test]
+fn fused_epilogue_matches_unfused_f32() {
+    let _g = dispatch_lock();
+    // The AVX2 sigmoid/tanh epilogues use a polynomial exp (~1e-7 abs).
+    epilogue_agreement::<f32>(1e-5);
+}
+
+/// Under the pinned scalar kernel, the fused dense forward must equal
+/// the legacy two-pass pipeline (gemm, bias axpy, elementwise σ)
+/// bit-for-bit — the invariant that keeps checkpoints and seeded runs
+/// reproducible across the dispatch rework.
+#[test]
+fn forced_scalar_dense_forward_is_bit_exact_with_legacy_two_pass() {
+    let _g = dispatch_lock();
+    with_kind(KernelKind::Scalar, || {
+        let net = Network::<f64>::new(&[11, 9, 4], Activation::Sigmoid, 21);
+        let mut rng = Rng::new(22);
+        let x: Matrix<f64> = rand_matrix(11, 6, &mut rng);
+        let fused = net.output_batch(&x);
+
+        let act = net.activation();
+        let mut a = x.clone();
+        for l in 0..net.dense_count() {
+            let mut z = net.dense_weight(l).tn_matmul(&a);
+            for j in 0..z.cols() {
+                vecops::axpy(z.col_mut(j), 1.0, net.dense_bias(l));
+            }
+            z.map_inplace(|v| act.apply(v));
+            a = z;
+        }
+        assert_eq!(fused, a, "scalar-kernel fused forward must be bit-exact");
+    });
+}
+
+/// Finite-difference gradient check through the fused
+/// conv→pool→dense→softmax stack, with the dispatch forced both ways.
+#[test]
+fn fd_gradient_check_fused_conv_stack_both_dispatches() {
+    let _g = dispatch_lock();
+    for kind in [KernelKind::Scalar, simd::detected()] {
+        with_kind(kind, || {
+            let specs = vec![
+                LayerSpec::Conv2d {
+                    filters: 2,
+                    kernel: 3,
+                    stride: 1,
+                    activation: Activation::Tanh,
+                },
+                LayerSpec::MaxPool2d { kernel: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+                LayerSpec::Softmax,
+            ];
+            let mut net: Network<f64> =
+                Network::from_specs_image(36, Some(ImageDims::new(1, 6, 6)), &specs, 19);
+            let mut rng = Rng::new(23);
+            let x: Matrix<f64> = rand_matrix(36, 3, &mut rng);
+            let y = Matrix::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+            let g = net.grad_batch(&x, &y);
+            let gflat = g.to_flat();
+            let mut flat = net.params_to_flat();
+            let h = 1e-6;
+            let scale = x.cols() as f64; // loss_batch reports the mean cost
+            for i in 0..flat.len() {
+                let orig = flat[i];
+                flat[i] = orig + h;
+                net.params_unflatten_from(&flat);
+                let cp = net.loss_batch(&x, &y);
+                flat[i] = orig - h;
+                net.params_unflatten_from(&flat);
+                let cm = net.loss_batch(&x, &y);
+                flat[i] = orig;
+                net.params_unflatten_from(&flat);
+                let fd = (cp - cm) / (2.0 * h) * scale;
+                assert!(
+                    (fd - gflat[i]).abs() < 1e-5,
+                    "{kind:?}: param {i}: fd={fd} analytic={}",
+                    gflat[i]
+                );
+            }
+        });
+    }
+}
+
+/// The pooled threaded paths must (a) keep matching the serial results
+/// and (b) never spawn threads per call — the pool's spawn counter stays
+/// frozen across hundreds of threaded steps.
+#[test]
+fn threaded_paths_reuse_the_worker_pool() {
+    let _g = dispatch_lock();
+    let net = Network::<f32>::new(&[48, 24, 10], Activation::Sigmoid, 7);
+    let mut rng = Rng::new(8);
+    let x: Matrix<f32> = rand_matrix(48, 40, &mut rng);
+    let y = Matrix::from_fn(10, 40, |i, j| if j % 10 == i { 1.0 } else { 0.0 });
+    let want = net.grad_batch(&x, &y);
+
+    let _ = net.grad_batch_threaded(&x, &y, 4); // first call initializes the pool
+    let spawned0 = pool::spawned();
+    assert!(spawned0 <= pool::workers().max(1), "spawned {spawned0}");
+
+    for step in 0..60u64 {
+        let g = net.grad_batch_threaded_at(&x, &y, 4, step);
+        for l in 0..want.dw.len() {
+            let d = g.dw[l].max_abs_diff(&want.dw[l]);
+            assert!(d < 1e-3, "step {step}: dw[{l}] diff {d}");
+        }
+    }
+    let a: Matrix<f32> = rand_matrix(96, 64, &mut rng);
+    let b: Matrix<f32> = rand_matrix(64, 80, &mut rng);
+    let single = a.matmul(&b);
+    for _ in 0..40 {
+        assert_eq!(a.matmul_threaded(&b, 4), single, "same kernel => bit-equal shards");
+        let _ = net.output_batch_threaded(&x, 4);
+    }
+    assert_eq!(
+        pool::spawned(),
+        spawned0,
+        "threaded hot paths must reuse pool workers, never spawn per call"
+    );
+}
+
+/// Reused [`GradShards`] must reproduce the fresh-state threaded path
+/// exactly: same shard partition, same mask streams, same summation
+/// order — across steps, including dropout nets.
+#[test]
+fn reused_shard_state_matches_fresh_threaded_path() {
+    let _g = dispatch_lock();
+    let specs = vec![
+        LayerSpec::Dense { units: 16, activation: Activation::Tanh },
+        LayerSpec::Dropout { rate: 0.5 },
+        LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+    ];
+    let net: Network<f64> = Network::from_specs(6, &specs, 51);
+    let mut rng = Rng::new(52);
+    let x: Matrix<f64> = rand_matrix(6, 12, &mut rng);
+    let y: Matrix<f64> = rand_matrix(3, 12, &mut rng);
+    let mut shards = GradShards::for_net(&net, 3);
+    assert_eq!(shards.threads(), 3);
+    for step in [0u64, 1, 2, 1, 0, 7] {
+        let fresh = net.grad_batch_threaded_at(&x, &y, 3, step);
+        let mut total = net.zero_grads();
+        net.grad_batch_threaded_into(&x, &y, &mut shards, step, &mut total);
+        assert_eq!(total, fresh, "step {step}: reused shard state must replay exactly");
+    }
+    // Ragged tail: fewer samples than shards leaves trailing shards empty.
+    let x2 = x.cols_range(0, 2);
+    let y2 = y.cols_range(0, 2);
+    let fresh = net.grad_batch_threaded_at(&x2, &y2, 3, 5);
+    let mut shards_wide = GradShards::for_net(&net, 3);
+    let mut total = net.zero_grads();
+    net.grad_batch_threaded_into(&x2, &y2, &mut shards_wide, 5, &mut total);
+    assert_eq!(total, fresh, "empty trailing shards must contribute nothing");
+}

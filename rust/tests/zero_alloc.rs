@@ -11,7 +11,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use neural_rs::data::{label_digits, synthesize};
-use neural_rs::nn::{Activation, Gradients, ImageDims, LayerSpec, Network, Workspace};
+use neural_rs::nn::{Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Workspace};
 
 struct CountingAlloc;
 
@@ -126,6 +126,36 @@ fn warmed_grad_batch_performs_zero_allocations() {
     assert_eq!(
         count, 0,
         "steady-state grad_batch_into made {count} heap allocations (want 0)"
+    );
+
+    // The pooled threaded path honors the same contract: with warm
+    // per-shard state (GradShards) and the persistent worker pool
+    // already spawned, a steady-state threaded step performs zero heap
+    // allocations too — the pool publishes batches on the caller's
+    // stack, shard inputs stage into reused buffers, and mask streams
+    // reseed in place.
+    let mut shards = GradShards::for_net(&layered, 3);
+    let mut total = layered.zero_grads();
+    for step in 0..2u64 {
+        // Warm-up: spawns the pool workers, sizes every slot buffer at
+        // the largest batch, and lets worker threads finish any lazy
+        // thread-local setup before counting starts.
+        total.zero_out();
+        layered.grad_batch_threaded_into(&x, &y, &mut shards, step, &mut total);
+        layered.grad_batch_threaded_into(&x_tail, &y_tail, &mut shards, step, &mut total);
+    }
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for step in 2..8u64 {
+        total.zero_out();
+        layered.grad_batch_threaded_into(&x, &y, &mut shards, step, &mut total);
+        layered.grad_batch_threaded_into(&x_tail, &y_tail, &mut shards, step, &mut total);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state pooled grad_batch_threaded_into made {count} heap allocations (want 0)"
     );
 
     // Sanity: the warmed paths still compute the right thing.

@@ -9,8 +9,9 @@ Usage:
     check_bench_regression.py [--threshold 0.25] BASELINE CURRENT
 
 Schema-aware:
-  - dense_ops/v1: results[] rows keyed by (section, op, variant) with a
-    samples_per_s / gflop_per_s throughput field (higher is better);
+  - dense_ops/v1 and conv_ops/v1: results[] rows keyed by
+    (section, op, variant) with a samples_per_s / gflop_per_s throughput
+    field (higher is better);
   - serve_load/v1: modes[] keyed by name with an rps field.
 
 Baselines whose "measured" flag is false (the committed placeholders from
@@ -28,7 +29,7 @@ import sys
 def metrics(doc):
     """Yield (key, value) throughput metrics for a bench JSON document."""
     schema = doc.get("schema", "")
-    if schema.startswith("dense_ops"):
+    if schema.startswith(("dense_ops", "conv_ops")):
         for row in doc.get("results", []):
             key = "{}/{}/{}".format(
                 row.get("section"), row.get("op"), row.get("variant")
