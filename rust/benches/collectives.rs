@@ -22,10 +22,10 @@ fn bench_local(n: usize, algo: ReduceAlgo, len: usize, iters: usize) -> f64 {
                 s.spawn(move || {
                     let mut buf = vec![1.0f32; len];
                     // Warmup.
-                    c.co_sum(&mut buf);
+                    c.co_sum(&mut buf).unwrap();
                     let sw = Stopwatch::start();
                     for _ in 0..iters {
-                        c.co_sum(&mut buf);
+                        c.co_sum(&mut buf).unwrap();
                     }
                     sw.elapsed_s() / iters as f64
                 })
@@ -45,10 +45,10 @@ fn bench_tcp(n: usize, len: usize, iters: usize) -> f64 {
         let mut handles = vec![s.spawn(move || {
             let c = TcpTopology::leader(addr, n, t).unwrap();
             let mut buf = vec![1.0f32; len];
-            c.co_sum(&mut buf);
+            c.co_sum(&mut buf).unwrap();
             let sw = Stopwatch::start();
             for _ in 0..iters {
-                c.co_sum(&mut buf);
+                c.co_sum(&mut buf).unwrap();
             }
             sw.elapsed_s() / iters as f64
         })];
@@ -56,10 +56,10 @@ fn bench_tcp(n: usize, len: usize, iters: usize) -> f64 {
             handles.push(s.spawn(move || {
                 let c = TcpTopology::worker(addr, img, n, t).unwrap();
                 let mut buf = vec![1.0f32; len];
-                c.co_sum(&mut buf);
+                c.co_sum(&mut buf).unwrap();
                 let sw = Stopwatch::start();
                 for _ in 0..iters {
-                    c.co_sum(&mut buf);
+                    c.co_sum(&mut buf).unwrap();
                 }
                 sw.elapsed_s() / iters as f64
             }));

@@ -12,8 +12,12 @@
 //! - [`ReduceAlgo::Chunked`]— each image reduces a contiguous chunk of the
 //!   buffer across all deposits (bandwidth-parallel, like a ring's
 //!   reduce-scatter phase).
+//!
+//! Shared-memory collectives cannot fail — no sockets, no peer that can
+//! vanish independently (a panicking teammate thread aborts the whole
+//! process) — so every op here returns `Ok` unconditionally.
 
-use super::Communicator;
+use super::{CommResult, Communicator};
 use crate::tensor::Scalar;
 use std::sync::{Arc, Barrier, Mutex};
 
@@ -186,13 +190,14 @@ impl Communicator for LocalComm {
         self.shared.n
     }
 
-    fn barrier(&self) {
+    fn barrier(&self) -> CommResult<()> {
         self.shared.barrier.wait();
+        Ok(())
     }
 
-    fn co_sum<T: Scalar>(&self, buf: &mut [T]) {
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
         if self.shared.n == 1 {
-            return;
+            return Ok(());
         }
         self.deposit(buf);
         self.shared.barrier.wait();
@@ -210,16 +215,17 @@ impl Communicator for LocalComm {
         // Trailing barrier: nobody may start the next collective (and
         // overwrite `result`) until everyone has read this one.
         self.shared.barrier.wait();
+        Ok(())
     }
 
-    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) {
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> CommResult<()> {
         assert!(
             (1..=self.shared.n).contains(&source_image),
             "source image {source_image} out of range 1..={}",
             self.shared.n
         );
         if self.shared.n == 1 {
-            return;
+            return Ok(());
         }
         if self.this_image() == source_image {
             let mut result = self.shared.result.lock().unwrap();
@@ -229,11 +235,12 @@ impl Communicator for LocalComm {
         self.shared.barrier.wait();
         self.read_result(buf);
         self.shared.barrier.wait();
+        Ok(())
     }
 
-    fn co_max<T: Scalar>(&self, buf: &mut [T]) {
+    fn co_max<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
         if self.shared.n == 1 {
-            return;
+            return Ok(());
         }
         self.deposit(buf);
         self.shared.barrier.wait();
@@ -243,11 +250,12 @@ impl Communicator for LocalComm {
         self.shared.barrier.wait();
         self.read_result(buf);
         self.shared.barrier.wait();
+        Ok(())
     }
 
-    fn co_min<T: Scalar>(&self, buf: &mut [T]) {
+    fn co_min<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
         if self.shared.n == 1 {
-            return;
+            return Ok(());
         }
         self.deposit(buf);
         self.shared.barrier.wait();
@@ -257,6 +265,7 @@ impl Communicator for LocalComm {
         self.shared.barrier.wait();
         self.read_result(buf);
         self.shared.barrier.wait();
+        Ok(())
     }
 }
 
@@ -296,7 +305,7 @@ mod tests {
                     // Image i deposits [i, 2i, 3i].
                     let i = c.this_image() as f64;
                     let mut buf = [i, 2.0 * i, 3.0 * i];
-                    c.co_sum(&mut buf);
+                    c.co_sum(&mut buf).unwrap();
                     buf
                 });
                 let total: f64 = (1..=n).map(|i| i as f64).sum();
@@ -311,7 +320,7 @@ mod tests {
     fn co_sum_f32_payload() {
         let out = run_team(4, ReduceAlgo::Tree, |c| {
             let mut buf = vec![c.this_image() as f32; 10];
-            c.co_sum(&mut buf);
+            c.co_sum(&mut buf).unwrap();
             buf
         });
         for buf in out {
@@ -324,7 +333,7 @@ mod tests {
         for src in 1..=3usize {
             let out = run_team(3, ReduceAlgo::Flat, move |c| {
                 let mut buf = [c.this_image() as f64 * 100.0];
-                c.co_broadcast(&mut buf, src);
+                c.co_broadcast(&mut buf, src).unwrap();
                 buf[0]
             });
             for v in out {
@@ -339,8 +348,8 @@ mod tests {
             let i = c.this_image() as f64;
             let mut mx = [i, -i];
             let mut mn = [i, -i];
-            c.co_max(&mut mx);
-            c.co_min(&mut mn);
+            c.co_max(&mut mx).unwrap();
+            c.co_min(&mut mn).unwrap();
             (mx, mn)
         });
         for (mx, mn) in out {
@@ -355,7 +364,7 @@ mod tests {
             let mut acc = 0.0f64;
             for round in 0..50 {
                 let mut buf = [c.this_image() as f64 + round as f64];
-                c.co_sum(&mut buf);
+                c.co_sum(&mut buf).unwrap();
                 acc += buf[0];
             }
             acc
@@ -371,7 +380,7 @@ mod tests {
     fn chunked_with_buffer_smaller_than_team() {
         let out = run_team(8, ReduceAlgo::Chunked, |c| {
             let mut buf = [c.this_image() as f64];
-            c.co_sum(&mut buf);
+            c.co_sum(&mut buf).unwrap();
             buf[0]
         });
         for v in out {
@@ -385,11 +394,11 @@ mod tests {
         for algo in ReduceAlgo::ALL {
             let out = run_team(4, algo, |c| {
                 let mut a = [c.this_image() as f64];
-                c.co_sum(&mut a); // 10
+                c.co_sum(&mut a).unwrap(); // 10
                 let mut b = [if c.this_image() == 2 { 7.0 } else { 0.0 }];
-                c.co_broadcast(&mut b, 2); // 7
+                c.co_broadcast(&mut b, 2).unwrap(); // 7
                 let mut d = [a[0] + b[0]]; // 17
-                c.co_sum(&mut d); // 68
+                c.co_sum(&mut d).unwrap(); // 68
                 d[0]
             });
             for v in out {
@@ -400,7 +409,10 @@ mod tests {
 
     #[test]
     fn sum_scalar_helper() {
-        let out = run_team(3, ReduceAlgo::Tree, |c| c.co_sum_scalar(c.this_image() as f64));
+        let out = run_team(3, ReduceAlgo::Tree, |c| {
+            let i = c.this_image() as f64;
+            c.co_sum_scalar(i).unwrap()
+        });
         for v in out {
             assert_eq!(v, 6.0);
         }

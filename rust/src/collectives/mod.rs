@@ -14,23 +14,93 @@
 //!
 //! Images are numbered 1..=num_images like Fortran's `this_image()`.
 //!
+//! Every collective is **fallible**: a network fault is a typed
+//! [`CommError`] at the caller, never a panic or an unbounded hang. The
+//! serial and shared-memory backends cannot fail (no I/O, no peers that
+//! can vanish) and always return `Ok`; the TCP backend classifies faults
+//! into I/O errors, protocol violations, and [`CommError::PeerLost`]
+//! (a teammate's process died). The deterministic fault-injection harness
+//! in [`faults`] exists to prove those guarantees hold for every frame a
+//! hostile network can produce.
+//!
 //! Reduction-order note: all backends reduce in f64 and deliver the *same*
 //! bytes to every image, so network replicas stay exactly consistent — the
 //! property the paper's step-3 update relies on.
 
+pub mod faults;
 mod local;
 mod tcp;
 
+pub use faults::{FaultAction, FaultDir, FaultPlan, FaultProxy};
 pub use local::{LocalComm, ReduceAlgo, Team};
-pub use tcp::{TcpComm, TcpTopology};
+pub use tcp::{TcpComm, TcpOptions, TcpTopology};
 
 use crate::tensor::Scalar;
+
+/// Errors raised by a communicator backend.
+#[derive(Debug)]
+pub enum CommError {
+    /// Transport-level failure (timeout, reset, short read mid-frame).
+    Io(std::io::Error),
+    /// A well-formed transport delivered a malformed or unexpected frame.
+    Protocol(String),
+    /// A specific teammate's connection is gone (process death, clean
+    /// close, or a leader-relayed loss notification). `image == 0` means
+    /// the lost image could not be identified.
+    PeerLost { image: usize },
+}
+
+impl CommError {
+    /// True when the error is a transport timeout (the per-operation
+    /// deadline fired rather than the peer misbehaving).
+    pub fn is_timeout(&self) -> bool {
+        match self {
+            Self::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ),
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "io: {e}"),
+            Self::Protocol(msg) => write!(f, "protocol: {msg}"),
+            Self::PeerLost { image: 0 } => write!(f, "a peer image was lost"),
+            Self::PeerLost { image } => write!(f, "peer image {image} was lost"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Result alias used by every collective operation.
+pub type CommResult<T> = std::result::Result<T, CommError>;
 
 /// Fortran-2018 collective semantics over a team of images.
 ///
 /// All methods are *collective*: every image of the team must call them in
 /// the same order with equally-sized buffers, as the Fortran standard
-/// requires of `co_sum`/`co_broadcast`.
+/// requires of `co_sum`/`co_broadcast`. Each returns a [`CommResult`]; the
+/// in-process backends are infallible and always return `Ok`, while the
+/// TCP backend surfaces transport faults as typed errors bounded by its
+/// per-operation deadline.
 pub trait Communicator {
     /// 1-based image index, like Fortran `this_image()`.
     fn this_image(&self) -> usize;
@@ -39,21 +109,21 @@ pub trait Communicator {
     fn num_images(&self) -> usize;
 
     /// Synchronize all images (`sync all`).
-    fn barrier(&self);
+    fn barrier(&self) -> CommResult<()>;
 
     /// Elementwise sum across images; every image receives the total
     /// (Fortran `co_sum` without `result_image`).
-    fn co_sum<T: Scalar>(&self, buf: &mut [T]);
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()>;
 
     /// Replace every image's buffer with `source_image`'s copy
     /// (Fortran `co_broadcast`).
-    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize);
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> CommResult<()>;
 
     /// Elementwise max across images (Fortran `co_max`).
-    fn co_max<T: Scalar>(&self, buf: &mut [T]);
+    fn co_max<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()>;
 
     /// Elementwise min across images (Fortran `co_min`).
-    fn co_min<T: Scalar>(&self, buf: &mut [T]);
+    fn co_min<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()>;
 
     /// True when running without any parallel peers.
     fn is_serial(&self) -> bool {
@@ -61,10 +131,10 @@ pub trait Communicator {
     }
 
     /// Collective sum of a single counter (accuracy tallies etc.).
-    fn co_sum_scalar(&self, v: f64) -> f64 {
+    fn co_sum_scalar(&self, v: f64) -> CommResult<f64> {
         let mut buf = [v];
-        self.co_sum(&mut buf);
-        buf[0]
+        self.co_sum(&mut buf)?;
+        Ok(buf[0])
     }
 }
 
@@ -79,13 +149,22 @@ impl Communicator for NullComm {
     fn num_images(&self) -> usize {
         1
     }
-    fn barrier(&self) {}
-    fn co_sum<T: Scalar>(&self, _buf: &mut [T]) {}
-    fn co_broadcast<T: Scalar>(&self, _buf: &mut [T], source_image: usize) {
-        assert_eq!(source_image, 1, "single image team only has image 1");
+    fn barrier(&self) -> CommResult<()> {
+        Ok(())
     }
-    fn co_max<T: Scalar>(&self, _buf: &mut [T]) {}
-    fn co_min<T: Scalar>(&self, _buf: &mut [T]) {}
+    fn co_sum<T: Scalar>(&self, _buf: &mut [T]) -> CommResult<()> {
+        Ok(())
+    }
+    fn co_broadcast<T: Scalar>(&self, _buf: &mut [T], source_image: usize) -> CommResult<()> {
+        assert_eq!(source_image, 1, "single image team only has image 1");
+        Ok(())
+    }
+    fn co_max<T: Scalar>(&self, _buf: &mut [T]) -> CommResult<()> {
+        Ok(())
+    }
+    fn co_min<T: Scalar>(&self, _buf: &mut [T]) -> CommResult<()> {
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -99,19 +178,32 @@ mod tests {
         assert_eq!(c.num_images(), 1);
         assert!(c.is_serial());
         let mut buf = [1.0f32, 2.0];
-        c.co_sum(&mut buf);
+        c.co_sum(&mut buf).unwrap();
         assert_eq!(buf, [1.0, 2.0]);
-        c.co_broadcast(&mut buf, 1);
+        c.co_broadcast(&mut buf, 1).unwrap();
         assert_eq!(buf, [1.0, 2.0]);
-        c.co_max(&mut buf);
-        c.co_min(&mut buf);
-        assert_eq!(c.co_sum_scalar(5.0), 5.0);
-        c.barrier();
+        c.co_max(&mut buf).unwrap();
+        c.co_min(&mut buf).unwrap();
+        assert_eq!(c.co_sum_scalar(5.0).unwrap(), 5.0);
+        c.barrier().unwrap();
     }
 
     #[test]
     #[should_panic]
     fn null_comm_rejects_bad_source() {
-        NullComm.co_broadcast(&mut [0.0f64], 2);
+        let _ = NullComm.co_broadcast(&mut [0.0f64], 2);
+    }
+
+    #[test]
+    fn comm_error_display_and_timeout_classification() {
+        let timeout = CommError::Io(std::io::Error::new(std::io::ErrorKind::TimedOut, "t"));
+        assert!(timeout.is_timeout());
+        let eof =
+            CommError::Io(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "gone"));
+        assert!(!eof.is_timeout());
+        assert!(!CommError::Protocol("x".into()).is_timeout());
+        let lost = CommError::PeerLost { image: 3 };
+        assert!(format!("{lost}").contains("image 3"));
+        assert!(format!("{}", CommError::PeerLost { image: 0 }).contains("peer image"));
     }
 }

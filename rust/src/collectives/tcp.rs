@@ -7,12 +7,40 @@
 //! same communication volume as OpenCoarrays' default. Frames carry a magic
 //! byte, an opcode, the sender image, and a length-prefixed f64 payload;
 //! every malformed frame is surfaced as an error rather than UB (exercised
-//! by the failure-injection tests).
+//! by the failure-injection tests in `tests/faults.rs`).
+//!
+//! # Failure model
+//!
+//! - **Per-operation deadlines.** Both the read and the write half of every
+//!   collective are bounded by [`TcpOptions::op_timeout`], so no fault —
+//!   dead peer, stalled network, half-written frame — can hang an image
+//!   longer than the deadline. Timeouts surface as `CommError::Io` with
+//!   kind `WouldBlock`/`TimedOut` (see [`CommError::is_timeout`]).
+//! - **Peer death is typed.** A connection that closes or resets maps to
+//!   [`CommError::PeerLost`] naming the lost image.
+//! - **No silent hangs for survivors.** When a non-elastic collective
+//!   fails at the leader, the leader best-effort broadcasts a `PeerLost`
+//!   frame to every surviving worker before returning its own error, so
+//!   all images surface a clean typed error instead of waiting out their
+//!   deadline on a result that will never come.
+//! - **Elastic degraded mode.** With [`TcpOptions::elastic`] set, the
+//!   leader drops dead workers from the team instead of failing: gathers
+//!   skip them, `co_sum` results are rescaled by `n / alive` (an
+//!   equal-shard approximation of the full-team average — shards differ by
+//!   at most one sample), and survivors are notified with `Shrunk` frames
+//!   which they log and skip transparently. Protocol violations and
+//!   timeouts stay fatal even in elastic mode: only clean peer loss is
+//!   survivable.
+//! - **Bounded, deterministic connect/hello retry.** Worker setup retries
+//!   transient I/O with a fixed linear backoff until the setup deadline.
+//!
+//! [`CommError::is_timeout`]: super::CommError::is_timeout
 
-use super::Communicator;
+use super::{CommError, CommResult, Communicator};
 use crate::tensor::Scalar;
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -30,6 +58,14 @@ enum Opcode {
     Barrier = 7,
     BarrierAck = 8,
     Bcast = 9,
+    /// Leader → workers: the team is failing; surface a typed error now
+    /// instead of waiting out the read deadline. `image` names the lost
+    /// image (0 when unknown).
+    PeerLost = 10,
+    /// Leader → workers (elastic mode): a teammate died and the team
+    /// continues without it. `image` names the lost image; the payload is
+    /// `[surviving_images]`. Receivers log and skip these frames.
+    Shrunk = 11,
 }
 
 impl Opcode {
@@ -45,46 +81,38 @@ impl Opcode {
             7 => Barrier,
             8 => BarrierAck,
             9 => Bcast,
+            10 => PeerLost,
+            11 => Shrunk,
             _ => return None,
         })
     }
 }
 
-/// Errors raised by the TCP communicator.
-#[derive(Debug)]
-pub enum CommError {
-    Io(std::io::Error),
-    Protocol(String),
-}
-
-impl std::fmt::Display for CommError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Self::Io(e) => write!(f, "io: {e}"),
-            Self::Protocol(msg) => write!(f, "protocol: {msg}"),
-        }
-    }
-}
-
-impl std::error::Error for CommError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            Self::Io(e) => Some(e),
-            Self::Protocol(_) => None,
-        }
-    }
-}
-
-impl From<std::io::Error> for CommError {
-    fn from(e: std::io::Error) -> Self {
-        Self::Io(e)
-    }
-}
-
-type Result<T> = std::result::Result<T, CommError>;
+type Result<T> = CommResult<T>;
 
 fn proto_err<T>(msg: impl Into<String>) -> Result<T> {
     Err(CommError::Protocol(msg.into()))
+}
+
+/// True for I/O errors that mean "the peer is gone" (as opposed to a
+/// timeout or a transient hiccup).
+fn is_peer_gone(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::UnexpectedEof
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::NotConnected
+    )
+}
+
+/// Map a transport error on a specific peer's connection to a typed error.
+fn classify(e: CommError, image: usize) -> CommError {
+    match e {
+        CommError::Io(ref io) if is_peer_gone(io) => CommError::PeerLost { image },
+        other => other,
+    }
 }
 
 #[derive(Debug)]
@@ -139,12 +167,94 @@ fn expect(frame: Frame, op: Opcode) -> Result<Frame> {
     Ok(frame)
 }
 
+/// Worker-side read of a collective frame: `Shrunk` notifications are
+/// logged and skipped, a `PeerLost` notification becomes the typed error
+/// it announces, anything else must match `op`.
+fn read_collective(s: &mut TcpStream, this_image: usize, op: Opcode) -> Result<Frame> {
+    loop {
+        let frame = read_frame(s)?;
+        match frame.op {
+            Opcode::Shrunk => {
+                let alive = frame.payload.first().copied().unwrap_or(0.0);
+                eprintln!(
+                    "[image {this_image}] image {} lost; team shrunk to {alive} image(s)",
+                    frame.image
+                );
+            }
+            Opcode::PeerLost => {
+                return Err(CommError::PeerLost { image: frame.image as usize });
+            }
+            _ => return expect(frame, op),
+        }
+    }
+}
+
+/// One leader-held worker connection plus its liveness flag (elastic mode
+/// marks connections dead instead of failing the team).
+#[derive(Debug)]
+struct PeerConn {
+    stream: TcpStream,
+    alive: bool,
+}
+
 #[derive(Debug)]
 enum Role {
     /// Image 1: one stream per worker, indexed by image-2.
-    Leader { conns: Vec<Mutex<TcpStream>> },
+    Leader { conns: Vec<Mutex<PeerConn>> },
     /// Images 2..=n: a single stream to the leader.
     Worker { conn: Mutex<TcpStream> },
+}
+
+/// Tuning knobs for the TCP team (deadlines, retries, elasticity).
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Bound on topology setup (accept loop / connect+hello retries).
+    pub setup_timeout: Duration,
+    /// Read **and** write deadline applied to every collective frame.
+    /// `Duration::ZERO` disables the deadline (not recommended).
+    pub op_timeout: Duration,
+    /// Continue without dead workers (`[parallel] elastic = true`)
+    /// instead of failing the whole team on peer loss.
+    pub elastic: bool,
+    /// Maximum connect+hello attempts during worker setup.
+    pub hello_attempts: u32,
+    /// Backoff added between hello attempts (linear: k·backoff before
+    /// attempt k+1) — deterministic, no jitter.
+    pub hello_backoff: Duration,
+}
+
+impl TcpOptions {
+    /// Defaults derived from a single timeout, matching the historical
+    /// `leader(addr, n, timeout)` behavior: the same bound applies to
+    /// setup and to every collective operation.
+    pub fn with_timeout(timeout: Duration) -> Self {
+        Self {
+            setup_timeout: timeout,
+            op_timeout: timeout,
+            elastic: false,
+            hello_attempts: 5,
+            hello_backoff: Duration::from_millis(50),
+        }
+    }
+
+    /// Builder-style elastic toggle.
+    pub fn elastic(mut self, yes: bool) -> Self {
+        self.elastic = yes;
+        self
+    }
+
+    /// Builder-style per-operation deadline override.
+    pub fn op_timeout(mut self, t: Duration) -> Self {
+        self.op_timeout = t;
+        self
+    }
+}
+
+fn arm_deadlines(s: &TcpStream, op_timeout: Duration) -> Result<()> {
+    let t = if op_timeout.is_zero() { None } else { Some(op_timeout) };
+    s.set_read_timeout(t)?;
+    s.set_write_timeout(t)?;
+    Ok(())
 }
 
 /// Builders for the star topology.
@@ -155,16 +265,30 @@ impl TcpTopology {
     /// leader communicator (image 1). `num_images == 1` yields a serial
     /// communicator with no sockets.
     pub fn leader(addr: SocketAddr, num_images: usize, timeout: Duration) -> Result<TcpComm> {
+        Self::leader_with(addr, num_images, TcpOptions::with_timeout(timeout))
+    }
+
+    /// Leader constructor with full [`TcpOptions`] control.
+    pub fn leader_with(addr: SocketAddr, num_images: usize, opts: TcpOptions) -> Result<TcpComm> {
         assert!(num_images >= 1);
         if num_images == 1 {
-            return Ok(TcpComm { image: 1, n: 1, role: Role::Leader { conns: Vec::new() } });
+            return Ok(TcpComm {
+                image: 1,
+                n: 1,
+                role: Role::Leader { conns: Vec::new() },
+                elastic: opts.elastic,
+                first_lost: AtomicUsize::new(0),
+            });
         }
         let listener = TcpListener::bind(addr)?;
         let mut conns: Vec<Option<TcpStream>> = (0..num_images - 1).map(|_| None).collect();
         for _ in 0..num_images - 1 {
             let (mut stream, _) = listener.accept()?;
             stream.set_nodelay(true)?;
-            stream.set_read_timeout(Some(timeout))?;
+            // Setup frames are bounded by the setup timeout; collectives
+            // re-arm with the per-operation deadline below.
+            stream.set_read_timeout(Some(opts.setup_timeout))?;
+            stream.set_write_timeout(Some(opts.setup_timeout))?;
             let hello = expect(read_frame(&mut stream)?, Opcode::Hello)?;
             let img = hello.image as usize;
             if !(2..=num_images).contains(&img) {
@@ -177,11 +301,21 @@ impl TcpTopology {
             write_frame(&mut stream, Opcode::BarrierAck, 1, &[])?;
             conns[img - 2] = Some(stream);
         }
-        let conns = conns
+        let conns: Vec<Mutex<PeerConn>> = conns
             .into_iter()
-            .map(|c| Mutex::new(c.expect("all worker slots filled")))
-            .collect();
-        Ok(TcpComm { image: 1, n: num_images, role: Role::Leader { conns } })
+            .map(|c| {
+                let stream = c.expect("all worker slots filled");
+                arm_deadlines(&stream, opts.op_timeout)?;
+                Ok(Mutex::new(PeerConn { stream, alive: true }))
+            })
+            .collect::<Result<_>>()?;
+        Ok(TcpComm {
+            image: 1,
+            n: num_images,
+            role: Role::Leader { conns },
+            elastic: opts.elastic,
+            first_lost: AtomicUsize::new(0),
+        })
     }
 
     /// Connect to the leader as `image` (2..=num_images).
@@ -191,9 +325,56 @@ impl TcpTopology {
         num_images: usize,
         timeout: Duration,
     ) -> Result<TcpComm> {
+        Self::worker_with(addr, image, num_images, TcpOptions::with_timeout(timeout))
+    }
+
+    /// Worker constructor with full [`TcpOptions`] control. The whole
+    /// connect + hello handshake retries on transient I/O with a
+    /// deterministic linear backoff, bounded by `setup_timeout` and
+    /// `hello_attempts`.
+    pub fn worker_with(
+        addr: SocketAddr,
+        image: usize,
+        num_images: usize,
+        opts: TcpOptions,
+    ) -> Result<TcpComm> {
         assert!((2..=num_images).contains(&image), "worker image must be in 2..=num_images");
-        // Retry connect while the leader is still binding.
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = std::time::Instant::now() + opts.setup_timeout;
+        let mut attempt: u32 = 0;
+        let stream = loop {
+            attempt += 1;
+            match Self::try_hello(addr, image, deadline, &opts) {
+                Ok(s) => break s,
+                Err(CommError::Io(e))
+                    if attempt < opts.hello_attempts.max(1)
+                        && std::time::Instant::now() < deadline =>
+                {
+                    eprintln!(
+                        "[image {image}] hello attempt {attempt} failed ({e}); retrying"
+                    );
+                    std::thread::sleep(opts.hello_backoff * attempt);
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        arm_deadlines(&stream, opts.op_timeout)?;
+        Ok(TcpComm {
+            image,
+            n: num_images,
+            role: Role::Worker { conn: Mutex::new(stream) },
+            elastic: opts.elastic,
+            first_lost: AtomicUsize::new(0),
+        })
+    }
+
+    /// One connect + hello handshake attempt (the connect itself also
+    /// polls while the leader is still binding).
+    fn try_hello(
+        addr: SocketAddr,
+        image: usize,
+        deadline: std::time::Instant,
+        opts: &TcpOptions,
+    ) -> Result<TcpStream> {
         let mut stream = loop {
             match TcpStream::connect(addr) {
                 Ok(s) => break s,
@@ -205,10 +386,11 @@ impl TcpTopology {
             }
         };
         stream.set_nodelay(true)?;
-        stream.set_read_timeout(Some(timeout))?;
+        stream.set_read_timeout(Some(opts.setup_timeout))?;
+        stream.set_write_timeout(Some(opts.setup_timeout))?;
         write_frame(&mut stream, Opcode::Hello, image as u32, &[])?;
         expect(read_frame(&mut stream)?, Opcode::BarrierAck)?;
-        Ok(TcpComm { image, n: num_images, role: Role::Worker { conn: Mutex::new(stream) } })
+        Ok(stream)
     }
 }
 
@@ -218,15 +400,133 @@ pub struct TcpComm {
     image: usize,
     n: usize,
     role: Role,
+    elastic: bool,
+    /// First image whose loss poisoned a non-elastic team (0 = healthy).
+    /// Subsequent collectives fail fast instead of touching desynced
+    /// streams.
+    first_lost: AtomicUsize,
 }
 
 impl TcpComm {
+    /// Images still participating (leader view; workers report the
+    /// original team size).
+    pub fn alive_images(&self) -> usize {
+        match &self.role {
+            Role::Leader { conns } => {
+                1 + conns.iter().filter(|c| c.lock().unwrap().alive).count()
+            }
+            Role::Worker { .. } => self.n,
+        }
+    }
+
+    /// True when this communicator continues without dead workers.
+    pub fn is_elastic(&self) -> bool {
+        self.elastic
+    }
+
+    /// Mark a worker dead and account for it (elastic mode).
+    fn mark_lost(&self, conns: &[Mutex<PeerConn>], slot: usize) {
+        let mut pc = conns[slot].lock().unwrap();
+        if pc.alive {
+            pc.alive = false;
+            let _ = pc.stream.shutdown(std::net::Shutdown::Both);
+            crate::metrics::record_peer_lost();
+            let alive = 1 + conns.iter().filter(|c| c.lock().unwrap().alive).count();
+            eprintln!(
+                "[image 1] image {} lost; continuing with {alive} of {} image(s)",
+                slot + 2,
+                self.n
+            );
+        }
+    }
+
+    /// Non-elastic failure path: best-effort `PeerLost` broadcast so every
+    /// surviving worker surfaces a clean typed error instead of waiting
+    /// out its read deadline, then poison the team and return `err`.
+    fn fail_team(&self, conns: &[Mutex<PeerConn>], lost_image: usize, err: CommError) -> CommError {
+        for pc in conns {
+            let mut pc = pc.lock().unwrap();
+            if pc.alive {
+                let _ = write_frame(&mut pc.stream, Opcode::PeerLost, lost_image as u32, &[]);
+            }
+        }
+        if lost_image != 0 {
+            crate::metrics::record_peer_lost();
+        }
+        self.first_lost.store(lost_image.max(1), Ordering::SeqCst);
+        err
+    }
+
+    /// Fail fast when a previous collective already poisoned the team.
+    fn check_poisoned(&self) -> Result<()> {
+        let lost = self.first_lost.load(Ordering::SeqCst);
+        if lost != 0 && !self.elastic {
+            return Err(CommError::PeerLost { image: lost });
+        }
+        Ok(())
+    }
+
+    /// Leader-side per-slot transport step with elastic/fatal handling.
+    /// Returns `Ok(true)` when the slot participated, `Ok(false)` when it
+    /// was (or just became) a tolerated loss.
+    fn leader_step<R>(
+        &self,
+        conns: &[Mutex<PeerConn>],
+        slot: usize,
+        newly_lost: &mut Vec<usize>,
+        f: impl FnOnce(&mut TcpStream) -> Result<R>,
+    ) -> Result<Option<R>> {
+        let r = {
+            let mut pc = conns[slot].lock().unwrap();
+            if !pc.alive {
+                return Ok(None);
+            }
+            f(&mut pc.stream)
+        };
+        match r {
+            Ok(v) => Ok(Some(v)),
+            Err(e) => {
+                let e = classify(e, slot + 2);
+                match e {
+                    CommError::PeerLost { image } if self.elastic => {
+                        self.mark_lost(conns, slot);
+                        newly_lost.push(image);
+                        Ok(None)
+                    }
+                    CommError::PeerLost { image } => {
+                        Err(self.fail_team(conns, image, CommError::PeerLost { image }))
+                    }
+                    other => Err(self.fail_team(conns, 0, other)),
+                }
+            }
+        }
+    }
+
+    /// Tell surviving workers about images lost during this collective so
+    /// their logs reflect the shrunken team (elastic mode only).
+    fn announce_shrunk(&self, conns: &[Mutex<PeerConn>], newly_lost: &[usize]) {
+        if newly_lost.is_empty() {
+            return;
+        }
+        let alive = self.alive_images() as f64;
+        for pc in conns {
+            let mut pc = pc.lock().unwrap();
+            if !pc.alive {
+                continue;
+            }
+            for &img in newly_lost {
+                let _ = write_frame(&mut pc.stream, Opcode::Shrunk, img as u32, &[alive]);
+            }
+        }
+    }
+
     /// Fallible reduce (sum/max/min by opcode). Collective: every image
     /// calls with the same opcode and buffer length.
     fn reduce<T: Scalar>(&self, buf: &mut [T], op: Opcode) -> Result<()> {
         if self.n == 1 {
             return Ok(());
         }
+        self.check_poisoned()?;
         let combine = |a: f64, b: f64| match op {
             Opcode::Sum => a + b,
             Opcode::Max => a.max(b),
@@ -236,28 +536,54 @@ impl TcpComm {
         match &self.role {
             Role::Leader { conns } => {
                 let mut acc: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
+                let mut newly_lost = Vec::new();
                 // Gather in image order for a deterministic combine order.
-                for (i, conn) in conns.iter().enumerate() {
-                    let mut s = conn.lock().unwrap();
-                    let frame = expect(read_frame(&mut s)?, op)?;
-                    if frame.image as usize != i + 2 {
-                        return proto_err(format!(
-                            "image {} answered on slot of image {}",
-                            frame.image,
-                            i + 2
-                        ));
-                    }
-                    if frame.payload.len() != acc.len() {
-                        return proto_err("collective buffer size mismatch across images");
-                    }
-                    for (a, &p) in acc.iter_mut().zip(&frame.payload) {
-                        *a = combine(*a, p);
+                for i in 0..conns.len() {
+                    let frame = self.leader_step(conns, i, &mut newly_lost, |s| {
+                        let frame = expect(read_frame(s)?, op)?;
+                        if frame.image as usize != i + 2 {
+                            return proto_err(format!(
+                                "image {} answered on slot of image {}",
+                                frame.image,
+                                i + 2
+                            ));
+                        }
+                        Ok(frame)
+                    })?;
+                    if let Some(frame) = frame {
+                        if frame.payload.len() != acc.len() {
+                            return Err(self.fail_team(
+                                conns,
+                                0,
+                                CommError::Protocol(
+                                    "collective buffer size mismatch across images".into(),
+                                ),
+                            ));
+                        }
+                        for (a, &p) in acc.iter_mut().zip(&frame.payload) {
+                            *a = combine(*a, p);
+                        }
                     }
                 }
-                for conn in conns {
-                    let mut s = conn.lock().unwrap();
-                    write_frame(&mut s, Opcode::Result, 1, &acc)?;
+                // Elastic co_sum: rescale over survivors so the trainer's
+                // per-sample gradient average keeps its magnitude. Shards
+                // are equal within one sample, so n/alive is the right
+                // correction up to that granularity.
+                let alive = self.alive_images();
+                if op == Opcode::Sum && alive < self.n {
+                    let scale = self.n as f64 / alive as f64;
+                    for a in acc.iter_mut() {
+                        *a *= scale;
+                    }
                 }
+                self.announce_shrunk(conns, &newly_lost);
+                let mut send_lost = Vec::new();
+                for i in 0..conns.len() {
+                    self.leader_step(conns, i, &mut send_lost, |s| {
+                        write_frame(s, Opcode::Result, 1, &acc)
+                    })?;
+                }
+                self.announce_shrunk(conns, &send_lost);
                 for (b, &a) in buf.iter_mut().zip(&acc) {
                     *b = T::from_f64(a);
                 }
@@ -265,8 +591,10 @@ impl TcpComm {
             Role::Worker { conn } => {
                 let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
                 let mut s = conn.lock().unwrap();
-                write_frame(&mut s, op, self.image as u32, &payload)?;
-                let result = expect(read_frame(&mut s)?, Opcode::Result)?;
+                write_frame(&mut s, op, self.image as u32, &payload)
+                    .map_err(|e| classify(e, 1))?;
+                let result = read_collective(&mut s, self.image, Opcode::Result)
+                    .map_err(|e| classify(e, 1))?;
                 if result.payload.len() != buf.len() {
                     return proto_err("result size mismatch");
                 }
@@ -285,25 +613,52 @@ impl TcpComm {
         if self.n == 1 {
             return Ok(());
         }
+        self.check_poisoned()?;
         match &self.role {
             Role::Leader { conns } => {
+                let mut newly_lost = Vec::new();
                 let data: Vec<f64> = if source_image == 1 {
                     buf.iter().map(|&v| v.to_f64()).collect()
                 } else {
-                    let mut s = conns[source_image - 2].lock().unwrap();
-                    let frame = expect(read_frame(&mut s)?, Opcode::BcastPush)?;
-                    if frame.payload.len() != buf.len() {
-                        return proto_err("broadcast size mismatch");
+                    // The broadcast source cannot be dropped elastically:
+                    // its payload is the whole point of the collective.
+                    let r = {
+                        let mut pc = conns[source_image - 2].lock().unwrap();
+                        if !pc.alive {
+                            Err(CommError::PeerLost { image: source_image })
+                        } else {
+                            read_frame(&mut pc.stream)
+                                .and_then(|f| expect(f, Opcode::BcastPush))
+                        }
+                    };
+                    match r {
+                        Ok(frame) if frame.payload.len() == buf.len() => frame.payload,
+                        Ok(_) => {
+                            return Err(self.fail_team(
+                                conns,
+                                0,
+                                CommError::Protocol("broadcast size mismatch".into()),
+                            ))
+                        }
+                        Err(e) => {
+                            let e = classify(e, source_image);
+                            let img = match &e {
+                                CommError::PeerLost { image } => *image,
+                                _ => 0,
+                            };
+                            return Err(self.fail_team(conns, img, e));
+                        }
                     }
-                    frame.payload
                 };
-                for (i, conn) in conns.iter().enumerate() {
+                for i in 0..conns.len() {
                     if i + 2 == source_image {
                         continue; // the source already has the data
                     }
-                    let mut s = conn.lock().unwrap();
-                    write_frame(&mut s, Opcode::Bcast, 1, &data)?;
+                    self.leader_step(conns, i, &mut newly_lost, |s| {
+                        write_frame(s, Opcode::Bcast, 1, &data)
+                    })?;
                 }
+                self.announce_shrunk(conns, &newly_lost);
                 for (b, &d) in buf.iter_mut().zip(&data) {
                     *b = T::from_f64(d);
                 }
@@ -312,9 +667,11 @@ impl TcpComm {
                 let mut s = conn.lock().unwrap();
                 if self.image == source_image {
                     let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
-                    write_frame(&mut s, Opcode::BcastPush, self.image as u32, &payload)?;
+                    write_frame(&mut s, Opcode::BcastPush, self.image as u32, &payload)
+                        .map_err(|e| classify(e, 1))?;
                 } else {
-                    let frame = expect(read_frame(&mut s)?, Opcode::Bcast)?;
+                    let frame = read_collective(&mut s, self.image, Opcode::Bcast)
+                        .map_err(|e| classify(e, 1))?;
                     if frame.payload.len() != buf.len() {
                         return proto_err("broadcast size mismatch");
                     }
@@ -331,21 +688,30 @@ impl TcpComm {
         if self.n == 1 {
             return Ok(());
         }
+        self.check_poisoned()?;
         match &self.role {
             Role::Leader { conns } => {
-                for conn in conns {
-                    let mut s = conn.lock().unwrap();
-                    expect(read_frame(&mut s)?, Opcode::Barrier)?;
+                let mut newly_lost = Vec::new();
+                for i in 0..conns.len() {
+                    self.leader_step(conns, i, &mut newly_lost, |s| {
+                        expect(read_frame(s)?, Opcode::Barrier).map(|_| ())
+                    })?;
                 }
-                for conn in conns {
-                    let mut s = conn.lock().unwrap();
-                    write_frame(&mut s, Opcode::BarrierAck, 1, &[])?;
+                self.announce_shrunk(conns, &newly_lost);
+                let mut ack_lost = Vec::new();
+                for i in 0..conns.len() {
+                    self.leader_step(conns, i, &mut ack_lost, |s| {
+                        write_frame(s, Opcode::BarrierAck, 1, &[])
+                    })?;
                 }
+                self.announce_shrunk(conns, &ack_lost);
             }
             Role::Worker { conn } => {
                 let mut s = conn.lock().unwrap();
-                write_frame(&mut s, Opcode::Barrier, self.image as u32, &[])?;
-                expect(read_frame(&mut s)?, Opcode::BarrierAck)?;
+                write_frame(&mut s, Opcode::Barrier, self.image as u32, &[])
+                    .map_err(|e| classify(e, 1))?;
+                read_collective(&mut s, self.image, Opcode::BarrierAck)
+                    .map_err(|e| classify(e, 1))?;
             }
         }
         Ok(())
@@ -361,24 +727,50 @@ impl Communicator for TcpComm {
         self.n
     }
 
-    fn barrier(&self) {
-        self.barrier_fallible().expect("tcp barrier failed");
+    fn barrier(&self) -> CommResult<()> {
+        self.barrier_fallible()
     }
 
-    fn co_sum<T: Scalar>(&self, buf: &mut [T]) {
-        self.reduce(buf, Opcode::Sum).expect("tcp co_sum failed");
+    fn co_sum<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
+        self.reduce(buf, Opcode::Sum)
     }
 
-    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) {
-        self.broadcast(buf, source_image).expect("tcp co_broadcast failed");
+    fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> CommResult<()> {
+        self.broadcast(buf, source_image)
     }
 
-    fn co_max<T: Scalar>(&self, buf: &mut [T]) {
-        self.reduce(buf, Opcode::Max).expect("tcp co_max failed");
+    fn co_max<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
+        self.reduce(buf, Opcode::Max)
     }
 
-    fn co_min<T: Scalar>(&self, buf: &mut [T]) {
-        self.reduce(buf, Opcode::Min).expect("tcp co_min failed");
+    fn co_min<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
+        self.reduce(buf, Opcode::Min)
+    }
+}
+
+/// Crate-internal helpers for the fault-injection harness and tests.
+#[doc(hidden)]
+pub mod wire {
+    use super::*;
+
+    /// Header layout shared with [`super::super::faults`]: magic, opcode,
+    /// image, payload length.
+    pub const HEADER_LEN: usize = 14;
+    pub const WIRE_MAGIC: u8 = MAGIC;
+
+    /// True when `b` decodes to a known opcode.
+    pub fn opcode_is_known(b: u8) -> bool {
+        Opcode::from_u8(b).is_some()
+    }
+
+    /// Payload element count from a raw header (for frame-aware proxies).
+    pub fn payload_len(header: &[u8; HEADER_LEN]) -> u64 {
+        u64::from_le_bytes(header[6..14].try_into().unwrap())
+    }
+
+    /// Overwrite the payload-length field of a raw header.
+    pub fn set_payload_len(header: &mut [u8; HEADER_LEN], len: u64) {
+        header[6..14].copy_from_slice(&len.to_le_bytes());
     }
 }
 
@@ -386,7 +778,7 @@ impl Communicator for TcpComm {
 mod tests {
     use super::*;
     use std::net::{IpAddr, Ipv4Addr};
-    use std::sync::atomic::{AtomicU16, Ordering};
+    use std::sync::atomic::AtomicU16;
 
     static NEXT_PORT: AtomicU16 = AtomicU16::new(46000);
 
@@ -425,7 +817,7 @@ mod tests {
         for n in [2usize, 3, 5] {
             let out = run_tcp(n, |c| {
                 let mut buf = vec![c.this_image() as f64, 1.0];
-                c.co_sum(&mut buf);
+                c.co_sum(&mut buf).unwrap();
                 buf
             });
             let total: f64 = (1..=n).map(|i| i as f64).sum();
@@ -440,7 +832,7 @@ mod tests {
         for src in [1usize, 3] {
             let out = run_tcp(3, move |c| {
                 let mut buf = vec![c.this_image() as f32 * 10.0; 4];
-                c.co_broadcast(&mut buf, src);
+                c.co_broadcast(&mut buf, src).unwrap();
                 buf[0]
             });
             for v in out {
@@ -452,12 +844,12 @@ mod tests {
     #[test]
     fn tcp_max_min_barrier_sequence() {
         let out = run_tcp(4, |c| {
-            c.barrier();
+            c.barrier().unwrap();
             let mut mx = [c.this_image() as f64];
-            c.co_max(&mut mx);
+            c.co_max(&mut mx).unwrap();
             let mut mn = [c.this_image() as f64];
-            c.co_min(&mut mn);
-            c.barrier();
+            c.co_min(&mut mn).unwrap();
+            c.barrier().unwrap();
             (mx[0], mn[0])
         });
         for (mx, mn) in out {
@@ -471,7 +863,7 @@ mod tests {
             let mut acc = 0.0;
             for round in 0..25 {
                 let mut buf = [c.this_image() as f64 * (round + 1) as f64];
-                c.co_sum(&mut buf);
+                c.co_sum(&mut buf).unwrap();
                 acc += buf[0];
             }
             acc
@@ -487,11 +879,12 @@ mod tests {
         let comm = TcpTopology::leader(addr(), 1, T).unwrap();
         assert!(comm.is_serial());
         let mut buf = [3.0f64];
-        comm.co_sum(&mut buf);
+        comm.co_sum(&mut buf).unwrap();
         assert_eq!(buf[0], 3.0);
     }
 
-    // ---- failure injection ----
+    // ---- failure injection (frame level; the scripted proxy suite is in
+    // tests/faults.rs) ----
 
     #[test]
     fn bad_magic_is_a_protocol_error() {
@@ -563,5 +956,88 @@ mod tests {
         let err = TcpTopology::leader(a, 3, T).unwrap_err();
         assert!(matches!(err, CommError::Protocol(_)), "{err}");
         workers.join().unwrap();
+    }
+
+    /// A worker that vanishes mid-team surfaces `PeerLost` at the leader
+    /// and a typed error (not a hang) at the surviving worker.
+    #[test]
+    fn worker_death_is_peer_lost_at_all_survivors() {
+        let a = addr();
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader(a, 3, T).unwrap();
+                let mut buf = [c.this_image() as f64];
+                c.co_sum(&mut buf).unwrap(); // round 1: everyone alive
+                let err = c.co_sum(&mut buf).unwrap_err();
+                assert!(
+                    matches!(err, CommError::PeerLost { image: 3 }),
+                    "leader saw {err}"
+                );
+                // Poisoned team fails fast on the next collective.
+                let err2 = c.barrier().unwrap_err();
+                assert!(matches!(err2, CommError::PeerLost { .. }), "{err2}");
+            });
+            let survivor = s.spawn(move || {
+                let c = TcpTopology::worker(a, 2, 3, T).unwrap();
+                let mut buf = [c.this_image() as f64];
+                c.co_sum(&mut buf).unwrap();
+                let err = c.co_sum(&mut buf).unwrap_err();
+                assert!(
+                    matches!(err, CommError::PeerLost { image: 3 }),
+                    "survivor saw {err}"
+                );
+            });
+            let dier = s.spawn(move || {
+                let c = TcpTopology::worker(a, 3, 3, T).unwrap();
+                let mut buf = [c.this_image() as f64];
+                c.co_sum(&mut buf).unwrap();
+                drop(c); // image 3 dies between rounds
+            });
+            dier.join().unwrap();
+            leader.join().unwrap();
+            survivor.join().unwrap();
+        });
+    }
+
+    /// Elastic mode: the team keeps training after a worker death, with
+    /// co_sum rescaled over the survivors.
+    #[test]
+    fn elastic_team_survives_worker_death_with_rescaled_sums() {
+        let a = addr();
+        let opts = || TcpOptions::with_timeout(T).elastic(true);
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader_with(a, 3, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                assert_eq!(buf[0], 3.0);
+                // Image 3 dies here; the next sum must still complete and
+                // be rescaled: survivors deposit 1+1=2, times 3/2 = 3.
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                assert_eq!(buf[0], 3.0, "elastic sum must rescale over survivors");
+                assert_eq!(c.alive_images(), 2);
+                c.barrier().unwrap();
+                buf[0]
+            });
+            let survivor = s.spawn(move || {
+                let c = TcpTopology::worker_with(a, 2, 3, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                c.barrier().unwrap();
+                buf[0]
+            });
+            let dier = s.spawn(move || {
+                let c = TcpTopology::worker_with(a, 3, 3, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                drop(c);
+            });
+            dier.join().unwrap();
+            assert_eq!(leader.join().unwrap(), 3.0);
+            assert_eq!(survivor.join().unwrap(), 3.0);
+        });
     }
 }

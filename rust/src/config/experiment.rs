@@ -55,6 +55,9 @@ pub struct ServeConfig {
     pub hot_reload: bool,
     /// Hot-reload poll interval.
     pub reload_poll_ms: u64,
+    /// Per-request deadline in microseconds; requests still queued when it
+    /// expires are shed with HTTP 503. 0 disables deadlines.
+    pub deadline_us: u64,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +73,7 @@ impl Default for ServeConfig {
             infer_threads: 1,
             hot_reload: true,
             reload_poll_ms: 500,
+            deadline_us: 0,
         }
     }
 }
@@ -99,6 +103,11 @@ pub struct ExperimentConfig {
     pub batch_seed: u64,
     pub strategy: BatchStrategy,
     pub optimizer: OptimizerKind,
+    /// Recovery checkpoint written by image 1 (`checkpoint = "path"`,
+    /// `--checkpoint`). `None` disables checkpointing.
+    pub checkpoint: Option<PathBuf>,
+    /// Write the checkpoint every N epochs (plus the final epoch).
+    pub checkpoint_every: usize,
     // [data]
     pub train_n: usize,
     pub test_n: usize,
@@ -108,6 +117,9 @@ pub struct ExperimentConfig {
     pub images: usize,
     pub algo: ReduceAlgo,
     pub comm: CommKind,
+    /// TCP teams only: survive worker death mid-run by rescaling gradient
+    /// sums over the remaining images instead of failing the team.
+    pub elastic: bool,
     /// Intra-image gradient threads (native engine only; see
     /// `TrainerOptions::intra_threads`).
     pub intra_threads: usize,
@@ -134,6 +146,8 @@ impl Default for ExperimentConfig {
             batch_seed: 12345,
             strategy: BatchStrategy::RandomStart,
             optimizer: OptimizerKind::Sgd,
+            checkpoint: None,
+            checkpoint_every: 1,
             train_n: 50_000,
             test_n: 10_000,
             data_dir: PathBuf::from("data/mnist"),
@@ -141,6 +155,7 @@ impl Default for ExperimentConfig {
             images: 1,
             algo: ReduceAlgo::Tree,
             comm: CommKind::Local,
+            elastic: false,
             intra_threads: 1,
             // The PJRT engine needs a `--features pjrt` build; default to
             // what the binary at hand can actually run.
@@ -430,6 +445,14 @@ impl ExperimentConfig {
             let opt = get_str(t, "optimizer", &cfg.optimizer.name())?.to_string();
             cfg.optimizer = OptimizerKind::parse(&opt)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown optimizer '{opt}'")))?;
+            if let Some(v) = t.get("checkpoint") {
+                let p = v.as_str().ok_or_else(|| {
+                    ConfigError::Invalid("[training] checkpoint must be a path string".into())
+                })?;
+                cfg.checkpoint = Some(PathBuf::from(p));
+            }
+            cfg.checkpoint_every =
+                get_usize(t, "checkpoint_every", cfg.checkpoint_every)?.max(1);
         }
         if let Some(t) = doc.get("data") {
             cfg.train_n = get_usize(t, "train_n", cfg.train_n)?;
@@ -446,6 +469,7 @@ impl ExperimentConfig {
             let comm = get_str(t, "comm", "local")?;
             cfg.comm = CommKind::parse(comm)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown comm '{comm}'")))?;
+            cfg.elastic = get_bool(t, "elastic", cfg.elastic)?;
         }
         if let Some(t) = doc.get("serve") {
             cfg.serve.addr = get_str(t, "addr", &cfg.serve.addr)?.to_string();
@@ -487,6 +511,7 @@ impl ExperimentConfig {
             cfg.serve.infer_threads = get_usize(t, "infer_threads", cfg.serve.infer_threads)?;
             cfg.serve.hot_reload = get_bool(t, "hot_reload", cfg.serve.hot_reload)?;
             cfg.serve.reload_poll_ms = get_u64(t, "reload_poll_ms", cfg.serve.reload_poll_ms)?;
+            cfg.serve.deadline_us = get_u64(t, "deadline_us", cfg.serve.deadline_us)?;
         }
         if let Some(t) = doc.get("runtime") {
             let engine = get_str(t, "engine", cfg.engine.name())?;
@@ -654,6 +679,9 @@ mod tests {
             "[serve]\nmodels = [\"nopath\"]\n",
             "[serve]\nmodels = [42]\n",
             "[serve]\nhot_reload = \"yes\"\n",
+            "[serve]\ndeadline_us = \"soon\"\n",
+            "[parallel]\nelastic = \"yes\"\n",
+            "[training]\ncheckpoint = 7\n",
         ] {
             assert!(ExperimentConfig::from_toml(bad).is_err(), "should reject: {bad}");
         }
@@ -873,5 +901,35 @@ mod tests {
         assert_eq!(d.serve.workers, 2);
         assert!(d.serve.hot_reload);
         assert!(d.serve.model_path.as_os_str().is_empty());
+        assert_eq!(d.serve.deadline_us, 0, "deadlines are opt-in");
+    }
+
+    #[test]
+    fn robustness_knobs_parse_and_default() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [training]
+            checkpoint = "ckpt/model.txt"
+            checkpoint_every = 5
+            [parallel]
+            elastic = true
+            [serve]
+            deadline_us = 2500
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.checkpoint, Some(PathBuf::from("ckpt/model.txt")));
+        assert_eq!(c.checkpoint_every, 5);
+        assert!(c.elastic);
+        assert_eq!(c.serve.deadline_us, 2500);
+
+        let d = ExperimentConfig::default();
+        assert_eq!(d.checkpoint, None);
+        assert_eq!(d.checkpoint_every, 1);
+        assert!(!d.elastic);
+
+        // checkpoint_every = 0 clamps rather than dividing by zero later.
+        let z = ExperimentConfig::from_toml("[training]\ncheckpoint_every = 0\n").unwrap();
+        assert_eq!(z.checkpoint_every, 1);
     }
 }

@@ -82,18 +82,23 @@ pub fn train_parallel<T: PjrtScalar>(
                         }
                         _ => None,
                     };
-                    let mut trainer = Trainer::new(comm, spec.opts.clone(), engine);
-                    let initial_accuracy = trainer.accuracy(test);
+                    // Shared-memory collectives are infallible (no peers
+                    // that can vanish independently), so faults here are
+                    // genuinely unreachable — see `LocalComm`.
+                    let infallible = "local collectives are infallible";
+                    let mut trainer =
+                        Trainer::new(comm, spec.opts.clone(), engine).expect(infallible);
+                    let initial_accuracy = trainer.accuracy(test).expect(infallible);
 
                     let mut epoch_accuracy = Vec::new();
                     let mut stats = EpochStats::default();
                     // Synchronize before timing (paper: training-only).
-                    comm.barrier();
+                    comm.barrier().expect(infallible);
                     let mut train_s = 0.0;
                     for epoch in 0..spec.opts.epochs {
                         let sw = Stopwatch::start();
-                        let e = trainer.train_epoch(train);
-                        comm.barrier();
+                        let e = trainer.train_epoch(train).expect(infallible);
+                        comm.barrier().expect(infallible);
                         train_s += sw.elapsed_s();
                         stats.grad_s += e.grad_s;
                         stats.comm_s += e.comm_s;
@@ -101,7 +106,7 @@ pub fn train_parallel<T: PjrtScalar>(
                         stats.batches += e.batches;
                         stats.samples += e.samples;
                         if spec.eval_each_epoch || epoch + 1 == spec.opts.epochs {
-                            epoch_accuracy.push(trainer.accuracy(test));
+                            epoch_accuracy.push(trainer.accuracy(test).expect(infallible));
                         }
                     }
                     if comm.this_image() == 1 {

@@ -1,6 +1,6 @@
 //! Per-image trainer: replica + engine + communicator.
 
-use crate::collectives::Communicator;
+use crate::collectives::{CommResult, Communicator};
 use crate::data::{label_digits, shard_bounds, Dataset};
 use crate::nn::{
     Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Optimizer, OptimizerKind,
@@ -155,6 +155,12 @@ pub struct Trainer<'c, T, C: Communicator> {
     /// allocation-free as the serial one — and spawn-free, since the
     /// shards fan out on the persistent worker pool.
     shards: Option<GradShards<T>>,
+    /// Reused staging buffers for this image's shard of each global batch
+    /// — the `GradShards` pattern applied at trainer level, so the per-
+    /// batch `cols_range` slices stop allocating once warmed (asserted in
+    /// `rust/tests/zero_alloc.rs`).
+    xs_stage: Matrix<T>,
+    ys_stage: Matrix<T>,
     /// Shuffled-epoch state.
     order: Vec<usize>,
     cursor: usize,
@@ -170,7 +176,11 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
     ///
     /// `engine` must be `Some` for `EngineKind::Pjrt` operation and is
     /// built per image (PJRT clients are single-threaded by design here).
-    pub fn new(comm: &'c C, opts: TrainerOptions, engine: Option<CompiledNet>) -> Self {
+    ///
+    /// Fallible: the constructor's synchronizing broadcast is a real
+    /// collective, so a vanished teammate surfaces here as a typed
+    /// [`crate::collectives::CommError`] instead of a hang.
+    pub fn new(comm: &'c C, opts: TrainerOptions, engine: Option<CompiledNet>) -> CommResult<Self> {
         assert!(opts.batch_size > 0 && opts.eta > 0.0, "bad hyper-parameters");
         let image = comm.this_image() as u64;
         let seed = opts.seed + image - 1;
@@ -182,7 +192,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
 
         // sync(1): broadcast image 1's parameters to all replicas.
         let mut flat = net.params_to_flat();
-        comm.co_broadcast(&mut flat, 1);
+        comm.co_broadcast(&mut flat, 1)?;
         net.params_unflatten_from(&flat);
 
         // Gradients/optimizer state are keyed by the network's parameter
@@ -200,7 +210,7 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         };
         let batch_rng = Rng::new(opts.batch_seed);
         let optimizer = Optimizer::for_net(opts.optimizer, &net);
-        Self {
+        Ok(Self {
             comm,
             net,
             opts,
@@ -211,10 +221,12 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             grads,
             workspace,
             shards,
+            xs_stage: Matrix::zeros(0, 0),
+            ys_stage: Matrix::zeros(0, 0),
             order: Vec::new(),
             cursor: 0,
             step: 0,
-        }
+        })
     }
 
     pub fn options(&self) -> &TrainerOptions {
@@ -258,12 +270,15 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         if lo == hi {
             return 0; // more images than samples: an empty shard is legal
         }
-        let xs = x.cols_range(lo, hi);
-        let ys = y.cols_range(lo, hi);
+        // Stage the shard into reused buffers (`GradShards` pattern): a
+        // warmed steady-state batch slices without heap allocation.
+        self.xs_stage.assign_cols_range(x, lo, hi);
+        self.ys_stage.assign_cols_range(y, lo, hi);
+        let (xs, ys) = (&self.xs_stage, &self.ys_stage);
         match &self.engine {
             Some(compiled) => {
                 let g = compiled
-                    .grad_batch(&self.net, &xs, &ys)
+                    .grad_batch(&self.net, xs, ys)
                     .expect("pjrt grad_batch failed");
                 self.grads.add_assign(&g);
             }
@@ -277,12 +292,12 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
                 // batches (the ROADMAP replay bug).
                 let shards =
                     self.shards.as_mut().expect("intra-thread shards built at construction");
-                self.net.grad_batch_threaded_into(&xs, &ys, shards, self.step, &mut self.grads);
+                self.net.grad_batch_threaded_into(xs, ys, shards, self.step, &mut self.grads);
             }
             None => {
                 // Zero-allocation steady state: accumulate straight into
                 // the reused gradients through the warmed workspace.
-                self.net.grad_batch_into(&xs, &ys, &mut self.workspace, &mut self.grads);
+                self.net.grad_batch_into(xs, ys, &mut self.workspace, &mut self.grads);
             }
         }
         hi - lo
@@ -290,18 +305,24 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
 
     /// One global training step on an explicit batch: shard → grad →
     /// co_sum → update. Exposed for tests; `train_epoch` drives it.
-    pub fn train_step(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> EpochStats {
+    ///
+    /// Fallible: a communicator fault during the gradient `co_sum` is
+    /// returned before any parameter update, so the replica is left at
+    /// the last completed step (checkpointable, resumable).
+    pub fn train_step(&mut self, x: &Matrix<T>, y: &Matrix<T>) -> CommResult<EpochStats> {
         let mut stats = EpochStats::default();
         let sw = crate::metrics::Stopwatch::start();
         stats.samples = self.shard_grads(x, y);
         self.step = self.step.wrapping_add(1);
         stats.grad_s = sw.elapsed_s();
 
-        // Collective sum of the tendencies (paper step 3).
+        // Collective sum of the tendencies (paper step 3). Under an
+        // elastic TCP team the sum arrives rescaled over the survivors,
+        // so the eta/global_batch update below keeps its magnitude.
         let sw = crate::metrics::Stopwatch::start();
         if !self.comm.is_serial() {
             self.grads.flatten_into(&mut self.flat);
-            self.comm.co_sum(&mut self.flat);
+            self.comm.co_sum(&mut self.flat)?;
             self.grads.unflatten_from(&self.flat);
         }
         stats.comm_s = sw.elapsed_s();
@@ -311,12 +332,13 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         self.optimizer.step(&mut self.net, &self.grads, eta_eff);
         stats.update_s = sw.elapsed_s();
         stats.batches = 1;
-        stats
+        Ok(stats)
     }
 
     /// One epoch over the training set (`len/batch_size` mini-batches,
-    /// exactly Listing 12's inner loop).
-    pub fn train_epoch(&mut self, train: &Dataset<T>) -> EpochStats {
+    /// exactly Listing 12's inner loop). Fallible: the first communicator
+    /// fault aborts the epoch with a typed error.
+    pub fn train_epoch(&mut self, train: &Dataset<T>) -> CommResult<EpochStats> {
         let n = train.len();
         assert!(n > 0, "empty training set");
         let mut total = EpochStats::default();
@@ -327,13 +349,13 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
                 None => {
                     let x = train.images.cols_range(lo, hi);
                     let y = label_digits(&train.labels[lo..hi]);
-                    self.train_step(&x, &y)
+                    self.train_step(&x, &y)?
                 }
                 Some(idx) => {
                     let x = train.images.gather_cols(&idx);
                     let labels: Vec<u8> = idx.iter().map(|&i| train.labels[i]).collect();
                     let y = label_digits(&labels);
-                    self.train_step(&x, &y)
+                    self.train_step(&x, &y)?
                 }
             };
             total.grad_s += stats.grad_s;
@@ -342,14 +364,14 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             total.batches += stats.batches;
             total.samples += stats.samples;
         }
-        total
+        Ok(total)
     }
 
     /// Distributed accuracy: each image evaluates its shard of the test
     /// set; correct counts are co_summed. All images return the same value.
-    pub fn accuracy(&self, test: &Dataset<T>) -> f64 {
+    pub fn accuracy(&self, test: &Dataset<T>) -> CommResult<f64> {
         if test.is_empty() {
-            return 0.0;
+            return Ok(0.0);
         }
         let (lo, hi) = shard_bounds(test.len(), self.comm.this_image(), self.comm.num_images());
         let correct = if lo == hi {
@@ -365,8 +387,8 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             };
             acc * (hi - lo) as f64
         };
-        let total = self.comm.co_sum_scalar(correct);
-        total / test.len() as f64
+        let total = self.comm.co_sum_scalar(correct)?;
+        Ok(total / test.len() as f64)
     }
 
     /// Checksum of the replica parameters (replica-consistency tests).
@@ -376,17 +398,128 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
 
     /// Largest parameter divergence across all replicas (0.0 when in
     /// sync). Collective.
-    pub fn replica_divergence(&self) -> f64 {
+    pub fn replica_divergence(&self) -> CommResult<f64> {
         let flat = self.net.params_to_flat();
         let mut mx: Vec<T> = flat.clone();
-        self.comm.co_max(&mut mx);
+        self.comm.co_max(&mut mx)?;
         let mut mn: Vec<T> = flat;
-        self.comm.co_min(&mut mn);
-        mx.iter()
+        self.comm.co_min(&mut mn)?;
+        Ok(mx
+            .iter()
             .zip(&mn)
             .map(|(&a, &b)| (a - b).abs().to_f64())
-            .fold(0.0, f64::max)
+            .fold(0.0, f64::max))
     }
+
+    /// Persist a recoverable snapshot: the model checkpoint at `path`
+    /// (loadable by `eval`/`serve` as usual) plus a `<path>.state`
+    /// sidecar with the training cursor (completed epochs, step counter,
+    /// batch-RNG state). Both files follow the write-then-rename rule, so
+    /// a concurrent reader or a crash mid-save never observes a torn
+    /// file; the sidecar is renamed last and is the commit point.
+    ///
+    /// Optimizer velocity is deliberately not checkpointed: plain SGD
+    /// (the paper's update rule) carries no state, and momentum restarts
+    /// from zero velocity after resume — a brief transient, not a
+    /// correctness issue.
+    pub fn save_checkpoint(
+        &self,
+        path: &std::path::Path,
+        completed_epochs: usize,
+    ) -> std::io::Result<()> {
+        self.net
+            .save_atomic(path)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
+        let state = sidecar_path(path);
+        let tmp = tmp_path(&state);
+        let s = self.batch_rng.state();
+        let body = format!(
+            "neural-rs train-state v1\nepoch {}\nstep {}\nrng {} {} {} {}\n",
+            completed_epochs, self.step, s[0], s[1], s[2], s[3]
+        );
+        std::fs::write(&tmp, body)?;
+        std::fs::rename(&tmp, &state)
+    }
+
+    /// Resume from a [`Trainer::save_checkpoint`] snapshot: restore the
+    /// parameters, step counter, and batch-RNG state, then re-broadcast
+    /// image 1's parameters so every replica is byte-identical even if
+    /// the images read different checkpoint generations. Returns the
+    /// number of completed epochs recorded in the sidecar.
+    ///
+    /// `RandomStart` batching (the default) resumes the exact batch
+    /// sequence the interrupted run would have drawn. `Shuffled` redraws
+    /// its permutation from the restored RNG, so the continuation is
+    /// statistically identical but not batch-for-batch identical.
+    pub fn resume_from(&mut self, path: &std::path::Path) -> std::io::Result<usize> {
+        let bad = |msg: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string());
+        let net = Network::<T>::load(path)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        if net.dims() != self.net.dims() {
+            return Err(bad("checkpoint architecture does not match the configured model"));
+        }
+        self.net = net;
+        let text = std::fs::read_to_string(sidecar_path(path))?;
+        let mut lines = text.lines();
+        if lines.next() != Some("neural-rs train-state v1") {
+            return Err(bad("unrecognized train-state header"));
+        }
+        let mut epoch: Option<usize> = None;
+        let mut step: Option<u64> = None;
+        let mut rng: Option<[u64; 4]> = None;
+        for line in lines {
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("epoch") => {
+                    epoch = Some(
+                        parts.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("bad epoch"))?,
+                    );
+                }
+                Some("step") => {
+                    step = Some(
+                        parts.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("bad step"))?,
+                    );
+                }
+                Some("rng") => {
+                    let mut s = [0u64; 4];
+                    for slot in s.iter_mut() {
+                        *slot = parts
+                            .next()
+                            .and_then(|v| v.parse().ok())
+                            .ok_or_else(|| bad("bad rng state"))?;
+                    }
+                    rng = Some(s);
+                }
+                _ => {} // unknown keys: forward-compatible, skipped
+            }
+        }
+        let epoch = epoch.ok_or_else(|| bad("train-state missing epoch"))?;
+        self.step = step.ok_or_else(|| bad("train-state missing step"))?;
+        self.batch_rng = Rng::from_state(rng.ok_or_else(|| bad("train-state missing rng"))?);
+        self.order.clear();
+        self.cursor = 0;
+        // Re-assert replica equality exactly like the constructor does.
+        let mut flat = self.net.params_to_flat();
+        self.comm.co_broadcast(&mut flat, 1).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::Other, format!("resume sync failed: {e}"))
+        })?;
+        self.net.params_unflatten_from(&flat);
+        Ok(epoch)
+    }
+}
+
+/// `<path>.state`: the training-cursor sidecar next to a checkpoint.
+pub fn sidecar_path(path: &std::path::Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".state");
+    std::path::PathBuf::from(os)
+}
+
+/// `<path>.tmp`: the staging name the write-then-rename rule uses.
+fn tmp_path(path: &std::path::Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
 }
 
 #[cfg(test)]
@@ -417,12 +550,12 @@ mod tests {
         let comm = NullComm;
         let train = synthesize::<f32>(2000, 1);
         let test = synthesize::<f32>(400, 2);
-        let mut t = Trainer::new(&comm, opts(&[784, 30, 10], 100), None);
-        let before = t.accuracy(&test);
+        let mut t = Trainer::new(&comm, opts(&[784, 30, 10], 100), None).unwrap();
+        let before = t.accuracy(&test).unwrap();
         for _ in 0..8 {
-            t.train_epoch(&train);
+            t.train_epoch(&train).unwrap();
         }
-        let after = t.accuracy(&test);
+        let after = t.accuracy(&test).unwrap();
         assert!(after > before + 0.3, "acc {before} -> {after}");
     }
 
@@ -435,9 +568,9 @@ mod tests {
                 .map(|c| {
                     s.spawn(move || {
                         let t: Trainer<f32, LocalComm> =
-                            Trainer::new(c, opts(&[10, 6, 3], 8), None);
+                            Trainer::new(c, opts(&[10, 6, 3], 8), None).unwrap();
                         // Different seeds per image, equal after sync.
-                        (t.params_checksum(), t.replica_divergence())
+                        (t.params_checksum(), t.replica_divergence().unwrap())
                     })
                 })
                 .collect();
@@ -459,9 +592,9 @@ mod tests {
 
         // Serial reference.
         let comm = NullComm;
-        let mut serial = Trainer::new(&comm, opts(&[784, 16, 10], 120), None);
+        let mut serial = Trainer::new(&comm, opts(&[784, 16, 10], 120), None).unwrap();
         for _ in 0..2 {
-            serial.train_epoch(&train);
+            serial.train_epoch(&train).unwrap();
         }
         let want = serial.net.params_to_flat();
 
@@ -474,11 +607,11 @@ mod tests {
                     .map(|c| {
                         s.spawn(move || {
                             let mut t: Trainer<f32, LocalComm> =
-                                Trainer::new(c, opts(&[784, 16, 10], 120), None);
+                                Trainer::new(c, opts(&[784, 16, 10], 120), None).unwrap();
                             for _ in 0..2 {
-                                t.train_epoch(train_ref);
+                                t.train_epoch(train_ref).unwrap();
                             }
-                            assert_eq!(t.replica_divergence(), 0.0);
+                            assert_eq!(t.replica_divergence().unwrap(), 0.0);
                             t.net.params_to_flat()
                         })
                     })
@@ -498,8 +631,8 @@ mod tests {
     fn distributed_accuracy_matches_serial_accuracy() {
         let test = synthesize::<f32>(500, 7);
         let comm = NullComm;
-        let t0 = Trainer::<f32, _>::new(&comm, opts(&[784, 12, 10], 50), None);
-        let serial_acc = t0.accuracy(&test);
+        let t0 = Trainer::<f32, _>::new(&comm, opts(&[784, 12, 10], 50), None).unwrap();
+        let serial_acc = t0.accuracy(&test).unwrap();
 
         let comms = Team::new(3);
         let test_ref = &test;
@@ -509,8 +642,8 @@ mod tests {
                 .map(|c| {
                     s.spawn(move || {
                         let t: Trainer<f32, LocalComm> =
-                            Trainer::new(c, opts(&[784, 12, 10], 50), None);
-                        t.accuracy(test_ref)
+                            Trainer::new(c, opts(&[784, 12, 10], 50), None).unwrap();
+                        t.accuracy(test_ref).unwrap()
                     })
                 })
                 .collect();
@@ -530,10 +663,10 @@ mod tests {
             for c in &comms {
                 s.spawn(move || {
                     let mut t: Trainer<f32, LocalComm> =
-                        Trainer::new(c, opts(&[784, 8, 10], 4), None);
+                        Trainer::new(c, opts(&[784, 8, 10], 4), None).unwrap();
                     // batch of 4 over 8 images -> some shards empty.
-                    t.train_epoch(train_ref);
-                    assert_eq!(t.replica_divergence(), 0.0);
+                    t.train_epoch(train_ref).unwrap();
+                    assert_eq!(t.replica_divergence().unwrap(), 0.0);
                 });
             }
         });
@@ -546,11 +679,11 @@ mod tests {
         let test = synthesize::<f32>(200, 12);
         let mut o = opts(&[784, 30, 10], 100);
         o.strategy = BatchStrategy::Shuffled;
-        let mut t = Trainer::new(&comm, o, None);
+        let mut t = Trainer::new(&comm, o, None).unwrap();
         for _ in 0..15 {
-            t.train_epoch(&train);
+            t.train_epoch(&train).unwrap();
         }
-        assert!(t.accuracy(&test) > 0.45, "acc={}", t.accuracy(&test));
+        assert!(t.accuracy(&test).unwrap() > 0.45, "acc={}", t.accuracy(&test).unwrap());
     }
 
     #[test]
@@ -567,12 +700,12 @@ mod tests {
                         let mut o = opts(&[784, 24, 10], 100);
                         o.eta = 0.1; // effective lr ~ eta/(1-mu) = 1; momentum transients overshoot at higher rates
                         o.optimizer = crate::nn::OptimizerKind::Momentum { mu: 0.9 };
-                        let mut t: Trainer<f32, LocalComm> = Trainer::new(c, o, None);
+                        let mut t: Trainer<f32, LocalComm> = Trainer::new(c, o, None).unwrap();
                         for _ in 0..15 {
-                            t.train_epoch(train_ref);
+                            t.train_epoch(train_ref).unwrap();
                         }
-                        assert_eq!(t.replica_divergence(), 0.0);
-                        t.accuracy(test_ref)
+                        assert_eq!(t.replica_divergence().unwrap(), 0.0);
+                        t.accuracy(test_ref).unwrap()
                     })
                 })
                 .collect();
@@ -595,9 +728,9 @@ mod tests {
             let comm = NullComm;
             let mut o = opts(&[784, 16, 10], 100);
             o.intra_threads = threads;
-            let mut t = Trainer::new(&comm, o, None);
+            let mut t = Trainer::new(&comm, o, None).unwrap();
             for _ in 0..2 {
-                t.train_epoch(&train);
+                t.train_epoch(&train).unwrap();
             }
             t.net.params_to_flat()
         };
@@ -638,14 +771,14 @@ mod tests {
                 .map(|c| {
                     s.spawn(move || {
                         let mut t: Trainer<f32, LocalComm> =
-                            Trainer::new(c, o_ref.clone(), None);
+                            Trainer::new(c, o_ref.clone(), None).unwrap();
                         assert_eq!(t.net.dims(), &[784, 30, 10]);
                         assert!(t.net.has_softmax_head());
                         for _ in 0..15 {
-                            t.train_epoch(train_ref);
+                            t.train_epoch(train_ref).unwrap();
                         }
-                        assert_eq!(t.replica_divergence(), 0.0);
-                        t.accuracy(test_ref)
+                        assert_eq!(t.replica_divergence().unwrap(), 0.0);
+                        t.accuracy(test_ref).unwrap()
                     })
                 })
                 .collect();
@@ -684,16 +817,16 @@ mod tests {
                 .map(|c| {
                     s.spawn(move || {
                         let mut t: Trainer<f32, LocalComm> =
-                            Trainer::new(c, o_ref.clone(), None);
+                            Trainer::new(c, o_ref.clone(), None).unwrap();
                         assert_eq!(t.net.dims(), &[784, 324, 10]);
                         assert_eq!(t.net.conv_count(), 1);
                         assert!(t.net.has_softmax_head());
-                        let initial = t.accuracy(test_ref);
+                        let initial = t.accuracy(test_ref).unwrap();
                         for _ in 0..12 {
-                            t.train_epoch(train_ref);
+                            t.train_epoch(train_ref).unwrap();
                         }
-                        assert_eq!(t.replica_divergence(), 0.0);
-                        (initial, t.accuracy(test_ref))
+                        assert_eq!(t.replica_divergence().unwrap(), 0.0);
+                        (initial, t.accuracy(test_ref).unwrap())
                     })
                 })
                 .collect();
@@ -713,6 +846,6 @@ mod tests {
         let comm = NullComm;
         let mut o = opts(&[4, 2], 0);
         o.batch_size = 0;
-        let _ = Trainer::<f32, _>::new(&comm, o, None);
+        let _ = Trainer::<f32, _>::new(&comm, o, None).unwrap();
     }
 }

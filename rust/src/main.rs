@@ -9,7 +9,7 @@
 //!   inspect    list AOT artifact configurations
 //!   help       this text
 
-use neural_rs::collectives::{Communicator, TcpComm, TcpTopology};
+use neural_rs::collectives::{Communicator, TcpComm, TcpOptions, TcpTopology};
 use neural_rs::config::{CommKind, ExperimentConfig};
 use neural_rs::coordinator::{
     train_parallel, BatchStrategy, EngineKind, ParallelSpec, Trainer,
@@ -31,9 +31,11 @@ const VALUE_FLAGS: &[&str] = &[
     "strategy", "optimizer", "train-n", "test-n", "data-dir", "data-seed", "images", "algo", "comm",
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
     "runs", "max-images", "out", "n", "intra-threads", "addr", "model", "max-batch",
-    "max-wait-us", "queue-depth", "workers", "infer-threads",
+    "max-wait-us", "queue-depth", "workers", "infer-threads", "deadline-us", "checkpoint",
+    "checkpoint-every",
 ];
-const SWITCH_FLAGS: &[&str] = &["quiet", "eval-each-epoch", "help", "no-hot-reload"];
+const SWITCH_FLAGS: &[&str] =
+    &["quiet", "eval-each-epoch", "help", "no-hot-reload", "resume", "elastic"];
 
 const HELP: &str = "neural-rs — parallel neural networks (neural-fortran reproduction)
 
@@ -67,6 +69,11 @@ COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
   --save FILE            save the trained network
   --comm local|tcp       communicator backend
   --tcp-role leader|worker --tcp-addr HOST:PORT --image K   (tcp mode)
+  --checkpoint FILE      periodic recovery checkpoint (+ FILE.state sidecar)
+  --checkpoint-every N   epochs between checkpoints (default 1)
+  --resume               continue from --checkpoint's last completed epoch
+  --elastic              tcp mode: continue on worker death (gradients are
+                         rescaled over the surviving images)
 
 SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
   --model FILE           checkpoint to serve as model 'default'
@@ -76,6 +83,8 @@ SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
   --queue-depth 1024     bounded queue; overflow is shed with HTTP 503
   --workers 2            worker threads, each with a warm workspace
   --infer-threads 1      column-shard each batched forward (1 = zero-alloc)
+  --deadline-us 0        per-request deadline; expired requests shed with
+                         503 + Retry-After (0 = no deadline)
   --no-hot-reload        do not watch the checkpoint file for changes
 
   Endpoints: POST /v1/predict {\"input\": [f32...], \"model\": \"default\"}
@@ -203,9 +212,17 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
     cfg.serve.queue_depth = args.get_parsed("queue-depth", cfg.serve.queue_depth)?;
     cfg.serve.workers = args.get_parsed("workers", cfg.serve.workers)?;
     cfg.serve.infer_threads = args.get_parsed("infer-threads", cfg.serve.infer_threads)?;
+    cfg.serve.deadline_us = args.get_parsed("deadline-us", cfg.serve.deadline_us)?;
     if args.has("no-hot-reload") {
         cfg.serve.hot_reload = false;
     }
+    if args.has("elastic") {
+        cfg.elastic = true;
+    }
+    if let Some(c) = args.get("checkpoint") {
+        cfg.checkpoint = Some(PathBuf::from(c));
+    }
+    cfg.checkpoint_every = args.get_parsed("checkpoint-every", cfg.checkpoint_every)?;
     cfg.validate()?;
     Ok(cfg)
 }
@@ -282,18 +299,21 @@ fn cmd_train_local(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> 
 fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
     let addr: SocketAddr = args.get_or("tcp-addr", "127.0.0.1:47000").parse()?;
     let role = args.get_or("tcp-role", "leader");
-    let timeout = Duration::from_secs(120);
+    let opts = TcpOptions::with_timeout(Duration::from_secs(120)).elastic(cfg.elastic);
     let comm = match role {
-        "leader" => TcpTopology::leader(addr, cfg.images, timeout)?,
+        "leader" => TcpTopology::leader_with(addr, cfg.images, opts)?,
         "worker" => {
             let image: usize = args
                 .get("image")
                 .ok_or("worker needs --image K (2..=images)")?
                 .parse()?;
-            TcpTopology::worker(addr, image, cfg.images, timeout)?
+            TcpTopology::worker_with(addr, image, cfg.images, opts)?
         }
         other => return Err(format!("bad --tcp-role '{other}'").into()),
     };
+    if comm.is_elastic() && comm.this_image() == 1 {
+        println!("# elastic team: continuing on worker death with rescaled gradients");
+    }
     run_one_image(&comm, cfg, args)
 }
 
@@ -309,18 +329,41 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
         }
         EngineKind::Native => None,
     };
-    let mut trainer = Trainer::new(comm, cfg.trainer_options(), engine);
+    let mut trainer = Trainer::new(comm, cfg.trainer_options(), engine)?;
     let is_leader = comm.this_image() == 1;
-    let initial = trainer.accuracy(&test);
+
+    // Recovery: every image restores the same checkpoint locally (shared
+    // filesystem assumption), then the trainer's resume re-broadcast
+    // guarantees byte-identical replicas regardless of file generations.
+    let mut start_epoch = 0usize;
+    if args.has("resume") {
+        let path = cfg.checkpoint.as_ref().ok_or("--resume needs --checkpoint FILE")?;
+        start_epoch = trainer.resume_from(path)?;
+        if is_leader {
+            println!("# resumed from {} after epoch {start_epoch}", path.display());
+        }
+    }
+
+    let initial = trainer.accuracy(&test)?;
     if is_leader {
         println!("Initial accuracy: {:5.2} %", initial * 100.0);
     }
+    let every = cfg.checkpoint_every.max(1);
     let sw = Stopwatch::start();
-    for epoch in 1..=cfg.epochs {
-        trainer.train_epoch(&train);
-        let acc = trainer.accuracy(&test);
+    for epoch in start_epoch + 1..=cfg.epochs {
+        trainer.train_epoch(&train)?;
+        let acc = trainer.accuracy(&test)?;
         if is_leader {
             println!("Epoch {epoch:2} done, Accuracy: {:5.2} %", acc * 100.0);
+        }
+        // Image 1 publishes the recovery checkpoint (write-then-rename;
+        // all replicas are identical, so one writer suffices).
+        if is_leader {
+            if let Some(path) = &cfg.checkpoint {
+                if epoch % every == 0 || epoch == cfg.epochs {
+                    trainer.save_checkpoint(path, epoch)?;
+                }
+            }
         }
     }
     if is_leader {

@@ -4,7 +4,7 @@
 
 pub mod serving;
 
-pub use serving::{LatencyHistogram, ServeMetrics};
+pub use serving::{peer_lost_total, record_peer_lost, LatencyHistogram, ServeMetrics};
 
 use crate::tensor::Summary;
 use std::time::Instant;

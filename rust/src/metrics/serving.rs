@@ -22,6 +22,22 @@ const MAX_EXACT_BATCH: usize = 64;
 #[allow(clippy::declare_interior_mutable_const)]
 const ZERO: AtomicU64 = AtomicU64::new(0);
 
+/// Process-global count of teammates lost by the TCP communicator. Global
+/// (unlike the per-server [`ServeMetrics`]) because peer loss happens deep
+/// inside a collective with no metrics handle in scope, and one process
+/// hosts at most one training team.
+static PEER_LOST: AtomicU64 = AtomicU64::new(0);
+
+/// Record one lost teammate (called from the collectives layer).
+pub fn record_peer_lost() {
+    PEER_LOST.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total teammates lost by this process's communicator so far.
+pub fn peer_lost_total() -> u64 {
+    PEER_LOST.load(Ordering::Relaxed)
+}
+
 /// Log-scaled latency histogram with lock-free recording.
 ///
 /// Percentiles are read from the power-of-two buckets, reporting the
@@ -113,6 +129,8 @@ pub struct ServeMetrics {
     pub latency: LatencyHistogram,
     requests: AtomicU64,
     shed: AtomicU64,
+    deadline_shed: AtomicU64,
+    reload_failures: AtomicU64,
     batches: AtomicU64,
     batch_samples: AtomicU64,
     batch_hist: [AtomicU64; MAX_EXACT_BATCH + 1],
@@ -126,6 +144,8 @@ impl ServeMetrics {
             latency: LatencyHistogram::new(),
             requests: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            deadline_shed: AtomicU64::new(0),
+            reload_failures: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_samples: AtomicU64::new(0),
             batch_hist: [ZERO; MAX_EXACT_BATCH + 1],
@@ -144,6 +164,18 @@ impl ServeMetrics {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request shed because its per-request deadline expired before a
+    /// batch could serve it (counted separately from queue-full sheds).
+    pub fn record_deadline_shed(&self) {
+        self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` failed hot-reload attempts (torn/unparseable checkpoint kept
+    /// the previous model serving).
+    pub fn record_reload_failures(&self, n: u64) {
+        self.reload_failures.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// One coalesced batch of `size` requests executed.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -158,6 +190,14 @@ impl ServeMetrics {
 
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_shed(&self) -> u64 {
+        self.deadline_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn reload_failures(&self) -> u64 {
+        self.reload_failures.load(Ordering::Relaxed)
     }
 
     pub fn batches(&self) -> u64 {
@@ -212,6 +252,9 @@ impl ServeMetrics {
         };
         line("neural_rs_serve_requests_total", self.requests() as f64);
         line("neural_rs_serve_shed_total", self.shed() as f64);
+        line("neural_rs_serve_deadline_shed_total", self.deadline_shed() as f64);
+        line("neural_rs_serve_reload_failures_total", self.reload_failures() as f64);
+        line("neural_rs_peer_lost_total", peer_lost_total() as f64);
         line("neural_rs_serve_responses_total", self.latency.count() as f64);
         line("neural_rs_serve_batches_total", self.batches() as f64);
         line("neural_rs_serve_batch_size_mean", self.mean_batch());
@@ -316,8 +359,29 @@ mod tests {
             "neural_rs_serve_batches_total 1",
             "neural_rs_serve_latency_us{quantile=\"0.50\"}",
             "neural_rs_serve_throughput_rps",
+            "neural_rs_serve_deadline_shed_total",
+            "neural_rs_serve_reload_failures_total",
+            "neural_rs_peer_lost_total",
         ] {
             assert!(text.contains(series), "missing {series} in:\n{text}");
         }
+    }
+
+    #[test]
+    fn robustness_counters_record_and_render() {
+        let m = ServeMetrics::new();
+        m.record_deadline_shed();
+        m.record_deadline_shed();
+        m.record_reload_failures(3);
+        assert_eq!(m.deadline_shed(), 2);
+        assert_eq!(m.reload_failures(), 3);
+        let text = m.render_prometheus();
+        assert!(text.contains("neural_rs_serve_deadline_shed_total 2"), "{text}");
+        assert!(text.contains("neural_rs_serve_reload_failures_total 3"), "{text}");
+        // The peer-lost counter is process-global and monotonic; other
+        // tests in this binary may bump it, so assert monotonicity only.
+        let before = peer_lost_total();
+        record_peer_lost();
+        assert_eq!(peer_lost_total(), before + 1);
     }
 }

@@ -236,6 +236,29 @@ impl<T: Scalar> Network<T> {
         self.save_to(&mut w)
     }
 
+    /// Serialize to `path` atomically: write `<path>.tmp` in full, fsync,
+    /// then rename over `path`. This is the write-then-rename rule every
+    /// checkpoint publisher must follow — concurrent readers (the serve
+    /// registry's hot-reload poller, a resuming trainer) then never
+    /// observe a torn half-written checkpoint, only the old file or the
+    /// new one.
+    pub fn save_atomic(&self, path: impl AsRef<Path>) -> Result<(), IoError> {
+        let path = path.as_ref();
+        let mut tmp_os = path.as_os_str().to_os_string();
+        tmp_os.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_os);
+        {
+            let f = std::fs::File::create(&tmp)?;
+            let mut w = BufWriter::new(f);
+            self.save_to(&mut w)?;
+            w.flush()?;
+            let f = w.into_inner().map_err(|e| IoError::Io(e.into_error()))?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
     /// Deserialize from a reader. Accepts both the current v2 format and
     /// legacy v1 dense checkpoints. Streaming: only the pre-header prefix
     /// (comments/blanks) is buffered to sniff the version; parameter

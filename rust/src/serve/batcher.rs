@@ -52,6 +52,12 @@ pub struct BatchPolicy {
     /// trades steady-state allocations for intra-batch parallelism —
     /// only worth it for very large models or batches.
     pub infer_threads: usize,
+    /// Per-request deadline measured from enqueue. A request still queued
+    /// when it expires is shed ([`ServeError::DeadlineExceeded`]) instead
+    /// of occupying a batch slot its caller has already given up on, and
+    /// under overflow the oldest (earliest-deadline) entry is evicted in
+    /// favor of the newcomer. [`Duration::ZERO`] disables deadlines.
+    pub deadline: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -62,6 +68,7 @@ impl Default for BatchPolicy {
             queue_depth: 1024,
             workers: 2,
             infer_threads: 1,
+            deadline: Duration::ZERO,
         }
     }
 }
@@ -82,6 +89,10 @@ enum Phase {
 enum Fail {
     ModelChanged,
     Shutdown,
+    /// Deadline expired while queued.
+    Deadline,
+    /// Evicted under overflow to make room for a newer request.
+    Evicted,
 }
 
 #[derive(Debug)]
@@ -124,6 +135,8 @@ struct Shared {
     max_batch: usize,
     max_wait: Duration,
     infer_threads: usize,
+    /// `Duration::ZERO` = deadlines disabled.
+    deadline: Duration,
 }
 
 /// The dynamic micro-batching queue plus its worker pool for one model.
@@ -159,6 +172,7 @@ impl MicroBatcher {
             queue_depth: policy.queue_depth.max(policy.max_batch.max(1)),
             workers: policy.workers.max(1),
             infer_threads: policy.infer_threads.max(1),
+            deadline: policy.deadline,
         };
         let shared = Arc::new(Shared {
             q: Mutex::new(QueueState {
@@ -172,6 +186,7 @@ impl MicroBatcher {
             max_batch: policy.max_batch,
             max_wait: policy.max_wait,
             infer_threads: policy.infer_threads,
+            deadline: policy.deadline,
         });
         let workers = (0..policy.workers)
             .map(|i| {
@@ -277,9 +292,22 @@ impl MicroBatcher {
                 return Err(ServeError::ShuttingDown);
             }
             if q.queue.len() >= self.policy.queue_depth {
+                if self.policy.deadline.is_zero() {
+                    self.shared.metrics.record_shed();
+                    handle.slot.state.lock().unwrap().phase = Phase::Idle;
+                    return Err(ServeError::Overloaded);
+                }
+                // Deadline mode: the FIFO front holds the earliest
+                // deadline — the request most likely to expire before its
+                // batch runs. Evict it in favor of the newcomer so shed
+                // capacity goes to requests that can still meet their
+                // deadline.
+                let (old, _) = q.queue.pop_front().unwrap();
                 self.shared.metrics.record_shed();
-                handle.slot.state.lock().unwrap().phase = Phase::Idle;
-                return Err(ServeError::Overloaded);
+                let mut st = old.state.lock().unwrap();
+                st.phase = Phase::Failed(Fail::Evicted);
+                old.cv.notify_all();
+                drop(st);
             }
             q.queue.push_back((Arc::clone(&handle.slot), enqueued_at));
             self.shared.metrics.record_request();
@@ -301,6 +329,8 @@ impl MicroBatcher {
             }
             Phase::Failed(Fail::ModelChanged) => Err(ServeError::ModelChanged),
             Phase::Failed(Fail::Shutdown) => Err(ServeError::ShuttingDown),
+            Phase::Failed(Fail::Deadline) => Err(ServeError::DeadlineExceeded),
+            Phase::Failed(Fail::Evicted) => Err(ServeError::Overloaded),
             Phase::Idle | Phase::Queued => unreachable!("worker left slot unfinished"),
         }
     }
@@ -360,18 +390,25 @@ fn worker_loop(sh: &Shared) {
         if q.shutdown {
             return;
         }
+        sweep_expired(sh, &mut q);
         if q.queue.is_empty() {
             q = sh.cv.wait(q).unwrap();
             continue;
         }
-        // Batching window: close at max_batch or the oldest deadline.
-        let deadline = q.queue.front().unwrap().1 + sh.max_wait;
+        // Batching window: close at max_batch, the oldest request's wait
+        // budget, or its request deadline — whichever comes first (waiting
+        // past the deadline would assemble a batch of corpses).
+        let front_t = q.queue.front().unwrap().1;
+        let mut close = front_t + sh.max_wait;
+        if !sh.deadline.is_zero() {
+            close = close.min(front_t + sh.deadline);
+        }
         while q.queue.len() < sh.max_batch && !q.shutdown {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= close {
                 break;
             }
-            let (guard, _) = sh.cv.wait_timeout(q, deadline - now).unwrap();
+            let (guard, _) = sh.cv.wait_timeout(q, close - now).unwrap();
             q = guard;
             if q.queue.is_empty() {
                 // A sibling worker drained the window out from under us.
@@ -381,6 +418,9 @@ fn worker_loop(sh: &Shared) {
         if q.shutdown {
             return;
         }
+        // Shed already-expired requests *before* batch assembly so a batch
+        // slot never goes to a caller that has given up.
+        sweep_expired(sh, &mut q);
         let take = q.queue.len().min(sh.max_batch);
         if take == 0 {
             continue;
@@ -475,6 +515,26 @@ fn deliver(batch: &[(Arc<Slot>, Instant)], in_len: usize, out_len: usize, out: &
             st.output.copy_from_slice(out.col(j));
             st.phase = Phase::Done;
         }
+        slot.cv.notify_all();
+    }
+}
+
+/// Shed queued requests whose deadline has already expired. The queue is
+/// FIFO and the deadline uniform, so expired entries are exactly a prefix.
+/// Caller holds the queue lock.
+fn sweep_expired(sh: &Shared, q: &mut QueueState) {
+    if sh.deadline.is_zero() {
+        return;
+    }
+    let now = Instant::now();
+    while let Some((_, t)) = q.queue.front() {
+        if now.duration_since(*t) < sh.deadline {
+            break;
+        }
+        let (slot, _) = q.queue.pop_front().unwrap();
+        sh.metrics.record_deadline_shed();
+        let mut st = slot.state.lock().unwrap();
+        st.phase = Phase::Failed(Fail::Deadline);
         slot.cv.notify_all();
     }
 }

@@ -90,6 +90,7 @@ impl Server {
             queue_depth: cfg.queue_depth,
             workers: cfg.workers,
             infer_threads: cfg.infer_threads,
+            deadline: Duration::from_micros(cfg.deadline_us),
         };
         let mut batchers = BTreeMap::new();
         for name in registry.names() {
@@ -121,6 +122,7 @@ impl Server {
         };
         let poller = if cfg.hot_reload {
             let sd = Arc::clone(&shutdown);
+            let m = Arc::clone(&metrics);
             let poll = Duration::from_millis(cfg.reload_poll_ms.max(10));
             Some(
                 std::thread::Builder::new()
@@ -139,6 +141,9 @@ impl Server {
                             for name in registry.poll_reload() {
                                 eprintln!("# serve: hot-reloaded model '{name}'");
                             }
+                            // Failed reloads (torn/garbage checkpoints the
+                            // registry rejected) surface on /metrics.
+                            m.record_reload_failures(registry.take_reload_failures());
                         }
                     })
                     .expect("spawn reload poller"),
@@ -307,10 +312,13 @@ fn respond(
     close: bool,
 ) -> std::io::Result<()> {
     let conn = if close { "close" } else { "keep-alive" };
+    // Every 503 is a shed-and-retry signal; tell well-behaved clients how
+    // long to back off.
+    let retry = if status == 503 { "Retry-After: 1\r\n" } else { "" };
     write!(
         stream,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: {conn}\r\n{retry}\r\n{body}",
         body.len()
     )?;
     stream.flush()
@@ -340,6 +348,9 @@ struct ConnState {
 fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
     stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
+    // Bound writes too: a peer that stops reading mid-response must not
+    // wedge this handler thread forever.
+    stream.set_write_timeout(Some(IDLE_TIMEOUT))?;
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut conn = ConnState { handles: BTreeMap::new() };
@@ -493,6 +504,9 @@ fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, 
         }
         Err(ServeError::Overloaded) => {
             (503, "Service Unavailable", error_json("overloaded: request shed"))
+        }
+        Err(ServeError::DeadlineExceeded) => {
+            (503, "Service Unavailable", error_json("deadline exceeded: request shed"))
         }
         Err(ServeError::ShuttingDown) => {
             (503, "Service Unavailable", error_json("shutting down"))

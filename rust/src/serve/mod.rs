@@ -49,6 +49,9 @@ pub enum ServeError {
     /// The model was hot-reloaded with different layer sizes while this
     /// request was in flight; re-create the client handle and retry.
     ModelChanged,
+    /// The request's deadline expired while it was still queued; it was
+    /// shed without running (HTTP maps this to 503 + `Retry-After`).
+    DeadlineExceeded,
 }
 
 impl std::fmt::Display for ServeError {
@@ -63,6 +66,9 @@ impl std::fmt::Display for ServeError {
             }
             Self::ModelChanged => {
                 write!(f, "model layer sizes changed under this request (hot reload)")
+            }
+            Self::DeadlineExceeded => {
+                write!(f, "request deadline expired while queued (shed); retry later")
             }
         }
     }

@@ -14,11 +14,20 @@
 //! parameters it started with even if a reload lands mid-flight, and the
 //! lookup itself is a read-lock plus an `Arc` clone — no allocation on the
 //! serving hot path.
+//!
+//! Torn checkpoints: a reload that fails to stat or parse keeps the
+//! previous parameters live and bumps [`ModelRegistry::take_reload_failures`]
+//! (surfaced as `neural_rs_serve_reload_failures_total` on `/metrics`).
+//! Checkpoint writers should publish atomically via
+//! [`crate::nn::Network::save_atomic`] (write `<path>.tmp`, fsync, rename),
+//! which makes torn reads impossible on POSIX filesystems; the parse-and-
+//! keep fallback here covers writers that don't.
 
 use super::ServeError;
 use crate::nn::Network;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::SystemTime;
 
@@ -44,6 +53,8 @@ struct Entry {
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Entry>>,
+    /// Reloads rejected since the last [`Self::take_reload_failures`] call.
+    reload_failures: AtomicU64,
 }
 
 fn fingerprint(path: &Path) -> Result<Fingerprint, ServeError> {
@@ -123,6 +134,7 @@ impl ModelRegistry {
                 Ok(fp) => fp,
                 Err(e) => {
                     eprintln!("# serve: cannot stat model '{name}': {e}");
+                    self.reload_failures.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
             };
@@ -148,10 +160,18 @@ impl ModelRegistry {
                         "# serve: model '{name}' changed on disk but failed to load \
                          ({e}); keeping previous parameters"
                     );
+                    self.reload_failures.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
         reloaded
+    }
+
+    /// Drain the count of reloads rejected (unreadable / unparseable
+    /// checkpoints) since the last call. The serve poller feeds this into
+    /// the `reload_failures` metric.
+    pub fn take_reload_failures(&self) -> u64 {
+        self.reload_failures.swap(0, Ordering::Relaxed)
     }
 }
 
@@ -222,11 +242,30 @@ mod tests {
         let live = reg.get("m").unwrap();
         assert!(second.params_close(&live, 0.0), "reload must serve the new params");
 
-        // A garbage rewrite keeps the previous parameters alive.
+        // A garbage rewrite keeps the previous parameters alive and is
+        // counted as a reload failure (drained by take_reload_failures).
+        assert_eq!(reg.take_reload_failures(), 0);
         std::fs::write(&path, "corrupted checkpoint").unwrap();
         assert!(reg.poll_reload().is_empty());
         let still = reg.get("m").unwrap();
         assert!(second.params_close(&still, 0.0), "bad reload must not evict");
+        assert_eq!(reg.take_reload_failures(), 1);
+        assert_eq!(reg.take_reload_failures(), 0, "take drains the counter");
+
+        // An atomic rewrite (save_atomic) goes live cleanly. The comment
+        // append guarantees a length change even on coarse-mtime
+        // filesystems (same trick as above).
+        let third = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 3);
+        third.save_atomic(&path).unwrap();
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "# retrained again, atomically").unwrap();
+        }
+        assert_eq!(reg.poll_reload(), vec!["m".to_string()]);
+        let live = reg.get("m").unwrap();
+        assert!(third.params_close(&live, 0.0), "atomic rewrite must serve new params");
+        assert_eq!(reg.take_reload_failures(), 0);
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -239,6 +239,19 @@ impl<T: Scalar> Matrix<T> {
         }
     }
 
+    /// Copy columns [lo, hi) of `src` into `self`, reusing `self`'s
+    /// backing storage — the allocation-free counterpart of
+    /// [`Matrix::cols_range`] for staging buffers that live across batches
+    /// (shrinking to a ragged tail and regrowing stays within capacity).
+    pub fn assign_cols_range(&mut self, src: &Matrix<T>, lo: usize, hi: usize) {
+        assert!(lo <= hi && hi <= src.cols, "assign_cols_range out of bounds");
+        self.rows = src.rows;
+        self.cols = hi - lo;
+        let n = self.rows * self.cols;
+        self.data.resize(n, T::ZERO);
+        self.data.copy_from_slice(&src.data[lo * src.rows..hi * src.rows]);
+    }
+
     /// Gather selected columns into a new matrix.
     pub fn gather_cols(&self, idx: &[usize]) -> Matrix<T> {
         let mut out = Matrix::zeros(self.rows, idx.len());
@@ -569,6 +582,19 @@ mod tests {
         assert_eq!(s.cols(), 2);
         assert_eq!(s.col(0), &[2.0, 6.0]);
         assert_eq!(s.col(1), &[3.0, 7.0]);
+    }
+
+    #[test]
+    fn assign_cols_range_matches_cols_range_and_reuses_storage() {
+        let a = m(2, 4, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let mut stage = Matrix::<f64>::zeros(2, 4); // capacity for the widest slice
+        stage.assign_cols_range(&a, 1, 3);
+        assert_eq!(stage, a.cols_range(1, 3));
+        // Shrink to a narrower slice, then regrow: stays within capacity.
+        stage.assign_cols_range(&a, 3, 4);
+        assert_eq!(stage, a.cols_range(3, 4));
+        stage.assign_cols_range(&a, 0, 4);
+        assert_eq!(stage, a.cols_range(0, 4));
     }
 
     #[test]

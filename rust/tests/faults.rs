@@ -1,0 +1,401 @@
+//! Deterministic fault-injection suite for the TCP collectives and the
+//! checkpoint/resume path — the robustness contract, exercised end to end.
+//!
+//! Every scenario scripts a [`FaultPlan`] against a [`FaultProxy`] wedged
+//! between one worker and the leader, then asserts the *typed* outcome at
+//! **every** image: a malformed frame is `CommError::Protocol` at the
+//! receiver and a prompt `PeerLost` (leader-relayed or EOF-derived) at the
+//! bystanders; a severed link is `PeerLost`; a stall past the per-op
+//! deadline is a timeout `Io`. Nothing here may hang or panic — each run
+//! is bounded by the 10 s op deadline, and the corruption bytes come from
+//! the plan's seed, so the same plan reproduces the same failure bit for
+//! bit (asserted explicitly below).
+//!
+//! The last test closes the kill-then-restart loop without any network:
+//! a training run checkpointed at epoch 2 and resumed in a fresh trainer
+//! must land on the *byte-identical* model an uninterrupted run reaches.
+
+use std::net::{IpAddr, Ipv4Addr, SocketAddr};
+use std::sync::atomic::{AtomicU16, Ordering};
+use std::time::{Duration, Instant};
+
+use neural_rs::collectives::{
+    CommError, Communicator, FaultAction, FaultDir, FaultPlan, FaultProxy, NullComm, TcpComm,
+    TcpOptions, TcpTopology,
+};
+use neural_rs::coordinator::{BatchStrategy, Trainer, TrainerOptions};
+use neural_rs::data::synthesize;
+use neural_rs::nn::Activation;
+
+/// Own port range: tcp.rs unit tests start at 46000 and tests/cli.rs uses
+/// 47311; staying clear avoids bind races under a parallel test runner.
+static NEXT_PORT: AtomicU16 = AtomicU16::new(48100);
+
+fn addr() -> SocketAddr {
+    let port = NEXT_PORT.fetch_add(1, Ordering::SeqCst);
+    SocketAddr::new(IpAddr::V4(Ipv4Addr::LOCALHOST), port)
+}
+
+/// Generous deadline: far above any scripted delay, far below "hang".
+const T: Duration = Duration::from_secs(10);
+
+fn opts() -> TcpOptions {
+    TcpOptions::with_timeout(T)
+}
+
+/// Run a 2-image team with the worker routed through a fault proxy.
+/// Returns what each image's closure produced.
+fn run_proxied<L, W>(
+    plan: FaultPlan,
+    leader_opts: TcpOptions,
+    worker_opts: TcpOptions,
+    lf: impl FnOnce(TcpComm) -> L + Send,
+    wf: impl FnOnce(TcpComm) -> W + Send,
+) -> (L, W)
+where
+    L: Send,
+    W: Send,
+{
+    let leader_addr = addr();
+    let proxy_addr = addr();
+    let _proxy = FaultProxy::start(proxy_addr, leader_addr, plan).unwrap();
+    std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let comm = TcpTopology::leader_with(leader_addr, 2, leader_opts).unwrap();
+            lf(comm)
+        });
+        let wh = s.spawn(move || {
+            let comm = TcpTopology::worker_with(proxy_addr, 2, 2, worker_opts).unwrap();
+            wf(comm)
+        });
+        (lh.join().unwrap(), wh.join().unwrap())
+    })
+}
+
+// ---------------------------------------------------------------- malformed
+// frames: every corruption is a typed error at the receiver, and the other
+// end is released promptly (relayed PeerLost or EOF) — never a hang.
+
+#[test]
+fn corrupt_magic_is_typed_at_every_image_and_deterministic() {
+    // Frame 1 toward the leader is the worker's first co_sum deposit
+    // (frame 0 is its Hello).
+    let run = || {
+        let plan = FaultPlan::new(7).inject(FaultDir::ToLeader, 1, FaultAction::CorruptMagic);
+        run_proxied(
+            plan,
+            opts(),
+            opts(),
+            |c| {
+                let mut v = [1.0f64];
+                c.co_sum(&mut v).unwrap_err()
+            },
+            |c| {
+                let mut v = [2.0f64];
+                c.co_sum(&mut v).unwrap_err()
+            },
+        )
+    };
+    let (l, w) = run();
+    assert!(matches!(l, CommError::Protocol(_)), "leader: {l}");
+    assert!(l.to_string().contains("bad magic byte"), "leader: {l}");
+    // The leader relays the loss, so the worker is released with a typed
+    // PeerLost instead of waiting out its read deadline.
+    assert!(matches!(w, CommError::PeerLost { .. }), "worker: {w}");
+
+    // Same plan, same seed → the identical failure, bit for bit: the
+    // corrupt byte is seed-derived, so even the error text must match.
+    let (l2, w2) = run();
+    assert_eq!(l.to_string(), l2.to_string(), "fault injection must be deterministic");
+    assert_eq!(w.to_string(), w2.to_string(), "fault injection must be deterministic");
+}
+
+#[test]
+fn corrupt_opcode_toward_worker_is_typed_at_the_worker() {
+    // Frame 1 toward the worker is the leader's co_sum Result (frame 0 is
+    // the hello ack). The leader's round completes — only the reply is
+    // poisoned — so the leader sees success and the worker a typed error.
+    let plan = FaultPlan::new(11).inject(FaultDir::ToWorker, 1, FaultAction::CorruptOpcode);
+    let (l, w) = run_proxied(
+        plan,
+        opts(),
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).map(|_| v[0])
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+    );
+    assert_eq!(l.unwrap(), 3.0);
+    assert!(matches!(w, CommError::Protocol(_)), "worker: {w}");
+    assert!(w.to_string().contains("unknown opcode"), "worker: {w}");
+}
+
+#[test]
+fn oversize_length_is_refused_without_allocating_or_hanging() {
+    let plan = FaultPlan::new(3).inject(FaultDir::ToLeader, 1, FaultAction::OversizeLen);
+    let start = Instant::now();
+    let (l, w) = run_proxied(
+        plan,
+        opts(),
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+    );
+    assert!(matches!(l, CommError::Protocol(_)), "leader: {l}");
+    assert!(l.to_string().contains("exceeds limit"), "leader: {l}");
+    // The proxy severs after the poisoned header, so the worker observes
+    // EOF and classifies it as a lost peer.
+    assert!(matches!(w, CommError::PeerLost { .. }), "worker: {w}");
+    assert!(start.elapsed() < T, "refusal must beat the op deadline, not ride it out");
+}
+
+#[test]
+fn truncated_payload_is_peer_lost_not_a_hang() {
+    // Forward the header of the worker's deposit but only 3 of its 16
+    // payload bytes, then sever — a torn write from a dying process. The
+    // leader's short read is peer-gone I/O, classified to the slot's image.
+    let plan = FaultPlan::new(5).inject(FaultDir::ToLeader, 1, FaultAction::Truncate(3));
+    let (l, w) = run_proxied(
+        plan,
+        opts(),
+        opts(),
+        |c| {
+            let mut v = [1.0f64, 2.0];
+            c.co_sum(&mut v).unwrap_err()
+        },
+        |c| {
+            let mut v = [3.0f64, 4.0];
+            c.co_sum(&mut v).unwrap_err()
+        },
+    );
+    assert!(matches!(l, CommError::PeerLost { image: 2 }), "leader: {l}");
+    assert!(matches!(w, CommError::PeerLost { .. }), "worker: {w}");
+}
+
+// ------------------------------------------------------------------ stalls:
+// a delay under the deadline is invisible; past the deadline it is a typed
+// timeout at the waiter and a relayed PeerLost at everyone else.
+
+#[test]
+fn delay_within_the_deadline_succeeds() {
+    let plan = FaultPlan::new(1)
+        .inject(FaultDir::ToLeader, 1, FaultAction::Delay(Duration::from_millis(150)));
+    let (l, w) = run_proxied(
+        plan,
+        opts(),
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            c.barrier().unwrap();
+            v[0]
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap();
+            c.barrier().unwrap();
+            v[0]
+        },
+    );
+    assert_eq!(l, 3.0);
+    assert_eq!(w, 3.0);
+}
+
+#[test]
+fn delay_past_the_op_deadline_is_a_typed_timeout() {
+    let plan = FaultPlan::new(2)
+        .inject(FaultDir::ToLeader, 1, FaultAction::Delay(Duration::from_secs(5)));
+    let leader_opts = TcpOptions::with_timeout(T).op_timeout(Duration::from_millis(250));
+    let start = Instant::now();
+    let (l, w) = run_proxied(
+        plan,
+        leader_opts,
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+    );
+    assert!(l.is_timeout(), "leader must see a timeout, got: {l}");
+    assert!(matches!(w, CommError::PeerLost { .. }), "worker: {w}");
+    assert!(
+        start.elapsed() < Duration::from_secs(4),
+        "the deadline must fire long before the 5 s stall resolves"
+    );
+}
+
+// ------------------------------------------------------------ peer death:
+// fatal by default, tolerated (with rescaled sums) in elastic mode.
+
+#[test]
+fn severed_link_is_peer_lost_at_every_image() {
+    // Frame 2 toward the leader is the worker's *second* deposit; round 1
+    // must complete normally before the injected death.
+    let plan = FaultPlan::new(9).inject(FaultDir::ToLeader, 2, FaultAction::Drop);
+    let (l, w) = run_proxied(
+        plan,
+        opts(),
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            let mut v2 = [1.0f64];
+            c.co_sum(&mut v2).unwrap_err()
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            let mut v2 = [2.0f64];
+            c.co_sum(&mut v2).unwrap_err()
+        },
+    );
+    assert!(matches!(l, CommError::PeerLost { image: 2 }), "leader: {l}");
+    assert!(matches!(w, CommError::PeerLost { .. }), "worker: {w}");
+}
+
+#[test]
+fn elastic_team_continues_with_rescaled_sums_after_injected_death() {
+    let leader_addr = addr();
+    let proxy_addr = addr();
+    // Image 3 dies delivering its second deposit.
+    let plan = FaultPlan::new(4).inject(FaultDir::ToLeader, 2, FaultAction::Drop);
+    let _proxy = FaultProxy::start(proxy_addr, leader_addr, plan).unwrap();
+    let elastic = || TcpOptions::with_timeout(T).elastic(true);
+    std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let c = TcpTopology::leader_with(leader_addr, 3, elastic()).unwrap();
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            // Round 2: image 3 is gone; the survivors' 1 + 1 is rescaled
+            // by n/alive = 3/2, so the per-image average keeps its scale.
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            assert_eq!(c.alive_images(), 2);
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            c.barrier().unwrap();
+        });
+        let w2 = s.spawn(move || {
+            let c = TcpTopology::worker_with(leader_addr, 2, 3, elastic()).unwrap();
+            for _ in 0..3 {
+                let mut v = [1.0f64];
+                c.co_sum(&mut v).unwrap();
+                assert_eq!(v[0], 3.0);
+            }
+            c.barrier().unwrap();
+        });
+        let w3 = s.spawn(move || {
+            let c = TcpTopology::worker_with(proxy_addr, 3, 3, elastic()).unwrap();
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            // This is the image that "dies": its link is severed, so its
+            // own collective fails — the team moves on without it.
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap_err();
+        });
+        lh.join().unwrap();
+        w2.join().unwrap();
+        w3.join().unwrap();
+    });
+}
+
+// --------------------------------------------------------- kill + restart:
+// a checkpointed-then-resumed run must land exactly where the uninterrupted
+// run lands — parameters, step counter, and batch-RNG state, byte for byte.
+
+#[test]
+fn resumed_training_matches_the_uninterrupted_run() {
+    fn t_opts() -> TrainerOptions {
+        TrainerOptions {
+            dims: vec![784, 16, 10],
+            activation: Activation::Sigmoid,
+            layers: Vec::new(),
+            image: None,
+            eta: 0.5,
+            batch_size: 50,
+            epochs: 1,
+            seed: 42,
+            batch_seed: 4242,
+            strategy: BatchStrategy::RandomStart,
+            optimizer: Default::default(),
+            intra_threads: 1,
+        }
+    }
+    let tmp = |tag: &str| {
+        std::env::temp_dir().join(format!("nrs-faults-{tag}-{}.txt", std::process::id()))
+    };
+    let comm = NullComm;
+    let train = synthesize::<f32>(600, 11);
+    let test = synthesize::<f32>(200, 12);
+
+    // Reference: 4 uninterrupted epochs.
+    let mut reference = Trainer::new(&comm, t_opts(), None).unwrap();
+    for _ in 0..4 {
+        reference.train_epoch(&train).unwrap();
+    }
+
+    // "Killed" run: 2 epochs, checkpoint, then a fresh trainer (a new
+    // process in real life) resumes and finishes the remaining 2.
+    let ckpt = tmp("ckpt");
+    {
+        let mut first = Trainer::new(&comm, t_opts(), None).unwrap();
+        for _ in 0..2 {
+            first.train_epoch(&train).unwrap();
+        }
+        first.save_checkpoint(&ckpt, 2).unwrap();
+    }
+    let mut resumed = Trainer::new(&comm, t_opts(), None).unwrap();
+    assert_eq!(resumed.resume_from(&ckpt).unwrap(), 2);
+    for _ in 0..2 {
+        resumed.train_epoch(&train).unwrap();
+    }
+
+    // RandomStart resumes the exact batch sequence, so the continuation is
+    // bitwise identical: compare the serialized checkpoints (parameters)
+    // and sidecars (step counter + RNG state) of both endpoints.
+    let ref_path = tmp("ref");
+    let res_path = tmp("res");
+    reference.save_checkpoint(&ref_path, 4).unwrap();
+    resumed.save_checkpoint(&res_path, 4).unwrap();
+    let sidecar = |p: &std::path::Path| {
+        let mut os = p.as_os_str().to_os_string();
+        os.push(".state");
+        std::path::PathBuf::from(os)
+    };
+    let ref_model = std::fs::read_to_string(&ref_path).unwrap();
+    let res_model = std::fs::read_to_string(&res_path).unwrap();
+    assert_eq!(ref_model, res_model, "resumed parameters must match the straight run");
+    let ref_state = std::fs::read_to_string(sidecar(&ref_path)).unwrap();
+    let res_state = std::fs::read_to_string(sidecar(&res_path)).unwrap();
+    assert_eq!(ref_state, res_state, "resumed cursor/RNG must match the straight run");
+    assert_eq!(
+        reference.accuracy(&test).unwrap(),
+        resumed.accuracy(&test).unwrap(),
+        "identical replicas must score identically"
+    );
+
+    for p in [&ckpt, &ref_path, &res_path] {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(sidecar(p));
+    }
+}

@@ -35,7 +35,7 @@ fn prop_co_sum_is_elementwise_sum() {
                             let mut buf: Vec<f64> =
                                 (0..len).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
                             let mine = buf.clone();
-                            comm.co_sum(&mut buf);
+                            comm.co_sum(&mut buf).unwrap();
                             (mine, buf)
                         })
                     })
@@ -93,7 +93,7 @@ fn prop_broadcast_replicates_source() {
                                 let mut r2 = Rng::new(seed + (src - 1) as u64);
                                 (0..len).map(|_| r2.uniform() as f32).collect()
                             };
-                            comm.co_broadcast(&mut buf, src);
+                            comm.co_broadcast(&mut buf, src).unwrap();
                             buf == src_copy
                         })
                     })
@@ -249,9 +249,9 @@ fn prop_parallel_training_matches_serial() {
 
             let serial = {
                 let comm = neural_rs::collectives::NullComm;
-                let mut t = Trainer::new(&comm, opts.clone(), None);
+                let mut t = Trainer::new(&comm, opts.clone(), None).unwrap();
                 for _ in 0..2 {
-                    t.train_epoch(&data);
+                    t.train_epoch(&data).unwrap();
                 }
                 t.net.params_to_flat()
             };
@@ -265,9 +265,9 @@ fn prop_parallel_training_matches_serial() {
                     .map(|c| {
                         s.spawn(move || {
                             let mut t: Trainer<f32, LocalComm> =
-                                Trainer::new(c, opts_ref.clone(), None);
+                                Trainer::new(c, opts_ref.clone(), None).unwrap();
                             for _ in 0..2 {
-                                t.train_epoch(data_ref);
+                                t.train_epoch(data_ref).unwrap();
                             }
                             t.net.params_to_flat()
                         })

@@ -44,6 +44,7 @@ fn coalesces_concurrent_submitters_into_one_batch() {
         queue_depth: 64,
         workers: 1,
         infer_threads: 1,
+        deadline: Duration::ZERO,
     };
     let (b, metrics, _reg) = batcher_with(&net, policy);
     let barrier = Arc::new(Barrier::new(8));
@@ -95,6 +96,7 @@ fn max_wait_deadline_flushes_partial_batches() {
         queue_depth: 64,
         workers: 1,
         infer_threads: 1,
+        deadline: Duration::ZERO,
     };
     let (b, metrics, _reg) = batcher_with(&net, slow);
     let handle = b.client();
@@ -134,6 +136,7 @@ fn bounded_queue_sheds_overflow_immediately() {
         queue_depth: 4,
         workers: 1,
         infer_threads: 1,
+        deadline: Duration::ZERO,
     };
     let (b, metrics, _reg) = batcher_with(&net, policy);
     // Fill the queue: four submitters block inside the batching window.
@@ -175,6 +178,104 @@ fn bounded_queue_sheds_overflow_immediately() {
     b.infer(&handle, &input, &mut out).unwrap();
 }
 
+/// A request whose deadline expires while it is still queued is shed with
+/// `DeadlineExceeded` — promptly (at the deadline, not the full batching
+/// window) — and counted on the `deadline_shed` metric. A deadline longer
+/// than the window never fires.
+#[test]
+fn deadline_expired_requests_are_shed() {
+    let net = small_net(12);
+    // The batching window (2 s) far exceeds the deadline (50 ms): a lone
+    // request can never fill max_batch, so only the deadline can end its
+    // wait — by shedding it.
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_secs(2),
+        queue_depth: 16,
+        workers: 1,
+        infer_threads: 1,
+        deadline: Duration::from_millis(50),
+    };
+    let (b, metrics, _reg) = batcher_with(&net, policy);
+    let handle = b.client();
+    let input = [0.5f32; 6];
+    let mut out = [0.0f32; 3];
+    let sw = Instant::now();
+    let res = b.infer(&handle, &input, &mut out);
+    let waited = sw.elapsed();
+    assert!(
+        matches!(res, Err(ServeError::DeadlineExceeded)),
+        "expected deadline shed, got {res:?}"
+    );
+    assert!(
+        waited < Duration::from_millis(1500),
+        "shed must happen at the deadline, not the window ({waited:?})"
+    );
+    assert_eq!(metrics.deadline_shed(), 1);
+    assert_eq!(metrics.shed(), 0, "deadline sheds are counted separately");
+
+    // With the deadline comfortably above the window, requests serve
+    // normally and the counter stays put.
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::ZERO,
+        queue_depth: 16,
+        workers: 1,
+        infer_threads: 1,
+        deadline: Duration::from_secs(30),
+    };
+    let (b2, m2, _r2) = batcher_with(&net, policy);
+    let handle2 = b2.client();
+    b2.infer(&handle2, &input, &mut out).unwrap();
+    assert_eq!(m2.deadline_shed(), 0);
+}
+
+/// Under overflow in deadline mode, the *oldest* queued request (earliest
+/// deadline — the one most likely to expire before compute) is evicted in
+/// favor of the newcomer, instead of shedding the newcomer.
+#[test]
+fn deadline_mode_evicts_oldest_under_overflow() {
+    let net = small_net(13);
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(1500),
+        queue_depth: 4,
+        workers: 1,
+        infer_threads: 1,
+        // Generous deadline: eviction pressure, not expiry, is under test.
+        deadline: Duration::from_secs(30),
+    };
+    let (b, metrics, _reg) = batcher_with(&net, policy);
+    let blocked: Vec<_> = (0..4)
+        .map(|_| {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                let handle = b.client();
+                let input = [0.5f32; 6];
+                let mut out = [0.0f32; 3];
+                b.infer(&handle, &input, &mut out)
+            })
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while b.queue_len() < 4 {
+        assert!(Instant::now() < deadline, "queue never filled (len {})", b.queue_len());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handle = b.client();
+    let input = [0.5f32; 6];
+    let mut out = [0.0f32; 3];
+    let res = b.infer(&handle, &input, &mut out);
+    assert!(res.is_ok(), "newcomer must be accepted in deadline mode, got {res:?}");
+    let results: Vec<_> = blocked.into_iter().map(|t| t.join().unwrap()).collect();
+    let evicted =
+        results.iter().filter(|r| matches!(r, Err(ServeError::Overloaded))).count();
+    assert_eq!(evicted, 1, "exactly the oldest entry is evicted: {results:?}");
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 3);
+    assert_eq!(metrics.shed(), 1);
+    assert_eq!(metrics.deadline_shed(), 0, "eviction is overflow shed, not expiry");
+}
+
 /// Workers re-resolve their model from the registry once per batch, so a
 /// swapped model (the in-memory analogue of checkpoint hot-reload) serves
 /// on the very next request.
@@ -187,6 +288,7 @@ fn model_swap_serves_on_next_batch() {
         queue_depth: 16,
         workers: 1,
         infer_threads: 1,
+        deadline: Duration::ZERO,
     };
     let (b, _metrics, registry) = batcher_with(&net1, policy);
     let handle = b.client();
@@ -210,8 +312,9 @@ fn model_swap_serves_on_next_batch() {
 // HTTP end-to-end
 // ---------------------------------------------------------------------
 
-/// One-shot HTTP exchange (Connection: close) against the test server.
-fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+/// One-shot HTTP exchange (Connection: close); returns the raw response
+/// text, headers included.
+fn http_raw(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> String {
     let mut stream = TcpStream::connect(addr).unwrap();
     let body = body.unwrap_or("");
     write!(
@@ -224,6 +327,12 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16,
     stream.flush().unwrap();
     let mut text = String::new();
     stream.read_to_string(&mut text).unwrap();
+    text
+}
+
+/// One-shot HTTP exchange (Connection: close) against the test server.
+fn http(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let text = http_raw(addr, method, path, body);
     let status: u16 = text
         .lines()
         .next()
@@ -321,11 +430,15 @@ fn http_server_end_to_end() {
     let (status, _) = http(addr, "GET", "/nope", None);
     assert_eq!(status, 404, "unknown endpoint");
 
-    // Metrics reflect the traffic above.
+    // Metrics reflect the traffic above — including the robustness
+    // counters, present (at zero) even when nothing has failed.
     let (status, body) = http(addr, "GET", "/metrics", None);
     assert_eq!(status, 200);
     assert!(body.contains("neural_rs_serve_requests_total"), "{body}");
     assert!(body.contains("neural_rs_serve_batches_total"), "{body}");
+    assert!(body.contains("neural_rs_serve_deadline_shed_total"), "{body}");
+    assert!(body.contains("neural_rs_serve_reload_failures_total"), "{body}");
+    assert!(body.contains("neural_rs_peer_lost_total"), "{body}");
     assert!(handle.metrics().requests() >= 1);
 
     // Graceful shutdown via the admin endpoint; wait() must return.
@@ -333,4 +446,42 @@ fn http_server_end_to_end() {
     assert_eq!(status, 200);
     handle.wait();
     assert!(handle.is_shut_down());
+}
+
+/// End-to-end deadline shedding: a server configured with `deadline_us`
+/// far below its batching window sheds the request with 503 + a
+/// `Retry-After` header, and the shed shows up on `/metrics`.
+#[test]
+fn http_deadline_shed_returns_503_with_retry_after() {
+    let net = small_net(33);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.insert("default", net);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 64,
+        max_wait_us: 2_000_000,
+        queue_depth: 16,
+        workers: 1,
+        infer_threads: 1,
+        hot_reload: false,
+        deadline_us: 30_000,
+        ..ServeConfig::default()
+    };
+    let mut handle = Server::start(&cfg, registry).unwrap();
+    let addr = handle.addr();
+
+    let req = format!(
+        "{{\"input\":[{}]}}",
+        [0.1f32; 6].map(|v| format!("{v}")).join(",")
+    );
+    let text = http_raw(addr, "POST", "/v1/predict", Some(&req));
+    assert!(text.starts_with("HTTP/1.1 503"), "{text}");
+    assert!(text.contains("Retry-After: 1"), "503 must carry Retry-After: {text}");
+    assert!(text.contains("deadline exceeded"), "{text}");
+
+    let (status, body) = http(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(body.contains("neural_rs_serve_deadline_shed_total 1"), "{body}");
+    assert_eq!(handle.metrics().deadline_shed(), 1);
+    handle.shutdown();
 }

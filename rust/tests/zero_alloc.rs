@@ -10,6 +10,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
+use neural_rs::collectives::NullComm;
+use neural_rs::coordinator::{Trainer, TrainerOptions};
 use neural_rs::data::{label_digits, synthesize};
 use neural_rs::nn::{Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Workspace};
 
@@ -156,6 +158,45 @@ fn warmed_grad_batch_performs_zero_allocations() {
     assert_eq!(
         count, 0,
         "steady-state pooled grad_batch_threaded_into made {count} heap allocations (want 0)"
+    );
+
+    // The full trainer step honors the contract too: staging this image's
+    // shard of the batch goes through the trainer's reused stage buffers
+    // (`assign_cols_range`), the gradient accumulates through the warmed
+    // workspace, and the SGD update is in place — so a warmed steady-state
+    // `train_step` (full batch + ragged tail) is allocation-free end to
+    // end.
+    let comm = NullComm;
+    let opts = TrainerOptions {
+        dims: vec![784, 30, 10],
+        activation: Activation::Sigmoid,
+        layers: vec![],
+        image: None,
+        eta: 3.0,
+        batch_size: 32,
+        epochs: 1,
+        seed: 1,
+        batch_seed: 2,
+        strategy: Default::default(),
+        optimizer: Default::default(),
+        intra_threads: 1,
+    };
+    let mut trainer = Trainer::new(&comm, opts, None).unwrap();
+    for _ in 0..2 {
+        trainer.train_step(&x, &y).unwrap();
+        trainer.train_step(&x_tail, &y_tail).unwrap();
+    }
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for _ in 0..6 {
+        trainer.train_step(&x, &y).unwrap();
+        trainer.train_step(&x_tail, &y_tail).unwrap();
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        count, 0,
+        "steady-state Trainer::train_step made {count} heap allocations (want 0)"
     );
 
     // Sanity: the warmed paths still compute the right thing.
