@@ -188,6 +188,35 @@ fn main() {
         throughput_unit: "samples_per_s",
     });
 
+    // Same warmed-workspace path with span tracing ENABLED: the
+    // observability overhead row. The CI gate holds this within 2% of
+    // `blocked_workspace` (tracing-off), pinning the "couple of atomic
+    // ops per span" recording cost.
+    neural_rs::metrics::trace::enable();
+    g.zero_out();
+    net.grad_batch_into(&x, &y, &mut ws, &mut g); // warm the span ring/TLS
+    let s = time_reps(mlp_reps, || {
+        g.zero_out();
+        net.grad_batch_into(&x, &y, &mut ws, &mut g);
+        std::hint::black_box(&g);
+    });
+    neural_rs::metrics::trace::disable();
+    neural_rs::metrics::trace::clear();
+    println!(
+        "grad  tracing:  {:9.1} µs/call ({:9.0} samples/s, {:+.1}% vs blocked)",
+        s.mean * 1e6,
+        b / s.mean,
+        (s.mean / blocked_grad - 1.0) * 100.0
+    );
+    rows.push(Row {
+        section: "mlp_784_30_10_b32",
+        op: "grad_batch",
+        variant: "blocked_tracing_on".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
     // Same warmed-workspace path pinned to the portable scalar tile:
     // the SIMD-vs-scalar delta for the gradient step.
     simd::force(Some(KernelKind::Scalar));

@@ -37,6 +37,7 @@
 //! [`CommError::is_timeout`]: super::CommError::is_timeout
 
 use super::{CommError, CommResult, Communicator};
+use crate::metrics::trace;
 use crate::tensor::Scalar;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -176,7 +177,7 @@ fn read_collective(s: &mut TcpStream, this_image: usize, op: Opcode) -> Result<F
         match frame.op {
             Opcode::Shrunk => {
                 let alive = frame.payload.first().copied().unwrap_or(0.0);
-                eprintln!(
+                crate::log_warn!(
                     "[image {this_image}] image {} lost; team shrunk to {alive} image(s)",
                     frame.image
                 );
@@ -278,6 +279,7 @@ impl TcpTopology {
                 role: Role::Leader { conns: Vec::new() },
                 elastic: opts.elastic,
                 first_lost: AtomicUsize::new(0),
+                op_timeout: opts.op_timeout,
             });
         }
         let listener = TcpListener::bind(addr)?;
@@ -315,6 +317,7 @@ impl TcpTopology {
             role: Role::Leader { conns },
             elastic: opts.elastic,
             first_lost: AtomicUsize::new(0),
+            op_timeout: opts.op_timeout,
         })
     }
 
@@ -341,6 +344,10 @@ impl TcpTopology {
         assert!((2..=num_images).contains(&image), "worker image must be in 2..=num_images");
         let deadline = std::time::Instant::now() + opts.setup_timeout;
         let mut attempt: u32 = 0;
+        // Setup span carrying the retry count — the "retries" leg of the
+        // per-collective telemetry (collectives themselves never retry;
+        // only the hello handshake does).
+        let mut hello_span = trace::span("hello", "setup");
         let stream = loop {
             attempt += 1;
             match Self::try_hello(addr, image, deadline, &opts) {
@@ -349,7 +356,7 @@ impl TcpTopology {
                     if attempt < opts.hello_attempts.max(1)
                         && std::time::Instant::now() < deadline =>
                 {
-                    eprintln!(
+                    crate::log_warn!(
                         "[image {image}] hello attempt {attempt} failed ({e}); retrying"
                     );
                     std::thread::sleep(opts.hello_backoff * attempt);
@@ -357,6 +364,8 @@ impl TcpTopology {
                 Err(e) => return Err(e),
             }
         };
+        hello_span.set_args(attempt as u64, (attempt - 1) as u64);
+        drop(hello_span);
         arm_deadlines(&stream, opts.op_timeout)?;
         Ok(TcpComm {
             image,
@@ -364,6 +373,7 @@ impl TcpTopology {
             role: Role::Worker { conn: Mutex::new(stream) },
             elastic: opts.elastic,
             first_lost: AtomicUsize::new(0),
+            op_timeout: opts.op_timeout,
         })
     }
 
@@ -405,6 +415,9 @@ pub struct TcpComm {
     /// Subsequent collectives fail fast instead of touching desynced
     /// streams.
     first_lost: AtomicUsize,
+    /// Copy of [`TcpOptions::op_timeout`], kept so collective trace spans
+    /// can report how much deadline margin each op finished with.
+    op_timeout: Duration,
 }
 
 impl TcpComm {
@@ -432,7 +445,7 @@ impl TcpComm {
             let _ = pc.stream.shutdown(std::net::Shutdown::Both);
             crate::metrics::record_peer_lost();
             let alive = 1 + conns.iter().filter(|c| c.lock().unwrap().alive).count();
-            eprintln!(
+            crate::log_warn!(
                 "[image 1] image {} lost; continuing with {alive} of {} image(s)",
                 slot + 2,
                 self.n
@@ -716,6 +729,28 @@ impl TcpComm {
         }
         Ok(())
     }
+
+    /// Run one collective under a `"comm"` trace span. `args[0]` is the
+    /// wire payload in bytes (f64 elements × 8), `args[1]` the deadline
+    /// margin in µs — how much of [`TcpOptions::op_timeout`] was left when
+    /// the op finished (0 when no deadline is armed). One branch when
+    /// tracing is disabled.
+    fn traced(
+        &self,
+        name: &'static str,
+        bytes: usize,
+        f: impl FnOnce() -> Result<()>,
+    ) -> Result<()> {
+        if !trace::is_enabled() {
+            return f();
+        }
+        let started = std::time::Instant::now();
+        let mut span = trace::span_args(name, "comm", bytes as u64, 0);
+        let r = f();
+        let margin = self.op_timeout.saturating_sub(started.elapsed());
+        span.set_args(bytes as u64, margin.as_micros() as u64);
+        r
+    }
 }
 
 impl Communicator for TcpComm {
@@ -728,23 +763,27 @@ impl Communicator for TcpComm {
     }
 
     fn barrier(&self) -> CommResult<()> {
-        self.barrier_fallible()
+        self.traced("barrier", 0, || self.barrier_fallible())
     }
 
     fn co_sum<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
-        self.reduce(buf, Opcode::Sum)
+        let bytes = buf.len() * 8;
+        self.traced("co_sum", bytes, || self.reduce(buf, Opcode::Sum))
     }
 
     fn co_broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> CommResult<()> {
-        self.broadcast(buf, source_image)
+        let bytes = buf.len() * 8;
+        self.traced("broadcast", bytes, || self.broadcast(buf, source_image))
     }
 
     fn co_max<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
-        self.reduce(buf, Opcode::Max)
+        let bytes = buf.len() * 8;
+        self.traced("co_max", bytes, || self.reduce(buf, Opcode::Max))
     }
 
     fn co_min<T: Scalar>(&self, buf: &mut [T]) -> CommResult<()> {
-        self.reduce(buf, Opcode::Min)
+        let bytes = buf.len() * 8;
+        self.traced("co_min", bytes, || self.reduce(buf, Opcode::Min))
     }
 }
 

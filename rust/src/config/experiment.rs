@@ -78,6 +78,22 @@ impl Default for ServeConfig {
     }
 }
 
+/// `[telemetry]` — opt-in observability for training runs (`crate::metrics`).
+/// Every knob defaults to off/empty: tracing and the metrics endpoint cost
+/// nothing unless asked for.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryConfig {
+    /// Write a Chrome trace-event JSON (Perfetto-loadable) of the run to
+    /// this path. Empty = tracing disabled.
+    pub trace_out: PathBuf,
+    /// Serve live training metrics (Prometheus text) on this address
+    /// during `train`, e.g. `"127.0.0.1:9091"`. Empty = no endpoint.
+    pub metrics_addr: String,
+    /// Append one structured JSON line per epoch to this file. Empty =
+    /// no epoch log.
+    pub epoch_log: PathBuf,
+}
+
 /// Everything a training run needs. Mirrors the paper's Listing 12 knobs
 /// plus the parallel/runtime choices.
 #[derive(Debug, Clone)]
@@ -129,6 +145,8 @@ pub struct ExperimentConfig {
     pub artifact_config: String,
     // [serve]
     pub serve: ServeConfig,
+    // [telemetry]
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -167,6 +185,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             artifact_config: "mnist".into(),
             serve: ServeConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -513,6 +532,20 @@ impl ExperimentConfig {
             cfg.serve.reload_poll_ms = get_u64(t, "reload_poll_ms", cfg.serve.reload_poll_ms)?;
             cfg.serve.deadline_us = get_u64(t, "deadline_us", cfg.serve.deadline_us)?;
         }
+        if let Some(t) = doc.get("telemetry") {
+            cfg.telemetry.trace_out = PathBuf::from(get_str(
+                t,
+                "trace_out",
+                &cfg.telemetry.trace_out.to_string_lossy(),
+            )?);
+            cfg.telemetry.metrics_addr =
+                get_str(t, "metrics_addr", &cfg.telemetry.metrics_addr)?.to_string();
+            cfg.telemetry.epoch_log = PathBuf::from(get_str(
+                t,
+                "epoch_log",
+                &cfg.telemetry.epoch_log.to_string_lossy(),
+            )?);
+        }
         if let Some(t) = doc.get("runtime") {
             let engine = get_str(t, "engine", cfg.engine.name())?;
             cfg.engine = EngineKind::parse(engine)
@@ -857,6 +890,27 @@ mod tests {
             let msg = err.to_string();
             assert!(msg.contains(needle), "'{msg}' should mention '{needle}' for:\n{text}");
         }
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_defaults_off() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [telemetry]
+            trace_out = "run.trace.json"
+            metrics_addr = "127.0.0.1:9091"
+            epoch_log = "epochs.jsonl"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.telemetry.trace_out, PathBuf::from("run.trace.json"));
+        assert_eq!(c.telemetry.metrics_addr, "127.0.0.1:9091");
+        assert_eq!(c.telemetry.epoch_log, PathBuf::from("epochs.jsonl"));
+
+        let d = ExperimentConfig::from_toml("[training]\nepochs = 1\n").unwrap();
+        assert!(d.telemetry.trace_out.as_os_str().is_empty(), "tracing is opt-in");
+        assert!(d.telemetry.metrics_addr.is_empty(), "metrics endpoint is opt-in");
+        assert!(d.telemetry.epoch_log.as_os_str().is_empty(), "epoch log is opt-in");
     }
 
     #[test]

@@ -5,5 +5,5 @@
 mod experiment;
 mod toml;
 
-pub use experiment::{CommKind, ExperimentConfig, ServeConfig};
+pub use experiment::{CommKind, ExperimentConfig, ServeConfig, TelemetryConfig};
 pub use toml::{TomlError, TomlValue};

@@ -6,7 +6,7 @@
 
 use super::trainer::{EngineKind, EpochStats, Trainer, TrainerOptions};
 use crate::collectives::{Communicator, ReduceAlgo, Team};
-use crate::data::Dataset;
+use crate::data::{label_digits, Dataset};
 use crate::metrics::Stopwatch;
 use crate::nn::Network;
 use crate::runtime::{Engine, Manifest, PjrtScalar};
@@ -92,6 +92,10 @@ pub fn train_parallel<T: PjrtScalar>(
 
                     let mut epoch_accuracy = Vec::new();
                     let mut stats = EpochStats::default();
+                    let metrics = crate::metrics::train::global();
+                    if comm.this_image() == 1 {
+                        metrics.begin_run(spec.opts.epochs);
+                    }
                     // Synchronize before timing (paper: training-only).
                     comm.barrier().expect(infallible);
                     let mut train_s = 0.0;
@@ -99,14 +103,31 @@ pub fn train_parallel<T: PjrtScalar>(
                         let sw = Stopwatch::start();
                         let e = trainer.train_epoch(train).expect(infallible);
                         comm.barrier().expect(infallible);
-                        train_s += sw.elapsed_s();
+                        let epoch_s = sw.elapsed_s();
+                        train_s += epoch_s;
                         stats.grad_s += e.grad_s;
                         stats.comm_s += e.comm_s;
                         stats.update_s += e.update_s;
                         stats.batches += e.batches;
                         stats.samples += e.samples;
-                        if spec.eval_each_epoch || epoch + 1 == spec.opts.epochs {
+                        let evaluated = spec.eval_each_epoch || epoch + 1 == spec.opts.epochs;
+                        if evaluated {
                             epoch_accuracy.push(trainer.accuracy(test).expect(infallible));
+                        }
+                        if comm.this_image() == 1 {
+                            // Loss evaluation is opt-in (an extra forward
+                            // pass over the test set): the /metrics server
+                            // and the epoch log both request it.
+                            let loss = if evaluated && metrics.wants_loss() && !test.is_empty() {
+                                let y = label_digits::<T>(&test.labels);
+                                Some(trainer.net.loss_batch(&test.images, &y))
+                            } else {
+                                None
+                            };
+                            let global_samples = (e.batches * spec.opts.batch_size) as f64;
+                            let examples_per_s = global_samples / epoch_s.max(1e-9);
+                            let acc = epoch_accuracy.last().copied().unwrap_or(initial_accuracy);
+                            metrics.record_epoch(epoch + 1, acc, loss, examples_per_s);
                         }
                     }
                     if comm.this_image() == 1 {

@@ -321,6 +321,15 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         // so the eta/global_batch update below keeps its magnitude.
         let sw = crate::metrics::Stopwatch::start();
         if !self.comm.is_serial() {
+            // Trainer-level comm span: covers flatten + collective +
+            // unflatten on every backend (LocalComm included; the TCP
+            // backend additionally records its own transport span).
+            let _comm = crate::metrics::trace::span_args(
+                "grad_allreduce",
+                "comm",
+                (self.flat.len() * 8) as u64,
+                0,
+            );
             self.grads.flatten_into(&mut self.flat);
             self.comm.co_sum(&mut self.flat)?;
             self.grads.unflatten_from(&self.flat);
@@ -332,6 +341,12 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         self.optimizer.step(&mut self.net, &self.grads, eta_eff);
         stats.update_s = sw.elapsed_s();
         stats.batches = 1;
+        crate::metrics::train::global().record_step(
+            stats.samples,
+            stats.grad_s,
+            stats.comm_s,
+            stats.update_s,
+        );
         Ok(stats)
     }
 

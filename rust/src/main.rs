@@ -32,7 +32,7 @@ const VALUE_FLAGS: &[&str] = &[
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
     "runs", "max-images", "out", "n", "intra-threads", "addr", "model", "max-batch",
     "max-wait-us", "queue-depth", "workers", "infer-threads", "deadline-us", "checkpoint",
-    "checkpoint-every",
+    "checkpoint-every", "trace-out", "metrics-addr", "epoch-log",
 ];
 const SWITCH_FLAGS: &[&str] =
     &["quiet", "eval-each-epoch", "help", "no-hot-reload", "resume", "elastic"];
@@ -88,7 +88,17 @@ SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
   --no-hot-reload        do not watch the checkpoint file for changes
 
   Endpoints: POST /v1/predict {\"input\": [f32...], \"model\": \"default\"}
-             GET /v1/models | GET /healthz | GET /metrics | POST /admin/shutdown
+             GET /v1/models | GET /v1/status | GET /healthz | GET /metrics
+             | POST /admin/shutdown
+
+TELEMETRY FLAGS (train; or a [telemetry] TOML section)
+  --trace-out FILE       write a Chrome/Perfetto trace of the run: layer
+                         fwd/bwd, GEMM-phase, pool-worker, collective spans
+  --metrics-addr A:P     live training metrics (Prometheus text) on
+                         GET http://A:P/metrics while training runs
+  --epoch-log FILE       append one structured JSON line per epoch
+  PALLAS_LOG=debug|info|warn    stderr log level (default info)
+  PALLAS_TRACE_BUF=N     per-thread span ring capacity (default 16384)
 
 MODEL CONFIG (TOML)
   The flat form ([network] dims + activation) builds a homogeneous dense
@@ -128,8 +138,8 @@ fn main() {
     }
     // The selected-kernel line: which GEMM/epilogue dispatch this process
     // runs with (see the README perf section; PALLAS_FORCE_SCALAR=1 pins
-    // the portable kernel).
-    eprintln!("# pallas {}", neural_rs::tensor::simd::describe());
+    // the portable kernel). Suppress with PALLAS_LOG=warn.
+    neural_rs::log_info!("{}", neural_rs::tensor::simd::describe());
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
@@ -223,8 +233,56 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
         cfg.checkpoint = Some(PathBuf::from(c));
     }
     cfg.checkpoint_every = args.get_parsed("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(t) = args.get("trace-out") {
+        cfg.telemetry.trace_out = PathBuf::from(t);
+    }
+    if let Some(a) = args.get("metrics-addr") {
+        cfg.telemetry.metrics_addr = a.to_string();
+    }
+    if let Some(l) = args.get("epoch-log") {
+        cfg.telemetry.epoch_log = PathBuf::from(l);
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Live telemetry attached to one training run ([telemetry] section /
+/// --trace-out / --metrics-addr / --epoch-log). All knobs are opt-in;
+/// with none set this is a no-op.
+struct Telemetry {
+    trace_out: Option<PathBuf>,
+    metrics: Option<neural_rs::serve::TrainMetricsServer>,
+}
+
+fn telemetry_start(cfg: &ExperimentConfig) -> Result<Telemetry, AnyError> {
+    let t = &cfg.telemetry;
+    let trace_out = (!t.trace_out.as_os_str().is_empty()).then(|| t.trace_out.clone());
+    if trace_out.is_some() {
+        neural_rs::metrics::trace::enable();
+    }
+    if !t.epoch_log.as_os_str().is_empty() {
+        neural_rs::metrics::train::global().set_epoch_log(&t.epoch_log)?;
+        neural_rs::log_info!("epoch log appending to {}", t.epoch_log.display());
+    }
+    let metrics = if t.metrics_addr.is_empty() {
+        None
+    } else {
+        Some(neural_rs::serve::TrainMetricsServer::start(&t.metrics_addr)?)
+    };
+    Ok(Telemetry { trace_out, metrics })
+}
+
+/// Stop recording, export the trace, and shut the metrics endpoint down.
+fn telemetry_finish(mut tel: Telemetry) -> Result<(), AnyError> {
+    if let Some(path) = tel.trace_out.take() {
+        neural_rs::metrics::trace::disable();
+        let n = neural_rs::metrics::trace::export_chrome_json(&path)?;
+        neural_rs::log_info!("wrote {n} span(s) to {} (load in Perfetto)", path.display());
+    }
+    if let Some(mut m) = tel.metrics.take() {
+        m.shutdown();
+    }
+    Ok(())
 }
 
 fn load_data(cfg: &ExperimentConfig) -> (Dataset<f32>, Dataset<f32>) {
@@ -241,6 +299,7 @@ fn cmd_train(args: &Args) -> Result<(), AnyError> {
 
 fn cmd_train_local(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
     let quiet = args.has("quiet");
+    let tel = telemetry_start(cfg)?;
     let (train, test) = load_data(cfg);
     if !quiet && !cfg.layers.is_empty() {
         let kinds: Vec<&str> = cfg.layers.iter().map(|s| s.kind()).collect();
@@ -292,11 +351,16 @@ fn cmd_train_local(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> 
         report.net.save(path)?;
         println!("# saved network to {path}");
     }
+    telemetry_finish(tel)?;
     Ok(())
 }
 
 /// Distributed (one process per image) training over TCP.
 fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
+    // Per-process telemetry, armed before topology setup so the worker's
+    // hello/setup span is captured too. In tcp mode each image is its own
+    // process: give each invocation its own --trace-out / --metrics-addr.
+    let tel = telemetry_start(cfg)?;
     let addr: SocketAddr = args.get_or("tcp-addr", "127.0.0.1:47000").parse()?;
     let role = args.get_or("tcp-role", "leader");
     let opts = TcpOptions::with_timeout(Duration::from_secs(120)).elastic(cfg.elastic);
@@ -314,7 +378,9 @@ fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
     if comm.is_elastic() && comm.this_image() == 1 {
         println!("# elastic team: continuing on worker death with rescaled gradients");
     }
-    run_one_image(&comm, cfg, args)
+    let result = run_one_image(&comm, cfg, args);
+    telemetry_finish(tel)?;
+    result
 }
 
 /// The per-image body shared by TCP leader and workers.
@@ -349,12 +415,25 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
         println!("Initial accuracy: {:5.2} %", initial * 100.0);
     }
     let every = cfg.checkpoint_every.max(1);
+    let metrics = neural_rs::metrics::train::global();
+    if is_leader {
+        metrics.begin_run(cfg.epochs);
+    }
     let sw = Stopwatch::start();
     for epoch in start_epoch + 1..=cfg.epochs {
-        trainer.train_epoch(&train)?;
+        let esw = Stopwatch::start();
+        let e = trainer.train_epoch(&train)?;
+        let epoch_s = esw.elapsed_s();
         let acc = trainer.accuracy(&test)?;
         if is_leader {
             println!("Epoch {epoch:2} done, Accuracy: {:5.2} %", acc * 100.0);
+            let loss = if metrics.wants_loss() && !test.is_empty() {
+                Some(trainer.net.loss_batch(&test.images, &test.one_hot()))
+            } else {
+                None
+            };
+            let global_samples = (e.batches * cfg.batch_size) as f64;
+            metrics.record_epoch(epoch, acc, loss, global_samples / epoch_s.max(1e-9));
         }
         // Image 1 publishes the recovery checkpoint (write-then-rename;
         // all replicas are identical, so one writer suffices).

@@ -1,10 +1,15 @@
 //! Measurement utilities for the benchmark harness: wall timers, repeated
 //! runs with mean ± std (the paper reports 5-run statistics), RSS memory
-//! probing (Table 1's memory column), and markdown table emission.
+//! probing (Table 1's memory column), and markdown table emission — plus
+//! the process-wide observability layer: the span tracer ([`trace`]) and
+//! the training telemetry registry ([`train`]).
 
 pub mod serving;
+pub mod trace;
+pub mod train;
 
 pub use serving::{peer_lost_total, record_peer_lost, LatencyHistogram, ServeMetrics};
+pub use train::TrainMetrics;
 
 use crate::tensor::Summary;
 use std::time::Instant;

@@ -95,6 +95,21 @@ impl LatencyHistogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
+    /// Number of buckets a [`Self::bucket_counts`] snapshot carries.
+    pub const BUCKETS: usize = LATENCY_BUCKETS;
+
+    /// Snapshot of the per-bucket counts. Bucket `i`'s nominal upper bound
+    /// is `2^i` µs (the same convention [`Self::percentile_us`] reports);
+    /// the last bucket additionally absorbs everything above `2^38` µs,
+    /// so Prometheus export maps it to `+Inf`.
+    pub fn bucket_counts(&self) -> [u64; LATENCY_BUCKETS] {
+        let mut out = [0u64; LATENCY_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
     /// Approximate percentile (`p` in [0, 1]) in microseconds: the upper
     /// bound of the bucket holding the p-th sample. 0.0 when empty.
     pub fn percentile_us(&self, p: f64) -> f64 {
@@ -273,6 +288,29 @@ impl ServeMetrics {
         );
         line("neural_rs_serve_latency_us_mean", self.latency.mean_us());
         line("neural_rs_serve_latency_us_max", self.latency.max_us() as f64);
+        // Proper Prometheus histogram series (cumulative `le` buckets +
+        // `_sum`/`_count`), alongside the precomputed quantile gauges
+        // above, which stay for dashboard compatibility. Bucket `i`'s
+        // upper bound is 2^i µs (percentile_us convention); the final
+        // overflow bucket maps to `+Inf`.
+        let counts = self.latency.bucket_counts();
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate().take(LatencyHistogram::BUCKETS - 1) {
+            cum += c;
+            line(
+                &format!("neural_rs_serve_latency_us_bucket{{le=\"{}\"}}", 1u64 << i),
+                cum as f64,
+            );
+        }
+        line(
+            "neural_rs_serve_latency_us_bucket{le=\"+Inf\"}",
+            self.latency.count() as f64,
+        );
+        line(
+            "neural_rs_serve_latency_us_sum",
+            self.latency.sum_us.load(Ordering::Relaxed) as f64,
+        );
+        line("neural_rs_serve_latency_us_count", self.latency.count() as f64);
         line("neural_rs_serve_uptime_seconds", self.uptime_s());
         line("neural_rs_serve_throughput_rps", self.throughput_rps());
         out
@@ -324,6 +362,55 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.percentile_us(0.1) >= 1.0);
         assert!(h.percentile_us(1.0) > 0.0);
+    }
+
+    #[test]
+    fn bucket_edges_zero_max_and_overflow() {
+        let h = LatencyHistogram::new();
+        h.record_us(0); // clamps into bucket 1 ([1, 2) µs)
+        h.record_us(u64::MAX); // clamps into the overflow bucket
+        h.record_us(1u64 << 50); // far past 2^39 µs: overflow bucket too
+        let counts = h.bucket_counts();
+        assert_eq!(counts[1], 1, "0 µs must clamp to the 1 µs bucket");
+        assert_eq!(
+            counts[LatencyHistogram::BUCKETS - 1],
+            2,
+            "u64::MAX and 2^50 µs must share the overflow bin"
+        );
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        // Cumulative export: +Inf equals _count, finite cum is monotone.
+        let m = ServeMetrics::new();
+        m.latency.record_us(0);
+        m.latency.record_us(u64::MAX);
+        let text = m.render_prometheus();
+        assert!(
+            text.contains("neural_rs_serve_latency_us_bucket{le=\"2\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("neural_rs_serve_latency_us_bucket{le=\"+Inf\"} 2"),
+            "{text}"
+        );
+        assert!(text.contains("neural_rs_serve_latency_us_count 2"), "{text}");
+        let mut prev = 0.0f64;
+        for l in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let v: f64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "cumulative buckets must be monotone: {l}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn prometheus_histogram_series_render() {
+        let m = ServeMetrics::new();
+        for us in [10u64, 120, 120, 5000] {
+            m.latency.record_us(us);
+        }
+        let text = m.render_prometheus();
+        assert!(text.contains("neural_rs_serve_latency_us_sum 5250"), "{text}");
+        assert!(text.contains("neural_rs_serve_latency_us_count 4"), "{text}");
+        // The quantile gauges must survive for dashboard compatibility.
+        assert!(text.contains("neural_rs_serve_latency_us{quantile=\"0.50\"}"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,453 @@
+//! Process-wide tracing: a lock-free, per-thread span recorder with
+//! Chrome trace-event (Perfetto) export.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled tracing must cost a couple of branches.** Every
+//!    [`span`]/[`span_args`] call starts with one relaxed atomic load; when
+//!    tracing is off the guard is inert and its `Drop` is a single branch.
+//!    The hot paths this module instruments (GEMM blocks, layer ops, pool
+//!    dispatch, collectives) run with tracing off in production benches,
+//!    and the `BENCH_dense_ops` gate holds the enabled-but-idle overhead
+//!    under 2%.
+//! 2. **Enabled tracing must honor the zero-alloc steady-state contract.**
+//!    Each recording thread owns a preallocated ring buffer
+//!    ([`ThreadBuf`], capacity [`DEFAULT_CAPACITY`] spans, overridable via
+//!    `PALLAS_TRACE_BUF`). The buffer (plus its track label) is allocated
+//!    once, at the thread's *first* span — warm-up, not steady state —
+//!    and recording afterwards is an indexed store plus a release bump of
+//!    the write cursor. No locks, no allocation, no cross-thread traffic.
+//! 3. **Spans survive their thread.** Training images and pool workers
+//!    exit before the coordinator exports the trace, so buffers are
+//!    registered globally and intentionally leaked (`Box::leak`) — bounded
+//!    by threads-that-ever-traced × capacity × `size_of::<Span>()`.
+//!
+//! A full ring wraps: the newest spans win and the overwritten count is
+//! reported in the exported thread metadata (`dropped_spans`). Export
+//! ([`chrome_json`] / [`export_chrome_json`]) walks every thread buffer,
+//! rebuilds the nesting from the RAII start/end times, and emits balanced
+//! `B`/`E` duration events — one `tid` track per recording thread (pool
+//! workers, training images, serve workers), loadable directly in Perfetto
+//! or `chrome://tracing`. Export is meant to run at quiesce (end of
+//! training); concurrent recording cannot corrupt the exporter, but spans
+//! recorded mid-export may be torn and are dropped by the nesting rebuild.
+//!
+//! Instrumentation sites use the [`trace_scope!`] macro or an explicit
+//! [`SpanGuard`] when the span carries measured args (bytes moved,
+//! deadline margin). Span taxonomy — names, categories, and per-category
+//! arg keys — is documented in the README "Observability" section.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity in spans (~48 B each) unless `PALLAS_TRACE_BUF`
+/// overrides it.
+pub const DEFAULT_CAPACITY: usize = 16384;
+
+/// One closed span, as stored in a thread's ring buffer. `name` and `cat`
+/// are `&'static str` so recording never allocates or copies strings.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Span {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Microseconds since [`enable`] (the process trace epoch).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Two free-form integer args; the exporter names them per category
+    /// (e.g. `bytes`/`margin_us` for `comm` spans).
+    pub args: [u64; 2],
+}
+
+/// Global switch. Relaxed loads: a span racing enable/disable is recorded
+/// or skipped, never torn.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Trace epoch — all timestamps are µs since this instant.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Every thread buffer ever created (leaked, so spans outlive their
+/// thread). The mutex guards registration and export only — never the
+/// recording path.
+static REGISTRY: Mutex<Vec<&'static ThreadBuf>> = Mutex::new(Vec::new());
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Turn recording on (idempotent). Pins the trace epoch on first call.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn recording off (idempotent). Already-recorded spans stay exportable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// One relaxed atomic load — the whole cost of a span call when disabled.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Preallocated per-thread span ring. Written only by its owner thread
+/// (through the thread-local handle); read by the exporter at quiesce.
+struct ThreadBuf {
+    /// Track label (thread name at first span, or `thread-<tid>`).
+    label: String,
+    /// Stable track id (registration order, 1-based).
+    tid: u64,
+    spans: UnsafeCell<Box<[Span]>>,
+    /// Total spans ever recorded; write cursor is `count % capacity`.
+    /// Release store pairs with the exporter's acquire load.
+    count: AtomicUsize,
+}
+
+// SAFETY: `spans` is written only by the owning thread; the exporter reads
+// it cross-thread at quiesce, synchronized through `count`'s
+// release/acquire pair. A thread recording *during* export can tear at
+// most the in-flight slot, which the exporter's nesting rebuild discards.
+unsafe impl Sync for ThreadBuf {}
+
+impl ThreadBuf {
+    #[inline]
+    fn record(&self, s: Span) {
+        // SAFETY: owner-thread-only mutation; see the Sync rationale.
+        let spans = unsafe { &mut *self.spans.get() };
+        let n = self.count.load(Ordering::Relaxed);
+        spans[n % spans.len()] = s;
+        self.count.store(n + 1, Ordering::Release);
+    }
+
+    /// Chronological snapshot plus how many older spans the ring dropped.
+    fn snapshot(&self) -> (Vec<Span>, usize) {
+        let n = self.count.load(Ordering::Acquire);
+        // SAFETY: slots below `n` (mod cap) were published by the release
+        // store above.
+        let spans = unsafe { &*self.spans.get() };
+        let cap = spans.len();
+        if n <= cap {
+            (spans[..n].to_vec(), 0)
+        } else {
+            let head = n % cap;
+            let mut out = Vec::with_capacity(cap);
+            out.extend_from_slice(&spans[head..]);
+            out.extend_from_slice(&spans[..head]);
+            (out, n - cap)
+        }
+    }
+}
+
+fn ring_capacity() -> usize {
+    std::env::var("PALLAS_TRACE_BUF")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(DEFAULT_CAPACITY)
+}
+
+thread_local! {
+    static TLS_BUF: OnceCell<&'static ThreadBuf> = const { OnceCell::new() };
+}
+
+/// One-off per thread: allocate the ring, register it, leak it.
+fn register_thread() -> &'static ThreadBuf {
+    let mut reg = REGISTRY.lock().unwrap();
+    let tid = reg.len() as u64 + 1;
+    let label = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let cap = ring_capacity();
+    let buf: &'static ThreadBuf = Box::leak(Box::new(ThreadBuf {
+        label,
+        tid,
+        spans: UnsafeCell::new(vec![Span::default(); cap].into_boxed_slice()),
+        count: AtomicUsize::new(0),
+    }));
+    reg.push(buf);
+    buf
+}
+
+#[inline]
+fn with_buf(f: impl FnOnce(&'static ThreadBuf)) {
+    TLS_BUF.with(|cell| f(cell.get_or_init(register_thread)));
+}
+
+/// RAII span: records `[construction, drop)` into the calling thread's
+/// ring when tracing is enabled at *both* ends.
+#[derive(Debug)]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start_us: u64,
+    args: [u64; 2],
+    live: bool,
+}
+
+impl SpanGuard {
+    /// Attach measured args (named per category at export, e.g.
+    /// `bytes`/`margin_us` for `comm`). Callable any time before drop.
+    #[inline]
+    pub fn set_args(&mut self, a0: u64, a1: u64) {
+        self.args = [a0, a1];
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if !self.live || !is_enabled() {
+            return;
+        }
+        let end = now_us();
+        let span = Span {
+            name: self.name,
+            cat: self.cat,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            args: self.args,
+        };
+        with_buf(|b| b.record(span));
+    }
+}
+
+/// Open a span. When tracing is disabled this is one atomic load and an
+/// inert guard.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    span_args(name, cat, 0, 0)
+}
+
+/// Open a span carrying two integer args.
+#[inline]
+pub fn span_args(name: &'static str, cat: &'static str, a0: u64, a1: u64) -> SpanGuard {
+    let live = is_enabled();
+    SpanGuard {
+        name,
+        cat,
+        start_us: if live { now_us() } else { 0 },
+        args: [a0, a1],
+        live,
+    }
+}
+
+/// RAII span over the rest of the enclosing scope:
+/// `trace_scope!("co_sum", "comm")` or
+/// `trace_scope!("dense", "fwd", rows as u64, batch as u64)`.
+#[macro_export]
+macro_rules! trace_scope {
+    ($name:expr, $cat:expr) => {
+        let _trace_scope_guard = $crate::metrics::trace::span($name, $cat);
+    };
+    ($name:expr, $cat:expr, $a0:expr, $a1:expr) => {
+        let _trace_scope_guard = $crate::metrics::trace::span_args($name, $cat, $a0, $a1);
+    };
+}
+
+/// Reset every ring's cursor (benches/tests; callers must be quiesced).
+pub fn clear() {
+    let reg = REGISTRY.lock().unwrap();
+    for buf in reg.iter() {
+        buf.count.store(0, Ordering::SeqCst);
+    }
+}
+
+/// Threads that have recorded at least one span since process start.
+pub fn thread_count() -> usize {
+    REGISTRY.lock().unwrap().len()
+}
+
+/// Total spans currently held across all rings (post-wrap survivors).
+pub fn span_total() -> usize {
+    let reg = REGISTRY.lock().unwrap();
+    reg.iter()
+        .map(|b| {
+            let n = b.count.load(Ordering::Acquire);
+            // SAFETY: len() of the boxed slice is immutable after creation.
+            n.min(unsafe { &*b.spans.get() }.len())
+        })
+        .sum()
+}
+
+/// Exporter arg-key table — gives the two raw span args stable,
+/// Perfetto-visible names per category (the README span taxonomy).
+fn arg_keys(cat: &str) -> [&'static str; 2] {
+    match cat {
+        "fwd" | "bwd" => ["rows", "batch"],
+        "gemm" => ["rows", "cols"],
+        "pool" => ["tasks", "worker"],
+        "comm" => ["bytes", "margin_us"],
+        "serve" => ["batch", "queued"],
+        "setup" => ["attempts", "retries"],
+        "train" => ["epoch", "step"],
+        _ => ["a0", "a1"],
+    }
+}
+
+fn escape_label(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' | '\\' => vec!['\\', c],
+            c if (c as u32) < 0x20 => " ".chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Render every recorded span as Chrome trace-event JSON (object form,
+/// `{"traceEvents": [...]}`), one `tid` track per recording thread, with
+/// balanced `B`/`E` duration events in non-decreasing `ts` order per
+/// track. Loadable in Perfetto / `chrome://tracing`; validated by
+/// `scripts/check_trace.py`.
+pub fn chrome_json() -> String {
+    let snapshots: Vec<(u64, String, Vec<Span>, usize)> = {
+        let reg = REGISTRY.lock().unwrap();
+        reg.iter()
+            .map(|b| {
+                let (spans, dropped) = b.snapshot();
+                (b.tid, b.label.clone(), spans, dropped)
+            })
+            .collect()
+    };
+    let mut out = String::with_capacity(64 * 1024);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    out.push_str(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"neural-rs\"}}",
+    );
+    for (tid, label, spans, dropped) in &snapshots {
+        out.push_str(&format!(
+            ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{}\",\"dropped_spans\":{dropped}}}}}",
+            escape_label(label)
+        ));
+        emit_track(&mut out, *tid, spans);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Emit one thread's spans as nested `B`/`E` pairs. Spans were recorded at
+/// *close* time, so the ring holds children before parents; re-sorting by
+/// (start asc, dur desc) plus a stack rebuilds the RAII nesting. Spans
+/// that overlap without nesting (torn mid-export records) are dropped by
+/// closing the open parent first — balance is preserved by construction.
+fn emit_track(out: &mut String, tid: u64, spans: &[Span]) {
+    let mut ordered: Vec<&Span> = spans.iter().collect();
+    ordered.sort_by(|a, b| a.start_us.cmp(&b.start_us).then(b.dur_us.cmp(&a.dur_us)));
+    let mut stack: Vec<&Span> = Vec::new();
+    let emit_b = |out: &mut String, s: &Span| {
+        let keys = arg_keys(s.cat);
+        out.push_str(&format!(
+            ",\n{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"B\",\"ts\":{},\
+             \"pid\":1,\"tid\":{tid},\"args\":{{\"{}\":{},\"{}\":{}}}}}",
+            s.name, s.cat, s.start_us, keys[0], s.args[0], keys[1], s.args[1]
+        ));
+    };
+    let emit_e = |out: &mut String, s: &Span| {
+        out.push_str(&format!(
+            ",\n{{\"name\":\"{}\",\"ph\":\"E\",\"ts\":{},\"pid\":1,\"tid\":{tid}}}",
+            s.name,
+            s.start_us + s.dur_us
+        ));
+    };
+    for s in ordered {
+        while let Some(top) = stack.last() {
+            if top.start_us + top.dur_us > s.start_us {
+                break;
+            }
+            emit_e(out, top);
+            stack.pop();
+        }
+        if let Some(top) = stack.last() {
+            if top.start_us + top.dur_us < s.start_us + s.dur_us {
+                continue; // dropped torn span
+            }
+        }
+        emit_b(out, s);
+        stack.push(s);
+    }
+    while let Some(top) = stack.pop() {
+        emit_e(out, top);
+    }
+}
+
+/// Write [`chrome_json`] to `path`. Returns the number of spans exported.
+pub fn export_chrome_json(path: &std::path::Path) -> std::io::Result<usize> {
+    let n = span_total();
+    std::fs::write(path, chrome_json())?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All trace unit tests share the process-global enable flag and
+    /// registry, so they serialize behind one lock.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = GATE.lock().unwrap();
+        disable();
+        clear();
+        let before = span_total();
+        {
+            let mut s = span("noop", "test");
+            s.set_args(1, 2);
+        }
+        assert_eq!(span_total(), before, "disabled tracing must not record");
+    }
+
+    #[test]
+    fn spans_nest_and_export_balanced() {
+        let _g = GATE.lock().unwrap();
+        clear();
+        enable();
+        {
+            let _outer = span_args("outer", "test", 7, 8);
+            {
+                let _inner = span("inner", "test");
+            }
+            let _sibling = span("sibling", "test");
+        }
+        disable();
+        let json = chrome_json();
+        clear();
+        assert!(json.contains("\"name\":\"outer\""), "{json}");
+        assert!(json.contains("\"name\":\"inner\""), "{json}");
+        let b = json.matches("\"ph\":\"B\"").count();
+        let e = json.matches("\"ph\":\"E\"").count();
+        assert_eq!(b, e, "B/E must balance:\n{json}");
+        assert!(b >= 3, "three spans expected, saw {b}");
+        // `inner` closes before `outer` opens its E: B outer .. B inner ..
+        // E inner .. E outer ordering is what the stack rebuild guarantees.
+        let outer_b = json.find("\"name\":\"outer\",\"cat\"").unwrap();
+        let inner_b = json.find("\"name\":\"inner\",\"cat\"").unwrap();
+        assert!(outer_b < inner_b, "parent must open before child");
+    }
+
+    #[test]
+    fn ring_wraps_keep_newest() {
+        let _g = GATE.lock().unwrap();
+        clear();
+        enable();
+        let n = DEFAULT_CAPACITY + 5;
+        for _ in 0..n {
+            let _s = span("tick", "test");
+        }
+        disable();
+        let json = chrome_json();
+        clear();
+        assert!(json.contains("\"dropped_spans\""), "{}", &json[..200.min(json.len())]);
+    }
+}

@@ -1,0 +1,307 @@
+//! Training-side telemetry registry: a process-global, lock-free set of
+//! counters fed by the trainer's per-batch stopwatches and the per-epoch
+//! evaluation, exported three ways:
+//!
+//! * `GET /metrics` on the opt-in training metrics endpoint
+//!   (`--metrics-addr`, served by `crate::serve::TrainMetricsServer`) in
+//!   Prometheus text format — live epoch/step/loss/throughput plus the
+//!   collective-vs-compute time split from the paper's Table 2 framing;
+//! * one structured JSON line per epoch appended to `--epoch-log <file>`
+//!   for headless runs;
+//! * direct reads from tests.
+//!
+//! The registry is global (like [`super::serving::peer_lost_total`])
+//! because the per-batch recording site sits deep in
+//! `coordinator/trainer.rs` with no handle to thread through, and one
+//! process trains at most one model. Recording is a handful of relaxed
+//! atomic adds per batch — no locks, no allocation — so it stays inside
+//! the zero-alloc steady-state contract asserted in
+//! `rust/tests/zero_alloc.rs`. Loss evaluation costs one extra forward
+//! pass over the test set per epoch, so it is computed only when a
+//! consumer opted in ([`TrainMetrics::wants_loss`]).
+
+use std::fs::File;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Process-global training telemetry. Obtain via [`global`].
+#[derive(Debug)]
+pub struct TrainMetrics {
+    /// Last completed epoch (1-based; 0 before the first).
+    epoch: AtomicU64,
+    /// Configured epoch target for the current run.
+    epochs_target: AtomicU64,
+    steps: AtomicU64,
+    samples: AtomicU64,
+    grad_us: AtomicU64,
+    comm_us: AtomicU64,
+    update_us: AtomicU64,
+    /// f64 bit patterns (AtomicU64 carries them losslessly).
+    loss_bits: AtomicU64,
+    accuracy_bits: AtomicU64,
+    examples_per_s_bits: AtomicU64,
+    /// Whether any consumer (metrics endpoint / epoch log) wants the
+    /// per-epoch loss evaluated — it costs a forward pass over the test
+    /// set, so it is off unless telemetry asked for it.
+    wants_loss: AtomicBool,
+    started: OnceLock<Instant>,
+    /// Epoch-log sink; taken only on the per-epoch path, never per batch.
+    epoch_log: Mutex<Option<File>>,
+}
+
+static GLOBAL: TrainMetrics = TrainMetrics::new();
+
+/// The process-wide training telemetry registry.
+pub fn global() -> &'static TrainMetrics {
+    &GLOBAL
+}
+
+fn us(seconds: f64) -> u64 {
+    (seconds.max(0.0) * 1e6) as u64
+}
+
+impl TrainMetrics {
+    /// A fresh, empty registry. Tests use local instances; production code
+    /// goes through [`global`].
+    pub const fn new() -> Self {
+        Self {
+            epoch: AtomicU64::new(0),
+            epochs_target: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            grad_us: AtomicU64::new(0),
+            comm_us: AtomicU64::new(0),
+            update_us: AtomicU64::new(0),
+            loss_bits: AtomicU64::new(0),
+            accuracy_bits: AtomicU64::new(0),
+            examples_per_s_bits: AtomicU64::new(0),
+            wants_loss: AtomicBool::new(false),
+            started: OnceLock::new(),
+            epoch_log: Mutex::new(None),
+        }
+    }
+
+    /// Mark the start of a run (pins the uptime clock, sets the epoch
+    /// target, and zeroes per-run counters so a second in-process run —
+    /// tests, benches — starts clean).
+    pub fn begin_run(&self, epochs_target: usize) {
+        let _ = self.started.get_or_init(Instant::now);
+        self.epochs_target.store(epochs_target as u64, Ordering::Relaxed);
+        self.epoch.store(0, Ordering::Relaxed);
+        self.steps.store(0, Ordering::Relaxed);
+        self.samples.store(0, Ordering::Relaxed);
+        self.grad_us.store(0, Ordering::Relaxed);
+        self.comm_us.store(0, Ordering::Relaxed);
+        self.update_us.store(0, Ordering::Relaxed);
+        self.loss_bits.store(0, Ordering::Relaxed);
+        self.accuracy_bits.store(0, Ordering::Relaxed);
+        self.examples_per_s_bits.store(0, Ordering::Relaxed);
+    }
+
+    /// Per-batch recording: sample count plus the trainer's three
+    /// stopwatch segments (gradient compute, collective, weight update).
+    /// Relaxed atomic adds only — safe on the zero-alloc hot path.
+    #[inline]
+    pub fn record_step(&self, samples: usize, grad_s: f64, comm_s: f64, update_s: f64) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(samples as u64, Ordering::Relaxed);
+        self.grad_us.fetch_add(us(grad_s), Ordering::Relaxed);
+        self.comm_us.fetch_add(us(comm_s), Ordering::Relaxed);
+        self.update_us.fetch_add(us(update_s), Ordering::Relaxed);
+    }
+
+    /// Per-epoch recording from the coordinator's evaluation pass. `loss`
+    /// is `None` when loss evaluation wasn't requested (see
+    /// [`Self::wants_loss`]). Also appends the structured JSON line when
+    /// an epoch log is attached.
+    pub fn record_epoch(
+        &self,
+        epoch: usize,
+        accuracy: f64,
+        loss: Option<f64>,
+        examples_per_s: f64,
+    ) {
+        self.epoch.store(epoch as u64, Ordering::Relaxed);
+        self.accuracy_bits.store(accuracy.to_bits(), Ordering::Relaxed);
+        if let Some(l) = loss {
+            self.loss_bits.store(l.to_bits(), Ordering::Relaxed);
+        }
+        self.examples_per_s_bits.store(examples_per_s.to_bits(), Ordering::Relaxed);
+        let mut sink = self.epoch_log.lock().unwrap();
+        if let Some(f) = sink.as_mut() {
+            let line = self.epoch_json_line(epoch, accuracy, loss, examples_per_s);
+            if writeln!(f, "{line}").is_err() {
+                *sink = None; // a dead sink (full disk, closed fd) stops logging
+            }
+        }
+    }
+
+    /// One epoch as a single JSON object on one line (headless telemetry).
+    pub fn epoch_json_line(
+        &self,
+        epoch: usize,
+        accuracy: f64,
+        loss: Option<f64>,
+        examples_per_s: f64,
+    ) -> String {
+        let loss_field = match loss {
+            Some(l) => format!("{l:.6}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"event\":\"epoch\",\"epoch\":{epoch},\"epochs\":{},\
+             \"accuracy\":{accuracy:.6},\"loss\":{loss_field},\
+             \"examples_per_s\":{examples_per_s:.1},\"steps\":{},\
+             \"samples\":{},\"grad_s\":{:.3},\"comm_s\":{:.3},\
+             \"update_s\":{:.3},\"comm_fraction\":{:.4}}}",
+            self.epochs_target.load(Ordering::Relaxed),
+            self.steps.load(Ordering::Relaxed),
+            self.samples.load(Ordering::Relaxed),
+            self.grad_s(),
+            self.comm_s(),
+            self.update_s(),
+            self.comm_fraction(),
+        )
+    }
+
+    /// Attach the per-epoch JSON log sink (append mode). Marks loss as
+    /// wanted.
+    pub fn set_epoch_log(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        *self.epoch_log.lock().unwrap() = Some(f);
+        self.wants_loss.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Ask for per-epoch loss evaluation (one extra test-set forward per
+    /// epoch). The metrics endpoint sets this.
+    pub fn request_loss(&self) {
+        self.wants_loss.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the coordinator should spend a forward pass computing the
+    /// per-epoch loss.
+    pub fn wants_loss(&self) -> bool {
+        self.wants_loss.load(Ordering::Relaxed)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        f64::from_bits(self.accuracy_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn loss(&self) -> f64 {
+        f64::from_bits(self.loss_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn examples_per_s(&self) -> f64 {
+        f64::from_bits(self.examples_per_s_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn grad_s(&self) -> f64 {
+        self.grad_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn comm_s(&self) -> f64 {
+        self.comm_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn update_s(&self) -> f64 {
+        self.update_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Collective time as a fraction of measured step time (the Table 2
+    /// scaling question: how much of the step is communication).
+    pub fn comm_fraction(&self) -> f64 {
+        let total = self.grad_s() + self.comm_s() + self.update_s();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.comm_s() / total
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.get().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Prometheus text exposition for the training `/metrics` endpoint.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        let mut line = |name: &str, v: f64| {
+            out.push_str(name);
+            out.push(' ');
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                out.push_str(&(v as i64).to_string());
+            } else {
+                out.push_str(&format!("{v:.4}"));
+            }
+            out.push('\n');
+        };
+        line("neural_rs_train_epoch", self.epoch() as f64);
+        line("neural_rs_train_epochs_target", self.epochs_target.load(Ordering::Relaxed) as f64);
+        line("neural_rs_train_steps_total", self.steps() as f64);
+        line("neural_rs_train_samples_total", self.samples() as f64);
+        line("neural_rs_train_loss", self.loss());
+        line("neural_rs_train_accuracy", self.accuracy());
+        line("neural_rs_train_examples_per_s", self.examples_per_s());
+        line("neural_rs_train_grad_seconds_total", self.grad_s());
+        line("neural_rs_train_comm_seconds_total", self.comm_s());
+        line("neural_rs_train_update_seconds_total", self.update_s());
+        line("neural_rs_train_comm_fraction", self.comm_fraction());
+        line("neural_rs_train_uptime_seconds", self.uptime_s());
+        out
+    }
+}
+
+impl Default for TrainMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_render() {
+        let m = TrainMetrics::new();
+        m.begin_run(5);
+        m.record_step(100, 0.010, 0.005, 0.001);
+        m.record_step(100, 0.012, 0.003, 0.001);
+        m.record_epoch(1, 0.91, Some(0.31), 12345.0);
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.steps(), 2);
+        assert_eq!(m.samples(), 200);
+        assert!((m.accuracy() - 0.91).abs() < 1e-12);
+        assert!((m.comm_s() - 0.008).abs() < 1e-6);
+        assert!(m.comm_fraction() > 0.0 && m.comm_fraction() < 1.0);
+        let text = m.render_prometheus();
+        for series in [
+            "neural_rs_train_epoch 1",
+            "neural_rs_train_steps_total 2",
+            "neural_rs_train_samples_total 200",
+            "neural_rs_train_accuracy 0.91",
+            "neural_rs_train_comm_fraction",
+            "neural_rs_train_examples_per_s 12345",
+        ] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
+        }
+        let json = m.epoch_json_line(1, 0.91, None, 12345.0);
+        assert!(json.contains("\"loss\":null"), "{json}");
+        assert!(json.contains("\"event\":\"epoch\""), "{json}");
+    }
+}

@@ -503,6 +503,14 @@ impl<T: Scalar> Network<T> {
         for (i, op) in self.ops.iter().enumerate() {
             let (head, tail) = a.split_at_mut(i + 1);
             let input: &Matrix<T> = if i == 0 { x } else { &head[i] };
+            // Per-LayerOp forward span (op.kind() is &'static, so this is
+            // branch-only when tracing is off).
+            let _span = crate::metrics::trace::span_args(
+                op.kind(),
+                "fwd",
+                self.sizes[i + 1] as u64,
+                batch as u64,
+            );
             op.forward_batch_into(
                 input,
                 &mut tail[0],
@@ -660,6 +668,13 @@ impl<T: Scalar> Network<T> {
             let d_out = &mut dtail[0];
             let d_in = if i > 0 { Some(&mut dhead[i]) } else { None };
             let input: &Matrix<T> = if i == 0 { x } else { &a[i] };
+            // Per-LayerOp backward span, mirroring the forward track.
+            let _span = crate::metrics::trace::span_args(
+                self.ops[i].kind(),
+                "bwd",
+                self.sizes[i + 1] as u64,
+                x.cols() as u64,
+            );
             match self.param_of_op[i] {
                 Some(k) => self.ops[i].backward_batch_into(
                     input,

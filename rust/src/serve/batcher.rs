@@ -470,16 +470,20 @@ fn run_batch(
     let n = batch.len();
     let in_len = net.input_size();
     let out_len = net.output_size();
-    x.resize_cols(n);
-    for (j, (slot, _)) in batch.iter().enumerate() {
-        let st = slot.state.lock().unwrap();
-        if st.input.len() == in_len {
-            x.col_mut(j).copy_from_slice(&st.input);
-        } else {
-            // Stale handle from before a dims-changing reload: keep the
-            // column defined, fail the slot at delivery.
-            for v in x.col_mut(j) {
-                *v = 0.0;
+    {
+        // Assembly span: slot inputs gathered into the batch matrix.
+        let _assemble = crate::metrics::trace::span_args("batch_assemble", "serve", n as u64, 0);
+        x.resize_cols(n);
+        for (j, (slot, _)) in batch.iter().enumerate() {
+            let st = slot.state.lock().unwrap();
+            if st.input.len() == in_len {
+                x.col_mut(j).copy_from_slice(&st.input);
+            } else {
+                // Stale handle from before a dims-changing reload: keep the
+                // column defined, fail the slot at delivery.
+                for v in x.col_mut(j) {
+                    *v = 0.0;
+                }
             }
         }
     }
@@ -496,12 +500,18 @@ fn run_batch(
         }
     };
     if sh.infer_threads > 1 && n > 1 {
+        let infer = crate::metrics::trace::span_args("batch_infer", "serve", n as u64, 0);
         let out = net.output_batch_threaded(x, sh.infer_threads);
+        drop(infer);
         record(sh);
+        let _flush = crate::metrics::trace::span_args("batch_flush", "serve", n as u64, 0);
         deliver(batch, in_len, out_len, &out);
     } else {
+        let infer = crate::metrics::trace::span_args("batch_infer", "serve", n as u64, 0);
         let out = net.output_batch_with(x, ws);
+        drop(infer);
         record(sh);
+        let _flush = crate::metrics::trace::span_args("batch_flush", "serve", n as u64, 0);
         deliver(batch, in_len, out_len, out);
     }
 }

@@ -15,9 +15,14 @@
 //!   parameter counts, and per-layer summaries (the first step toward
 //!   multi-model routing).
 //! - `GET  /healthz` — `{"status":"ok","models":[...]}`.
+//! - `GET  /v1/status` — replica fingerprint: build version, selected
+//!   SIMD kernel, pool worker count, uptime, registry generation.
 //! - `GET  /metrics` — Prometheus text ([`ServeMetrics::render_prometheus`]).
 //! - `POST /admin/shutdown` — graceful shutdown: stop accepting, drain,
 //!   join workers.
+//!
+//! The same request plumbing also backs [`TrainMetricsServer`], the
+//! opt-in `/metrics` endpoint exposed *during training* (`--metrics-addr`).
 
 use super::batcher::{BatchPolicy, ClientHandle, MicroBatcher};
 use super::registry::ModelRegistry;
@@ -53,6 +58,7 @@ struct Ctx {
     batchers: BTreeMap<String, Arc<MicroBatcher>>,
     metrics: Arc<ServeMetrics>,
     shutdown: Arc<AtomicBool>,
+    started: Instant,
 }
 
 /// The online inference server. [`Server::start`] returns a
@@ -111,6 +117,7 @@ impl Server {
             batchers,
             metrics: Arc::clone(&metrics),
             shutdown: Arc::clone(&shutdown),
+            started: Instant::now(),
         });
         let handle_batchers: Vec<Arc<MicroBatcher>> = ctx.batchers.values().cloned().collect();
         let acceptor = {
@@ -139,7 +146,7 @@ impl Server {
                             }
                             waited = Duration::ZERO;
                             for name in registry.poll_reload() {
-                                eprintln!("# serve: hot-reloaded model '{name}'");
+                                crate::log_info!("serve: hot-reloaded model '{name}'");
                             }
                             // Failed reloads (torn/garbage checkpoints the
                             // registry rejected) surface on /metrics.
@@ -385,6 +392,10 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
                 let body = models_json(ctx);
                 respond_json(&mut stream, 200, "OK", &body, close)?;
             }
+            ("GET", "/v1/status") => {
+                let body = status_json(ctx);
+                respond_json(&mut stream, 200, "OK", &body, close)?;
+            }
             ("GET", "/metrics") => {
                 let body = ctx.metrics.render_prometheus();
                 respond(
@@ -438,6 +449,42 @@ fn models_json(ctx: &Ctx) -> String {
         ])));
     }
     Json::Obj(BTreeMap::from([("models".to_string(), Json::Arr(models))])).to_string()
+}
+
+/// `GET /v1/status`: the replica fingerprint fleet tooling routes by —
+/// build version, the SIMD kernel the dispatcher actually selected, pool
+/// capacity, uptime, and the registry generation (bumped on every model
+/// publish, so routers can detect a replica serving stale weights).
+fn status_json(ctx: &Ctx) -> String {
+    Json::Obj(BTreeMap::from([
+        ("version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        (
+            "simd_kernel".to_string(),
+            Json::Str(crate::tensor::simd::kind().name().to_string()),
+        ),
+        (
+            "compute_dispatch".to_string(),
+            Json::Str(crate::tensor::simd::describe()),
+        ),
+        (
+            "pool_workers".to_string(),
+            Json::Num(crate::tensor::pool::workers() as f64),
+        ),
+        (
+            "uptime_seconds".to_string(),
+            Json::Num((ctx.started.elapsed().as_secs_f64() * 1000.0).round() / 1000.0),
+        ),
+        ("models".to_string(), Json::Num(ctx.registry.len() as f64)),
+        (
+            "registry_generation".to_string(),
+            Json::Num(ctx.registry.generation() as f64),
+        ),
+        (
+            "tracing_enabled".to_string(),
+            Json::Bool(crate::metrics::trace::is_enabled()),
+        ),
+    ]))
+    .to_string()
 }
 
 fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, String) {
@@ -518,5 +565,115 @@ fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, 
             (409, "Conflict", error_json("model changed; retry"))
         }
         Err(e) => (400, "Bad Request", error_json(&e.to_string())),
+    }
+}
+
+/// Opt-in training telemetry endpoint (`--metrics-addr`): the same HTTP
+/// plumbing as the inference server, but with no registry or batchers —
+/// just `GET /metrics` (Prometheus text from
+/// [`crate::metrics::train::global`]) and `GET /healthz`. One acceptor,
+/// one short-lived handler thread per connection; shuts down when the
+/// handle drops (training finished).
+pub struct TrainMetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl TrainMetricsServer {
+    /// Bind `addr` (port 0 works) and start serving the process-global
+    /// training metrics. Marks per-epoch loss evaluation as wanted.
+    pub fn start(addr: &str) -> std::io::Result<TrainMetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?;
+        crate::metrics::train::global().request_loss();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let acceptor = std::thread::Builder::new()
+            .name("train-metrics".into())
+            .spawn(move || {
+                while !sd.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let _ = handle_metrics_connection(stream);
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })?;
+        crate::log_info!("training metrics on http://{bound}/metrics");
+        Ok(TrainMetricsServer { addr: bound, shutdown, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (port resolved).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the acceptor. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TrainMetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve requests on one training-metrics connection until the peer
+/// closes, inline on the acceptor thread — scrapers are short-lived, and
+/// the 5 s socket timeouts bound how long a stalled one can hold the
+/// acceptor.
+fn handle_metrics_connection(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()),
+            Err(_) => {
+                let _ = respond_json(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    &error_json("malformed request"),
+                    true,
+                );
+                return Ok(());
+            }
+        };
+        let close = req.close;
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/metrics") => {
+                let body = crate::metrics::train::global().render_prometheus();
+                respond(&mut stream, 200, "OK", "text/plain; version=0.0.4", &body, close)?;
+            }
+            ("GET", "/healthz") => {
+                respond_json(&mut stream, 200, "OK", "{\"status\":\"ok\"}", close)?;
+            }
+            (_, path) => {
+                respond_json(
+                    &mut stream,
+                    404,
+                    "Not Found",
+                    &error_json(&format!("no such endpoint: {path}")),
+                    close,
+                )?;
+            }
+        }
+        if close {
+            return Ok(());
+        }
     }
 }

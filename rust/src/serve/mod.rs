@@ -28,7 +28,7 @@ mod http;
 mod registry;
 
 pub use batcher::{BatchPolicy, ClientHandle, MicroBatcher};
-pub use http::{Server, ServerHandle};
+pub use http::{Server, ServerHandle, TrainMetricsServer};
 pub use registry::ModelRegistry;
 
 /// Errors from the serving subsystem.

@@ -55,6 +55,9 @@ pub struct ModelRegistry {
     models: RwLock<BTreeMap<String, Entry>>,
     /// Reloads rejected since the last [`Self::take_reload_failures`] call.
     reload_failures: AtomicU64,
+    /// Bumped on every successful insert/load/hot-reload, so fleet tooling
+    /// polling `/v1/status` can fingerprint which model set a replica runs.
+    generation: AtomicU64,
 }
 
 fn fingerprint(path: &Path) -> Result<Fingerprint, ServeError> {
@@ -74,6 +77,7 @@ impl ModelRegistry {
     pub fn insert(&self, name: &str, net: Network<f32>) {
         let mut models = self.models.write().unwrap();
         models.insert(name.to_string(), Entry { net: Arc::new(net), source: None });
+        self.generation.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Load (or replace) a model from a checkpoint saved via `nn/io`,
@@ -91,7 +95,14 @@ impl ModelRegistry {
                 source: Some(Source { path: path.to_path_buf(), fingerprint: fp }),
             },
         );
+        self.generation.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Monotone counter of successful model publishes (insert, load, or
+    /// hot-reload) — the registry "generation" reported by `/v1/status`.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
     }
 
     /// Snapshot of the named model's parameters. Allocation-free (read
@@ -133,7 +144,7 @@ impl ModelRegistry {
             let fp = match fingerprint(&source.path) {
                 Ok(fp) => fp,
                 Err(e) => {
-                    eprintln!("# serve: cannot stat model '{name}': {e}");
+                    crate::log_warn!("serve: cannot stat model '{name}': {e}");
                     self.reload_failures.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
@@ -148,16 +159,21 @@ impl ModelRegistry {
                     // (it may have been re-registered meanwhile).
                     if let Some(e) = models.get_mut(&name) {
                         if e.source.as_ref().map(|s| &s.path) == Some(&source.path) {
+                            crate::log_debug!(
+                                "serve: hot-reloaded model '{name}' from {}",
+                                source.path.display()
+                            );
                             e.net = Arc::new(net);
                             e.source =
                                 Some(Source { path: source.path, fingerprint: fp });
+                            self.generation.fetch_add(1, Ordering::Relaxed);
                             reloaded.push(name);
                         }
                     }
                 }
                 Err(e) => {
-                    eprintln!(
-                        "# serve: model '{name}' changed on disk but failed to load \
+                    crate::log_warn!(
+                        "serve: model '{name}' changed on disk but failed to load \
                          ({e}); keeping previous parameters"
                     );
                     self.reload_failures.fetch_add(1, Ordering::Relaxed);
@@ -194,11 +210,13 @@ mod tests {
         assert_eq!(reg.names(), vec!["a".to_string(), "b".to_string()]);
         assert!(reg.get("a").is_some());
         assert!(reg.get("missing").is_none());
+        assert_eq!(reg.generation(), 2, "each insert bumps the generation");
         // Snapshots are independent of later replacement.
         let old = reg.get("a").unwrap();
         reg.insert("a", Network::new(&[3, 4, 2], Activation::Tanh, 99));
         let new = reg.get("a").unwrap();
         assert!(!old.params_close(&new, 1e-9), "replacement must change params");
+        assert_eq!(reg.generation(), 3, "replacement bumps the generation too");
     }
 
     #[test]
@@ -239,6 +257,7 @@ mod tests {
             writeln!(f, "# retrained").unwrap();
         }
         assert_eq!(reg.poll_reload(), vec!["m".to_string()]);
+        assert_eq!(reg.generation(), 2, "hot reload bumps the generation");
         let live = reg.get("m").unwrap();
         assert!(second.params_close(&live, 0.0), "reload must serve the new params");
 

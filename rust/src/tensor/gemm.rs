@@ -46,6 +46,7 @@
 use super::matrix::{Matrix, Scalar};
 use super::pool::{self, SyncPtr};
 use super::simd::{self, SliceFn, TileKernel};
+use crate::metrics::trace;
 
 /// Operand orientation: `N` uses the matrix as stored, `T` its transpose.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -447,7 +448,13 @@ fn gemm_panels_with<T: Scalar>(
             if pack_b.len() < need_b {
                 pack_b.resize(need_b, T::ZERO);
             }
-            pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, nr, pack_b);
+            {
+                // GEMM phase spans record per *cache block*, not per tile:
+                // coarse enough to stay branch-only cheap, fine enough to
+                // show the pack/kernel/epilogue time split in Perfetto.
+                let _pack = trace::span_args("pack_b", "gemm", kc as u64, nc as u64);
+                pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, nr, pack_b);
+            }
 
             let mut ic = 0;
             while ic < m {
@@ -457,8 +464,12 @@ fn gemm_panels_with<T: Scalar>(
                 if pack_a.len() < need_a {
                     pack_a.resize(need_a, T::ZERO);
                 }
-                pack_block_a(op_a, ad, lda, ic, mc, pc, kc, mr, pack_a);
+                {
+                    let _pack = trace::span_args("pack_a", "gemm", mc as u64, kc as u64);
+                    pack_block_a(op_a, ad, lda, ic, mc, pc, kc, mr, pack_a);
+                }
 
+                let _kernel = trace::span_args("kernel", "gemm", mc as u64, nc as u64);
                 let mut jr = 0;
                 while jr < nc {
                     let nr_eff = nr.min(nc - jr);
@@ -473,13 +484,17 @@ fn gemm_panels_with<T: Scalar>(
                     }
                     jr += nr;
                 }
+                drop(_kernel);
                 ic += MC;
             }
             pc += KC;
         }
         // The NC-column block is complete across all of k: fuse the
         // bias/activation write while it is still cache-hot.
-        apply_epilogue(&mut ep, c, m, jc, nc);
+        {
+            let _epi = trace::span_args("epilogue", "gemm", m as u64, nc as u64);
+            apply_epilogue(&mut ep, c, m, jc, nc);
+        }
         jc += NC;
     }
 }

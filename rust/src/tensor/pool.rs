@@ -29,6 +29,7 @@
 //! active == 0`, so no worker can begin or still hold a checkout when the
 //! caller's stack frame (and the batch with it) goes away.
 
+use crate::metrics::trace;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Duration;
@@ -100,7 +101,7 @@ fn pool() -> &'static Pool {
                 .spawn(move || worker_loop(shared, wid))
                 .expect("failed to spawn pool worker");
         }
-        eprintln!("# pallas pool: {workers} persistent worker(s) ({hw} hw threads)");
+        crate::log_info!("pool: {workers} persistent worker(s) ({hw} hw threads)");
         Pool { shared, workers }
     })
 }
@@ -153,6 +154,9 @@ pub fn run<F: Fn(usize) + Sync>(tasks: usize, f: &F) {
         panicked: AtomicBool::new(false),
         total: tasks,
     };
+    // Batch dispatch span on the caller's track: publish → participate →
+    // drain-wait. Worker-side busy time shows up on the worker tracks.
+    let _dispatch = trace::span_args("pool_run", "pool", tasks as u64, 0);
     let bptr = &batch as *const Batch;
     {
         let mut q = p.shared.queue.lock().unwrap();
@@ -232,7 +236,12 @@ fn worker_loop(shared: &'static Shared, wid: usize) {
         };
         // SAFETY: checked out above; released below as the final access.
         let batch = unsafe { &*bptr };
+        // Occupancy span: this worker's busy window for the checked-out
+        // batch, tagged with how many task indices it actually claimed.
+        let mut busy = trace::span_args("worker_drain", "pool", 0, wid as u64);
         let ran = drain(batch);
+        busy.set_args(ran as u64, wid as u64);
+        drop(busy);
         shared.slots[wid].tasks.fetch_add(ran, Ordering::Relaxed);
         batch.active.fetch_sub(1, Ordering::SeqCst);
         // `batch` must not be touched past this point. Wake its owner.

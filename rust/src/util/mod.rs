@@ -1,6 +1,8 @@
-//! Small self-contained substrates: JSON parsing (artifact manifests) and
-//! command-line parsing (no external dependencies are available offline,
-//! so these are built from scratch and tested here).
+//! Small self-contained substrates: JSON parsing (artifact manifests),
+//! command-line parsing, and a leveled stderr logger (no external
+//! dependencies are available offline, so these are built from scratch
+//! and tested here).
 
 pub mod cli;
 pub mod json;
+pub mod log;

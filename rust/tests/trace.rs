@@ -1,0 +1,194 @@
+//! Observability integration tests: drive the real instrumented stack
+//! (layer fwd/bwd spans, GEMM phases, trainer collectives) under the span
+//! recorder and verify the exported Chrome trace is well-formed — valid
+//! JSON, balanced `B`/`E` pairs per track, non-decreasing timestamps,
+//! RAII nesting — plus a Prometheus lint of the training `/metrics` text
+//! and the structured epoch log line.
+//!
+//! The trace recorder is process-global, so everything that toggles it
+//! lives in a single `#[test]`; the metrics lints use local registries
+//! and are safe to run concurrently with it.
+
+use neural_rs::collectives::{LocalComm, Team};
+use neural_rs::coordinator::{Trainer, TrainerOptions};
+use neural_rs::data::synthesize;
+use neural_rs::metrics::{trace, TrainMetrics};
+use neural_rs::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Walk every trace event, simulating one open-span stack per track:
+/// `B` pushes, `E` must close the innermost open span by name, and
+/// timestamps never go backwards within a track. Returns the set of span
+/// categories seen. Mirrors `scripts/check_trace.py` (the CI gate) so the
+/// invariants are pinned from Rust too.
+fn check_events(events: &[Json]) -> BTreeSet<String> {
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut cats = BTreeSet::new();
+    let mut durations = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("event missing ph");
+        let name = ev.get("name").and_then(Json::as_str).expect("event missing name");
+        assert!(ev.get("pid").and_then(Json::as_f64).is_some(), "event missing pid");
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("event missing tid") as u64;
+        if ph == "M" {
+            continue; // metadata: names processes/threads, carries no ts
+        }
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("duration event missing ts");
+        let prev = last_ts.entry(tid).or_insert(f64::MIN);
+        assert!(
+            ts >= *prev,
+            "tid {tid}: ts went backwards ({ts} after {prev}) at event '{name}'"
+        );
+        *prev = ts;
+        match ph {
+            "B" => {
+                let cat = ev
+                    .get("cat")
+                    .and_then(Json::as_str)
+                    .expect("B events must carry a category");
+                cats.insert(cat.to_string());
+                assert!(
+                    ev.get("args").and_then(Json::as_obj).is_some(),
+                    "B events must carry args"
+                );
+                stacks.entry(tid).or_default().push(name.to_string());
+                durations += 1;
+            }
+            "E" => {
+                let top = stacks
+                    .get_mut(&tid)
+                    .and_then(|s| s.pop())
+                    .unwrap_or_else(|| panic!("tid {tid}: E '{name}' with no open span"));
+                assert_eq!(
+                    top, name,
+                    "tid {tid}: E must close the innermost open span (RAII nesting)"
+                );
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid}: unbalanced open spans {stack:?}");
+    }
+    assert!(durations > 0, "trace recorded no duration events");
+    cats
+}
+
+#[test]
+fn traced_training_exports_balanced_chrome_json() {
+    trace::clear();
+    trace::enable();
+
+    // A two-image shared-memory team: exercises fwd/bwd layer spans, the
+    // GEMM pack/kernel/epilogue phases under them, and the trainer's
+    // grad_allreduce comm span.
+    let train = synthesize::<f32>(200, 3);
+    let comms = Team::new(2);
+    let train_ref = &train;
+    std::thread::scope(|s| {
+        for c in &comms {
+            s.spawn(move || {
+                let opts = TrainerOptions {
+                    dims: vec![784, 16, 10],
+                    batch_size: 50,
+                    epochs: 1,
+                    ..Default::default()
+                };
+                let mut t: Trainer<f32, LocalComm> = Trainer::new(c, opts, None).unwrap();
+                t.train_epoch(train_ref).unwrap();
+            });
+        }
+    });
+
+    trace::disable();
+    let text = trace::chrome_json();
+    trace::clear();
+
+    let doc = Json::parse(&text).expect("exported trace must be valid JSON");
+    assert!(doc.get("displayTimeUnit").is_some());
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("trace must carry a traceEvents array");
+    let cats = check_events(events);
+    for want in ["fwd", "bwd", "gemm", "comm"] {
+        assert!(cats.contains(want), "missing span category '{want}' (saw {cats:?})");
+    }
+}
+
+/// Prometheus text-format lint: every line is either a `#` comment or
+/// `name[{labels}] value` with a legal metric name and a float value.
+fn lint_prometheus(text: &str) {
+    assert!(!text.is_empty());
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value on line: {line}"));
+        let name = series.split('{').next().unwrap();
+        assert!(
+            !name.is_empty()
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+                && !name.starts_with(|c: char| c.is_ascii_digit()),
+            "bad metric name in line: {line}"
+        );
+        if let Some(rest) = series.strip_prefix(name) {
+            if !rest.is_empty() {
+                assert!(
+                    rest.starts_with('{') && rest.ends_with('}'),
+                    "bad label block in line: {line}"
+                );
+            }
+        }
+        assert!(
+            value == "+Inf" || value.parse::<f64>().is_ok(),
+            "bad value '{value}' in line: {line}"
+        );
+    }
+}
+
+#[test]
+fn train_metrics_prometheus_text_lints_clean() {
+    let m = TrainMetrics::new();
+    m.begin_run(3);
+    m.record_step(100, 0.5, 0.25, 0.05);
+    m.record_epoch(1, 0.91, Some(0.35), 1234.5);
+    let text = m.render_prometheus();
+    lint_prometheus(&text);
+    for series in [
+        "neural_rs_train_epoch 1",
+        "neural_rs_train_epochs_target 3",
+        "neural_rs_train_steps_total 1",
+        "neural_rs_train_samples_total 100",
+        "neural_rs_train_loss 0.35",
+        "neural_rs_train_examples_per_s 1234.5",
+        "neural_rs_train_comm_fraction 0.3125",
+        "neural_rs_train_uptime_seconds",
+    ] {
+        assert!(text.contains(series), "missing '{series}' in:\n{text}");
+    }
+}
+
+#[test]
+fn epoch_log_line_is_one_valid_json_object() {
+    let m = TrainMetrics::new();
+    m.begin_run(2);
+    m.record_step(50, 0.4, 0.1, 0.02);
+    let line = m.epoch_json_line(1, 0.8, None, 900.0);
+    assert!(!line.contains('\n'), "epoch log lines must be single-line");
+    let doc = Json::parse(&line).expect("epoch log line must be valid JSON");
+    assert_eq!(doc.get("event").and_then(Json::as_str), Some("epoch"));
+    assert_eq!(doc.get("epoch").and_then(Json::as_usize), Some(1));
+    assert_eq!(doc.get("epochs").and_then(Json::as_usize), Some(2));
+    assert_eq!(doc.get("loss"), Some(&Json::Null), "unrequested loss serializes as null");
+    assert_eq!(doc.get("samples").and_then(Json::as_usize), Some(50));
+    assert!(doc.get("comm_fraction").and_then(Json::as_f64).is_some());
+
+    let with_loss = m.epoch_json_line(2, 0.85, Some(0.5), 950.0);
+    let doc = Json::parse(&with_loss).unwrap();
+    assert_eq!(doc.get("loss").and_then(Json::as_f64), Some(0.5));
+}

@@ -199,6 +199,23 @@ fn warmed_grad_batch_performs_zero_allocations() {
         "steady-state Trainer::train_step made {count} heap allocations (want 0)"
     );
 
+    // Tracing disabled (the default): a span guard in the hot path costs
+    // one relaxed atomic load — and, in particular, never allocates. This
+    // is the observability contract that lets the instrumentation live
+    // permanently inside grad/GEMM/pool/collective inner loops.
+    assert!(!neural_rs::metrics::trace::is_enabled());
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for i in 0..10_000u64 {
+        let mut g = neural_rs::metrics::trace::span_args("noop", "gemm", i, i);
+        g.set_args(i, i + 1);
+        drop(g);
+        let _g2 = neural_rs::metrics::trace::span("noop2", "pool");
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let count = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(count, 0, "disabled tracing made {count} heap allocations (want 0)");
+
     // Sanity: the warmed paths still compute the right thing.
     grads.zero_out();
     net.grad_batch_into(&x, &y, &mut ws, &mut grads);

@@ -44,6 +44,41 @@ def metrics(doc):
         print(f"note: unknown schema '{schema}'; nothing to compare")
 
 
+def check_tracing_overhead(doc, max_overhead=0.02):
+    """Intra-document observability gate for dense_ops runs.
+
+    The dense_ops bench measures grad_batch twice on the same warmed
+    workspace: once with span tracing off (`blocked_workspace`) and once
+    with it on (`blocked_tracing_on`). When both rows are measured, the
+    tracing-on throughput must stay within `max_overhead` (default 2%) of
+    tracing-off — pinning the "couple of atomic ops per span" recording
+    cost so instrumentation can live permanently in the hot loops.
+
+    Returns the number of failures (0 = ok or not applicable).
+    """
+    if not doc.get("schema", "").startswith("dense_ops"):
+        return 0
+    if not doc.get("measured", False):
+        return 0
+    rows = {}
+    for row in doc.get("results", []):
+        key = (row.get("section"), row.get("op"), row.get("variant"))
+        rows[key] = row.get("samples_per_s")
+    section, op = "mlp_784_30_10_b32", "grad_batch"
+    off = rows.get((section, op, "blocked_workspace"))
+    on = rows.get((section, op, "blocked_tracing_on"))
+    if not off or not on or off <= 0:
+        print("  skip tracing-overhead gate: blocked_workspace / "
+              "blocked_tracing_on not both measured")
+        return 0
+    overhead = 1.0 - on / off
+    status = "ok" if overhead <= max_overhead else "REGRESSION"
+    print(f"  {status:>10} tracing overhead {section}/{op}: "
+          f"{off:.1f} -> {on:.1f} samples/s ({overhead:+.2%}, "
+          f"budget {max_overhead:.0%})")
+    return 0 if overhead <= max_overhead else 1
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--threshold", type=float, default=0.25,
@@ -56,6 +91,15 @@ def main():
         base = json.load(f)
     with open(args.current) as f:
         cur = json.load(f)
+
+    # The tracing-overhead gate compares two rows of the *current* run
+    # against each other, so it arms even while the cross-run baseline is
+    # still an unmeasured placeholder.
+    tracing_failures = check_tracing_overhead(cur)
+    if tracing_failures:
+        print("\nFAIL: span tracing costs more than its 2% throughput "
+              "budget (blocked_tracing_on vs blocked_workspace)")
+        return 1
 
     if not base.get("measured", False):
         print(f"SKIP {args.baseline}: baseline is an unmeasured placeholder "

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""CI gate: validate a Chrome trace-event JSON exported by `--trace-out`.
+
+Checks the invariants the in-repo span recorder guarantees (mirrored by
+rust/tests/trace.rs from the Rust side):
+
+  - the file parses as JSON and carries a `traceEvents` array;
+  - every event has `name`, `ph`, `pid`, `tid`; duration events (`B`/`E`)
+    also carry a numeric `ts`;
+  - `B` events carry a `cat` and an `args` object;
+  - per (pid, tid) track, `B`/`E` pairs are balanced and properly nested:
+    each `E` closes the innermost open span of the same name (RAII);
+  - timestamps never decrease within a track, in array order — Perfetto
+    tolerates out-of-order events but the exporter emits sorted tracks,
+    so a violation means the exporter broke;
+  - at least one duration event exists (an empty trace from an
+    instrumented training run means the recorder never armed).
+
+Usage:
+    check_trace.py [--require-cats fwd,bwd,gemm] TRACE.json
+
+`--require-cats` additionally demands that each named span category
+appears on at least one `B` event — CI uses it to prove a traced training
+run actually exercised the layer/GEMM/collective instrumentation.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"FAIL: {msg}")
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--require-cats", default="",
+                    help="comma-separated span categories that must appear")
+    ap.add_argument("trace")
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{args.trace}: not readable as JSON ({e})")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("document has no traceEvents array")
+
+    stacks = {}      # (pid, tid) -> [open span names]
+    last_ts = {}     # tid -> last timestamp seen on that track
+    cats = set()
+    durations = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i} is not an object")
+        ph = ev.get("ph")
+        name = ev.get("name")
+        if not isinstance(ph, str) or not isinstance(name, str):
+            fail(f"event {i} missing ph/name")
+        if "pid" not in ev or "tid" not in ev:
+            fail(f"event {i} ({name!r}) missing pid/tid")
+        if ph == "M":
+            continue  # metadata: names processes/threads, carries no ts
+        if ph not in ("B", "E"):
+            fail(f"event {i} ({name!r}) has unexpected phase {ph!r}")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            fail(f"event {i} ({name!r}) missing numeric ts")
+        track = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(track, float("-inf")):
+            fail(f"track {track}: ts went backwards at event {i} ({name!r})")
+        last_ts[track] = ts
+        if ph == "B":
+            if not isinstance(ev.get("cat"), str):
+                fail(f"event {i} ({name!r}): B event missing cat")
+            if not isinstance(ev.get("args"), dict):
+                fail(f"event {i} ({name!r}): B event missing args object")
+            cats.add(ev["cat"])
+            stacks.setdefault(track, []).append(name)
+            durations += 1
+        else:  # E
+            stack = stacks.get(track) or []
+            if not stack:
+                fail(f"track {track}: E {name!r} with no open span")
+            top = stack.pop()
+            if top != name:
+                fail(f"track {track}: E {name!r} does not close innermost "
+                     f"open span {top!r} (broken RAII nesting)")
+
+    for track, stack in stacks.items():
+        if stack:
+            fail(f"track {track}: unbalanced open spans {stack}")
+    if durations == 0:
+        fail("trace contains no duration events (recorder never armed?)")
+
+    required = {c for c in args.require_cats.split(",") if c}
+    missing = required - cats
+    if missing:
+        fail(f"missing required span categories {sorted(missing)} "
+             f"(saw {sorted(cats)})")
+
+    tracks = len(last_ts)
+    print(f"trace OK: {len(events)} event(s), {durations} span(s) across "
+          f"{tracks} track(s), categories {sorted(cats)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
