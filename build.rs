@@ -1,0 +1,32 @@
+//! Build-time gate for the AVX-512 microkernels.
+//!
+//! The AVX-512 intrinsics (`core::arch::x86_64::_mm512_*`) stabilized in
+//! Rust 1.89, but this crate's MSRV is 1.73 (pinned in `Cargo.toml` and
+//! exercised by a dedicated CI leg). Instead of raising the MSRV for one
+//! optional kernel family, this script probes the active `rustc` and
+//! emits the `pallas_avx512` cfg only when the compiler can build the
+//! kernels; the runtime dispatch in `tensor/simd` then treats AVX-512 as
+//! absent on older toolchains exactly as it does on non-AVX-512 hosts.
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let minor = rustc_minor_version().unwrap_or(0);
+    // `--check-cfg` (and the directive announcing custom cfgs to it)
+    // stabilized in 1.80; older cargos warn on the unknown directive.
+    if minor >= 80 {
+        println!("cargo:rustc-check-cfg=cfg(pallas_avx512)");
+    }
+    let target_arch = std::env::var("CARGO_CFG_TARGET_ARCH").unwrap_or_default();
+    if target_arch == "x86_64" && minor >= 89 {
+        println!("cargo:rustc-cfg=pallas_avx512");
+    }
+}
+
+/// Minor version of the rustc this build uses (`RUSTC` honors wrappers
+/// and cross setups), e.g. 89 for "rustc 1.89.0".
+fn rustc_minor_version() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = std::process::Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    text.split_whitespace().nth(1)?.split('.').nth(1)?.parse().ok()
+}

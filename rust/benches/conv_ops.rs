@@ -1,15 +1,21 @@
-//! Micro-bench — conv pipeline throughput (im2col + one whole-batch
-//! GEMM per pass) across the kernel dispatch table.
+//! Micro-bench — conv pipeline throughput (implicit-GEMM conv: patches
+//! packed lazily inside the GEMM) across the kernel dispatch table.
 //!
-//! Three variants on an MNIST-shaped conv stack
+//! Variants on an MNIST-shaped conv stack
 //! (conv 8×k3s2 → maxpool k2s2 → flatten → dense 10 → softmax, batch 32):
 //!
 //! - `blocked_scalar_kernel` — dispatch pinned to the portable scalar
-//!   tile (the `PALLAS_FORCE_SCALAR=1` fallback);
+//!   tile (the `PALLAS_FORCE_KERNEL=scalar` fallback);
 //! - `blocked_simd` — whatever microkernel the runtime dispatch selected
-//!   (AVX2+FMA / NEON / scalar on plain hosts), fused epilogues on;
+//!   (AVX-512F / AVX2+FMA / NEON / scalar), fused epilogues on;
+//! - `blocked_avx512` — dispatch pinned to the AVX-512 tile (emitted only
+//!   when the host supports it and it isn't already `blocked_simd`);
 //! - `pooled_threads_N` — the SIMD path with batch columns sharded over
-//!   the persistent worker pool through reused [`GradShards`].
+//!   the persistent worker pool through reused [`GradShards`];
+//! - `implicit` / `materialized` — the bare conv forward as implicit GEMM
+//!   vs the classic gather-the-whole-`K·P×B`-panel-then-GEMM oracle, each
+//!   reporting `peak_workspace_bytes` (pack-block scratch vs panel +
+//!   scratch) alongside throughput — the memory model the refactor buys.
 //!
 //! Results are printed as a table and written to `BENCH_conv_ops.json`
 //! (schema `conv_ops/v1`, same row shape as dense_ops), which
@@ -19,9 +25,11 @@
 
 use neural_rs::data::{label_digits, synthesize};
 use neural_rs::metrics::{Stopwatch, Table};
-use neural_rs::nn::{Activation, GradShards, ImageDims, LayerSpec, Network, Workspace};
+use neural_rs::nn::{
+    Activation, Conv2d, GradShards, ImageDims, LayerOp, LayerSpec, Mode, Network, Workspace,
+};
 use neural_rs::tensor::simd::{self, KernelKind};
-use neural_rs::tensor::Summary;
+use neural_rs::tensor::{GemmScratch, Matrix, Rng, Summary};
 
 fn time_reps(reps: usize, mut f: impl FnMut()) -> Summary {
     f(); // warmup
@@ -40,6 +48,9 @@ struct Row {
     variant: String,
     us_per_call: f64,
     samples_per_s: f64,
+    /// Forward-path working memory beyond inputs/outputs (pack-block
+    /// scratch for the implicit path; panel + scratch for materialized).
+    peak_workspace_bytes: Option<usize>,
 }
 
 fn main() {
@@ -69,7 +80,14 @@ fn main() {
 
     let mut rows: Vec<Row> = Vec::new();
     let simd_kind = simd::detected();
-    let kinds = [(KernelKind::Scalar, "blocked_scalar_kernel"), (simd_kind, "blocked_simd")];
+    let mut kinds =
+        vec![(KernelKind::Scalar, "blocked_scalar_kernel"), (simd_kind, "blocked_simd")];
+    // An explicitly named avx512 row whenever the host can run it: the
+    // regression gate keys on the variant name, and `blocked_simd`'s
+    // meaning floats with the host (it usually *is* avx512 here).
+    if simd::supported(KernelKind::Avx512) {
+        kinds.push((KernelKind::Avx512, "blocked_avx512"));
+    }
 
     for (kind, variant) in kinds {
         simd::force(Some(kind));
@@ -93,6 +111,7 @@ fn main() {
             variant: variant.into(),
             us_per_call: s.mean * 1e6,
             samples_per_s: b / s.mean,
+            peak_workspace_bytes: None,
         });
 
         let s = time_reps(reps, || {
@@ -109,6 +128,7 @@ fn main() {
             variant: variant.into(),
             us_per_call: s.mean * 1e6,
             samples_per_s: b / s.mean,
+            peak_workspace_bytes: None,
         });
         simd::force(None);
     }
@@ -133,15 +153,93 @@ fn main() {
         variant,
         us_per_call: s.mean * 1e6,
         samples_per_s: b / s.mean,
+        peak_workspace_bytes: None,
     });
 
-    let mut table = Table::new(&["Op", "Variant", "µs/call", "samples/s"]);
+    // The memory model: the bare conv forward as implicit GEMM (patches
+    // packed lazily into pack-block scratch) against the materialized
+    // im2col oracle (gather the whole K·P×B panel, then GEMM). Both run
+    // the eval/serving forward — the Train σ' stash is common state the
+    // comparison would only blur. peak_workspace_bytes is the working
+    // memory each variant needs beyond inputs and outputs.
+    let conv: Conv2d<f32> = Conv2d::from_parts(
+        ImageDims::new(1, 28, 28),
+        3,
+        2,
+        Matrix::from_fn(9, 8, |i, j| ((i * 5 + j * 3) % 13) as f32 * 0.1 - 0.6),
+        vec![0.05; 8],
+        Activation::Relu,
+    );
+    let o = conv.out_dims();
+    let (kp, p) = (9usize, o.h * o.w);
+    let mut out = Matrix::zeros(o.len(), batch);
+    let mut cache = Matrix::zeros(conv.cache_rows(), batch);
+    let mut work = Matrix::zeros(conv.work_rows(), batch);
+    let mut scratch_i = GemmScratch::new();
+    let mut mask_rng = Rng::new(3);
+    let s = time_reps(reps, || {
+        conv.forward_batch_into(
+            &x,
+            &mut out,
+            &mut cache,
+            &mut work,
+            &mut scratch_i,
+            Mode::Eval,
+            &mut mask_rng,
+        );
+        std::hint::black_box(&out);
+    });
+    let implicit_bytes = scratch_i.bytes();
+    println!(
+        "conv  {:22} {:9.1} µs/call ({:9.0} samples/s, {:7} B workspace)",
+        "implicit",
+        s.mean * 1e6,
+        b / s.mean,
+        implicit_bytes
+    );
+    rows.push(Row {
+        op: "forward_conv",
+        variant: "implicit".into(),
+        us_per_call: s.mean * 1e6,
+        samples_per_s: b / s.mean,
+        peak_workspace_bytes: Some(implicit_bytes),
+    });
+
+    let mut panel = Matrix::zeros(kp * p, batch);
+    let mut scratch_m = GemmScratch::new();
+    let s = time_reps(reps, || {
+        conv.forward_batch_materialized(&x, &mut out, &mut cache, &mut panel, &mut scratch_m);
+        std::hint::black_box(&out);
+    });
+    let materialized_bytes =
+        panel.len() * std::mem::size_of::<f32>() + scratch_m.bytes();
+    println!(
+        "conv  {:22} {:9.1} µs/call ({:9.0} samples/s, {:7} B workspace)",
+        "materialized",
+        s.mean * 1e6,
+        b / s.mean,
+        materialized_bytes
+    );
+    rows.push(Row {
+        op: "forward_conv",
+        variant: "materialized".into(),
+        us_per_call: s.mean * 1e6,
+        samples_per_s: b / s.mean,
+        peak_workspace_bytes: Some(materialized_bytes),
+    });
+    assert!(
+        implicit_bytes < materialized_bytes,
+        "implicit GEMM must need less working memory than the materialized panel"
+    );
+
+    let mut table = Table::new(&["Op", "Variant", "µs/call", "samples/s", "workspace B"]);
     for r in &rows {
         table.row(&[
             r.op.to_string(),
             r.variant.clone(),
             format!("{:.1}", r.us_per_call),
             format!("{:.1}", r.samples_per_s),
+            r.peak_workspace_bytes.map_or_else(|| "-".into(), |v| v.to_string()),
         ]);
     }
     println!("\n{}", table.render());
@@ -156,13 +254,17 @@ fn main() {
     json.push_str(&format!("  \"simd_kernel\": \"{}\",\n", simd_kind.name()));
     json.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let peak = r
+            .peak_workspace_bytes
+            .map_or(String::new(), |v| format!(", \"peak_workspace_bytes\": {v}"));
         json.push_str(&format!(
             "    {{\"section\": \"conv_mnist_b32\", \"op\": \"{}\", \"variant\": \"{}\", \
-             \"us_per_call\": {:.2}, \"samples_per_s\": {:.2}}}{}\n",
+             \"us_per_call\": {:.2}, \"samples_per_s\": {:.2}{}}}{}\n",
             r.op,
             r.variant,
             r.us_per_call,
             r.samples_per_s,
+            peak,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

@@ -11,7 +11,7 @@
 //!               whatever SIMD microkernel the runtime dispatch selected
 //!               and the fused bias/activation epilogue;
 //! - `blocked_scalar_kernel` — the same path pinned to the portable
-//!               scalar tile (what `PALLAS_FORCE_SCALAR=1` gives you), so
+//!               scalar tile (what `PALLAS_FORCE_KERNEL=scalar` gives you), so
 //!               the SIMD speedup is visible in one file;
 //! - `blocked_unfused_epilogue` — blocked GEMM but with the legacy
 //!               separate bias + activation passes (the fused-epilogue

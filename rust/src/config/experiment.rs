@@ -139,6 +139,10 @@ pub struct ExperimentConfig {
     /// Intra-image gradient threads (native engine only; see
     /// `TrainerOptions::intra_threads`).
     pub intra_threads: usize,
+    /// Process-wide thread budget (`[parallel] threads`). `None` defers
+    /// to `PALLAS_THREADS` / detected parallelism; the `--threads` CLI
+    /// flag overrides this. See `crate::tensor::pool::budget`.
+    pub threads: Option<usize>,
     // [runtime]
     pub engine: EngineKind,
     pub artifacts_dir: PathBuf,
@@ -175,6 +179,7 @@ impl Default for ExperimentConfig {
             comm: CommKind::Local,
             elastic: false,
             intra_threads: 1,
+            threads: None,
             // The PJRT engine needs a `--features pjrt` build; default to
             // what the binary at hand can actually run.
             engine: if crate::runtime::pjrt_available() {
@@ -482,6 +487,9 @@ impl ExperimentConfig {
         if let Some(t) = doc.get("parallel") {
             cfg.images = get_usize(t, "images", cfg.images)?.max(1);
             cfg.intra_threads = get_usize(t, "intra_threads", cfg.intra_threads)?.max(1);
+            if t.get("threads").is_some() {
+                cfg.threads = Some(get_usize(t, "threads", 0)?.max(1));
+            }
             let algo = get_str(t, "algo", cfg.algo.name())?;
             cfg.algo = ReduceAlgo::parse(algo)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown reduce algo '{algo}'")))?;
@@ -683,6 +691,16 @@ mod tests {
         assert_eq!(c.trainer_options().intra_threads, 4);
         let c = ExperimentConfig::from_toml("[parallel]\nintra_threads = 0\n").unwrap();
         assert_eq!(c.intra_threads, 1, "0 clamps to serial");
+    }
+
+    #[test]
+    fn thread_budget_parses_and_defaults_off() {
+        let c = ExperimentConfig::from_toml("[parallel]\nthreads = 6\n").unwrap();
+        assert_eq!(c.threads, Some(6));
+        let c = ExperimentConfig::from_toml("[parallel]\nthreads = 0\n").unwrap();
+        assert_eq!(c.threads, Some(1), "0 clamps to one thread");
+        let c = ExperimentConfig::from_toml("[parallel]\nintra_threads = 2\n").unwrap();
+        assert_eq!(c.threads, None, "absent key defers to env/detection");
     }
 
     #[test]

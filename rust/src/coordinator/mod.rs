@@ -18,6 +18,6 @@ mod parallel;
 mod simulate;
 mod trainer;
 
-pub use parallel::{train_parallel, ParallelReport, ParallelSpec};
+pub use parallel::{divide_budget, train_parallel, ParallelReport, ParallelSpec};
 pub use simulate::ScalingModel;
 pub use trainer::{BatchStrategy, EngineKind, EpochStats, Trainer, TrainerOptions};

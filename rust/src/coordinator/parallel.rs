@@ -3,6 +3,14 @@
 //! runs the epoch loop, and reports per-epoch accuracy and timing — the
 //! harness behind `examples/mnist.rs`, `examples/parallel_scaling.rs`, and
 //! the Table 2 / Figures 4–5 benches.
+//!
+//! Image threads stay **scoped coordinator threads**, not pool tasks: an
+//! image blocks in collective barriers mid-task, and a blocked pool task
+//! would pin a worker for the whole epoch (deadlock once images ≥
+//! workers). What *is* folded onto the process-wide budget is the thread
+//! *count*: [`divide_budget`] clamps each image's `intra_threads` so that
+//! `images × intra` never exceeds [`crate::tensor::pool::budget`], and
+//! the intra-image shards themselves run on the shared worker pool.
 
 use super::trainer::{EngineKind, EpochStats, Trainer, TrainerOptions};
 use crate::collectives::{Communicator, ReduceAlgo, Team};
@@ -50,10 +58,21 @@ impl<T> ParallelReport<T> {
     }
 }
 
+/// Clamp a per-image `intra_threads` request against the process-wide
+/// thread budget: with `images` concurrent images, each may use at most
+/// `budget / images` threads (floor, minimum 1 — an image always gets at
+/// least its own coordinator thread). The request is honoured when it
+/// already fits.
+pub fn divide_budget(images: usize, requested: usize, budget: usize) -> usize {
+    requested.min((budget / images.max(1)).max(1)).max(1)
+}
+
 /// Run data-parallel training on a shared-memory team.
 ///
 /// The datasets are shared read-only across images (the paper loads the
 /// full dataset on every image too; the *batch* is what gets sharded).
+/// Each image's `intra_threads` is clamped by [`divide_budget`] so the
+/// total fan-out honours the process-wide thread budget.
 pub fn train_parallel<T: PjrtScalar>(
     spec: &ParallelSpec,
     train: &Dataset<T>,
@@ -66,6 +85,18 @@ pub fn train_parallel<T: PjrtScalar>(
             "EngineKind::Pjrt requires ParallelSpec::artifacts"
         );
     }
+    let mut opts = spec.opts.clone();
+    let intra = divide_budget(spec.images, opts.intra_threads, crate::tensor::pool::budget());
+    if intra != opts.intra_threads {
+        crate::log_info!(
+            "parallel: clamping intra_threads {} -> {intra} ({} image(s), budget {})",
+            opts.intra_threads,
+            spec.images,
+            crate::tensor::pool::budget()
+        );
+    }
+    opts.intra_threads = intra;
+    let opts = &opts;
     let comms = Team::with_algo(spec.images, spec.algo);
     let results: Vec<Option<ParallelReport<T>>> = std::thread::scope(|s| {
         let handles: Vec<_> = comms
@@ -87,7 +118,7 @@ pub fn train_parallel<T: PjrtScalar>(
                     // genuinely unreachable — see `LocalComm`.
                     let infallible = "local collectives are infallible";
                     let mut trainer =
-                        Trainer::new(comm, spec.opts.clone(), engine).expect(infallible);
+                        Trainer::new(comm, opts.clone(), engine).expect(infallible);
                     let initial_accuracy = trainer.accuracy(test).expect(infallible);
 
                     let mut epoch_accuracy = Vec::new();
@@ -177,6 +208,30 @@ mod tests {
             artifacts: None,
             eval_each_epoch: true,
         }
+    }
+
+    #[test]
+    fn divide_budget_never_oversubscribes() {
+        for images in 1..=8 {
+            for requested in 1..=8 {
+                for budget in 1..=16 {
+                    let got = divide_budget(images, requested, budget);
+                    assert!(got >= 1, "every image gets its coordinator thread");
+                    assert!(got <= requested, "never grants more than requested");
+                    if got > 1 {
+                        assert!(
+                            images * got <= budget,
+                            "images={images} intra={got} exceeds budget={budget}"
+                        );
+                    }
+                }
+            }
+        }
+        // Spot checks: honour a fitting request, clamp an oversized one.
+        assert_eq!(divide_budget(2, 4, 8), 4);
+        assert_eq!(divide_budget(4, 4, 8), 2);
+        assert_eq!(divide_budget(8, 4, 4), 1);
+        assert_eq!(divide_budget(1, 16, 8), 8);
     }
 
     #[test]

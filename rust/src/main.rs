@@ -30,7 +30,7 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "dims", "activation", "eta", "batch-size", "epochs", "seed", "batch-seed",
     "strategy", "optimizer", "train-n", "test-n", "data-dir", "data-seed", "images", "algo", "comm",
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
-    "runs", "max-images", "out", "n", "intra-threads", "addr", "model", "max-batch",
+    "runs", "max-images", "out", "n", "intra-threads", "threads", "addr", "model", "max-batch",
     "max-wait-us", "queue-depth", "workers", "infer-threads", "deadline-us", "checkpoint",
     "checkpoint-every", "trace-out", "metrics-addr", "epoch-log",
 ];
@@ -62,6 +62,9 @@ COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
   --data-dir data/mnist  (real MNIST IDX if present, else synthetic)
   --images N             parallel images (default 1)
   --intra-threads N      intra-image gradient threads (native engine; default 1)
+  --threads N            process-wide thread budget shared by every threaded
+                         path (precedence: this flag > [parallel] threads in
+                         TOML > PALLAS_THREADS > detected cores)
   --algo tree            flat|tree|chunked collective-sum schedule
   --engine pjrt|native   gradient engine (default: pjrt when compiled in, else native)
   --artifacts artifacts  AOT artifact root
@@ -137,8 +140,8 @@ fn main() {
         return;
     }
     // The selected-kernel line: which GEMM/epilogue dispatch this process
-    // runs with (see the README perf section; PALLAS_FORCE_SCALAR=1 pins
-    // the portable kernel). Suppress with PALLAS_LOG=warn.
+    // runs with (see the README perf section; PALLAS_FORCE_KERNEL=
+    // scalar|avx2|avx512|neon pins a tile). Suppress with PALLAS_LOG=warn.
     neural_rs::log_info!("{}", neural_rs::tensor::simd::describe());
     let result = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
@@ -195,6 +198,10 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
     }
     cfg.images = args.get_parsed("images", cfg.images)?;
     cfg.intra_threads = args.get_parsed::<usize>("intra-threads", cfg.intra_threads)?.max(1);
+    if args.get("threads").is_some() {
+        // CLI wins over the TOML [parallel] threads key.
+        cfg.threads = Some(args.get_parsed::<usize>("threads", 1)?.max(1));
+    }
     if let Some(a) = args.get("algo") {
         cfg.algo = neural_rs::collectives::ReduceAlgo::parse(a)
             .ok_or(format!("unknown algo '{a}'"))?;
@@ -243,6 +250,21 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
         cfg.telemetry.epoch_log = PathBuf::from(l);
     }
     cfg.validate()?;
+    if let Some(t) = cfg.threads {
+        if !neural_rs::tensor::pool::set_budget(t) {
+            return Err(format!(
+                "--threads {t}: the thread budget is frozen (worker pool already running)"
+            )
+            .into());
+        }
+    }
+    // The companion to the selected-kernel line: how many threads every
+    // threaded path (pooled GEMM shards, sharded forwards, train_parallel
+    // fan-out) divides between them.
+    neural_rs::log_info!(
+        "thread budget: {} (precedence: --threads > [parallel] threads > PALLAS_THREADS > detected)",
+        neural_rs::tensor::pool::budget()
+    );
     Ok(cfg)
 }
 

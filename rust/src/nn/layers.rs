@@ -14,7 +14,7 @@
 //!   [`crate::nn::Workspace`] how much forward→backward cache to
 //!   pre-allocate (pre-activations for dense/conv, the mask for dropout,
 //!   argmax indices for maxpool) and [`LayerOp::work_rows`] how much
-//!   in-pass working memory (the conv im2col panel), so the
+//!   in-pass working memory (the σ' stash and backward staging), so the
 //!   zero-allocation training contract survives heterogeneity;
 //! - **parameter views** — [`LayerOp::params`] / [`LayerOp::params_mut`]
 //!   expose the trainable state (dense and conv), which keys the flat
@@ -28,9 +28,10 @@
 //! activation), [`Dropout`] (seeded inverted dropout with a train/eval
 //! mode flag), [`Softmax`] (an output head fused with the cross-entropy
 //! loss), and the image pipeline — [`Conv2d`] (valid-padding strided
-//! convolution lowered to the blocked GEMM via im2col, cuDNN's core
-//! insight), [`MaxPool2d`], and [`Flatten`] (the shape bridge from image
-//! planes to the dense chain).
+//! convolution run as *implicit GEMM*: the im2col panel is packed
+//! tile-by-tile straight from the input via [`Im2colPanel`], never
+//! materialized — cuDNN's core insight), [`MaxPool2d`], and [`Flatten`]
+//! (the shape bridge from image planes to the dense chain).
 //!
 //! # Image layout
 //!
@@ -42,7 +43,7 @@
 //! `[patch, out_channel]` panels.
 
 use super::activation::Activation;
-use crate::tensor::gemm::{self, Epilogue, GemmScratch, Op};
+use crate::tensor::gemm::{self, Epilogue, GemmScratch, MatPanel, Op, PanelSource};
 use crate::tensor::{vecops, Matrix, Rng, Scalar};
 
 /// Forward-pass mode: [`Mode::Train`] applies stochastic layers
@@ -385,8 +386,9 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     }
 
     /// Rows of per-batch-column *working* buffer this op needs live
-    /// during both passes (the conv im2col panel; 0 for everything else).
-    /// Unlike the cache, the op may overwrite it mid-backward.
+    /// during both passes (the dense/conv σ' stash and conv's backward
+    /// staging; 0 for everything else). Unlike the cache, the op may
+    /// overwrite it mid-backward.
     fn work_rows(&self) -> usize {
         0
     }
@@ -451,7 +453,7 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     /// buffer (readable, and overwritable once the op is done with it).
     /// Backward must follow a [`Mode::Train`] forward through the same
     /// workspace: ops may rely on state only that mode writes (dropout's
-    /// mask cache, dense's σ' work stash).
+    /// mask cache, the dense/conv σ' work stash).
     /// Writes `dC/d(x)` into `d_in` (skipped for the first op, which has
     /// nothing below it) and *accumulates* parameter tendencies into the
     /// `grads` views when the op owns parameters. Allocation-free.
@@ -846,22 +848,143 @@ impl<T: Scalar> LayerOp<T> for Softmax {
 // Conv2d
 // ---------------------------------------------------------------------
 
-/// Valid-padding strided 2D convolution with a per-layer activation,
-/// lowered to the blocked GEMM via im2col — cuDNN's core insight that
-/// convolution is best served by matrix-multiply primitives.
+/// [`PanelSource`] over the *virtual* im2col matrix of a whole batch —
+/// the heart of implicit-GEMM convolution. Presents either
+///
+/// - `col  [K, P·B]` (`transposed = false`; the forward B-operand), or
+/// - `colᵀ [P·B, K]` (`transposed = true`; the backward dW A-operand),
+///
+/// where `K = kernel²·in_c` and `P = out_h·out_w`, and packs requested
+/// blocks straight from the HWC input with on-the-fly index math: column
+/// `q` is batch image `q / P`, output position `q % P`, and patch row
+/// `kpatch` splits into kernel row `ky = kpatch / (kernel·c)` and the
+/// within-row offset `kpatch % (kernel·c)` (kernel column × channel,
+/// contiguous in the input). Packed values equal the materialized panel's
+/// in the same order, so the GEMM is bit-identical to the materialized
+/// path under any fixed tile kernel — asserted across kernel, stride,
+/// channel and remainder sweeps by `rust/tests/simd_props.rs` and
+/// `rust/tests/properties.rs`.
+pub struct Im2colPanel<'a, T> {
+    /// Batch input, column-major `[img.len(), B]`.
+    x: &'a [T],
+    /// Column stride of `x` (`img.len()`).
+    ldx: usize,
+    /// Input row stride in elements (`img.w · img.c`).
+    row: usize,
+    /// Input x-step per output column (`stride · img.c`).
+    xstep: usize,
+    /// Input row stride per output row (`stride · img.w · img.c`).
+    ystep: usize,
+    /// Patch row stride of one kernel row (`kernel · img.c`).
+    krow: usize,
+    /// Output plane width.
+    out_w: usize,
+    /// Output plane size `P = out_h · out_w`.
+    p: usize,
+    /// Present `colᵀ` instead of `col`.
+    transposed: bool,
+}
+
+impl<T: Scalar> Im2colPanel<'_, T> {
+    /// Largest tile width/height any dispatch kernel uses — bounds the
+    /// per-strip offset staging below (AVX-512 f32 has the widest tile,
+    /// mr = 16).
+    const MAX_R: usize = 32;
+
+    /// Input offset of patch row `kpatch` relative to its patch base.
+    #[inline]
+    fn k_off(&self, kpatch: usize) -> usize {
+        (kpatch / self.krow) * self.row + kpatch % self.krow
+    }
+
+    /// Input offset of the patch base of virtual column `q`.
+    #[inline]
+    fn q_base(&self, q: usize) -> usize {
+        let (jb, opos) = (q / self.p, q % self.p);
+        let (oy, ox) = (opos / self.out_w, opos % self.out_w);
+        jb * self.ldx + oy * self.ystep + ox * self.xstep
+    }
+}
+
+impl<T: Scalar> PanelSource<T> for Im2colPanel<'_, T> {
+    fn pack_panel(&self, pc: usize, kc: usize, jstart: usize, nc: usize, r: usize, out: &mut [T]) {
+        assert!(r <= Self::MAX_R, "tile wider than the im2col offset staging");
+        // Per strip: resolve the r column offsets once (they are fixed
+        // across the k-loop), then stream k with one add per element —
+        // the index math costs O(kc + r) per strip, not O(kc·r).
+        let mut offs = [0usize; Self::MAX_R];
+        let mut s = 0usize;
+        let mut jr = 0usize;
+        while jr < nc {
+            let r_eff = r.min(nc - jr);
+            let strip = &mut out[s * kc * r..(s + 1) * kc * r];
+            if self.transposed {
+                // Logical [P·B, K]: rows are positions, columns are
+                // patch rows — strip columns share their k_off.
+                for (jj, o) in offs.iter_mut().enumerate().take(r_eff) {
+                    *o = self.k_off(jstart + jr + jj);
+                }
+                for k in 0..kc {
+                    let base = self.q_base(pc + k);
+                    let dst = &mut strip[k * r..k * r + r];
+                    for (jj, d) in dst.iter_mut().enumerate() {
+                        *d = if jj < r_eff { self.x[base + offs[jj]] } else { T::ZERO };
+                    }
+                }
+            } else {
+                // Logical [K, P·B]: strip columns share their patch base.
+                for (jj, o) in offs.iter_mut().enumerate().take(r_eff) {
+                    *o = self.q_base(jstart + jr + jj);
+                }
+                for k in 0..kc {
+                    let koff = self.k_off(pc + k);
+                    let dst = &mut strip[k * r..k * r + r];
+                    for (jj, d) in dst.iter_mut().enumerate() {
+                        *d = if jj < r_eff { self.x[offs[jj] + koff] } else { T::ZERO };
+                    }
+                }
+            }
+            s += 1;
+            jr += r;
+        }
+    }
+
+    fn span_name(&self) -> Option<&'static str> {
+        // The implicit-GEMM packing phase gets its own trace span so the
+        // Perfetto time split separates patch generation from the plain
+        // copy packs.
+        Some("pack_tile")
+    }
+}
+
+/// Valid-padding strided 2D convolution with a per-layer activation, run
+/// as **implicit GEMM** — cuDNN's core insight that convolution is best
+/// served by matrix-multiply primitives, *without* materializing the
+/// im2col panel: the packer draws conv patches straight from the input
+/// through [`Im2colPanel`], one `O(KC·NC)` pack block at a time, so peak
+/// conv workspace no longer scales with `k²·c·plane·batch`.
 ///
 /// Weights live as a `[kernel²·in_c, filters]` column-major matrix whose
-/// rows use the same channel-fastest patch order im2col produces, so the
-/// whole batch runs as **one** GEMM per pass:
+/// rows use the channel-fastest patch order the panel source produces, so
+/// the whole batch runs as **one** GEMM per pass:
 ///
-/// - forward: im2col every column into the workspace work panel (viewed
-///   as the `[K, P·B]` patch matrix, `K = kernel²·in_c`,
-///   `P = out_h·out_w`), then `Z = Wᵀ·col` lands directly in the
-///   channel-fastest output layout; `A = σ(Z + b)`;
-/// - backward: `δ = dC/dA ⊙ σ'(Z)`, `dW += col·δᵀ` (one GEMM, summing
-///   over the batch exactly as the tendencies want), `db += Σ δ` per
-///   channel, and `dC/dX = col2im(W·δ)` — the `W·δ` GEMM overwrites the
-///   im2col panel (dW no longer needs it) before the scatter-add.
+/// - forward: `Z = Wᵀ·col` with `col` the *virtual* `[K, P·B]` patch
+///   matrix (`K = kernel²·in_c`, `P = out_h·out_w`), landing directly in
+///   the channel-fastest output layout; bias and `A = σ(Z)` fuse into the
+///   GEMM's C-write, and train mode stashes `σ'(Z)` through the same
+///   epilogue ([`Epilogue::BiasActStash`], like dense) — no recompute in
+///   backward;
+/// - backward: `δ = dC/dA ⊙ σ'(Z)` against the stash, `dW += col·δᵀ`
+///   (one GEMM over the virtual transposed panel, summing the batch
+///   exactly as the tendencies want), `db += Σ δ` per channel, and
+///   `dC/dX = col2im(W·δ)` with the `W·δ` product staged through the
+///   op's work buffer one position-chunk at a time before the
+///   scatter-add — per-element accumulation chains and scatter order
+///   match the monolithic panel bit for bit.
+///
+/// [`Conv2d::forward_batch_materialized`] keeps the classic materialized
+/// path as the oracle the equivalence tests and conv benches compare
+/// against; training and serving never call it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Conv2d<T = f32> {
     /// Input geometry.
@@ -941,25 +1064,95 @@ impl<T: Scalar> Conv2d<T> {
         }
     }
 
-    /// Scatter-add one column's patch gradients back onto the input
-    /// plane (`dx` must be pre-zeroed): the transpose of [`Conv2d::im2col`].
-    fn col2im(&self, col: &[T], dx: &mut [T]) {
+    /// Scatter-add patch gradients for output positions `q0..q0+qn` of
+    /// one image back onto its input plane (`dx` pre-zeroed before the
+    /// first chunk): the transpose of [`Conv2d::im2col`], restricted to
+    /// a position range so backward can stage `W·δ` through a
+    /// pack-block-sized buffer. A contiguous `q` range is a contiguous
+    /// run of the full `(oy, ox)` traversal, so chunked scatter order —
+    /// and therefore the accumulated `dx`, bit for bit — matches the
+    /// monolithic panel's.
+    fn col2im_range(&self, col: &[T], dx: &mut [T], q0: usize, qn: usize) {
         let (c, w) = (self.img.c, self.img.w);
         let (k, s) = (self.kernel, self.stride);
         let out = self.out_dims();
         let krow = k * c;
         let mut src = 0usize;
-        for oy in 0..out.h {
-            for ox in 0..out.w {
-                for ky in 0..k {
-                    let dst = ((oy * s + ky) * w + ox * s) * c;
-                    for (d, &v) in dx[dst..dst + krow].iter_mut().zip(&col[src..src + krow]) {
-                        *d = *d + v;
-                    }
-                    src += krow;
+        for opos in q0..q0 + qn {
+            let (oy, ox) = (opos / out.w, opos % out.w);
+            for ky in 0..k {
+                let dst = ((oy * s + ky) * w + ox * s) * c;
+                for (d, &v) in dx[dst..dst + krow].iter_mut().zip(&col[src..src + krow]) {
+                    *d = *d + v;
                 }
+                src += krow;
             }
         }
+    }
+
+    /// [`Im2colPanel`] over a batch input slice (`ldx`-major): the
+    /// virtual patch matrix the implicit GEMM packs from.
+    fn im2col_panel<'a>(&self, x: &'a [T], ldx: usize, transposed: bool) -> Im2colPanel<'a, T> {
+        let out = self.out_dims();
+        let c = self.img.c;
+        Im2colPanel {
+            x,
+            ldx,
+            row: self.img.w * c,
+            xstep: self.stride * c,
+            ystep: self.stride * self.img.w * c,
+            krow: self.kernel * c,
+            out_w: out.w,
+            p: out.h * out.w,
+            transposed,
+        }
+    }
+
+    /// The classic materialized-im2col forward: gather the whole
+    /// `[K·P, B]` patch panel into `panel`, then one GEMM. Numerically
+    /// bit-identical to the implicit [`LayerOp::forward_batch_into`]
+    /// under any fixed tile kernel (the packer reads the same values in
+    /// the same order either way) — kept as the oracle for the
+    /// equivalence tests and the memory-model comparison in
+    /// `benches/conv_ops.rs`. Training and serving never call this.
+    pub fn forward_batch_materialized(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        panel: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+    ) {
+        let b = x.cols();
+        let (kp, p, f) = (self.patch_len(), self.out_plane(), self.filters());
+        assert_eq!(
+            (panel.rows(), panel.cols()),
+            (kp * p, b),
+            "materialized conv panel must be [K·P, B]"
+        );
+        for j in 0..b {
+            self.im2col(x.col(j), panel.col_mut(j));
+        }
+        let ep = Epilogue::BiasAct {
+            bias: &self.b,
+            apply: self.activation.apply_kernel::<T>(),
+            out: out.as_mut_slice(),
+        };
+        gemm::gemm_slices_ep(
+            Op::T,
+            self.w.as_slice(),
+            kp,
+            Op::N,
+            panel.as_slice(),
+            kp,
+            f,
+            p * b,
+            kp,
+            cache.as_mut_slice(),
+            false,
+            ep,
+            scratch,
+        );
     }
 }
 
@@ -982,8 +1175,13 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
     }
 
     fn work_rows(&self) -> usize {
-        // The im2col patch panel.
-        self.patch_len() * self.out_plane()
+        // No materialized im2col panel anymore. The work buffer holds
+        // the train-mode σ'(Z) stash (`f·P` rows, mirroring the output)
+        // and doubles as backward's `W·δ` staging, which needs at least
+        // one `K`-tall position column — `max` covers both (the old
+        // panel needed `K·P` rows, a factor `min(f, K)·P / max(f, P)`
+        // more; the workspace tests pin the shrink).
+        self.out_dims().len().max(self.patch_len())
     }
 
     fn in_image(&self) -> Option<ImageDims> {
@@ -1033,50 +1231,47 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
         cache: &mut Matrix<T>,
         work: &mut Matrix<T>,
         scratch: &mut GemmScratch<T>,
-        _mode: Mode,
+        mode: Mode,
         _mask_rng: &mut Rng,
     ) {
         let b = x.cols();
         let (kp, p, f) = (self.patch_len(), self.out_plane(), self.filters());
-        for j in 0..b {
-            self.im2col(x.col(j), work.col_mut(j));
-        }
-        // One whole-batch GEMM: Z [f, P·B] = Wᵀ [f, K] · col [K, P·B].
-        // The work buffer ([K·P, B]) *is* the [K, P·B] patch matrix and
-        // the cache ([f·P, B]) *is* the [f, P·B] output, both without a
-        // single copy — the channel-fastest layout makes them line up.
-        // The per-filter bias (one entry per output row of the [f, P·B]
-        // view) and A = σ(Z) are fused into the GEMM's C-write; backward
-        // recomputes σ' from the cached Z (the conv work panel is the
-        // im2col patch matrix, so there is no room for a stash).
-        let ep = Epilogue::BiasAct {
-            bias: &self.b,
-            apply: self.activation.apply_kernel::<T>(),
-            out: out.as_mut_slice(),
+        let n = p * b;
+        // One whole-batch implicit GEMM: Z [f, P·B] = Wᵀ [f, K] · col
+        // [K, P·B], where `col` is the *virtual* patch matrix — the
+        // packer draws tiles straight from x through the Im2colPanel, so
+        // the only working memory is the gemm scratch's pack blocks. The
+        // cache ([f·P, B]) *is* the [f, P·B] output without a copy (the
+        // channel-fastest layout makes them line up). Per-filter bias
+        // and A = σ(Z) fuse into the GEMM's C-write; train mode also
+        // stashes σ'(Z) in the work buffer (same pattern as dense), so
+        // backward never recomputes σ'. Eval (the serving path) skips
+        // the stash.
+        let a_src = MatPanel::transposed(Op::T, self.w.as_slice(), kp);
+        let b_src = self.im2col_panel(x.as_slice(), x.rows(), false);
+        let ep = match mode {
+            Mode::Eval => Epilogue::BiasAct {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                out: out.as_mut_slice(),
+            },
+            Mode::Train => Epilogue::BiasActStash {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                prime: self.activation.prime_kernel::<T>(),
+                out: out.as_mut_slice(),
+                stash: &mut work.as_mut_slice()[..f * n],
+            },
         };
-        gemm::gemm_slices_ep(
-            Op::T,
-            self.w.as_slice(),
-            kp,
-            Op::N,
-            work.as_slice(),
-            kp,
-            f,
-            p * b,
-            kp,
-            cache.as_mut_slice(),
-            false,
-            ep,
-            scratch,
-        );
+        gemm::gemm_sources_ep(&a_src, &b_src, f, n, kp, cache.as_mut_slice(), false, ep, scratch);
     }
 
     fn backward_batch_into(
         &self,
-        _x: &Matrix<T>,
+        x: &Matrix<T>,
         d_out: &mut Matrix<T>,
         d_in: Option<&mut Matrix<T>>,
-        cache: &Matrix<T>,
+        _cache: &Matrix<T>,
         work: &mut Matrix<T>,
         grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
         scratch: &mut GemmScratch<T>,
@@ -1084,51 +1279,58 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
         let b = d_out.cols();
         let (kp, p, f) = (self.patch_len(), self.out_plane(), self.filters());
         let q = p * b;
-        // δ = dC/dA ⊙ σ'(Z), in place on the incoming delta.
-        for (dv, &zv) in d_out.as_mut_slice().iter_mut().zip(cache.as_slice()) {
-            *dv = *dv * self.activation.prime(zv);
+        // δ = dC/dA ⊙ σ'(Z), in place on the incoming delta. The σ'
+        // factor was stashed by the train-mode fused forward epilogue
+        // (same value the old recomputation from cached Z produced, so
+        // conv numerics stay bit-identical).
+        for (dv, &pv) in d_out.as_mut_slice().iter_mut().zip(&work.as_slice()[..f * q]) {
+            *dv = *dv * pv;
         }
         if let Some((dw, db)) = grads {
-            // dW += col [K, Q] · δᵀ [Q, f] — one GEMM sums the batch.
-            gemm::gemm_slices(
-                Op::N,
-                work.as_slice(),
-                kp,
-                Op::T,
-                d_out.as_slice(),
-                f,
-                kp,
-                f,
-                q,
-                dw.as_mut_slice(),
-                true,
-                scratch,
-            );
+            // dW [K, f] += col [K, Q] · δᵀ [Q, f] — one implicit GEMM
+            // sums the batch, packing colᵀ straight from the forward
+            // input (no panel was ever materialized to reuse).
+            let a_src = self.im2col_panel(x.as_slice(), x.rows(), true);
+            let b_src = MatPanel::new(Op::T, d_out.as_slice(), f);
+            gemm::gemm_sources(&a_src, &b_src, kp, f, q, dw.as_mut_slice(), true, scratch);
             // db[c] += Σ over every output position of δ[c, ·].
             for drow in d_out.as_slice().chunks_exact(f) {
                 vecops::axpy(db, T::ONE, drow);
             }
         }
         if let Some(d_in) = d_in {
-            // dcol [K, Q] = W [K, f] · δ [f, Q], overwriting the im2col
-            // panel (dW is done with it), then scatter-add per column.
-            gemm::gemm_slices(
-                Op::N,
-                self.w.as_slice(),
-                kp,
-                Op::N,
-                d_out.as_slice(),
-                f,
-                kp,
-                q,
-                f,
-                work.as_mut_slice(),
-                false,
-                scratch,
-            );
+            // dcol [K, Q] = W [K, f] · δ [f, Q], staged through the work
+            // buffer (the σ' stash is consumed, so the whole buffer is
+            // free) one position-chunk per image at a time, each chunk
+            // scatter-added before the next lands. Chunking the GEMM's
+            // output columns leaves every element's k-accumulation chain
+            // unchanged, and a contiguous position range keeps col2im's
+            // scatter order — dX is bit-identical to the monolithic
+            // panel under any fixed kernel.
             d_in.fill_zero();
-            for j in 0..b {
-                self.col2im(work.col(j), d_in.col_mut(j));
+            let stage = work.as_mut_slice();
+            let cap = (stage.len() / kp).max(1).min(p);
+            for jb in 0..b {
+                let mut q0 = 0usize;
+                while q0 < p {
+                    let qn = cap.min(p - q0);
+                    gemm::gemm_slices(
+                        Op::N,
+                        self.w.as_slice(),
+                        kp,
+                        Op::N,
+                        &d_out.as_slice()[(jb * p + q0) * f..(jb * p + q0 + qn) * f],
+                        f,
+                        kp,
+                        qn,
+                        f,
+                        &mut stage[..kp * qn],
+                        false,
+                        scratch,
+                    );
+                    self.col2im_range(&stage[..kp * qn], d_in.col_mut(jb), q0, qn);
+                    q0 += qn;
+                }
             }
         }
     }
@@ -1575,14 +1777,16 @@ mod tests {
         let conv = Conv2d::from_parts(img, 2, 1, w, vec![0.5], Activation::Relu);
         assert_eq!(LayerOp::<f64>::in_size(&conv), 9);
         assert_eq!(LayerOp::<f64>::out_size(&conv), 4);
-        assert_eq!(LayerOp::<f64>::work_rows(&conv), 4 * 4);
+        // max(f·P, K) = max(4, 4): σ' stash / staging only — the
+        // materialized K·P = 16-row panel is gone (implicit GEMM).
+        assert_eq!(LayerOp::<f64>::work_rows(&conv), 4);
         assert_eq!(conv.out_dims(), ImageDims::new(1, 2, 2));
 
         // x (row-major pixels) = 0..9
         let x = Matrix::from_vec(9, 1, (0..9).map(|v| v as f64).collect());
         let mut out = Matrix::zeros(4, 1);
         let mut cache = Matrix::zeros(4, 1);
-        let mut work = Matrix::zeros(16, 1);
+        let mut work = Matrix::zeros(4, 1);
         let mut scratch = GemmScratch::new();
         let mut rng = Rng::new(0);
         conv.forward_batch_into(
@@ -1661,6 +1865,56 @@ mod tests {
                         assert!((out.get(e, j) - acc.tanh()).abs() < 1e-10);
                     }
                 }
+            }
+        }
+    }
+
+    /// The implicit-GEMM forward must be **bit-identical** to the
+    /// materialized-panel oracle: both pack the same patch values in the
+    /// same order, so the kernel instruction stream never differs.
+    #[test]
+    fn conv_implicit_matches_materialized_bit_exact() {
+        let mut rng = Rng::new(77);
+        for &(c, h, w, k, s, f, batch) in &[
+            (1usize, 6usize, 6usize, 3usize, 1usize, 2usize, 3usize),
+            (2, 5, 4, 3, 2, 3, 4),
+            (3, 7, 5, 2, 1, 5, 2),
+            (1, 4, 4, 4, 2, 1, 1),
+        ] {
+            let img = ImageDims::new(c, h, w);
+            let kp = k * k * c;
+            let wts = Matrix::from_fn(kp, f, |_, _| rng.uniform_in(-1.0, 1.0));
+            let b: Vec<f64> = (0..f).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+            let conv = Conv2d::from_parts(img, k, s, wts, b, Activation::Sigmoid);
+            let o = conv.out_dims();
+            let x = Matrix::from_fn(img.len(), batch, |_, _| rng.uniform_in(-1.0, 1.0));
+            let mut scratch = GemmScratch::new();
+
+            let mut want_out = Matrix::zeros(o.len(), batch);
+            let mut want_z = Matrix::zeros(o.len(), batch);
+            let mut panel = Matrix::zeros(conv.patch_len() * conv.out_plane(), batch);
+            conv.forward_batch_materialized(&x, &mut want_out, &mut want_z, &mut panel, &mut scratch);
+
+            let mut out = Matrix::zeros(o.len(), batch);
+            let mut cache = Matrix::zeros(o.len(), batch);
+            let mut work = Matrix::zeros(LayerOp::<f64>::work_rows(&conv), batch);
+            let mut mask = Rng::new(0);
+            conv.forward_batch_into(
+                &x,
+                &mut out,
+                &mut cache,
+                &mut work,
+                &mut scratch,
+                Mode::Train,
+                &mut mask,
+            );
+            assert_eq!(cache, want_z, "c{c} {h}x{w} k{k} s{s} f{f} b{batch}: Z");
+            assert_eq!(out, want_out, "c{c} {h}x{w} k{k} s{s} f{f} b{batch}: σ(Z)");
+            // The train-mode stash must hold σ'(Z) for the fused backward.
+            let stash = &work.as_slice()[..o.len() * batch];
+            for (sv, zv) in stash.iter().zip(cache.as_slice()) {
+                let sig = 1.0 / (1.0 + (-zv).exp());
+                assert!((sv - sig * (1.0 - sig)).abs() < 1e-12, "σ'(Z) stash");
             }
         }
     }

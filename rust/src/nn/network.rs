@@ -46,7 +46,8 @@ pub struct Network<T = f32> {
     sizes: Vec<usize>,
     /// Negotiated cache rows per boundary (0 for stateless ops).
     cache_rows: Vec<usize>,
-    /// Negotiated working-buffer rows per boundary (conv im2col panels).
+    /// Negotiated working-buffer rows per boundary (the dense/conv σ′
+    /// stash and conv's backward staging strip).
     work_rows: Vec<usize>,
     /// Op index of each parameter-owning op (dense/conv), in order —
     /// block `k` of a [`Gradients`] belongs to op `param_ops[k]`.
@@ -1102,8 +1103,9 @@ mod tests {
         assert_eq!(net.cache_rows(), &[0, 32, 8, 0, 3]);
         assert_eq!(
             net.work_rows(),
-            &[0, 9 * 16, 0, 0, 3],
-            "conv negotiates its im2col panel; dense its σ' stash"
+            &[0, 32, 0, 0, 3],
+            "conv negotiates its σ' stash (max(f·P, K) = 32, not the old K·P = 144 \
+             im2col panel — implicit GEMM packs patches on the fly); dense its σ' stash"
         );
         assert_eq!(net.param_op_count(), 2);
         assert_eq!(net.conv_count(), 1);
@@ -1320,7 +1322,7 @@ mod tests {
     }
 
     /// Conv workspaces shrink and regrow across ragged batches exactly
-    /// like dense ones (the im2col panel resizes in place).
+    /// like dense ones (the work buffers resize in place).
     #[test]
     fn conv_workspace_reuse_across_batch_sizes_matches_fresh() {
         let net = conv_net(29);

@@ -5,8 +5,10 @@
 //! pipeline needs: per-op activations `A`, per-op caches (pre-activation
 //! `Z` for dense/conv, the applied mask for dropout, argmax indices for
 //! maxpool — whatever [`crate::nn::LayerOp::cache_rows`] negotiated),
-//! per-op working buffers (the conv im2col panel, via
-//! [`crate::nn::LayerOp::work_rows`]), backward deltas `Δ`, the GEMM
+//! per-op working buffers (the dense/conv σ' stash and conv's backward
+//! staging strip, via [`crate::nn::LayerOp::work_rows`] — conv forward
+//! packs im2col patches lazily inside the GEMM, so no materialized
+//! panel is ever negotiated), backward deltas `Δ`, the GEMM
 //! packing scratch, and one mask RNG per op (dropout's stochastic state
 //! lives *here*, not in the op, so ops stay `&self` on the hot path and
 //! mask streams are deterministic per workspace).
@@ -34,7 +36,8 @@ pub struct Workspace<T = f32> {
     /// Cache rows per boundary: `cache_rows[i]` is op `i-1`'s negotiated
     /// cache height (0 = stateless op). Index 0 is always 0.
     cache_rows: Vec<usize>,
-    /// Working-buffer rows per boundary (op `i-1`'s im2col panel etc.).
+    /// Working-buffer rows per boundary (op `i-1`'s σ' stash / backward
+    /// staging strip etc.).
     work_rows: Vec<usize>,
     /// Per-op caches; index 0 is an empty placeholder for index parity
     /// with the paper's 1-based layers.
@@ -177,6 +180,23 @@ impl<T: Scalar> Workspace<T> {
         self.batch
     }
 
+    /// Total bytes currently held by this workspace's buffers — every
+    /// cache/work/activation/delta matrix plus the GEMM packing scratch
+    /// high-water mark. This is the peak-workspace figure the conv bench
+    /// reports when comparing implicit GEMM against the materialized
+    /// im2col panel.
+    pub fn bytes(&self) -> usize {
+        let mats = self
+            .z
+            .iter()
+            .chain(&self.work)
+            .chain(&self.a)
+            .chain(&self.delta)
+            .map(|m| m.len() * core::mem::size_of::<T>())
+            .sum::<usize>();
+        mats + self.scratch.bytes()
+    }
+
     /// Re-shape the forward (`z`/`a`/`work`) buffers to `batch` columns.
     /// Allocation-free once the workspace has been warmed at this or a
     /// larger batch size.
@@ -302,15 +322,27 @@ mod tests {
             7,
         );
         let mut ws = Workspace::for_net(&net);
-        // conv: out 2x4x4=32, K=9, P=16 -> work 144; pool: out 2x2x2=8.
+        // conv: out 2x4x4=32, K=9, P=16 -> work max(f*P, K) = 32; pool: out 2x2x2=8.
         assert_eq!(ws.sizes(), &[36, 32, 8, 8, 3]);
         ws.bind(4);
         assert_eq!(ws.z[1].rows(), 32, "conv caches pre-activations");
-        assert_eq!(ws.work[1].rows(), 9 * 16, "conv negotiates its im2col panel");
+        assert_eq!(
+            ws.work[1].rows(),
+            32,
+            "conv stashes σ' (f·P rows) — implicit GEMM killed the K·P im2col panel"
+        );
+        assert!(
+            ws.work[1].rows() < 9 * 16,
+            "conv work must be smaller than the old materialized panel"
+        );
         assert_eq!(ws.z[2].rows(), 8, "maxpool caches argmax indices");
         assert_eq!(ws.work[2].rows(), 0);
         assert_eq!(ws.z[3].rows(), 0, "flatten is stateless");
         assert!(ws.fits(net.boundary_sizes(), net.cache_rows(), net.work_rows()));
+        let bytes = ws.bytes();
+        assert!(bytes > 0, "bound workspace reports its footprint");
+        ws.bind(8);
+        assert!(ws.bytes() > bytes, "footprint grows with the bound batch");
     }
 
     /// Distinct streams derive distinct (but deterministic) mask RNGs —

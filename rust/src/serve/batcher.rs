@@ -459,7 +459,7 @@ fn run_batch(
         || net.work_rows() != &work[..]
     {
         // Hot reload changed the architecture (layer sizes or op
-        // shapes, incl. conv im2col panels): re-warm (one-off
+        // shapes, incl. conv work rows): re-warm (one-off
         // allocation, deliberately off the steady-state path).
         *sizes = net.boundary_sizes().to_vec();
         *cache = net.cache_rows().to_vec();

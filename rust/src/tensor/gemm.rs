@@ -17,12 +17,25 @@
 //! ```
 //!
 //! The `mr x nr` microkernel is **runtime-dispatched** through
-//! [`crate::tensor::simd`]: AVX2+FMA tiles on x86_64, NEON tiles on
-//! aarch64, and the portable scalar tile everywhere else (pinnable via
-//! `PALLAS_FORCE_SCALAR=1`). Packing strips follow the active kernel's
-//! tile geometry, and partial edge tiles are zero-padded in the packs
-//! (adding `x·0` is exact for finite floats), so every kernel's hot loop
-//! is branch-free.
+//! [`crate::tensor::simd`]: AVX-512 and AVX2+FMA tiles on x86_64, NEON
+//! tiles on aarch64, and the portable scalar tile everywhere else
+//! (pinnable via `PALLAS_FORCE_KERNEL=scalar|avx2|avx512|neon`). Packing
+//! strips follow the active kernel's tile geometry, and partial edge
+//! tiles are zero-padded in the packs (adding `x·0` is exact for finite
+//! floats), so every kernel's hot loop is branch-free.
+//!
+//! **Packing is operand-source-agnostic.** The packer consumes a
+//! [`PanelSource`]: a logical `k x n` matrix it asks for one
+//! `[kc x nc]` block at a time. [`MatPanel`] packs from a materialized
+//! column-major slice (the classic path, transposition absorbed);
+//! `nn::layers::Im2colPanel` packs conv patches straight from the HWC
+//! input with on-the-fly index math — *implicit GEMM* in the cuDNN
+//! sense, where the im2col panel never exists in memory and peak conv
+//! workspace is the `O(KC·NC)` pack blocks instead of
+//! `O(k²·c·plane·batch)`. Because a source produces exactly the values
+//! the materialized panel would hold, in the same packed order, the
+//! kernel instruction stream — and therefore the result, bit for bit —
+//! is identical for both paths under any fixed tile kernel.
 //!
 //! The optional [`Epilogue`] fuses the per-row bias add and the
 //! activation (and optionally its derivative stash) into the C-write:
@@ -79,6 +92,96 @@ pub struct GemmScratch<T> {
 impl<T: Scalar> GemmScratch<T> {
     pub fn new() -> Self {
         Self { pack_a: Vec::new(), pack_b: Vec::new() }
+    }
+
+    /// High-water-mark footprint of the pack buffers in bytes. The
+    /// buffers only ever grow, so this is the peak GEMM workspace a
+    /// scratch has needed — what the conv benches report as
+    /// `peak_workspace_bytes`. Bounded by the cache-blocking constants
+    /// (`KC·(MC+mr) + KC·(NC+nr)` elements), never by operand shape.
+    pub fn bytes(&self) -> usize {
+        (self.pack_a.len() + self.pack_b.len()) * std::mem::size_of::<T>()
+    }
+}
+
+/// A logical `k x n` operand the packer can draw panels from without the
+/// matrix ever being materialized. `pack_panel` must fill `out` with
+/// rows `pc..pc+kc` × columns `jstart..jstart+nc`, laid out in `r`-wide
+/// strips: strip `s` holds columns `s*r..`, k-major with `r` contiguous
+/// elements per k, zero-padded past the column edge (`out` is sized for
+/// whole strips). The A-operand is packed through the same interface as
+/// its transpose: `op(A)ᵀ` is a `k x m` logical matrix, and the B-style
+/// strip layout of `op(A)ᵀ` with `r = mr` is exactly the classic packed
+/// A block.
+///
+/// Contract: for fixed indices the source must always produce the same
+/// values the materialized matrix would hold at those coordinates — the
+/// packed panels, and hence the GEMM result, are then bit-identical to
+/// the materialized path under any fixed tile kernel.
+pub trait PanelSource<T: Scalar> {
+    #[allow(clippy::too_many_arguments)]
+    fn pack_panel(&self, pc: usize, kc: usize, jstart: usize, nc: usize, r: usize, out: &mut [T]);
+
+    /// Trace-span override for the packing phase (`None` = the generic
+    /// `pack_a`/`pack_b` names); on-the-fly sources report their own
+    /// phase (conv's `Im2colPanel` shows up as `pack_tile`).
+    fn span_name(&self) -> Option<&'static str> {
+        None
+    }
+}
+
+/// [`PanelSource`] over a materialized column-major slice — the classic
+/// packing path, with transposition absorbed into the index math.
+#[derive(Debug, Clone, Copy)]
+pub struct MatPanel<'a, T> {
+    op: Op,
+    data: &'a [T],
+    ld: usize,
+}
+
+impl<'a, T: Scalar> MatPanel<'a, T> {
+    /// B-side view: presents `op(b)` as the logical `k x n` matrix.
+    pub fn new(op: Op, data: &'a [T], ld: usize) -> Self {
+        Self { op, data, ld }
+    }
+
+    /// A-side view: presents `op(a)ᵀ` as the logical `k x m` matrix the
+    /// packer consumes (flipping the stored orientation, so the element
+    /// reads match the classic packed-A layout).
+    pub fn transposed(op: Op, data: &'a [T], ld: usize) -> Self {
+        let flipped = match op {
+            Op::N => Op::T,
+            Op::T => Op::N,
+        };
+        Self { op: flipped, data, ld }
+    }
+}
+
+impl<T: Scalar> PanelSource<T> for MatPanel<'_, T> {
+    fn pack_panel(&self, pc: usize, kc: usize, jstart: usize, nc: usize, r: usize, out: &mut [T]) {
+        let mut s = 0usize;
+        let mut jr = 0usize;
+        while jr < nc {
+            let r_eff = r.min(nc - jr);
+            let strip = &mut out[s * kc * r..(s + 1) * kc * r];
+            for k in 0..kc {
+                let kg = pc + k;
+                let dst = &mut strip[k * r..k * r + r];
+                for (jj, d) in dst.iter_mut().enumerate() {
+                    *d = if jj < r_eff {
+                        let j = jstart + jr + jj;
+                        match self.op {
+                            Op::N => self.data[kg + j * self.ld],
+                            Op::T => self.data[j + kg * self.ld],
+                        }
+                    } else {
+                        T::ZERO
+                    };
+                }
+            }
+            s += 1;
+            jr += r;
+        }
     }
 }
 
@@ -259,6 +362,44 @@ pub fn gemm_slices_ep<T: Scalar>(
     gemm_panels(op_a, a, lda, op_b, b, ldb, m, k, 0, n, c, accumulate, ep, scratch);
 }
 
+/// `c = A · B` (or `c += ...`) where both operands are [`PanelSource`]s —
+/// the implicit-GEMM entry point. `a_src` must present `Aᵀ` as a logical
+/// `k x m` matrix (see [`MatPanel::transposed`] for the materialized
+/// case), `b_src` presents `B` as `k x n`. Same blocked schedule,
+/// runtime-dispatched tile kernel, and zero-steady-state-allocation
+/// behaviour as [`gemm_slices`]; no operand is ever materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_sources<T: Scalar>(
+    a_src: &dyn PanelSource<T>,
+    b_src: &dyn PanelSource<T>,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [T],
+    accumulate: bool,
+    scratch: &mut GemmScratch<T>,
+) {
+    gemm_sources_ep(a_src, b_src, m, n, k, c, accumulate, Epilogue::None, scratch);
+}
+
+/// [`gemm_sources`] with a fused [`Epilogue`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_sources_ep<T: Scalar>(
+    a_src: &dyn PanelSource<T>,
+    b_src: &dyn PanelSource<T>,
+    m: usize,
+    n: usize,
+    k: usize,
+    c: &mut [T],
+    accumulate: bool,
+    ep: Epilogue<'_, T>,
+    scratch: &mut GemmScratch<T>,
+) {
+    assert_eq!(c.len(), m * n, "gemm_sources: output size mismatch");
+    let kern = T::tile_kernel(simd::kind());
+    gemm_panels_src(&kern, a_src, b_src, m, k, 0, n, c, accumulate, ep, scratch);
+}
+
 /// Column-sharded threaded variant: output columns are split into
 /// `threads` contiguous ranges (contiguous memory in column-major order),
 /// each computed on the persistent worker pool with private scratch.
@@ -365,7 +506,8 @@ fn gemm_cols<T: Scalar>(
 }
 
 /// Slice-level blocked driver shared by every entry point; fetches the
-/// runtime-dispatched tile kernel and delegates to [`gemm_panels_with`].
+/// runtime-dispatched tile kernel and delegates to [`gemm_panels_src`]
+/// through [`MatPanel`] views of the two slices.
 #[allow(clippy::too_many_arguments)]
 fn gemm_panels<T: Scalar>(
     op_a: Op,
@@ -389,8 +531,8 @@ fn gemm_panels<T: Scalar>(
     )
 }
 
-/// The blocked schedule, parameterized over the tile kernel (packing
-/// strips follow its `mr`/`nr`). Tests drive this directly with
+/// Materialized-operand wrapper over [`gemm_panels_src`], parameterized
+/// over the tile kernel. Tests drive this directly with
 /// [`simd::scalar_kernel`] to pin bit-exact behaviour independent of the
 /// host's dispatch.
 #[allow(clippy::too_many_arguments)]
@@ -402,6 +544,28 @@ fn gemm_panels_with<T: Scalar>(
     op_b: Op,
     bd: &[T],
     ldb: usize,
+    m: usize,
+    kk: usize,
+    j0: usize,
+    jn: usize,
+    c: &mut [T],
+    accumulate: bool,
+    ep: Epilogue<'_, T>,
+    scratch: &mut GemmScratch<T>,
+) {
+    let a_src = MatPanel::transposed(op_a, ad, lda);
+    let b_src = MatPanel::new(op_b, bd, ldb);
+    gemm_panels_src(kern, &a_src, &b_src, m, kk, j0, jn, c, accumulate, ep, scratch)
+}
+
+/// The blocked schedule over two [`PanelSource`]s (packing strips follow
+/// the kernel's `mr`/`nr`). Every entry point — materialized or implicit
+/// — bottoms out here.
+#[allow(clippy::too_many_arguments)]
+fn gemm_panels_src<T: Scalar>(
+    kern: &TileKernel<T>,
+    a_src: &dyn PanelSource<T>,
+    b_src: &dyn PanelSource<T>,
     m: usize,
     kk: usize,
     j0: usize,
@@ -452,8 +616,11 @@ fn gemm_panels_with<T: Scalar>(
                 // GEMM phase spans record per *cache block*, not per tile:
                 // coarse enough to stay branch-only cheap, fine enough to
                 // show the pack/kernel/epilogue time split in Perfetto.
-                let _pack = trace::span_args("pack_b", "gemm", kc as u64, nc as u64);
-                pack_panel_b(op_b, bd, ldb, pc, kc, j0 + jc, nc, nr, pack_b);
+                // On-the-fly sources rename the phase (conv's implicit
+                // im2col shows as `pack_tile`).
+                let name = b_src.span_name().unwrap_or("pack_b");
+                let _pack = trace::span_args(name, "gemm", kc as u64, nc as u64);
+                b_src.pack_panel(pc, kc, j0 + jc, nc, nr, pack_b);
             }
 
             let mut ic = 0;
@@ -465,8 +632,9 @@ fn gemm_panels_with<T: Scalar>(
                     pack_a.resize(need_a, T::ZERO);
                 }
                 {
-                    let _pack = trace::span_args("pack_a", "gemm", mc as u64, kc as u64);
-                    pack_block_a(op_a, ad, lda, ic, mc, pc, kc, mr, pack_a);
+                    let name = a_src.span_name().unwrap_or("pack_a");
+                    let _pack = trace::span_args(name, "gemm", mc as u64, kc as u64);
+                    a_src.pack_panel(pc, kc, ic, mc, mr, pack_a);
                 }
 
                 let _kernel = trace::span_args("kernel", "gemm", mc as u64, nc as u64);
@@ -529,86 +697,6 @@ fn apply_epilogue<T: Scalar>(
                 (*prime)(z, &mut stash[j * m..(j + 1) * m]);
             }
         }
-    }
-}
-
-/// Pack `op(B)[pc..pc+kc, jstart..jstart+nc]` into `nr`-wide strips:
-/// strip `s` holds columns `s*nr..`, laid out k-major with `nr`
-/// contiguous elements per k (zero-padded past the edge).
-#[allow(clippy::too_many_arguments)]
-fn pack_panel_b<T: Scalar>(
-    op: Op,
-    b: &[T],
-    ldb: usize,
-    pc: usize,
-    kc: usize,
-    jstart: usize,
-    nc: usize,
-    nr: usize,
-    out: &mut [T],
-) {
-    let mut s = 0usize;
-    let mut jr = 0usize;
-    while jr < nc {
-        let nr_eff = nr.min(nc - jr);
-        let strip = &mut out[s * kc * nr..(s + 1) * kc * nr];
-        for k in 0..kc {
-            let kg = pc + k;
-            let dst = &mut strip[k * nr..k * nr + nr];
-            for (jj, d) in dst.iter_mut().enumerate() {
-                *d = if jj < nr_eff {
-                    let j = jstart + jr + jj;
-                    match op {
-                        Op::N => b[kg + j * ldb],
-                        Op::T => b[j + kg * ldb],
-                    }
-                } else {
-                    T::ZERO
-                };
-            }
-        }
-        s += 1;
-        jr += nr;
-    }
-}
-
-/// Pack `op(A)[istart..istart+mc, pc..pc+kc]` into `mr`-tall strips:
-/// strip `s` holds rows `s*mr..`, laid out k-major with `mr` contiguous
-/// elements per k (zero-padded past the edge).
-#[allow(clippy::too_many_arguments)]
-fn pack_block_a<T: Scalar>(
-    op: Op,
-    a: &[T],
-    lda: usize,
-    istart: usize,
-    mc: usize,
-    pc: usize,
-    kc: usize,
-    mr: usize,
-    out: &mut [T],
-) {
-    let mut s = 0usize;
-    let mut ir = 0usize;
-    while ir < mc {
-        let mr_eff = mr.min(mc - ir);
-        let strip = &mut out[s * kc * mr..(s + 1) * kc * mr];
-        for k in 0..kc {
-            let kg = pc + k;
-            let dst = &mut strip[k * mr..k * mr + mr];
-            for (ii, d) in dst.iter_mut().enumerate() {
-                *d = if ii < mr_eff {
-                    let i = istart + ir + ii;
-                    match op {
-                        Op::N => a[i + kg * lda],
-                        Op::T => a[kg + i * lda],
-                    }
-                } else {
-                    T::ZERO
-                };
-            }
-        }
-        s += 1;
-        ir += mr;
     }
 }
 
@@ -939,5 +1027,100 @@ mod tests {
         let a = Matrix::<f32>::zeros(2, 3);
         let b = Matrix::<f32>::zeros(4, 2);
         gemm_dims(Op::N, &a, Op::N, &b);
+    }
+
+    /// A `PanelSource` that *generates* its elements on demand — stands
+    /// in for the conv `Im2colPanel` to pin the implicit-GEMM contract
+    /// at the gemm layer: a lazy source must be **bit-identical** to the
+    /// materialized matrix holding the same values, because packing
+    /// produces the same panel bytes in the same order.
+    struct FnSource {
+        k: usize,
+        f: fn(usize, usize) -> f64,
+    }
+
+    impl PanelSource<f64> for FnSource {
+        fn pack_panel(
+            &self,
+            pc: usize,
+            kc: usize,
+            jstart: usize,
+            nc: usize,
+            r: usize,
+            out: &mut [f64],
+        ) {
+            let mut s = 0usize;
+            let mut jr = 0usize;
+            while jr < nc {
+                let r_eff = r.min(nc - jr);
+                let strip = &mut out[s * kc * r..(s + 1) * kc * r];
+                for k in 0..kc {
+                    let dst = &mut strip[k * r..k * r + r];
+                    for (jj, d) in dst.iter_mut().enumerate() {
+                        *d = if jj < r_eff { (self.f)(pc + k, jstart + jr + jj) } else { 0.0 };
+                    }
+                }
+                s += 1;
+                jr += r;
+            }
+        }
+
+        fn span_name(&self) -> Option<&'static str> {
+            Some("pack_tile")
+        }
+    }
+
+    #[test]
+    fn lazy_source_bit_equal_to_materialized() {
+        fn gen_a(k: usize, i: usize) -> f64 {
+            ((k * 31 + i * 7) % 23) as f64 * 0.125 - 1.0
+        }
+        fn gen_b(k: usize, j: usize) -> f64 {
+            ((k * 13 + j * 3) % 17) as f64 * 0.25 - 2.0
+        }
+        // Shapes straddle the blocking constants (k > KC, n with strip
+        // remainders) so every pack edge case runs on both paths.
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (9, 5, 7), (30, 33, 300), (17, 2, 13)] {
+            // Materialized reference: A stored m x k (Op::N), B stored k x n.
+            let a = Matrix::from_fn(m, k, |i, kk| gen_a(kk, i));
+            let b = Matrix::from_fn(k, n, |kk, j| gen_b(kk, j));
+            let mut want = Matrix::zeros(m, n);
+            let mut scratch = GemmScratch::new();
+            gemm_into(Op::N, &a, Op::N, &b, &mut want, false, &mut scratch);
+
+            let a_src = FnSource { k, f: gen_a };
+            let b_src = FnSource { k, f: gen_b };
+            assert_eq!(a_src.k, k);
+            let mut got = vec![0.0f64; m * n];
+            gemm_sources(&a_src, &b_src, m, n, k, &mut got, false, &mut scratch);
+            assert_eq!(got, want.as_slice(), "{m}x{n}x{k}: implicit vs materialized");
+
+            // Accumulate path too (the conv dW pattern).
+            gemm_sources(&a_src, &b_src, m, n, k, &mut got, true, &mut scratch);
+            let doubled: Vec<f64> = want.as_slice().iter().map(|&v| 2.0 * v).collect();
+            assert_eq!(got, doubled, "{m}x{n}x{k}: accumulate");
+        }
+    }
+
+    /// Peak scratch is bounded by the blocking constants, not the
+    /// operand shape — the memory contract implicit conv relies on.
+    #[test]
+    fn scratch_bytes_bounded_by_pack_blocks() {
+        let mut scratch = GemmScratch::new();
+        assert_eq!(scratch.bytes(), 0);
+        let mut rng = Rng::new(8);
+        let a = rand_matrix(70, 500, &mut rng); // k > KC, m < MC
+        let b = rand_matrix(500, 90, &mut rng);
+        let mut c = Matrix::zeros(70, 90);
+        gemm_into(Op::N, &a, Op::N, &b, &mut c, false, &mut scratch);
+        let kern = f64::tile_kernel(simd::kind());
+        let bound = KC * (MC + kern.mr) + KC * (NC + kern.nr);
+        assert!(scratch.bytes() > 0, "packing must have used the scratch");
+        assert!(
+            scratch.bytes() <= bound * std::mem::size_of::<f64>(),
+            "scratch {} exceeds pack-block bound {}",
+            scratch.bytes(),
+            bound * std::mem::size_of::<f64>()
+        );
     }
 }

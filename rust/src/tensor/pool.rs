@@ -28,6 +28,16 @@
 //! the batch from the queue *before* waiting for `done == total &&
 //! active == 0`, so no worker can begin or still hold a checkout when the
 //! caller's stack frame (and the batch with it) goes away.
+//!
+//! The pool is sized by one **process-wide thread budget** ([`budget`]):
+//! an explicit [`set_budget`] (the `--threads` CLI flag / `[parallel]
+//! threads` TOML key) wins over the `PALLAS_THREADS` environment
+//! variable, which wins over detected hardware parallelism. The budget
+//! freezes when the pool spawns; every threaded path — pooled GEMM
+//! shards, sharded batch forwards, and `train_parallel`'s per-image
+//! fan-out (via [`crate::coordinator::divide_budget`]) — divides this
+//! one number instead of each consulting the hardware independently, so
+//! nested parallelism cannot oversubscribe the host.
 
 use crate::metrics::trace;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -80,12 +90,58 @@ struct Pool {
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
+/// The resolved process-wide thread budget; 0 means "not yet resolved".
+static BUDGET: AtomicUsize = AtomicUsize::new(0);
+
+fn resolve_budget() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        let n: usize = v
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("PALLAS_THREADS={v:?} is not a thread count"));
+        return n.max(1);
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide thread budget: how many threads, total, the engine
+/// may keep busy at once. Precedence: explicit [`set_budget`] (CLI flag,
+/// then TOML) > `PALLAS_THREADS` > detected hardware parallelism. Always
+/// at least 1. Resolved once and cached; frozen for good when the worker
+/// pool spawns.
+pub fn budget() -> usize {
+    let cur = BUDGET.load(Ordering::SeqCst);
+    if cur != 0 {
+        return cur;
+    }
+    let resolved = resolve_budget();
+    // First resolver wins; a racing explicit set_budget also wins — we
+    // simply return whatever ended up stored.
+    match BUDGET.compare_exchange(0, resolved, Ordering::SeqCst, Ordering::SeqCst) {
+        Ok(_) => resolved,
+        Err(v) => v,
+    }
+}
+
+/// Explicitly pin the process-wide thread budget (the `--threads` CLI
+/// flag and `[parallel] threads` TOML key land here, in that precedence
+/// order — callers apply CLI last). Returns `false` without changing
+/// anything if the pool has already spawned: the budget is frozen once
+/// worker threads exist, because they cannot be resized.
+pub fn set_budget(threads: usize) -> bool {
+    if POOL.get().is_some() {
+        return false;
+    }
+    BUDGET.store(threads.max(1), Ordering::SeqCst);
+    true
+}
+
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
         // The caller participates in every batch, so N-1 workers saturate
-        // N hardware threads; capped to keep the park/wake fan-out sane.
-        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        let workers = hw.saturating_sub(1).min(15);
+        // a budget of N threads; capped to keep the park/wake fan-out sane.
+        let budget = budget();
+        let workers = budget.saturating_sub(1).min(15);
         let shared: &'static Shared = Box::leak(Box::new(Shared {
             queue: Mutex::new(Vec::with_capacity(32)),
             work_cv: Condvar::new(),
@@ -101,7 +157,7 @@ fn pool() -> &'static Pool {
                 .spawn(move || worker_loop(shared, wid))
                 .expect("failed to spawn pool worker");
         }
-        crate::log_info!("pool: {workers} persistent worker(s) ({hw} hw threads)");
+        crate::log_info!("pool: {workers} persistent worker(s) (thread budget {budget})");
         Pool { shared, workers }
     })
 }
@@ -333,6 +389,28 @@ mod tests {
         for (i, &v) in data.iter().enumerate() {
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    fn budget_is_at_least_one_and_stable() {
+        let b = budget();
+        assert!(b >= 1, "budget must cover the calling thread");
+        assert_eq!(budget(), b, "budget is resolved once and cached");
+    }
+
+    #[test]
+    fn budget_freezes_once_pool_spawns() {
+        let _ = workers(); // force the pool into existence
+        let before = budget();
+        assert!(!set_budget(before + 7), "set_budget must refuse after spawn");
+        assert_eq!(budget(), before, "a refused set must not change the budget");
+    }
+
+    #[test]
+    fn workers_never_exceed_budget() {
+        // The sizing contract: N-1 workers for a budget of N, capped at
+        // 15 (the caller is the Nth thread). Workers + caller ≤ budget.
+        assert_eq!(workers(), budget().saturating_sub(1).min(15));
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! x86_64 AVX-512F microkernels: 16x8 f32 / 8x8 f64 GEMM tiles and the
+//! vectorized epilogue activations (relu bit-exact with the scalar
+//! formula; sigmoid/tanh through the same Cephes-style polynomial `exp`
+//! as the AVX2 kernels, widened to 16 lanes).
+//!
+//! Every function here is reached only through the dispatch table in the
+//! parent module, which selects AVX-512 after
+//! `is_x86_feature_detected!("avx512f")` — the `unsafe` blocks below rely
+//! on exactly that guarantee. The whole module additionally sits behind
+//! the `pallas_avx512` cfg from `build.rs` (the `_mm512` intrinsics need
+//! rustc >= 1.89; the crate MSRV is older).
+
+use super::{ActId, SliceFn, TileKernel};
+use std::arch::x86_64::*;
+
+/// 16x8 f32 tile: one `__m512` A-column per k-step against 8 broadcast B
+/// values — 8 FMA accumulators plus the A stream leave over half the
+/// 32-register zmm file free, so the loop never spills.
+pub(crate) fn f32_kernel() -> TileKernel<f32> {
+    TileKernel { mr: 16, nr: 8, name: "avx512f 16x8", tile: tile_f32 }
+}
+
+/// 8x8 f64 tile: one `__m512d` A-column per k-step, 8 FMA accumulators.
+pub(crate) fn f64_kernel() -> TileKernel<f64> {
+    TileKernel { mr: 8, nr: 8, name: "avx512f 8x8", tile: tile_f64 }
+}
+
+fn tile_f32(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 16 && bpan.len() >= kc * 8);
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { tile_f32_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn tile_f32_impl(
+    kc: usize,
+    apan: &[f32],
+    bpan: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [_mm512_setzero_ps(); 8];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a = _mm512_loadu_ps(ap);
+        for (j, accj) in acc.iter_mut().enumerate() {
+            *accj = _mm512_fmadd_ps(a, _mm512_set1_ps(*bp.add(j)), *accj);
+        }
+        ap = ap.add(16);
+        bp = bp.add(8);
+    }
+    if mr_eff == 16 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            _mm512_storeu_ps(cp, _mm512_add_ps(_mm512_loadu_ps(cp), *accj));
+        }
+    } else {
+        let mut buf = [0.0f32; 16];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            _mm512_storeu_ps(buf.as_mut_ptr(), *accj);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+fn tile_f64(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    debug_assert!(apan.len() >= kc * 8 && bpan.len() >= kc * 8);
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { tile_f64_impl(kc, apan, bpan, c, ldc, mr_eff, nr_eff) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn tile_f64_impl(
+    kc: usize,
+    apan: &[f64],
+    bpan: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr_eff: usize,
+    nr_eff: usize,
+) {
+    let mut acc = [_mm512_setzero_pd(); 8];
+    let mut ap = apan.as_ptr();
+    let mut bp = bpan.as_ptr();
+    for _ in 0..kc {
+        let a = _mm512_loadu_pd(ap);
+        for (j, accj) in acc.iter_mut().enumerate() {
+            *accj = _mm512_fmadd_pd(a, _mm512_set1_pd(*bp.add(j)), *accj);
+        }
+        ap = ap.add(8);
+        bp = bp.add(8);
+    }
+    if mr_eff == 8 {
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            let cp = c.as_mut_ptr().add(j * ldc);
+            _mm512_storeu_pd(cp, _mm512_add_pd(_mm512_loadu_pd(cp), *accj));
+        }
+    } else {
+        let mut buf = [0.0f64; 8];
+        for (j, accj) in acc.iter().enumerate().take(nr_eff) {
+            _mm512_storeu_pd(buf.as_mut_ptr(), *accj);
+            for (i, &v) in buf.iter().enumerate().take(mr_eff) {
+                c[j * ldc + i] += v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Epilogue activation kernels
+// ---------------------------------------------------------------------
+
+/// The vectorized f32 epilogue kernel for an activation (and its prime).
+pub(crate) fn act_kernel(id: ActId, prime: bool) -> SliceFn<f32> {
+    match (id, prime) {
+        (ActId::Relu, false) => relu_ps,
+        (ActId::Relu, true) => relu_prime_ps,
+        (ActId::Sigmoid, false) => sigmoid_ps,
+        (ActId::Sigmoid, true) => sigmoid_prime_ps,
+        (ActId::Tanh, false) => tanh_ps,
+        (ActId::Tanh, true) => tanh_prime_ps,
+    }
+}
+
+fn relu_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { relu_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn relu_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = _mm512_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        // max(v, 0) matches `if v > 0 { v } else { 0 }` bit-for-bit,
+        // including -0.0 -> +0.0 and NaN -> 0 (vmaxps yields the second
+        // operand unless the first compares strictly greater).
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_max_ps(v, zero));
+        i += 16;
+    }
+    while i < n {
+        let v = z[i];
+        out[i] = if v > 0.0 { v } else { 0.0 };
+        i += 1;
+    }
+}
+
+fn relu_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { relu_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn relu_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let zero = _mm512_setzero_ps();
+    let one = _mm512_set1_ps(1.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        let mask = _mm512_cmp_ps_mask::<_CMP_GT_OQ>(v, zero);
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_maskz_mov_ps(mask, one));
+        i += 16;
+    }
+    while i < n {
+        out[i] = if z[i] > 0.0 { 1.0 } else { 0.0 };
+        i += 1;
+    }
+}
+
+fn sigmoid_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { sigmoid_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn sigmoid_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm512_set1_ps(1.0);
+    let zero = _mm512_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        let e = exp512(_mm512_sub_ps(zero, v));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_div_ps(one, _mm512_add_ps(one, e)));
+        i += 16;
+    }
+    while i < n {
+        out[i] = 1.0 / (1.0 + (-z[i]).exp());
+        i += 1;
+    }
+}
+
+fn sigmoid_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { sigmoid_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn sigmoid_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm512_set1_ps(1.0);
+    let zero = _mm512_setzero_ps();
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        let e = exp512(_mm512_sub_ps(zero, v));
+        let s = _mm512_div_ps(one, _mm512_add_ps(one, e));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_mul_ps(s, _mm512_sub_ps(one, s)));
+        i += 16;
+    }
+    while i < n {
+        let s = 1.0 / (1.0 + (-z[i]).exp());
+        out[i] = s * (1.0 - s);
+        i += 1;
+    }
+}
+
+fn tanh_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { tanh_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn tanh_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm512_set1_ps(1.0);
+    let two = _mm512_set1_ps(2.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        // tanh(v) = 1 - 2/(e^{2v} + 1); exp512's clamp saturates the
+        // tails to exactly ±1.
+        let e = exp512(_mm512_add_ps(v, v));
+        let t = _mm512_sub_ps(one, _mm512_div_ps(two, _mm512_add_ps(e, one)));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), t);
+        i += 16;
+    }
+    while i < n {
+        out[i] = z[i].tanh();
+        i += 1;
+    }
+}
+
+fn tanh_prime_ps(z: &[f32], out: &mut [f32]) {
+    assert_eq!(z.len(), out.len());
+    // SAFETY: dispatch selected AVX-512 via runtime feature detection.
+    unsafe { tanh_prime_impl(z, out) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn tanh_prime_impl(z: &[f32], out: &mut [f32]) {
+    let n = z.len();
+    let one = _mm512_set1_ps(1.0);
+    let two = _mm512_set1_ps(2.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let v = _mm512_loadu_ps(z.as_ptr().add(i));
+        let e = exp512(_mm512_add_ps(v, v));
+        let t = _mm512_sub_ps(one, _mm512_div_ps(two, _mm512_add_ps(e, one)));
+        _mm512_storeu_ps(out.as_mut_ptr().add(i), _mm512_sub_ps(one, _mm512_mul_ps(t, t)));
+        i += 16;
+    }
+    while i < n {
+        let t = z[i].tanh();
+        out[i] = 1.0 - t * t;
+        i += 1;
+    }
+}
+
+/// Vectorized e^x — the AVX2 `exp256` (Cephes-style range reduction +
+/// degree-5 polynomial, ~2 ulp over the clamped domain) widened to 16
+/// lanes. Inputs are clamped to the finite-result range, so the tails
+/// saturate instead of overflowing.
+#[target_feature(enable = "avx512f")]
+unsafe fn exp512(x: __m512) -> __m512 {
+    const EXP_HI: f32 = 88.376_26;
+    const EXP_LO: f32 = -88.376_26;
+    const LOG2EF: f32 = 1.442_695;
+    // Cody–Waite split of ln 2 (C1 exactly representable).
+    const C1: f32 = 0.693_359_375;
+    const C2: f32 = -2.121_944_4e-4;
+    const P0: f32 = 1.987_569_1e-4;
+    const P1: f32 = 1.398_2e-3;
+    const P2: f32 = 8.333_452e-3;
+    const P3: f32 = 4.166_58e-2;
+    const P4: f32 = 1.666_666_5e-1;
+    const P5: f32 = 5.0e-1;
+    let one = _mm512_set1_ps(1.0);
+    let x = _mm512_min_ps(_mm512_set1_ps(EXP_HI), _mm512_max_ps(_mm512_set1_ps(EXP_LO), x));
+    // n = floor(x * log2(e) + 0.5); r = x - n*ln2 in two steps.
+    // roundscale imm 0x01 = round toward -inf at full precision.
+    let fx = _mm512_roundscale_ps::<0x01>(_mm512_fmadd_ps(
+        x,
+        _mm512_set1_ps(LOG2EF),
+        _mm512_set1_ps(0.5),
+    ));
+    let r = _mm512_fnmadd_ps(fx, _mm512_set1_ps(C1), x);
+    let r = _mm512_fnmadd_ps(fx, _mm512_set1_ps(C2), r);
+    let mut y = _mm512_set1_ps(P0);
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(P1));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(P2));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(P3));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(P4));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(P5));
+    let r2 = _mm512_mul_ps(r, r);
+    y = _mm512_fmadd_ps(y, r2, _mm512_add_ps(r, one));
+    // Scale by 2^n through the exponent field.
+    let n = _mm512_cvtps_epi32(fx);
+    let pow2n =
+        _mm512_castsi512_ps(_mm512_slli_epi32::<23>(_mm512_add_epi32(n, _mm512_set1_epi32(127))));
+    _mm512_mul_ps(y, pow2n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::simd::{detected, KernelKind};
+
+    fn avx512_available() -> bool {
+        detected() == KernelKind::Avx512
+    }
+
+    #[test]
+    fn f32_tile_matches_scalar_reference() {
+        if !avx512_available() {
+            eprintln!("SKIP: host has no AVX-512F");
+            return;
+        }
+        let k = f32_kernel();
+        let (mr, nr, kc) = (k.mr, k.nr, 17usize);
+        let apan: Vec<f32> = (0..kc * mr).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+        let bpan: Vec<f32> = (0..kc * nr).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        for (mr_eff, nr_eff) in [(mr, nr), (3, nr), (mr, 2), (1, 1), (11, 5)] {
+            let mut got = vec![0.5f32; mr * nr];
+            let mut want = got.clone();
+            (k.tile)(kc, &apan, &bpan, &mut got, mr, mr_eff, nr_eff);
+            for j in 0..nr_eff {
+                for i in 0..mr_eff {
+                    let mut acc = 0.0f64;
+                    for kk in 0..kc {
+                        acc += apan[kk * mr + i] as f64 * bpan[kk * nr + j] as f64;
+                    }
+                    want[j * mr + i] += acc as f32;
+                }
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "tile {mr_eff}x{nr_eff}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn f64_tile_matches_scalar_reference() {
+        if !avx512_available() {
+            eprintln!("SKIP: host has no AVX-512F");
+            return;
+        }
+        let k = f64_kernel();
+        let (mr, nr, kc) = (k.mr, k.nr, 23usize);
+        let apan: Vec<f64> = (0..kc * mr).map(|i| ((i % 11) as f64 - 5.0) * 0.5).collect();
+        let bpan: Vec<f64> = (0..kc * nr).map(|i| ((i % 5) as f64 - 2.0) * 0.75).collect();
+        for (mr_eff, nr_eff) in [(mr, nr), (3, nr), (mr, 2), (1, 1), (5, 3)] {
+            let mut got = vec![0.25f64; mr * nr];
+            let mut want = got.clone();
+            (k.tile)(kc, &apan, &bpan, &mut got, mr, mr_eff, nr_eff);
+            for j in 0..nr_eff {
+                for i in 0..mr_eff {
+                    let mut acc = 0.0f64;
+                    for kk in 0..kc {
+                        acc += apan[kk * mr + i] * bpan[kk * nr + j];
+                    }
+                    want[j * mr + i] += acc;
+                }
+            }
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "tile {mr_eff}x{nr_eff}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn exp_poly_tracks_libm() {
+        if !avx512_available() {
+            eprintln!("SKIP: host has no AVX-512F");
+            return;
+        }
+        let xs: Vec<f32> = (-1000..=1000).map(|i| i as f32 * 0.05).collect();
+        let mut got = vec![0.0f32; xs.len()];
+        // Drive exp through the sigmoid kernel: s = 1/(1+e^{-x}).
+        sigmoid_ps(&xs, &mut got);
+        for (&x, &s) in xs.iter().zip(&got) {
+            let want = 1.0f64 / (1.0 + (-x as f64).exp());
+            assert!((s as f64 - want).abs() < 1e-6, "sigmoid({x}) = {s}, want {want}");
+        }
+        let mut t = vec![0.0f32; xs.len()];
+        tanh_ps(&xs, &mut t);
+        for (&x, &tv) in xs.iter().zip(&t) {
+            let want = (x as f64).tanh();
+            assert!((tv as f64 - want).abs() < 1e-6, "tanh({x}) = {tv}, want {want}");
+        }
+    }
+
+    #[test]
+    fn relu_kernels_are_bit_exact() {
+        if !avx512_available() {
+            eprintln!("SKIP: host has no AVX-512F");
+            return;
+        }
+        let mut xs: Vec<f32> = vec![-2.0, -0.0, 0.0, 1.5, f32::NAN, 3.0, -7.25, 0.125, 9.0];
+        // Pad past one full 16-lane vector so the SIMD path runs.
+        xs.extend((0..16).map(|i| i as f32 - 8.0));
+        let mut got = vec![9.9f32; xs.len()];
+        relu_ps(&xs, &mut got);
+        for (&x, &g) in xs.iter().zip(&got) {
+            let want = if x > 0.0 { x } else { 0.0 };
+            assert_eq!(g.to_bits(), want.to_bits(), "relu({x})");
+        }
+        let mut gp = vec![9.9f32; xs.len()];
+        relu_prime_ps(&xs, &mut gp);
+        for (&x, &g) in xs.iter().zip(&gp) {
+            let want = if x > 0.0 { 1.0f32 } else { 0.0 };
+            assert_eq!(g.to_bits(), want.to_bits(), "relu'({x})");
+        }
+    }
+}

@@ -3,20 +3,29 @@
 //! The blocked GEMM of [`crate::tensor::gemm`] bottoms out in an `MR x NR`
 //! register tile. The portable tile ([`scalar_kernel`]) is a generic loop
 //! the compiler auto-vectorizes on a good day; this module adds *explicit*
-//! arch kernels — AVX2+FMA on `x86_64` ([`avx2`], wider 8x8 f32 tiles),
-//! NEON on `aarch64` ([`neon`]) — selected **once at runtime** and cached:
+//! arch kernels — AVX-512 on `x86_64` ([`avx512`], 16x8 f32 / 8x8 f64
+//! tiles, when both the host CPU and the toolchain support it), AVX2+FMA
+//! ([`avx2`], 8x8 f32 tiles), NEON on `aarch64` ([`neon`]) — selected
+//! **once at runtime** and cached:
 //!
 //! - [`kind`] probes the host (`is_x86_feature_detected!`-style) on first
 //!   use and caches the answer in an atomic;
-//! - `PALLAS_FORCE_SCALAR=1` in the environment pins the portable scalar
-//!   kernel (the fallback CI keeps honest with a dedicated job);
+//! - `PALLAS_FORCE_KERNEL=scalar|avx2|avx512|neon` pins any *supported*
+//!   tile (CI uses it to run the full suite under every kernel); the
+//!   historical `PALLAS_FORCE_SCALAR=1` is kept as an alias for
+//!   `PALLAS_FORCE_KERNEL=scalar`;
 //! - [`force`] lets tests and benches flip the dispatch explicitly to
 //!   compare paths inside one process.
 //!
+//! The AVX-512 kernels additionally sit behind the `pallas_avx512` cfg
+//! emitted by `build.rs` when rustc >= 1.89 (where the `_mm512` intrinsics
+//! stabilized); on the MSRV toolchain the dispatch simply never offers
+//! them, same as on a host without `avx512f`.
+//!
 //! The same table carries the vectorized **epilogue** activation kernels
-//! (relu on both arches — bit-exact with the scalar formula — plus
-//! sigmoid/tanh via a polynomial `exp` on AVX2), which the fused GEMM
-//! epilogue of [`crate::tensor::gemm::Epilogue`] consumes. Numerics
+//! (relu on every arch — bit-exact with the scalar formula — plus
+//! sigmoid/tanh via a polynomial `exp` on AVX2/AVX-512), which the fused
+//! GEMM epilogue of [`crate::tensor::gemm::Epilogue`] consumes. Numerics
 //! contract: for a *fixed* kernel choice results are deterministic, and
 //! the scalar kernel reproduces the pre-dispatch engine bit-for-bit; SIMD
 //! kernels may differ from scalar by FMA/reassociation at ulp scale
@@ -24,6 +33,8 @@
 
 #[cfg(target_arch = "x86_64")]
 mod avx2;
+#[cfg(all(target_arch = "x86_64", pallas_avx512))]
+mod avx512;
 #[cfg(target_arch = "aarch64")]
 mod neon;
 
@@ -41,6 +52,9 @@ pub enum KernelKind {
     Scalar,
     /// x86_64 AVX2 + FMA tiles.
     Avx2,
+    /// x86_64 AVX-512 tiles (needs `avx512f` *and* a rustc new enough to
+    /// build them — see the module doc).
+    Avx512,
     /// aarch64 NEON tiles.
     Neon,
 }
@@ -50,6 +64,7 @@ impl KernelKind {
         match self {
             Self::Scalar => "scalar",
             Self::Avx2 => "avx2+fma",
+            Self::Avx512 => "avx512",
             Self::Neon => "neon",
         }
     }
@@ -98,6 +113,7 @@ const CODE_UNSET: u8 = 0;
 const CODE_SCALAR: u8 = 1;
 const CODE_AVX2: u8 = 2;
 const CODE_NEON: u8 = 3;
+const CODE_AVX512: u8 = 4;
 
 /// Cached dispatch decision (0 = not yet probed).
 static ACTIVE: AtomicU8 = AtomicU8::new(CODE_UNSET);
@@ -106,19 +122,22 @@ fn code(kind: KernelKind) -> u8 {
     match kind {
         KernelKind::Scalar => CODE_SCALAR,
         KernelKind::Avx2 => CODE_AVX2,
+        KernelKind::Avx512 => CODE_AVX512,
         KernelKind::Neon => CODE_NEON,
     }
 }
 
 /// The kernel family the active dispatch uses. First call probes the host
-/// (honoring `PALLAS_FORCE_SCALAR=1`); later calls are one atomic load.
+/// (honoring `PALLAS_FORCE_KERNEL` / the `PALLAS_FORCE_SCALAR=1` alias);
+/// later calls are one atomic load.
 pub fn kind() -> KernelKind {
     match ACTIVE.load(Ordering::Relaxed) {
         CODE_SCALAR => KernelKind::Scalar,
         CODE_AVX2 => KernelKind::Avx2,
+        CODE_AVX512 => KernelKind::Avx512,
         CODE_NEON => KernelKind::Neon,
         _ => {
-            let k = if force_scalar_env() { KernelKind::Scalar } else { detected() };
+            let k = forced_env().unwrap_or_else(detected);
             ACTIVE.store(code(k), Ordering::Relaxed);
             k
         }
@@ -127,15 +146,15 @@ pub fn kind() -> KernelKind {
 
 /// Override the dispatch (tests and benches compare paths inside one
 /// process). `None` restores the automatic probe on next use. Forcing a
-/// SIMD kind the host does not support would execute illegal
-/// instructions, so only [`KernelKind::Scalar`] and [`detected`] are
-/// accepted.
+/// SIMD kind the host (or this build) cannot execute would run illegal
+/// instructions, so only [`supported`] kinds are accepted — which
+/// includes pinning a *narrower* kind (e.g. AVX2 on an AVX-512 host).
 pub fn force(kind: Option<KernelKind>) {
     match kind {
         Some(k) => {
             assert!(
-                k == KernelKind::Scalar || k == detected(),
-                "cannot force {k:?}: host supports {:?}",
+                supported(k),
+                "cannot force {k:?}: this host/build supports up to {:?}",
                 detected()
             );
             ACTIVE.store(code(k), Ordering::Relaxed);
@@ -144,14 +163,66 @@ pub fn force(kind: Option<KernelKind>) {
     }
 }
 
-fn force_scalar_env() -> bool {
-    std::env::var_os("PALLAS_FORCE_SCALAR").is_some_and(|v| v == "1")
+/// Parse a `PALLAS_FORCE_KERNEL` value. Unknown names are a hard error —
+/// a silently ignored typo would un-pin a CI leg that exists precisely to
+/// pin the kernel.
+fn parse_force_kernel(v: &str) -> KernelKind {
+    match v.to_ascii_lowercase().as_str() {
+        "scalar" => KernelKind::Scalar,
+        "avx2" => KernelKind::Avx2,
+        "avx512" => KernelKind::Avx512,
+        "neon" => KernelKind::Neon,
+        other => panic!(
+            "PALLAS_FORCE_KERNEL={other:?} is not a kernel name \
+             (expected scalar|avx2|avx512|neon)"
+        ),
+    }
+}
+
+/// The env-pinned kernel, if any: `PALLAS_FORCE_KERNEL` wins, the
+/// historical `PALLAS_FORCE_SCALAR=1` is an alias for `scalar`.
+fn forced_env() -> Option<KernelKind> {
+    if let Some(v) = std::env::var_os("PALLAS_FORCE_KERNEL") {
+        let k = parse_force_kernel(&v.to_string_lossy());
+        assert!(
+            supported(k),
+            "PALLAS_FORCE_KERNEL requests {k:?}, but this host/build supports up to {:?}",
+            detected()
+        );
+        return Some(k);
+    }
+    if std::env::var_os("PALLAS_FORCE_SCALAR").is_some_and(|v| v == "1") {
+        return Some(KernelKind::Scalar);
+    }
+    None
+}
+
+/// Whether this host *and* this build can execute `kind` (the set
+/// [`force`] and `PALLAS_FORCE_KERNEL` accept). Scalar is always
+/// supported; SIMD kinds need their CPU features, and AVX-512
+/// additionally a toolchain new enough to compile its kernels.
+pub fn supported(kind: KernelKind) -> bool {
+    #[allow(unreachable_patterns)] // non-native kinds fall through per-arch
+    match kind {
+        KernelKind::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        KernelKind::Avx512 => is_x86_feature_detected!("avx512f"),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => true,
+        _ => false,
+    }
 }
 
 /// The best kernel family this host can execute (ignores the env pin and
 /// any [`force`] override).
 #[cfg(target_arch = "x86_64")]
 pub fn detected() -> KernelKind {
+    #[cfg(pallas_avx512)]
+    if is_x86_feature_detected!("avx512f") {
+        return KernelKind::Avx512;
+    }
     if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
         KernelKind::Avx2
     } else {
@@ -180,7 +251,8 @@ pub fn describe() -> String {
     let k = kind();
     format!(
         "compute dispatch: {} (f32 {}, f64 {}); fused GEMM epilogues; \
-         PALLAS_FORCE_SCALAR=1 pins the portable kernel",
+         PALLAS_FORCE_KERNEL=scalar|avx2|avx512|neon pins a tile \
+         (PALLAS_FORCE_SCALAR=1 = scalar)",
         k.name(),
         f32::tile_kernel(k).name,
         f64::tile_kernel(k).name,
@@ -231,6 +303,8 @@ pub(crate) fn f32_tile_kernel(kind: KernelKind) -> TileKernel<f32> {
     match kind {
         #[cfg(target_arch = "x86_64")]
         KernelKind::Avx2 => avx2::f32_kernel(),
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        KernelKind::Avx512 => avx512::f32_kernel(),
         #[cfg(target_arch = "aarch64")]
         KernelKind::Neon => neon::f32_kernel(),
         _ => scalar_kernel::<f32>(),
@@ -242,6 +316,8 @@ pub(crate) fn f64_tile_kernel(kind: KernelKind) -> TileKernel<f64> {
     match kind {
         #[cfg(target_arch = "x86_64")]
         KernelKind::Avx2 => avx2::f64_kernel(),
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        KernelKind::Avx512 => avx512::f64_kernel(),
         #[cfg(target_arch = "aarch64")]
         KernelKind::Neon => neon::f64_kernel(),
         _ => scalar_kernel::<f64>(),
@@ -254,6 +330,8 @@ pub(crate) fn f32_act_kernel(id: ActId, prime: bool) -> Option<SliceFn<f32>> {
     match kind() {
         #[cfg(target_arch = "x86_64")]
         KernelKind::Avx2 => Some(avx2::act_kernel(id, prime)),
+        #[cfg(all(target_arch = "x86_64", pallas_avx512))]
+        KernelKind::Avx512 => Some(avx512::act_kernel(id, prime)),
         #[cfg(target_arch = "aarch64")]
         KernelKind::Neon => neon::act_kernel(id, prime),
         _ => None,
@@ -312,12 +390,32 @@ mod tests {
     fn kind_is_stable_across_calls() {
         assert_eq!(kind(), kind());
         let k = detected();
-        assert!(matches!(k, KernelKind::Scalar | KernelKind::Avx2 | KernelKind::Neon));
+        assert!(matches!(
+            k,
+            KernelKind::Scalar | KernelKind::Avx2 | KernelKind::Avx512 | KernelKind::Neon
+        ));
+    }
+
+    #[test]
+    fn supported_covers_scalar_and_detected() {
+        assert!(supported(KernelKind::Scalar), "scalar is always runnable");
+        assert!(supported(detected()), "the detected kind must be runnable");
+    }
+
+    #[test]
+    fn force_kernel_names_parse() {
+        assert_eq!(parse_force_kernel("scalar"), KernelKind::Scalar);
+        assert_eq!(parse_force_kernel("AVX2"), KernelKind::Avx2, "names are case-insensitive");
+        assert_eq!(parse_force_kernel("avx512"), KernelKind::Avx512);
+        assert_eq!(parse_force_kernel("neon"), KernelKind::Neon);
+        let err = std::panic::catch_unwind(|| parse_force_kernel("avx9000"));
+        assert!(err.is_err(), "unknown kernel names must be a hard error");
     }
 
     #[test]
     fn describe_names_the_kernels() {
         let line = describe();
+        assert!(line.contains("PALLAS_FORCE_KERNEL"), "{line}");
         assert!(line.contains("PALLAS_FORCE_SCALAR"), "{line}");
         assert!(line.contains(kind().name()), "{line}");
     }

@@ -1,7 +1,7 @@
 //! aarch64 NEON microkernels: 8x4 f32 / 4x4 f64 GEMM tiles and the relu
 //! epilogue pair. NEON is baseline on aarch64, so no runtime feature
 //! probe is needed — the dispatch table still routes through
-//! [`super::kind`] so `PALLAS_FORCE_SCALAR=1` and [`super::force`] work
+//! [`super::kind`] so `PALLAS_FORCE_KERNEL` and [`super::force`] work
 //! identically on ARM hosts.
 //!
 //! The transcendental epilogues (sigmoid/tanh) intentionally stay on the

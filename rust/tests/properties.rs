@@ -5,9 +5,10 @@ use neural_rs::collectives::{Communicator, LocalComm, ReduceAlgo, Team};
 use neural_rs::coordinator::{BatchStrategy, Trainer, TrainerOptions};
 use neural_rs::data::{label_digits, shard_bounds, synthesize, Dataset};
 use neural_rs::nn::{
-    cross_entropy_cost, Activation, Gradients, ImageDims, LayerSpec, Mode, Network, Workspace,
+    cross_entropy_cost, Activation, Conv2d, Gradients, ImageDims, LayerOp, LayerSpec, Mode,
+    Network, Workspace,
 };
-use neural_rs::tensor::{vecops, Matrix, Rng};
+use neural_rs::tensor::{vecops, GemmScratch, Matrix, Rng};
 use neural_rs::testkit::{check, ensure};
 
 /// co_sum: result equals the per-element sum of all deposits, for every
@@ -477,6 +478,113 @@ fn multichannel_conv_gradient_matches_finite_differences() {
             gflat[i]
         );
     }
+}
+
+/// Property sweep: the implicit-GEMM conv forward equals the classic
+/// materialized-im2col forward **bit-for-bit** in f64 over randomized
+/// geometries — same packed values in the same order means the same
+/// kernel instruction stream, so equality is exact, not approximate.
+#[test]
+fn prop_conv_implicit_gemm_bit_equals_materialized() {
+    check(
+        "implicit conv == materialized conv",
+        40,
+        |g| {
+            let c = g.usize_in(1, 3);
+            let k = g.usize_in(1, 4);
+            let s = g.usize_in(1, 2);
+            let h = k + g.usize_in(0, 6);
+            let w = k + g.usize_in(0, 6);
+            let f = g.usize_in(1, 5);
+            let b = g.usize_in(1, 4);
+            (c, h, w, k, s, f, b, g.rng.next_u64())
+        },
+        |&(c, h, w, k, s, f, b, seed)| {
+            let mut rng = Rng::new(seed);
+            let kp = k * k * c;
+            let wmat = Matrix::from_fn(kp, f, |_, _| rng.uniform_in(-1.0, 1.0));
+            let bias: Vec<f64> = (0..f).map(|_| rng.uniform_in(-0.5, 0.5)).collect();
+            let conv: Conv2d<f64> =
+                Conv2d::from_parts(ImageDims::new(c, h, w), k, s, wmat, bias, Activation::Sigmoid);
+            let o = conv.out_dims();
+            let (n, p) = (o.len(), o.h * o.w);
+            let x = Matrix::from_fn(c * h * w, b, |_, _| rng.uniform_in(-1.0, 1.0));
+
+            let mut out_i = Matrix::zeros(n, b);
+            let mut cache_i = Matrix::zeros(conv.cache_rows(), b);
+            let mut work = Matrix::zeros(conv.work_rows(), b);
+            let mut scratch = GemmScratch::new();
+            let mut mrng = Rng::new(1);
+            conv.forward_batch_into(
+                &x,
+                &mut out_i,
+                &mut cache_i,
+                &mut work,
+                &mut scratch,
+                Mode::Eval,
+                &mut mrng,
+            );
+
+            let mut out_m = Matrix::zeros(n, b);
+            let mut cache_m = Matrix::zeros(n, b);
+            let mut panel = Matrix::zeros(kp * p, b);
+            let mut scratch_m = GemmScratch::new();
+            conv.forward_batch_materialized(&x, &mut out_m, &mut cache_m, &mut panel, &mut scratch_m);
+
+            ensure(cache_i == cache_m, "Z differs between implicit and materialized")?;
+            ensure(out_i == out_m, "A differs between implicit and materialized")?;
+            Ok(())
+        },
+    );
+}
+
+/// The memory claim behind implicit GEMM: on a realistically sized conv,
+/// the packing scratch the implicit forward touches is a small fraction
+/// of the `K·P·B` panel the materialized path must allocate, and the
+/// negotiated per-op work buffer no longer scales with `K·P` at all.
+#[test]
+fn conv_implicit_workspace_stays_pack_block_sized() {
+    // 1x28x28 input, 5x5 kernel, 8 filters, batch 8 (MNIST-shaped).
+    let conv: Conv2d<f64> = Conv2d::from_parts(
+        ImageDims::new(1, 28, 28),
+        5,
+        1,
+        Matrix::from_fn(25, 8, |i, j| ((i * 7 + j) % 11) as f64 * 0.1 - 0.5),
+        vec![0.01; 8],
+        Activation::Relu,
+    );
+    let o = conv.out_dims();
+    let (kp, p, b) = (25usize, o.h * o.w, 8usize);
+    let x = Matrix::from_fn(28 * 28, b, |i, j| ((i + 3 * j) % 17) as f64 * 0.05);
+    let mut out = Matrix::zeros(o.len(), b);
+    let mut cache = Matrix::zeros(conv.cache_rows(), b);
+    let mut work = Matrix::zeros(conv.work_rows(), b);
+    let mut scratch = GemmScratch::new();
+    let mut mrng = Rng::new(2);
+    conv.forward_batch_into(
+        &x,
+        &mut out,
+        &mut cache,
+        &mut work,
+        &mut scratch,
+        Mode::Train,
+        &mut mrng,
+    );
+    // The σ' stash (f·P·B) is training state both paths need; what the
+    // implicit path eliminates is the K·P·B panel itself. Its packing
+    // scratch must stay a small fraction of that panel.
+    let panel_bytes = kp * p * b * std::mem::size_of::<f64>();
+    let peak = scratch.bytes();
+    assert!(
+        peak * 2 < panel_bytes,
+        "implicit pack scratch ({peak} B) must be well under the materialized panel ({panel_bytes} B)"
+    );
+    assert!(
+        conv.work_rows() < kp * p,
+        "negotiated work rows ({}) must not scale with K*P ({})",
+        conv.work_rows(),
+        kp * p
+    );
 }
 
 /// One-hot labels: a single 1 per column in the right row.

@@ -9,7 +9,9 @@
 //! [`simd::force`]: the dispatch is global, and flipping it under a
 //! concurrently running test would corrupt its same-kernel comparisons.
 
-use neural_rs::nn::{Activation, GradShards, ImageDims, LayerSpec, Network};
+use neural_rs::nn::{
+    Activation, Conv2d, GradShards, ImageDims, LayerOp, LayerSpec, Mode, Network,
+};
 use neural_rs::tensor::gemm::{self, Epilogue, GemmScratch, Op};
 use neural_rs::tensor::simd::{self, KernelKind};
 use neural_rs::tensor::{pool, vecops, Matrix, Rng, Scalar};
@@ -32,6 +34,15 @@ fn with_kind<R>(kind: KernelKind, f: impl FnOnce() -> R) -> R {
 
 fn rand_matrix<T: Scalar>(rows: usize, cols: usize, rng: &mut Rng) -> Matrix<T> {
     Matrix::from_fn(rows, cols, |_, _| T::from_f64(rng.uniform_in(-1.0, 1.0)))
+}
+
+/// Every kernel this host/build can actually run — scalar always, plus
+/// whichever SIMD tiles runtime detection admits.
+fn supported_kinds() -> Vec<KernelKind> {
+    [KernelKind::Scalar, KernelKind::Avx2, KernelKind::Avx512, KernelKind::Neon]
+        .into_iter()
+        .filter(|&k| simd::supported(k))
+        .collect()
 }
 
 /// SIMD vs scalar GEMM over every tile-remainder class (tiles are at
@@ -195,12 +206,87 @@ fn forced_scalar_dense_forward_is_bit_exact_with_legacy_two_pass() {
     });
 }
 
+/// The implicit-GEMM conv forward (patches packed lazily inside pack-B)
+/// must be **bit-identical** to the classic materialized-im2col forward
+/// under every kernel this host supports: the lazy packer emits exactly
+/// the values the materialized panel holds, in exactly the same order,
+/// so the tile kernel executes an identical instruction stream either
+/// way. Sweeps kernel size, stride, channels, and every mr/nr remainder
+/// class the small shapes produce.
+#[test]
+fn conv_implicit_gemm_matches_materialized_under_every_kernel() {
+    let _g = dispatch_lock();
+    // (in_c, h, w, kernel, stride, filters, batch)
+    let shapes = [
+        (1usize, 6usize, 6usize, 3usize, 1usize, 2usize, 3usize),
+        (2, 5, 4, 3, 2, 3, 4),
+        (3, 7, 5, 2, 1, 5, 2),
+        (1, 4, 4, 4, 2, 1, 1),
+        (2, 9, 7, 3, 3, 4, 3),
+    ];
+    for kind in supported_kinds() {
+        with_kind(kind, || {
+            let mut rng = Rng::new(0xC04);
+            for &(c, h, w, k, s, f, b) in &shapes {
+                let kp = k * k * c;
+                let wmat: Matrix<f32> = rand_matrix(kp, f, &mut rng);
+                let bias: Vec<f32> =
+                    (0..f).map(|_| rng.uniform_in(-0.5, 0.5) as f32).collect();
+                let conv = Conv2d::from_parts(
+                    ImageDims::new(c, h, w),
+                    k,
+                    s,
+                    wmat,
+                    bias,
+                    Activation::Tanh,
+                );
+                let o = conv.out_dims();
+                let (n, p) = (o.len(), o.h * o.w);
+                let x: Matrix<f32> = rand_matrix(c * h * w, b, &mut rng);
+
+                let mut out_i = Matrix::zeros(n, b);
+                let mut cache_i = Matrix::zeros(conv.cache_rows(), b);
+                let mut work = Matrix::zeros(conv.work_rows(), b);
+                let mut scratch = GemmScratch::new();
+                let mut mrng = Rng::new(1);
+                conv.forward_batch_into(
+                    &x,
+                    &mut out_i,
+                    &mut cache_i,
+                    &mut work,
+                    &mut scratch,
+                    Mode::Train,
+                    &mut mrng,
+                );
+
+                let mut out_m = Matrix::zeros(n, b);
+                let mut cache_m = Matrix::zeros(n, b);
+                let mut panel = Matrix::zeros(kp * p, b);
+                let mut scratch_m = GemmScratch::new();
+                conv.forward_batch_materialized(
+                    &x,
+                    &mut out_m,
+                    &mut cache_m,
+                    &mut panel,
+                    &mut scratch_m,
+                );
+
+                let shape = (c, h, w, k, s, f, b);
+                assert_eq!(cache_i, cache_m, "{kind:?} {shape:?}: Z must be bit-equal");
+                assert_eq!(out_i, out_m, "{kind:?} {shape:?}: A must be bit-equal");
+            }
+        });
+    }
+}
+
 /// Finite-difference gradient check through the fused
-/// conv→pool→dense→softmax stack, with the dispatch forced both ways.
+/// conv→pool→dense→softmax stack, with the dispatch forced to every
+/// kernel this host supports (the fused conv backward consumes the σ'
+/// stash the implicit forward wrote).
 #[test]
 fn fd_gradient_check_fused_conv_stack_both_dispatches() {
     let _g = dispatch_lock();
-    for kind in [KernelKind::Scalar, simd::detected()] {
+    for kind in supported_kinds() {
         with_kind(kind, || {
             let specs = vec![
                 LayerSpec::Conv2d {

@@ -1,0 +1,70 @@
+//! The process-wide thread budget, end to end: an explicit
+//! [`pool::set_budget`] (what the `--threads` CLI flag and `[parallel]
+//! threads` TOML key call) must size the persistent worker pool, freeze
+//! once workers exist, and cap `train_parallel`'s nested
+//! `images × intra_threads` fan-out via [`divide_budget`].
+//!
+//! This file deliberately contains a single `#[test]`: it runs in its own
+//! test binary, so the process starts with the pool unspawned and the
+//! budget unresolved — the only state in which the explicit-set path can
+//! be exercised (sibling tests in the library binary inevitably spawn the
+//! pool first).
+
+use neural_rs::collectives::ReduceAlgo;
+use neural_rs::coordinator::{
+    divide_budget, train_parallel, BatchStrategy, EngineKind, ParallelSpec, TrainerOptions,
+};
+use neural_rs::data::synthesize;
+use neural_rs::nn::Activation;
+use neural_rs::tensor::pool;
+
+#[test]
+fn explicit_budget_sizes_pool_and_caps_nested_fanout() {
+    // Fresh process: the explicit set must win over env/detection...
+    assert!(pool::set_budget(3), "budget must be settable before the pool spawns");
+    assert_eq!(pool::budget(), 3);
+    // ...and size the pool to budget-1 workers (the caller is the 3rd
+    // thread).
+    assert_eq!(pool::workers(), 2);
+    // Once workers exist the budget is frozen.
+    assert!(!pool::set_budget(8), "set_budget must refuse after the pool spawns");
+    assert_eq!(pool::budget(), 3, "a refused set must not change the budget");
+
+    // Nested fan-out: 2 images × a requested 8 intra threads would be 16
+    // runnable threads; the budget divides down to 1 per image.
+    assert_eq!(divide_budget(2, 8, pool::budget()), 1);
+    let train = synthesize::<f32>(400, 5);
+    let test = synthesize::<f32>(100, 6);
+    let spec = ParallelSpec {
+        images: 2,
+        algo: ReduceAlgo::Tree,
+        opts: TrainerOptions {
+            dims: vec![784, 16, 10],
+            activation: Activation::Sigmoid,
+            layers: vec![],
+            image: None,
+            eta: 3.0,
+            batch_size: 100,
+            epochs: 2,
+            seed: 1,
+            batch_seed: 2,
+            strategy: BatchStrategy::RandomStart,
+            optimizer: Default::default(),
+            intra_threads: 8, // deliberately over budget
+        },
+        engine: EngineKind::Native,
+        artifacts: None,
+        eval_each_epoch: false,
+    };
+    let report = train_parallel(&spec, &train, &test);
+    assert!(report.train_s > 0.0);
+    assert_eq!(report.stats.batches, 2 * (400 / 100));
+
+    // The pool never grew past the budget: budget-1 workers total, no
+    // matter how much nested parallelism the run requested.
+    assert_eq!(
+        pool::spawned(),
+        pool::budget() - 1,
+        "worker spawns must stay within the frozen budget"
+    );
+}

@@ -56,8 +56,11 @@ fn warmed_grad_batch_performs_zero_allocations() {
     // plus the layer-graph stack (dense→dropout→dense→softmax) and the
     // image pipeline (conv2d→maxpool2d→flatten→dense→softmax), which
     // must honor the same contract: per-op scratch (activations, caches,
-    // dropout masks, the conv im2col panel) is allocated once at
-    // workspace construction, never in the hot loop.
+    // dropout masks, the conv σ' stash) is allocated once at workspace
+    // construction, never in the hot loop. The conv path is implicit
+    // GEMM — patches pack lazily into the shared GEMM scratch, so there
+    // is no im2col panel to allocate at all, and steady state covers the
+    // lazy packer too.
     let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
     let layered = Network::<f32>::from_specs(
         784,
@@ -97,8 +100,8 @@ fn warmed_grad_batch_performs_zero_allocations() {
     let mut grads_conv = conv.zero_grads();
 
     // Warm-up: sizes every A/Z/Δ/work buffer (incl. the dropout mask
-    // cache and the conv im2col panel) and the GEMM packing scratch at
-    // the largest batch this loop will see.
+    // cache and the conv σ' stash) and the GEMM packing scratch at the
+    // largest batch this loop will see.
     for _ in 0..2 {
         grads.zero_out();
         net.grad_batch_into(&x, &y, &mut ws, &mut grads);

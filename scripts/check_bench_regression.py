@@ -11,8 +11,15 @@ Usage:
 Schema-aware:
   - dense_ops/v1 and conv_ops/v1: results[] rows keyed by
     (section, op, variant) with a samples_per_s / gflop_per_s throughput
-    field (higher is better);
+    field (higher is better) and an optional peak_workspace_bytes field
+    (lower is better);
   - serve_load/v1: modes[] keyed by name with an rps field.
+
+Intra-document gates (run on the current artifact alone, so they arm even
+while the cross-run baseline is still a placeholder):
+  - dense_ops: span tracing must cost <= 2% throughput;
+  - conv_ops: the implicit-GEMM conv forward must need strictly less
+    working memory than the materialized-im2col variant.
 
 Baselines whose "measured" flag is false (the committed placeholders from
 the toolchain-less build container) or whose metrics are null/zero carry
@@ -42,6 +49,50 @@ def metrics(doc):
             yield "mode/{}:rps".format(mode.get("name")), mode.get("rps")
     else:
         print(f"note: unknown schema '{schema}'; nothing to compare")
+
+
+def lower_is_better_metrics(doc):
+    """Yield (key, value) metrics where smaller numbers win (memory)."""
+    schema = doc.get("schema", "")
+    if schema.startswith(("dense_ops", "conv_ops")):
+        for row in doc.get("results", []):
+            key = "{}/{}/{}".format(
+                row.get("section"), row.get("op"), row.get("variant")
+            )
+            if "peak_workspace_bytes" in row:
+                yield f"{key}:peak_workspace_bytes", row["peak_workspace_bytes"]
+
+
+def check_conv_workspace(doc):
+    """Intra-document memory gate for conv_ops runs.
+
+    The conv_ops bench reports peak_workspace_bytes for the implicit-GEMM
+    forward (pack-block scratch only) and the materialized-im2col oracle
+    (the whole K·P×B panel plus scratch). When both rows are measured, the
+    implicit figure must be strictly smaller — the memory model the
+    implicit-GEMM refactor exists to provide.
+
+    Returns the number of failures (0 = ok or not applicable).
+    """
+    if not doc.get("schema", "").startswith("conv_ops"):
+        return 0
+    if not doc.get("measured", False):
+        return 0
+    rows = {}
+    for row in doc.get("results", []):
+        key = (row.get("section"), row.get("op"), row.get("variant"))
+        rows[key] = row.get("peak_workspace_bytes")
+    section, op = "conv_mnist_b32", "forward_conv"
+    imp = rows.get((section, op, "implicit"))
+    mat = rows.get((section, op, "materialized"))
+    if not imp or not mat:
+        print("  skip conv-workspace gate: implicit / materialized "
+              "peak_workspace_bytes not both measured")
+        return 0
+    status = "ok" if imp < mat else "REGRESSION"
+    print(f"  {status:>10} conv workspace {section}/{op}: "
+          f"implicit {imp} B vs materialized {mat} B")
+    return 0 if imp < mat else 1
 
 
 def check_tracing_overhead(doc, max_overhead=0.02):
@@ -100,6 +151,10 @@ def main():
         print("\nFAIL: span tracing costs more than its 2% throughput "
               "budget (blocked_tracing_on vs blocked_workspace)")
         return 1
+    if check_conv_workspace(cur):
+        print("\nFAIL: the implicit-GEMM conv forward must use less "
+              "working memory than the materialized im2col panel")
+        return 1
 
     if not base.get("measured", False):
         print(f"SKIP {args.baseline}: baseline is an unmeasured placeholder "
@@ -127,11 +182,34 @@ def main():
             failures.append((key, was, now, change))
         print(f"  {status:>10} {key}: {was:.1f} -> {now:.1f} ({change:+.1%})")
 
+    # Memory metrics regress in the opposite direction: growth beyond the
+    # threshold fails.
+    base_lower = dict(lower_is_better_metrics(base))
+    cur_lower = dict(lower_is_better_metrics(cur))
+    for key, now in cur_lower.items():
+        was = base_lower.get(key)
+        if was is None or now is None or not was or was <= 0:
+            print(f"  skip {key}: baseline={was!r} current={now!r}")
+            continue
+        compared += 1
+        change = (now - was) / was
+        status = "ok"
+        if change > args.threshold:
+            status = "REGRESSION"
+            failures.append((key, was, now, change))
+        print(f"  {status:>10} {key}: {was:.1f} -> {now:.1f} ({change:+.1%}, "
+              "lower is better)")
+
     # A measured baseline metric that vanished from the current run is a
     # silent total regression (renamed/dropped bench variant) — fail loud
     # instead of letting the surviving metrics carry the gate.
     for key, was in base_metrics.items():
         if key in cur_metrics or was is None or not was or was <= 0:
+            continue
+        print(f"  REGRESSION {key}: {was:.1f} -> MISSING from current results")
+        failures.append((key, was, float("nan"), -1.0))
+    for key, was in base_lower.items():
+        if key in cur_lower or was is None or not was or was <= 0:
             continue
         print(f"  REGRESSION {key}: {was:.1f} -> MISSING from current results")
         failures.append((key, was, float("nan"), -1.0))
