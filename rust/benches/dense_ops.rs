@@ -19,6 +19,10 @@
 //! - `threads` — the blocked path with output/batch columns sharded over
 //!               the persistent worker pool (the intra-image axis).
 //!
+//! A `seq_attn_l64_d32_b32` section times the sequence pipeline
+//! (embedding → layernorm → self-attention), whose per-sample score and
+//! value GEMMs are the attention-matmul hot path.
+//!
 //! Results are printed as a table and written to `BENCH_dense_ops.json`
 //! (overwriting the committed baseline) so later PRs have a perf
 //! trajectory to beat. A PJRT section is appended when this build carries
@@ -28,7 +32,7 @@
 
 use neural_rs::data::synthesize;
 use neural_rs::metrics::{Stopwatch, Table};
-use neural_rs::nn::{Gradients, Network, Workspace};
+use neural_rs::nn::{Gradients, LayerSpec, Network, Workspace};
 use neural_rs::tensor::simd::{self, KernelKind};
 use neural_rs::tensor::{vecops, Matrix, Rng, Summary};
 
@@ -302,6 +306,62 @@ fn main() {
         section: "mlp_784_30_10_b32",
         op: "forward_batch",
         variant: format!("blocked_threads_{threads}"),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
+    // ---- sequence pipeline: embedding → layernorm → self-attention ----
+    // The attention matmuls (Q/K/V projection plus the per-sample
+    // [len x len] score/value GEMMs through gemm_slices_ep) dominate this
+    // shape, so these rows pin the rank-aware sequence path's throughput
+    // the same way the rows above pin the dense path.
+    let seq_len = 64usize;
+    let d_model = 32usize;
+    let seq_net = Network::<f32>::from_specs_flat(
+        seq_len,
+        &[
+            LayerSpec::Embedding { vocab: 256, d_model },
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            LayerSpec::Dense { units: 10, activation: neural_rs::nn::Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ],
+        11,
+    );
+    let seq_x =
+        Matrix::<f32>::from_fn(seq_len, batch, |i, j| ((i * 31 + j * 7) % 256) as f32);
+    let seq_y = neural_rs::data::label_digits::<f32>(
+        &(0..batch).map(|j| (j % 10) as u8).collect::<Vec<_>>(),
+    );
+    println!("# seq_attention: len {seq_len} d_model {d_model} batch {batch}");
+
+    let mut seq_ws = Workspace::for_net(&seq_net);
+    let mut seq_g = seq_net.zero_grads();
+    seq_net.grad_batch_into(&seq_x, &seq_y, &mut seq_ws, &mut seq_g); // warm
+    let s = time_reps(mlp_reps, || {
+        seq_g.zero_out();
+        seq_net.grad_batch_into(&seq_x, &seq_y, &mut seq_ws, &mut seq_g);
+        std::hint::black_box(&seq_g);
+    });
+    println!("attn  grad:     {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "seq_attn_l64_d32_b32",
+        op: "grad_batch",
+        variant: "blocked_workspace".into(),
+        us_per_call: s.mean * 1e6,
+        throughput: b / s.mean,
+        throughput_unit: "samples_per_s",
+    });
+
+    let s = time_reps(mlp_reps, || {
+        std::hint::black_box(seq_net.output_batch(&seq_x));
+    });
+    println!("attn  fwd:      {:9.1} µs/call ({:9.0} samples/s)", s.mean * 1e6, b / s.mean);
+    rows.push(Row {
+        section: "seq_attn_l64_d32_b32",
+        op: "forward_batch",
+        variant: "blocked".into(),
         us_per_call: s.mean * 1e6,
         throughput: b / s.mean,
         throughput_unit: "samples_per_s",

@@ -17,7 +17,7 @@
 use neural_rs::collectives::ReduceAlgo;
 use neural_rs::coordinator::{train_parallel, EngineKind, ParallelSpec, TrainerOptions};
 use neural_rs::data::load_or_synthesize;
-use neural_rs::nn::{Activation, ImageDims, LayerSpec};
+use neural_rs::nn::{Activation, ImageDims, LayerSpec, Shape};
 
 fn main() {
     let full = std::env::var("BENCH_FULL").is_ok();
@@ -25,7 +25,7 @@ fn main() {
     // The paper's all-sigmoid quadratic-cost stack, or a layer-graph
     // variant. Cross-entropy gradients are undamped at the head, so the
     // layered configs run a smaller eta.
-    let (layers, image, eta, dims, label) = match variant.as_str() {
+    let (layers, shape, eta, dims, label) = match variant.as_str() {
         "dropout" => (
             vec![
                 LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
@@ -52,7 +52,7 @@ fn main() {
                 LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
                 LayerSpec::Softmax,
             ],
-            Some(ImageDims::new(1, 28, 28)),
+            Some(Shape::Image(ImageDims::new(1, 28, 28))),
             0.5,
             vec![784, 8 * 13 * 13, 10],
             "conv-pool-flatten-dense-softmax",
@@ -86,7 +86,7 @@ fn main() {
             dims,
             activation: Activation::Sigmoid,
             layers,
-            image,
+            shape,
             eta,
             batch_size: 1000,
             epochs,

@@ -39,7 +39,7 @@ fn run_child(engine: EngineKind) {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: vec![],
-            image: None,
+            shape: None,
             eta: 3.0,
             batch_size: 32, // Keras' default batch size, as the paper uses
             epochs,

@@ -47,7 +47,7 @@ fn main() {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
                 layers: vec![],
-                image: None,
+                shape: None,
                 eta: 3.0,
                 batch_size: 1200,
                 epochs,
@@ -91,7 +91,7 @@ fn main() {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
                 layers: vec![],
-                image: None,
+                shape: None,
                 eta: 3.0,
                 batch_size: 1200,
                 epochs,

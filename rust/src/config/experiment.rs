@@ -4,7 +4,7 @@
 use super::toml::{self, TomlError, TomlValue};
 use crate::collectives::ReduceAlgo;
 use crate::coordinator::{BatchStrategy, EngineKind, TrainerOptions};
-use crate::nn::{validate_specs_image, Activation, ImageDims, LayerSpec, OptimizerKind};
+use crate::nn::{validate_specs_shape, Activation, ImageDims, LayerSpec, OptimizerKind, Shape};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -108,9 +108,13 @@ pub struct ExperimentConfig {
     // one op; the old dims+activation pair is accepted and desugars to
     // an all-dense pipeline (empty `layers` here).
     pub layers: Vec<LayerSpec>,
-    /// `[model] image = [c, h, w]` — input geometry for pipelines with
-    /// conv2d/maxpool2d layers. `None` for flat (dense-chain) inputs.
-    pub image: Option<ImageDims>,
+    /// `[model] shape` — the rank-aware input shape of the layer
+    /// pipeline: `shape = [784]` (flat), `shape = [1, 28, 28]` (image),
+    /// `shape = [64, 32]` (sequence of 64 positions × d_model 32), or
+    /// `seq = N` (N token ids feeding an embedding layer). The old
+    /// `input = N` / `image = [c, h, w]` keys still work (deprecated)
+    /// and desugar into this. `None` for the flat [network] dims form.
+    pub shape: Option<Shape>,
     // [training]
     pub eta: f64,
     pub batch_size: usize,
@@ -160,7 +164,7 @@ impl Default for ExperimentConfig {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: Vec::new(),
-            image: None,
+            shape: None,
             eta: 3.0,
             batch_size: 1000,
             epochs: 30,
@@ -319,10 +323,58 @@ impl ExperimentConfig {
         // actionable message, not as a panic deep in construction.
         let has_layer_tables = doc.contains_key("model.layers.0");
         if doc.contains_key("model") || has_layer_tables {
-            // Optional image geometry: `image = [c, h, w]`. Conv/pool
-            // layers require it; with it, `input` may be omitted (it is
-            // then derived as c*h*w).
-            let image = match doc.get("model").and_then(|t| t.get("image")) {
+            // Rank-aware input shape. The canonical key is `shape`:
+            //   shape = [784]        → Flat(784)
+            //   shape = [64, 32]     → Seq{len: 64, d_model: 32}
+            //   shape = [1, 28, 28]  → Image(1×28×28)
+            // `seq = N` is sugar for a flat run of N token ids (the
+            // embedding front-end), and the pre-redesign `input = N` /
+            // `image = [c, h, w]` keys still desugar here (deprecated).
+            let model_t = doc.get("model");
+            let shape_key = match model_t.and_then(|t| t.get("shape")) {
+                None => None,
+                Some(v) => {
+                    let dims = v
+                        .as_usize_array()
+                        .filter(|d| matches!(d.len(), 1..=3) && d.iter().all(|&x| x > 0))
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(
+                                "[model] shape must be 1-3 positive integers: \
+                                 shape = [784] (flat), shape = [len, d_model] (sequence), \
+                                 or shape = [c, h, w] (image)"
+                                    .into(),
+                            )
+                        })?;
+                    Some(match dims[..] {
+                        [n] => Shape::Flat(n),
+                        [len, d_model] => Shape::Seq { len, d_model },
+                        [c, h, w] => Shape::Image(ImageDims::new(c, h, w)),
+                        _ => unreachable!("length filtered to 1..=3"),
+                    })
+                }
+            };
+            let seq_key = match model_t.and_then(|t| t.get("seq")) {
+                None => None,
+                Some(v) => Some(
+                    v.as_int()
+                        .and_then(|i| usize::try_from(i).ok())
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(
+                                "[model] seq must be a positive integer (the number of \
+                                 token ids per sample, e.g. seq = 64)"
+                                    .into(),
+                            )
+                        })?,
+                ),
+            };
+            // `vocab` at [model] level: the default vocabulary for
+            // embedding layers that omit their own `vocab` key.
+            let model_vocab = match model_t {
+                Some(t) => get_usize(t, "vocab", 0)?,
+                None => 0,
+            };
+            let image = match model_t.and_then(|t| t.get("image")) {
                 None => None,
                 Some(v) => {
                     let dims = v
@@ -331,31 +383,65 @@ impl ExperimentConfig {
                         .ok_or_else(|| {
                             ConfigError::Invalid(
                                 "[model] image must be three positive integers \
-                                 [channels, height, width], e.g. image = [1, 28, 28]"
+                                 [channels, height, width], e.g. image = [1, 28, 28] \
+                                 (deprecated: prefer shape = [c, h, w])"
                                     .into(),
                             )
                         })?;
                     Some(ImageDims::new(dims[0], dims[1], dims[2]))
                 }
             };
-            let input = match doc.get("model").and_then(|t| t.get("input")) {
-                Some(v) => v
-                    .as_int()
-                    .and_then(|i| usize::try_from(i).ok())
-                    .filter(|&i| i > 0)
-                    .ok_or_else(|| {
-                        ConfigError::Invalid(
-                            "[model] input must be a positive integer (the sample size, \
-                             e.g. input = 784)"
-                                .into(),
-                        )
-                    })?,
-                None => match image {
-                    Some(img) => img.len(),
-                    None => {
+            let legacy_input = match model_t.and_then(|t| t.get("input")) {
+                None => None,
+                Some(v) => Some(
+                    v.as_int()
+                        .and_then(|i| usize::try_from(i).ok())
+                        .filter(|&i| i > 0)
+                        .ok_or_else(|| {
+                            ConfigError::Invalid(
+                                "[model] input must be a positive integer (the sample \
+                                 size, e.g. input = 784; deprecated: prefer \
+                                 shape = [784])"
+                                    .into(),
+                            )
+                        })?,
+                ),
+            };
+            if shape_key.is_some() && seq_key.is_some() {
+                return bad("[model] 'shape' and 'seq' are alternatives; keep one");
+            }
+            if (shape_key.is_some() || seq_key.is_some())
+                && (legacy_input.is_some() || image.is_some())
+            {
+                return bad(
+                    "[model] 'input'/'image' are deprecated spellings of 'shape' and \
+                     cannot be combined with it; keep just 'shape = [...]' (or 'seq = N')",
+                );
+            }
+            let shape = match (shape_key, seq_key) {
+                (Some(s), _) => s,
+                (None, Some(n)) => Shape::Flat(n),
+                (None, None) => match (legacy_input, image) {
+                    (Some(input), Some(img)) if input != img.len() => {
+                        return bad(format!(
+                            "[model] image is {}x{}x{} = {} elements but input is {input} \
+                             (drop the redundant 'input'; both keys are deprecated — \
+                             prefer a single 'shape = [c, h, w]')",
+                            img.c,
+                            img.h,
+                            img.w,
+                            img.len(),
+                        ))
+                    }
+                    (_, Some(img)) => Shape::Image(img),
+                    (Some(input), None) => Shape::Flat(input),
+                    (None, None) => {
                         return bad(
-                            "[model] needs 'input = N' (the sample size) or \
-                             'image = [c, h, w]' before its [[model.layers]] entries",
+                            "[model] needs 'shape = [...]' before its [[model.layers]] \
+                             entries — shape = [784] (flat), shape = [1, 28, 28] (image), \
+                             shape = [64, 32] (sequence), or seq = N for token ids (the \
+                             old 'input = N' / 'image = [c, h, w]' keys still work but \
+                             are deprecated)",
                         )
                     }
                 },
@@ -428,27 +514,54 @@ impl ExperimentConfig {
                         specs.push(LayerSpec::MaxPool2d { kernel, stride });
                     }
                     "flatten" => specs.push(LayerSpec::Flatten),
+                    "embedding" => {
+                        let vocab = get_usize(lt, "vocab", model_vocab)?;
+                        let d_model = get_usize(lt, "d_model", 0)?;
+                        if vocab == 0 || d_model == 0 {
+                            return bad(format!(
+                                "[[model.layers]] #{i}: embedding needs 'vocab = V' \
+                                 (here or as a [model] vocab key) and 'd_model = D' \
+                                 (both positive)"
+                            ));
+                        }
+                        specs.push(LayerSpec::Embedding { vocab, d_model });
+                    }
+                    "layernorm" => specs.push(LayerSpec::LayerNorm),
+                    "linear2d" => {
+                        let units = get_usize(lt, "units", 0)?;
+                        // Per-position projections default to no
+                        // nonlinearity, unlike dense.
+                        let act = get_str(lt, "activation", "linear")?;
+                        let activation = Activation::parse(act).ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "[[model.layers]] #{i}: unknown activation '{act}'"
+                            ))
+                        })?;
+                        specs.push(LayerSpec::Linear2d { units, activation });
+                    }
+                    "self_attention" => specs.push(LayerSpec::SelfAttention),
                     "" => {
                         return bad(format!(
                             "[[model.layers]] #{i}: missing 'type' \
-                             (dense | dropout | softmax | conv2d | maxpool2d | flatten)"
+                             (dense | dropout | softmax | conv2d | maxpool2d | flatten | \
+                             embedding | layernorm | linear2d | self_attention)"
                         ))
                     }
                     other => {
                         return bad(format!(
                             "[[model.layers]] #{i}: unknown layer type '{other}' \
                              (expected dense | dropout | softmax | conv2d | maxpool2d | \
-                             flatten)"
+                             flatten | embedding | layernorm | linear2d | self_attention)"
                         ))
                     }
                 }
                 i += 1;
             }
-            let chain = validate_specs_image(input, image, &specs)
+            let chain = validate_specs_shape(shape, &specs)
                 .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
             cfg.dims = chain;
             cfg.layers = specs;
-            cfg.image = image;
+            cfg.shape = Some(shape);
             // Keep the display/default activation in sync with the first
             // dense layer.
             if let Some(LayerSpec::Dense { activation, .. }) =
@@ -575,7 +688,8 @@ impl ExperimentConfig {
         if !self.layers.is_empty() {
             // A CLI --dims override cannot coexist with a [model] layer
             // pipeline: the dims are derived from the pipeline.
-            let chain = validate_specs_image(self.dims[0], self.image, &self.layers)
+            let shape = self.shape.unwrap_or(Shape::Flat(self.dims[0]));
+            let chain = validate_specs_shape(shape, &self.layers)
                 .map_err(|e| ConfigError::Invalid(format!("[model] layers invalid: {e}")))?;
             if chain != self.dims {
                 return bad(
@@ -611,7 +725,7 @@ impl ExperimentConfig {
             dims: self.dims.clone(),
             activation: self.activation,
             layers: self.layers.clone(),
-            image: self.image,
+            shape: self.shape,
             eta: self.eta,
             batch_size: self.batch_size,
             epochs: self.epochs,
@@ -799,7 +913,7 @@ mod tests {
         // conv (stride defaults to 1): 8x26x26; pool (stride defaults to
         // kernel): 8x13x13; flatten: 1352.
         assert_eq!(c.dims, vec![784, 8 * 26 * 26, 10]);
-        assert_eq!(c.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(c.shape, Some(Shape::Image(ImageDims::new(1, 28, 28))));
         assert_eq!(c.layers.len(), 5);
         assert_eq!(
             c.layers[0],
@@ -808,8 +922,110 @@ mod tests {
         assert_eq!(c.layers[1], LayerSpec::MaxPool2d { kernel: 2, stride: 2 });
         assert_eq!(c.layers[2], LayerSpec::Flatten);
         let opts = c.trainer_options();
-        assert_eq!(opts.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(opts.shape, Some(Shape::Image(ImageDims::new(1, 28, 28))));
         assert_eq!(opts.dims[0], 784, "input derived from the image geometry");
+    }
+
+    /// The canonical `[model] shape` key covers every input rank: one
+    /// element is flat, two is a sequence, three is an image.
+    #[test]
+    fn shape_key_parses_all_ranks() {
+        let flat = ExperimentConfig::from_toml(
+            "[model]\nshape = [784]\n[[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+        )
+        .unwrap();
+        assert_eq!(flat.shape, Some(Shape::Flat(784)));
+        assert_eq!(flat.dims, vec![784, 10]);
+
+        let img = ExperimentConfig::from_toml(
+            "[model]\nshape = [1, 28, 28]\n[[model.layers]]\ntype = \"flatten\"\n\
+             [[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+        )
+        .unwrap();
+        assert_eq!(img.shape, Some(Shape::Image(ImageDims::new(1, 28, 28))));
+        assert_eq!(img.dims, vec![784, 10]);
+
+        let seq = ExperimentConfig::from_toml(
+            "[model]\nshape = [64, 32]\n[[model.layers]]\ntype = \"layernorm\"\n\
+             [[model.layers]]\ntype = \"linear2d\"\nunits = 16\n\
+             [[model.layers]]\ntype = \"dense\"\nunits = 4\n",
+        )
+        .unwrap();
+        assert_eq!(seq.shape, Some(Shape::Seq { len: 64, d_model: 32 }));
+        // layernorm: 64x32 = 2048; linear2d(16): 64x16 = 1024; dense: 4.
+        assert_eq!(seq.dims, vec![2048, 2048, 1024, 4]);
+        assert_eq!(
+            seq.layers[1],
+            LayerSpec::Linear2d { units: 16, activation: Activation::Linear },
+            "linear2d defaults to the identity activation, unlike dense"
+        );
+        assert_eq!(seq.trainer_options().shape, Some(Shape::Seq { len: 64, d_model: 32 }));
+    }
+
+    /// The sequence acceptance config: `seq`/`vocab` sugar plus the
+    /// embedding → layernorm → self-attention → dense → softmax stack.
+    #[test]
+    fn seq_vocab_sugar_builds_attention_model() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+            [model]
+            seq = 16
+            vocab = 32
+            [[model.layers]]
+            type = "embedding"
+            d_model = 8
+            [[model.layers]]
+            type = "layernorm"
+            [[model.layers]]
+            type = "self_attention"
+            [[model.layers]]
+            type = "dense"
+            units = 4
+            activation = "sigmoid"
+            [[model.layers]]
+            type = "softmax"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.shape, Some(Shape::Flat(16)), "seq = N is N token ids per sample");
+        assert_eq!(c.layers[0], LayerSpec::Embedding { vocab: 32, d_model: 8 });
+        assert_eq!(c.layers[1], LayerSpec::LayerNorm);
+        assert_eq!(c.layers[2], LayerSpec::SelfAttention);
+        assert_eq!(c.dims, vec![16, 128, 128, 128, 4]);
+        // An inline vocab on the layer wins over the [model] default.
+        let c = ExperimentConfig::from_toml(
+            "[model]\nseq = 4\nvocab = 32\n[[model.layers]]\ntype = \"embedding\"\n\
+             vocab = 7\nd_model = 2\n[[model.layers]]\ntype = \"dense\"\nunits = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.layers[0], LayerSpec::Embedding { vocab: 7, d_model: 2 });
+    }
+
+    /// The pre-redesign keys keep working, and mixing them with the new
+    /// `shape` key is rejected with a pointer at the replacement.
+    #[test]
+    fn deprecated_input_image_keys_desugar_to_shape() {
+        let c = ExperimentConfig::from_toml(
+            "[model]\ninput = 784\n[[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+        )
+        .unwrap();
+        assert_eq!(c.shape, Some(Shape::Flat(784)));
+
+        let err = ExperimentConfig::from_toml(
+            "[model]\nshape = [784]\ninput = 784\n\
+             [[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("deprecated"), "conflict must name the deprecation: {err}");
+
+        let err = ExperimentConfig::from_toml(
+            "[model]\nshape = [784]\nseq = 16\n\
+             [[model.layers]]\ntype = \"dense\"\nunits = 10\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("alternatives"), "shape+seq must be rejected: {err}");
     }
 
     /// The committed example config stays parseable (and is what the
@@ -819,9 +1035,22 @@ mod tests {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/mnist_conv.toml");
         let c = ExperimentConfig::from_file(path).unwrap();
         assert_eq!(c.name, "mnist-conv");
-        assert_eq!(c.image, Some(ImageDims::new(1, 28, 28)));
+        assert_eq!(c.shape, Some(Shape::Image(ImageDims::new(1, 28, 28))));
         assert_eq!(c.dims, vec![784, 8 * 13 * 13, 10]);
         assert_eq!(c.layers.len(), 5);
+        assert_eq!(c.eta, 0.5);
+    }
+
+    #[test]
+    fn committed_seq_attention_config_parses() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/seq_attention.toml");
+        let c = ExperimentConfig::from_file(path).unwrap();
+        assert_eq!(c.name, "seq-attention");
+        assert_eq!(c.shape, Some(Shape::Flat(16)));
+        // 16 ids -> emb 16x32 = 512 -> ln 512 -> attn 512 -> dense 10.
+        assert_eq!(c.dims, vec![16, 512, 512, 512, 10]);
+        assert_eq!(c.layers.len(), 5);
+        assert_eq!(c.layers[0], LayerSpec::Embedding { vocab: 64, d_model: 32 });
         assert_eq!(c.eta, 0.5);
     }
 
@@ -901,6 +1130,31 @@ mod tests {
             (
                 "[model]\nimage = [1, 28, 28]\n[[model.layers]]\ntype = \"maxpool2d\"\n",
                 "maxpool2d needs 'kernel",
+            ),
+            // Sequence grammar failures surface at parse time too.
+            (
+                "[model]\nshape = [0, 5]\n[[model.layers]]\ntype = \"layernorm\"\n",
+                "positive integers",
+            ),
+            (
+                "[model]\nshape = [3, 4, 5, 6]\n[[model.layers]]\ntype = \"layernorm\"\n",
+                "positive integers",
+            ),
+            ("[model]\nseq = -3\n[[model.layers]]\ntype = \"dense\"\nunits = 2\n", "token ids"),
+            (
+                "[model]\nseq = 8\n[[model.layers]]\ntype = \"embedding\"\nd_model = 4\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 2\n",
+                "embedding needs 'vocab",
+            ),
+            (
+                "[model]\ninput = 8\n[[model.layers]]\ntype = \"layernorm\"\n\
+                 [[model.layers]]\ntype = \"dense\"\nunits = 2\n",
+                "sequence-shaped",
+            ),
+            (
+                "[model]\nseq = 8\n[[model.layers]]\ntype = \"dense\"\nunits = 4\n\
+                 [[model.layers]]\ntype = \"embedding\"\nvocab = 9\nd_model = 4\n",
+                "first layer",
             ),
         ];
         for (text, needle) in cases {

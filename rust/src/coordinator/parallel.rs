@@ -194,7 +194,7 @@ mod tests {
                 dims: vec![784, 30, 10],
                 activation: Activation::Sigmoid,
                 layers: vec![],
-                image: None,
+                shape: None,
                 eta: 3.0,
                 batch_size: 200,
                 epochs,

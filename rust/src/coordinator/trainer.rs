@@ -3,7 +3,7 @@
 use crate::collectives::{CommResult, Communicator};
 use crate::data::{label_digits, shard_bounds, Dataset};
 use crate::nn::{
-    Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Optimizer, OptimizerKind,
+    Activation, Gradients, GradShards, LayerSpec, Network, Optimizer, OptimizerKind, Shape,
     Workspace,
 };
 use crate::runtime::{CompiledNet, PjrtScalar};
@@ -69,9 +69,11 @@ pub struct TrainerOptions {
     /// Layer-graph pipeline (the `[[model.layers]]` form). Empty = the
     /// classic dims+activation dense stack.
     pub layers: Vec<LayerSpec>,
-    /// `c×h×w` input geometry for pipelines with conv2d/maxpool2d layers
-    /// (the `[model] image` key). `None` for flat (dense-chain) inputs.
-    pub image: Option<ImageDims>,
+    /// Rank-aware input shape for the layer pipeline (the `[model] shape`
+    /// key): `Flat(n)` token-id or vector inputs, `Image(c×h×w)` planes
+    /// for conv2d/maxpool2d, or `Seq{len, d_model}` sequences. `None`
+    /// means `Flat(dims[0])` — the classic flat-input default.
+    pub shape: Option<Shape>,
     /// Learning rate (applied as eta/global_batch to summed tendencies).
     pub eta: f64,
     /// Global mini-batch size, split across images.
@@ -105,7 +107,7 @@ impl Default for TrainerOptions {
             dims: vec![784, 30, 10],
             activation: Activation::Sigmoid,
             layers: Vec::new(),
-            image: None,
+            shape: None,
             eta: 3.0,
             batch_size: 1000,
             epochs: 30,
@@ -187,7 +189,10 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
         let mut net = if opts.layers.is_empty() {
             Network::<T>::new(&opts.dims, opts.activation, seed)
         } else {
-            Network::<T>::from_specs_image(opts.dims[0], opts.image, &opts.layers, seed)
+            // One shape-validated entry point for every pipeline rank;
+            // `None` keeps the classic flat-input default.
+            let shape = opts.shape.unwrap_or(Shape::Flat(opts.dims[0]));
+            Network::<T>::from_specs(shape, &opts.layers, seed)
         };
 
         // sync(1): broadcast image 1's parameters to all replicas.
@@ -548,7 +553,7 @@ mod tests {
             dims: dims.to_vec(),
             activation: Activation::Sigmoid,
             layers: Vec::new(),
-            image: None,
+            shape: None,
             eta: 3.0,
             batch_size: bs,
             epochs: 1,
@@ -821,7 +826,7 @@ mod tests {
         // conv: (28-4)/3+1 = 9 -> 4x9x9 = 324; pool: 3 -> 4x3x3 = 36.
         let mut o = opts(&[784, 324, 10], 100);
         o.layers = layers;
-        o.image = Some(ImageDims::new(1, 28, 28));
+        o.shape = Some(Shape::Image(crate::nn::ImageDims::new(1, 28, 28)));
         o.eta = 1.0; // cross-entropy gradients are undamped at the head
         let comms = Team::new(2);
         let (train_ref, test_ref) = (&train, &test);
@@ -852,6 +857,60 @@ mod tests {
         assert!(
             after > initial + 0.2 && after > 0.35,
             "conv pipeline should learn digits (acc {initial} -> {after})"
+        );
+    }
+
+    /// The sequence acceptance path at trainer level: an
+    /// embedding→layernorm→self_attention→dense→softmax pipeline trains
+    /// on the synthetic token-majority corpus with strictly decreasing
+    /// loss and stays replica-consistent under data parallelism.
+    #[test]
+    fn seq_attention_pipeline_trains_and_stays_replica_consistent() {
+        let train = crate::data::synthesize_seq::<f32>(1000, 12, 20, 81);
+        let test = crate::data::synthesize_seq::<f32>(200, 12, 20, 82);
+        let layers = vec![
+            LayerSpec::Embedding { vocab: 20, d_model: 8 },
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        // chain: 12 ids -> emb 12x8 = 96 -> ln 96 -> attn 96 -> dense 10.
+        let mut o = opts(&[12, 96, 96, 96, 10], 100);
+        o.layers = layers;
+        o.eta = 0.5; // cross-entropy gradients are undamped at the head
+        let comms = Team::new(2);
+        let (train_ref, test_ref) = (&train, &test);
+        let o_ref = &o;
+        let results: Vec<(f64, f64, f64, f64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut t: Trainer<f32, LocalComm> =
+                            Trainer::new(c, o_ref.clone(), None).unwrap();
+                        assert_eq!(t.net.dims(), &[12, 96, 96, 96, 10]);
+                        assert!(t.net.has_softmax_head());
+                        let y = test_ref.one_hot();
+                        let initial = t.accuracy(test_ref).unwrap();
+                        let loss0 = t.net.loss_batch(&test_ref.images, &y);
+                        for _ in 0..15 {
+                            t.train_epoch(train_ref).unwrap();
+                        }
+                        assert_eq!(t.replica_divergence().unwrap(), 0.0);
+                        let loss1 = t.net.loss_batch(&test_ref.images, &y);
+                        (initial, t.accuracy(test_ref).unwrap(), loss0, loss1)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], results[1]);
+        let (initial, after, loss0, loss1) = results[0];
+        assert!(loss1 < loss0, "seq pipeline loss must decrease ({loss0} -> {loss1})");
+        assert!(
+            after > initial + 0.1 && after > 0.3,
+            "seq pipeline should learn the majority class (acc {initial} -> {after})"
         );
     }
 

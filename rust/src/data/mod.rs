@@ -12,7 +12,7 @@ mod synth;
 
 pub use dataset::{label_digits, shard_bounds, Batcher, Dataset};
 pub use idx::{read_idx_images, read_idx_labels, write_idx_images, write_idx_labels, IdxError};
-pub use synth::{render_digit, synthesize, GlyphStyle};
+pub use synth::{render_digit, synthesize, synthesize_seq, GlyphStyle};
 
 use crate::tensor::Scalar;
 use std::path::Path;

@@ -168,6 +168,38 @@ pub fn synthesize<T: Scalar>(n: usize, seed: u64) -> Dataset<T> {
     Dataset { images, labels }
 }
 
+/// Generate a synthetic sequence-classification corpus: `n` token-id
+/// sequences of length `len` drawn uniformly from a `vocab`-symbol
+/// alphabet, deterministic in `seed`. Each token votes for class
+/// `token % NUM_CLASSES`; the label is the majority class (lowest class
+/// wins ties). The task is permutation-invariant and linearly decodable
+/// from per-class token counts, so an embedding → attention → dense
+/// pipeline learns it quickly — the sequence analogue of [`synthesize`]
+/// for smoke tests. Token ids are carried as floats in the `images`
+/// matrix (`[len, n]`), matching the embedding layer's input contract.
+pub fn synthesize_seq<T: Scalar>(n: usize, len: usize, vocab: usize, seed: u64) -> Dataset<T> {
+    assert!(len > 0 && vocab > 0, "sequence corpus needs positive len and vocab");
+    let mut rng = Rng::new(seed);
+    let mut images = crate::tensor::Matrix::<T>::zeros(len, n);
+    let mut labels = Vec::with_capacity(n);
+    for j in 0..n {
+        let mut counts = [0usize; super::NUM_CLASSES];
+        for slot in images.col_mut(j).iter_mut() {
+            let tok = rng.below(vocab);
+            *slot = T::from_f64(tok as f64);
+            counts[tok % super::NUM_CLASSES] += 1;
+        }
+        let mut label = 0u8;
+        for (c, &cnt) in counts.iter().enumerate() {
+            if cnt > counts[label as usize] {
+                label = c as u8;
+            }
+        }
+        labels.push(label);
+    }
+    Dataset { images, labels }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,5 +267,40 @@ mod tests {
     #[should_panic(expected = "digit out of range")]
     fn bad_digit_panics() {
         render_digit(10, &GlyphStyle::canonical(), None);
+    }
+
+    #[test]
+    fn seq_corpus_is_deterministic_and_labeled_by_majority() {
+        let a: Dataset<f32> = synthesize_seq(60, 12, 20, 5);
+        let b: Dataset<f32> = synthesize_seq(60, 12, 20, 5);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images.as_slice(), b.images.as_slice());
+        let c: Dataset<f32> = synthesize_seq(60, 12, 20, 6);
+        assert_ne!(a.images.as_slice(), c.images.as_slice());
+
+        assert_eq!(a.images.rows(), 12);
+        assert_eq!(a.len(), 60);
+        for j in 0..a.len() {
+            let mut counts = [0usize; crate::data::NUM_CLASSES];
+            for &v in a.images.col(j) {
+                let tok = v as usize;
+                assert!(tok < 20, "token id out of vocab");
+                assert_eq!(v, tok as f32, "token ids must be integral");
+                counts[tok % crate::data::NUM_CLASSES] += 1;
+            }
+            let expect = counts
+                .iter()
+                .enumerate()
+                .max_by(|x, y| x.1.cmp(y.1).then(y.0.cmp(&x.0)))
+                .map(|(c, _)| c as u8)
+                .unwrap();
+            assert_eq!(a.labels[j], expect, "sample {j}: label must be the majority class");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive len and vocab")]
+    fn seq_corpus_rejects_empty_alphabet() {
+        let _ = synthesize_seq::<f32>(4, 8, 0, 1);
     }
 }

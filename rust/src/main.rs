@@ -14,9 +14,9 @@ use neural_rs::config::{CommKind, ExperimentConfig};
 use neural_rs::coordinator::{
     train_parallel, BatchStrategy, EngineKind, ParallelSpec, Trainer,
 };
-use neural_rs::data::{load_or_synthesize, synthesize, Dataset};
+use neural_rs::data::{load_or_synthesize, synthesize, synthesize_seq, Dataset};
 use neural_rs::metrics::{peak_rss_bytes, Stopwatch};
-use neural_rs::nn::{Activation, Network};
+use neural_rs::nn::{Activation, LayerSpec, Network};
 use neural_rs::runtime::{Engine, Manifest};
 use neural_rs::serve::{ModelRegistry, Server};
 use neural_rs::tensor::Summary;
@@ -106,10 +106,13 @@ TELEMETRY FLAGS (train; or a [telemetry] TOML section)
 MODEL CONFIG (TOML)
   The flat form ([network] dims + activation) builds a homogeneous dense
   stack. The layer-graph form declares one [[model.layers]] table per
-  layer (type = dense | dropout | softmax | conv2d | maxpool2d | flatten).
-  Conv/pool layers need [model] image = [c, h, w] (input derives as c*h*w):
+  layer (type = dense | dropout | softmax | conv2d | maxpool2d | flatten
+  | embedding | layernorm | linear2d | self_attention) under a rank-aware
+  [model] shape: shape = [784] (flat), shape = [1, 28, 28] (image),
+  shape = [64, 32] (sequence), or seq = N token ids feeding an embedding
+  (the old input = N / image = [c, h, w] keys still work, deprecated):
     [model]
-    image = [1, 28, 28]
+    shape = [1, 28, 28]
     [[model.layers]]
     type = \"conv2d\"
     filters = 8
@@ -308,6 +311,16 @@ fn telemetry_finish(mut tel: Telemetry) -> Result<(), AnyError> {
 }
 
 fn load_data(cfg: &ExperimentConfig) -> (Dataset<f32>, Dataset<f32>) {
+    // Embedding-front pipelines consume token ids, not pixels: train them
+    // on the synthetic sequence-classification corpus with matching
+    // length and vocabulary instead of the digit images.
+    if let Some(LayerSpec::Embedding { vocab, .. }) = cfg.layers.first() {
+        let len = cfg.dims[0];
+        return (
+            synthesize_seq(cfg.train_n, len, *vocab, cfg.data_seed),
+            synthesize_seq(cfg.test_n, len, *vocab, cfg.data_seed ^ 0x5EED_0F5E_ED00_7E57),
+        );
+    }
     load_or_synthesize::<f32>(&cfg.data_dir, cfg.train_n, cfg.test_n, cfg.data_seed)
 }
 

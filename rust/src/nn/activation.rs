@@ -21,11 +21,15 @@ pub enum Activation {
     LeakyRelu,
     /// Extension: exponential linear unit (alpha = 1).
     Elu,
+    /// Extension: identity (σ(x) = x, σ'(x) = 1) — the projection
+    /// activation the sequence layers (linear2d, the self-attention
+    /// QKV/output projections) route through the fused GEMM epilogue.
+    Linear,
 }
 
 impl Activation {
     /// All supported activations (for sweeps and tests).
-    pub const ALL: [Activation; 7] = [
+    pub const ALL: [Activation; 8] = [
         Activation::Gaussian,
         Activation::Relu,
         Activation::Sigmoid,
@@ -33,6 +37,7 @@ impl Activation {
         Activation::Tanh,
         Activation::LeakyRelu,
         Activation::Elu,
+        Activation::Linear,
     ];
 
     /// Parse the paper's activation names (case-insensitive), as in
@@ -46,6 +51,7 @@ impl Activation {
             "tanh" => Some(Self::Tanh),
             "leaky_relu" | "leakyrelu" => Some(Self::LeakyRelu),
             "elu" => Some(Self::Elu),
+            "linear" | "identity" => Some(Self::Linear),
             _ => None,
         }
     }
@@ -61,6 +67,7 @@ impl Activation {
             Self::Tanh => "tanh",
             Self::LeakyRelu => "leaky_relu",
             Self::Elu => "elu",
+            Self::Linear => "linear",
         }
     }
 
@@ -98,6 +105,7 @@ impl Activation {
                     x.exp() - T::ONE
                 }
             }
+            Self::Linear => x,
         }
     }
 
@@ -140,6 +148,7 @@ impl Activation {
                     x.exp()
                 }
             }
+            Self::Linear => T::ONE,
         }
     }
 
@@ -190,6 +199,7 @@ impl Activation {
             Self::Tanh => apply_slice::<T, 4>,
             Self::LeakyRelu => apply_slice::<T, 5>,
             Self::Elu => apply_slice::<T, 6>,
+            Self::Linear => apply_slice::<T, 7>,
         }
     }
 
@@ -209,6 +219,7 @@ impl Activation {
             Self::Tanh => prime_slice::<T, 4>,
             Self::LeakyRelu => prime_slice::<T, 5>,
             Self::Elu => prime_slice::<T, 6>,
+            Self::Linear => prime_slice::<T, 7>,
         }
     }
 }

@@ -1,8 +1,9 @@
 //! Saving and loading networks to and from file (a paper §2 feature).
 //!
 //! Text format modeled on neural-fortran's `save`/`load`, extended with
-//! layer-type tags for the heterogeneous layer graph. Networks are
-//! written as **v2**:
+//! layer-type tags for the heterogeneous layer graph. Dense/conv
+//! pipelines are written as **v2** (byte-identical to every earlier
+//! release, so archived checkpoints and their hashes stay valid):
 //!
 //! ```text
 //! neural-rs network v2
@@ -21,10 +22,32 @@
 //! dense 0 weights <rows> <cols> <column-major values...>
 //! ```
 //!
-//! Conv/pool geometry is *derived*, not stored per layer: the `image`
-//! line plus each layer's kernel/stride resolve every plane shape at
-//! load time through the same planner the TOML config uses, so a file
-//! with inconsistent geometry fails with the planner's message.
+//! Pipelines the v2 grammar cannot express — sequence inputs or the
+//! embedding/layernorm/linear2d/self_attention layers — are written as
+//! **v3**: a rank-aware `shape` header replaces `input`/`image`, and
+//! parameters are stored per *parameter op* in pipeline order (the same
+//! order as the collectives flat layout), covering every trainable kind
+//! with one grammar:
+//!
+//! ```text
+//! neural-rs network v3
+//! dtype f32
+//! shape flat 64                      # or: shape image 1 28 28 / shape seq 64 32
+//! layer 0 embedding 256 32           # vocab, d_model
+//! layer 1 layernorm
+//! layer 2 self_attention
+//! layer 3 linear2d 16 relu           # units, activation
+//! layer 4 dense 3 sigmoid
+//! layer 5 softmax
+//! param 0 biases <values...>         # empty for embeddings
+//! param 0 weights <rows> <cols> <column-major values...>
+//! ```
+//!
+//! Conv/pool/sequence geometry is *derived*, not stored per layer: the
+//! `input`/`image`/`shape` header plus each layer line resolve every
+//! boundary shape at load time through the same planner the TOML config
+//! uses, so a file with inconsistent geometry fails with the planner's
+//! message.
 //!
 //! The pre-layer-graph **v1** format (homogeneous dense stack, one
 //! global activation) is still *loaded* — a v1 checkpoint deserializes
@@ -34,8 +57,8 @@
 
 use super::activation::Activation;
 use super::layers::{
-    plan_specs, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp, LayerSpec, MaxPool2d,
-    Planned, Softmax,
+    plan_specs, resolve_image_shape, Conv2d, Dense, Dropout, Embedding, Flatten, ImageDims,
+    LayerNorm, LayerOp, LayerSpec, Linear2d, MaxPool2d, Planned, SelfAttention, Shape, Softmax,
 };
 use super::network::Network;
 use crate::tensor::{Matrix, Scalar};
@@ -77,7 +100,7 @@ fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, IoError> {
     Err(IoError::Parse { line, msg: msg.into() })
 }
 
-/// A parsed v2 `layer` line, pre-construction.
+/// A parsed v2/v3 `layer` line, pre-construction.
 #[derive(Debug, Clone)]
 enum SpecLine {
     Dense { units: usize, activation: Activation },
@@ -86,6 +109,10 @@ enum SpecLine {
     Conv2d { filters: usize, kernel: usize, stride: usize, activation: Activation },
     MaxPool2d { kernel: usize, stride: usize },
     Flatten,
+    Embedding { vocab: usize, d_model: usize },
+    LayerNorm,
+    Linear2d { units: usize, activation: Activation },
+    SelfAttention,
 }
 
 impl SpecLine {
@@ -106,26 +133,33 @@ impl SpecLine {
                 LayerSpec::MaxPool2d { kernel: *kernel, stride: *stride }
             }
             Self::Flatten => LayerSpec::Flatten,
+            Self::Embedding { vocab, d_model } => {
+                LayerSpec::Embedding { vocab: *vocab, d_model: *d_model }
+            }
+            Self::LayerNorm => LayerSpec::LayerNorm,
+            Self::Linear2d { units, activation } => {
+                LayerSpec::Linear2d { units: *units, activation: *activation }
+            }
+            Self::SelfAttention => LayerSpec::SelfAttention,
         }
     }
 }
 
-/// Build a zero-parameter network from validated v2 layer lines,
-/// preserving dropout mask seeds, with conv/pool geometry resolved by
-/// the same planner the TOML config uses. Parameters are filled in
-/// afterwards from the `dense`/`conv` lines.
-fn build_v2_skeleton<T: Scalar>(
+/// Build a zero-parameter network from validated layer lines, preserving
+/// dropout mask seeds, with conv/pool/sequence geometry resolved by the
+/// same planner the TOML config uses. Parameters are filled in
+/// afterwards from the `dense`/`conv`/`param` lines.
+fn build_skeleton<T: Scalar>(
     lineno: usize,
-    input: Option<usize>,
-    image: Option<ImageDims>,
+    shape: Option<Shape>,
     lines: &[SpecLine],
 ) -> Result<Network<T>, IoError> {
-    let input = match input {
-        Some(i) => i,
-        None => return perr(lineno, "an 'input' line must come before parameters"),
+    let shape = match shape {
+        Some(s) => s,
+        None => return perr(lineno, "an 'input' or 'shape' line must come before parameters"),
     };
     let specs: Vec<LayerSpec> = lines.iter().map(SpecLine::as_spec).collect();
-    let planned = match plan_specs(input, image, &specs) {
+    let planned = match plan_specs(shape, &specs) {
         Ok((_, p)) => p,
         Err(e) => return perr(lineno, format!("invalid layer pipeline: {e}")),
     };
@@ -161,8 +195,32 @@ fn build_v2_skeleton<T: Scalar>(
             (SpecLine::MaxPool2d { .. }, Planned::MaxPool2d { img, kernel, stride }) => {
                 ops.push(Box::new(MaxPool2d::new(*img, *kernel, *stride)));
             }
-            (SpecLine::Flatten, Planned::Flatten { img }) => {
-                ops.push(Box::new(Flatten::new(*img)));
+            (SpecLine::Flatten, Planned::Flatten { from }) => {
+                ops.push(Box::new(Flatten::from_shape(*from)));
+            }
+            (SpecLine::Embedding { .. }, Planned::Embedding { len, vocab, d_model }) => {
+                ops.push(Box::new(Embedding::from_parts(
+                    *len,
+                    Matrix::zeros(*d_model, *vocab),
+                )));
+            }
+            (SpecLine::LayerNorm, Planned::LayerNorm { len, d_model }) => {
+                ops.push(Box::new(LayerNorm::new(*len, *d_model)));
+            }
+            (SpecLine::Linear2d { activation, .. }, Planned::Linear2d { len, d_in, units, .. }) => {
+                ops.push(Box::new(Linear2d::from_parts(
+                    *len,
+                    Matrix::zeros(*d_in, *units),
+                    vec![T::ZERO; *units],
+                    *activation,
+                )));
+            }
+            (SpecLine::SelfAttention, Planned::SelfAttention { len, d_model }) => {
+                ops.push(Box::new(SelfAttention::from_parts(
+                    *len,
+                    Matrix::zeros(*d_model, 4 * *d_model),
+                    vec![T::ZERO; 4 * *d_model],
+                )));
             }
             _ => return perr(lineno, "layer line / plan mismatch (internal)"),
         }
@@ -174,13 +232,35 @@ fn build_v2_skeleton<T: Scalar>(
 }
 
 impl<T: Scalar> Network<T> {
-    /// Serialize to a writer in the v2 tagged-layer text format above.
+    /// Serialize to a writer in the tagged-layer text format above.
+    /// Pipelines the v2 grammar can express are written as v2 — byte
+    /// identical to earlier releases — and everything else as v3.
     pub fn save_to(&self, w: &mut impl Write) -> Result<(), IoError> {
-        writeln!(w, "neural-rs network v2")?;
-        writeln!(w, "dtype {}", std::any::type_name::<T>())?;
-        writeln!(w, "input {}", self.input_size())?;
-        if let Some(img) = self.input_image() {
-            writeln!(w, "image {} {} {}", img.c, img.h, img.w)?;
+        let v2 = matches!(self.input_shape(), Shape::Flat(_) | Shape::Image(_))
+            && self.ops().iter().all(|op| {
+                !matches!(
+                    op.spec(),
+                    LayerSpec::Embedding { .. }
+                        | LayerSpec::LayerNorm
+                        | LayerSpec::Linear2d { .. }
+                        | LayerSpec::SelfAttention
+                )
+            });
+        if v2 {
+            writeln!(w, "neural-rs network v2")?;
+            writeln!(w, "dtype {}", std::any::type_name::<T>())?;
+            writeln!(w, "input {}", self.input_size())?;
+            if let Some(img) = self.input_image() {
+                writeln!(w, "image {} {} {}", img.c, img.h, img.w)?;
+            }
+        } else {
+            writeln!(w, "neural-rs network v3")?;
+            writeln!(w, "dtype {}", std::any::type_name::<T>())?;
+            match self.input_shape() {
+                Shape::Flat(n) => writeln!(w, "shape flat {n}")?,
+                Shape::Image(img) => writeln!(w, "shape image {} {} {}", img.c, img.h, img.w)?,
+                Shape::Seq { len, d_model } => writeln!(w, "shape seq {len} {d_model}")?,
+            }
         }
         for (i, op) in self.ops().iter().enumerate() {
             match op.spec() {
@@ -198,33 +278,59 @@ impl<T: Scalar> Network<T> {
                     writeln!(w, "layer {i} maxpool2d {kernel} {stride}")?;
                 }
                 LayerSpec::Flatten => writeln!(w, "layer {i} flatten")?,
+                LayerSpec::Embedding { vocab, d_model } => {
+                    writeln!(w, "layer {i} embedding {vocab} {d_model}")?;
+                }
+                LayerSpec::LayerNorm => writeln!(w, "layer {i} layernorm")?,
+                LayerSpec::Linear2d { units, activation } => {
+                    writeln!(w, "layer {i} linear2d {units} {activation}")?;
+                }
+                LayerSpec::SelfAttention => writeln!(w, "layer {i} self_attention")?,
             }
         }
-        for k in 0..self.conv_count() {
-            write!(w, "conv {k} biases")?;
-            for &b in self.conv_bias(k) {
-                write!(w, " {:?}", b)?;
+        if v2 {
+            for k in 0..self.conv_count() {
+                write!(w, "conv {k} biases")?;
+                for &b in self.conv_bias(k) {
+                    write!(w, " {:?}", b)?;
+                }
+                writeln!(w)?;
+                let wm = self.conv_weight(k);
+                write!(w, "conv {k} weights {} {}", wm.rows(), wm.cols())?;
+                for &v in wm.as_slice() {
+                    write!(w, " {:?}", v)?;
+                }
+                writeln!(w)?;
             }
-            writeln!(w)?;
-            let wm = self.conv_weight(k);
-            write!(w, "conv {k} weights {} {}", wm.rows(), wm.cols())?;
-            for &v in wm.as_slice() {
-                write!(w, " {:?}", v)?;
+            for l in 0..self.dense_count() {
+                write!(w, "dense {l} biases")?;
+                for &b in self.dense_bias(l) {
+                    write!(w, " {:?}", b)?;
+                }
+                writeln!(w)?;
+                let wm = self.dense_weight(l);
+                write!(w, "dense {l} weights {} {}", wm.rows(), wm.cols())?;
+                for &v in wm.as_slice() {
+                    write!(w, " {:?}", v)?;
+                }
+                writeln!(w)?;
             }
-            writeln!(w)?;
-        }
-        for l in 0..self.dense_count() {
-            write!(w, "dense {l} biases")?;
-            for &b in self.dense_bias(l) {
-                write!(w, " {:?}", b)?;
+        } else {
+            // v3: parameters per parameter op, in pipeline order — the
+            // same order as the collectives flat layout.
+            for k in 0..self.param_op_count() {
+                write!(w, "param {k} biases")?;
+                for &b in self.param_bias(k) {
+                    write!(w, " {:?}", b)?;
+                }
+                writeln!(w)?;
+                let wm = self.param_weight(k);
+                write!(w, "param {k} weights {} {}", wm.rows(), wm.cols())?;
+                for &v in wm.as_slice() {
+                    write!(w, " {:?}", v)?;
+                }
+                writeln!(w)?;
             }
-            writeln!(w)?;
-            let wm = self.dense_weight(l);
-            write!(w, "dense {l} weights {} {}", wm.rows(), wm.cols())?;
-            for &v in wm.as_slice() {
-                write!(w, " {:?}", v)?;
-            }
-            writeln!(w)?;
         }
         Ok(())
     }
@@ -259,21 +365,25 @@ impl<T: Scalar> Network<T> {
         Ok(())
     }
 
-    /// Deserialize from a reader. Accepts both the current v2 format and
-    /// legacy v1 dense checkpoints. Streaming: only the pre-header prefix
-    /// (comments/blanks) is buffered to sniff the version; parameter
-    /// lines are parsed and dropped one at a time.
+    /// Deserialize from a reader. Accepts the current v3 format, the v2
+    /// dense/conv format, and legacy v1 dense checkpoints. Streaming:
+    /// only the pre-header prefix (comments/blanks) is buffered to sniff
+    /// the version; parameter lines are parsed and dropped one at a time.
     pub fn load_from(r: impl std::io::Read) -> Result<Self, IoError> {
         let reader = BufReader::new(r);
         let mut lines = reader.lines();
         let mut prefix: Vec<String> = Vec::new();
-        let mut v1 = false;
+        let mut version = 2u8;
         for line in lines.by_ref() {
             let line = line?;
             let header = {
                 let t = line.trim();
                 if !t.is_empty() && !t.starts_with('#') {
-                    v1 = t == "neural-rs network v1";
+                    version = match t {
+                        "neural-rs network v1" => 1,
+                        "neural-rs network v3" => 3,
+                        _ => 2,
+                    };
                     true
                 } else {
                     false
@@ -285,10 +395,10 @@ impl<T: Scalar> Network<T> {
             }
         }
         let all = prefix.into_iter().map(Ok::<_, std::io::Error>).chain(lines);
-        if v1 {
-            Self::load_v1(all)
-        } else {
-            Self::load_v2(all)
+        match version {
+            1 => Self::load_v1(all),
+            3 => Self::load_tagged(all, true),
+            _ => Self::load_tagged(all, false),
         }
     }
 
@@ -400,10 +510,16 @@ impl<T: Scalar> Network<T> {
         net.ok_or(IoError::Parse { line: 0, msg: "file contained no network".into() })
     }
 
-    /// v2 loader: tagged layer list, per-dense/per-conv parameters.
-    fn load_v2(lines: impl Iterator<Item = std::io::Result<String>>) -> Result<Self, IoError> {
+    /// v2/v3 loader: tagged layer list. v2 stores parameters per
+    /// dense/conv op with `input`/`image` geometry; v3 stores them per
+    /// parameter op with a rank-aware `shape` header.
+    fn load_tagged(
+        lines: impl Iterator<Item = std::io::Result<String>>,
+        v3: bool,
+    ) -> Result<Self, IoError> {
         let mut input: Option<usize> = None;
         let mut image: Option<ImageDims> = None;
+        let mut shape: Option<Shape> = None;
         let mut spec_lines: Vec<SpecLine> = Vec::new();
         let mut net: Option<Network<T>> = None;
 
@@ -418,7 +534,9 @@ impl<T: Scalar> Network<T> {
             let key = toks.next().unwrap();
             match key {
                 "neural-rs" => {
-                    if line != "neural-rs network v2" {
+                    let want =
+                        if v3 { "neural-rs network v3" } else { "neural-rs network v2" };
+                    if line != want {
                         return perr(lineno, format!("unsupported header '{line}'"));
                     }
                 }
@@ -440,6 +558,26 @@ impl<T: Scalar> Network<T> {
                             )
                         }
                     }
+                }
+                "shape" if v3 => {
+                    let kind = toks.next().unwrap_or("");
+                    let rest: Option<Vec<usize>> = toks.map(|t| t.parse().ok()).collect();
+                    shape = Some(match (kind, rest.as_deref()) {
+                        ("flat", Some([n])) if *n > 0 => Shape::Flat(*n),
+                        ("image", Some([c, h, w])) if *c > 0 && *h > 0 && *w > 0 => {
+                            Shape::Image(ImageDims::new(*c, *h, *w))
+                        }
+                        ("seq", Some([len, d_model])) if *len > 0 && *d_model > 0 => {
+                            Shape::Seq { len: *len, d_model: *d_model }
+                        }
+                        _ => {
+                            return perr(
+                                lineno,
+                                "shape must be 'flat <n>', 'image <c> <h> <w>', or \
+                                 'seq <len> <d_model>' with positive dimensions",
+                            )
+                        }
+                    });
                 }
                 "layer" => {
                     if net.is_some() {
@@ -524,15 +662,138 @@ impl<T: Scalar> Network<T> {
                             SpecLine::MaxPool2d { kernel, stride }
                         }
                         "flatten" => SpecLine::Flatten,
+                        "embedding" if v3 => {
+                            let vocab: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(v) if v > 0 => v,
+                                _ => return perr(lineno, "embedding needs a positive vocab"),
+                            };
+                            let d_model: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(d) if d > 0 => d,
+                                _ => return perr(lineno, "embedding needs a positive d_model"),
+                            };
+                            SpecLine::Embedding { vocab, d_model }
+                        }
+                        "layernorm" if v3 => SpecLine::LayerNorm,
+                        "linear2d" if v3 => {
+                            let units: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(u) if u > 0 => u,
+                                _ => return perr(lineno, "linear2d needs a positive unit count"),
+                            };
+                            let name = toks.next().unwrap_or("");
+                            let activation = match Activation::parse(name) {
+                                Some(a) => a,
+                                None => {
+                                    return perr(lineno, format!("unknown activation '{name}'"))
+                                }
+                            };
+                            SpecLine::Linear2d { units, activation }
+                        }
+                        "self_attention" if v3 => SpecLine::SelfAttention,
                         other => {
                             return perr(lineno, format!("unknown layer kind '{other}'"))
                         }
                     };
                     spec_lines.push(parsed);
                 }
+                "param" if v3 => {
+                    if net.is_none() {
+                        let sh = match shape {
+                            Some(s) => Some(s),
+                            None => match input {
+                                Some(n) => match resolve_image_shape(n, image) {
+                                    Ok(s) => Some(s),
+                                    Err(e) => {
+                                        return perr(
+                                            lineno,
+                                            format!("invalid layer pipeline: {e}"),
+                                        )
+                                    }
+                                },
+                                None => None,
+                            },
+                        };
+                        net = Some(build_skeleton(lineno, sh, &spec_lines)?);
+                    }
+                    let net = net.as_mut().unwrap();
+                    let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                        Some(i) => i,
+                        None => return perr(lineno, "missing param index"),
+                    };
+                    if idx >= net.param_op_count() {
+                        return perr(lineno, format!("param index {idx} out of range"));
+                    }
+                    match toks.next() {
+                        Some("biases") => {
+                            let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                            let vals = vals
+                                .ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                            let (_, b) = net.param_params_mut(idx);
+                            if vals.len() != b.len() {
+                                return perr(
+                                    lineno,
+                                    format!("expected {} biases, got {}", b.len(), vals.len()),
+                                );
+                            }
+                            *b = vals;
+                        }
+                        Some("weights") => {
+                            let rows: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(v) => v,
+                                None => return perr(lineno, "missing rows"),
+                            };
+                            let cols: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                                Some(v) => v,
+                                None => return perr(lineno, "missing cols"),
+                            };
+                            let (w, _) = net.param_params_mut(idx);
+                            if rows != w.rows() || cols != w.cols() {
+                                return perr(
+                                    lineno,
+                                    format!(
+                                        "weight shape {rows}x{cols} inconsistent with layer \
+                                         ({}x{})",
+                                        w.rows(),
+                                        w.cols()
+                                    ),
+                                );
+                            }
+                            let vals: Option<Vec<T>> = toks.map(T::parse).collect();
+                            let vals = vals
+                                .ok_or(IoError::Parse { line: lineno, msg: "bad float".into() })?;
+                            if vals.len() != rows * cols {
+                                return perr(
+                                    lineno,
+                                    format!("expected {} weights, got {}", rows * cols, vals.len()),
+                                );
+                            }
+                            *w = Matrix::from_vec(rows, cols, vals);
+                        }
+                        other => {
+                            return perr(
+                                lineno,
+                                format!("expected 'biases' or 'weights', got {other:?}"),
+                            )
+                        }
+                    }
+                }
                 kind @ ("dense" | "conv") => {
                     if net.is_none() {
-                        net = Some(build_v2_skeleton(lineno, input, image, &spec_lines)?);
+                        let sh = match shape {
+                            Some(s) => Some(s),
+                            None => match input {
+                                Some(n) => match resolve_image_shape(n, image) {
+                                    Ok(s) => Some(s),
+                                    Err(e) => {
+                                        return perr(
+                                            lineno,
+                                            format!("invalid layer pipeline: {e}"),
+                                        )
+                                    }
+                                },
+                                None => None,
+                            },
+                        };
+                        net = Some(build_skeleton(lineno, sh, &spec_lines)?);
                     }
                     let net = net.as_mut().unwrap();
                     let idx: usize = match toks.next().and_then(|t| t.parse().ok()) {
@@ -651,7 +912,7 @@ mod tests {
             LayerSpec::Dense { units: 4, activation: Activation::Sigmoid },
             LayerSpec::Softmax,
         ];
-        let net: Network<f32> = Network::from_specs(5, &specs, 31);
+        let net: Network<f32> = Network::from_specs_flat(5, &specs, 31);
         let mut buf = Vec::new();
         net.save_to(&mut buf).unwrap();
         let text = String::from_utf8(buf.clone()).unwrap();
@@ -811,6 +1072,159 @@ mod tests {
             (
                 "neural-rs network v2\ninput 2\nlayer 1 dense 2 tanh\ndense 0 biases 0 0\n",
                 "consecutive",
+            ),
+        ] {
+            let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();
+            assert!(err.to_string().contains(needle), "'{err}' lacks '{needle}' for:\n{text}");
+        }
+    }
+
+    /// Sequence pipelines serialize as v3 with a rank-aware shape
+    /// header and per-param-op parameter lines, and reload bit-for-bit.
+    #[test]
+    fn seq_pipeline_round_trips_as_v3() {
+        let specs = vec![
+            LayerSpec::Embedding { vocab: 8, d_model: 4 },
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            LayerSpec::Linear2d { units: 6, activation: Activation::Relu },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ];
+        let net: Network<f32> = Network::from_specs_flat(5, &specs, 71);
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("neural-rs network v3"), "{text}");
+        assert!(text.contains("shape flat 5"), "{text}");
+        assert!(text.contains("layer 0 embedding 8 4"), "{text}");
+        assert!(text.contains("layer 1 layernorm"), "{text}");
+        assert!(text.contains("layer 2 self_attention"), "{text}");
+        assert!(text.contains("layer 3 linear2d 6 relu"), "{text}");
+        assert!(text.contains("layer 4 flatten"), "{text}");
+        assert!(text.contains("param 0 weights 4 8"), "{text}");
+        assert!(text.contains("param 2 weights 4 16"), "{text}");
+        let loaded = Network::<f32>::load_from(&buf[..]).unwrap();
+        assert_eq!(loaded.spec_list(), net.spec_list());
+        assert!(net.params_close(&loaded, 0.0), "exact round trip expected");
+        assert_eq!(loaded, net);
+        // Token inputs through both: bit-identical forward.
+        let x = Matrix::<f32>::from_fn(5, 3, |i, j| ((i + 2 * j) % 8) as f32);
+        assert_eq!(net.output_batch(&x), loaded.output_batch(&x));
+    }
+
+    /// Round-trip matrix: every new v3 layer kind, plus a sequence-shaped
+    /// input (no embedding in front), in both precisions.
+    #[test]
+    fn v3_round_trip_matrix_per_layer_kind() {
+        fn check<T: Scalar>(input: Shape, specs: &[LayerSpec], seed: u64) {
+            let net: Network<T> = Network::from_specs(input, specs, seed);
+            let mut buf = Vec::new();
+            net.save_to(&mut buf).unwrap();
+            let text = String::from_utf8(buf.clone()).unwrap();
+            assert!(text.starts_with("neural-rs network v3"), "{text}");
+            let loaded = Network::<T>::load_from(&buf[..]).unwrap();
+            assert_eq!(loaded.spec_list(), net.spec_list(), "{text}");
+            assert!(net.params_close(&loaded, 0.0), "{text}");
+            assert_eq!(loaded, net, "{text}");
+        }
+        let emb = || LayerSpec::Embedding { vocab: 6, d_model: 3 };
+        let dense = || LayerSpec::Dense { units: 2, activation: Activation::Sigmoid };
+        let cases: Vec<(Shape, Vec<LayerSpec>)> = vec![
+            (Shape::Flat(4), vec![emb(), dense()]),
+            (Shape::Flat(4), vec![emb(), LayerSpec::LayerNorm, dense()]),
+            (
+                Shape::Flat(4),
+                vec![
+                    emb(),
+                    LayerSpec::Linear2d { units: 5, activation: Activation::Tanh },
+                    dense(),
+                ],
+            ),
+            (Shape::Flat(4), vec![emb(), LayerSpec::SelfAttention, dense()]),
+            (
+                Shape::Seq { len: 3, d_model: 4 },
+                vec![LayerSpec::LayerNorm, LayerSpec::SelfAttention, dense()],
+            ),
+        ];
+        for (i, (input, specs)) in cases.iter().enumerate() {
+            check::<f32>(*input, specs, 80 + i as u64);
+            check::<f64>(*input, specs, 90 + i as u64);
+        }
+        // A seq-input checkpoint records its shape header.
+        let net: Network<f32> = Network::from_specs(
+            Shape::Seq { len: 3, d_model: 4 },
+            &[LayerSpec::LayerNorm, LayerSpec::Dense { units: 2, activation: Activation::Tanh }],
+            7,
+        );
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("shape seq 3 4"), "{text}");
+    }
+
+    /// Dense/conv pipelines must keep writing v2 — byte for byte — so
+    /// archived checkpoints, their hashes, and old readers stay valid.
+    /// This is a hand-written v2 fixture: load, verify exact values,
+    /// re-save, and require the identical bytes back.
+    #[test]
+    fn v2_fixture_loads_and_resaves_bit_for_bit() {
+        let text = "neural-rs network v2\n\
+                    dtype f32\n\
+                    input 4\n\
+                    layer 0 dense 2 tanh\n\
+                    layer 1 softmax\n\
+                    dense 0 biases 0.5 -0.25\n\
+                    dense 0 weights 4 2 1.0 -0.5 0.25 2.0 -1.5 0.75 0.125 -2.0\n";
+        let net = Network::<f32>::load_from(text.as_bytes()).unwrap();
+        assert_eq!(net.dense_bias(0), &[0.5, -0.25]);
+        assert_eq!(
+            net.dense_weight(0).as_slice(),
+            &[1.0, -0.5, 0.25, 2.0, -1.5, 0.75, 0.125, -2.0]
+        );
+        let mut buf = Vec::new();
+        net.save_to(&mut buf).unwrap();
+        assert_eq!(
+            String::from_utf8(buf).unwrap(),
+            text,
+            "v2-expressible pipelines must stay v2, byte for byte"
+        );
+    }
+
+    /// The new layer kinds are a v3 feature: v2 files do not grow them
+    /// retroactively, and broken v3 headers fail with a parse error.
+    #[test]
+    fn rejects_invalid_v3_inputs() {
+        for (text, needle) in [
+            (
+                "neural-rs network v2\ninput 4\nlayer 0 embedding 8 4\n\
+                 layer 1 dense 2 tanh\ndense 0 biases 0 0\n",
+                "unknown layer kind 'embedding'",
+            ),
+            (
+                "neural-rs network v3\nshape seq 0 4\nlayer 0 layernorm\n\
+                 layer 1 dense 2 tanh\nparam 0 biases 0 0 0 0\n",
+                "positive dimensions",
+            ),
+            (
+                "neural-rs network v3\nshape flat 4\nlayer 0 embedding 0 4\n",
+                "positive vocab",
+            ),
+            (
+                "neural-rs network v3\nshape flat 4\nlayer 0 layernorm\n\
+                 layer 1 dense 2 tanh\nparam 0 biases 0 0\n",
+                "sequence-shaped",
+            ),
+            (
+                "neural-rs network v3\nshape flat 4\nlayer 0 embedding 6 3\n\
+                 param 0 weights 2 2 0 0 0 0\n",
+                "inconsistent",
+            ),
+            (
+                "neural-rs network v3\nshape flat 4\nlayer 0 embedding 6 3\n\
+                 param 1 biases 0\n",
+                "out of range",
             ),
         ] {
             let err = Network::<f32>::load_from(text.as_bytes()).unwrap_err();

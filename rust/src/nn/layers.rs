@@ -9,8 +9,11 @@
 //! arrays, so a new architecture is *composition*, not surgery on a
 //! monolith. [`LayerOp`] is that primitive:
 //!
-//! - **shape negotiation** — [`LayerOp::in_size`] / [`LayerOp::out_size`]
-//!   chain ops into a pipeline; [`LayerOp::cache_rows`] tells the
+//! - **shape negotiation** — [`LayerOp::in_shape`] / [`LayerOp::out_shape`]
+//!   declare the rank-aware per-sample [`Shape`] each op consumes and
+//!   produces (`Flat(n)`, `Image{c,h,w}`, `Seq{len,d_model}`), and chain
+//!   ops into a pipeline; the flat `in_size`/`out_size` row counts derive
+//!   from them. [`LayerOp::cache_rows`] tells the
 //!   [`crate::nn::Workspace`] how much forward→backward cache to
 //!   pre-allocate (pre-activations for dense/conv, the mask for dropout,
 //!   argmax indices for maxpool) and [`LayerOp::work_rows`] how much
@@ -27,11 +30,26 @@
 //! Ops shipped today: [`Dense`] (the paper's layer, with a *per-layer*
 //! activation), [`Dropout`] (seeded inverted dropout with a train/eval
 //! mode flag), [`Softmax`] (an output head fused with the cross-entropy
-//! loss), and the image pipeline — [`Conv2d`] (valid-padding strided
+//! loss), the image pipeline — [`Conv2d`] (valid-padding strided
 //! convolution run as *implicit GEMM*: the im2col panel is packed
 //! tile-by-tile straight from the input via [`Im2colPanel`], never
 //! materialized — cuDNN's core insight), [`MaxPool2d`], and [`Flatten`]
-//! (the shape bridge from image planes to the dense chain).
+//! (the shape bridge from image/sequence data to the dense chain) — and
+//! the sequence pipeline — [`Embedding`] (token ids → learned vectors),
+//! [`LayerNorm`] (per-position normalization over `d_model` with
+//! trainable gain/bias), [`Linear2d`] (per-position dense projection),
+//! and single-head [`SelfAttention`] (QKV projections and both attention
+//! matmuls routed through the fused-epilogue GEMM).
+//!
+//! # Sequence layout
+//!
+//! Sequence-shaped boundaries (`Seq { len, d_model }`) are flattened
+//! **feature-fastest**: position `t`'s `d_model`-vector occupies rows
+//! `t*d_model .. (t+1)*d_model` of the boundary column. A `[len·d_model,
+//! B]` column-major batch is therefore *also* a `[d_model, len·B]`
+//! column-major matrix over the same memory — which is exactly how
+//! [`Linear2d`] runs the whole batch as one GEMM, and how the workspace,
+//! zero-alloc contract, and flat parameter layout carry over unchanged.
 //!
 //! # Image layout
 //!
@@ -56,7 +74,9 @@ pub enum Mode {
 }
 
 /// Largest maxpool input plane (elements) whose argmax indices stay
-/// exactly representable in the f32 workspace cache (2^24).
+/// exactly representable in the f32 workspace cache (2^24). The same
+/// bound caps embedding vocabularies: token ids ride the f32 input
+/// boundary, and integers are exact only up to 2^24.
 const MAXPOOL_INDEX_LIMIT: usize = 1 << 24;
 
 /// `c × h × w` image geometry carried along the conv/pool segment of a
@@ -123,14 +143,29 @@ pub enum LayerSpec {
     Conv2d { filters: usize, kernel: usize, stride: usize, activation: Activation },
     /// Valid-padding strided 2D max pooling over each channel plane.
     MaxPool2d { kernel: usize, stride: usize },
-    /// Shape bridge: ends the image segment, handing the flattened
-    /// `c*h*w` vector to the dense chain.
+    /// Shape bridge: ends the image (or sequence) segment, handing the
+    /// flattened vector to the dense chain.
     Flatten,
+    /// Token-id lookup table: maps a flat vector of `len` token ids
+    /// (carried as floats) to a `Seq { len, d_model }` of learned
+    /// vectors. Must be the first layer.
+    Embedding { vocab: usize, d_model: usize },
+    /// Per-position layer normalization over `d_model`, with trainable
+    /// gain and bias. Needs sequence-shaped data.
+    LayerNorm,
+    /// Per-position dense projection (`d_model -> units`) with its own
+    /// activation, applied independently at every sequence position.
+    Linear2d { units: usize, activation: Activation },
+    /// Single-head scaled-dot-product self-attention over the sequence,
+    /// with learned QKV and output projections.
+    SelfAttention,
 }
 
 impl LayerSpec {
     /// Canonical kind tag
-    /// ("dense" | "dropout" | "softmax" | "conv2d" | "maxpool2d" | "flatten").
+    /// ("dense" | "dropout" | "softmax" | "conv2d" | "maxpool2d" |
+    /// "flatten" | "embedding" | "layernorm" | "linear2d" |
+    /// "self_attention").
     pub fn kind(&self) -> &'static str {
         match self {
             Self::Dense { .. } => "dense",
@@ -139,6 +174,10 @@ impl LayerSpec {
             Self::Conv2d { .. } => "conv2d",
             Self::MaxPool2d { .. } => "maxpool2d",
             Self::Flatten => "flatten",
+            Self::Embedding { .. } => "embedding",
+            Self::LayerNorm => "layernorm",
+            Self::Linear2d { .. } => "linear2d",
+            Self::SelfAttention => "self_attention",
         }
     }
 }
@@ -152,39 +191,77 @@ pub(crate) enum Planned {
     Softmax { size: usize },
     Conv2d { img: ImageDims, filters: usize, kernel: usize, stride: usize, activation: Activation },
     MaxPool2d { img: ImageDims, kernel: usize, stride: usize },
-    Flatten { img: ImageDims },
+    Flatten { from: Shape },
+    Embedding { len: usize, vocab: usize, d_model: usize },
+    LayerNorm { len: usize, d_model: usize },
+    Linear2d { len: usize, d_in: usize, units: usize, activation: Activation },
+    SelfAttention { len: usize, d_model: usize },
 }
 
-/// Data shape flowing between ops during validation: a flat vector
-/// (dense-ready) or an image plane (conv/pool-ready).
-#[derive(Clone, Copy)]
-enum Shape {
+/// Rank-aware per-sample data shape at a pipeline boundary: a flat
+/// vector (dense-ready), an image plane (conv/pool-ready), or a token
+/// sequence (`len` positions of `d_model` features each —
+/// layernorm/linear2d/attention-ready). Every [`LayerOp`] declares the
+/// shape it consumes and produces; the planner and
+/// [`crate::nn::Network`] assembly validate the chain. The flat row
+/// count at each boundary is [`Shape::len`], and the `[rows, B]`
+/// column-major workspace buffers are *reinterpreted* per shape (see
+/// the module doc's layout sections) — no layout changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// A flat `n`-vector.
     Flat(usize),
+    /// A `c×h×w` image plane, flattened channel-fastest.
     Image(ImageDims),
+    /// A sequence of `len` positions, each a `d_model`-vector,
+    /// flattened feature-fastest.
+    Seq { len: usize, d_model: usize },
 }
 
-/// Validate a layer-spec pipeline against the declared input (and
-/// optional image geometry) and resolve every op's shapes.
-///
-/// Rejected here (so bad configs fail at parse time with an actionable
-/// message instead of panicking deep in construction): zero-neuron dense
-/// layers, dropout rates outside `[0, 1)`, dropout as the first or last
-/// layer, softmax anywhere but last, conv/pool without image geometry or
-/// with kernels larger than their input plane, dense/softmax directly on
-/// image-shaped data (flatten first), flatten without an image segment,
-/// and pipelines with no trainable layer at all.
-pub(crate) fn plan_specs(
+impl Shape {
+    /// Flattened element count — the boundary row count.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Flat(n) => *n,
+            Self::Image(img) => img.len(),
+            Self::Seq { len, d_model } => len * d_model,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Canonical kind tag ("flat" | "image" | "seq") — used by the
+    /// serving `/v1/models` shape JSON.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Flat(_) => "flat",
+            Self::Image(_) => "image",
+            Self::Seq { .. } => "seq",
+        }
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Flat(n) => write!(f, "{n}"),
+            Self::Image(img) => write!(f, "{img}"),
+            Self::Seq { len, d_model } => write!(f, "{len}x{d_model} seq"),
+        }
+    }
+}
+
+/// Resolve the legacy `(input, image)` pair into one [`Shape`],
+/// checking the image geometry against the flat input size — the
+/// deprecated `[model] input` / `[model] image` side-channel desugars
+/// through here.
+pub(crate) fn resolve_image_shape(
     input: usize,
     image: Option<ImageDims>,
-    specs: &[LayerSpec],
-) -> Result<(Vec<usize>, Vec<Planned>), String> {
-    if input == 0 {
-        return Err("model input size must be positive".into());
-    }
-    if specs.is_empty() {
-        return Err("model needs at least one layer".into());
-    }
-    let mut shape = match image {
+) -> Result<Shape, String> {
+    match image {
         Some(img) => {
             if img.c == 0 || img.h == 0 || img.w == 0 {
                 return Err(format!("image geometry {img} has a zero dimension"));
@@ -195,12 +272,46 @@ pub(crate) fn plan_specs(
                     img.len()
                 ));
             }
-            Shape::Image(img)
+            Ok(Shape::Image(img))
         }
-        None => Shape::Flat(input),
-    };
+        None => Ok(Shape::Flat(input)),
+    }
+}
+
+/// Validate a layer-spec pipeline against the declared input [`Shape`]
+/// and resolve every op's shapes.
+///
+/// Rejected here (so bad configs fail at parse time with an actionable
+/// message instead of panicking deep in construction): zero-neuron dense
+/// layers, dropout rates outside `[0, 1)`, dropout as the first or last
+/// layer, softmax anywhere but last, conv/pool without image geometry or
+/// with kernels larger than their input plane, dense/softmax directly on
+/// image-shaped data (flatten first), flatten with nothing to flatten,
+/// embedding anywhere but first or with an over-limit vocabulary,
+/// layernorm/linear2d/self-attention on non-sequence data, and pipelines
+/// with no trainable layer at all. Sequence-shaped data *may* flow
+/// straight into dense/softmax (the feature-fastest layout is already
+/// flat); image-shaped data needs an explicit flatten.
+pub(crate) fn plan_specs(
+    input: Shape,
+    specs: &[LayerSpec],
+) -> Result<(Vec<usize>, Vec<Planned>), String> {
+    match input {
+        Shape::Flat(0) => return Err("model input size must be positive".into()),
+        Shape::Image(img) if img.c == 0 || img.h == 0 || img.w == 0 => {
+            return Err(format!("image geometry {img} has a zero dimension"))
+        }
+        Shape::Seq { len, d_model } if len == 0 || d_model == 0 => {
+            return Err(format!("sequence shape {len}x{d_model} has a zero dimension"))
+        }
+        _ => {}
+    }
+    if specs.is_empty() {
+        return Err("model needs at least one layer".into());
+    }
+    let mut shape = input;
     let last = specs.len() - 1;
-    let mut chain = vec![input];
+    let mut chain = vec![input.len()];
     let mut planned = Vec::with_capacity(specs.len());
     for (i, spec) in specs.iter().enumerate() {
         match spec {
@@ -212,6 +323,9 @@ pub(crate) fn plan_specs(
                 }
                 let in_size = match shape {
                     Shape::Flat(n) => n,
+                    // Sequence data is already flat feature-fastest; a
+                    // dense head consumes it directly.
+                    Shape::Seq { .. } => shape.len(),
                     Shape::Image(img) => {
                         return Err(format!(
                             "layer {i} (dense) follows image-shaped data ({img}); \
@@ -244,11 +358,7 @@ pub(crate) fn plan_specs(
                             .into(),
                     );
                 }
-                let size = match shape {
-                    Shape::Flat(n) => n,
-                    Shape::Image(img) => img.len(),
-                };
-                planned.push(Planned::Dropout { size, rate: *rate });
+                planned.push(Planned::Dropout { size: shape.len(), rate: *rate });
             }
             LayerSpec::Softmax => {
                 if i != last {
@@ -259,6 +369,7 @@ pub(crate) fn plan_specs(
                 }
                 let size = match shape {
                     Shape::Flat(n) => n,
+                    Shape::Seq { .. } => shape.len(),
                     Shape::Image(img) => {
                         return Err(format!(
                             "layer {i} (softmax) follows image-shaped data ({img}); \
@@ -320,30 +431,127 @@ pub(crate) fn plan_specs(
                 shape = Shape::Image(ImageDims::new(img.c, oh, ow));
             }
             LayerSpec::Flatten => {
-                let img = match shape {
-                    Shape::Image(img) => img,
-                    Shape::Flat(_) => {
+                if matches!(shape, Shape::Flat(_)) {
+                    return Err(format!(
+                        "layer {i} (flatten) has nothing to flatten: the data is \
+                         already a flat vector (flatten belongs after conv/pool \
+                         or sequence layers)"
+                    ));
+                }
+                planned.push(Planned::Flatten { from: shape });
+                shape = Shape::Flat(shape.len());
+            }
+            LayerSpec::Embedding { vocab, d_model } => {
+                if i != 0 {
+                    return Err(format!(
+                        "layer {i} (embedding) must be the first layer: it consumes \
+                         the raw token ids"
+                    ));
+                }
+                let len = match shape {
+                    Shape::Flat(n) => n,
+                    Shape::Image(img) => {
                         return Err(format!(
-                            "layer {i} (flatten) has nothing to flatten: the data is \
-                             already a flat vector (flatten belongs after conv/pool \
-                             layers)"
+                            "layer {i} (embedding) consumes a flat vector of token \
+                             ids, not a {img} image"
+                        ))
+                    }
+                    Shape::Seq { len, d_model } => {
+                        return Err(format!(
+                            "layer {i} (embedding) consumes a flat vector of token \
+                             ids, but the input is already sequence-shaped \
+                             ({len}x{d_model})"
                         ))
                     }
                 };
-                planned.push(Planned::Flatten { img });
-                shape = Shape::Flat(img.len());
+                if *vocab == 0 || *d_model == 0 {
+                    return Err(format!(
+                        "layer {i} (embedding) needs a positive vocab and d_model"
+                    ));
+                }
+                if *vocab > MAXPOOL_INDEX_LIMIT {
+                    return Err(format!(
+                        "layer {i} (embedding) vocab {vocab} exceeds 2^24; token ids \
+                         are carried as network floats, which are exact only up to \
+                         2^24"
+                    ));
+                }
+                planned.push(Planned::Embedding { len, vocab: *vocab, d_model: *d_model });
+                chain.push(len * d_model);
+                shape = Shape::Seq { len, d_model: *d_model };
+            }
+            LayerSpec::LayerNorm => {
+                let (len, d_model) = match shape {
+                    Shape::Seq { len, d_model } => (len, d_model),
+                    other => {
+                        return Err(format!(
+                            "layer {i} (layernorm) needs sequence-shaped data, not \
+                             {other}; start the pipeline with an embedding layer or \
+                             a sequence input shape"
+                        ))
+                    }
+                };
+                planned.push(Planned::LayerNorm { len, d_model });
+                chain.push(len * d_model);
+            }
+            LayerSpec::Linear2d { units, activation } => {
+                if *units == 0 {
+                    return Err(format!(
+                        "layer {i} (linear2d) has zero neurons; every position needs \
+                         at least one output"
+                    ));
+                }
+                let (len, d_in) = match shape {
+                    Shape::Seq { len, d_model } => (len, d_model),
+                    other => {
+                        return Err(format!(
+                            "layer {i} (linear2d) needs sequence-shaped data, not \
+                             {other}; start the pipeline with an embedding layer or \
+                             a sequence input shape"
+                        ))
+                    }
+                };
+                planned.push(Planned::Linear2d {
+                    len,
+                    d_in,
+                    units: *units,
+                    activation: *activation,
+                });
+                chain.push(len * units);
+                shape = Shape::Seq { len, d_model: *units };
+            }
+            LayerSpec::SelfAttention => {
+                let (len, d_model) = match shape {
+                    Shape::Seq { len, d_model } => (len, d_model),
+                    other => {
+                        return Err(format!(
+                            "layer {i} (self_attention) needs sequence-shaped data, \
+                             not {other}; start the pipeline with an embedding layer \
+                             or a sequence input shape"
+                        ))
+                    }
+                };
+                planned.push(Planned::SelfAttention { len, d_model });
+                chain.push(len * d_model);
             }
         }
     }
     if chain.len() < 2 {
-        return Err("model has no trainable (dense/conv2d) layer, so it has no \
+        return Err("model has no trainable (parameter-owning) layer, so it has no \
                     parameters"
             .into());
     }
     Ok((chain, planned))
 }
 
-/// Validate a layer-spec pipeline and return its **parameter chain** —
+/// Validate a layer-spec pipeline against an input [`Shape`] and return
+/// its **parameter chain** — the input size followed by every
+/// parameter-owning op's output size.
+pub fn validate_specs_shape(input: Shape, specs: &[LayerSpec]) -> Result<Vec<usize>, String> {
+    plan_specs(input, specs).map(|(chain, _)| chain)
+}
+
+/// [`validate_specs_shape`] through the legacy `(input, image)` pair —
 /// the input size followed by every parameter-owning (dense/conv) op's
 /// output size. For dense-only pipelines this is the paper's `dims`.
 /// `image` supplies the `c×h×w` geometry conv/pool layers need.
@@ -352,7 +560,11 @@ pub fn validate_specs_image(
     image: Option<ImageDims>,
     specs: &[LayerSpec],
 ) -> Result<Vec<usize>, String> {
-    plan_specs(input, image, specs).map(|(chain, _)| chain)
+    if input == 0 {
+        return Err("model input size must be positive".into());
+    }
+    let shape = resolve_image_shape(input, image)?;
+    validate_specs_shape(shape, specs)
 }
 
 /// [`validate_specs_image`] without image geometry (dense-chain
@@ -369,15 +581,26 @@ pub fn validate_specs(input: usize, specs: &[LayerSpec]) -> Result<Vec<usize>, S
 /// scratch.
 pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     /// Kind tag ("dense" | "dropout" | "softmax" | "conv2d" |
-    /// "maxpool2d" | "flatten") — used by checkpoint v2 and the serving
-    /// `/v1/models` endpoint.
+    /// "maxpool2d" | "flatten" | "embedding" | "layernorm" | "linear2d"
+    /// | "self_attention") — used by the checkpoint formats and the
+    /// serving `/v1/models` endpoint.
     fn kind(&self) -> &'static str;
 
-    /// Rows this op consumes.
-    fn in_size(&self) -> usize;
+    /// The rank-aware per-sample [`Shape`] this op consumes.
+    fn in_shape(&self) -> Shape;
 
-    /// Rows this op produces.
-    fn out_size(&self) -> usize;
+    /// The rank-aware per-sample [`Shape`] this op produces.
+    fn out_shape(&self) -> Shape;
+
+    /// Rows this op consumes (the flat view of [`LayerOp::in_shape`]).
+    fn in_size(&self) -> usize {
+        self.in_shape().len()
+    }
+
+    /// Rows this op produces (the flat view of [`LayerOp::out_shape`]).
+    fn out_size(&self) -> usize {
+        self.out_shape().len()
+    }
 
     /// Rows of per-batch-column cache this op needs the workspace to
     /// carry from forward to backward (0 = stateless).
@@ -391,16 +614,6 @@ pub trait LayerOp<T: Scalar>: std::fmt::Debug + Send + Sync {
     /// overwrite it mid-backward.
     fn work_rows(&self) -> usize {
         0
-    }
-
-    /// Image geometry this op consumes, when it is image-shaped.
-    fn in_image(&self) -> Option<ImageDims> {
-        None
-    }
-
-    /// Image geometry this op produces, when it is image-shaped.
-    fn out_image(&self) -> Option<ImageDims> {
-        None
     }
 
     /// Trainable scalars owned by this op.
@@ -521,12 +734,12 @@ impl<T: Scalar> LayerOp<T> for Dense<T> {
         "dense"
     }
 
-    fn in_size(&self) -> usize {
-        self.w.rows()
+    fn in_shape(&self) -> Shape {
+        Shape::Flat(self.w.rows())
     }
 
-    fn out_size(&self) -> usize {
-        self.w.cols()
+    fn out_shape(&self) -> Shape {
+        Shape::Flat(self.w.cols())
     }
 
     fn cache_rows(&self) -> usize {
@@ -664,12 +877,14 @@ impl<T: Scalar> LayerOp<T> for Dropout {
         "dropout"
     }
 
-    fn in_size(&self) -> usize {
-        self.size
+    // Dropout is elementwise and shape-oblivious: assembly lets any
+    // equal-length shape flow through it unchanged.
+    fn in_shape(&self) -> Shape {
+        Shape::Flat(self.size)
     }
 
-    fn out_size(&self) -> usize {
-        self.size
+    fn out_shape(&self) -> Shape {
+        Shape::Flat(self.size)
     }
 
     fn cache_rows(&self) -> usize {
@@ -776,12 +991,12 @@ impl<T: Scalar> LayerOp<T> for Softmax {
         "softmax"
     }
 
-    fn in_size(&self) -> usize {
-        self.size
+    fn in_shape(&self) -> Shape {
+        Shape::Flat(self.size)
     }
 
-    fn out_size(&self) -> usize {
-        self.size
+    fn out_shape(&self) -> Shape {
+        Shape::Flat(self.size)
     }
 
     fn spec(&self) -> LayerSpec {
@@ -1161,12 +1376,12 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
         "conv2d"
     }
 
-    fn in_size(&self) -> usize {
-        self.img.len()
+    fn in_shape(&self) -> Shape {
+        Shape::Image(self.img)
     }
 
-    fn out_size(&self) -> usize {
-        self.out_dims().len()
+    fn out_shape(&self) -> Shape {
+        Shape::Image(self.out_dims())
     }
 
     fn cache_rows(&self) -> usize {
@@ -1182,14 +1397,6 @@ impl<T: Scalar> LayerOp<T> for Conv2d<T> {
         // panel needed `K·P` rows, a factor `min(f, K)·P / max(f, P)`
         // more; the workspace tests pin the shrink).
         self.out_dims().len().max(self.patch_len())
-    }
-
-    fn in_image(&self) -> Option<ImageDims> {
-        Some(self.img)
-    }
-
-    fn out_image(&self) -> Option<ImageDims> {
-        Some(self.out_dims())
     }
 
     fn param_count(&self) -> usize {
@@ -1390,25 +1597,17 @@ impl<T: Scalar> LayerOp<T> for MaxPool2d {
         "maxpool2d"
     }
 
-    fn in_size(&self) -> usize {
-        self.img.len()
+    fn in_shape(&self) -> Shape {
+        Shape::Image(self.img)
     }
 
-    fn out_size(&self) -> usize {
-        self.out_dims().len()
+    fn out_shape(&self) -> Shape {
+        Shape::Image(self.out_dims())
     }
 
     fn cache_rows(&self) -> usize {
         // The argmax input index per output element.
         self.out_dims().len()
-    }
-
-    fn in_image(&self) -> Option<ImageDims> {
-        Some(self.img)
-    }
-
-    fn out_image(&self) -> Option<ImageDims> {
-        Some(self.out_dims())
     }
 
     fn spec(&self) -> LayerSpec {
@@ -1514,20 +1713,29 @@ impl<T: Scalar> LayerOp<T> for MaxPool2d {
 // Flatten
 // ---------------------------------------------------------------------
 
-/// Shape bridge from image planes to the dense chain. The boundary data
-/// is already a flat column (channel-fastest), so forward/backward are
-/// plain copies — the op exists to make the geometry hand-off explicit
-/// and validated (dense layers refuse image-shaped input without it).
+/// Shape bridge from image planes (or sequences) to the dense chain.
+/// The boundary data is already a flat column (channel-fastest /
+/// feature-fastest), so forward/backward are plain copies — the op
+/// exists to make the geometry hand-off explicit and validated (dense
+/// layers refuse image-shaped input without it).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Flatten {
-    /// The image geometry being flattened.
-    pub img: ImageDims,
+    /// The shape being flattened (image or sequence).
+    pub from: Shape,
 }
 
 impl Flatten {
     pub fn new(img: ImageDims) -> Self {
-        assert!(!img.is_empty(), "flatten needs a non-empty image");
-        Self { img }
+        Self::from_shape(Shape::Image(img))
+    }
+
+    pub fn from_shape(from: Shape) -> Self {
+        assert!(
+            !matches!(from, Shape::Flat(_)),
+            "flatten needs image- or sequence-shaped input"
+        );
+        assert!(!from.is_empty(), "flatten needs a non-empty shape");
+        Self { from }
     }
 }
 
@@ -1536,16 +1744,12 @@ impl<T: Scalar> LayerOp<T> for Flatten {
         "flatten"
     }
 
-    fn in_size(&self) -> usize {
-        self.img.len()
+    fn in_shape(&self) -> Shape {
+        self.from
     }
 
-    fn out_size(&self) -> usize {
-        self.img.len()
-    }
-
-    fn in_image(&self) -> Option<ImageDims> {
-        Some(self.img)
+    fn out_shape(&self) -> Shape {
+        Shape::Flat(self.from.len())
     }
 
     fn spec(&self) -> LayerSpec {
@@ -1553,7 +1757,7 @@ impl<T: Scalar> LayerOp<T> for Flatten {
     }
 
     fn summary(&self) -> String {
-        format!("flatten({} -> {})", self.img, self.img.len())
+        format!("flatten({} -> {})", self.from, self.from.len())
     }
 
     fn forward_batch_into(
@@ -1581,6 +1785,939 @@ impl<T: Scalar> LayerOp<T> for Flatten {
     ) {
         if let Some(d_in) = d_in {
             d_in.as_mut_slice().copy_from_slice(d_out.as_slice());
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Embedding
+// ---------------------------------------------------------------------
+
+/// Token-id lookup table: the first layer of a sequence pipeline. Input
+/// is a flat `len`-vector of token ids carried as network floats
+/// (clamped into `[0, vocab)`; the planner bounds `vocab` at 2^24 so
+/// every id is exactly representable in f32). Output is
+/// `Seq { len, d_model }`: position `t` gets column `ids[t]` of the
+/// `[d_model, vocab]` table. Backward scatter-adds each position's
+/// upstream gradient into its table column; token ids themselves get no
+/// gradient. The table is an ordinary parameter block (with an empty
+/// bias vector), so the optimizer/collectives flat layout applies
+/// unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Embedding<T = f32> {
+    /// Sequence length (input token count).
+    pub len: usize,
+    /// Lookup table `[d_model, vocab]`, column `v` = token `v`'s vector.
+    pub w: Matrix<T>,
+    /// Always empty — embeddings have no bias, but the parameter-block
+    /// machinery wants a (weights, biases) pair.
+    pub b: Vec<T>,
+}
+
+impl<T: Scalar> Embedding<T> {
+    /// An embedding op from explicit parts (checkpoint loading, tests).
+    pub fn from_parts(len: usize, w: Matrix<T>) -> Self {
+        assert!(len > 0, "embedding needs at least one position");
+        assert!(w.rows() > 0 && w.cols() > 0, "embedding table must be non-empty");
+        assert!(
+            w.cols() <= MAXPOOL_INDEX_LIMIT,
+            "embedding vocab exceeds 2^24; token ids would not be exactly \
+             representable as f32"
+        );
+        Self { len, w, b: Vec::new() }
+    }
+
+    /// Vocabulary size.
+    pub fn vocab(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Embedding dimension.
+    pub fn d_model(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// Clamp a float-carried token id into `[0, vocab)` (NaN and
+    /// negatives map to 0, overshoot to the last token).
+    #[inline]
+    fn token_index(&self, v: T) -> usize {
+        let f = v.to_f64();
+        if f >= 0.0 {
+            (f as usize).min(self.w.cols() - 1)
+        } else {
+            0
+        }
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Embedding<T> {
+    fn kind(&self) -> &'static str {
+        "embedding"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape::Flat(self.len)
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.w.rows() }
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.w, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.w, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Embedding { vocab: self.w.cols(), d_model: self.w.rows() }
+    }
+
+    fn summary(&self) -> String {
+        format!("embedding({} ids -> {}x{}, vocab {})", self.len, self.len, self.w.rows(), self.w.cols())
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        _cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let d = self.w.rows();
+        for j in 0..x.cols() {
+            let xc = x.col(j);
+            let oc = out.col_mut(j);
+            for t in 0..self.len {
+                let idx = self.token_index(xc[t]);
+                oc[t * d..(t + 1) * d].copy_from_slice(self.w.col(idx));
+            }
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        _cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
+        grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        let d = self.w.rows();
+        if let Some((dw, _db)) = grads {
+            for j in 0..d_out.cols() {
+                let xc = x.col(j);
+                let dc = d_out.col(j);
+                for t in 0..self.len {
+                    let idx = self.token_index(xc[t]);
+                    vecops::axpy(dw.col_mut(idx), T::ONE, &dc[t * d..(t + 1) * d]);
+                }
+            }
+        }
+        if let Some(d_in) = d_in {
+            // Token ids are discrete: nothing differentiable below.
+            d_in.fill_zero();
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------
+
+/// Per-position layer normalization over `d_model` with trainable gain
+/// and bias: `y = g ⊙ (x - μ) / √(σ² + ε) + b`, each sequence position
+/// normalized independently. The cache stores `(μ, 1/√(σ²+ε))` per
+/// position (2·len rows), so backward recomputes `x̂` from the forward
+/// input without a second reduction. Gain lives as a `[d_model, 1]`
+/// matrix so the flat parameter-block layout (weights, then biases)
+/// applies unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerNorm<T = f32> {
+    /// Sequence length.
+    pub len: usize,
+    /// Gain `[d_model, 1]` (initialized to ones).
+    pub g: Matrix<T>,
+    /// Bias, length `d_model` (initialized to zeros).
+    pub b: Vec<T>,
+}
+
+/// Variance floor: the ε in `1/√(σ² + ε)`.
+const LAYERNORM_EPS: f64 = 1e-5;
+
+impl<T: Scalar> LayerNorm<T> {
+    /// Fresh layernorm: gain 1, bias 0 — deterministic, no RNG draws.
+    pub fn new(len: usize, d_model: usize) -> Self {
+        assert!(len > 0 && d_model > 0, "layernorm needs a non-empty sequence shape");
+        Self {
+            len,
+            g: Matrix::from_fn(d_model, 1, |_, _| T::ONE),
+            b: vec![T::ZERO; d_model],
+        }
+    }
+
+    /// A layernorm op from explicit parts (checkpoint loading, tests).
+    pub fn from_parts(len: usize, g: Matrix<T>, b: Vec<T>) -> Self {
+        assert!(len > 0, "layernorm needs at least one position");
+        assert_eq!(g.cols(), 1, "layernorm gain must be a [d_model, 1] column");
+        assert_eq!(g.rows(), b.len(), "layernorm gain/bias lengths must match");
+        assert!(!b.is_empty(), "layernorm needs a positive d_model");
+        Self { len, g, b }
+    }
+
+    /// Feature dimension.
+    pub fn d_model(&self) -> usize {
+        self.g.rows()
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for LayerNorm<T> {
+    fn kind(&self) -> &'static str {
+        "layernorm"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.g.rows() }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.g.rows() }
+    }
+
+    fn cache_rows(&self) -> usize {
+        // μ and 1/√(σ²+ε), one of each per position.
+        2 * self.len
+    }
+
+    fn param_count(&self) -> usize {
+        self.g.len() + self.b.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.g, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.g, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::LayerNorm
+    }
+
+    fn summary(&self) -> String {
+        format!("layernorm({}x{})", self.len, self.g.rows())
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        _work: &mut Matrix<T>,
+        _scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let d = self.g.rows();
+        let dn = T::from_f64(d as f64);
+        let gs = self.g.as_slice();
+        for j in 0..x.cols() {
+            let xc = x.col(j);
+            let oc = out.col_mut(j);
+            let cc = cache.col_mut(j);
+            for t in 0..self.len {
+                let xs = &xc[t * d..(t + 1) * d];
+                let mut mean = T::ZERO;
+                for &v in xs {
+                    mean = mean + v;
+                }
+                mean = mean / dn;
+                let mut var = T::ZERO;
+                for &v in xs {
+                    let c = v - mean;
+                    var = var + c * c;
+                }
+                var = var / dn;
+                // Computed through f64 so no T::sqrt is needed; f32
+                // pipelines truncate once, deterministically.
+                let inv = T::from_f64(1.0 / (var.to_f64() + LAYERNORM_EPS).sqrt());
+                cc[t] = mean;
+                cc[self.len + t] = inv;
+                let os = &mut oc[t * d..(t + 1) * d];
+                for i in 0..d {
+                    os[i] = gs[i] * (xs[i] - mean) * inv + self.b[i];
+                }
+            }
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        mut d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        _work: &mut Matrix<T>,
+        mut grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        _scratch: &mut GemmScratch<T>,
+    ) {
+        let d = self.g.rows();
+        let dn = T::from_f64(d as f64);
+        let gs = self.g.as_slice();
+        for j in 0..d_out.cols() {
+            let xc = x.col(j);
+            let dyc = d_out.col(j);
+            let cc = cache.col(j);
+            for t in 0..self.len {
+                let xs = &xc[t * d..(t + 1) * d];
+                let dys = &dyc[t * d..(t + 1) * d];
+                let mean = cc[t];
+                let inv = cc[self.len + t];
+                if let Some((dg, db)) = grads.as_mut() {
+                    let dgs = dg.as_mut_slice();
+                    for i in 0..d {
+                        let xh = (xs[i] - mean) * inv;
+                        dgs[i] = dgs[i] + dys[i] * xh;
+                        db[i] = db[i] + dys[i];
+                    }
+                }
+                if let Some(di) = d_in.as_mut() {
+                    // dx = (1/√(σ²+ε)) · (dx̂ − mean(dx̂) − x̂·mean(dx̂⊙x̂))
+                    // with dx̂ = dy ⊙ g; x̂ recomputed from the cached
+                    // (μ, inv) pair.
+                    let mut s1 = T::ZERO;
+                    let mut s2 = T::ZERO;
+                    for i in 0..d {
+                        let xh = (xs[i] - mean) * inv;
+                        let dxh = dys[i] * gs[i];
+                        s1 = s1 + dxh;
+                        s2 = s2 + dxh * xh;
+                    }
+                    s1 = s1 / dn;
+                    s2 = s2 / dn;
+                    let dxs = &mut di.col_mut(j)[t * d..(t + 1) * d];
+                    for i in 0..d {
+                        let xh = (xs[i] - mean) * inv;
+                        let dxh = dys[i] * gs[i];
+                        dxs[i] = inv * (dxh - s1 - xh * s2);
+                    }
+                }
+            }
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Linear2d
+// ---------------------------------------------------------------------
+
+/// Per-position dense projection: the same `[d_in, units]` weights and
+/// bias applied independently at every sequence position. Because the
+/// feature-fastest `[len·d_in, B]` boundary buffer is *also* a
+/// `[d_in, len·B]` column-major matrix over the same memory, the whole
+/// batch runs as **one** fused-epilogue GEMM per pass, exactly like
+/// [`Dense`] with the batch axis widened to `len·B` — bias + activation
+/// fuse into the C-write, train mode stashes σ'(Z) for backward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Linear2d<T = f32> {
+    /// Sequence length.
+    pub len: usize,
+    /// Weights `[d_in, units]`, column-major.
+    pub w: Matrix<T>,
+    /// Per-unit biases, length `units`.
+    pub b: Vec<T>,
+    /// This layer's activation.
+    pub activation: Activation,
+}
+
+impl<T: Scalar> Linear2d<T> {
+    /// A linear2d op from explicit parts (checkpoint loading, tests).
+    pub fn from_parts(len: usize, w: Matrix<T>, b: Vec<T>, activation: Activation) -> Self {
+        assert!(len > 0, "linear2d needs at least one position");
+        assert_eq!(w.cols(), b.len(), "linear2d bias length must match weight columns");
+        assert!(w.rows() > 0 && w.cols() > 0, "linear2d weights must be non-empty");
+        Self { len, w, b, activation }
+    }
+
+    /// Per-position output width.
+    pub fn units(&self) -> usize {
+        self.w.cols()
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for Linear2d<T> {
+    fn kind(&self) -> &'static str {
+        "linear2d"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.w.rows() }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.w.cols() }
+    }
+
+    fn cache_rows(&self) -> usize {
+        // Pre-activations Z, per position.
+        self.len * self.w.cols()
+    }
+
+    fn work_rows(&self) -> usize {
+        // σ'(Z) stash, mirroring the output.
+        self.len * self.w.cols()
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.w, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.w, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::Linear2d { units: self.w.cols(), activation: self.activation }
+    }
+
+    fn summary(&self) -> String {
+        format!(
+            "linear2d({}x{} -> {}x{}, {})",
+            self.len,
+            self.w.rows(),
+            self.len,
+            self.w.cols(),
+            self.activation
+        )
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        work: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+        mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let d_in = self.w.rows();
+        let units = self.w.cols();
+        let n = self.len * x.cols();
+        // Z [units, len·B] = Wᵀ [units, d_in] · X [d_in, len·B]: the
+        // boundary buffers reinterpreted with the position axis folded
+        // into the batch axis. One GEMM, same epilogue family as Dense.
+        let ep = match mode {
+            Mode::Eval => Epilogue::BiasAct {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                out: out.as_mut_slice(),
+            },
+            Mode::Train => Epilogue::BiasActStash {
+                bias: &self.b,
+                apply: self.activation.apply_kernel::<T>(),
+                prime: self.activation.prime_kernel::<T>(),
+                out: out.as_mut_slice(),
+                stash: work.as_mut_slice(),
+            },
+        };
+        gemm::gemm_slices_ep(
+            Op::T,
+            self.w.as_slice(),
+            d_in,
+            Op::N,
+            x.as_slice(),
+            d_in,
+            units,
+            n,
+            d_in,
+            cache.as_mut_slice(),
+            false,
+            ep,
+            scratch,
+        );
+    }
+
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        d_in: Option<&mut Matrix<T>>,
+        _cache: &Matrix<T>,
+        work: &mut Matrix<T>,
+        grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        scratch: &mut GemmScratch<T>,
+    ) {
+        let din = self.w.rows();
+        let units = self.w.cols();
+        let n = self.len * d_out.cols();
+        // δ = dC/dA ⊙ σ'(Z), against the train-mode stash.
+        for (dv, &pv) in d_out.as_mut_slice().iter_mut().zip(work.as_slice()) {
+            *dv = *dv * pv;
+        }
+        if let Some((dw, db)) = grads {
+            // dW [d_in, units] += X [d_in, len·B] · δᵀ [len·B, units];
+            // db += δ summed over every position of every sample.
+            gemm::gemm_slices(
+                Op::N,
+                x.as_slice(),
+                din,
+                Op::T,
+                d_out.as_slice(),
+                units,
+                din,
+                units,
+                n,
+                dw.as_mut_slice(),
+                true,
+                scratch,
+            );
+            for drow in d_out.as_slice().chunks_exact(units) {
+                vecops::axpy(db, T::ONE, drow);
+            }
+        }
+        if let Some(d_in) = d_in {
+            // dC/dX [d_in, len·B] = W · δ.
+            gemm::gemm_slices(
+                Op::N,
+                self.w.as_slice(),
+                din,
+                Op::N,
+                d_out.as_slice(),
+                units,
+                din,
+                n,
+                units,
+                d_in.as_mut_slice(),
+                false,
+                scratch,
+            );
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn LayerOp<T>> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// SelfAttention
+// ---------------------------------------------------------------------
+
+/// Single-head scaled-dot-product self-attention over the sequence:
+///
+/// ```text
+/// Q|K|V = W{q,k,v}ᵀ·X + b{q,k,v}      (one fused-epilogue GEMM)
+/// P     = softmax(KᵀQ / √d)            (per query column)
+/// out   = Woᵀ·(V·P) + bo               (fused-epilogue GEMM)
+/// ```
+///
+/// All four projections live in one `[d, 4d]` weight matrix (column
+/// blocks `Wq|Wk|Wv|Wo`) and one `4d` bias vector, so the op is a single
+/// parameter block for the optimizer/collectives. Every matmul —
+/// projections and both attention products — runs through the blocked
+/// GEMM (`gemm_slices`/`gemm_slices_ep`), so the AVX2/AVX-512 kernels
+/// and fused epilogues apply. Attention products are per-sample (each
+/// sample's Q/K/V live strided within one cache column), looping `B`
+/// small GEMMs per pass.
+///
+/// Cache per column: `[QKV (3·d·len) | P (len²) | context (d·len)]`.
+/// Work per column: forward stages the epilogue C there; backward
+/// splits it into `dCtx | dP | dQ | dK | dV` blocks (`4·d·len + len²`
+/// rows cover both).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelfAttention<T = f32> {
+    /// Sequence length.
+    pub len: usize,
+    /// Projections `[d, 4d]`: column blocks `Wq | Wk | Wv | Wo`.
+    pub w: Matrix<T>,
+    /// Biases, length `4d`: blocks `bq | bk | bv | bo`.
+    pub b: Vec<T>,
+}
+
+impl<T: Scalar> SelfAttention<T> {
+    /// A self-attention op from explicit parts (checkpoint loading,
+    /// tests).
+    pub fn from_parts(len: usize, w: Matrix<T>, b: Vec<T>) -> Self {
+        assert!(len > 0, "self_attention needs at least one position");
+        assert!(w.rows() > 0, "self_attention needs a positive d_model");
+        assert_eq!(w.cols(), 4 * w.rows(), "self_attention weights must be [d, 4d]");
+        assert_eq!(b.len(), 4 * w.rows(), "self_attention biases must be length 4d");
+        Self { len, w, b }
+    }
+
+    /// Feature dimension `d`.
+    pub fn d_model(&self) -> usize {
+        self.w.rows()
+    }
+
+    /// `1/√d`, the score scale.
+    fn scale(&self) -> T {
+        T::from_f64(1.0 / (self.w.rows() as f64).sqrt())
+    }
+}
+
+impl<T: Scalar> LayerOp<T> for SelfAttention<T> {
+    fn kind(&self) -> &'static str {
+        "self_attention"
+    }
+
+    fn in_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.w.rows() }
+    }
+
+    fn out_shape(&self) -> Shape {
+        Shape::Seq { len: self.len, d_model: self.w.rows() }
+    }
+
+    fn cache_rows(&self) -> usize {
+        // QKV (3·d·len) + attention weights P (len²) + context (d·len).
+        let (l, d) = (self.len, self.w.rows());
+        4 * d * l + l * l
+    }
+
+    fn work_rows(&self) -> usize {
+        // Backward's dCtx|dP|dQ|dK|dV split (4·d·len + len²); the
+        // forward epilogue C staging (3·d·len) fits inside it.
+        let (l, d) = (self.len, self.w.rows());
+        4 * d * l + l * l
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    fn params(&self) -> Option<(&Matrix<T>, &[T])> {
+        Some((&self.w, &self.b))
+    }
+
+    fn params_mut(&mut self) -> Option<(&mut Matrix<T>, &mut Vec<T>)> {
+        Some((&mut self.w, &mut self.b))
+    }
+
+    fn spec(&self) -> LayerSpec {
+        LayerSpec::SelfAttention
+    }
+
+    fn summary(&self) -> String {
+        format!("self_attention({}x{}, 1 head)", self.len, self.w.rows())
+    }
+
+    fn forward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        out: &mut Matrix<T>,
+        cache: &mut Matrix<T>,
+        work: &mut Matrix<T>,
+        scratch: &mut GemmScratch<T>,
+        _mode: Mode,
+        _mask_rng: &mut Rng,
+    ) {
+        let (l, d) = (self.len, self.w.rows());
+        let scale = self.scale();
+        let identity = Activation::Linear;
+        for j in 0..x.cols() {
+            let xj = x.col(j);
+            let ccol = cache.col_mut(j);
+            let (qkv, rest) = ccol.split_at_mut(3 * d * l);
+            let (p, ctx) = rest.split_at_mut(l * l);
+            let wcol = work.col_mut(j);
+            // QKV [3d, l] = W_qkvᵀ · X + b_qkv, through the fused bias
+            // epilogue (identity activation); C stages in the work
+            // column, the biased result lands in the cache. Q, K, V are
+            // the [d, l] row-block views at offsets 0, d, 2d (lda 3d).
+            gemm::gemm_slices_ep(
+                Op::T,
+                &self.w.as_slice()[..d * 3 * d],
+                d,
+                Op::N,
+                xj,
+                d,
+                3 * d,
+                l,
+                d,
+                &mut wcol[..3 * d * l],
+                false,
+                Epilogue::BiasAct {
+                    bias: &self.b[..3 * d],
+                    apply: identity.apply_kernel::<T>(),
+                    out: &mut qkv[..],
+                },
+                scratch,
+            );
+            // Raw scores [l, l] = Kᵀ · Q.
+            gemm::gemm_slices(
+                Op::T,
+                &qkv[d..],
+                3 * d,
+                Op::N,
+                &qkv[..],
+                3 * d,
+                l,
+                l,
+                d,
+                &mut p[..],
+                false,
+                scratch,
+            );
+            // Scale by 1/√d, then max-shifted softmax per query column.
+            for t in 0..l {
+                let col = &mut p[t * l..(t + 1) * l];
+                for v in col.iter_mut() {
+                    *v = *v * scale;
+                }
+                let mut mx = col[0];
+                for &v in col.iter() {
+                    if v > mx {
+                        mx = v;
+                    }
+                }
+                let mut sum = T::ZERO;
+                for v in col.iter_mut() {
+                    let e = (*v - mx).exp();
+                    *v = e;
+                    sum = sum + e;
+                }
+                for v in col.iter_mut() {
+                    *v = *v / sum;
+                }
+            }
+            // Context [d, l] = V · P.
+            gemm::gemm_slices(
+                Op::N,
+                &qkv[2 * d..],
+                3 * d,
+                Op::N,
+                &p[..],
+                l,
+                d,
+                l,
+                l,
+                &mut ctx[..],
+                false,
+                scratch,
+            );
+            // out [d, l] = Woᵀ · context + bo, fused epilogue again.
+            gemm::gemm_slices_ep(
+                Op::T,
+                &self.w.as_slice()[3 * d * d..],
+                d,
+                Op::N,
+                &ctx[..],
+                d,
+                d,
+                l,
+                d,
+                &mut wcol[..d * l],
+                false,
+                Epilogue::BiasAct {
+                    bias: &self.b[3 * d..],
+                    apply: identity.apply_kernel::<T>(),
+                    out: out.col_mut(j),
+                },
+                scratch,
+            );
+        }
+    }
+
+    fn backward_batch_into(
+        &self,
+        x: &Matrix<T>,
+        d_out: &mut Matrix<T>,
+        mut d_in: Option<&mut Matrix<T>>,
+        cache: &Matrix<T>,
+        work: &mut Matrix<T>,
+        mut grads: Option<(&mut Matrix<T>, &mut Vec<T>)>,
+        scratch: &mut GemmScratch<T>,
+    ) {
+        let (l, d) = (self.len, self.w.rows());
+        let dd = d * d;
+        let scale = self.scale();
+        let ws = self.w.as_slice();
+        for j in 0..d_out.cols() {
+            let delta = d_out.col(j);
+            let ccol = cache.col(j);
+            let (qkv, rest) = ccol.split_at(3 * d * l);
+            let (p, ctx) = rest.split_at(l * l);
+            let wcol = work.col_mut(j);
+            let (dctx, rest) = wcol.split_at_mut(d * l);
+            let (dp, rest) = rest.split_at_mut(l * l);
+            let (dq, rest) = rest.split_at_mut(d * l);
+            let (dk, dv) = rest.split_at_mut(d * l);
+            if let Some((dw, db)) = grads.as_mut() {
+                // dWo [d, d] += context · δᵀ ; dbo += Σ_positions δ.
+                gemm::gemm_slices(
+                    Op::N,
+                    ctx,
+                    d,
+                    Op::T,
+                    delta,
+                    d,
+                    d,
+                    d,
+                    l,
+                    &mut dw.as_mut_slice()[3 * dd..4 * dd],
+                    true,
+                    scratch,
+                );
+                for chunk in delta.chunks_exact(d) {
+                    vecops::axpy(&mut db[3 * d..4 * d], T::ONE, chunk);
+                }
+            }
+            // dContext [d, l] = Wo · δ.
+            gemm::gemm_slices(
+                Op::N,
+                &ws[3 * dd..],
+                d,
+                Op::N,
+                delta,
+                d,
+                d,
+                l,
+                d,
+                &mut dctx[..],
+                false,
+                scratch,
+            );
+            // dP [l, l] = Vᵀ · dContext ; dV [d, l] = dContext · Pᵀ.
+            gemm::gemm_slices(
+                Op::T,
+                &qkv[2 * d..],
+                3 * d,
+                Op::N,
+                &dctx[..],
+                d,
+                l,
+                l,
+                d,
+                &mut dp[..],
+                false,
+                scratch,
+            );
+            gemm::gemm_slices(
+                Op::N,
+                &dctx[..],
+                d,
+                Op::T,
+                p,
+                l,
+                d,
+                l,
+                l,
+                &mut dv[..],
+                false,
+                scratch,
+            );
+            // Softmax backward per query column (in place on dP), with
+            // the 1/√d chain folded in:
+            // dRaw[:,t] = scale · P[:,t] ⊙ (dP[:,t] − P[:,t]·dP[:,t]).
+            for t in 0..l {
+                let pc = &p[t * l..(t + 1) * l];
+                let dpc = &mut dp[t * l..(t + 1) * l];
+                let mut s = T::ZERO;
+                for (&pv, &dv_) in pc.iter().zip(dpc.iter()) {
+                    s = s + pv * dv_;
+                }
+                for (dv_, &pv) in dpc.iter_mut().zip(pc.iter()) {
+                    *dv_ = scale * pv * (*dv_ - s);
+                }
+            }
+            // dQ [d, l] = K · dRaw ; dK [d, l] = Q · dRawᵀ.
+            gemm::gemm_slices(
+                Op::N,
+                &qkv[d..],
+                3 * d,
+                Op::N,
+                &dp[..],
+                l,
+                d,
+                l,
+                l,
+                &mut dq[..],
+                false,
+                scratch,
+            );
+            gemm::gemm_slices(
+                Op::N,
+                &qkv[..],
+                3 * d,
+                Op::T,
+                &dp[..],
+                l,
+                d,
+                l,
+                l,
+                &mut dk[..],
+                false,
+                scratch,
+            );
+            if let Some((dw, db)) = grads.as_mut() {
+                // dW{q,k,v} [d, d] += X · d{Q,K,V}ᵀ ; db blocks likewise.
+                let xj = x.col(j);
+                let dws = dw.as_mut_slice();
+                gemm::gemm_slices(
+                    Op::N, xj, d, Op::T, &dq[..], d, d, d, l, &mut dws[..dd], true, scratch,
+                );
+                gemm::gemm_slices(
+                    Op::N, xj, d, Op::T, &dk[..], d, d, d, l, &mut dws[dd..2 * dd], true, scratch,
+                );
+                gemm::gemm_slices(
+                    Op::N, xj, d, Op::T, &dv[..], d, d, d, l, &mut dws[2 * dd..3 * dd], true,
+                    scratch,
+                );
+                for chunk in dq.chunks_exact(d) {
+                    vecops::axpy(&mut db[..d], T::ONE, chunk);
+                }
+                for chunk in dk.chunks_exact(d) {
+                    vecops::axpy(&mut db[d..2 * d], T::ONE, chunk);
+                }
+                for chunk in dv.chunks_exact(d) {
+                    vecops::axpy(&mut db[2 * d..3 * d], T::ONE, chunk);
+                }
+            }
+            if let Some(di) = d_in.as_mut() {
+                // dX [d, l] = Wq·dQ + Wk·dK + Wv·dV.
+                let dx = di.col_mut(j);
+                gemm::gemm_slices(
+                    Op::N, &ws[..dd], d, Op::N, &dq[..], d, d, l, d, dx, false, scratch,
+                );
+                let dx = di.col_mut(j);
+                gemm::gemm_slices(
+                    Op::N, &ws[dd..2 * dd], d, Op::N, &dk[..], d, d, l, d, dx, true, scratch,
+                );
+                let dx = di.col_mut(j);
+                gemm::gemm_slices(
+                    Op::N, &ws[2 * dd..3 * dd], d, Op::N, &dv[..], d, d, l, d, dx, true, scratch,
+                );
+            }
         }
     }
 
@@ -2103,5 +3240,277 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.contains("2^24"), "{err}");
+    }
+
+    /// Rank-aware validation: sequence pipelines resolve to the right
+    /// parameter chains; shape-rule violations are rejected with
+    /// actionable messages.
+    #[test]
+    fn seq_spec_validation_tracks_shapes() {
+        let dense = |u| LayerSpec::Dense { units: u, activation: Activation::Sigmoid };
+        let emb = |v, d| LayerSpec::Embedding { vocab: v, d_model: d };
+        let lin = |u| LayerSpec::Linear2d { units: u, activation: Activation::Linear };
+
+        // 6 token ids -> [6, 4] seq -> ... -> 2-class softmax.
+        let chain = validate_specs_shape(
+            Shape::Flat(6),
+            &[
+                emb(10, 4),
+                LayerSpec::LayerNorm,
+                LayerSpec::SelfAttention,
+                lin(3),
+                dense(2),
+                LayerSpec::Softmax,
+            ],
+        )
+        .unwrap();
+        assert_eq!(chain, vec![6, 24, 24, 24, 18, 2], "chain = input + param-op outs");
+
+        // A sequence-shaped *input* (no embedding) is equally valid, and
+        // flatten bridges seq -> dense explicitly too.
+        let chain =
+            validate_specs_shape(Shape::Seq { len: 4, d_model: 3 }, &[
+                LayerSpec::SelfAttention,
+                LayerSpec::Flatten,
+                dense(2),
+                LayerSpec::Softmax,
+            ])
+            .unwrap();
+        assert_eq!(chain, vec![12, 12, 2]);
+
+        for (input, specs, needle) in [
+            (Shape::Flat(4), vec![dense(3), emb(8, 2)], "must be the first layer"),
+            (Shape::Flat(4), vec![emb(0, 2), dense(2)], "positive vocab"),
+            (Shape::Flat(4), vec![emb(8, 0), dense(2)], "positive vocab"),
+            (Shape::Flat(4), vec![emb((1 << 24) + 1, 2), dense(2)], "2^24"),
+            (Shape::Flat(4), vec![LayerSpec::LayerNorm, dense(2)], "sequence-shaped"),
+            (Shape::Flat(4), vec![lin(3), dense(2)], "sequence-shaped"),
+            (Shape::Flat(4), vec![LayerSpec::SelfAttention, dense(2)], "sequence-shaped"),
+            (Shape::Flat(4), vec![emb(8, 2), lin(0)], "zero neurons"),
+            (
+                Shape::Image(ImageDims::new(1, 2, 2)),
+                vec![emb(8, 2), dense(2)],
+                "token ids",
+            ),
+            (
+                Shape::Seq { len: 4, d_model: 2 },
+                vec![emb(8, 2), dense(2)],
+                "already sequence-shaped",
+            ),
+            (Shape::Seq { len: 0, d_model: 2 }, vec![dense(2)], "zero dimension"),
+        ] {
+            let err = validate_specs_shape(input, &specs).unwrap_err();
+            assert!(err.contains(needle), "specs {specs:?}: error '{err}' lacks '{needle}'");
+        }
+    }
+
+    /// Run a deterministic op's forward with freshly-negotiated buffers.
+    fn run_forward(
+        op: &dyn LayerOp<f64>,
+        x: &Matrix<f64>,
+        mode: Mode,
+    ) -> (Matrix<f64>, Matrix<f64>, Matrix<f64>) {
+        let b = x.cols();
+        let mut out = Matrix::zeros(op.out_size(), b);
+        let mut cache = Matrix::zeros(op.cache_rows(), b);
+        let mut work = Matrix::zeros(op.work_rows(), b);
+        let mut scratch = GemmScratch::new();
+        let mut rng = Rng::new(0);
+        op.forward_batch_into(x, &mut out, &mut cache, &mut work, &mut scratch, mode, &mut rng);
+        (out, cache, work)
+    }
+
+    /// Central-difference check of an op's backward against its forward:
+    /// loss = Σ dl ⊙ out, gradients of x (optional), weights, and biases.
+    fn fd_check_op<O: LayerOp<f64> + Clone>(op: &O, x: &Matrix<f64>, check_input: bool, tol: f64) {
+        let b = x.cols();
+        let dl = Matrix::from_fn(op.out_size(), b, |i, j| {
+            0.25 * (((i * 7 + j * 3) % 9) as f64) - 1.0
+        });
+        let (_out, cache, mut work) = run_forward(op, x, Mode::Train);
+        let mut d_out = dl.clone();
+        let mut d_in = Matrix::zeros(op.in_size(), b);
+        let (mut dw, mut db) = match op.params() {
+            Some((w, bias)) => (Matrix::zeros(w.rows(), w.cols()), vec![0.0; bias.len()]),
+            None => (Matrix::zeros(0, 0), Vec::new()),
+        };
+        let has_params = op.params().is_some();
+        let mut scratch = GemmScratch::new();
+        op.backward_batch_into(
+            x,
+            &mut d_out,
+            Some(&mut d_in),
+            &cache,
+            &mut work,
+            if has_params { Some((&mut dw, &mut db)) } else { None },
+            &mut scratch,
+        );
+
+        let loss = |op: &O, x: &Matrix<f64>| -> f64 {
+            let (out, _, _) = run_forward(op, x, Mode::Eval);
+            out.as_slice().iter().zip(dl.as_slice()).map(|(o, d)| o * d).sum()
+        };
+        let h = 1e-6;
+        if check_input {
+            for k in 0..x.as_slice().len() {
+                let mut xp = x.clone();
+                xp.as_mut_slice()[k] += h;
+                let mut xm = x.clone();
+                xm.as_mut_slice()[k] -= h;
+                let fd = (loss(op, &xp) - loss(op, &xm)) / (2.0 * h);
+                let got = d_in.as_slice()[k];
+                assert!((fd - got).abs() < tol, "d_in[{k}]: fd {fd} vs analytic {got}");
+            }
+        }
+        if has_params {
+            for k in 0..dw.as_slice().len() {
+                let mut op_p = op.clone();
+                op_p.params_mut().unwrap().0.as_mut_slice()[k] += h;
+                let mut op_m = op.clone();
+                op_m.params_mut().unwrap().0.as_mut_slice()[k] -= h;
+                let fd = (loss(&op_p, x) - loss(&op_m, x)) / (2.0 * h);
+                let got = dw.as_slice()[k];
+                assert!((fd - got).abs() < tol, "dw[{k}]: fd {fd} vs analytic {got}");
+            }
+            for k in 0..db.len() {
+                let mut op_p = op.clone();
+                op_p.params_mut().unwrap().1[k] += h;
+                let mut op_m = op.clone();
+                op_m.params_mut().unwrap().1[k] -= h;
+                let fd = (loss(&op_p, x) - loss(&op_m, x)) / (2.0 * h);
+                assert!((fd - db[k]).abs() < tol, "db[{k}]: fd {fd} vs analytic {}", db[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_looks_up_clamps_and_scatters() {
+        // vocab 5, d_model 3: table column v = [v, v+0.1, v+0.2].
+        let w = Matrix::from_fn(3, 5, |i, j| j as f64 + i as f64 * 0.1);
+        let emb = Embedding::from_parts(4, w);
+        assert_eq!(LayerOp::<f64>::in_size(&emb), 4);
+        assert_eq!(LayerOp::<f64>::out_size(&emb), 12);
+        assert_eq!(LayerOp::<f64>::param_count(&emb), 15);
+        assert_eq!(
+            LayerOp::<f64>::spec(&emb),
+            LayerSpec::Embedding { vocab: 5, d_model: 3 }
+        );
+
+        // Ids clamp: -1 -> 0, 7 -> 4 (vocab-1), NaN -> 0; 2.9 truncates to 2.
+        let x = Matrix::from_vec(4, 1, vec![1.0, -1.0, 7.0, 2.9]);
+        let (out, _, _) = run_forward(&emb, &x, Mode::Eval);
+        let oc = out.col(0);
+        for (t, want_id) in [(0usize, 1usize), (1, 0), (2, 4), (3, 2)] {
+            assert_eq!(&oc[t * 3..(t + 1) * 3], emb.w.col(want_id), "position {t}");
+        }
+
+        // Backward scatter-adds into the looked-up columns; repeated ids
+        // accumulate. d_in (when requested) is zero: ids are discrete.
+        let x = Matrix::from_vec(4, 1, vec![2.0, 2.0, 0.0, 4.0]);
+        let (_, cache, mut work) = run_forward(&emb, &x, Mode::Train);
+        let mut d_out = Matrix::from_fn(12, 1, |i, _| (i + 1) as f64);
+        let mut d_in = Matrix::full(4, 1, 9.0f64);
+        let mut dw = Matrix::zeros(3, 5);
+        let mut db = Vec::new();
+        let mut scratch = GemmScratch::new();
+        emb.backward_batch_into(
+            &x,
+            &mut d_out,
+            Some(&mut d_in),
+            &cache,
+            &mut work,
+            Some((&mut dw, &mut db)),
+            &mut scratch,
+        );
+        assert_eq!(dw.col(2), &[1.0 + 4.0, 2.0 + 5.0, 3.0 + 6.0], "ids 2 accumulate");
+        assert_eq!(dw.col(0), &[7.0, 8.0, 9.0]);
+        assert_eq!(dw.col(4), &[10.0, 11.0, 12.0]);
+        assert_eq!(dw.col(1), &[0.0; 3]);
+        assert_eq!(dw.col(3), &[0.0; 3]);
+        assert_eq!(d_in.as_slice(), &[0.0; 4], "token ids get no gradient");
+
+        // FD check the table gradient (ids fixed, loss smooth in w).
+        fd_check_op(&emb, &x, false, 1e-6);
+    }
+
+    #[test]
+    fn layernorm_normalizes_per_position_and_matches_fd() {
+        let ln = LayerNorm::new(3, 4);
+        assert_eq!(LayerOp::<f64>::cache_rows(&ln), 6, "μ and inv per position");
+        let x = Matrix::from_fn(12, 2, |i, j| ((i * 5 + j * 11) % 7) as f64 - 2.0);
+        let (out, _, _) = run_forward(&ln, &x, Mode::Eval);
+        for j in 0..2 {
+            for t in 0..3 {
+                let ys = &out.col(j)[t * 4..(t + 1) * 4];
+                let mean: f64 = ys.iter().sum::<f64>() / 4.0;
+                let var: f64 = ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / 4.0;
+                assert!(mean.abs() < 1e-12, "g=1,b=0: output mean 0, got {mean}");
+                // Variance shrinks slightly below 1 by ε (unless the
+                // position was constant, which this input avoids).
+                assert!((var - 1.0).abs() < 1e-3, "output var ≈ 1, got {var}");
+            }
+        }
+
+        // Non-trivial gain/bias: full FD over inputs and parameters.
+        let g = Matrix::from_fn(4, 1, |i, _| 0.5 + 0.3 * i as f64);
+        let b = vec![0.1, -0.2, 0.3, -0.4];
+        let ln = LayerNorm::from_parts(3, g, b);
+        let x = Matrix::from_fn(12, 2, |i, j| ((i as f64) * 0.37 + (j as f64) * 0.61).sin());
+        fd_check_op(&ln, &x, true, 1e-4);
+    }
+
+    /// Linear2d over `[len·d_in, B]` is bit-identical to Dense over the
+    /// same memory viewed as `[d_in, len·B]` — the layout reinterpretation
+    /// the sequence pipeline is built on.
+    #[test]
+    fn linear2d_is_dense_over_folded_positions() {
+        let (len, d_in, units, batch) = (3usize, 4usize, 2usize, 2usize);
+        let w = Matrix::from_fn(d_in, units, |i, j| ((i * 3 + j * 5) % 7) as f64 * 0.2 - 0.5);
+        let b = vec![0.25, -0.125];
+        let lin = Linear2d::from_parts(len, w.clone(), b.clone(), Activation::Tanh);
+        let dense = Dense::from_parts(w, b, Activation::Tanh);
+
+        let x = Matrix::from_fn(len * d_in, batch, |i, j| ((i * 7 + j * 13) % 11) as f64 * 0.1);
+        let (out, cache, _) = run_forward(&lin, &x, Mode::Train);
+
+        let x_folded = Matrix::from_vec(d_in, len * batch, x.as_slice().to_vec());
+        let (out_d, cache_d, _) = run_forward(&dense, &x_folded, Mode::Train);
+        assert_eq!(out.as_slice(), out_d.as_slice(), "same GEMM, same bits");
+        assert_eq!(cache.as_slice(), cache_d.as_slice(), "pre-activations too");
+
+        fd_check_op(&lin, &x, true, 1e-4);
+    }
+
+    #[test]
+    fn self_attention_weights_are_distributions_and_match_fd() {
+        let (len, d) = (3usize, 2usize);
+        let mut rng = Rng::new(42);
+        let w = Matrix::from_fn(d, 4 * d, |_, _| rng.uniform_in(-0.8, 0.8));
+        let b: Vec<f64> = (0..4 * d).map(|_| rng.uniform_in(-0.3, 0.3)).collect();
+        let att = SelfAttention::from_parts(len, w, b);
+        assert_eq!(LayerOp::<f64>::in_size(&att), 6);
+        assert_eq!(LayerOp::<f64>::out_size(&att), 6);
+        assert_eq!(LayerOp::<f64>::cache_rows(&att), 4 * d * len + len * len);
+        assert_eq!(LayerOp::<f64>::param_count(&att), d * 4 * d + 4 * d);
+
+        let x = Matrix::from_fn(len * d, 2, |i, j| ((i as f64) * 0.45 - (j as f64) * 0.3).cos());
+        let (out, cache, _) = run_forward(&att, &x, Mode::Train);
+
+        // The cached attention matrix P is column-stochastic per sample.
+        for j in 0..2 {
+            let p = &cache.col(j)[3 * d * len..3 * d * len + len * len];
+            for t in 0..len {
+                let col = &p[t * len..(t + 1) * len];
+                let sum: f64 = col.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-12, "P[:,{t}] sums to {sum}");
+                assert!(col.iter().all(|&v| v > 0.0));
+            }
+        }
+
+        // Same input, same output: the op is deterministic.
+        let (out2, _, _) = run_forward(&att, &x, Mode::Train);
+        assert_eq!(out.as_slice(), out2.as_slice());
+
+        fd_check_op(&att, &x, true, 1e-4);
     }
 }

@@ -5,8 +5,10 @@
 //! of composable [`LayerOp`]s: dense layers with per-layer activations,
 //! seeded dropout, a fused softmax+cross-entropy head, the image ops
 //! (conv2d lowered to the blocked GEMM via im2col, maxpool2d, flatten),
+//! the sequence ops (embedding, layernorm, per-position linear2d,
+//! single-head self-attention) negotiated through rank-aware [`Shape`]s,
 //! quadratic and cross-entropy costs, SGD with batch-summed tendencies,
-//! Xavier-style init, and tagged text save/load (v2, with v1 dense
+//! Xavier-style init, and tagged text save/load (v3, with v1/v2
 //! checkpoints still loadable). It plays two roles in this repo:
 //!
 //! 1. the *comparator framework* for the Table 1 serial benchmark (the
@@ -26,8 +28,9 @@ pub use activation::Activation;
 pub use cost::{cross_entropy_cost, quadratic_cost, quadratic_cost_prime};
 pub use grads::Gradients;
 pub use layers::{
-    validate_specs, validate_specs_image, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp,
-    LayerSpec, MaxPool2d, Mode, Softmax,
+    validate_specs, validate_specs_image, validate_specs_shape, Conv2d, Dense, Dropout,
+    Embedding, Flatten, ImageDims, LayerNorm, LayerOp, LayerSpec, Linear2d, MaxPool2d, Mode,
+    SelfAttention, Shape, Softmax,
 };
 pub use network::{GradShards, Network};
 pub use optimizer::{Optimizer, OptimizerKind};

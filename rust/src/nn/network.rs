@@ -23,8 +23,9 @@ use super::activation::Activation;
 use super::cost::{cross_entropy_cost, quadratic_cost};
 use super::grads::Gradients;
 use super::layers::{
-    plan_specs, Conv2d, Dense, Dropout, Flatten, ImageDims, LayerOp, LayerSpec, MaxPool2d, Mode,
-    Planned, Softmax,
+    plan_specs, resolve_image_shape, Conv2d, Dense, Dropout, Embedding, Flatten, ImageDims,
+    LayerNorm, LayerOp, LayerSpec, Linear2d, MaxPool2d, Mode, Planned, SelfAttention, Shape,
+    Softmax,
 };
 use super::workspace::Workspace;
 use crate::tensor::pool::{self, SyncPtr};
@@ -44,6 +45,10 @@ pub struct Network<T = f32> {
     /// Boundary sizes per op: `sizes[0]` = input, `sizes[i]` = output of
     /// op `i-1`.
     sizes: Vec<usize>,
+    /// Rank-aware boundary shapes, parallel to `sizes` (dropout passes
+    /// its upstream shape through; each `sizes[i]` equals
+    /// `shapes[i].len()`).
+    shapes: Vec<Shape>,
     /// Negotiated cache rows per boundary (0 for stateless ops).
     cache_rows: Vec<usize>,
     /// Negotiated working-buffer rows per boundary (the dense/conv σ′
@@ -72,6 +77,7 @@ impl<T: Scalar> Clone for Network<T> {
             ops: self.ops.clone(),
             dims: self.dims.clone(),
             sizes: self.sizes.clone(),
+            shapes: self.shapes.clone(),
             cache_rows: self.cache_rows.clone(),
             work_rows: self.work_rows.clone(),
             param_ops: self.param_ops.clone(),
@@ -104,7 +110,7 @@ impl<T: Scalar> Network<T> {
         assert!(dims.iter().all(|&d| d > 0), "every layer needs at least one neuron");
         let specs: Vec<LayerSpec> =
             dims[1..].iter().map(|&units| LayerSpec::Dense { units, activation }).collect();
-        Self::from_specs(dims[0], &specs, seed)
+        Self::from_specs_flat(dims[0], &specs, seed)
     }
 
     /// Paper default: sigmoid activation (Listing 2's `else` branch).
@@ -112,37 +118,52 @@ impl<T: Scalar> Network<T> {
         Self::new(dims, Activation::Sigmoid, seed)
     }
 
-    /// Construct a heterogeneous pipeline from layer specs (what a
-    /// `[[model.layers]]` config desugars to); see
-    /// [`Network::from_specs_image`] for pipelines with conv/pool layers.
-    /// Panics on an invalid pipeline — validate with
-    /// [`super::layers::validate_specs`] first for a recoverable error.
-    pub fn from_specs(input: usize, specs: &[LayerSpec], seed: u64) -> Self {
-        Self::from_specs_image(input, None, specs, seed)
+    /// Construct a flat-input pipeline from layer specs — a thin wrapper
+    /// over [`Network::from_specs`]; see [`Network::from_specs_image`]
+    /// for pipelines with conv/pool layers.
+    pub fn from_specs_flat(input: usize, specs: &[LayerSpec], seed: u64) -> Self {
+        Self::from_specs(Shape::Flat(input), specs, seed)
     }
 
     /// Construct a pipeline from layer specs with optional `c×h×w` input
     /// geometry (required as soon as the pipeline contains conv2d or
-    /// maxpool2d layers). Panics on an invalid pipeline — validate with
-    /// [`super::layers::validate_specs_image`] first for a recoverable
-    /// error.
-    ///
-    /// Weight initialization for **dense-chain pipelines** (no conv/pool)
-    /// reproduces the paper's draw order exactly: walking the dense
-    /// chain, each node draws its biases then its outgoing weights
-    /// (scaled normals, 1/fan-in), so a dense→dropout→dense pipeline
-    /// starts from the *same* dense parameters as the equivalent
-    /// dense-only stack — dropout and softmax consume no randomness at
-    /// construction. Pipelines with conv/pool layers draw per parameter
-    /// op in pipeline order (biases then weights, 1/fan-in scaling),
-    /// deterministically in `seed`.
+    /// maxpool2d layers) — a thin wrapper over [`Network::from_specs`].
     pub fn from_specs_image(
         input: usize,
         image: Option<ImageDims>,
         specs: &[LayerSpec],
         seed: u64,
     ) -> Self {
-        let (chain, planned) = match plan_specs(input, image, specs) {
+        if input == 0 {
+            panic!("invalid layer specs: model input size must be positive");
+        }
+        let shape = match resolve_image_shape(input, image) {
+            Ok(s) => s,
+            Err(e) => panic!("invalid layer specs: {e}"),
+        };
+        Self::from_specs(shape, specs, seed)
+    }
+
+    /// Construct a heterogeneous pipeline from layer specs (what a
+    /// `[[model.layers]]` config desugars to) against a rank-aware input
+    /// [`Shape`] — the **single** construction entry point, so every
+    /// pipeline goes through the geometry planner. Panics on an invalid
+    /// pipeline — validate with
+    /// [`super::layers::validate_specs_shape`] first for a recoverable
+    /// error.
+    ///
+    /// Weight initialization for **dense-chain pipelines** (no
+    /// conv/pool/sequence ops) reproduces the paper's draw order exactly:
+    /// walking the dense chain, each node draws its biases then its
+    /// outgoing weights (scaled normals, 1/fan-in), so a
+    /// dense→dropout→dense pipeline starts from the *same* dense
+    /// parameters as the equivalent dense-only stack — dropout and
+    /// softmax consume no randomness at construction. Every other
+    /// pipeline draws per parameter op in pipeline order (biases then
+    /// weights, 1/fan-in scaling; layernorm is deterministic ones/zeros;
+    /// embedding draws no biases), deterministically in `seed`.
+    pub fn from_specs(input: Shape, specs: &[LayerSpec], seed: u64) -> Self {
+        let (chain, planned) = match plan_specs(input, specs) {
             Ok(v) => v,
             Err(e) => panic!("invalid layer specs: {e}"),
         };
@@ -223,7 +244,46 @@ impl<T: Scalar> Network<T> {
                     Planned::MaxPool2d { img, kernel, stride } => {
                         ops.push(Box::new(MaxPool2d::new(*img, *kernel, *stride)));
                     }
-                    Planned::Flatten { img } => ops.push(Box::new(Flatten::new(*img))),
+                    Planned::Flatten { from } => ops.push(Box::new(Flatten::from_shape(*from))),
+                    Planned::Embedding { len, vocab, d_model } => {
+                        // No biases — the table is the only parameter
+                        // block; 1/fan-out keeps the looked-up vectors at
+                        // the scale a dense layer's inputs would have.
+                        let w = Matrix::randn_scaled(
+                            *d_model,
+                            *vocab,
+                            1.0 / *d_model as f64,
+                            &mut rng,
+                        );
+                        ops.push(Box::new(Embedding::from_parts(*len, w)));
+                    }
+                    Planned::LayerNorm { len, d_model } => {
+                        // Deterministic ones/zeros: no RNG draws.
+                        ops.push(Box::new(LayerNorm::new(*len, *d_model)));
+                    }
+                    Planned::Linear2d { len, d_in, units, activation } => {
+                        let bscale = 1.0 / *units as f64;
+                        let b: Vec<T> =
+                            (0..*units).map(|_| T::from_f64(rng.normal() * bscale)).collect();
+                        let w =
+                            Matrix::randn_scaled(*d_in, *units, 1.0 / *d_in as f64, &mut rng);
+                        ops.push(Box::new(Linear2d::from_parts(*len, w, b, *activation)));
+                    }
+                    Planned::SelfAttention { len, d_model } => {
+                        // One [d, 4d] block (Wq|Wk|Wv|Wo) and one 4d bias
+                        // vector: biases then weights, like dense/conv.
+                        let bscale = 1.0 / *d_model as f64;
+                        let b: Vec<T> = (0..4 * d_model)
+                            .map(|_| T::from_f64(rng.normal() * bscale))
+                            .collect();
+                        let w = Matrix::randn_scaled(
+                            *d_model,
+                            4 * d_model,
+                            1.0 / *d_model as f64,
+                            &mut rng,
+                        );
+                        ops.push(Box::new(SelfAttention::from_parts(*len, w, b)));
+                    }
                 }
             }
         }
@@ -240,6 +300,7 @@ impl<T: Scalar> Network<T> {
             return Err("network needs at least one layer op".into());
         }
         let mut sizes = vec![ops[0].in_size()];
+        let mut shapes = vec![ops[0].in_shape()];
         let mut cache_rows = vec![0usize];
         let mut work_rows = vec![0usize];
         let mut dims = vec![ops[0].in_size()];
@@ -247,9 +308,9 @@ impl<T: Scalar> Network<T> {
         let mut dense_ops = Vec::new();
         let mut conv_ops = Vec::new();
         let mut param_of_op = Vec::with_capacity(ops.len());
-        let mut img: Option<ImageDims> = None;
         for (i, op) in ops.iter().enumerate() {
             let cur = *sizes.last().unwrap();
+            let shape = *shapes.last().unwrap();
             if op.in_size() != cur {
                 return Err(format!(
                     "layer {i} ({}) expects {} inputs but the previous layer produces {cur}",
@@ -257,23 +318,36 @@ impl<T: Scalar> Network<T> {
                     op.in_size()
                 ));
             }
-            if let (Some(want), Some(have)) = (op.in_image(), img) {
-                if want != have {
+            let want = op.in_shape();
+            // Rank compatibility on top of the size check: exact shape
+            // match, dropout (shape-oblivious passthrough), or an op
+            // consuming the flat view of image/sequence data — what the
+            // planner decided when it allowed dense/softmax heads over
+            // sequences (image pipelines get an explicit flatten at plan
+            // time; assembly mirrors the planner's coercions).
+            let ok = want == shape
+                || op.kind() == "dropout"
+                || (!matches!(shape, Shape::Flat(_)) && want == Shape::Flat(cur));
+            if !ok {
+                if let (Shape::Image(w), Shape::Image(h)) = (want, shape) {
                     return Err(format!(
-                        "layer {i} ({}) expects a {want} image but the previous layer \
-                         produces {have}",
+                        "layer {i} ({}) expects a {w} image but the previous layer \
+                         produces {h}",
                         op.kind()
                     ));
                 }
+                return Err(format!(
+                    "layer {i} ({}) expects {} input but the previous layer produces {}",
+                    op.kind(),
+                    want,
+                    shape
+                ));
             }
-            img = match op.out_image() {
-                Some(o) => Some(o),
-                // Dropout is shape-agnostic and passes geometry through;
-                // dense/softmax/flatten hand a flat vector downstream.
-                None if op.kind() == "dropout" => img,
-                None => None,
-            };
+            // Dropout passes its upstream shape through unchanged (its
+            // own boundary shape is the flat view).
+            let next = if op.kind() == "dropout" { shape } else { op.out_shape() };
             sizes.push(op.out_size());
+            shapes.push(next);
             cache_rows.push(op.cache_rows());
             work_rows.push(op.work_rows());
             if op.params().is_some() {
@@ -283,6 +357,7 @@ impl<T: Scalar> Network<T> {
                 match op.kind() {
                     "dense" => dense_ops.push(i),
                     "conv2d" => conv_ops.push(i),
+                    "embedding" | "layernorm" | "linear2d" | "self_attention" => {}
                     other => {
                         return Err(format!("unknown parameter-owning layer kind '{other}'"))
                     }
@@ -300,6 +375,7 @@ impl<T: Scalar> Network<T> {
             ops,
             dims,
             sizes,
+            shapes,
             cache_rows,
             work_rows,
             param_ops,
@@ -320,6 +396,18 @@ impl<T: Scalar> Network<T> {
     /// Per-op boundary sizes: `[input, out_0, out_1, ...]`.
     pub fn boundary_sizes(&self) -> &[usize] {
         &self.sizes
+    }
+
+    /// Rank-aware per-op boundary shapes, parallel to
+    /// [`Network::boundary_sizes`] (dropout boundaries carry the shape
+    /// they pass through).
+    pub fn boundary_shapes(&self) -> &[Shape] {
+        &self.shapes
+    }
+
+    /// The input boundary's rank-aware shape.
+    pub fn input_shape(&self) -> Shape {
+        self.shapes[0]
     }
 
     /// Per-op negotiated cache heights (see [`LayerOp::cache_rows`]).
@@ -352,21 +440,28 @@ impl<T: Scalar> Network<T> {
     /// (first op conv2d/maxpool2d/flatten). Written to checkpoint v2 so
     /// conv pipelines rebuild their geometry on load.
     pub fn input_image(&self) -> Option<ImageDims> {
-        self.ops[0].in_image()
+        match self.shapes[0] {
+            Shape::Image(img) => Some(img),
+            _ => None,
+        }
     }
 
-    /// The first parameter-owning op's activation — for a uniform dense
-    /// stack this is *the* activation (the paper's single global σ);
-    /// heterogeneous pipelines carry one per dense/conv op.
+    /// The first activation-carrying parameter op's activation — for a
+    /// uniform dense stack this is *the* activation (the paper's single
+    /// global σ); heterogeneous pipelines carry one per dense/conv/
+    /// linear2d op. Pipelines whose parameter ops are all
+    /// activation-free (embedding/layernorm/attention-only stacks) fall
+    /// back to the paper's sigmoid default.
     pub fn activation(&self) -> Activation {
         for &i in &self.param_ops {
             match self.ops[i].spec() {
                 LayerSpec::Dense { activation, .. }
-                | LayerSpec::Conv2d { activation, .. } => return activation,
+                | LayerSpec::Conv2d { activation, .. }
+                | LayerSpec::Linear2d { activation, .. } => return activation,
                 _ => {}
             }
         }
-        unreachable!("param_ops indexes dense/conv ops, which carry activations")
+        Activation::Sigmoid
     }
 
     /// `Some(σ)` iff the pipeline is a plain dense stack with one shared
@@ -423,6 +518,21 @@ impl<T: Scalar> Network<T> {
     /// Conv op `k`'s per-filter biases.
     pub fn conv_bias(&self, k: usize) -> &[T] {
         self.ops[self.conv_ops[k]].params().expect("conv op has params").1
+    }
+
+    /// Parameter op `k`'s weights, in pipeline order (block `k` of the
+    /// flat layout — dense, conv, embedding, layernorm gain, ...).
+    pub fn param_weight(&self, k: usize) -> &Matrix<T> {
+        self.ops[self.param_ops[k]].params().expect("param op has params").0
+    }
+
+    /// Parameter op `k`'s biases (may be empty — embeddings).
+    pub fn param_bias(&self, k: usize) -> &[T] {
+        self.ops[self.param_ops[k]].params().expect("param op has params").1
+    }
+
+    pub(crate) fn param_params_mut(&mut self, k: usize) -> (&mut Matrix<T>, &mut Vec<T>) {
+        self.ops[self.param_ops[k]].params_mut().expect("param op has params")
     }
 
     pub(crate) fn dense_params_mut(&mut self, l: usize) -> (&mut Matrix<T>, &mut Vec<T>) {
@@ -1078,7 +1188,7 @@ mod tests {
 
     #[test]
     fn heterogeneous_pipeline_construction() {
-        let net: Network<f64> = Network::from_specs(3, &mlp_specs(), 7);
+        let net: Network<f64> = Network::from_specs_flat(3, &mlp_specs(), 7);
         assert_eq!(net.dims(), &[3, 5, 2], "dims is the parameter chain");
         assert_eq!(net.boundary_sizes(), &[3, 5, 5, 2, 2]);
         assert_eq!(net.cache_rows(), &[0, 5, 5, 2, 0]);
@@ -1143,7 +1253,7 @@ mod tests {
 
     #[test]
     fn softmax_head_outputs_distribution() {
-        let net: Network<f64> = Network::from_specs(3, &mlp_specs(), 11);
+        let net: Network<f64> = Network::from_specs_flat(3, &mlp_specs(), 11);
         let out = net.output(&[0.4, -0.1, 0.8]);
         let sum: f64 = out.iter().sum();
         assert!((sum - 1.0).abs() < 1e-12, "softmax outputs must sum to 1, got {sum}");
@@ -1151,7 +1261,7 @@ mod tests {
 
     #[test]
     fn eval_mode_ignores_dropout_train_mode_applies_it() {
-        let net: Network<f64> = Network::from_specs(
+        let net: Network<f64> = Network::from_specs_flat(
             4,
             &[
                 LayerSpec::Dense { units: 16, activation: Activation::Tanh },
@@ -1226,7 +1336,7 @@ mod tests {
             LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
             LayerSpec::Softmax,
         ];
-        let mut net: Network<f64> = Network::from_specs(2, &specs, 13);
+        let mut net: Network<f64> = Network::from_specs_flat(2, &specs, 13);
         let x = Matrix::from_vec(2, 1, vec![0.4, -0.2]);
         let y = Matrix::from_vec(3, 1, vec![0.0, 1.0, 0.0]);
         let g = net.grad_batch(&x, &y);
@@ -1302,6 +1412,183 @@ mod tests {
         }
         let after = net.loss_batch(&x, &y);
         assert!(after < before * 0.7, "conv training must reduce loss: {before} -> {after}");
+    }
+
+    /// A small sequence pipeline on 5 token ids:
+    /// embedding(vocab 8, d 4) -> layernorm -> self_attention -> dense 3 -> softmax.
+    fn seq_specs() -> Vec<LayerSpec> {
+        vec![
+            LayerSpec::Embedding { vocab: 8, d_model: 4 },
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ]
+    }
+
+    fn seq_net<T: Scalar>(seed: u64) -> Network<T> {
+        Network::from_specs_flat(5, &seq_specs(), seed)
+    }
+
+    /// Token-id inputs (exact small integers) and one-hot targets for
+    /// the 3-class head of [`seq_net`].
+    fn seq_data<T: Scalar>(batch: usize) -> (Matrix<T>, Matrix<T>) {
+        let x = Matrix::from_fn(5, batch, |i, j| T::from_f64(((i * 3 + j * 2 + 1) % 8) as f64));
+        let y = Matrix::from_fn(3, batch, |i, j| if j % 3 == i { T::ONE } else { T::ZERO });
+        (x, y)
+    }
+
+    #[test]
+    fn seq_pipeline_construction() {
+        let net: Network<f64> = seq_net(21);
+        assert_eq!(net.dims(), &[5, 20, 20, 20, 3], "input + each param op's output");
+        assert_eq!(net.boundary_sizes(), &[5, 20, 20, 20, 3, 3]);
+        assert_eq!(
+            net.boundary_shapes(),
+            &[
+                Shape::Flat(5),
+                Shape::Seq { len: 5, d_model: 4 },
+                Shape::Seq { len: 5, d_model: 4 },
+                Shape::Seq { len: 5, d_model: 4 },
+                Shape::Flat(3),
+                Shape::Flat(3),
+            ],
+            "dense consumes the sequence through its flat feature-fastest view"
+        );
+        assert_eq!(net.input_shape(), Shape::Flat(5));
+        assert_eq!(net.input_image(), None);
+        // layernorm caches (μ, 1/σ) per position; attention caches
+        // QKV [3d,l] + P [l,l] + ctx [d,l] per sample and mirrors that
+        // in its backward scratch.
+        assert_eq!(net.cache_rows(), &[0, 0, 10, 105, 3, 0]);
+        assert_eq!(net.work_rows(), &[0, 0, 0, 105, 3, 0]);
+        assert_eq!(net.param_op_count(), 4);
+        assert_eq!(net.dense_count(), 1);
+        assert_eq!(net.conv_count(), 0);
+        assert!(net.has_softmax_head());
+        assert_eq!(
+            net.layer_summaries(),
+            vec![
+                "embedding(5 ids -> 5x4, vocab 8)",
+                "layernorm(5x4)",
+                "self_attention(5x4, 1 head)",
+                "dense(20->3, sigmoid)",
+                "softmax",
+            ]
+        );
+        // Flat layout: emb w (4·8) + ln g (4) + attn w (4·16) + dense w
+        // (20·3) + input phantom (5) + biases (0 + 4 + 16 + 3).
+        assert_eq!(net.params_flat_len(), 32 + 4 + 64 + 60 + 5 + 0 + 4 + 16 + 3);
+        assert_eq!(net.param_weight(0).rows(), 4);
+        assert_eq!(net.param_weight(0).cols(), 8);
+        assert_eq!(net.param_bias(0).len(), 0, "embeddings carry no bias");
+        assert_eq!(net.param_bias(1).len(), 4);
+        assert_eq!(net.param_bias(2).len(), 16);
+        // Construction is deterministic in the seed.
+        assert_eq!(net.params_to_flat(), seq_net::<f64>(21).params_to_flat());
+        assert_ne!(net.params_to_flat(), seq_net::<f64>(22).params_to_flat());
+    }
+
+    /// FD gradient check through the full sequence stack, generically in
+    /// the scalar type: f64 uses a tight step/tolerance, f32 a coarse
+    /// one (central-difference truncation vs f32 rounding trade-off).
+    fn seq_grad_matches_fd<T: Scalar>(h: f64, tol: f64) {
+        let mut net: Network<T> = seq_net(33);
+        let (x, y) = seq_data::<T>(2);
+        let g = net.grad_batch(&x, &y);
+        let mut flat = net.params_to_flat();
+        let gflat = g.to_flat();
+        for i in 0..flat.len() {
+            let orig = flat[i];
+            flat[i] = T::from_f64(orig.to_f64() + h);
+            net.params_unflatten_from(&flat);
+            let cp = net.loss_batch(&x, &y);
+            flat[i] = T::from_f64(orig.to_f64() - h);
+            net.params_unflatten_from(&flat);
+            let cm = net.loss_batch(&x, &y);
+            flat[i] = orig;
+            net.params_unflatten_from(&flat);
+            let fd = (cp - cm) / (2.0 * h);
+            assert!(
+                (fd - gflat[i].to_f64()).abs() < tol,
+                "seq param {i}: fd={fd} analytic={}",
+                gflat[i].to_f64()
+            );
+        }
+    }
+
+    #[test]
+    fn seq_grad_matches_finite_differences_f64() {
+        seq_grad_matches_fd::<f64>(1e-6, 1e-4);
+    }
+
+    #[test]
+    fn seq_grad_matches_finite_differences_f32() {
+        seq_grad_matches_fd::<f32>(1e-2, 3e-2);
+    }
+
+    #[test]
+    fn seq_batched_grad_equals_per_sample_grad() {
+        let net: Network<f64> = seq_net(37);
+        let (x, y) = seq_data::<f64>(7);
+        let fused = net.grad_batch(&x, &y);
+        let reference = net.grad_batch_per_sample(&x, &y);
+        for l in 0..fused.dw.len() {
+            let d = fused.dw[l].max_abs_diff(&reference.dw[l]);
+            assert!(d < 1e-10, "dw[{l}] diff {d}");
+        }
+        for l in 0..fused.db.len() {
+            let d = vecops::max_abs_diff(&fused.db[l], &reference.db[l]);
+            assert!(d < 1e-10, "db[{l}] diff {d}");
+        }
+    }
+
+    #[test]
+    fn seq_same_seed_is_deterministic() {
+        let a: Network<f64> = seq_net(5);
+        let b: Network<f64> = seq_net(5);
+        assert_eq!(a, b, "same seed, same specs: identical networks");
+        let (x, _) = seq_data::<f64>(4);
+        assert_eq!(a.output_batch(&x), b.output_batch(&x));
+        let out1 = a.output_batch(&x);
+        let out2 = a.output_batch(&x);
+        assert_eq!(out1, out2, "inference is deterministic");
+        // Outputs are softmax distributions per sample.
+        for j in 0..4 {
+            let sum: f64 = out1.col(j).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "sample {j} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn seq_training_reduces_loss() {
+        let mut net: Network<f64> = seq_net(41);
+        let (x, y) = seq_data::<f64>(12);
+        let before = net.loss_batch(&x, &y);
+        for _ in 0..300 {
+            net.train_batch(&x, &y, 0.5);
+        }
+        let after = net.loss_batch(&x, &y);
+        assert!(after < before * 0.7, "seq training must reduce loss: {before} -> {after}");
+    }
+
+    #[test]
+    fn seq_params_round_trip() {
+        let net: Network<f64> = seq_net(43);
+        let flat = net.params_to_flat();
+        let mut other: Network<f64> = seq_net(44);
+        assert!(!net.params_close(&other, 1e-9));
+        other.params_unflatten_from(&flat);
+        assert!(net.params_close(&other, 0.0));
+        assert_eq!(net, other);
+        // update(grads=params, eta=1) zeroes the network exactly iff the
+        // gradient layout equals the parameter layout.
+        let mut zeroed = net.clone();
+        let mut g = net.zero_grads();
+        g.unflatten_from(&flat);
+        zeroed.update(&g, 1.0);
+        let max = zeroed.params_to_flat().iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+        assert!(max < 1e-12, "residual {max}");
     }
 
     #[test]
@@ -1387,7 +1674,7 @@ mod tests {
             LayerSpec::Dropout { rate: 0.5 },
             LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
         ];
-        let net: Network<f64> = Network::from_specs(6, &specs, 51);
+        let net: Network<f64> = Network::from_specs_flat(6, &specs, 51);
         let mut rng = Rng::new(52);
         let x = Matrix::from_fn(6, 12, |_, _| rng.uniform_in(-1.0, 1.0));
         let y = Matrix::from_fn(3, 12, |_, _| rng.uniform_in(0.0, 1.0));
@@ -1555,7 +1842,7 @@ mod tests {
             LayerSpec::Dense { units: 2, activation: Activation::Sigmoid },
             LayerSpec::Softmax,
         ];
-        let mut net: Network<f64> = Network::from_specs(1, &specs, 3);
+        let mut net: Network<f64> = Network::from_specs_flat(1, &specs, 3);
         let mut rng = Rng::new(10);
         let n = 64;
         let x = Matrix::from_fn(1, n, |_, _| rng.uniform_in(-1.0, 1.0));

@@ -279,7 +279,7 @@ mod tests {
 
     #[test]
     fn negotiates_heterogeneous_caches() {
-        let net: Network<f32> = Network::from_specs(
+        let net: Network<f32> = Network::from_specs_flat(
             4,
             &[
                 LayerSpec::Dense { units: 6, activation: Activation::Relu },
@@ -349,7 +349,7 @@ mod tests {
     /// the mechanism behind fresh dropout masks on the threaded path.
     #[test]
     fn mask_streams_differ_per_stream_and_repeat_within() {
-        let net: Network<f32> = Network::from_specs(
+        let net: Network<f32> = Network::from_specs_flat(
             4,
             &[
                 LayerSpec::Dense { units: 6, activation: Activation::Tanh },
@@ -374,7 +374,7 @@ mod tests {
     /// it reuses warm shard workspaces across steps.
     #[test]
     fn reseed_masks_matches_for_net_at() {
-        let net: Network<f32> = Network::from_specs(
+        let net: Network<f32> = Network::from_specs_flat(
             4,
             &[
                 LayerSpec::Dense { units: 6, activation: Activation::Tanh },

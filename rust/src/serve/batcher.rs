@@ -28,7 +28,7 @@
 use super::registry::ModelRegistry;
 use super::ServeError;
 use crate::metrics::serving::ServeMetrics;
-use crate::nn::Workspace;
+use crate::nn::{Shape, Workspace};
 use crate::tensor::Matrix;
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -371,14 +371,16 @@ fn worker_loop(sh: &Shared) {
     // workspace, and input matrix always describe the same model even if
     // a hot reload lands during startup. The workspace is negotiated
     // against the model's op pipeline (per-op activations, caches); the
-    // boundary/cache shape vectors are what later reloads are compared
-    // against (alloc-free slice compares).
+    // rank-aware boundary shapes plus the cache/work rows are what later
+    // reloads are compared against (alloc-free slice compares) — full
+    // `Shape`s, so a reload that keeps every row count but reinterprets
+    // a boundary (say 64x32 seq -> flat 2048) still re-warms.
     let Some(net) = sh.registry.get(&sh.model) else { return };
-    let mut sizes: Vec<usize> = net.boundary_sizes().to_vec();
+    let mut shapes: Vec<Shape> = net.boundary_shapes().to_vec();
     let mut cache: Vec<usize> = net.cache_rows().to_vec();
     let mut work: Vec<usize> = net.work_rows().to_vec();
     let mut ws = Workspace::<f32>::for_net_batch(&net, sh.max_batch);
-    let mut x = Matrix::<f32>::zeros(sizes[0], sh.max_batch);
+    let mut x = Matrix::<f32>::zeros(shapes[0].len(), sh.max_batch);
     let mut batch: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(sh.max_batch);
     // Warm the GEMM packing scratch at the full batch size so the first
     // real batch is already on the zero-allocation path.
@@ -431,7 +433,7 @@ fn worker_loop(sh: &Shared) {
         }
         drop(q);
 
-        run_batch(sh, &batch, &mut sizes, &mut cache, &mut work, &mut ws, &mut x);
+        run_batch(sh, &batch, &mut shapes, &mut cache, &mut work, &mut ws, &mut x);
         batch.clear();
         q = sh.q.lock().unwrap();
     }
@@ -441,7 +443,7 @@ fn worker_loop(sh: &Shared) {
 fn run_batch(
     sh: &Shared,
     batch: &[(Arc<Slot>, Instant)],
-    sizes: &mut Vec<usize>,
+    shapes: &mut Vec<Shape>,
     cache: &mut Vec<usize>,
     work: &mut Vec<usize>,
     ws: &mut Workspace<f32>,
@@ -454,18 +456,18 @@ fn run_batch(
             return;
         }
     };
-    if net.boundary_sizes() != &sizes[..]
+    if net.boundary_shapes() != &shapes[..]
         || net.cache_rows() != &cache[..]
         || net.work_rows() != &work[..]
     {
-        // Hot reload changed the architecture (layer sizes or op
-        // shapes, incl. conv work rows): re-warm (one-off
-        // allocation, deliberately off the steady-state path).
-        *sizes = net.boundary_sizes().to_vec();
+        // Hot reload changed the architecture (boundary shapes — rank
+        // included, not just row counts — or op cache/work rows): re-warm
+        // (one-off allocation, deliberately off the steady-state path).
+        *shapes = net.boundary_shapes().to_vec();
         *cache = net.cache_rows().to_vec();
         *work = net.work_rows().to_vec();
         *ws = Workspace::for_net_batch(&net, sh.max_batch);
-        *x = Matrix::zeros(sizes[0], sh.max_batch);
+        *x = Matrix::zeros(shapes[0].len(), sh.max_batch);
     }
     let n = batch.len();
     let in_len = net.input_size();

@@ -29,6 +29,7 @@ use super::registry::ModelRegistry;
 use super::ServeError;
 use crate::config::ServeConfig;
 use crate::metrics::serving::ServeMetrics;
+use crate::nn::Shape;
 use crate::tensor::vecops;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -432,18 +433,60 @@ fn handle_connection(mut stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
     }
 }
 
+/// One boundary [`Shape`] as structured JSON, e.g.
+/// `{"kind":"seq","len":64,"d_model":32}` — rank included, not just the
+/// flattened row count.
+fn shape_json(shape: Shape) -> Json {
+    match shape {
+        Shape::Flat(n) => Json::Obj(BTreeMap::from([
+            ("kind".to_string(), Json::Str("flat".into())),
+            ("size".to_string(), Json::Num(n as f64)),
+        ])),
+        Shape::Image(img) => Json::Obj(BTreeMap::from([
+            ("kind".to_string(), Json::Str("image".into())),
+            ("channels".to_string(), Json::Num(img.c as f64)),
+            ("height".to_string(), Json::Num(img.h as f64)),
+            ("width".to_string(), Json::Num(img.w as f64)),
+        ])),
+        Shape::Seq { len, d_model } => Json::Obj(BTreeMap::from([
+            ("kind".to_string(), Json::Str("seq".into())),
+            ("len".to_string(), Json::Num(len as f64)),
+            ("d_model".to_string(), Json::Num(d_model as f64)),
+        ])),
+    }
+}
+
 /// `GET /v1/models`: one entry per registry model with its pipeline
 /// summary — shape negotiation made visible to clients (and the first
-/// step toward multi-model routing).
+/// step toward multi-model routing). Every layer carries its structured
+/// output `Shape`, and the model its input/output shapes, so clients see
+/// ranks (flat | image | seq), not bare row counts.
 fn models_json(ctx: &Ctx) -> String {
     let mut models = Vec::new();
     for name in ctx.registry.names() {
         let Some(net) = ctx.registry.get(&name) else { continue };
-        let layers = Json::Arr(net.layer_summaries().into_iter().map(Json::Str).collect());
+        let shapes = net.boundary_shapes();
+        let layers = Json::Arr(
+            net.layer_summaries()
+                .into_iter()
+                .zip(shapes[1..].iter().copied())
+                .map(|(summary, shape)| {
+                    Json::Obj(BTreeMap::from([
+                        ("summary".to_string(), Json::Str(summary)),
+                        ("shape".to_string(), shape_json(shape)),
+                    ]))
+                })
+                .collect(),
+        );
         models.push(Json::Obj(BTreeMap::from([
             ("name".to_string(), Json::Str(name)),
             ("input".to_string(), Json::Num(net.input_size() as f64)),
             ("output".to_string(), Json::Num(net.output_size() as f64)),
+            ("input_shape".to_string(), shape_json(shapes[0])),
+            (
+                "output_shape".to_string(),
+                shape_json(*shapes.last().expect("a network has at least one boundary")),
+            ),
             ("params".to_string(), Json::Num(net.param_count() as f64)),
             ("layers".to_string(), layers),
         ])));
@@ -475,6 +518,25 @@ fn status_json(ctx: &Ctx) -> String {
             Json::Num((ctx.started.elapsed().as_secs_f64() * 1000.0).round() / 1000.0),
         ),
         ("models".to_string(), Json::Num(ctx.registry.len() as f64)),
+        (
+            // Per-model boundary shapes (input + every layer output),
+            // structured: routers can match replicas by full rank-aware
+            // architecture, not just row counts.
+            "model_shapes".to_string(),
+            Json::Obj(
+                ctx.registry
+                    .names()
+                    .into_iter()
+                    .filter_map(|name| {
+                        let net = ctx.registry.get(&name)?;
+                        let shapes = Json::Arr(
+                            net.boundary_shapes().iter().copied().map(shape_json).collect(),
+                        );
+                        Some((name, shapes))
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "registry_generation".to_string(),
             Json::Num(ctx.registry.generation() as f64),

@@ -13,6 +13,11 @@ use neural_rs::tensor::{Matrix, Rng, Scalar};
 /// binary-fraction parameters.
 const V1_FIXTURE: &str = include_str!("fixtures/v1_dense_6_5_4.txt");
 
+/// The committed v2 checkpoint: a dense/dropout/softmax pipeline with
+/// exact binary-fraction parameters, byte-for-byte what `save_to` wrote
+/// before v3 existed.
+const V2_FIXTURE: &str = include_str!("fixtures/v2_layered_4_3_2.txt");
+
 fn assert_round_trip<T: Scalar>(act: Activation, seed: u64) {
     let dims = [7usize, 9, 4];
     let net = Network::<T>::new(&dims, act, seed);
@@ -51,7 +56,7 @@ fn every_activation_round_trips_f64() {
 /// v2 round trip for every layer kind, both scalar kinds: specs, dropout
 /// seeds, and parameters all survive, and outputs are bit-identical.
 fn assert_layered_round_trip<T: Scalar>(specs: &[LayerSpec], input: usize, seed: u64) {
-    let net = Network::<T>::from_specs(input, specs, seed);
+    let net = Network::<T>::from_specs_flat(input, specs, seed);
     let mut buf = Vec::new();
     net.save_to(&mut buf).unwrap();
     let loaded = Network::<T>::load_from(&buf[..]).unwrap();
@@ -137,6 +142,78 @@ fn conv_layer_kinds_round_trip_f32_and_f64() {
         assert_conv_round_trip::<f32>(specs, img, 300 + i as u64);
         assert_conv_round_trip::<f64>(specs, img, 400 + i as u64);
     }
+}
+
+/// v3 round trip for the sequence layer kinds (embedding/layernorm/
+/// linear2d/self_attention), both scalar kinds: specs and parameters
+/// survive, and outputs on token inputs are bit-identical.
+fn assert_seq_round_trip<T: Scalar>(specs: &[LayerSpec], input: usize, vocab: usize, seed: u64) {
+    let net = Network::<T>::from_specs_flat(input, specs, seed);
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    let text = String::from_utf8(buf.clone()).unwrap();
+    assert!(text.starts_with("neural-rs network v3"), "{text}");
+    let loaded = Network::<T>::load_from(&buf[..]).unwrap();
+    assert_eq!(loaded.spec_list(), net.spec_list(), "{specs:?}");
+    assert!(net.params_close(&loaded, 0.0), "{specs:?}");
+    let x = Matrix::<T>::from_fn(input, 6, |i, j| T::from_f64(((i * 5 + j * 3) % vocab) as f64));
+    assert_eq!(net.output_batch(&x), loaded.output_batch(&x), "{specs:?}");
+}
+
+#[test]
+fn seq_layer_kinds_round_trip_f32_and_f64() {
+    let emb = || LayerSpec::Embedding { vocab: 7, d_model: 4 };
+    let dense = |u: usize, a: Activation| LayerSpec::Dense { units: u, activation: a };
+    let pipelines: Vec<Vec<LayerSpec>> = vec![
+        // each new kind in isolation (plus a dense head)...
+        vec![emb(), dense(3, Activation::Tanh)],
+        vec![emb(), LayerSpec::LayerNorm, dense(3, Activation::Sigmoid)],
+        vec![
+            emb(),
+            LayerSpec::Linear2d { units: 6, activation: Activation::Relu },
+            dense(3, Activation::Sigmoid),
+        ],
+        vec![emb(), LayerSpec::SelfAttention, dense(3, Activation::Sigmoid)],
+        // ...and the acceptance stack.
+        vec![
+            emb(),
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            dense(3, Activation::Sigmoid),
+            LayerSpec::Softmax,
+        ],
+    ];
+    for (i, specs) in pipelines.iter().enumerate() {
+        assert_seq_round_trip::<f32>(specs, 5, 7, 500 + i as u64);
+        assert_seq_round_trip::<f64>(specs, 5, 7, 600 + i as u64);
+    }
+}
+
+/// The committed v2 fixture loads bit-for-bit AND re-saves
+/// byte-identically: dense/conv pipelines must keep writing the exact
+/// v2 bytes they always have, so archived checkpoints and their hashes
+/// stay valid now that v3 exists.
+#[test]
+fn v2_fixture_loads_and_resaves_byte_for_byte() {
+    let net = Network::<f32>::load_from(V2_FIXTURE.as_bytes()).unwrap();
+    assert_eq!(
+        net.layer_summaries(),
+        vec!["dense(4->3, tanh)", "dropout(p=0.25)", "dense(3->2, sigmoid)", "softmax"]
+    );
+    // Spot-check the exact stored values (binary fractions: no rounding).
+    assert_eq!(net.dense_bias(0), &[0.5, -0.25, 0.125]);
+    assert_eq!(net.dense_bias(1), &[0.75, -0.75]);
+    assert_eq!(net.dense_weight(0).get(3, 2), -0.0625);
+    assert_eq!(net.dense_weight(1).get(2, 1), -0.09375);
+    // The dropout mask seed survives.
+    assert_eq!(net.ops()[1].mask_seed(), 12345);
+    // Re-saving writes the identical bytes back.
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    assert_eq!(String::from_utf8(buf).unwrap(), V2_FIXTURE, "v2 must stay byte-stable");
+    // And the text parses into f64 too.
+    let net64 = Network::<f64>::load_from(V2_FIXTURE.as_bytes()).unwrap();
+    assert_eq!(net64.dense_bias(0)[2], 0.125f64);
 }
 
 /// The committed v1 fixture loads into the layer graph bit-for-bit: the

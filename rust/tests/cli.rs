@@ -328,6 +328,185 @@ engine = "native"
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+/// The sequence acceptance path end-to-end: a [[model.layers]] TOML with
+/// embedding→layernorm→self_attention→dense→softmax trains on the
+/// synthetic token-majority corpus through the CLI (accuracy improving),
+/// saves a v3 checkpoint that round-trips bit-for-bit, and serves
+/// predictions through `POST /v1/predict` that match the checkpoint run
+/// in-process.
+#[test]
+fn seq_attention_config_trains_saves_and_serves() {
+    use std::io::{Read, Write};
+
+    let dir = tmpdir("seq");
+    let cfg = dir.join("seq.toml");
+    let model = dir.join("seq-net.txt");
+    std::fs::write(
+        &cfg,
+        r#"
+name = "seq-e2e"
+[model]
+seq = 12
+vocab = 20
+[[model.layers]]
+type = "embedding"
+d_model = 8
+[[model.layers]]
+type = "layernorm"
+[[model.layers]]
+type = "self_attention"
+[[model.layers]]
+type = "dense"
+units = 10
+activation = "sigmoid"
+[[model.layers]]
+type = "softmax"
+[training]
+eta = 0.5
+epochs = 6
+batch_size = 100
+[data]
+train_n = 1000
+test_n = 200
+[runtime]
+engine = "native"
+"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "train", "--config", cfg.to_str().unwrap(), "--data-dir", "/nonexistent",
+            "--save", model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("embedding, layernorm, self_attention, dense, softmax"),
+        "{text}"
+    );
+    assert!(text.contains("Epoch  6 done"), "{text}");
+    // Training must actually learn the token-majority task: the last
+    // reported accuracy beats the initial one (everything is seeded, so
+    // this is deterministic).
+    let accs: Vec<f64> = text
+        .lines()
+        .filter_map(|l| l.split("ccuracy:").nth(1))
+        .filter_map(|s| s.trim().trim_end_matches('%').trim().parse().ok())
+        .collect();
+    assert!(accs.len() >= 7, "expected initial + 6 epoch accuracies: {text}");
+    assert!(
+        accs.last().unwrap() > &accs[0],
+        "accuracy must improve ({} -> {}): {text}",
+        accs[0],
+        accs.last().unwrap()
+    );
+
+    // v3 checkpoint with the rank-aware shape header, bit-for-bit round
+    // trip through load + save.
+    let saved = std::fs::read_to_string(&model).unwrap();
+    assert!(saved.starts_with("neural-rs network v3"), "{saved}");
+    assert!(saved.contains("shape flat 12"), "{saved}");
+    assert!(saved.contains("layer 0 embedding 20 8"), "{saved}");
+    assert!(saved.contains("layer 1 layernorm"), "{saved}");
+    assert!(saved.contains("layer 2 self_attention"), "{saved}");
+    let net = neural_rs::nn::Network::<f32>::load(&model).unwrap();
+    let mut buf = Vec::new();
+    net.save_to(&mut buf).unwrap();
+    assert_eq!(
+        saved.as_bytes(),
+        &buf[..],
+        "checkpoint must round-trip bit-for-bit through load + save"
+    );
+
+    // Serve it and compare /v1/predict argmax with the in-process model.
+    let port = 47421;
+    let serve_cfg = dir.join("serve.toml");
+    std::fs::write(
+        &serve_cfg,
+        format!(
+            "[serve]\naddr = \"127.0.0.1:{port}\"\nmodel = \"{}\"\n\
+             max_batch = 8\nmax_wait_us = 500\nworkers = 2\nhot_reload = false\n",
+            model.display()
+        ),
+    )
+    .unwrap();
+    let mut server = bin()
+        .args(["serve", "--config", serve_cfg.to_str().unwrap()])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let addr = format!("127.0.0.1:{port}");
+    let http = |method: &str, path: &str, body: &str| -> (u16, String) {
+        let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut text = String::new();
+        stream.read_to_string(&mut text).unwrap();
+        let status = text
+            .lines()
+            .next()
+            .and_then(|l| l.split_ascii_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let payload =
+            text.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, payload)
+    };
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+    loop {
+        if std::net::TcpStream::connect(&addr).is_ok() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "server never came up");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+
+    // /v1/models surfaces the sequence pipeline summaries and the
+    // structured rank-aware shapes.
+    let (status, body) = http("GET", "/v1/models", "");
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("embedding(12 ids -> 12x8, vocab 20)"), "{body}");
+    assert!(body.contains("layernorm(12x8)"), "{body}");
+    assert!(body.contains("self_attention(12x8, 1 head)"), "{body}");
+    assert!(body.contains("\"kind\":\"seq\""), "{body}");
+
+    let data = neural_rs::data::synthesize_seq::<f32>(2, 12, 20, 123);
+    for j in 0..2 {
+        let sample = data.images.col(j);
+        let expect = neural_rs::tensor::vecops::argmax(&net.output(sample));
+        let mut req = String::from("{\"input\":[");
+        for (i, v) in sample.iter().enumerate() {
+            if i > 0 {
+                req.push(',');
+            }
+            req.push_str(&format!("{v}"));
+        }
+        req.push_str("]}");
+        let (status, body) = http("POST", "/v1/predict", &req);
+        assert_eq!(status, 200, "{body}");
+        let argmax: usize = body
+            .split("\"argmax\":")
+            .nth(1)
+            .and_then(|s| s.split(',').next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert_eq!(argmax, expect, "sample {j}: server and local argmax differ: {body}");
+    }
+
+    let (status, _) = http("POST", "/admin/shutdown", "");
+    assert_eq!(status, 200);
+    let out = server.wait_with_output().unwrap();
+    assert!(out.status.success(), "server exit: {}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
 /// Bad layer pipelines die at config-parse time with actionable errors.
 #[test]
 fn rejects_invalid_model_layers_config() {

@@ -330,7 +330,7 @@ fn resumed_training_matches_the_uninterrupted_run() {
             dims: vec![784, 16, 10],
             activation: Activation::Sigmoid,
             layers: Vec::new(),
-            image: None,
+            shape: None,
             eta: 0.5,
             batch_size: 50,
             epochs: 1,

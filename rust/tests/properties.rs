@@ -237,7 +237,7 @@ fn prop_parallel_training_matches_serial() {
                 dims: dims.clone(),
                 activation: Activation::Sigmoid,
                 layers: vec![],
-                image: None,
+                shape: None,
                 eta: 2.0,
                 batch_size: batch,
                 epochs: 1,
@@ -305,7 +305,7 @@ fn dropout_same_seed_training_is_deterministic() {
     let y = Matrix::from_fn(3, 12, |i, j| if j % 3 == i { 1.0 } else { 0.0 });
 
     let run = || {
-        let mut net: Network<f64> = Network::from_specs(4, &dropout_stack(), 21);
+        let mut net: Network<f64> = Network::from_specs_flat(4, &dropout_stack(), 21);
         for _ in 0..5 {
             net.train_batch(&x, &y, 0.5);
         }
@@ -315,7 +315,7 @@ fn dropout_same_seed_training_is_deterministic() {
 
     // And a single gradient is reproducible call to call (fresh
     // workspaces restart the seeded mask stream).
-    let net: Network<f64> = Network::from_specs(4, &dropout_stack(), 21);
+    let net: Network<f64> = Network::from_specs_flat(4, &dropout_stack(), 21);
     let g1 = net.grad_batch(&x, &y);
     let g2 = net.grad_batch(&x, &y);
     assert_eq!(g1, g2);
@@ -326,10 +326,10 @@ fn dropout_same_seed_training_is_deterministic() {
 /// identical dense parameters), while train-mode output differs.
 #[test]
 fn dropout_eval_is_identity_train_is_not() {
-    let with: Network<f64> = Network::from_specs(4, &dropout_stack(), 9);
+    let with: Network<f64> = Network::from_specs_flat(4, &dropout_stack(), 9);
     let without_specs: Vec<LayerSpec> =
         dropout_stack().into_iter().filter(|s| !matches!(s, LayerSpec::Dropout { .. })).collect();
-    let without: Network<f64> = Network::from_specs(4, &without_specs, 9);
+    let without: Network<f64> = Network::from_specs_flat(4, &without_specs, 9);
 
     let mut rng = Rng::new(3);
     let x = Matrix::from_fn(4, 9, |_, _| rng.uniform_in(-1.0, 1.0));
@@ -354,7 +354,7 @@ fn dropout_eval_is_identity_train_is_not() {
 /// loss is differentiable and must match analytic backprop.
 #[test]
 fn dropout_stack_gradient_matches_finite_differences() {
-    let mut net: Network<f64> = Network::from_specs(4, &dropout_stack(), 33);
+    let mut net: Network<f64> = Network::from_specs_flat(4, &dropout_stack(), 33);
     let mut rng = Rng::new(14);
     let x = Matrix::from_fn(4, 2, |_, _| rng.uniform_in(-1.0, 1.0));
     let y = Matrix::from_fn(3, 2, |i, j| if (i + j) % 3 == 0 { 1.0 } else { 0.0 });

@@ -385,14 +385,19 @@ fn http_server_end_to_end() {
         Some(net.param_count()),
         "{body}"
     );
-    let layers: Vec<&str> = m
-        .get("layers")
-        .and_then(Json::as_arr)
-        .unwrap()
-        .iter()
-        .filter_map(Json::as_str)
-        .collect();
-    assert_eq!(layers, vec!["dense(6->8, sigmoid)", "dense(8->3, sigmoid)"], "{body}");
+    let layers = m.get("layers").and_then(Json::as_arr).unwrap();
+    let summaries: Vec<&str> =
+        layers.iter().filter_map(|l| l.get("summary").and_then(Json::as_str)).collect();
+    assert_eq!(summaries, vec!["dense(6->8, sigmoid)", "dense(8->3, sigmoid)"], "{body}");
+    // Structured rank-aware shapes, not bare row counts.
+    let shape0 = layers[0].get("shape").unwrap();
+    assert_eq!(shape0.get("kind").and_then(Json::as_str), Some("flat"), "{body}");
+    assert_eq!(shape0.get("size").and_then(Json::as_usize), Some(8), "{body}");
+    let in_shape = m.get("input_shape").unwrap();
+    assert_eq!(in_shape.get("kind").and_then(Json::as_str), Some("flat"), "{body}");
+    assert_eq!(in_shape.get("size").and_then(Json::as_usize), Some(6), "{body}");
+    let out_shape = m.get("output_shape").unwrap();
+    assert_eq!(out_shape.get("size").and_then(Json::as_usize), Some(3), "{body}");
 
     // Prediction: scores must match the model, argmax must match scores.
     let input = [0.9f32, 0.1, 0.4, 0.0, 0.6, 0.2];

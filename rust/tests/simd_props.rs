@@ -379,7 +379,7 @@ fn reused_shard_state_matches_fresh_threaded_path() {
         LayerSpec::Dropout { rate: 0.5 },
         LayerSpec::Dense { units: 3, activation: Activation::Sigmoid },
     ];
-    let net: Network<f64> = Network::from_specs(6, &specs, 51);
+    let net: Network<f64> = Network::from_specs_flat(6, &specs, 51);
     let mut rng = Rng::new(52);
     let x: Matrix<f64> = rand_matrix(6, 12, &mut rng);
     let y: Matrix<f64> = rand_matrix(3, 12, &mut rng);

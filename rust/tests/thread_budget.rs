@@ -42,7 +42,7 @@ fn explicit_budget_sizes_pool_and_caps_nested_fanout() {
             dims: vec![784, 16, 10],
             activation: Activation::Sigmoid,
             layers: vec![],
-            image: None,
+            shape: None,
             eta: 3.0,
             batch_size: 100,
             epochs: 2,

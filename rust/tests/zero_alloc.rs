@@ -14,6 +14,7 @@ use neural_rs::collectives::NullComm;
 use neural_rs::coordinator::{Trainer, TrainerOptions};
 use neural_rs::data::{label_digits, synthesize};
 use neural_rs::nn::{Activation, Gradients, GradShards, ImageDims, LayerSpec, Network, Workspace};
+use neural_rs::tensor::Matrix;
 
 struct CountingAlloc;
 
@@ -62,7 +63,7 @@ fn warmed_grad_batch_performs_zero_allocations() {
     // is no im2col panel to allocate at all, and steady state covers the
     // lazy packer too.
     let net = Network::<f32>::new(&[784, 30, 10], Activation::Sigmoid, 1);
-    let layered = Network::<f32>::from_specs(
+    let layered = Network::<f32>::from_specs_flat(
         784,
         &[
             LayerSpec::Dense { units: 30, activation: Activation::Sigmoid },
@@ -85,12 +86,30 @@ fn warmed_grad_batch_performs_zero_allocations() {
         ],
         1,
     );
+    // The sequence pipeline (embedding→layernorm→self_attention→dense→
+    // softmax) joined the contract with the rank-aware Shape redesign:
+    // the attention QKV/probs/context caches and backward staging all
+    // live in the negotiated per-op cache/work panels.
+    let seq = Network::<f32>::from_specs_flat(
+        16,
+        &[
+            LayerSpec::Embedding { vocab: 32, d_model: 8 },
+            LayerSpec::LayerNorm,
+            LayerSpec::SelfAttention,
+            LayerSpec::Dense { units: 10, activation: Activation::Sigmoid },
+            LayerSpec::Softmax,
+        ],
+        1,
+    );
     let data = synthesize::<f32>(32, 5);
     let x = data.images;
     let y = label_digits::<f32>(&data.labels);
+    // Token-id inputs for the sequence net (same batch/label shapes).
+    let x_seq = Matrix::<f32>::from_fn(16, 32, |i, j| ((i * 7 + j) % 32) as f32);
     // A ragged tail batch, pre-sliced so slicing itself isn't counted.
     let x_tail = x.cols_range(0, 20);
     let y_tail = y.cols_range(0, 20);
+    let x_seq_tail = x_seq.cols_range(0, 20);
 
     let mut ws = Workspace::new(net.dims());
     let mut grads = Gradients::zeros(net.dims());
@@ -98,10 +117,12 @@ fn warmed_grad_batch_performs_zero_allocations() {
     let mut grads_layered = layered.zero_grads();
     let mut ws_conv = Workspace::for_net(&conv);
     let mut grads_conv = conv.zero_grads();
+    let mut ws_seq = Workspace::for_net(&seq);
+    let mut grads_seq = seq.zero_grads();
 
     // Warm-up: sizes every A/Z/Δ/work buffer (incl. the dropout mask
-    // cache and the conv σ' stash) and the GEMM packing scratch at the
-    // largest batch this loop will see.
+    // cache, the conv σ' stash, and the attention caches) and the GEMM
+    // packing scratch at the largest batch this loop will see.
     for _ in 0..2 {
         grads.zero_out();
         net.grad_batch_into(&x, &y, &mut ws, &mut grads);
@@ -109,6 +130,8 @@ fn warmed_grad_batch_performs_zero_allocations() {
         layered.grad_batch_into(&x, &y, &mut ws_layered, &mut grads_layered);
         grads_conv.zero_out();
         conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
+        grads_seq.zero_out();
+        seq.grad_batch_into(&x_seq, &y, &mut ws_seq, &mut grads_seq);
     }
 
     ALLOCS.store(0, Ordering::SeqCst);
@@ -125,6 +148,9 @@ fn warmed_grad_batch_performs_zero_allocations() {
         grads_conv.zero_out();
         conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
         conv.grad_batch_into(&x_tail, &y_tail, &mut ws_conv, &mut grads_conv);
+        grads_seq.zero_out();
+        seq.grad_batch_into(&x_seq, &y, &mut ws_seq, &mut grads_seq);
+        seq.grad_batch_into(&x_seq_tail, &y_tail, &mut ws_seq, &mut grads_seq);
     }
     COUNTING.store(false, Ordering::SeqCst);
     let count = ALLOCS.load(Ordering::SeqCst);
@@ -174,7 +200,7 @@ fn warmed_grad_batch_performs_zero_allocations() {
         dims: vec![784, 30, 10],
         activation: Activation::Sigmoid,
         layers: vec![],
-        image: None,
+        shape: None,
         eta: 3.0,
         batch_size: 32,
         epochs: 1,
@@ -228,4 +254,8 @@ fn warmed_grad_batch_performs_zero_allocations() {
     conv.grad_batch_into(&x, &y, &mut ws_conv, &mut grads_conv);
     let fresh_conv = conv.grad_batch(&x, &y);
     assert_eq!(grads_conv, fresh_conv, "conv zero-alloc path must stay numerically identical");
+    grads_seq.zero_out();
+    seq.grad_batch_into(&x_seq, &y, &mut ws_seq, &mut grads_seq);
+    let fresh_seq = seq.grad_batch(&x_seq, &y);
+    assert_eq!(grads_seq, fresh_seq, "seq zero-alloc path must stay numerically identical");
 }
