@@ -95,6 +95,7 @@ fn main() {
             strategy: Default::default(),
             optimizer: Default::default(),
             intra_threads: 1,
+            heartbeat_every: 0,
         },
         engine,
         artifacts: Some(("artifacts".into(), "mnist".into())),

@@ -48,6 +48,7 @@ fn run_child(engine: EngineKind) {
             strategy: Default::default(),
             optimizer: Default::default(),
             intra_threads: 1,
+            heartbeat_every: 0,
         },
         engine,
         artifacts: Some(("artifacts".into(), "mnist_b32".into())),

@@ -56,6 +56,7 @@ fn main() {
                 strategy: Default::default(),
                 optimizer: Default::default(),
                 intra_threads: 1,
+                heartbeat_every: 0,
             },
             engine: EngineKind::Native,
             artifacts: None,
@@ -100,6 +101,7 @@ fn main() {
                 strategy: Default::default(),
                 optimizer: Default::default(),
                 intra_threads: t,
+                heartbeat_every: 0,
             },
             engine: EngineKind::Native,
             artifacts: None,

@@ -1,0 +1,272 @@
+//! Deterministic leader re-election for the TCP team.
+//!
+//! The star topology has a single mediator; when it dies the survivors
+//! rebuild the star without any external coordinator:
+//!
+//! 1. Every survivor observes the loss (a failed collective or a missed
+//!    heartbeat lease) and calls [`TcpComm::reelect`] with the same new
+//!    term (`old term + 1`).
+//! 2. Each survivor probes the images numbered *below* itself, lowest
+//!    first, at a deterministic per-`(term, image)` election address
+//!    derived from the base leader address. Enlisting with a lower image
+//!    makes this image a follower of that leader.
+//! 3. A survivor with no lower image alive finds all its probes failing
+//!    and binds its own election address: the **lowest alive image wins**
+//!    — every survivor reaches the same conclusion independently.
+//!
+//! The winner accepts enlist hellos (stamped with the new term; anything
+//! older is fenced) until every possibly-alive image joined or the
+//! election bound [`TcpOptions::election_timeout`] expires, then leads
+//! the rebuilt — possibly shrunken — team. Images that missed the round
+//! can still [`TcpTopology::rejoin`] later at an epoch boundary.
+//!
+//! [`TcpOptions::election_timeout`]: super::TcpOptions::election_timeout
+//! [`TcpTopology::rejoin`]: super::TcpTopology::rejoin
+
+use super::tcp::{
+    alive_of, arm_deadlines, expect, read_frame, write_frame, Opcode, PeerConn, Role, TcpComm,
+};
+use super::{CommError, CommResult};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Result of a successful re-election round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReelectOutcome {
+    /// Image now leading the team.
+    pub leader: usize,
+    /// The new (monotonically increased) election term.
+    pub term: u64,
+}
+
+/// Deterministic election address for `(term, image)`: every survivor
+/// can compute every candidate's listen address from the base leader
+/// address alone, with no coordination and no reuse across terms.
+pub(super) fn election_addr(base: SocketAddr, term: u64, image: usize, n: usize) -> SocketAddr {
+    let off = (term as u16).wrapping_mul(n as u16 + 1).wrapping_add(image as u16);
+    SocketAddr::new(base.ip(), base.port().wrapping_add(off))
+}
+
+impl TcpComm {
+    /// Re-elect a leader after the current one was lost. Deterministic:
+    /// the lowest alive image becomes the leader of term `current + 1`,
+    /// every other survivor reconnects to it, and the star is rebuilt.
+    /// Frames from the deposed leader (or replays of pre-election
+    /// traffic) are fenced from then on by the term stamped into every
+    /// frame ([`CommError::StaleTerm`]).
+    ///
+    /// Only a follower can call this — the leader cannot depose itself —
+    /// and the communicator must have been built with a base address.
+    pub fn reelect(&self) -> CommResult<ReelectOutcome> {
+        let base = match self.base {
+            Some(b) => b,
+            None => {
+                return Err(CommError::Protocol(
+                    "this communicator has no base address to re-elect on".into(),
+                ))
+            }
+        };
+        if self.is_leader() {
+            return Err(CommError::Protocol(
+                "the leader cannot run a re-election against itself".into(),
+            ));
+        }
+        let old_leader = self.leader_image();
+        let new_term = self.current_term() + 1;
+        let deadline = Instant::now() + self.opts.election_timeout;
+        crate::log_warn!(
+            "[image {}] leader image {old_leader} lost; electing a leader for term {new_term}",
+            self.image
+        );
+        crate::metrics::record_peer_lost();
+
+        // Probe lower-numbered images first, skipping the leader that
+        // just died; budget the bound evenly so a dead low image cannot
+        // starve the probes of the live ones.
+        let candidates: Vec<usize> = (1..self.image).filter(|&c| c != old_leader).collect();
+        let per_candidate = self
+            .opts
+            .election_timeout
+            .checked_div(candidates.len() as u32 + 1)
+            .unwrap_or(Duration::from_millis(500));
+        for &cand in &candidates {
+            let cand_deadline = (Instant::now() + per_candidate).min(deadline);
+            if let Some(stream) = enlist(base, cand, self.image, self.n, new_term, cand_deadline)
+            {
+                arm_deadlines(&stream, self.opts.op_timeout)?;
+                *self.role.write().unwrap() = Role::Worker { conn: Mutex::new(stream) };
+                self.term.store(new_term, Ordering::SeqCst);
+                self.leader_image.store(cand, Ordering::SeqCst);
+                self.first_lost.store(0, Ordering::SeqCst);
+                crate::metrics::record_reelection(new_term);
+                crate::log_warn!(
+                    "[image {}] following image {cand} as leader of term {new_term}",
+                    self.image
+                );
+                return Ok(ReelectOutcome { leader: cand, term: new_term });
+            }
+        }
+
+        // No lower image answered: this image leads the new term.
+        let (conns, listener) = lead(self, base, new_term, deadline)?;
+        let alive = alive_of(&conns);
+        *self.role.write().unwrap() = Role::Leader { conns, listener: Some(listener) };
+        self.term.store(new_term, Ordering::SeqCst);
+        self.leader_image.store(self.image, Ordering::SeqCst);
+        self.first_lost.store(0, Ordering::SeqCst);
+        crate::metrics::record_reelection(new_term);
+        crate::log_warn!(
+            "[image {}] leading term {new_term} with {alive} of {} image(s); \
+             rejoin address {}",
+            self.image,
+            self.n,
+            election_addr(base, new_term, self.image, self.n)
+        );
+        Ok(ReelectOutcome { leader: self.image, term: new_term })
+    }
+}
+
+/// Follower side of the election handshake: connect to `cand`'s election
+/// address (polling while it may still be binding), hello with the new
+/// term, and require an ack at that exact term. `None` means the
+/// candidate is not leading this term — try the next one.
+fn enlist(
+    base: SocketAddr,
+    cand: usize,
+    image: usize,
+    n: usize,
+    term: u64,
+    deadline: Instant,
+) -> Option<TcpStream> {
+    let addr = election_addr(base, term, cand, n);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return enlist_handshake(stream, image, term, deadline).ok(),
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+fn enlist_handshake(
+    mut s: TcpStream,
+    image: usize,
+    term: u64,
+    deadline: Instant,
+) -> CommResult<TcpStream> {
+    s.set_nodelay(true)?;
+    let remain = deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(100));
+    s.set_read_timeout(Some(remain))?;
+    s.set_write_timeout(Some(remain))?;
+    write_frame(&mut s, Opcode::Hello, image as u32, term, &[])?;
+    let ack = expect(read_frame(&mut s)?, Opcode::BarrierAck)?;
+    if ack.term != term {
+        return Err(CommError::StaleTerm { frame_term: ack.term, current_term: term });
+    }
+    Ok(s)
+}
+
+/// Leader side: bind the election address for `(term, self)` and accept
+/// enlist hellos until every possibly-alive image joined or the election
+/// bound expires. Images that do not make it stay dead placeholder slots
+/// so they can rejoin later.
+fn lead(
+    comm: &TcpComm,
+    base: SocketAddr,
+    term: u64,
+    deadline: Instant,
+) -> CommResult<(Vec<Mutex<PeerConn>>, TcpListener)> {
+    let addr = election_addr(base, term, comm.image, comm.n);
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<PeerConn> = (1..=comm.n)
+        .filter(|&i| i != comm.image)
+        .map(|image| PeerConn { stream: None, alive: false, image })
+        .collect();
+    // Everyone except this image and the dead leader could enlist.
+    let max_joiners = comm.n.saturating_sub(2);
+    let mut joined = 0usize;
+    while joined < max_joiners && Instant::now() < deadline {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                match enroll(&mut conns, stream, comm.image, term, comm.opts.op_timeout, deadline)
+                {
+                    Ok(img) => {
+                        joined += 1;
+                        crate::log_warn!(
+                            "[image {}] image {img} enlisted for term {term}",
+                            comm.image
+                        );
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "[image {}] rejected an enlist attempt for term {term}: {e}",
+                            comm.image
+                        );
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok((conns.into_iter().map(Mutex::new).collect(), listener))
+}
+
+/// Validate one enlist handshake and install the stream in its slot.
+fn enroll(
+    conns: &mut [PeerConn],
+    mut stream: TcpStream,
+    leader_image: usize,
+    term: u64,
+    op_timeout: Duration,
+    deadline: Instant,
+) -> CommResult<usize> {
+    // The listener is non-blocking; the accepted stream must not be.
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    let remain = deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(100));
+    stream.set_read_timeout(Some(remain))?;
+    stream.set_write_timeout(Some(remain))?;
+    let hello = expect(read_frame(&mut stream)?, Opcode::Hello)?;
+    if hello.term != term {
+        return Err(CommError::StaleTerm { frame_term: hello.term, current_term: term });
+    }
+    let img = hello.image as usize;
+    let slot = conns
+        .iter()
+        .position(|c| c.image == img && !c.alive)
+        .ok_or_else(|| CommError::Protocol(format!("unexpected candidate image {img}")))?;
+    write_frame(&mut stream, Opcode::BarrierAck, leader_image as u32, term, &[])?;
+    arm_deadlines(&stream, op_timeout)?;
+    conns[slot].stream = Some(stream);
+    conns[slot].alive = true;
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn election_addresses_are_distinct_per_term_and_image() {
+        let base: SocketAddr = "127.0.0.1:47000".parse().unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for term in 0..4u64 {
+            for image in 1..=5usize {
+                assert!(seen.insert(election_addr(base, term, image, 5).port()));
+            }
+        }
+        assert_eq!(election_addr(base, 0, 1, 5), "127.0.0.1:47001".parse().unwrap());
+    }
+}

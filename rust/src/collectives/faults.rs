@@ -3,14 +3,15 @@
 //! A [`FaultProxy`] sits between one worker and the leader and shuttles
 //! frames in both directions, applying a scripted [`FaultPlan`]: at chosen
 //! per-direction frame indices it can drop the connection, delay a frame,
-//! truncate a payload mid-write, corrupt the magic or opcode byte, or
-//! inflate the length prefix. Everything is deterministic — which frame is
+//! truncate a payload mid-write, corrupt the magic or opcode byte,
+//! inflate the length prefix, replay (duplicate) a frame, or go half-open
+//! and stall. Everything is deterministic — which frame is
 //! hit comes from the plan, and corruption bytes are derived from the
 //! plan's seed with a splitmix64 step, never from wall-clock time or a
 //! global RNG — so every failure mode in `tests/faults.rs` is a repeatable
 //! unit test, not a flake generator.
 //!
-//! The proxy is frame-aware (it parses the 14-byte header to know how many
+//! The proxy is frame-aware (it parses the 22-byte header to know how many
 //! payload bytes belong to the current frame), which is what lets a plan
 //! target "the 3rd frame toward the leader" precisely. Stream-killing
 //! faults ([`FaultAction::Drop`], [`FaultAction::Truncate`]) shut down
@@ -49,6 +50,16 @@ pub enum FaultAction {
     /// Inflate the length prefix past the receiver's sanity cap — the
     /// receiver must refuse without allocating.
     OversizeLen,
+    /// Forward the frame **twice** — models a replaying network segment
+    /// (retransmission bug, a confused middlebox). The receiver must
+    /// reject the replay with a typed error: either the stale term the
+    /// copy still carries, or the out-of-place opcode it lands on.
+    Duplicate,
+    /// Go half-open: keep both sockets alive but stop forwarding from
+    /// this point on, consuming frames without acking — models a peer
+    /// wedged behind a dead NAT entry. No EOF is ever seen; only the
+    /// receiver's lease/op deadline bounds the hang.
+    Stall,
 }
 
 /// Which direction of the proxied connection a rule applies to.
@@ -300,6 +311,32 @@ fn shuttle(mut link: Link, dir: FaultDir, plan: &FaultPlan) {
                 let _ = link.dst.flush();
                 link.sever();
                 return;
+            }
+            Some(FaultAction::Duplicate) => {
+                for _ in 0..2 {
+                    if link.dst.write_all(&header).is_err()
+                        || link.dst.write_all(&payload).is_err()
+                        || link.dst.flush().is_err()
+                    {
+                        link.sever();
+                        return;
+                    }
+                }
+            }
+            Some(FaultAction::Stall) => {
+                // Half-open: never forward again, never close. Drain the
+                // source so the sender's writes keep succeeding; the
+                // receiver's deadline is the only way out.
+                let mut sink = [0u8; 4096];
+                loop {
+                    match link.src.read(&mut sink) {
+                        Ok(0) | Err(_) => {
+                            link.sever();
+                            return;
+                        }
+                        Ok(_) => {}
+                    }
+                }
             }
         }
     }

@@ -18,8 +18,10 @@
 //! [`CommError`] at the caller, never a panic or an unbounded hang. The
 //! serial and shared-memory backends cannot fail (no I/O, no peers that
 //! can vanish) and always return `Ok`; the TCP backend classifies faults
-//! into I/O errors, protocol violations, and [`CommError::PeerLost`]
-//! (a teammate's process died). The deterministic fault-injection harness
+//! into I/O errors, protocol violations, [`CommError::PeerLost`] (a
+//! teammate's process died), and [`CommError::StaleTerm`] (traffic from
+//! a deposed leader, fenced by the election term every frame carries).
+//! The deterministic fault-injection harness
 //! in [`faults`] exists to prove those guarantees hold for every frame a
 //! hostile network can produce.
 //!
@@ -27,10 +29,12 @@
 //! bytes to every image, so network replicas stay exactly consistent — the
 //! property the paper's step-3 update relies on.
 
+mod election;
 pub mod faults;
 mod local;
 mod tcp;
 
+pub use election::ReelectOutcome;
 pub use faults::{FaultAction, FaultDir, FaultPlan, FaultProxy};
 pub use local::{LocalComm, ReduceAlgo, Team};
 pub use tcp::{TcpComm, TcpOptions, TcpTopology};
@@ -48,6 +52,10 @@ pub enum CommError {
     /// close, or a leader-relayed loss notification). `image == 0` means
     /// the lost image could not be identified.
     PeerLost { image: usize },
+    /// A frame stamped with an election term older than the receiver's
+    /// current term: traffic from a deposed leader (or a replay of
+    /// pre-election traffic) that must not influence the team's state.
+    StaleTerm { frame_term: u64, current_term: u64 },
 }
 
 impl CommError {
@@ -71,6 +79,10 @@ impl std::fmt::Display for CommError {
             Self::Protocol(msg) => write!(f, "protocol: {msg}"),
             Self::PeerLost { image: 0 } => write!(f, "a peer image was lost"),
             Self::PeerLost { image } => write!(f, "peer image {image} was lost"),
+            Self::StaleTerm { frame_term, current_term } => write!(
+                f,
+                "stale term: frame carries term {frame_term} but the team is at term {current_term}"
+            ),
         }
     }
 }
@@ -135,6 +147,15 @@ pub trait Communicator {
         let mut buf = [v];
         self.co_sum(&mut buf)?;
         Ok(buf[0])
+    }
+
+    /// Liveness probe between collectives. Every image must call it at
+    /// the same (deterministic) point in the training schedule; backends
+    /// without peers treat it as a no-op. The TCP backend exchanges
+    /// ping/pong frames under the lease deadline so a dead peer is
+    /// detected in `lease` time instead of a full operation timeout.
+    fn heartbeat(&self) -> CommResult<()> {
+        Ok(())
     }
 }
 
@@ -205,5 +226,9 @@ mod tests {
         let lost = CommError::PeerLost { image: 3 };
         assert!(format!("{lost}").contains("image 3"));
         assert!(format!("{}", CommError::PeerLost { image: 0 }).contains("peer image"));
+        let stale = CommError::StaleTerm { frame_term: 2, current_term: 5 };
+        assert!(!stale.is_timeout());
+        let msg = format!("{stale}");
+        assert!(msg.contains("term 2") && msg.contains("term 5"), "{msg}");
     }
 }

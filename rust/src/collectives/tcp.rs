@@ -1,13 +1,14 @@
 //! Distributed-memory team backend: one process (or thread) per image,
 //! connected over TCP — the paper's distributed OpenCoarrays configuration.
 //!
-//! Topology is a star: image 1 (the leader) accepts one connection per
-//! worker image. Collectives are leader-mediated gather/scatter, which for
-//! the paper's workload (one `co_sum` of the full gradient per step) is the
-//! same communication volume as OpenCoarrays' default. Frames carry a magic
-//! byte, an opcode, the sender image, and a length-prefixed f64 payload;
-//! every malformed frame is surfaced as an error rather than UB (exercised
-//! by the failure-injection tests in `tests/faults.rs`).
+//! Topology is a star: the leader (image 1 at startup) accepts one
+//! connection per worker image. Collectives are leader-mediated
+//! gather/scatter, which for the paper's workload (one `co_sum` of the
+//! full gradient per step) is the same communication volume as
+//! OpenCoarrays' default. Frames carry a magic byte, an opcode, the
+//! sender image, the sender's **election term**, and a length-prefixed
+//! f64 payload; every malformed frame is surfaced as an error rather than
+//! UB (exercised by the failure-injection tests in `tests/faults.rs`).
 //!
 //! # Failure model
 //!
@@ -33,23 +34,41 @@
 //!   survivable.
 //! - **Bounded, deterministic connect/hello retry.** Worker setup retries
 //!   transient I/O with a fixed linear backoff until the setup deadline.
+//! - **Heartbeats under a lease.** [`Communicator::heartbeat`] exchanges
+//!   ping/pong frames bounded by [`TcpOptions::lease`] (much shorter than
+//!   the op deadline), so a dead peer is detected *between* collectives
+//!   instead of only when a gradient exchange times out. Every image must
+//!   call it at the same deterministic point in the schedule.
+//! - **Leader re-election and term fencing.** When the leader dies, the
+//!   survivors call [`TcpComm::reelect`]: the lowest alive image becomes
+//!   the new leader and the star is rebuilt (see the `election`
+//!   module). Every frame is stamped with a
+//!   monotonically increasing term; a frame carrying an older term —
+//!   traffic from a deposed leader or a replay of pre-election frames —
+//!   is rejected with the typed [`CommError::StaleTerm`].
+//! - **Worker rejoin.** A restarted process can
+//!   [`TcpTopology::rejoin`] the team: it re-hellos the current leader
+//!   and is admitted when the leader next calls
+//!   [`TcpComm::admit_rejoins`] — at an epoch boundary — picking up the
+//!   current term from the admission ack.
 //!
 //! [`CommError::is_timeout`]: super::CommError::is_timeout
+//! [`Communicator::heartbeat`]: super::Communicator::heartbeat
 
 use super::{CommError, CommResult, Communicator};
 use crate::metrics::trace;
 use crate::tensor::Scalar;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 use std::time::Duration;
 
 const MAGIC: u8 = 0x4E; // 'N'
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
-enum Opcode {
+pub(super) enum Opcode {
     Hello = 1,
     Sum = 2,
     Max = 3,
@@ -67,6 +86,10 @@ enum Opcode {
     /// continues without it. `image` names the lost image; the payload is
     /// `[surviving_images]`. Receivers log and skip these frames.
     Shrunk = 11,
+    /// Leader → worker liveness probe, bounded by the lease deadline.
+    Ping = 12,
+    /// Worker → leader answer to a [`Opcode::Ping`].
+    Pong = 13,
 }
 
 impl Opcode {
@@ -84,6 +107,8 @@ impl Opcode {
             9 => Bcast,
             10 => PeerLost,
             11 => Shrunk,
+            12 => Ping,
+            13 => Pong,
             _ => return None,
         })
     }
@@ -117,18 +142,26 @@ fn classify(e: CommError, image: usize) -> CommError {
 }
 
 #[derive(Debug)]
-struct Frame {
-    op: Opcode,
-    image: u32,
-    payload: Vec<f64>,
+pub(super) struct Frame {
+    pub(super) op: Opcode,
+    pub(super) image: u32,
+    pub(super) term: u64,
+    pub(super) payload: Vec<f64>,
 }
 
-fn write_frame(s: &mut TcpStream, op: Opcode, image: u32, payload: &[f64]) -> Result<()> {
-    let mut header = [0u8; 14];
+pub(super) fn write_frame(
+    s: &mut TcpStream,
+    op: Opcode,
+    image: u32,
+    term: u64,
+    payload: &[f64],
+) -> Result<()> {
+    let mut header = [0u8; 22];
     header[0] = MAGIC;
     header[1] = op as u8;
     header[2..6].copy_from_slice(&image.to_le_bytes());
-    header[6..14].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    header[6..14].copy_from_slice(&term.to_le_bytes());
+    header[14..22].copy_from_slice(&(payload.len() as u64).to_le_bytes());
     s.write_all(&header)?;
     // Payload as little-endian f64s.
     let mut bytes = Vec::with_capacity(payload.len() * 8);
@@ -140,8 +173,8 @@ fn write_frame(s: &mut TcpStream, op: Opcode, image: u32, payload: &[f64]) -> Re
     Ok(())
 }
 
-fn read_frame(s: &mut TcpStream) -> Result<Frame> {
-    let mut header = [0u8; 14];
+pub(super) fn read_frame(s: &mut TcpStream) -> Result<Frame> {
+    let mut header = [0u8; 22];
     s.read_exact(&mut header)?;
     if header[0] != MAGIC {
         return proto_err(format!("bad magic byte 0x{:02x}", header[0]));
@@ -149,7 +182,8 @@ fn read_frame(s: &mut TcpStream) -> Result<Frame> {
     let op = Opcode::from_u8(header[1])
         .ok_or_else(|| CommError::Protocol(format!("unknown opcode {}", header[1])))?;
     let image = u32::from_le_bytes(header[2..6].try_into().unwrap());
-    let len = u64::from_le_bytes(header[6..14].try_into().unwrap()) as usize;
+    let term = u64::from_le_bytes(header[6..14].try_into().unwrap());
+    let len = u64::from_le_bytes(header[14..22].try_into().unwrap()) as usize;
     // Refuse absurd lengths instead of allocating blindly.
     if len > (1 << 30) {
         return proto_err(format!("payload of {len} elements exceeds limit"));
@@ -158,10 +192,10 @@ fn read_frame(s: &mut TcpStream) -> Result<Frame> {
     s.read_exact(&mut bytes)?;
     let payload =
         bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
-    Ok(Frame { op, image, payload })
+    Ok(Frame { op, image, term, payload })
 }
 
-fn expect(frame: Frame, op: Opcode) -> Result<Frame> {
+pub(super) fn expect(frame: Frame, op: Opcode) -> Result<Frame> {
     if frame.op != op {
         return proto_err(format!("expected {op:?}, got {:?} from image {}", frame.op, frame.image));
     }
@@ -190,20 +224,29 @@ fn read_collective(s: &mut TcpStream, this_image: usize, op: Opcode) -> Result<F
     }
 }
 
-/// One leader-held worker connection plus its liveness flag (elastic mode
-/// marks connections dead instead of failing the team).
+/// One leader-held worker slot: the peer's image id, its stream (None for
+/// a slot whose process is currently dead — it keeps its place so the
+/// image can rejoin), and a liveness flag (elastic mode marks connections
+/// dead instead of failing the team).
 #[derive(Debug)]
-struct PeerConn {
-    stream: TcpStream,
-    alive: bool,
+pub(super) struct PeerConn {
+    pub(super) stream: Option<TcpStream>,
+    pub(super) alive: bool,
+    pub(super) image: usize,
 }
 
 #[derive(Debug)]
-enum Role {
-    /// Image 1: one stream per worker, indexed by image-2.
-    Leader { conns: Vec<Mutex<PeerConn>> },
-    /// Images 2..=n: a single stream to the leader.
+pub(super) enum Role {
+    /// The current leader: one slot per teammate, sorted by image id. The
+    /// retained listener accepts rejoin hellos at epoch boundaries.
+    Leader { conns: Vec<Mutex<PeerConn>>, listener: Option<TcpListener> },
+    /// Everyone else: a single stream to the current leader.
     Worker { conn: Mutex<TcpStream> },
+}
+
+/// Images still participating, counted from the leader's slots.
+pub(super) fn alive_of(conns: &[Mutex<PeerConn>]) -> usize {
+    1 + conns.iter().filter(|c| c.lock().unwrap().alive).count()
 }
 
 /// Tuning knobs for the TCP team (deadlines, retries, elasticity).
@@ -222,6 +265,15 @@ pub struct TcpOptions {
     /// Backoff added between hello attempts (linear: k·backoff before
     /// attempt k+1) — deterministic, no jitter.
     pub hello_backoff: Duration,
+    /// Deadline for one heartbeat exchange (`[parallel] lease_ms`). Keep
+    /// it well above worst-case scheduling jitter: a peer that misses its
+    /// lease is treated as lost, which is fatal for non-elastic teams.
+    pub lease: Duration,
+    /// Overall bound on a leader re-election round
+    /// (`[parallel] election_ms`): how long candidates probe
+    /// lower-numbered images and how long the winner waits for the
+    /// survivors to enlist.
+    pub election_timeout: Duration,
 }
 
 impl TcpOptions {
@@ -235,6 +287,8 @@ impl TcpOptions {
             elastic: false,
             hello_attempts: 5,
             hello_backoff: Duration::from_millis(50),
+            lease: Duration::from_millis(2000),
+            election_timeout: Duration::from_millis(5000),
         }
     }
 
@@ -249,9 +303,21 @@ impl TcpOptions {
         self.op_timeout = t;
         self
     }
+
+    /// Builder-style heartbeat lease override.
+    pub fn lease(mut self, t: Duration) -> Self {
+        self.lease = t;
+        self
+    }
+
+    /// Builder-style election-round bound override.
+    pub fn election_timeout(mut self, t: Duration) -> Self {
+        self.election_timeout = t;
+        self
+    }
 }
 
-fn arm_deadlines(s: &TcpStream, op_timeout: Duration) -> Result<()> {
+pub(super) fn arm_deadlines(s: &TcpStream, op_timeout: Duration) -> Result<()> {
     let t = if op_timeout.is_zero() { None } else { Some(op_timeout) };
     s.set_read_timeout(t)?;
     s.set_write_timeout(t)?;
@@ -273,14 +339,15 @@ impl TcpTopology {
     pub fn leader_with(addr: SocketAddr, num_images: usize, opts: TcpOptions) -> Result<TcpComm> {
         assert!(num_images >= 1);
         if num_images == 1 {
-            return Ok(TcpComm {
-                image: 1,
-                n: 1,
-                role: Role::Leader { conns: Vec::new() },
-                elastic: opts.elastic,
-                first_lost: AtomicUsize::new(0),
-                op_timeout: opts.op_timeout,
-            });
+            return Ok(TcpComm::assemble(
+                1,
+                1,
+                Role::Leader { conns: Vec::new(), listener: None },
+                None,
+                0,
+                1,
+                opts,
+            ));
         }
         let listener = TcpListener::bind(addr)?;
         let mut conns: Vec<Option<TcpStream>> = (0..num_images - 1).map(|_| None).collect();
@@ -300,25 +367,30 @@ impl TcpTopology {
                 return proto_err(format!("duplicate connection for image {img}"));
             }
             // Ack the hello so the worker knows it was registered.
-            write_frame(&mut stream, Opcode::BarrierAck, 1, &[])?;
+            write_frame(&mut stream, Opcode::BarrierAck, 1, 0, &[])?;
             conns[img - 2] = Some(stream);
         }
         let conns: Vec<Mutex<PeerConn>> = conns
             .into_iter()
-            .map(|c| {
+            .enumerate()
+            .map(|(slot, c)| {
                 let stream = c.expect("all worker slots filled");
                 arm_deadlines(&stream, opts.op_timeout)?;
-                Ok(Mutex::new(PeerConn { stream, alive: true }))
+                Ok(Mutex::new(PeerConn { stream: Some(stream), alive: true, image: slot + 2 }))
             })
             .collect::<Result<_>>()?;
-        Ok(TcpComm {
-            image: 1,
-            n: num_images,
-            role: Role::Leader { conns },
-            elastic: opts.elastic,
-            first_lost: AtomicUsize::new(0),
-            op_timeout: opts.op_timeout,
-        })
+        // Keep the listener so restarted workers can rejoin at epoch
+        // boundaries; non-blocking so admission never stalls training.
+        listener.set_nonblocking(true)?;
+        Ok(TcpComm::assemble(
+            1,
+            num_images,
+            Role::Leader { conns, listener: Some(listener) },
+            Some(addr),
+            0,
+            1,
+            opts,
+        ))
     }
 
     /// Connect to the leader as `image` (2..=num_images).
@@ -367,14 +439,69 @@ impl TcpTopology {
         hello_span.set_args(attempt as u64, (attempt - 1) as u64);
         drop(hello_span);
         arm_deadlines(&stream, opts.op_timeout)?;
-        Ok(TcpComm {
+        Ok(TcpComm::assemble(
             image,
-            n: num_images,
-            role: Role::Worker { conn: Mutex::new(stream) },
-            elastic: opts.elastic,
-            first_lost: AtomicUsize::new(0),
-            op_timeout: opts.op_timeout,
-        })
+            num_images,
+            Role::Worker { conn: Mutex::new(stream) },
+            Some(addr),
+            0,
+            1,
+            opts,
+        ))
+    }
+
+    /// Re-hello the current leader after a restart. The connection is
+    /// accepted immediately but the admission ack only arrives when the
+    /// leader next calls [`TcpComm::admit_rejoins`] — at an epoch
+    /// boundary — so `setup_timeout` must cover the wait. The ack carries
+    /// the team's current term and the leader's image id; the first
+    /// collective this communicator performs is the admission-count
+    /// broadcast every image takes part in.
+    pub fn rejoin(
+        addr: SocketAddr,
+        image: usize,
+        num_images: usize,
+        opts: TcpOptions,
+    ) -> Result<TcpComm> {
+        assert!(
+            (1..=num_images).contains(&image),
+            "rejoining image must be in 1..=num_images"
+        );
+        let deadline = std::time::Instant::now() + opts.setup_timeout;
+        let mut stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) if std::time::Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(opts.setup_timeout))?;
+        stream.set_write_timeout(Some(opts.setup_timeout))?;
+        // A restarted process does not know the current term; hellos are
+        // exempt from fencing and the ack teaches it the term.
+        write_frame(&mut stream, Opcode::Hello, image as u32, 0, &[])?;
+        let ack = expect(read_frame(&mut stream)?, Opcode::BarrierAck)?;
+        arm_deadlines(&stream, opts.op_timeout)?;
+        let term = ack.term;
+        let leader = ack.image as usize;
+        let comm = TcpComm::assemble(
+            image,
+            num_images,
+            Role::Worker { conn: Mutex::new(stream) },
+            Some(addr),
+            term,
+            leader,
+            opts,
+        );
+        // Take part in the admission-count broadcast the leader performs
+        // right after acking, so the stream is aligned for collectives.
+        let mut count = [0.0f64];
+        comm.broadcast(&mut count, leader)?;
+        Ok(comm)
     }
 
     /// One connect + hello handshake attempt (the connect itself also
@@ -398,7 +525,7 @@ impl TcpTopology {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(opts.setup_timeout))?;
         stream.set_write_timeout(Some(opts.setup_timeout))?;
-        write_frame(&mut stream, Opcode::Hello, image as u32, &[])?;
+        write_frame(&mut stream, Opcode::Hello, image as u32, 0, &[])?;
         expect(read_frame(&mut stream)?, Opcode::BarrierAck)?;
         Ok(stream)
     }
@@ -407,27 +534,61 @@ impl TcpTopology {
 /// TCP-backed communicator for one image of a distributed team.
 #[derive(Debug)]
 pub struct TcpComm {
-    image: usize,
-    n: usize,
-    role: Role,
-    elastic: bool,
+    pub(super) image: usize,
+    pub(super) n: usize,
+    /// Behind a lock so [`TcpComm::reelect`] can swap a worker into the
+    /// leader role (or point it at a new leader) through `&self` — the
+    /// trainer holds an immutable borrow for the whole run.
+    pub(super) role: RwLock<Role>,
+    pub(super) elastic: bool,
     /// First image whose loss poisoned a non-elastic team (0 = healthy).
     /// Subsequent collectives fail fast instead of touching desynced
     /// streams.
-    first_lost: AtomicUsize,
-    /// Copy of [`TcpOptions::op_timeout`], kept so collective trace spans
-    /// can report how much deadline margin each op finished with.
-    op_timeout: Duration,
+    pub(super) first_lost: AtomicUsize,
+    /// Monotonically increasing election term stamped into every frame;
+    /// frames carrying an older term are fenced with
+    /// [`CommError::StaleTerm`].
+    pub(super) term: AtomicU64,
+    /// Image currently acting as leader (1 until the first re-election).
+    pub(super) leader_image: AtomicUsize,
+    /// Leader address this team was built on; election addresses are
+    /// derived from it deterministically.
+    pub(super) base: Option<SocketAddr>,
+    /// Knobs this communicator was built with (deadlines, lease,
+    /// election bound) — also used when rebuilding the star after an
+    /// election.
+    pub(super) opts: TcpOptions,
 }
 
 impl TcpComm {
+    /// Internal constructor used by the topology builders and elections.
+    pub(super) fn assemble(
+        image: usize,
+        n: usize,
+        role: Role,
+        base: Option<SocketAddr>,
+        term: u64,
+        leader_image: usize,
+        opts: TcpOptions,
+    ) -> Self {
+        Self {
+            image,
+            n,
+            role: RwLock::new(role),
+            elastic: opts.elastic,
+            first_lost: AtomicUsize::new(0),
+            term: AtomicU64::new(term),
+            leader_image: AtomicUsize::new(leader_image),
+            base,
+            opts,
+        }
+    }
+
     /// Images still participating (leader view; workers report the
     /// original team size).
     pub fn alive_images(&self) -> usize {
-        match &self.role {
-            Role::Leader { conns } => {
-                1 + conns.iter().filter(|c| c.lock().unwrap().alive).count()
-            }
+        match &*self.role.read().unwrap() {
+            Role::Leader { conns, .. } => alive_of(conns),
             Role::Worker { .. } => self.n,
         }
     }
@@ -437,17 +598,54 @@ impl TcpComm {
         self.elastic
     }
 
+    /// Current election term (0 until the first re-election).
+    pub fn current_term(&self) -> u64 {
+        self.term.load(Ordering::SeqCst)
+    }
+
+    /// Image currently acting as leader.
+    pub fn leader_image(&self) -> usize {
+        self.leader_image.load(Ordering::SeqCst)
+    }
+
+    /// True when this image currently leads the team.
+    pub fn is_leader(&self) -> bool {
+        matches!(&*self.role.read().unwrap(), Role::Leader { .. })
+    }
+
+    /// Fence a received frame against the current term: older terms are
+    /// deposed-leader traffic (or replays) and yield the typed error;
+    /// newer terms are adopted — the sender went through an election this
+    /// image has yet to observe.
+    pub(super) fn fence(&self, frame: &Frame) -> Result<()> {
+        let cur = self.term.fetch_max(frame.term, Ordering::SeqCst);
+        if frame.term < cur {
+            return Err(CommError::StaleTerm { frame_term: frame.term, current_term: cur });
+        }
+        Ok(())
+    }
+
+    /// Test/harness hook: force this image's term without an election.
+    #[doc(hidden)]
+    pub fn force_term(&self, term: u64) {
+        self.term.store(term, Ordering::SeqCst);
+    }
+
     /// Mark a worker dead and account for it (elastic mode).
     fn mark_lost(&self, conns: &[Mutex<PeerConn>], slot: usize) {
         let mut pc = conns[slot].lock().unwrap();
         if pc.alive {
             pc.alive = false;
-            let _ = pc.stream.shutdown(std::net::Shutdown::Both);
+            if let Some(s) = pc.stream.take() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
             crate::metrics::record_peer_lost();
-            let alive = 1 + conns.iter().filter(|c| c.lock().unwrap().alive).count();
+            let image = pc.image;
+            drop(pc);
+            let alive = alive_of(conns);
             crate::log_warn!(
-                "[image 1] image {} lost; continuing with {alive} of {} image(s)",
-                slot + 2,
+                "[image {}] image {image} lost; continuing with {alive} of {} image(s)",
+                self.image,
                 self.n
             );
         }
@@ -457,10 +655,13 @@ impl TcpComm {
     /// surviving worker surfaces a clean typed error instead of waiting
     /// out its read deadline, then poison the team and return `err`.
     fn fail_team(&self, conns: &[Mutex<PeerConn>], lost_image: usize, err: CommError) -> CommError {
+        let term = self.current_term();
         for pc in conns {
             let mut pc = pc.lock().unwrap();
             if pc.alive {
-                let _ = write_frame(&mut pc.stream, Opcode::PeerLost, lost_image as u32, &[]);
+                if let Some(s) = pc.stream.as_mut() {
+                    let _ = write_frame(s, Opcode::PeerLost, lost_image as u32, term, &[]);
+                }
             }
         }
         if lost_image != 0 {
@@ -480,26 +681,31 @@ impl TcpComm {
     }
 
     /// Leader-side per-slot transport step with elastic/fatal handling.
-    /// Returns `Ok(true)` when the slot participated, `Ok(false)` when it
-    /// was (or just became) a tolerated loss.
+    /// The closure receives the slot's stream and image id. Returns
+    /// `Ok(Some(_))` when the slot participated, `Ok(None)` when it was
+    /// (or just became) a tolerated loss.
     fn leader_step<R>(
         &self,
         conns: &[Mutex<PeerConn>],
         slot: usize,
         newly_lost: &mut Vec<usize>,
-        f: impl FnOnce(&mut TcpStream) -> Result<R>,
+        f: impl FnOnce(&mut TcpStream, usize) -> Result<R>,
     ) -> Result<Option<R>> {
-        let r = {
+        let (r, img) = {
             let mut pc = conns[slot].lock().unwrap();
             if !pc.alive {
                 return Ok(None);
             }
-            f(&mut pc.stream)
+            let img = pc.image;
+            match pc.stream.as_mut() {
+                Some(s) => (f(s, img), img),
+                None => return Ok(None),
+            }
         };
         match r {
             Ok(v) => Ok(Some(v)),
             Err(e) => {
-                let e = classify(e, slot + 2);
+                let e = classify(e, img);
                 match e {
                     CommError::PeerLost { image } if self.elastic => {
                         self.mark_lost(conns, slot);
@@ -521,14 +727,17 @@ impl TcpComm {
         if newly_lost.is_empty() {
             return;
         }
-        let alive = self.alive_images() as f64;
+        let term = self.current_term();
+        let alive = alive_of(conns) as f64;
         for pc in conns {
             let mut pc = pc.lock().unwrap();
             if !pc.alive {
                 continue;
             }
-            for &img in newly_lost {
-                let _ = write_frame(&mut pc.stream, Opcode::Shrunk, img as u32, &[alive]);
+            if let Some(s) = pc.stream.as_mut() {
+                for &img in newly_lost {
+                    let _ = write_frame(s, Opcode::Shrunk, img as u32, term, &[alive]);
+                }
             }
         }
     }
@@ -546,19 +755,20 @@ impl TcpComm {
             Opcode::Min => a.min(b),
             _ => unreachable!(),
         };
-        match &self.role {
-            Role::Leader { conns } => {
+        let term = self.current_term();
+        match &*self.role.read().unwrap() {
+            Role::Leader { conns, .. } => {
                 let mut acc: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
                 let mut newly_lost = Vec::new();
                 // Gather in image order for a deterministic combine order.
                 for i in 0..conns.len() {
-                    let frame = self.leader_step(conns, i, &mut newly_lost, |s| {
+                    let frame = self.leader_step(conns, i, &mut newly_lost, |s, img| {
                         let frame = expect(read_frame(s)?, op)?;
-                        if frame.image as usize != i + 2 {
+                        self.fence(&frame)?;
+                        if frame.image as usize != img {
                             return proto_err(format!(
-                                "image {} answered on slot of image {}",
-                                frame.image,
-                                i + 2
+                                "image {} answered on slot of image {img}",
+                                frame.image
                             ));
                         }
                         Ok(frame)
@@ -582,7 +792,7 @@ impl TcpComm {
                 // per-sample gradient average keeps its magnitude. Shards
                 // are equal within one sample, so n/alive is the right
                 // correction up to that granularity.
-                let alive = self.alive_images();
+                let alive = alive_of(conns);
                 if op == Opcode::Sum && alive < self.n {
                     let scale = self.n as f64 / alive as f64;
                     for a in acc.iter_mut() {
@@ -592,8 +802,8 @@ impl TcpComm {
                 self.announce_shrunk(conns, &newly_lost);
                 let mut send_lost = Vec::new();
                 for i in 0..conns.len() {
-                    self.leader_step(conns, i, &mut send_lost, |s| {
-                        write_frame(s, Opcode::Result, 1, &acc)
+                    self.leader_step(conns, i, &mut send_lost, |s, _| {
+                        write_frame(s, Opcode::Result, self.image as u32, term, &acc)
                     })?;
                 }
                 self.announce_shrunk(conns, &send_lost);
@@ -602,12 +812,14 @@ impl TcpComm {
                 }
             }
             Role::Worker { conn } => {
+                let leader = self.leader_image();
                 let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
                 let mut s = conn.lock().unwrap();
-                write_frame(&mut s, op, self.image as u32, &payload)
-                    .map_err(|e| classify(e, 1))?;
+                write_frame(&mut s, op, self.image as u32, term, &payload)
+                    .map_err(|e| classify(e, leader))?;
                 let result = read_collective(&mut s, self.image, Opcode::Result)
-                    .map_err(|e| classify(e, 1))?;
+                    .map_err(|e| classify(e, leader))?;
+                self.fence(&result)?;
                 if result.payload.len() != buf.len() {
                     return proto_err("result size mismatch");
                 }
@@ -619,6 +831,11 @@ impl TcpComm {
         Ok(())
     }
 
+    /// Fallible broadcast. `source_image == 1` always aliases the
+    /// *current leader*: after a re-election "image 1" no longer exists,
+    /// but every caller that says "broadcast from image 1" means
+    /// "replicate the leader's copy" — the paper's `co_broadcast` from
+    /// the first image.
     fn broadcast<T: Scalar>(&self, buf: &mut [T], source_image: usize) -> Result<()> {
         if !(1..=self.n).contains(&source_image) {
             return proto_err(format!("source image {source_image} out of range"));
@@ -627,21 +844,35 @@ impl TcpComm {
             return Ok(());
         }
         self.check_poisoned()?;
-        match &self.role {
-            Role::Leader { conns } => {
+        let term = self.current_term();
+        let leader = self.leader_image();
+        let source_image = if source_image == 1 { leader } else { source_image };
+        match &*self.role.read().unwrap() {
+            Role::Leader { conns, .. } => {
                 let mut newly_lost = Vec::new();
-                let data: Vec<f64> = if source_image == 1 {
+                let data: Vec<f64> = if source_image == self.image {
                     buf.iter().map(|&v| v.to_f64()).collect()
                 } else {
                     // The broadcast source cannot be dropped elastically:
                     // its payload is the whole point of the collective.
+                    let slot = conns
+                        .iter()
+                        .position(|c| c.lock().unwrap().image == source_image)
+                        .ok_or_else(|| {
+                            CommError::Protocol(format!(
+                                "source image {source_image} has no slot"
+                            ))
+                        })?;
                     let r = {
-                        let mut pc = conns[source_image - 2].lock().unwrap();
-                        if !pc.alive {
-                            Err(CommError::PeerLost { image: source_image })
-                        } else {
-                            read_frame(&mut pc.stream)
+                        let mut pc = conns[slot].lock().unwrap();
+                        match pc.stream.as_mut() {
+                            Some(s) if pc.alive => read_frame(s)
                                 .and_then(|f| expect(f, Opcode::BcastPush))
+                                .and_then(|f| {
+                                    self.fence(&f)?;
+                                    Ok(f)
+                                }),
+                            _ => Err(CommError::PeerLost { image: source_image }),
                         }
                     };
                     match r {
@@ -664,11 +895,11 @@ impl TcpComm {
                     }
                 };
                 for i in 0..conns.len() {
-                    if i + 2 == source_image {
-                        continue; // the source already has the data
-                    }
-                    self.leader_step(conns, i, &mut newly_lost, |s| {
-                        write_frame(s, Opcode::Bcast, 1, &data)
+                    self.leader_step(conns, i, &mut newly_lost, |s, img| {
+                        if img == source_image {
+                            return Ok(()); // the source already has the data
+                        }
+                        write_frame(s, Opcode::Bcast, self.image as u32, term, &data)
                     })?;
                 }
                 self.announce_shrunk(conns, &newly_lost);
@@ -680,11 +911,12 @@ impl TcpComm {
                 let mut s = conn.lock().unwrap();
                 if self.image == source_image {
                     let payload: Vec<f64> = buf.iter().map(|&v| v.to_f64()).collect();
-                    write_frame(&mut s, Opcode::BcastPush, self.image as u32, &payload)
-                        .map_err(|e| classify(e, 1))?;
+                    write_frame(&mut s, Opcode::BcastPush, self.image as u32, term, &payload)
+                        .map_err(|e| classify(e, leader))?;
                 } else {
                     let frame = read_collective(&mut s, self.image, Opcode::Bcast)
-                        .map_err(|e| classify(e, 1))?;
+                        .map_err(|e| classify(e, leader))?;
+                    self.fence(&frame)?;
                     if frame.payload.len() != buf.len() {
                         return proto_err("broadcast size mismatch");
                     }
@@ -702,32 +934,169 @@ impl TcpComm {
             return Ok(());
         }
         self.check_poisoned()?;
-        match &self.role {
-            Role::Leader { conns } => {
+        let term = self.current_term();
+        match &*self.role.read().unwrap() {
+            Role::Leader { conns, .. } => {
                 let mut newly_lost = Vec::new();
                 for i in 0..conns.len() {
-                    self.leader_step(conns, i, &mut newly_lost, |s| {
-                        expect(read_frame(s)?, Opcode::Barrier).map(|_| ())
+                    self.leader_step(conns, i, &mut newly_lost, |s, _| {
+                        let frame = expect(read_frame(s)?, Opcode::Barrier)?;
+                        self.fence(&frame)
                     })?;
                 }
                 self.announce_shrunk(conns, &newly_lost);
                 let mut ack_lost = Vec::new();
                 for i in 0..conns.len() {
-                    self.leader_step(conns, i, &mut ack_lost, |s| {
-                        write_frame(s, Opcode::BarrierAck, 1, &[])
+                    self.leader_step(conns, i, &mut ack_lost, |s, _| {
+                        write_frame(s, Opcode::BarrierAck, self.image as u32, term, &[])
                     })?;
                 }
                 self.announce_shrunk(conns, &ack_lost);
             }
             Role::Worker { conn } => {
+                let leader = self.leader_image();
                 let mut s = conn.lock().unwrap();
-                write_frame(&mut s, Opcode::Barrier, self.image as u32, &[])
-                    .map_err(|e| classify(e, 1))?;
-                read_collective(&mut s, self.image, Opcode::BarrierAck)
-                    .map_err(|e| classify(e, 1))?;
+                write_frame(&mut s, Opcode::Barrier, self.image as u32, term, &[])
+                    .map_err(|e| classify(e, leader))?;
+                let ack = read_collective(&mut s, self.image, Opcode::BarrierAck)
+                    .map_err(|e| classify(e, leader))?;
+                self.fence(&ack)?;
             }
         }
         Ok(())
+    }
+
+    /// One ping/pong liveness round under the lease deadline. Collective:
+    /// the leader probes every live worker, every worker answers. Called
+    /// by every image at the same deterministic point between
+    /// collectives, so a dead peer is discovered in `lease` time rather
+    /// than a full op deadline. Elastic teams tolerate peers that died
+    /// since the last probe; a peer that is merely *stalled* (lease
+    /// missed, socket open) is a timeout and stays fatal.
+    fn heartbeat_fallible(&self) -> Result<()> {
+        if self.n == 1 {
+            return Ok(());
+        }
+        self.check_poisoned()?;
+        let term = self.current_term();
+        let lease = self.opts.lease;
+        let op_timeout = self.opts.op_timeout;
+        match &*self.role.read().unwrap() {
+            Role::Leader { conns, .. } => {
+                let mut newly_lost = Vec::new();
+                for i in 0..conns.len() {
+                    self.leader_step(conns, i, &mut newly_lost, |s, _| {
+                        arm_deadlines(s, lease)?;
+                        let r = write_frame(s, Opcode::Ping, self.image as u32, term, &[])
+                            .and_then(|()| expect(read_frame(s)?, Opcode::Pong))
+                            .and_then(|f| self.fence(&f));
+                        arm_deadlines(s, op_timeout)?;
+                        r
+                    })?;
+                }
+                self.announce_shrunk(conns, &newly_lost);
+            }
+            Role::Worker { conn } => {
+                let leader = self.leader_image();
+                let mut s = conn.lock().unwrap();
+                arm_deadlines(&s, lease).map_err(|e| classify(e, leader))?;
+                let r = read_collective(&mut s, self.image, Opcode::Ping)
+                    .and_then(|f| self.fence(&f))
+                    .and_then(|()| {
+                        write_frame(&mut s, Opcode::Pong, self.image as u32, term, &[])
+                    });
+                arm_deadlines(&s, op_timeout).map_err(|e| classify(e, leader))?;
+                r.map_err(|e| classify(e, leader))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Admit any workers waiting to rejoin. Collective: every image calls
+    /// it at an epoch boundary — the leader accepts pending re-hellos,
+    /// acks them with the current term, and then broadcasts the admitted
+    /// count to the whole (grown) team; workers just take part in that
+    /// broadcast. Returns the number of images admitted. The caller is
+    /// responsible for re-broadcasting model state when it is non-zero.
+    pub fn admit_rejoins(&self) -> Result<usize> {
+        if self.n == 1 {
+            return Ok(0);
+        }
+        self.check_poisoned()?;
+        let term = self.current_term();
+        let mut admitted = 0usize;
+        {
+            let role = self.role.read().unwrap();
+            if let Role::Leader { conns, listener: Some(listener) } = &*role {
+                loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => match self.admit_one(conns, stream, term) {
+                            Ok(img) => {
+                                admitted += 1;
+                                crate::metrics::record_rejoin();
+                                crate::log_warn!(
+                                    "[image {}] image {img} rejoined at term {term}; \
+                                     team back to {} of {} image(s)",
+                                    self.image,
+                                    alive_of(conns),
+                                    self.n
+                                );
+                            }
+                            Err(e) => {
+                                crate::log_warn!(
+                                    "[image {}] rejected a rejoin attempt: {e}",
+                                    self.image
+                                );
+                            }
+                        },
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) => return Err(e.into()),
+                    }
+                }
+            }
+        }
+        // Announce the admitted count so every image — old and new —
+        // agrees on the team make-up before the next collective.
+        let mut count = [admitted as f64];
+        self.broadcast(&mut count, self.leader_image())?;
+        Ok(count[0] as usize)
+    }
+
+    /// Validate one rejoin handshake and install the stream in its dead
+    /// slot. Returns the admitted image id.
+    fn admit_one(
+        &self,
+        conns: &[Mutex<PeerConn>],
+        mut stream: TcpStream,
+        term: u64,
+    ) -> Result<usize> {
+        // The retained listener is non-blocking; the admitted stream must
+        // not be.
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        // The handshake is bounded by the lease so a half-open connect
+        // cannot stall the epoch boundary.
+        let bound = self.opts.lease.max(Duration::from_millis(100));
+        stream.set_read_timeout(Some(bound))?;
+        stream.set_write_timeout(Some(bound))?;
+        let hello = expect(read_frame(&mut stream)?, Opcode::Hello)?;
+        let img = hello.image as usize;
+        if !(1..=self.n).contains(&img) || img == self.image {
+            return proto_err(format!("rejoin announced bad image id {img}"));
+        }
+        let slot = conns
+            .iter()
+            .position(|c| c.lock().unwrap().image == img)
+            .ok_or_else(|| CommError::Protocol(format!("image {img} has no slot")))?;
+        let mut pc = conns[slot].lock().unwrap();
+        if pc.alive {
+            return proto_err(format!("image {img} attempted rejoin while still connected"));
+        }
+        write_frame(&mut stream, Opcode::BarrierAck, self.image as u32, term, &[])?;
+        arm_deadlines(&stream, self.opts.op_timeout)?;
+        pc.stream = Some(stream);
+        pc.alive = true;
+        Ok(img)
     }
 
     /// Run one collective under a `"comm"` trace span. `args[0]` is the
@@ -747,7 +1116,7 @@ impl TcpComm {
         let started = std::time::Instant::now();
         let mut span = trace::span_args(name, "comm", bytes as u64, 0);
         let r = f();
-        let margin = self.op_timeout.saturating_sub(started.elapsed());
+        let margin = self.opts.op_timeout.saturating_sub(started.elapsed());
         span.set_args(bytes as u64, margin.as_micros() as u64);
         r
     }
@@ -785,6 +1154,10 @@ impl Communicator for TcpComm {
         let bytes = buf.len() * 8;
         self.traced("co_min", bytes, || self.reduce(buf, Opcode::Min))
     }
+
+    fn heartbeat(&self) -> CommResult<()> {
+        self.traced("heartbeat", 0, || self.heartbeat_fallible())
+    }
 }
 
 /// Crate-internal helpers for the fault-injection harness and tests.
@@ -793,8 +1166,8 @@ pub mod wire {
     use super::*;
 
     /// Header layout shared with [`super::super::faults`]: magic, opcode,
-    /// image, payload length.
-    pub const HEADER_LEN: usize = 14;
+    /// image, election term, payload length.
+    pub const HEADER_LEN: usize = 22;
     pub const WIRE_MAGIC: u8 = MAGIC;
 
     /// True when `b` decodes to a known opcode.
@@ -802,20 +1175,26 @@ pub mod wire {
         Opcode::from_u8(b).is_some()
     }
 
+    /// Election term from a raw header (for frame-aware proxies).
+    pub fn frame_term(header: &[u8; HEADER_LEN]) -> u64 {
+        u64::from_le_bytes(header[6..14].try_into().unwrap())
+    }
+
     /// Payload element count from a raw header (for frame-aware proxies).
     pub fn payload_len(header: &[u8; HEADER_LEN]) -> u64 {
-        u64::from_le_bytes(header[6..14].try_into().unwrap())
+        u64::from_le_bytes(header[14..22].try_into().unwrap())
     }
 
     /// Overwrite the payload-length field of a raw header.
     pub fn set_payload_len(header: &mut [u8; HEADER_LEN], len: u64) {
-        header[6..14].copy_from_slice(&len.to_le_bytes());
+        header[14..22].copy_from_slice(&len.to_le_bytes());
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::ReelectOutcome;
     use std::net::{IpAddr, Ipv4Addr};
     use std::sync::atomic::AtomicU16;
 
@@ -931,7 +1310,7 @@ mod tests {
         let listener = TcpListener::bind(a).unwrap();
         let client = std::thread::spawn(move || {
             let mut s = TcpStream::connect(a).unwrap();
-            s.write_all(&[0xFFu8; 14]).unwrap();
+            s.write_all(&[0xFFu8; 22]).unwrap();
         });
         let (mut stream, _) = listener.accept().unwrap();
         stream.set_read_timeout(Some(T)).unwrap();
@@ -947,10 +1326,10 @@ mod tests {
         let client = std::thread::spawn(move || {
             let mut s = TcpStream::connect(a).unwrap();
             // Announce an 8-element payload but hang up after 3 bytes.
-            let mut header = [0u8; 14];
+            let mut header = [0u8; 22];
             header[0] = MAGIC;
             header[1] = Opcode::Sum as u8;
-            header[6..14].copy_from_slice(&8u64.to_le_bytes());
+            header[14..22].copy_from_slice(&8u64.to_le_bytes());
             s.write_all(&header).unwrap();
             s.write_all(&[1, 2, 3]).unwrap();
             drop(s);
@@ -968,10 +1347,10 @@ mod tests {
         let listener = TcpListener::bind(a).unwrap();
         let client = std::thread::spawn(move || {
             let mut s = TcpStream::connect(a).unwrap();
-            let mut header = [0u8; 14];
+            let mut header = [0u8; 22];
             header[0] = MAGIC;
             header[1] = Opcode::Sum as u8;
-            header[6..14].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+            header[14..22].copy_from_slice(&(u64::MAX / 2).to_le_bytes());
             s.write_all(&header).unwrap();
         });
         let (mut stream, _) = listener.accept().unwrap();
@@ -1077,6 +1456,152 @@ mod tests {
             dier.join().unwrap();
             assert_eq!(leader.join().unwrap(), 3.0);
             assert_eq!(survivor.join().unwrap(), 3.0);
+        });
+    }
+
+    // ---- heartbeats, term fencing, re-election ----
+
+    #[test]
+    fn heartbeat_completes_on_a_healthy_team() {
+        let out = run_tcp(3, |c| {
+            c.heartbeat().unwrap();
+            let mut buf = [1.0f64];
+            c.co_sum(&mut buf).unwrap();
+            c.heartbeat().unwrap();
+            buf[0]
+        });
+        for v in out {
+            assert_eq!(v, 3.0);
+        }
+    }
+
+    /// An elastic leader discovers a dead worker through the heartbeat
+    /// lease, between collectives, without failing the team.
+    #[test]
+    fn heartbeat_detects_worker_death_under_the_lease() {
+        let a = addr();
+        let opts = || TcpOptions::with_timeout(T).elastic(true).lease(Duration::from_millis(500));
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader_with(a, 2, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                let started = std::time::Instant::now();
+                // The worker dies after round 1; the probe must notice.
+                while c.alive_images() == 2 {
+                    c.heartbeat().unwrap();
+                    assert!(started.elapsed() < T, "worker death never detected");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                assert_eq!(c.alive_images(), 1);
+            });
+            let worker = s.spawn(move || {
+                let c = TcpTopology::worker_with(a, 2, 2, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                drop(c);
+            });
+            worker.join().unwrap();
+            leader.join().unwrap();
+        });
+    }
+
+    /// Frames carrying an older term are rejected with the typed error at
+    /// whichever image receives them — worker and leader side.
+    #[test]
+    fn stale_term_frames_are_fenced_at_every_image() {
+        // Worker side: the leader still writes term 0 but the worker has
+        // moved on to term 7 — the broadcast is deposed-leader traffic.
+        let a = addr();
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader(a, 2, T).unwrap();
+                let mut buf = [7.0f64];
+                c.co_broadcast(&mut buf, 1).unwrap(); // leader only writes
+            });
+            let worker = s.spawn(move || {
+                let c = TcpTopology::worker(a, 2, 2, T).unwrap();
+                c.force_term(7);
+                let err = c.co_broadcast(&mut [0.0f64], 1).unwrap_err();
+                assert!(
+                    matches!(err, CommError::StaleTerm { frame_term: 0, current_term: 7 }),
+                    "{err}"
+                );
+            });
+            worker.join().unwrap();
+            leader.join().unwrap();
+        });
+
+        // Leader side: a deposit stamped term 0 reaching a term-3 leader
+        // is fenced there, and the team is failed with a typed error.
+        let a = addr();
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader(a, 2, T).unwrap();
+                c.force_term(3);
+                let err = c.co_sum(&mut [1.0f64]).unwrap_err();
+                assert!(
+                    matches!(err, CommError::StaleTerm { frame_term: 0, current_term: 3 }),
+                    "{err}"
+                );
+            });
+            let worker = s.spawn(move || {
+                let c = TcpTopology::worker(a, 2, 2, T).unwrap();
+                let err = c.co_sum(&mut [1.0f64]).unwrap_err();
+                assert!(matches!(err, CommError::PeerLost { .. }), "{err}");
+            });
+            worker.join().unwrap();
+            leader.join().unwrap();
+        });
+    }
+
+    /// Leader death → deterministic re-election: the lowest alive image
+    /// leads term 1, the star is rebuilt, collectives (with n/alive
+    /// rescale), heartbeats, and leader-aliased broadcasts all work on
+    /// the new topology.
+    #[test]
+    fn leader_death_triggers_deterministic_reelection() {
+        let a = addr();
+        let opts = || {
+            TcpOptions::with_timeout(T)
+                .elastic(true)
+                .election_timeout(Duration::from_secs(5))
+        };
+        std::thread::scope(|s| {
+            let leader = s.spawn(move || {
+                let c = TcpTopology::leader_with(a, 3, opts()).unwrap();
+                let mut buf = [1.0f64];
+                c.co_sum(&mut buf).unwrap();
+                assert_eq!(buf[0], 3.0);
+                drop(c); // the leader dies between rounds
+            });
+            let survivor = |img: usize| {
+                move || {
+                    let c = TcpTopology::worker_with(a, img, 3, opts()).unwrap();
+                    let mut buf = [1.0f64];
+                    c.co_sum(&mut buf).unwrap();
+                    let err = c.co_sum(&mut [1.0f64]).unwrap_err();
+                    assert!(matches!(err, CommError::PeerLost { image: 1 }), "{err}");
+                    let out = c.reelect().unwrap();
+                    assert_eq!(out, ReelectOutcome { leader: 2, term: 1 });
+                    assert_eq!(c.current_term(), 1);
+                    assert_eq!(c.leader_image(), 2);
+                    // Survivor sums rescale 3/2 over the 2 alive images.
+                    let mut buf = [1.0f64];
+                    c.co_sum(&mut buf).unwrap();
+                    c.heartbeat().unwrap();
+                    // "Image 1" now aliases the elected leader.
+                    let mut w = if c.this_image() == 2 { [5.0f64, 6.0] } else { [0.0; 2] };
+                    c.co_broadcast(&mut w, 1).unwrap();
+                    assert_eq!(w, [5.0, 6.0]);
+                    buf[0]
+                }
+            };
+            let w2 = s.spawn(survivor(2));
+            let w3 = s.spawn(survivor(3));
+            leader.join().unwrap();
+            assert_eq!(w2.join().unwrap(), 3.0);
+            assert_eq!(w3.join().unwrap(), 3.0);
         });
     }
 }

@@ -140,6 +140,17 @@ pub struct ExperimentConfig {
     /// TCP teams only: survive worker death mid-run by rescaling gradient
     /// sums over the remaining images instead of failing the team.
     pub elastic: bool,
+    /// TCP teams only: heartbeat cadence in global training steps
+    /// (`[parallel] heartbeat_every`). Every image exchanges a ping/pong
+    /// liveness probe under the lease after every N steps; 0 disables it.
+    pub heartbeat_every: usize,
+    /// TCP teams only: heartbeat lease in milliseconds (`[parallel]
+    /// lease_ms`) — how quickly a dead peer is detected by the probe.
+    pub lease_ms: u64,
+    /// TCP teams only: re-election bound in milliseconds (`[parallel]
+    /// election_ms`) — how long survivors probe for a new leader before
+    /// giving up on a candidate set.
+    pub election_ms: u64,
     /// Intra-image gradient threads (native engine only; see
     /// `TrainerOptions::intra_threads`).
     pub intra_threads: usize,
@@ -182,6 +193,9 @@ impl Default for ExperimentConfig {
             algo: ReduceAlgo::Tree,
             comm: CommKind::Local,
             elastic: false,
+            heartbeat_every: 64,
+            lease_ms: 2000,
+            election_ms: 5000,
             intra_threads: 1,
             threads: None,
             // The PJRT engine needs a `--features pjrt` build; default to
@@ -610,6 +624,9 @@ impl ExperimentConfig {
             cfg.comm = CommKind::parse(comm)
                 .ok_or_else(|| ConfigError::Invalid(format!("unknown comm '{comm}'")))?;
             cfg.elastic = get_bool(t, "elastic", cfg.elastic)?;
+            cfg.heartbeat_every = get_usize(t, "heartbeat_every", cfg.heartbeat_every)?;
+            cfg.lease_ms = get_u64(t, "lease_ms", cfg.lease_ms)?;
+            cfg.election_ms = get_u64(t, "election_ms", cfg.election_ms)?;
         }
         if let Some(t) = doc.get("serve") {
             cfg.serve.addr = get_str(t, "addr", &cfg.serve.addr)?.to_string();
@@ -716,6 +733,12 @@ impl ExperimentConfig {
         if self.serve.workers == 0 {
             return bad("[serve] workers must be positive");
         }
+        if self.lease_ms == 0 {
+            return bad("[parallel] lease_ms must be positive");
+        }
+        if self.election_ms == 0 {
+            return bad("[parallel] election_ms must be positive");
+        }
         Ok(())
     }
 
@@ -734,6 +757,8 @@ impl ExperimentConfig {
             strategy: self.strategy,
             optimizer: self.optimizer,
             intra_threads: self.intra_threads,
+            // The probe only has peers to talk to on the TCP backend.
+            heartbeat_every: if self.comm == CommKind::Tcp { self.heartbeat_every } else { 0 },
         }
     }
 }
@@ -808,6 +833,26 @@ mod tests {
     }
 
     #[test]
+    fn robustness_knobs_parse_and_default() {
+        let c = ExperimentConfig::default();
+        assert_eq!((c.heartbeat_every, c.lease_ms, c.election_ms), (64, 2000, 5000));
+        assert_eq!(
+            c.trainer_options().heartbeat_every,
+            0,
+            "the local backend has no peers to probe"
+        );
+        let c = ExperimentConfig::from_toml(
+            "[parallel]\ncomm = \"tcp\"\nheartbeat_every = 8\nlease_ms = 500\nelection_ms = 1500\n",
+        )
+        .unwrap();
+        assert_eq!((c.heartbeat_every, c.lease_ms, c.election_ms), (8, 500, 1500));
+        assert_eq!(c.trainer_options().heartbeat_every, 8);
+        let c = ExperimentConfig::from_toml("[parallel]\ncomm = \"tcp\"\nheartbeat_every = 0\n")
+            .unwrap();
+        assert_eq!(c.trainer_options().heartbeat_every, 0, "0 disables the probe");
+    }
+
+    #[test]
     fn thread_budget_parses_and_defaults_off() {
         let c = ExperimentConfig::from_toml("[parallel]\nthreads = 6\n").unwrap();
         assert_eq!(c.threads, Some(6));
@@ -846,6 +891,9 @@ mod tests {
             "[serve]\nhot_reload = \"yes\"\n",
             "[serve]\ndeadline_us = \"soon\"\n",
             "[parallel]\nelastic = \"yes\"\n",
+            "[parallel]\nlease_ms = 0\n",
+            "[parallel]\nelection_ms = 0\n",
+            "[parallel]\nheartbeat_every = \"often\"\n",
             "[training]\ncheckpoint = 7\n",
         ] {
             assert!(ExperimentConfig::from_toml(bad).is_err(), "should reject: {bad}");

@@ -203,6 +203,7 @@ mod tests {
                 strategy: Default::default(),
                 optimizer: Default::default(),
                 intra_threads: 1,
+                heartbeat_every: 0,
             },
             engine: EngineKind::Native,
             artifacts: None,

@@ -99,6 +99,13 @@ pub struct TrainerOptions {
     /// (see [`crate::nn::Network::grad_batch_threaded_at`]), so masks
     /// advance from batch to batch instead of replaying.
     pub intra_threads: usize,
+    /// Liveness-probe cadence: every `heartbeat_every` global steps the
+    /// epoch loop calls [`Communicator::heartbeat`]. The cadence is keyed
+    /// to the deterministic step counter (identical on every image), so
+    /// all images heartbeat at the same point of the schedule — a
+    /// wall-clock cadence would desync the lockstep collectives. 0
+    /// disables the probe.
+    pub heartbeat_every: usize,
 }
 
 impl Default for TrainerOptions {
@@ -116,6 +123,7 @@ impl Default for TrainerOptions {
             strategy: BatchStrategy::RandomStart,
             optimizer: OptimizerKind::Sgd,
             intra_threads: 1,
+            heartbeat_every: 0,
         }
     }
 }
@@ -383,8 +391,61 @@ impl<'c, T: PjrtScalar, C: Communicator> Trainer<'c, T, C> {
             total.update_s += stats.update_s;
             total.batches += stats.batches;
             total.samples += stats.samples;
+            // Liveness probe on the deterministic step counter: every
+            // image reaches the same `step % cadence == 0` points, so the
+            // collective ping/pong never desyncs the schedule.
+            if self.opts.heartbeat_every > 0
+                && self.step % self.opts.heartbeat_every as u64 == 0
+            {
+                self.comm.heartbeat()?;
+            }
         }
         Ok(total)
+    }
+
+    /// Re-synchronize the whole training state from the current leader:
+    /// parameters, step counter, batch-RNG state, and epoch cursor are
+    /// broadcast from image 1 (which the TCP backend aliases to the
+    /// *elected* leader after a re-election) so survivors and freshly
+    /// rejoined workers continue bit-identically. Collective — every
+    /// image of the team must call it at the same point. Returns the
+    /// leader's `epoch` (completed-epoch count).
+    pub fn resync(&mut self, epoch: usize) -> CommResult<usize> {
+        let mut flat = self.net.params_to_flat();
+        self.comm.co_broadcast(&mut flat, 1)?;
+        self.net.params_unflatten_from(&flat);
+        self.resync_cursor(epoch)
+    }
+
+    /// The cursor half of [`Trainer::resync`]: step counter, batch-RNG
+    /// state, and epoch, broadcast from image 1. A rejoined worker calls
+    /// only this — its [`Trainer::new`] constructor broadcast already
+    /// consumed the parameter half the survivors send from `resync`.
+    ///
+    /// The u64 cursor words travel bit-cast inside f64 payloads; the
+    /// broadcast copies bytes without arithmetic, so the round-trip is
+    /// exact.
+    pub fn resync_cursor(&mut self, epoch: usize) -> CommResult<usize> {
+        let s = self.batch_rng.state();
+        let mut cursor = [
+            f64::from_bits(self.step),
+            f64::from_bits(s[0]),
+            f64::from_bits(s[1]),
+            f64::from_bits(s[2]),
+            f64::from_bits(s[3]),
+            f64::from_bits(epoch as u64),
+        ];
+        self.comm.co_broadcast(&mut cursor, 1)?;
+        self.step = cursor[0].to_bits();
+        self.batch_rng = Rng::from_state([
+            cursor[1].to_bits(),
+            cursor[2].to_bits(),
+            cursor[3].to_bits(),
+            cursor[4].to_bits(),
+        ]);
+        self.order.clear();
+        self.cursor = 0;
+        Ok(cursor[5].to_bits() as usize)
     }
 
     /// Distributed accuracy: each image evaluates its shard of the test
@@ -562,6 +623,7 @@ mod tests {
             strategy: BatchStrategy::RandomStart,
             optimizer: Default::default(),
             intra_threads: 1,
+            heartbeat_every: 0,
         }
     }
 
@@ -912,6 +974,60 @@ mod tests {
             after > initial + 0.1 && after > 0.3,
             "seq pipeline should learn the majority class (acc {initial} -> {after})"
         );
+    }
+
+    /// `resync` restores bit-equality of params *and* training cursor
+    /// from image 1 — the primitive the rejoin path runs after a worker
+    /// is re-admitted.
+    #[test]
+    fn resync_restores_params_and_cursor_from_image_one() {
+        let train = synthesize::<f32>(300, 55);
+        let comms = Team::new(3);
+        let train_ref = &train;
+        let sums: Vec<(f64, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut t: Trainer<f32, LocalComm> =
+                            Trainer::new(c, opts(&[784, 8, 10], 50), None).unwrap();
+                        t.train_epoch(train_ref).unwrap();
+                        // Desynchronize everything off image 1: params,
+                        // step, and rng diverge on the other images.
+                        if c.this_image() != 1 {
+                            let mut flat = t.net.params_to_flat();
+                            for v in flat.iter_mut() {
+                                *v += 0.25;
+                            }
+                            t.net.params_unflatten_from(&flat);
+                            t.step += c.this_image() as u64;
+                            t.batch_rng = Rng::new(999 + c.this_image() as u64);
+                        }
+                        let epoch = t.resync(if c.this_image() == 1 { 7 } else { 0 }).unwrap();
+                        assert_eq!(epoch, 7, "epoch cursor comes from image 1");
+                        assert_eq!(t.replica_divergence().unwrap(), 0.0);
+                        (t.params_checksum(), t.step)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for w in sums.windows(2) {
+            assert_eq!(w[0], w[1], "params and step must match image 1 after resync");
+        }
+    }
+
+    /// A heartbeat cadence is harmless on backends without peers: the
+    /// epoch loop calls the no-op probe and training proceeds unchanged.
+    #[test]
+    fn heartbeat_cadence_is_a_noop_without_peers() {
+        let comm = NullComm;
+        let train = synthesize::<f32>(400, 61);
+        let mut o = opts(&[784, 8, 10], 50);
+        o.heartbeat_every = 2;
+        let mut t = Trainer::new(&comm, o, None).unwrap();
+        t.train_epoch(&train).unwrap();
+        assert!(t.step > 0);
     }
 
     #[test]

@@ -32,7 +32,8 @@ const VALUE_FLAGS: &[&str] = &[
     "engine", "artifacts", "artifact-config", "save", "load", "tcp-role", "tcp-addr", "image",
     "runs", "max-images", "out", "n", "intra-threads", "threads", "addr", "model", "max-batch",
     "max-wait-us", "queue-depth", "workers", "infer-threads", "deadline-us", "checkpoint",
-    "checkpoint-every", "trace-out", "metrics-addr", "epoch-log",
+    "checkpoint-every", "trace-out", "metrics-addr", "epoch-log", "heartbeat-every", "lease-ms",
+    "election-ms",
 ];
 const SWITCH_FLAGS: &[&str] =
     &["quiet", "eval-each-epoch", "help", "no-hot-reload", "resume", "elastic"];
@@ -71,12 +72,21 @@ COMMON FLAGS (train/scaling; defaults = the paper's Listing 12)
   --artifact-config mnist
   --save FILE            save the trained network
   --comm local|tcp       communicator backend
-  --tcp-role leader|worker --tcp-addr HOST:PORT --image K   (tcp mode)
+  --tcp-role leader|worker|rejoin --tcp-addr HOST:PORT --image K   (tcp mode;
+                         rejoin = a restarted worker re-enters the team at the
+                         next epoch boundary)
   --checkpoint FILE      periodic recovery checkpoint (+ FILE.state sidecar)
   --checkpoint-every N   epochs between checkpoints (default 1)
   --resume               continue from --checkpoint's last completed epoch
   --elastic              tcp mode: continue on worker death (gradients are
                          rescaled over the surviving images)
+  --heartbeat-every N    tcp mode: ping/pong liveness probe every N global
+                         steps (default 64; 0 = off)
+  --lease-ms MS          tcp mode: heartbeat lease — how fast a dead peer is
+                         detected (default 2000)
+  --election-ms MS       tcp mode: re-election bound after leader loss; the
+                         lowest surviving image takes over and training
+                         resumes from the last checkpoint (default 5000)
 
 SERVE FLAGS (or a [serve] TOML section; CLI overrides the file)
   --model FILE           checkpoint to serve as model 'default'
@@ -239,6 +249,9 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig, AnyError> {
     if args.has("elastic") {
         cfg.elastic = true;
     }
+    cfg.heartbeat_every = args.get_parsed("heartbeat-every", cfg.heartbeat_every)?;
+    cfg.lease_ms = args.get_parsed("lease-ms", cfg.lease_ms)?;
+    cfg.election_ms = args.get_parsed("election-ms", cfg.election_ms)?;
     if let Some(c) = args.get("checkpoint") {
         cfg.checkpoint = Some(PathBuf::from(c));
     }
@@ -398,7 +411,10 @@ fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
     let tel = telemetry_start(cfg)?;
     let addr: SocketAddr = args.get_or("tcp-addr", "127.0.0.1:47000").parse()?;
     let role = args.get_or("tcp-role", "leader");
-    let opts = TcpOptions::with_timeout(Duration::from_secs(120)).elastic(cfg.elastic);
+    let opts = TcpOptions::with_timeout(Duration::from_secs(120))
+        .elastic(cfg.elastic)
+        .lease(Duration::from_millis(cfg.lease_ms))
+        .election_timeout(Duration::from_millis(cfg.election_ms));
     let comm = match role {
         "leader" => TcpTopology::leader_with(addr, cfg.images, opts)?,
         "worker" => {
@@ -407,6 +423,14 @@ fn cmd_train_tcp(args: &Args, cfg: &ExperimentConfig) -> Result<(), AnyError> {
                 .ok_or("worker needs --image K (2..=images)")?
                 .parse()?;
             TcpTopology::worker_with(addr, image, cfg.images, opts)?
+        }
+        "rejoin" => {
+            let image: usize = args
+                .get("image")
+                .ok_or("rejoin needs --image K (2..=images)")?
+                .parse()?;
+            println!("# image {image}: waiting for admission at the next epoch boundary");
+            TcpTopology::rejoin(addr, image, cfg.images, opts)?
         }
         other => return Err(format!("bad --tcp-role '{other}'").into()),
     };
@@ -431,36 +455,96 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
         EngineKind::Native => None,
     };
     let mut trainer = Trainer::new(comm, cfg.trainer_options(), engine)?;
-    let is_leader = comm.this_image() == 1;
+    let rejoined = args.get_or("tcp-role", "leader") == "rejoin";
 
     // Recovery: every image restores the same checkpoint locally (shared
     // filesystem assumption), then the trainer's resume re-broadcast
     // guarantees byte-identical replicas regardless of file generations.
     let mut start_epoch = 0usize;
-    if args.has("resume") {
+    if rejoined {
+        // The survivors are running the epoch-boundary resync right now:
+        // the constructor broadcast above consumed its parameter half;
+        // this consumes the cursor half (step, batch RNG, epoch).
+        start_epoch = trainer.resync_cursor(0)?;
+        println!(
+            "# image {} rejoined at term {} after epoch {start_epoch}",
+            comm.this_image(),
+            comm.current_term()
+        );
+    } else if args.has("resume") {
         let path = cfg.checkpoint.as_ref().ok_or("--resume needs --checkpoint FILE")?;
         start_epoch = trainer.resume_from(path)?;
-        if is_leader {
+        if comm.is_leader() {
             println!("# resumed from {} after epoch {start_epoch}", path.display());
         }
     }
 
-    let initial = trainer.accuracy(&test)?;
-    if is_leader {
-        println!("Initial accuracy: {:5.2} %", initial * 100.0);
+    if !rejoined {
+        let initial = trainer.accuracy(&test)?;
+        if comm.is_leader() {
+            println!("Initial accuracy: {:5.2} %", initial * 100.0);
+        }
     }
     let every = cfg.checkpoint_every.max(1);
     let metrics = neural_rs::metrics::train::global();
-    if is_leader {
+    if comm.is_leader() {
         metrics.begin_run(cfg.epochs);
     }
     let sw = Stopwatch::start();
-    for epoch in start_epoch + 1..=cfg.epochs {
+    let mut epoch = start_epoch + 1;
+    let mut recoveries = 0usize;
+    while epoch <= cfg.epochs {
         let esw = Stopwatch::start();
-        let e = trainer.train_epoch(&train)?;
+        let outcome = trainer
+            .train_epoch(&train)
+            .and_then(|e| trainer.accuracy(&test).map(|acc| (e, acc)));
+        let (e, acc) = match outcome {
+            Ok(v) => v,
+            Err(err) => {
+                // Survive leader loss: re-elect among the survivors, then
+                // restore a consistent state and keep training. Anything
+                // else (protocol violation, stale term, team poisoned on
+                // a non-elastic worker death) stays fatal.
+                if !is_leader_loss(comm, &err) || recoveries + 1 >= cfg.images {
+                    return Err(err.into());
+                }
+                recoveries += 1;
+                let outcome = comm.reelect()?;
+                println!(
+                    "# image {}: re-elected image {} for term {} ({} alive)",
+                    comm.this_image(),
+                    outcome.leader,
+                    outcome.term,
+                    comm.alive_images()
+                );
+                match &cfg.checkpoint {
+                    Some(path) => {
+                        // Every survivor restores the last atomic
+                        // checkpoint; the resume broadcast (sourced from
+                        // the *new* leader) re-asserts bit-equality.
+                        let done = trainer.resume_from(path)?;
+                        epoch = done + 1;
+                        let acc = trainer.accuracy(&test)?;
+                        println!(
+                            "# image {}: restored epoch {done} from {}; accuracy {:5.2} %",
+                            comm.this_image(),
+                            path.display(),
+                            acc * 100.0
+                        );
+                    }
+                    None => {
+                        // No checkpoint: the survivors are already
+                        // bit-identical at the last completed step (the
+                        // failed collective returned before any update);
+                        // re-assert that and replay the aborted epoch.
+                        trainer.resync(epoch - 1)?;
+                    }
+                }
+                continue;
+            }
+        };
         let epoch_s = esw.elapsed_s();
-        let acc = trainer.accuracy(&test)?;
-        if is_leader {
+        if comm.is_leader() {
             println!("Epoch {epoch:2} done, Accuracy: {:5.2} %", acc * 100.0);
             let loss = if metrics.wants_loss() && !test.is_empty() {
                 Some(trainer.net.loss_batch(&test.images, &test.one_hot()))
@@ -470,17 +554,32 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
             let global_samples = (e.batches * cfg.batch_size) as f64;
             metrics.record_epoch(epoch, acc, loss, global_samples / epoch_s.max(1e-9));
         }
-        // Image 1 publishes the recovery checkpoint (write-then-rename;
+        // The leader publishes the recovery checkpoint (write-then-rename;
         // all replicas are identical, so one writer suffices).
-        if is_leader {
+        if comm.is_leader() {
             if let Some(path) = &cfg.checkpoint {
                 if epoch % every == 0 || epoch == cfg.epochs {
                     trainer.save_checkpoint(path, epoch)?;
                 }
             }
         }
+        // Epoch boundary: admit restarted workers waiting on the leader's
+        // listener (collective — every image runs the admission count
+        // broadcast), then bring them up to the team's exact state.
+        let admitted = comm.admit_rejoins()?;
+        if admitted > 0 {
+            trainer.resync(epoch)?;
+            if comm.is_leader() {
+                println!(
+                    "# admitted {admitted} rejoined image(s) at epoch {epoch}; team at {} of {}",
+                    comm.alive_images(),
+                    cfg.images
+                );
+            }
+        }
+        epoch += 1;
     }
-    if is_leader {
+    if comm.is_leader() {
         println!("# training+eval {:.3} s on {} images (tcp)", sw.elapsed_s(), cfg.images);
         if let Some(path) = args.get("save") {
             trainer.net.save(path)?;
@@ -488,6 +587,20 @@ fn run_one_image(comm: &TcpComm, cfg: &ExperimentConfig, args: &Args) -> Result<
         }
     }
     Ok(())
+}
+
+/// Classify a mid-epoch collective failure: `true` when it reads as the
+/// *leader* vanishing (re-election can recover), `false` for everything
+/// a worker cannot survive on its own.
+fn is_leader_loss(comm: &TcpComm, err: &neural_rs::collectives::CommError) -> bool {
+    use neural_rs::collectives::CommError;
+    if comm.is_leader() || comm.num_images() == 1 {
+        return false;
+    }
+    match err {
+        CommError::PeerLost { image } => *image == 0 || *image == comm.leader_image(),
+        e => e.is_timeout(),
+    }
 }
 
 /// Online inference: load checkpoint(s) into a registry, start the

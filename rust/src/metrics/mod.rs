@@ -11,6 +11,17 @@ pub mod train;
 pub use serving::{peer_lost_total, record_peer_lost, LatencyHistogram, ServeMetrics};
 pub use train::TrainMetrics;
 
+/// Record a survived leader re-election (and the new term) on the
+/// process-global training registry.
+pub fn record_reelection(term: u64) {
+    train::global().record_reelection(term);
+}
+
+/// Record a worker re-admitted into the team after a restart.
+pub fn record_rejoin() {
+    train::global().record_rejoin();
+}
+
 use crate::tensor::Summary;
 use std::time::Instant;
 

@@ -146,6 +146,7 @@ pub struct ServeMetrics {
     shed: AtomicU64,
     deadline_shed: AtomicU64,
     reload_failures: AtomicU64,
+    worker_restarts: AtomicU64,
     batches: AtomicU64,
     batch_samples: AtomicU64,
     batch_hist: [AtomicU64; MAX_EXACT_BATCH + 1],
@@ -161,6 +162,7 @@ impl ServeMetrics {
             shed: AtomicU64::new(0),
             deadline_shed: AtomicU64::new(0),
             reload_failures: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_samples: AtomicU64::new(0),
             batch_hist: [ZERO; MAX_EXACT_BATCH + 1],
@@ -191,6 +193,13 @@ impl ServeMetrics {
         self.reload_failures.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// One serve worker restarted after a panic (its in-flight batch was
+    /// failed with a typed error; the replacement warms a fresh
+    /// workspace).
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One coalesced batch of `size` requests executed.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
@@ -213,6 +222,10 @@ impl ServeMetrics {
 
     pub fn reload_failures(&self) -> u64 {
         self.reload_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.worker_restarts.load(Ordering::Relaxed)
     }
 
     pub fn batches(&self) -> u64 {
@@ -269,6 +282,7 @@ impl ServeMetrics {
         line("neural_rs_serve_shed_total", self.shed() as f64);
         line("neural_rs_serve_deadline_shed_total", self.deadline_shed() as f64);
         line("neural_rs_serve_reload_failures_total", self.reload_failures() as f64);
+        line("neural_rs_serve_worker_restarts", self.worker_restarts() as f64);
         line("neural_rs_peer_lost_total", peer_lost_total() as f64);
         line("neural_rs_serve_responses_total", self.latency.count() as f64);
         line("neural_rs_serve_batches_total", self.batches() as f64);
@@ -460,11 +474,14 @@ mod tests {
         m.record_deadline_shed();
         m.record_deadline_shed();
         m.record_reload_failures(3);
+        m.record_worker_restart();
         assert_eq!(m.deadline_shed(), 2);
         assert_eq!(m.reload_failures(), 3);
+        assert_eq!(m.worker_restarts(), 1);
         let text = m.render_prometheus();
         assert!(text.contains("neural_rs_serve_deadline_shed_total 2"), "{text}");
         assert!(text.contains("neural_rs_serve_reload_failures_total 3"), "{text}");
+        assert!(text.contains("neural_rs_serve_worker_restarts 1"), "{text}");
         // The peer-lost counter is process-global and monotonic; other
         // tests in this binary may bump it, so assert monotonicity only.
         let before = peer_lost_total();

@@ -42,6 +42,12 @@ pub struct TrainMetrics {
     loss_bits: AtomicU64,
     accuracy_bits: AtomicU64,
     examples_per_s_bits: AtomicU64,
+    /// Current election term of the TCP team (0 until a re-election).
+    term: AtomicU64,
+    /// Leader re-elections survived by this process.
+    reelections: AtomicU64,
+    /// Workers re-admitted into the team after a restart.
+    rejoins: AtomicU64,
     /// Whether any consumer (metrics endpoint / epoch log) wants the
     /// per-epoch loss evaluated — it costs a forward pass over the test
     /// set, so it is off unless telemetry asked for it.
@@ -77,6 +83,9 @@ impl TrainMetrics {
             loss_bits: AtomicU64::new(0),
             accuracy_bits: AtomicU64::new(0),
             examples_per_s_bits: AtomicU64::new(0),
+            term: AtomicU64::new(0),
+            reelections: AtomicU64::new(0),
+            rejoins: AtomicU64::new(0),
             wants_loss: AtomicBool::new(false),
             started: OnceLock::new(),
             epoch_log: Mutex::new(None),
@@ -187,6 +196,31 @@ impl TrainMetrics {
         self.wants_loss.load(Ordering::Relaxed)
     }
 
+    /// Record a survived leader re-election and the new term it produced.
+    /// These are robustness counters: they deliberately survive
+    /// [`Self::begin_run`] so a recovery mid-run stays visible.
+    pub fn record_reelection(&self, term: u64) {
+        self.term.store(term, Ordering::Relaxed);
+        self.reelections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker admitted back into the team after a restart.
+    pub fn record_rejoin(&self) {
+        self.rejoins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn term(&self) -> u64 {
+        self.term.load(Ordering::Relaxed)
+    }
+
+    pub fn reelections(&self) -> u64 {
+        self.reelections.load(Ordering::Relaxed)
+    }
+
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins.load(Ordering::Relaxed)
+    }
+
     pub fn epoch(&self) -> u64 {
         self.epoch.load(Ordering::Relaxed)
     }
@@ -261,6 +295,9 @@ impl TrainMetrics {
         line("neural_rs_train_comm_seconds_total", self.comm_s());
         line("neural_rs_train_update_seconds_total", self.update_s());
         line("neural_rs_train_comm_fraction", self.comm_fraction());
+        line("neural_rs_train_term", self.term() as f64);
+        line("neural_rs_train_reelections_total", self.reelections() as f64);
+        line("neural_rs_train_rejoins_total", self.rejoins() as f64);
         line("neural_rs_train_uptime_seconds", self.uptime_s());
         out
     }
@@ -289,14 +326,21 @@ mod tests {
         assert!((m.accuracy() - 0.91).abs() < 1e-12);
         assert!((m.comm_s() - 0.008).abs() < 1e-6);
         assert!(m.comm_fraction() > 0.0 && m.comm_fraction() < 1.0);
+        m.record_reelection(2);
+        m.record_rejoin();
+        assert_eq!(m.term(), 2);
+        assert_eq!(m.reelections(), 1);
+        assert_eq!(m.rejoins(), 1);
+        m.begin_run(5);
+        assert_eq!(m.reelections(), 1, "robustness counters survive begin_run");
         let text = m.render_prometheus();
         for series in [
-            "neural_rs_train_epoch 1",
-            "neural_rs_train_steps_total 2",
-            "neural_rs_train_samples_total 200",
-            "neural_rs_train_accuracy 0.91",
+            "neural_rs_train_epoch 0",
+            "neural_rs_train_steps_total 0",
+            "neural_rs_train_term 2",
+            "neural_rs_train_reelections_total 1",
+            "neural_rs_train_rejoins_total 1",
             "neural_rs_train_comm_fraction",
-            "neural_rs_train_examples_per_s 12345",
         ] {
             assert!(text.contains(series), "missing {series} in:\n{text}");
         }

@@ -24,6 +24,14 @@
 //! live on the very next batch. A reload that changes the layer sizes
 //! re-warms the worker state (one-off allocation) and fails in-flight
 //! requests whose buffers no longer fit ([`ServeError::ModelChanged`]).
+//!
+//! Workers are **supervised**: a panic during a batch (a poisoned model
+//! op, an assert deep in the math layer) fails that batch's in-flight
+//! requests with the typed [`ServeError::WorkerCrashed`], bumps the
+//! `neural_rs_serve_worker_restarts` counter, and restarts the worker
+//! with a freshly warmed workspace — one bad request cannot take the
+//! serving process down. All queue/slot locks recover from mutex
+//! poisoning for the same reason.
 
 use super::registry::ModelRegistry;
 use super::ServeError;
@@ -31,9 +39,19 @@ use crate::metrics::serving::ServeMetrics;
 use crate::nn::{Shape, Workspace};
 use crate::tensor::Matrix;
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock that shrugs off poisoning: a worker that panicked while holding
+/// a queue or slot lock must not cascade panics into every other thread
+/// that touches the same mutex — the supervisor restarts the worker and
+/// the shared state (a `VecDeque` of `Arc`s, slot phase enums) is valid
+/// after any partial mutation.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Batching/queueing knobs (the `[serve]` config section, minus HTTP).
 #[derive(Debug, Clone)]
@@ -93,6 +111,9 @@ enum Fail {
     Deadline,
     /// Evicted under overflow to make room for a newer request.
     Evicted,
+    /// The worker running this request's batch panicked; the worker
+    /// restarted and the request is safe to retry.
+    Worker,
 }
 
 #[derive(Debug)]
@@ -232,7 +253,7 @@ impl MicroBatcher {
 
     /// Requests currently queued (not yet drained into a batch).
     pub fn queue_len(&self) -> usize {
-        self.shared.q.lock().unwrap().queue.len()
+        plock(&self.shared.q).queue.len()
     }
 
     /// A reusable request slot sized for the model as it is *now* — after
@@ -267,7 +288,7 @@ impl MicroBatcher {
         output: &mut [f32],
     ) -> Result<(), ServeError> {
         {
-            let mut st = handle.slot.state.lock().unwrap();
+            let mut st = plock(&handle.slot.state);
             assert_ne!(st.phase, Phase::Queued, "ClientHandle used from two threads at once");
             if input.len() != st.input.len() {
                 return Err(ServeError::BadShape {
@@ -286,15 +307,15 @@ impl MicroBatcher {
         }
         let enqueued_at = Instant::now();
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = plock(&self.shared.q);
             if q.shutdown {
-                handle.slot.state.lock().unwrap().phase = Phase::Idle;
+                plock(&handle.slot.state).phase = Phase::Idle;
                 return Err(ServeError::ShuttingDown);
             }
             if q.queue.len() >= self.policy.queue_depth {
                 if self.policy.deadline.is_zero() {
                     self.shared.metrics.record_shed();
-                    handle.slot.state.lock().unwrap().phase = Phase::Idle;
+                    plock(&handle.slot.state).phase = Phase::Idle;
                     return Err(ServeError::Overloaded);
                 }
                 // Deadline mode: the FIFO front holds the earliest
@@ -304,7 +325,7 @@ impl MicroBatcher {
                 // deadline.
                 let (old, _) = q.queue.pop_front().unwrap();
                 self.shared.metrics.record_shed();
-                let mut st = old.state.lock().unwrap();
+                let mut st = plock(&old.state);
                 st.phase = Phase::Failed(Fail::Evicted);
                 old.cv.notify_all();
                 drop(st);
@@ -316,9 +337,9 @@ impl MicroBatcher {
             // size condition), leaving an idle sibling asleep.
             self.shared.cv.notify_all();
         }
-        let mut st = handle.slot.state.lock().unwrap();
+        let mut st = plock(&handle.slot.state);
         while st.phase == Phase::Queued {
-            st = handle.slot.cv.wait(st).unwrap();
+            st = handle.slot.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         let phase = st.phase;
         st.phase = Phase::Idle;
@@ -331,6 +352,7 @@ impl MicroBatcher {
             Phase::Failed(Fail::Shutdown) => Err(ServeError::ShuttingDown),
             Phase::Failed(Fail::Deadline) => Err(ServeError::DeadlineExceeded),
             Phase::Failed(Fail::Evicted) => Err(ServeError::Overloaded),
+            Phase::Failed(Fail::Worker) => Err(ServeError::WorkerCrashed),
             Phase::Idle | Phase::Queued => unreachable!("worker left slot unfinished"),
         }
     }
@@ -339,18 +361,18 @@ impl MicroBatcher {
     /// Idempotent.
     pub fn shutdown(&self) {
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = plock(&self.shared.q);
             if !q.shutdown {
                 q.shutdown = true;
                 while let Some((slot, _)) = q.queue.pop_front() {
-                    let mut st = slot.state.lock().unwrap();
+                    let mut st = plock(&slot.state);
                     st.phase = Phase::Failed(Fail::Shutdown);
                     slot.cv.notify_all();
                 }
             }
             self.shared.cv.notify_all();
         }
-        let mut workers = self.workers.lock().unwrap();
+        let mut workers = plock(&self.workers);
         for h in workers.drain(..) {
             let _ = h.join();
         }
@@ -363,38 +385,60 @@ impl Drop for MicroBatcher {
     }
 }
 
+/// A worker's per-thread warm state: the model fingerprint it was warmed
+/// against plus the pre-sized workspace and input matrix that make the
+/// steady-state path allocation-free. Rebuildable, so the supervisor can
+/// hand a restarted worker a fresh one after a mid-batch panic.
+struct WarmState {
+    shapes: Vec<Shape>,
+    cache: Vec<usize>,
+    work: Vec<usize>,
+    ws: Workspace<f32>,
+    x: Matrix<f32>,
+}
+
+impl WarmState {
+    /// Warm against the registry's *current* model snapshot, so the shape
+    /// vectors, workspace, and input matrix always describe the same
+    /// model even if a hot reload lands during startup. The workspace is
+    /// negotiated against the model's op pipeline (per-op activations,
+    /// caches); the rank-aware boundary shapes plus the cache/work rows
+    /// are what later reloads are compared against (alloc-free slice
+    /// compares) — full `Shape`s, so a reload that keeps every row count
+    /// but reinterprets a boundary (say 64x32 seq -> flat 2048) still
+    /// re-warms.
+    fn build(sh: &Shared) -> Option<Self> {
+        let net = sh.registry.get(&sh.model)?;
+        let shapes: Vec<Shape> = net.boundary_shapes().to_vec();
+        let cache: Vec<usize> = net.cache_rows().to_vec();
+        let work: Vec<usize> = net.work_rows().to_vec();
+        let mut ws = Workspace::<f32>::for_net_batch(&net, sh.max_batch);
+        let x = Matrix::<f32>::zeros(shapes[0].len(), sh.max_batch);
+        // Warm the GEMM packing scratch at the full batch size so the
+        // first real batch is already on the zero-allocation path.
+        let _ = net.output_batch_with(&x, &mut ws);
+        Some(Self { shapes, cache, work, ws, x })
+    }
+}
+
 /// One worker: wait for work, run the batching window, drain, infer,
 /// deliver, repeat. Multiple workers share the queue; drains are disjoint
-/// because the queue lock is held across them.
+/// because the queue lock is held across them. Each batch runs under
+/// `catch_unwind`: a panic fails only that batch's requests
+/// ([`Fail::Worker`]), bumps the restart counter, and re-warms this
+/// worker's state — the thread itself survives.
 fn worker_loop(sh: &Shared) {
-    // One registry snapshot seeds all worker state, so the shape vectors,
-    // workspace, and input matrix always describe the same model even if
-    // a hot reload lands during startup. The workspace is negotiated
-    // against the model's op pipeline (per-op activations, caches); the
-    // rank-aware boundary shapes plus the cache/work rows are what later
-    // reloads are compared against (alloc-free slice compares) — full
-    // `Shape`s, so a reload that keeps every row count but reinterprets
-    // a boundary (say 64x32 seq -> flat 2048) still re-warms.
-    let Some(net) = sh.registry.get(&sh.model) else { return };
-    let mut shapes: Vec<Shape> = net.boundary_shapes().to_vec();
-    let mut cache: Vec<usize> = net.cache_rows().to_vec();
-    let mut work: Vec<usize> = net.work_rows().to_vec();
-    let mut ws = Workspace::<f32>::for_net_batch(&net, sh.max_batch);
-    let mut x = Matrix::<f32>::zeros(shapes[0].len(), sh.max_batch);
+    let Some(mut warm) = WarmState::build(sh) else { return };
     let mut batch: Vec<(Arc<Slot>, Instant)> = Vec::with_capacity(sh.max_batch);
-    // Warm the GEMM packing scratch at the full batch size so the first
-    // real batch is already on the zero-allocation path.
-    let _ = net.output_batch_with(&x, &mut ws);
-    drop(net);
 
-    let mut q = sh.q.lock().unwrap();
+    let mut q = plock(&sh.q);
     loop {
         if q.shutdown {
             return;
         }
         sweep_expired(sh, &mut q);
         if q.queue.is_empty() {
-            q = sh.cv.wait(q).unwrap();
+            q = sh.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
             continue;
         }
         // Batching window: close at max_batch, the oldest request's wait
@@ -410,7 +454,8 @@ fn worker_loop(sh: &Shared) {
             if now >= close {
                 break;
             }
-            let (guard, _) = sh.cv.wait_timeout(q, close - now).unwrap();
+            let (guard, _) =
+                sh.cv.wait_timeout(q, close - now).unwrap_or_else(PoisonError::into_inner);
             q = guard;
             if q.queue.is_empty() {
                 // A sibling worker drained the window out from under us.
@@ -433,22 +478,37 @@ fn worker_loop(sh: &Shared) {
         }
         drop(q);
 
-        run_batch(sh, &batch, &mut shapes, &mut cache, &mut work, &mut ws, &mut x);
+        let crashed = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_batch(sh, &batch, &mut warm);
+        }))
+        .is_err();
+        if crashed {
+            // The batch's waiters get a typed, retryable failure; the
+            // worker restarts in place with freshly warmed state (the old
+            // workspace may hold arbitrary partial mutations).
+            fail_all(&batch, Fail::Worker);
+            sh.metrics.record_worker_restart();
+            crate::log_warn!(
+                "serve worker for model '{}' panicked mid-batch; restarted with a fresh workspace",
+                sh.model
+            );
+            if let Some(fresh) = WarmState::build(sh) {
+                warm = fresh;
+            }
+            // Model gone from the registry: keep the stale warm state —
+            // run_batch re-resolves per batch and fails cleanly.
+        }
         batch.clear();
-        q = sh.q.lock().unwrap();
+        q = plock(&sh.q);
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_batch(
-    sh: &Shared,
-    batch: &[(Arc<Slot>, Instant)],
-    shapes: &mut Vec<Shape>,
-    cache: &mut Vec<usize>,
-    work: &mut Vec<usize>,
-    ws: &mut Workspace<f32>,
-    x: &mut Matrix<f32>,
-) {
+fn run_batch(sh: &Shared, batch: &[(Arc<Slot>, Instant)], warm: &mut WarmState) {
+    #[cfg(test)]
+    if PANIC_NEXT_BATCH.swap(false, std::sync::atomic::Ordering::SeqCst) {
+        panic!("injected panic: worker supervision test");
+    }
+    let WarmState { shapes, cache, work, ws, x } = warm;
     let net = match sh.registry.get(&sh.model) {
         Some(net) => net,
         None => {
@@ -477,7 +537,7 @@ fn run_batch(
         let _assemble = crate::metrics::trace::span_args("batch_assemble", "serve", n as u64, 0);
         x.resize_cols(n);
         for (j, (slot, _)) in batch.iter().enumerate() {
-            let st = slot.state.lock().unwrap();
+            let st = plock(&slot.state);
             if st.input.len() == in_len {
                 x.col_mut(j).copy_from_slice(&st.input);
             } else {
@@ -520,7 +580,7 @@ fn run_batch(
 
 fn deliver(batch: &[(Arc<Slot>, Instant)], in_len: usize, out_len: usize, out: &Matrix<f32>) {
     for (j, (slot, _)) in batch.iter().enumerate() {
-        let mut st = slot.state.lock().unwrap();
+        let mut st = plock(&slot.state);
         if st.input.len() != in_len || st.output.len() != out_len {
             st.phase = Phase::Failed(Fail::ModelChanged);
         } else {
@@ -545,7 +605,7 @@ fn sweep_expired(sh: &Shared, q: &mut QueueState) {
         }
         let (slot, _) = q.queue.pop_front().unwrap();
         sh.metrics.record_deadline_shed();
-        let mut st = slot.state.lock().unwrap();
+        let mut st = plock(&slot.state);
         st.phase = Phase::Failed(Fail::Deadline);
         slot.cv.notify_all();
     }
@@ -553,8 +613,64 @@ fn sweep_expired(sh: &Shared, q: &mut QueueState) {
 
 fn fail_all(batch: &[(Arc<Slot>, Instant)], fail: Fail) {
     for (slot, _) in batch {
-        let mut st = slot.state.lock().unwrap();
+        let mut st = plock(&slot.state);
         st.phase = Phase::Failed(fail);
         slot.cv.notify_all();
+    }
+}
+
+/// Test hook: makes the next `run_batch` on any worker panic, exercising
+/// the supervision path without a genuinely poisoned model.
+#[cfg(test)]
+static PANIC_NEXT_BATCH: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::serving::ServeMetrics;
+    use crate::nn::{Activation, Network};
+    use crate::tensor::vecops;
+
+    /// A panic inside a batch must fail only that batch's requests with
+    /// the typed retryable error, bump the restart counter once, and
+    /// leave the worker serving subsequent requests from a freshly
+    /// warmed workspace.
+    #[test]
+    fn worker_panic_fails_batch_restarts_and_keeps_serving() {
+        let registry = Arc::new(ModelRegistry::new());
+        let net = Network::<f32>::new(&[4, 6, 2], Activation::Sigmoid, 11);
+        registry.insert("m", net.clone());
+        let metrics = Arc::new(ServeMetrics::new());
+        let b = MicroBatcher::start(
+            Arc::clone(&registry),
+            "m",
+            BatchPolicy { workers: 1, ..BatchPolicy::default() },
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        let handle = b.client();
+        let input = [0.25f32, 0.5, 0.75, 1.0];
+        let mut out = [0.0f32; 2];
+
+        PANIC_NEXT_BATCH.store(true, std::sync::atomic::Ordering::SeqCst);
+        match b.infer(&handle, &input, &mut out) {
+            Err(ServeError::WorkerCrashed) => {}
+            other => panic!("expected WorkerCrashed, got {other:?}"),
+        }
+        assert_eq!(metrics.worker_restarts(), 1);
+
+        // The restarted worker must serve the retry correctly.
+        b.infer(&handle, &input, &mut out).unwrap();
+        let expect = net.output(&input);
+        assert!(
+            vecops::max_abs_diff(&out, &expect) < 1e-4,
+            "post-restart result diverged from the model"
+        );
+        assert_eq!(
+            metrics.worker_restarts(),
+            1,
+            "a healthy batch must not count as a restart"
+        );
     }
 }

@@ -620,6 +620,9 @@ fn predict(ctx: &Ctx, conn: &mut ConnState, body: &[u8]) -> (u16, &'static str, 
         Err(ServeError::ShuttingDown) => {
             (503, "Service Unavailable", error_json("shutting down"))
         }
+        Err(ServeError::WorkerCrashed) => {
+            (503, "Service Unavailable", error_json("worker crashed; retry"))
+        }
         Err(ServeError::ModelChanged) => {
             // Stale per-connection buffers after a dims-changing reload:
             // drop them so the next request re-sizes against the new model.

@@ -52,6 +52,10 @@ pub enum ServeError {
     /// The request's deadline expired while it was still queued; it was
     /// shed without running (HTTP maps this to 503 + `Retry-After`).
     DeadlineExceeded,
+    /// A serve worker panicked while this request was in its batch. The
+    /// worker restarted with a fresh warm workspace; the request is safe
+    /// to retry (HTTP maps this to 503).
+    WorkerCrashed,
 }
 
 impl std::fmt::Display for ServeError {
@@ -69,6 +73,9 @@ impl std::fmt::Display for ServeError {
             }
             Self::DeadlineExceeded => {
                 write!(f, "request deadline expired while queued (shed); retry later")
+            }
+            Self::WorkerCrashed => {
+                write!(f, "serve worker crashed mid-batch (restarted); retry")
             }
         }
     }

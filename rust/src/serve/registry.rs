@@ -22,14 +22,27 @@
 //! [`crate::nn::Network::save_atomic`] (write `<path>.tmp`, fsync, rename),
 //! which makes torn reads impossible on POSIX filesystems; the parse-and-
 //! keep fallback here covers writers that don't.
+//!
+//! A *persistently* failing entry (checkpoint deleted, or rewritten by a
+//! non-atomic writer that keeps losing the race) is retried under bounded
+//! exponential backoff — 200 ms doubling to a 30 s cap, per entry — so a
+//! tight poll interval cannot turn one bad file into a log-spamming
+//! stat/parse storm. The first successful reload resets that entry's
+//! backoff to zero.
 
 use super::ServeError;
 use crate::nn::Network;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
-use std::time::SystemTime;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant, SystemTime};
+
+/// First retry delay after a failed reload; doubles per consecutive
+/// failure up to [`RELOAD_BACKOFF_CAP`].
+const RELOAD_BACKOFF_BASE: Duration = Duration::from_millis(200);
+/// Ceiling on the per-entry reload retry delay.
+const RELOAD_BACKOFF_CAP: Duration = Duration::from_secs(30);
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Fingerprint {
@@ -49,6 +62,14 @@ struct Entry {
     source: Option<Source>,
 }
 
+/// Per-entry reload backoff: how many times in a row this entry failed
+/// and when it may be retried.
+#[derive(Debug, Clone, Copy)]
+struct Backoff {
+    failures: u32,
+    retry_at: Instant,
+}
+
 /// Thread-safe registry of named serving models.
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
@@ -58,6 +79,9 @@ pub struct ModelRegistry {
     /// Bumped on every successful insert/load/hot-reload, so fleet tooling
     /// polling `/v1/status` can fingerprint which model set a replica runs.
     generation: AtomicU64,
+    /// Entries currently failing to reload, with their retry schedule.
+    /// Cleared per entry on the first successful reload.
+    backoff: Mutex<BTreeMap<String, Backoff>>,
 }
 
 fn fingerprint(path: &Path) -> Result<Fingerprint, ServeError> {
@@ -130,7 +154,9 @@ impl ModelRegistry {
     /// `(mtime, len)` fingerprint changed. Returns the reloaded names. A
     /// checkpoint that fails to stat or parse keeps serving its previous
     /// parameters (the error is reported on stderr), so a half-written
-    /// file can never take down the server.
+    /// file can never take down the server. Failing entries are retried
+    /// under bounded exponential backoff (200 ms doubling to 30 s, per
+    /// entry); a successful reload resets its entry's backoff.
     pub fn poll_reload(&self) -> Vec<String> {
         let candidates: Vec<(String, Source)> = {
             let models = self.models.read().unwrap();
@@ -141,11 +167,21 @@ impl ModelRegistry {
         };
         let mut reloaded = Vec::new();
         for (name, source) in candidates {
+            {
+                let backoff = self.backoff.lock().unwrap();
+                if let Some(b) = backoff.get(&name) {
+                    if Instant::now() < b.retry_at {
+                        continue;
+                    }
+                }
+            }
             let fp = match fingerprint(&source.path) {
                 Ok(fp) => fp,
                 Err(e) => {
-                    crate::log_warn!("serve: cannot stat model '{name}': {e}");
-                    self.reload_failures.fetch_add(1, Ordering::Relaxed);
+                    let delay = self.note_reload_failure(&name);
+                    crate::log_warn!(
+                        "serve: cannot stat model '{name}': {e}; next attempt in {delay:?}"
+                    );
                     continue;
                 }
             };
@@ -167,20 +203,40 @@ impl ModelRegistry {
                             e.source =
                                 Some(Source { path: source.path, fingerprint: fp });
                             self.generation.fetch_add(1, Ordering::Relaxed);
+                            self.backoff.lock().unwrap().remove(&name);
                             reloaded.push(name);
                         }
                     }
                 }
                 Err(e) => {
+                    let delay = self.note_reload_failure(&name);
                     crate::log_warn!(
                         "serve: model '{name}' changed on disk but failed to load \
-                         ({e}); keeping previous parameters"
+                         ({e}); keeping previous parameters, next attempt in {delay:?}"
                     );
-                    self.reload_failures.fetch_add(1, Ordering::Relaxed);
                 }
             }
         }
         reloaded
+    }
+
+    /// Record one failed reload attempt for `name`: bump the failure
+    /// metric and push the entry's next attempt out exponentially.
+    /// Returns the delay until that attempt.
+    fn note_reload_failure(&self, name: &str) -> Duration {
+        self.reload_failures.fetch_add(1, Ordering::Relaxed);
+        let mut backoff = self.backoff.lock().unwrap();
+        let b = backoff
+            .entry(name.to_string())
+            .or_insert(Backoff { failures: 0, retry_at: Instant::now() });
+        b.failures = b.failures.saturating_add(1);
+        // 200ms, 400ms, 800ms, ... capped at 30s; the shift is clamped so
+        // the multiplier itself cannot overflow long before the cap bites.
+        let delay = RELOAD_BACKOFF_BASE
+            .saturating_mul(1u32 << (b.failures - 1).min(16))
+            .min(RELOAD_BACKOFF_CAP);
+        b.retry_at = Instant::now() + delay;
+        delay
     }
 
     /// Drain the count of reloads rejected (unreadable / unparseable
@@ -271,9 +327,11 @@ mod tests {
         assert_eq!(reg.take_reload_failures(), 1);
         assert_eq!(reg.take_reload_failures(), 0, "take drains the counter");
 
-        // An atomic rewrite (save_atomic) goes live cleanly. The comment
-        // append guarantees a length change even on coarse-mtime
+        // An atomic rewrite (save_atomic) goes live cleanly. Wait out the
+        // failed entry's first backoff delay so the poll attempts it. The
+        // comment append guarantees a length change even on coarse-mtime
         // filesystems (same trick as above).
+        std::thread::sleep(Duration::from_millis(250));
         let third = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 3);
         third.save_atomic(&path).unwrap();
         {
@@ -285,6 +343,53 @@ mod tests {
         let live = reg.get("m").unwrap();
         assert!(third.params_close(&live, 0.0), "atomic rewrite must serve new params");
         assert_eq!(reg.take_reload_failures(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// A persistently failing entry is retried under backoff — polling in
+    /// a tight loop records one failure, not one per poll — and the first
+    /// successful reload resets the entry's schedule.
+    #[test]
+    fn failing_reload_backs_off_and_resets_on_success() {
+        let path = tmpfile("backoff");
+        let first = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 1);
+        first.save(&path).unwrap();
+        let reg = ModelRegistry::new();
+        reg.load_file("m", &path).unwrap();
+
+        // Corrupt the checkpoint (with a length change so the fingerprint
+        // flips even on coarse-mtime filesystems).
+        std::fs::write(&path, "corrupted checkpoint, definitely longer than before")
+            .unwrap();
+        assert!(reg.poll_reload().is_empty());
+        assert_eq!(reg.take_reload_failures(), 1, "first poll attempts the reload");
+
+        // Immediate re-polls land inside the 200ms backoff window: the
+        // entry is skipped, so no new failures accrue.
+        for _ in 0..5 {
+            assert!(reg.poll_reload().is_empty());
+        }
+        assert_eq!(reg.take_reload_failures(), 0, "backoff must skip the bad entry");
+
+        // Past the first backoff delay, a repaired checkpoint is picked
+        // up — and the entry's backoff resets.
+        std::thread::sleep(Duration::from_millis(250));
+        let fixed = Network::<f32>::new(&[4, 5, 2], Activation::Tanh, 2);
+        fixed.save_atomic(&path).unwrap();
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            writeln!(f, "# repaired").unwrap();
+        }
+        assert_eq!(reg.poll_reload(), vec!["m".to_string()]);
+        let live = reg.get("m").unwrap();
+        assert!(fixed.params_close(&live, 0.0), "repaired checkpoint must serve");
+        assert_eq!(reg.take_reload_failures(), 0);
+
+        // Reset means a fresh corruption is attempted immediately again.
+        std::fs::write(&path, "corrupted once more, with a different length!").unwrap();
+        assert!(reg.poll_reload().is_empty());
+        assert_eq!(reg.take_reload_failures(), 1, "backoff was reset by the success");
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -11,6 +11,12 @@
 //! the plan's seed, so the same plan reproduces the same failure bit for
 //! bit (asserted explicitly below).
 //!
+//! The replay/half-open scenarios script the [`FaultAction::Duplicate`]
+//! and [`FaultAction::Stall`] kinds; the re-election suite kills the
+//! *leader* mid-training and asserts the survivors elect a new one,
+//! resynchronize bit-for-bit, and keep the loss moving down; the rejoin
+//! test pins admission to the epoch boundary and the team's current term.
+//!
 //! The last test closes the kill-then-restart loop without any network:
 //! a training run checkpointed at epoch 2 and resumed in a fresh trainer
 //! must land on the *byte-identical* model an uninterrupted run reaches.
@@ -319,6 +325,319 @@ fn elastic_team_continues_with_rescaled_sums_after_injected_death() {
     });
 }
 
+// ----------------------------------------------------------------- replay:
+// a duplicated frame (retransmitting segment, confused middlebox) must be
+// rejected with a typed error, deterministically — never folded into the
+// next round as if it were fresh data.
+
+#[test]
+fn duplicated_frame_is_rejected_deterministically() {
+    // Frame 1 toward the leader (the worker's co_sum deposit) is forwarded
+    // twice. Round 1 completes off the first copy; the replayed copy then
+    // lands where the leader expects the worker's barrier mark, and the
+    // out-of-place opcode is a typed protocol error.
+    let run = || {
+        let plan = FaultPlan::new(13).inject(FaultDir::ToLeader, 1, FaultAction::Duplicate);
+        run_proxied(
+            plan,
+            opts(),
+            opts(),
+            |c| {
+                let mut v = [1.0f64];
+                c.co_sum(&mut v).unwrap();
+                assert_eq!(v[0], 3.0, "round 1 must complete off the first copy");
+                c.barrier().unwrap_err()
+            },
+            |c| {
+                let mut v = [2.0f64];
+                c.co_sum(&mut v).unwrap();
+                c.barrier().unwrap_err()
+            },
+        )
+    };
+    let (l, w) = run();
+    assert!(matches!(l, CommError::Protocol(_)), "leader: {l}");
+    assert!(l.to_string().contains("expected Barrier"), "leader: {l}");
+    assert!(
+        matches!(w, CommError::PeerLost { .. }) || w.is_timeout(),
+        "worker must be released, got: {w}"
+    );
+
+    // Same plan, same seed → the identical typed rejection.
+    let (l2, w2) = run();
+    assert_eq!(l.to_string(), l2.to_string(), "replay rejection must be deterministic");
+    assert_eq!(w.to_string(), w2.to_string(), "replay rejection must be deterministic");
+}
+
+// -------------------------------------------------------------- half-open:
+// a wedged peer (dead NAT entry: sockets alive, nothing flowing, no EOF)
+// must be bounded by the op deadline, not hang forever.
+
+#[test]
+fn half_open_stall_is_a_bounded_typed_timeout() {
+    let plan = FaultPlan::new(17).inject(FaultDir::ToLeader, 1, FaultAction::Stall);
+    let leader_opts = TcpOptions::with_timeout(T).op_timeout(Duration::from_millis(250));
+    let start = Instant::now();
+    let (l, w) = run_proxied(
+        plan,
+        leader_opts,
+        opts(),
+        |c| {
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+        |c| {
+            let mut v = [2.0f64];
+            c.co_sum(&mut v).unwrap_err()
+        },
+    );
+    assert!(l.is_timeout(), "leader must see a typed timeout, got: {l}");
+    assert!(
+        matches!(w, CommError::PeerLost { .. }) || w.is_timeout(),
+        "worker must be released, got: {w}"
+    );
+    assert!(
+        start.elapsed() < Duration::from_secs(4),
+        "the deadline must bound the half-open hang (took {:?})",
+        start.elapsed()
+    );
+}
+
+// ------------------------------------------------------------- stale terms:
+// pre-election traffic (or a deposed leader's frames) must be fenced with
+// the typed error at whichever image receives it — leader and worker side.
+
+#[test]
+fn stale_term_traffic_is_fenced_at_leader_and_worker() {
+    // Leader side: a deposit still stamped term 0 reaching a term-3
+    // leader is fenced there; the worker is released, not left hanging.
+    let a = addr();
+    std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let c = TcpTopology::leader_with(a, 2, opts()).unwrap();
+            c.force_term(3);
+            c.co_sum(&mut [1.0f64]).unwrap_err()
+        });
+        let wh = s.spawn(move || {
+            let c = TcpTopology::worker_with(a, 2, 2, opts()).unwrap();
+            c.co_sum(&mut [2.0f64]).unwrap_err()
+        });
+        let l = lh.join().unwrap();
+        let w = wh.join().unwrap();
+        assert!(
+            matches!(l, CommError::StaleTerm { frame_term: 0, current_term: 3 }),
+            "leader: {l}"
+        );
+        assert!(
+            matches!(w, CommError::PeerLost { .. }) || w.is_timeout(),
+            "worker: {w}"
+        );
+    });
+
+    // Worker side: a broadcast from a leader stuck at term 0 is deposed-
+    // leader traffic to a worker already on term 7.
+    let a = addr();
+    std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let c = TcpTopology::leader_with(a, 2, opts()).unwrap();
+            let mut buf = [5.0f64];
+            // The leader only writes here; the worker's typed rejection is
+            // the assertion.
+            let _ = c.co_broadcast(&mut buf, 1);
+        });
+        let wh = s.spawn(move || {
+            let c = TcpTopology::worker_with(a, 2, 2, opts()).unwrap();
+            c.force_term(7);
+            c.co_broadcast(&mut [0.0f64], 1).unwrap_err()
+        });
+        lh.join().unwrap();
+        let w = wh.join().unwrap();
+        assert!(
+            matches!(w, CommError::StaleTerm { frame_term: 0, current_term: 7 }),
+            "worker: {w}"
+        );
+    });
+}
+
+// ------------------------------------------------------------ re-election:
+// killing the LEADER mid-training must not end the run: the survivors
+// elect the lowest alive image, resynchronize state bit-for-bit, replay
+// the aborted epoch, and the loss keeps moving down.
+
+fn small_train_opts() -> TrainerOptions {
+    TrainerOptions {
+        dims: vec![784, 10, 10],
+        activation: Activation::Sigmoid,
+        layers: Vec::new(),
+        shape: None,
+        eta: 0.5,
+        batch_size: 50,
+        epochs: 1,
+        seed: 99,
+        batch_seed: 9999,
+        strategy: BatchStrategy::RandomStart,
+        optimizer: Default::default(),
+        intra_threads: 1,
+        heartbeat_every: 0,
+    }
+}
+
+#[test]
+fn leader_kill_mid_training_reelects_and_training_continues() {
+    let leader_addr = addr();
+    // The term-1 re-election binds `election_addr(base, 1, image, 3)` =
+    // base+4+image for the survivors; burn those offsets off the shared
+    // counter so a concurrently running test is never handed one of them.
+    for _ in 0..7 {
+        let _ = addr();
+    }
+    let topts = || {
+        TcpOptions::with_timeout(T)
+            .elastic(true)
+            .election_timeout(Duration::from_secs(8))
+    };
+    // Each image trains its own shard; the (seed-identical) test set is
+    // synthesized inside each thread.
+    let shard = |image: u64| synthesize::<f32>(200, 30 + image);
+
+    let survivor = move |comm: TcpComm, image: usize| {
+        let my = shard(image as u64);
+        let test = synthesize::<f32>(100, 40);
+        let mut t = Trainer::new(&comm, small_train_opts(), None).unwrap();
+        t.train_epoch(&my).unwrap(); // epoch 0: full 3-image team
+        // Epoch 1 aborts mid-flight — the leader is gone.
+        let err = t.train_epoch(&my).unwrap_err();
+        assert!(
+            matches!(err, CommError::PeerLost { .. }) || err.is_timeout(),
+            "image {image}: expected a leader-loss error, got {err}"
+        );
+        let outcome = comm.reelect().unwrap();
+        assert_eq!(outcome.leader, 2, "lowest alive image must lead");
+        assert_eq!(outcome.term, 1);
+        assert_eq!(comm.current_term(), 1);
+        // No checkpoint in this scenario: resync from the new leader
+        // (broadcast source 1 aliases whoever leads now) and replay.
+        let epoch = t.resync(1).unwrap();
+        assert_eq!(epoch, 1, "survivors must agree on the epoch to replay");
+        let loss0 = t.net.loss_batch(&test.images, &test.one_hot());
+        t.train_epoch(&my).unwrap(); // epoch 1 replayed on 2 survivors
+        let loss1 = t.net.loss_batch(&test.images, &test.one_hot());
+        assert!(
+            loss1 < loss0,
+            "image {image}: loss must keep decreasing after re-election \
+             ({loss0} -> {loss1})"
+        );
+        t.params_checksum()
+    };
+
+    let (c2, c3) = std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let comm = TcpTopology::leader_with(leader_addr, 3, topts()).unwrap();
+            let my = shard(1);
+            let mut t = Trainer::new(&comm, small_train_opts(), None).unwrap();
+            t.train_epoch(&my).unwrap();
+            // The leader "dies" here: trainer and communicator drop, every
+            // stream closes, and the survivors are on their own.
+        });
+        let w2 = s.spawn(move || {
+            let comm = TcpTopology::worker_with(leader_addr, 2, 3, topts()).unwrap();
+            survivor(comm, 2)
+        });
+        let w3 = s.spawn(move || {
+            let comm = TcpTopology::worker_with(leader_addr, 3, 3, topts()).unwrap();
+            survivor(comm, 3)
+        });
+        lh.join().unwrap();
+        (w2.join().unwrap(), w3.join().unwrap())
+    });
+    assert_eq!(
+        c2, c3,
+        "survivors must hold bit-identical parameters after the replayed epoch"
+    );
+}
+
+// ----------------------------------------------------------------- rejoin:
+// a restarted image re-hellos the leader and is admitted only at the next
+// epoch boundary, stamped with the team's *current* term — never mid-epoch.
+
+#[test]
+fn rejoin_is_admitted_only_at_the_epoch_boundary_with_the_current_term() {
+    let leader_addr = addr();
+    let elastic = || TcpOptions::with_timeout(T).elastic(true);
+    // The "epoch" between the worker's death and the admission boundary.
+    const BOUNDARY: Duration = Duration::from_millis(500);
+    std::thread::scope(|s| {
+        let lh = s.spawn(move || {
+            let c = TcpTopology::leader_with(leader_addr, 3, elastic()).unwrap();
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            // Image 3 is gone; the survivors' sum is rescaled by n/alive.
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            assert_eq!(c.alive_images(), 2);
+            // The team has moved on a term (say a prior re-election).
+            c.force_term(2);
+            std::thread::sleep(BOUNDARY);
+            assert_eq!(c.admit_rejoins().unwrap(), 1, "one image must be admitted");
+            assert_eq!(c.alive_images(), 3);
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0, "the rejoined image takes part again");
+            c.barrier().unwrap();
+        });
+        let w2 = s.spawn(move || {
+            let c = TcpTopology::worker_with(leader_addr, 2, 3, elastic()).unwrap();
+            for _ in 0..2 {
+                let mut v = [1.0f64];
+                c.co_sum(&mut v).unwrap();
+                assert_eq!(v[0], 3.0);
+            }
+            c.force_term(2);
+            // Every image takes part in the admission-count broadcast.
+            assert_eq!(c.admit_rejoins().unwrap(), 1);
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            c.barrier().unwrap();
+        });
+        let w3 = s.spawn(move || {
+            // First incarnation of image 3: one collective, then death.
+            let c = TcpTopology::worker_with(leader_addr, 3, 3, elastic()).unwrap();
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            drop(c);
+        });
+        let rj = s.spawn(move || {
+            // Restarted incarnation. Start after the initial team has
+            // formed (the first incarnation owns the setup handshake),
+            // then re-hello — admission only lands once the leader
+            // reaches the epoch boundary.
+            std::thread::sleep(Duration::from_millis(100));
+            let start = Instant::now();
+            let c = TcpTopology::rejoin(leader_addr, 3, 3, elastic()).unwrap();
+            assert!(
+                start.elapsed() >= Duration::from_millis(250),
+                "rejoin must wait for the epoch boundary, not land mid-epoch \
+                 (admitted after {:?})",
+                start.elapsed()
+            );
+            assert_eq!(c.current_term(), 2, "admission must teach the current term");
+            assert_eq!(c.leader_image(), 1);
+            let mut v = [1.0f64];
+            c.co_sum(&mut v).unwrap();
+            assert_eq!(v[0], 3.0);
+            c.barrier().unwrap();
+        });
+        lh.join().unwrap();
+        w2.join().unwrap();
+        w3.join().unwrap();
+        rj.join().unwrap();
+    });
+}
+
 // --------------------------------------------------------- kill + restart:
 // a checkpointed-then-resumed run must land exactly where the uninterrupted
 // run lands — parameters, step counter, and batch-RNG state, byte for byte.
@@ -339,6 +658,7 @@ fn resumed_training_matches_the_uninterrupted_run() {
             strategy: BatchStrategy::RandomStart,
             optimizer: Default::default(),
             intra_threads: 1,
+            heartbeat_every: 0,
         }
     }
     let tmp = |tag: &str| {

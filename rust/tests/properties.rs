@@ -246,6 +246,7 @@ fn prop_parallel_training_matches_serial() {
                 strategy: BatchStrategy::RandomStart,
                 optimizer: Default::default(),
                 intra_threads: 1,
+                heartbeat_every: 0,
             };
 
             let serial = {

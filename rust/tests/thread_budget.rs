@@ -51,6 +51,7 @@ fn explicit_budget_sizes_pool_and_caps_nested_fanout() {
             strategy: BatchStrategy::RandomStart,
             optimizer: Default::default(),
             intra_threads: 8, // deliberately over budget
+            heartbeat_every: 0,
         },
         engine: EngineKind::Native,
         artifacts: None,

@@ -209,6 +209,7 @@ fn warmed_grad_batch_performs_zero_allocations() {
         strategy: Default::default(),
         optimizer: Default::default(),
         intra_threads: 1,
+        heartbeat_every: 0,
     };
     let mut trainer = Trainer::new(&comm, opts, None).unwrap();
     for _ in 0..2 {
